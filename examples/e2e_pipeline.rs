@@ -1,0 +1,134 @@
+//! End-to-end driver: the full three-layer system on a realistic small
+//! workload, proving all layers compose (EXPERIMENTS.md §E2E).
+//!
+//! Pipeline: synthetic multi-field dataset (all four Table-1 profiles) →
+//! L3 streaming coordinator (bounded queues, worker pool) with the ftrsz
+//! engine → file-per-process POSIX output → read back → verified
+//! decompression → error-bound conformance — plus one XLA offload batch
+//! (L2/L1 artifacts through PJRT) parity-checked against the native path,
+//! and an SDC drill on one shard.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example e2e_pipeline
+//! ```
+
+use ftsz::compressor::{dualquant, CompressionConfig, ErrorBound};
+use ftsz::coordinator::{run_pipeline, WorkItem};
+use ftsz::data::synthetic::{self, Profile};
+use ftsz::inject::mode_b::ArenaFlip;
+use ftsz::inject::{run_and_classify, Engine, Outcome};
+use ftsz::io::FilePerProcess;
+use ftsz::runtime::{BlockKernels, XlaRuntime};
+use ftsz::{analysis, ft};
+
+fn main() -> ftsz::Result<()> {
+    let cfg = CompressionConfig::new(ErrorBound::Rel(1e-3));
+    let t_total = std::time::Instant::now();
+
+    // ---- 1. workload: every Table-1 profile, multiple fields ----
+    let mut items = Vec::new();
+    let mut originals = Vec::new();
+    for (pi, profile) in Profile::all().into_iter().enumerate() {
+        for (fi, f) in synthetic::dataset(profile, 48, 1000 + pi as u64).into_iter().enumerate() {
+            let id = items.len();
+            println!("shard {id}: {}/{} {:?} ({} points)", profile.name(), f.name, f.dims, f.dims.len());
+            items.push(WorkItem { id, dims: f.dims, data: f.data.clone() });
+            originals.push(f);
+            let _ = fi;
+        }
+    }
+    let total_points: usize = items.iter().map(|i| i.data.len()).sum();
+
+    // ---- 2. L3 coordinator: stream through the ftrsz engine ----
+    let workers = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    let out = run_pipeline(items, Engine::FaultTolerant, &cfg, workers, 4)?;
+    println!(
+        "\npipeline: {} shards, {:.1} MB in, wall {:.2}s, {}",
+        out.archives.len(),
+        total_points as f64 * 4.0 / 1e6,
+        out.wall_secs,
+        out.metrics.summary()
+    );
+
+    // ---- 3. file-per-process dump + read-back + verified decompression ----
+    let dir = std::env::temp_dir().join(format!("ftsz_e2e_{}", std::process::id()));
+    let fpp = FilePerProcess::new(&dir)?;
+    for (id, bytes) in &out.archives {
+        fpp.write(*id, bytes)?;
+    }
+    let stored = fpp.total_bytes()?;
+    println!("dumped {} bytes across {} rank files (ratio {:.2})", stored, out.archives.len(),
+        total_points as f64 * 4.0 / stored as f64);
+
+    let mut worst: f64 = 0.0;
+    for (id, orig) in originals.iter().enumerate() {
+        let bytes = fpp.read(id)?;
+        let dec = ft::decompress(&bytes)?; // Algorithm 2 verification on
+        let bound = cfg.error_bound.absolute(&orig.data);
+        let max = analysis::max_abs_err(&orig.data, &dec.data);
+        assert!(max <= bound, "shard {id}: bound violated ({max} > {bound})");
+        worst = worst.max(max / bound);
+        let _ = analysis::psnr(&orig.data, &dec.data);
+    }
+    println!("verified decompression: all {} shards within bound (worst {:.1}% of budget)",
+        originals.len(), worst * 100.0);
+    fpp.cleanup()?;
+
+    // ---- 4. XLA offload path (L1/L2 artifacts through PJRT) ----
+    match XlaRuntime::cpu_default() {
+        Ok(rt) => {
+            let k = BlockKernels::new(&rt, 64, 10)?;
+            let f = &originals[0];
+            let batch: Vec<f32> =
+                f.data.iter().take(k.batch_len()).copied().collect();
+            // value-range-relative bound keeps the prequant lattice within
+            // the i32 contract of the dual-quant kernel
+            let (lo, hi) = batch.iter().fold((f32::MAX, f32::MIN), |(l, h), &v| (l.min(v), h.max(v)));
+            let e = 1e-3 * (hi - lo) as f64;
+            let t = std::time::Instant::now();
+            let xla_out = k.compress(&batch, e)?;
+            let xla_secs = t.elapsed().as_secs_f64();
+            // parity vs the native dual-quant twin
+            let blen = k.block_len();
+            let mut mismatches = 0;
+            for blk in 0..k.n {
+                let (mut bins, mut dcmp) = (Vec::new(), Vec::new());
+                dualquant::forward(&batch[blk * blen..(blk + 1) * blen], (10, 10, 10), e, &mut bins, &mut dcmp);
+                if bins != xla_out.bins[blk * blen..(blk + 1) * blen] {
+                    mismatches += 1;
+                }
+                let _ = dcmp;
+            }
+            println!(
+                "XLA offload: {} blocks through PJRT in {:.1}ms, native parity mismatches: {}",
+                k.n,
+                xla_secs * 1e3,
+                mismatches
+            );
+            assert_eq!(mismatches, 0, "XLA and native dual-quant must agree");
+        }
+        Err(e) => println!("XLA offload skipped ({e}) — run `make artifacts`"),
+    }
+
+    // ---- 5. SDC drill on one shard ----
+    let f = &originals[2];
+    let b = cfg.block_size;
+    let (d, r, c) = f.dims.as_3d();
+    let nb = d.div_ceil(b) * r.div_ceil(b) * c.div_ceil(b);
+    let mut correct = 0;
+    let runs = 20;
+    for seed in 0..runs {
+        let mut data = f.data.clone();
+        let mut inj = ArenaFlip::new(seed, nb, 1);
+        inj.apply_pre_checksum(&mut data);
+        if run_and_classify(Engine::FaultTolerant, &data, f.dims, &cfg, &mut inj)
+            == Outcome::Correct
+        {
+            correct += 1;
+        }
+    }
+    println!("SDC drill: {correct}/{runs} injected runs fully corrected");
+
+    println!("\nE2E OK in {:.2}s — all layers compose.", t_total.elapsed().as_secs_f64());
+    Ok(())
+}

@@ -1,0 +1,50 @@
+//! HPC checkpoint scenario (the paper's first motivating use case +
+//! Fig. 8): weak-scaling data dump of a cosmology simulation, 256→2048
+//! ranks file-per-process over a shared-bandwidth PFS.
+//!
+//! ```bash
+//! cargo run --release --example hpc_checkpoint
+//! ```
+
+use ftsz::compressor::{CompressionConfig, ErrorBound};
+use ftsz::coordinator::weak_scaling_run;
+use ftsz::data::synthetic::Profile;
+use ftsz::inject::Engine;
+use ftsz::io::SimulatedPfs;
+
+fn main() -> ftsz::Result<()> {
+    // paper setup: NYX, error bound 1e-4, each rank holds the same data
+    // volume; PFS is the shared bottleneck
+    let cfg = CompressionConfig::new(ErrorBound::Rel(1e-4));
+    let pfs = SimulatedPfs::new(50e9, 2e-3); // 50 GB/s aggregate
+    let edge = 64; // per-rank shard edge (scaled-down 3 GB/rank stand-in)
+
+    println!("weak scaling dump/load breakdown (NYX-like, bound 1e-4, PFS 50 GB/s)");
+    println!(
+        "{:>6} {:>7} | {:>10} {:>10} {:>10} | {:>10} {:>10} {:>10} | {:>8}",
+        "ranks", "engine", "comp s", "write s", "dump s", "decomp s", "read s", "load s", "ratio"
+    );
+    for ranks in [256usize, 512, 1024, 2048] {
+        let mut dump = std::collections::HashMap::new();
+        for engine in [Engine::Classic, Engine::RandomAccess, Engine::FaultTolerant] {
+            let p = weak_scaling_run(engine, Profile::Nyx, edge, ranks, 4, &cfg, &pfs, 9)?;
+            println!(
+                "{:>6} {:>7} | {:>10.3} {:>10.3} {:>10.3} | {:>10.3} {:>10.3} {:>10.3} | {:>8.2}",
+                ranks,
+                engine.name(),
+                p.compress_secs,
+                p.write_secs,
+                p.dump_secs(),
+                p.decompress_secs,
+                p.read_secs,
+                p.load_secs(),
+                p.ratio
+            );
+            dump.insert(engine.name(), p.dump_secs());
+        }
+        let overhead = dump["ftrsz"] / dump["sz"] - 1.0;
+        println!("{:>14} ftrsz total-dump overhead vs sz: {:.1}%", "", overhead * 100.0);
+    }
+    println!("\npaper reference: 7.3% dump overhead at 2048 cores (Fig. 8)");
+    Ok(())
+}

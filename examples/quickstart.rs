@@ -1,0 +1,60 @@
+//! Quickstart: compress a synthetic climate field with all three engines,
+//! verify the error bound, and show what the FT layer costs.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use ftsz::compressor::{classic, engine, CompressionConfig, ErrorBound};
+use ftsz::data::{synthetic, Dims};
+use ftsz::{analysis, ft};
+
+fn main() -> ftsz::Result<()> {
+    // a 64×128×128 Hurricane-like field (~4M values)
+    let field = synthetic::hurricane_field("TCf48", Dims::d3(64, 128, 128), 42);
+    let cfg = CompressionConfig::new(ErrorBound::Rel(1e-3));
+    let bound = cfg.error_bound.absolute(&field.data);
+    println!("field: {:?} ({} points), abs bound {bound:.3e}", field.dims, field.data.len());
+    println!("{:<8} {:>12} {:>8} {:>10} {:>10} {:>12}", "engine", "bytes", "ratio", "comp s", "decomp s", "max err");
+
+    for name in ["sz", "rsz", "ftrsz"] {
+        let t = std::time::Instant::now();
+        let bytes = match name {
+            "sz" => classic::compress(&field.data, field.dims, &cfg)?,
+            "rsz" => engine::compress(&field.data, field.dims, &cfg)?,
+            _ => ft::compress(&field.data, field.dims, &cfg)?,
+        };
+        let comp_s = t.elapsed().as_secs_f64();
+        let t = std::time::Instant::now();
+        let dec = match name {
+            "sz" => classic::decompress(&bytes)?,
+            "rsz" => engine::decompress(&bytes)?,
+            _ => ft::decompress(&bytes)?, // verified decompression
+        };
+        let decomp_s = t.elapsed().as_secs_f64();
+        let max = analysis::max_abs_err(&field.data, &dec.data);
+        assert!(max <= bound, "{name}: bound violated");
+        println!(
+            "{:<8} {:>12} {:>8.2} {:>10.3} {:>10.3} {:>12.3e}",
+            name,
+            bytes.len(),
+            analysis::compression_ratio(field.data.len(), bytes.len()),
+            comp_s,
+            decomp_s,
+            max
+        );
+    }
+
+    // random access: decompress a 16³ corner without touching the rest
+    let bytes = ft::compress(&field.data, field.dims, &cfg)?;
+    let t = std::time::Instant::now();
+    let region = ftsz::compressor::block::Region { origin: (8, 16, 16), shape: (16, 16, 16) };
+    let sub = engine::decompress_region(&bytes, region)?;
+    println!(
+        "\nrandom access: {} points of {} in {:.2}ms",
+        sub.len(),
+        field.data.len(),
+        t.elapsed().as_secs_f64() * 1e3
+    );
+    Ok(())
+}

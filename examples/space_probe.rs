@@ -1,0 +1,74 @@
+//! Space-probe scenario (the paper's second motivating use case + Fig. 2):
+//! a New-Horizons-like probe compresses imagery in an error-prone
+//! environment (cosmic rays ⇒ SDCs during compression), then the ground
+//! station decompresses with verification.
+//!
+//! Produces `pluto_original.pgm` / `pluto_decompressed.pgm` (the Fig. 2
+//! visual pair) and a resilience comparison under injected SDCs.
+//!
+//! ```bash
+//! cargo run --release --example space_probe
+//! ```
+
+use ftsz::compressor::{CompressionConfig, ErrorBound};
+use ftsz::data::{synthetic, Dims, Field};
+use ftsz::inject::mode_b::ArenaFlip;
+use ftsz::inject::{run_and_classify, Engine, Outcome};
+use ftsz::{analysis, ft};
+
+fn main() -> ftsz::Result<()> {
+    // Pluto-like 1024×1024 frame (paper Table 1: NASA Pluto 1028×1024)
+    let img = synthetic::pluto_image("pluto_limb", 512, 512, 2015);
+    let cfg = CompressionConfig::new(ErrorBound::Rel(1e-3)); // Fig. 2's bound
+    let bound = cfg.error_bound.absolute(&img.data);
+
+    // ---- clean pass: visual quality (Fig. 2) ----
+    let bytes = ft::compress(&img.data, img.dims, &cfg)?;
+    let dec = ft::decompress(&bytes)?;
+    let psnr = analysis::psnr(&img.data, &dec.data);
+    println!(
+        "clean pass: {} -> {} bytes (ratio {:.2}), PSNR {:.1} dB, max err {:.2e} (bound {:.2e})",
+        img.data.len() * 4,
+        bytes.len(),
+        analysis::compression_ratio(img.data.len(), bytes.len()),
+        psnr,
+        analysis::max_abs_err(&img.data, &dec.data),
+        bound
+    );
+    img.to_pgm(std::path::Path::new("pluto_original.pgm"))?;
+    Field::new("dec", dec.dims, dec.data)?.to_pgm(std::path::Path::new("pluto_decompressed.pgm"))?;
+    println!("wrote pluto_original.pgm / pluto_decompressed.pgm");
+
+    // ---- cosmic-ray pass: SDCs during on-board compression ----
+    let b = cfg.block_size;
+    let (d, r, c) = img.dims.as_3d();
+    let nb = d.div_ceil(b) * r.div_ceil(b) * c.div_ceil(b);
+    let runs = 60;
+    println!("\ncosmic-ray simulation: 1 random bit flip per compression, {runs} frames");
+    for engine in [Engine::RandomAccess, Engine::FaultTolerant] {
+        let mut correct = 0;
+        let mut crash = 0;
+        for seed in 0..runs {
+            let mut data = img.data.clone();
+            let mut inj = ArenaFlip::new(seed, nb, 1);
+            inj.apply_pre_checksum(&mut data);
+            match run_and_classify(engine, &data, img.dims, &cfg, &mut inj) {
+                Outcome::Correct => {
+                    if analysis::max_abs_err(&img.data, &data) <= bound {
+                        correct += 1;
+                    }
+                }
+                Outcome::Crash => crash += 1,
+                _ => {}
+            }
+        }
+        println!(
+            "  {:<6} frames intact {:>3}/{runs} ({:.0}%), crashes {}",
+            engine.name(),
+            correct,
+            100.0 * correct as f64 / runs as f64,
+            crash
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,99 @@
+"""AOT lowering: L2 graphs -> HLO *text* artifacts for the Rust runtime.
+
+HLO text (not `.serialize()`) is the interchange format: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the published `xla` 0.1.6 crate) rejects; the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Run as:  cd python && python -m compile.aot --out-dir ../artifacts
+
+Produces one artifact per (graph, batch, block-edge) variant plus a
+manifest.txt consumed by make (freshness) and by rust/src/runtime (inventory).
+"""
+
+import argparse
+import hashlib
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)  # u64 checksums must survive tracing
+
+import jax.numpy as jnp  # noqa: E402
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import model  # noqa: E402
+
+# (batch N, block edge B) variants compiled ahead of time. Rust pads the last
+# batch up to N. b10 is the paper's default block size; b8/b16 cover the
+# rate-distortion sweep end of Fig 3; the n4/b4 variant keeps tests fast.
+VARIANTS = [
+    (64, 10),
+    (64, 8),
+    (64, 16),
+    (4, 4),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_variant(n: int, b: int):
+    """Lower all graphs for one (N, B) variant; yield (name, hlo_text)."""
+    x = jax.ShapeDtypeStruct((n, b, b, b), jnp.float32)
+    bins = jax.ShapeDtypeStruct((n, b, b, b), jnp.int32)
+    scale = jax.ShapeDtypeStruct((2,), jnp.float32)
+    flat_f = jax.ShapeDtypeStruct((n, b * b * b), jnp.float32)
+    flat_i = jax.ShapeDtypeStruct((n, b * b * b), jnp.int32)
+
+    yield (
+        f"compress_n{n}_b{b}",
+        to_hlo_text(jax.jit(model.compress_blocks).lower(x, scale)),
+    )
+    yield (
+        f"decompress_n{n}_b{b}",
+        to_hlo_text(jax.jit(model.decompress_blocks).lower(bins, scale)),
+    )
+    yield (
+        f"regression_n{n}_b{b}",
+        to_hlo_text(jax.jit(model.regression_coeffs).lower(x)),
+    )
+    yield (
+        f"checksum_f32_n{n}_b{b}",
+        to_hlo_text(jax.jit(model.checksum_blocks_f32).lower(flat_f)),
+    )
+    yield (
+        f"checksum_i32_n{n}_b{b}",
+        to_hlo_text(jax.jit(model.checksum_blocks_i32).lower(flat_i)),
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = []
+    for n, b in VARIANTS:
+        for name, text in lower_variant(n, b):
+            path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+            with open(path, "w") as f:
+                f.write(text)
+            digest = hashlib.sha256(text.encode()).hexdigest()[:16]
+            manifest.append(f"{name}.hlo.txt n={n} b={b} sha256={digest}")
+            print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"manifest: {len(manifest)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""L1 Pallas kernels (build-time only; lowered to HLO by ../aot.py)."""
+
+from . import checksum, lorenzo, ref, regression  # noqa: F401

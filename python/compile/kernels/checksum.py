@@ -1,0 +1,50 @@
+"""L1 Pallas kernel: ABFT integer-reinterpretation block checksums.
+
+Paper §5.4: treat each 32-bit word (f32 bit pattern or i32 quantization bin)
+as an unsigned integer, widen to u64 and accumulate with wrapping adds —
+immune to NaN/Inf and round-off, and a (sum, isum) pair both detects and
+*locates* a single corrupted word per block. Requires jax_enable_x64 (set in
+aot.py / conftest) so u64 survives tracing.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _checksum_kernel(u_ref, sum_ref, isum_ref):
+    """One block row per program: u32 words -> (sum, weighted sum) in u64."""
+    u = u_ref[...].astype(jnp.uint64)  # (1, M)
+    idx = jnp.arange(u.shape[1], dtype=jnp.uint64)[None, :]
+    sum_ref[...] = jnp.sum(u, axis=1, dtype=jnp.uint64)
+    isum_ref[...] = jnp.sum(u * idx, axis=1, dtype=jnp.uint64)
+
+
+def _checksum_u32(u):
+    n, m = u.shape
+    return pl.pallas_call(
+        _checksum_kernel,
+        grid=(n,),
+        in_specs=[pl.BlockSpec((1, m), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.uint64),
+            jax.ShapeDtypeStruct((n,), jnp.uint64),
+        ],
+        interpret=True,
+    )(u)
+
+
+def checksum_f32(x):
+    """Block checksums of f32 data: x f32[N, M] -> (sum u64[N], isum u64[N])."""
+    u = jax.lax.bitcast_convert_type(x, jnp.uint32)
+    return _checksum_u32(u)
+
+
+def checksum_i32(bins):
+    """Block checksums of i32 bins: i32[N, M] -> (sum u64[N], isum u64[N])."""
+    u = jax.lax.bitcast_convert_type(bins, jnp.uint32)
+    return _checksum_u32(u)

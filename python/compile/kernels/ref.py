@@ -1,0 +1,121 @@
+"""Pure-jnp oracles for every L1 Pallas kernel.
+
+These are the correctness ground truth: pytest checks each Pallas kernel
+(interpret mode) against these functions, and the Rust native engine has
+bit-exact twins of the integer paths (dual-quant Lorenzo, checksums).
+
+Numerics contract shared with rust/src/compressor/dualquant.rs and
+rust/src/ft/checksum.rs — any change here must be mirrored there:
+
+* prequantization is ``q = round_half_even(x * inv2e)`` in f32, cast to i32;
+* the Lorenzo residual is the composition of backward differences along each
+  axis (zero padding at the low edge), which is exactly ``q - L(q)`` for the
+  3D Lorenzo predictor on the integer lattice;
+* reconstruction is the inverse (cumulative sum along each axis) followed by
+  ``x' = q * twoe`` in f32, so ``|x - x'| <= e`` always holds;
+* checksums reinterpret each f32 as its u32 bit pattern, widen to u64 and
+  accumulate with wrapping arithmetic: ``sum = sum(u)``, ``isum = sum(i*u)``
+  with 0-based in-block index ``i`` (paper section 5.4).
+"""
+
+import jax.numpy as jnp
+
+
+def lorenzo_fwd_ref(x, inv2e, twoe):
+    """Dual-quant Lorenzo forward transform over a batch of blocks.
+
+    Args:
+      x: f32[N, B, B, B] batch of data blocks.
+      inv2e: f32 scalar, 1 / (2 * error_bound).
+      twoe: f32 scalar, 2 * error_bound.
+
+    Returns:
+      (bins i32[N,B,B,B], dcmp f32[N,B,B,B]) — Lorenzo residuals on the
+      integer lattice and the reconstructed ("decompressed") values.
+    """
+    q = jnp.round(x * inv2e).astype(jnp.int32)
+    bins = q
+    for axis in (1, 2, 3):
+        shifted = jnp.roll(bins, 1, axis=axis)
+        # zero at the low edge instead of wrap-around
+        idx = [slice(None)] * 4
+        idx[axis] = slice(0, 1)
+        shifted = shifted.at[tuple(idx)].set(0)
+        bins = bins - shifted
+    dcmp = q.astype(jnp.float32) * twoe
+    return bins, dcmp
+
+
+def lorenzo_inv_ref(bins, twoe):
+    """Inverse of :func:`lorenzo_fwd_ref`: cumsum along each axis, rescale."""
+    q = bins
+    for axis in (1, 2, 3):
+        q = jnp.cumsum(q, axis=axis, dtype=jnp.int32)
+    return q.astype(jnp.float32) * twoe
+
+
+def checksum_ref(x):
+    """Integer-reinterpretation block checksums (paper §5.4).
+
+    Args:
+      x: f32[N, M] — N blocks of M values each.
+
+    Returns:
+      (sum u64[N], isum u64[N]) with wrapping accumulation of the u32 bit
+      patterns; ``isum`` weights each element by its 0-based in-block index
+      so a single corrupted element can be *located* as
+      ``j = (isum' - isum) / (sum' - sum)`` in two's-complement arithmetic.
+    """
+    u = jnp.asarray(x).view(jnp.uint32).astype(jnp.uint64)
+    idx = jnp.arange(u.shape[1], dtype=jnp.uint64)
+    s = jnp.sum(u, axis=1, dtype=jnp.uint64)
+    i = jnp.sum(u * idx[None, :], axis=1, dtype=jnp.uint64)
+    return s, i
+
+
+def checksum_bins_ref(bins):
+    """Checksums over an i32 quantization-bin array (bit pattern = the i32)."""
+    u = jnp.asarray(bins).view(jnp.uint32).astype(jnp.uint64)
+    idx = jnp.arange(u.shape[1], dtype=jnp.uint64)
+    s = jnp.sum(u, axis=1, dtype=jnp.uint64)
+    i = jnp.sum(u * idx[None, :], axis=1, dtype=jnp.uint64)
+    return s, i
+
+
+def regression_ref(x):
+    """Closed-form per-block linear fit f(i,j,k) = c0*i + c1*j + c2*k + c3.
+
+    Args:
+      x: f32[N, B, B, B].
+
+    Returns:
+      coeffs f32[N, 4] for 0-based block-local coordinates, computed via the
+      orthogonal centered-coordinate decomposition (the regular grid makes
+      the least-squares system diagonal).
+    """
+    b = x.shape[1]
+    c = (b - 1) / 2.0
+    ii = (jnp.arange(b, dtype=jnp.float32) - c)[None, :, None, None]
+    jj = (jnp.arange(b, dtype=jnp.float32) - c)[None, None, :, None]
+    kk = (jnp.arange(b, dtype=jnp.float32) - c)[None, None, None, :]
+    # sum of ci^2 over the whole block: B^2 * sum_i (i-c)^2 = B^3 (B^2-1)/12
+    sxx = b * b * b * (b * b - 1) / 12.0
+    c0 = jnp.sum(x * ii, axis=(1, 2, 3)) / sxx
+    c1 = jnp.sum(x * jj, axis=(1, 2, 3)) / sxx
+    c2 = jnp.sum(x * kk, axis=(1, 2, 3)) / sxx
+    mean = jnp.mean(x, axis=(1, 2, 3))
+    # convert the centered intercept to 0-based coordinates
+    c3 = mean - (c0 + c1 + c2) * c
+    return jnp.stack([c0, c1, c2, c3], axis=1)
+
+
+def regression_predict_ref(coeffs, b):
+    """Evaluate the fitted plane on the block grid: f32[N,B,B,B]."""
+    ii = jnp.arange(b, dtype=jnp.float32)[None, :, None, None]
+    jj = jnp.arange(b, dtype=jnp.float32)[None, None, :, None]
+    kk = jnp.arange(b, dtype=jnp.float32)[None, None, None, :]
+    c0 = coeffs[:, 0][:, None, None, None]
+    c1 = coeffs[:, 1][:, None, None, None]
+    c2 = coeffs[:, 2][:, None, None, None]
+    c3 = coeffs[:, 3][:, None, None, None]
+    return c0 * ii + c1 * jj + c2 * kk + c3

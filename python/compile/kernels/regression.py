@@ -1,0 +1,41 @@
+"""L1 Pallas kernel: closed-form per-block linear regression fit.
+
+SZ 2.1 fits f(i,j,k) = c0*i + c1*j + c2*k + c3 per block. On the regular
+block grid the normal equations are diagonal in centered coordinates, so the
+fit is four weighted reductions per block — ideal for the TPU VPU (no MXU
+needed; this is a memory-bound reduction like the Lorenzo stencil).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _regression_kernel(b, x_ref, coef_ref):
+    x = x_ref[...]  # (1, B, B, B)
+    c = (b - 1) / 2.0
+    ii = (jnp.arange(b, dtype=jnp.float32) - c)[None, :, None, None]
+    jj = (jnp.arange(b, dtype=jnp.float32) - c)[None, None, :, None]
+    kk = (jnp.arange(b, dtype=jnp.float32) - c)[None, None, None, :]
+    sxx = b * b * b * (b * b - 1) / 12.0
+    c0 = jnp.sum(x * ii, axis=(1, 2, 3)) / sxx
+    c1 = jnp.sum(x * jj, axis=(1, 2, 3)) / sxx
+    c2 = jnp.sum(x * kk, axis=(1, 2, 3)) / sxx
+    mean = jnp.mean(x, axis=(1, 2, 3))
+    c3 = mean - (c0 + c1 + c2) * c
+    coef_ref[...] = jnp.stack([c0, c1, c2, c3], axis=1)
+
+
+def regression_fit(x):
+    """Fit plane coefficients per block: f32[N,B,B,B] -> f32[N,4]."""
+    n, b = x.shape[0], x.shape[1]
+    return pl.pallas_call(
+        functools.partial(_regression_kernel, b),
+        grid=(n,),
+        in_specs=[pl.BlockSpec((1, b, b, b), lambda i: (i, 0, 0, 0))],
+        out_specs=pl.BlockSpec((1, 4), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, 4), jnp.float32),
+        interpret=True,
+    )(x)

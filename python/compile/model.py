@@ -1,0 +1,71 @@
+"""L2 compute graphs: block compression / decompression, calling L1 kernels.
+
+These are the graphs the Rust coordinator executes through PJRT (after AOT
+lowering by aot.py). Python never runs on the request path; these functions
+exist only to be lowered.
+
+Graph contract with rust/src/runtime/executor.rs:
+
+  compress_blocks(x f32[N,B,B,B], scale f32[2]) ->
+      (bins   i32[N,B,B,B],   Lorenzo residuals on the integer lattice
+       dcmp   f32[N,B,B,B],   reconstruction (what decompression will yield)
+       sum_in u64[N], isum_in u64[N],   input checksums   (paper Alg. 1 l.3-4)
+       sum_q  u64[N], isum_q  u64[N],   bin checksums     (paper Alg. 1 l.24)
+       sum_dc u64[N])                   decompressed-data checksum (l.29)
+
+  decompress_blocks(bins i32[N,B,B,B], scale f32[2]) ->
+      (x f32[N,B,B,B], sum_dc u64[N])   reconstruction + its checksum
+                                         (paper Alg. 2 l.12)
+
+  regression_coeffs(x f32[N,B,B,B]) -> f32[N,4]
+
+``scale`` is [1/(2e), 2e]; the batch size N and block edge B are fixed at
+lowering time (one artifact per (N, B) variant — see aot.py VARIANTS).
+"""
+
+import jax.numpy as jnp
+
+from .kernels import checksum as ck
+from .kernels import lorenzo as lz
+from .kernels import regression as rg
+
+
+def compress_blocks(x, scale):
+    """Fused per-block compression graph (prediction + quantize + checksums)."""
+    n = x.shape[0]
+    bins, dcmp = lz.lorenzo_fwd(x, scale)
+    flat_x = x.reshape(n, -1)
+    flat_bins = bins.reshape(n, -1)
+    flat_dcmp = dcmp.reshape(n, -1)
+    sum_in, isum_in = ck.checksum_f32(flat_x)
+    sum_q, isum_q = ck.checksum_i32(flat_bins)
+    sum_dc, _ = ck.checksum_f32(flat_dcmp)
+    return bins, dcmp, sum_in, isum_in, sum_q, isum_q, sum_dc
+
+
+def decompress_blocks(bins, scale):
+    """Per-block decompression graph + checksum of the output (Alg. 2)."""
+    n = bins.shape[0]
+    x = lz.lorenzo_inv(bins, scale)
+    sum_dc, _ = ck.checksum_f32(x.reshape(n, -1))
+    return x, sum_dc
+
+
+def regression_coeffs(x):
+    """Per-block linear-fit coefficients (prediction-preparation stage)."""
+    return rg.regression_fit(x)
+
+
+def checksum_blocks_f32(x):
+    """Standalone f32 checksum graph: x f32[N,M] -> (sum, isum) u64[N]."""
+    return ck.checksum_f32(x)
+
+
+def checksum_blocks_i32(bins):
+    """Standalone i32 checksum graph: bins i32[N,M] -> (sum, isum) u64[N]."""
+    return ck.checksum_i32(bins)
+
+
+def max_abs_err(a, b):
+    """Utility graph used by build-time self-checks."""
+    return jnp.max(jnp.abs(a - b))

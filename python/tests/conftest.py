@@ -1,0 +1,10 @@
+import os
+import sys
+
+import jax
+
+# u64 checksums need x64 mode (must be set before any tracing happens).
+jax.config.update("jax_enable_x64", True)
+
+# Allow `import compile...` whether pytest is run from python/ or the repo root.
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))

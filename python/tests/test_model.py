@@ -1,0 +1,94 @@
+"""L2 graph tests: the exact graphs that get AOT-lowered for Rust."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+
+@pytest.fixture(scope="module")
+def blocks():
+    rng = np.random.default_rng(21)
+    return rng.uniform(-1, 1, size=(4, 6, 6, 6)).astype(np.float32)
+
+
+def scale_of(e):
+    return np.array([1.0 / (2.0 * e), 2.0 * e], dtype=np.float32)
+
+
+class TestCompressGraph:
+    def test_output_arity_and_shapes(self, blocks):
+        s = scale_of(1e-3)
+        out = model.compress_blocks(blocks, s)
+        assert len(out) == 7
+        bins, dcmp, sum_in, isum_in, sum_q, isum_q, sum_dc = out
+        assert bins.shape == blocks.shape and bins.dtype == jnp.int32
+        assert dcmp.shape == blocks.shape and dcmp.dtype == jnp.float32
+        for cs in (sum_in, isum_in, sum_q, isum_q, sum_dc):
+            assert cs.shape == (blocks.shape[0],) and cs.dtype == jnp.uint64
+
+    def test_checksums_consistent_with_ref(self, blocks):
+        s = scale_of(1e-3)
+        bins, dcmp, sum_in, isum_in, sum_q, isum_q, sum_dc = model.compress_blocks(
+            blocks, s
+        )
+        n = blocks.shape[0]
+        s_r, i_r = ref.checksum_ref(blocks.reshape(n, -1))
+        np.testing.assert_array_equal(np.asarray(sum_in), np.asarray(s_r))
+        np.testing.assert_array_equal(np.asarray(isum_in), np.asarray(i_r))
+        sq_r, iq_r = ref.checksum_bins_ref(np.asarray(bins).reshape(n, -1))
+        np.testing.assert_array_equal(np.asarray(sum_q), np.asarray(sq_r))
+        np.testing.assert_array_equal(np.asarray(isum_q), np.asarray(iq_r))
+        sd_r, _ = ref.checksum_ref(np.asarray(dcmp).reshape(n, -1))
+        np.testing.assert_array_equal(np.asarray(sum_dc), np.asarray(sd_r))
+
+    def test_compress_then_decompress_checksum_agrees(self, blocks):
+        """The sum_dc stored at compression must equal the checksum computed
+        from the decompression graph (paper Alg. 2 line 12-13)."""
+        s = scale_of(1e-4)
+        bins, dcmp, *_, sum_dc = model.compress_blocks(blocks, s)
+        x2, sum_dc2 = model.decompress_blocks(np.asarray(bins), s)
+        np.testing.assert_array_equal(np.asarray(sum_dc), np.asarray(sum_dc2))
+        np.testing.assert_array_equal(np.asarray(x2), np.asarray(dcmp))
+
+    @pytest.mark.parametrize("e", [1e-2, 1e-4])
+    def test_error_bound_holds(self, blocks, e):
+        s = scale_of(e)
+        bins, *_ = model.compress_blocks(blocks, s)
+        x2, _ = model.decompress_blocks(np.asarray(bins), s)
+        assert np.abs(np.asarray(x2) - blocks).max() <= e * (1 + 1e-5)
+
+
+class TestLowering:
+    """The graphs must lower to HLO text that the 0.5.1 parser can take."""
+
+    def test_compress_lowers_to_hlo_text(self, blocks):
+        from compile.aot import to_hlo_text
+
+        lowered = jax.jit(model.compress_blocks).lower(
+            jax.ShapeDtypeStruct(blocks.shape, jnp.float32),
+            jax.ShapeDtypeStruct((2,), jnp.float32),
+        )
+        text = to_hlo_text(lowered)
+        assert "HloModule" in text
+        assert "u64" in text  # checksums survived lowering
+
+    def test_decompress_lowers_to_hlo_text(self, blocks):
+        from compile.aot import to_hlo_text
+
+        lowered = jax.jit(model.decompress_blocks).lower(
+            jax.ShapeDtypeStruct(blocks.shape, jnp.int32),
+            jax.ShapeDtypeStruct((2,), jnp.float32),
+        )
+        assert "HloModule" in to_hlo_text(lowered)
+
+    def test_regression_lowers(self, blocks):
+        from compile.aot import to_hlo_text
+
+        lowered = jax.jit(model.regression_coeffs).lower(
+            jax.ShapeDtypeStruct(blocks.shape, jnp.float32)
+        )
+        assert "HloModule" in to_hlo_text(lowered)

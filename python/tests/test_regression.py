@@ -1,0 +1,70 @@
+"""Pallas regression kernel vs oracle + exact-fit properties."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import ref
+from compile.kernels import regression as rg
+
+
+class TestVsRef:
+    @pytest.mark.parametrize("b", [2, 4, 8, 10])
+    def test_matches_ref(self, b):
+        rng = np.random.default_rng(5)
+        x = rng.standard_normal((3, b, b, b)).astype(np.float32)
+        c_k = np.asarray(rg.regression_fit(x))
+        c_r = np.asarray(ref.regression_ref(x))
+        np.testing.assert_allclose(c_k, c_r, rtol=1e-5, atol=1e-6)
+
+    def test_exact_plane_recovered(self):
+        # A perfectly planar block must be fitted exactly.
+        b = 6
+        i = np.arange(b, dtype=np.float32)
+        plane = (
+            2.0 * i[:, None, None] - 3.0 * i[None, :, None] + 0.5 * i[None, None, :] + 7.0
+        )[None]
+        c = np.asarray(rg.regression_fit(plane))[0]
+        np.testing.assert_allclose(c, [2.0, -3.0, 0.5, 7.0], rtol=1e-4, atol=1e-3)
+
+    def test_constant_block(self):
+        x = np.full((1, 5, 5, 5), 3.25, dtype=np.float32)
+        c = np.asarray(rg.regression_fit(x))[0]
+        np.testing.assert_allclose(c, [0.0, 0.0, 0.0, 3.25], atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.integers(min_value=2, max_value=8),
+    c0=st.floats(min_value=-10, max_value=10),
+    c1=st.floats(min_value=-10, max_value=10),
+    c2=st.floats(min_value=-10, max_value=10),
+    c3=st.floats(min_value=-100, max_value=100),
+)
+def test_hypothesis_planes_fit_exactly(b, c0, c1, c2, c3):
+    i = np.arange(b, dtype=np.float32)
+    x = (
+        c0 * i[:, None, None] + c1 * i[None, :, None] + c2 * i[None, None, :] + c3
+    )[None].astype(np.float32)
+    got = np.asarray(rg.regression_fit(x))[0]
+    scale = max(abs(c0), abs(c1), abs(c2), abs(c3), 1.0)
+    np.testing.assert_allclose(got, [c0, c1, c2, c3], atol=2e-3 * scale)
+
+
+def test_residual_orthogonality():
+    """Least-squares residual must be orthogonal to the design columns."""
+    b = 6
+    rng = np.random.default_rng(9)
+    x = rng.standard_normal((1, b, b, b)).astype(np.float32)
+    coeffs = np.asarray(rg.regression_fit(x))
+    pred = np.asarray(ref.regression_predict_ref(coeffs, b))
+    res = (x - pred).astype(np.float64)
+    i = np.arange(b, dtype=np.float64)
+    for axis_grid in (
+        i[:, None, None] + 0 * i[None, :, None] + 0 * i[None, None, :],
+        0 * i[:, None, None] + i[None, :, None] + 0 * i[None, None, :],
+        0 * i[:, None, None] + 0 * i[None, :, None] + i[None, None, :],
+        np.ones((b, b, b)),
+    ):
+        assert abs((res[0] * axis_grid).sum()) < 1e-2

@@ -1,0 +1,102 @@
+//! Shared bench plumbing: dataset construction, engine dispatch, timing,
+//! and table formatting. Used by every `rust/benches/*.rs` binary.
+//!
+//! Environment knobs:
+//! * `FTSZ_BENCH_FULL=1` — paper-scale run counts (slower, tighter stats);
+//! * `FTSZ_BENCH_EDGE=N` — override dataset edge.
+#![allow(dead_code)]
+
+use ftsz::compressor::{classic, engine, CompressionConfig, ErrorBound};
+use ftsz::data::synthetic::{self, Profile};
+use ftsz::data::Field;
+use ftsz::ft;
+use ftsz::inject::Engine;
+
+/// True when the paper-scale switch is on.
+pub fn full_mode() -> bool {
+    std::env::var("FTSZ_BENCH_FULL").is_ok_and(|v| v == "1")
+}
+
+/// Dataset edge (linear scale), honoring the env override.
+pub fn edge_or(default: usize) -> usize {
+    std::env::var("FTSZ_BENCH_EDGE")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+/// Run-count helper: quick vs full.
+pub fn runs_or(quick: usize, full: usize) -> usize {
+    if full_mode() {
+        full
+    } else {
+        quick
+    }
+}
+
+/// The paper's four error bounds (value-range relative).
+pub const BOUNDS: [f64; 4] = [1e-3, 1e-4, 1e-5, 1e-6];
+
+/// Representative field per profile (the one the paper plots).
+pub fn representative(profile: Profile, edge: usize, seed: u64) -> Field {
+    let mut fields = synthetic::dataset(profile, edge, seed);
+    let pick = match profile {
+        Profile::Nyx => 0,        // velocity_x
+        Profile::Hurricane => 0,  // TCf48
+        Profile::ScaleLetkf => 0, // QG
+        Profile::Pluto => 0,
+    };
+    fields.swap_remove(pick)
+}
+
+/// Compress with one engine.
+pub fn compress(engine_kind: Engine, f: &Field, cfg: &CompressionConfig) -> Vec<u8> {
+    match engine_kind {
+        Engine::Classic => classic::compress(&f.data, f.dims, cfg).expect("sz compress"),
+        Engine::RandomAccess => engine::compress(&f.data, f.dims, cfg).expect("rsz compress"),
+        Engine::FaultTolerant => ft::compress(&f.data, f.dims, cfg).expect("ftrsz compress"),
+    }
+}
+
+/// Decompress with one engine.
+pub fn decompress(engine_kind: Engine, bytes: &[u8]) -> Vec<f32> {
+    match engine_kind {
+        Engine::Classic => classic::decompress(bytes).expect("sz decompress").data,
+        Engine::RandomAccess => engine::decompress(bytes).expect("rsz decompress").data,
+        Engine::FaultTolerant => ft::decompress(bytes).expect("ftrsz decompress").data,
+    }
+}
+
+/// Default paper config at a relative bound.
+pub fn cfg_rel(bound: f64) -> CompressionConfig {
+    CompressionConfig::new(ErrorBound::Rel(bound))
+}
+
+/// Time a closure: (median secs of `reps`, last result).
+pub fn time_median<T>(reps: usize, mut f: impl FnMut() -> T) -> (f64, T) {
+    let mut samples = Vec::with_capacity(reps);
+    let mut out = None;
+    for _ in 0..reps.max(1) {
+        let t = std::time::Instant::now();
+        let v = f();
+        samples.push(t.elapsed().as_secs_f64());
+        out = Some(v);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    (samples[samples.len() / 2], out.unwrap())
+}
+
+/// Blocks in a field at block size `b`.
+pub fn n_blocks(f: &Field, b: usize) -> usize {
+    let (d, r, c) = f.dims.as_3d();
+    d.div_ceil(b) * r.div_ceil(b) * c.div_ceil(b)
+}
+
+/// Print a bench banner.
+pub fn banner(name: &str, paper_ref: &str) {
+    println!("{}", "=".repeat(78));
+    println!("{name}");
+    println!("paper reference: {paper_ref}");
+    println!("mode: {}", if full_mode() { "FULL (paper-scale)" } else { "quick (FTSZ_BENCH_FULL=1 for paper-scale)" });
+    println!("{}", "=".repeat(78));
+}

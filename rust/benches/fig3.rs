@@ -1,0 +1,58 @@
+//! Figure 3: rate-distortion (PSNR vs bit-rate) for block sizes 4³..20³ on
+//! NYX-like velocity_x and Hurricane-like TCf48 — the block-size
+//! exploration that picked 10×10×10.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use common::*;
+use ftsz::analysis;
+use ftsz::data::synthetic::Profile;
+use ftsz::inject::Engine;
+
+fn main() {
+    banner(
+        "Figure 3 — rate-distortion across block sizes",
+        "small blocks win at low bit-rate (<2); 8-12 win at high bit-rate; \
+         20^3 never wins (regression fit degrades); paper picks 10^3",
+    );
+    let edge = edge_or(64);
+    let block_sizes = [4usize, 6, 8, 10, 12, 16, 20];
+    let bounds = [1e-2, 1e-3, 1e-4, 1e-5, 1e-6];
+    for profile in [Profile::Nyx, Profile::Hurricane] {
+        let f = representative(profile, edge, 21);
+        println!("\n{} ({:?}):", profile.name(), f.dims);
+        print!("{:>10}", "bound");
+        for b in block_sizes {
+            print!(" | {:>7}b={:<2}", "", b);
+        }
+        println!();
+        print!("{:>10}", "");
+        for _ in block_sizes {
+            print!(" | {:>6} {:>5}", "bitrate", "psnr");
+        }
+        println!();
+        let mut series: Vec<Vec<(f64, f64)>> = vec![Vec::new(); block_sizes.len()];
+        for bound in bounds {
+            print!("{:>10.0e}", bound);
+            for (bi, &b) in block_sizes.iter().enumerate() {
+                let cfg = cfg_rel(bound).with_block_size(b);
+                let bytes = compress(Engine::RandomAccess, &f, &cfg);
+                let dec = decompress(Engine::RandomAccess, &bytes);
+                let bitrate = analysis::bit_rate(f.data.len(), bytes.len());
+                let psnr = analysis::psnr(&f.data, &dec);
+                series[bi].push((bitrate, psnr));
+                print!(" | {:>6.2} {:>5.1}", bitrate, psnr);
+            }
+            println!();
+        }
+        // paper shape check: at the loosest bound (lowest bitrate), small
+        // blocks must not pay a big bitrate premium vs 20^3's poor fit
+        let low_rate_10 = series[3][0].0; // b=10 at 1e-2
+        let low_rate_20 = series[6][0].0; // b=20 at 1e-2
+        println!(
+            "  b=10 low-rate bitrate {low_rate_10:.3} vs b=20 {low_rate_20:.3} \
+             (10^3 should be competitive)"
+        );
+    }
+}

@@ -1,0 +1,64 @@
+//! Figure 4: random-access decompression efficiency — decompression time
+//! vs the fraction of the dataset extracted (expected ~linear).
+
+#[path = "common/mod.rs"]
+mod common;
+
+use common::*;
+use ftsz::compressor::block::Region;
+use ftsz::compressor::engine;
+use ftsz::data::synthetic::Profile;
+use ftsz::inject::Engine;
+
+fn main() {
+    banner(
+        "Figure 4 — random-access decompression time vs extracted fraction",
+        "decompression time decreases ~linearly with the extracted data size",
+    );
+    let edge = edge_or(if full_mode() { 96 } else { 64 });
+    let reps = runs_or(5, 15);
+    println!(
+        "{:<12} {:>10} {:>12} {:>12} {:>10}",
+        "dataset", "fraction", "points", "time ms", "ms/Mpt"
+    );
+    for profile in Profile::all() {
+        let f = representative(profile, edge, 5);
+        let cfg = cfg_rel(1e-4);
+        let bytes = compress(Engine::RandomAccess, &f, &cfg);
+        let (d, r, c) = f.dims.as_3d();
+        let mut per_mpt = Vec::new();
+        for frac_pct in [1usize, 5, 10, 25, 50, 100] {
+            // a centered sub-box with ~frac% of the volume
+            let scale = ((frac_pct as f64) / 100.0).powf(1.0 / f.dims.rank() as f64);
+            let shape = (
+                ((d as f64 * scale).ceil() as usize).clamp(1, d),
+                ((r as f64 * scale).ceil() as usize).clamp(1, r),
+                ((c as f64 * scale).ceil() as usize).clamp(1, c),
+            );
+            let origin = ((d - shape.0) / 2, (r - shape.1) / 2, (c - shape.2) / 2);
+            let region = Region { origin, shape };
+            let (secs, out) = time_median(reps, || {
+                engine::decompress_region(&bytes, region).expect("region decode")
+            });
+            per_mpt.push(secs * 1e3 / (out.len() as f64 / 1e6));
+            println!(
+                "{:<12} {:>9}% {:>12} {:>12.3} {:>10.1}",
+                profile.name(),
+                frac_pct,
+                out.len(),
+                secs * 1e3,
+                per_mpt.last().unwrap()
+            );
+        }
+        // linearity check: cost per point at 5% within 4x of cost at 100%
+        let small = per_mpt[1];
+        let full = *per_mpt.last().unwrap();
+        println!(
+            "  {} per-Mpt cost 5% vs 100%: {:.1} vs {:.1} ms (ratio {:.2})",
+            profile.name(),
+            small,
+            full,
+            small / full
+        );
+    }
+}

@@ -1,0 +1,48 @@
+//! Figure 5: error-free compression/decompression time overheads of rsz
+//! and ftrsz relative to classic sz, across datasets and bounds.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use common::*;
+use ftsz::data::synthetic::Profile;
+use ftsz::inject::Engine;
+
+fn main() {
+    banner(
+        "Figure 5 — error-free time overheads (rsz, ftrsz vs sz)",
+        "rsz/ftrsz incur ~5-20% compression and ~2-30% decompression overhead",
+    );
+    let edge = edge_or(if full_mode() { 96 } else { 64 });
+    let reps = runs_or(3, 7);
+    println!(
+        "{:<12} {:>8} | {:>9} {:>9} {:>9} | {:>9} {:>9} {:>9}",
+        "dataset", "bound", "sz c(s)", "rsz +%", "ftrsz +%", "sz d(s)", "rsz +%", "ftrsz +%"
+    );
+    for profile in Profile::all() {
+        let f = representative(profile, edge, 13);
+        for bound in [1e-3, 1e-4, 1e-5, 1e-6] {
+            let cfg = cfg_rel(bound);
+            let mut comp = Vec::new();
+            let mut decomp = Vec::new();
+            for engine in [Engine::Classic, Engine::RandomAccess, Engine::FaultTolerant] {
+                let (cs, bytes) = time_median(reps, || compress(engine, &f, &cfg));
+                let (ds, _) = time_median(reps, || decompress(engine, &bytes));
+                comp.push(cs);
+                decomp.push(ds);
+            }
+            let pct = |v: f64, base: f64| 100.0 * (v / base - 1.0);
+            println!(
+                "{:<12} {:>8.0e} | {:>9.4} {:>8.1}% {:>8.1}% | {:>9.4} {:>8.1}% {:>8.1}%",
+                profile.name(),
+                bound,
+                comp[0],
+                pct(comp[1], comp[0]),
+                pct(comp[2], comp[0]),
+                decomp[0],
+                pct(decomp[1], decomp[0]),
+                pct(decomp[2], decomp[0]),
+            );
+        }
+    }
+}

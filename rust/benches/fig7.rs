@@ -1,0 +1,58 @@
+//! Figure 7: compression-ratio decrease under computation errors in the
+//! (unprotected, naturally resilient) regression/sampling stage — up to 10
+//! injected errors, bounds 1e-3 and 1e-6.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use common::*;
+use ftsz::analysis;
+use ftsz::data::synthetic::Profile;
+use ftsz::ft;
+use ftsz::inject::mode_a::EstimationFault;
+
+fn main() {
+    banner(
+        "Figure 7 — CR decrease vs # computation errors in regression/sampling",
+        "decrease stays within ~2% for up to 10 errors at bounds 1e-6 and 1e-3; \
+         correctness is never affected (§4.1.1)",
+    );
+    let trials = runs_or(15, 50);
+    let edge = edge_or(48);
+    let f = representative(Profile::Nyx, edge, 17);
+    println!(
+        "{:>8} {:>8} | {:>12} {:>14} {:>12}",
+        "bound", "errors", "CR (clean)", "worst CR", "decrease %"
+    );
+    for bound in [1e-3, 1e-6] {
+        let cfg = cfg_rel(bound);
+        let nb = n_blocks(&f, cfg.block_size);
+        let clean = ft::compress(&f.data, f.dims, &cfg).expect("clean").len();
+        let cr_clean = analysis::compression_ratio(f.data.len(), clean);
+        for n_errors in [1usize, 2, 4, 6, 8, 10] {
+            let mut worst_cr = f64::INFINITY;
+            for seed in 0..trials as u64 {
+                let mut inj = EstimationFault::new(seed ^ (n_errors as u64) << 16, nb, n_errors);
+                let out = ft::compress_with_hooks(&f.data, f.dims, &cfg, &mut inj)
+                    .expect("injected compress");
+                // correctness must hold regardless (the paper's point)
+                let dec = ft::decompress(&out.archive).expect("decompress");
+                let abs = cfg.error_bound.absolute(&f.data);
+                assert!(
+                    analysis::max_abs_err(&f.data, &dec.data) <= abs,
+                    "estimation faults must never violate the bound"
+                );
+                worst_cr =
+                    worst_cr.min(analysis::compression_ratio(f.data.len(), out.archive.len()));
+            }
+            println!(
+                "{:>8.0e} {:>8} | {:>12.4} {:>14.4} {:>12.3}",
+                bound,
+                n_errors,
+                cr_clean,
+                worst_cr,
+                100.0 * (1.0 - worst_cr / cr_clean)
+            );
+        }
+    }
+}

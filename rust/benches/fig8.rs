@@ -1,0 +1,58 @@
+//! Figure 8: weak-scaling dump/load performance on the (simulated) PFS,
+//! 256→2048 ranks, sz vs ftrsz — the "FT overhead vanishes under the I/O
+//! bottleneck" experiment.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use common::*;
+use ftsz::coordinator::weak_scaling_run;
+use ftsz::data::synthetic::Profile;
+use ftsz::inject::Engine;
+use ftsz::io::SimulatedPfs;
+
+fn main() {
+    banner(
+        "Figure 8 — weak scaling, file-per-process over shared-bandwidth PFS",
+        "7.3% dump overhead and 6.2% load overhead for ftrsz at 2,048 cores; \
+         I/O dominated by compression ratio",
+    );
+    let edge = edge_or(if full_mode() { 96 } else { 64 });
+    // bandwidth chosen so the PFS is the bottleneck at scale, like the
+    // paper's production Lustre during the runs
+    let pfs = SimulatedPfs::new(20e9, 2e-3);
+    let cfg = cfg_rel(1e-4); // the paper's NYX bound
+    let sample = runs_or(2, 6);
+    println!(
+        "{:>6} {:>7} | {:>9} {:>9} {:>9} | {:>9} {:>9} {:>9} | {:>7}",
+        "ranks", "engine", "comp s", "write s", "dump s", "decomp s", "read s", "load s", "ratio"
+    );
+    for ranks in [256usize, 512, 1024, 2048] {
+        let mut dump = std::collections::HashMap::new();
+        let mut load = std::collections::HashMap::new();
+        for engine in [Engine::Classic, Engine::FaultTolerant] {
+            let p = weak_scaling_run(engine, Profile::Nyx, edge, ranks, sample, &cfg, &pfs, 11)
+                .expect("weak scaling point");
+            println!(
+                "{:>6} {:>7} | {:>9.3} {:>9.3} {:>9.3} | {:>9.3} {:>9.3} {:>9.3} | {:>7.2}",
+                ranks,
+                engine.name(),
+                p.compress_secs,
+                p.write_secs,
+                p.dump_secs(),
+                p.decompress_secs,
+                p.read_secs,
+                p.load_secs(),
+                p.ratio
+            );
+            dump.insert(engine.name(), p.dump_secs());
+            load.insert(engine.name(), p.load_secs());
+        }
+        println!(
+            "{:>14} ftrsz overhead: dump {:+.1}%, load {:+.1}%",
+            "",
+            (dump["ftrsz"] / dump["sz"] - 1.0) * 100.0,
+            (load["ftrsz"] / load["sz"] - 1.0) * 100.0
+        );
+    }
+}

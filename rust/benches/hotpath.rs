@@ -1,0 +1,115 @@
+//! Hot-path microbenchmarks (the §Perf iteration harness): per-stage
+//! throughput of the compression pipeline plus the XLA offload path.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use common::*;
+use ftsz::compressor::huffman::HuffmanTable;
+use ftsz::compressor::{dualquant, engine, CompressionConfig, ErrorBound};
+use ftsz::data::synthetic::Profile;
+use ftsz::ft::checksum;
+use ftsz::inject::Engine;
+use ftsz::util::bits::{BitReader, BitWriter};
+
+fn mbps(bytes: usize, secs: f64) -> f64 {
+    bytes as f64 / secs / 1e6
+}
+
+fn main() {
+    banner("hot-path microbenchmarks", "n/a (engineering baseline for EXPERIMENTS.md §Perf)");
+    let edge = edge_or(64);
+    let f = representative(Profile::Hurricane, edge, 3);
+    let bytes_in = f.data.len() * 4;
+    let reps = runs_or(5, 11);
+
+    // end-to-end engines
+    for engine_kind in [Engine::Classic, Engine::RandomAccess, Engine::FaultTolerant] {
+        let cfg = cfg_rel(1e-4);
+        let (cs, archive) = time_median(reps, || compress(engine_kind, &f, &cfg));
+        let (ds, _) = time_median(reps, || decompress(engine_kind, &archive));
+        println!(
+            "{:<22} compress {:>8.1} MB/s   decompress {:>8.1} MB/s   ratio {:>6.2}",
+            engine_kind.name(),
+            mbps(bytes_in, cs),
+            mbps(bytes_in, ds),
+            bytes_in as f64 / archive.len() as f64
+        );
+    }
+
+    // stage: sequential lorenzo+quantize via the engine with lorenzo-only
+    let cfg_lor = CompressionConfig::new(ErrorBound::Rel(1e-4))
+        .with_predictor(ftsz::compressor::PredictorPolicy::LorenzoOnly);
+    let (s, _) = time_median(reps, || {
+        engine::compress(&f.data, f.dims, &cfg_lor).expect("lorenzo-only")
+    });
+    println!("{:<22} {:>8.1} MB/s", "lorenzo-only engine", mbps(bytes_in, s));
+
+    // stage: dual-quant transform (the XLA-twin data-parallel path)
+    let shape = (10usize, 10, 10);
+    let block: Vec<f32> = f.data.iter().take(1000).copied().collect();
+    let (s, _) = time_median(reps, || {
+        let (mut bins, mut dcmp) = (Vec::new(), Vec::new());
+        for _ in 0..1000 {
+            dualquant::forward(&block, shape, 1e-3, &mut bins, &mut dcmp);
+        }
+    });
+    println!("{:<22} {:>8.1} MB/s", "dualquant fwd", mbps(1000 * 4000, s));
+
+    // stage: checksums
+    let (s, _) = time_median(reps, || {
+        std::hint::black_box(checksum::checksum_f32(&f.data));
+    });
+    println!("{:<22} {:>8.1} MB/s", "checksum f32", mbps(bytes_in, s));
+
+    // stage: huffman encode + decode on a realistic code distribution
+    let cfg = cfg_rel(1e-4);
+    let out = engine::compress_with_hooks(&f.data, f.dims, &cfg, &mut engine::NoHooks)
+        .expect("compress");
+    let _ = out;
+    let mut freqs = vec![0u64; 65536];
+    let codes: Vec<u32> = f
+        .data
+        .iter()
+        .map(|v| (32768.0 + (v * 50.0).sin() * 3.0) as u32)
+        .collect();
+    for &c in &codes {
+        freqs[c as usize] += 1;
+    }
+    let table = HuffmanTable::from_frequencies(&freqs).expect("table");
+    let (s_enc, stream) = time_median(reps, || {
+        let mut w = BitWriter::with_capacity(codes.len());
+        for &c in &codes {
+            table.encode(&mut w, c).expect("encode");
+        }
+        let bits = w.bit_len();
+        (w.finish(), bits)
+    });
+    println!("{:<22} {:>8.1} Msym/s", "huffman encode", codes.len() as f64 / s_enc / 1e6);
+    let (buf, bits) = stream;
+    let (s_dec, _) = time_median(reps, || {
+        let mut r = BitReader::with_limit(&buf, bits).expect("reader");
+        for _ in 0..codes.len() {
+            std::hint::black_box(table.decode(&mut r).expect("decode"));
+        }
+    });
+    println!("{:<22} {:>8.1} Msym/s", "huffman decode", codes.len() as f64 / s_dec / 1e6);
+
+    // XLA offload path (when artifacts exist)
+    if let Ok(rt) = ftsz::runtime::XlaRuntime::cpu_default() {
+        if let Ok(k) = ftsz::runtime::BlockKernels::new(&rt, 64, 10) {
+            let batch: Vec<f32> = f.data.iter().take(k.batch_len()).copied().collect();
+            let (lo, hi) =
+                batch.iter().fold((f32::MAX, f32::MIN), |(l, h), &v| (l.min(v), h.max(v)));
+            let e = 1e-4 * (hi - lo) as f64;
+            let (s, _) = time_median(reps, || k.compress(&batch, e).expect("xla"));
+            println!(
+                "{:<22} {:>8.1} MB/s (64 blocks/call, PJRT CPU)",
+                "xla offload compress",
+                mbps(batch.len() * 4, s)
+            );
+        }
+    } else {
+        println!("xla offload: skipped (run `make artifacts`)");
+    }
+}

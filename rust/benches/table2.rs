@@ -1,0 +1,49 @@
+//! Table 2: compression-ratio degradation of rsz and ftrsz vs classic sz,
+//! across error bounds 1e-3..1e-6 and all four datasets.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use common::*;
+use ftsz::data::synthetic::Profile;
+use ftsz::inject::Engine;
+
+fn main() {
+    banner(
+        "Table 2 — compression ratio degradation (rsz, ftrsz vs sz)",
+        "NYX: sz 17.0/7.7/4.6/3.1, rsz -8.7/-3.7/-3.1/-3.2%, ftrsz -10.7/-4.7/-3.7/-3.6%; \
+         SL shows the largest rsz cost (9-25%); Pluto the smallest (0-5.6%)",
+    );
+    let edge = edge_or(if full_mode() { 96 } else { 64 });
+    println!(
+        "{:<12} {:>8} | {:>8} {:>12} {:>12}",
+        "dataset", "bound", "sz CR", "rsz decr%", "ftrsz decr%"
+    );
+    for profile in Profile::all() {
+        let f = representative(profile, edge, 42);
+        for bound in BOUNDS {
+            let cfg = cfg_rel(bound);
+            let sz = compress(Engine::Classic, &f, &cfg).len();
+            let rsz = compress(Engine::RandomAccess, &f, &cfg).len();
+            let ftrsz = compress(Engine::FaultTolerant, &f, &cfg).len();
+            let cr_sz = f.data.len() as f64 * 4.0 / sz as f64;
+            let rsz_decr = 100.0 * (1.0 - cr_of(&f, rsz) / cr_sz);
+            let ft_decr = 100.0 * (1.0 - cr_of(&f, ftrsz) / cr_sz);
+            println!(
+                "{:<12} {:>8.0e} | {:>8.2} {:>12.2} {:>12.2}",
+                profile.name(),
+                bound,
+                cr_sz,
+                rsz_decr,
+                ft_decr
+            );
+            // the paper's qualitative shape: ftrsz always costs at least as
+            // much as rsz; both must stay bounded
+            assert!(ft_decr >= rsz_decr - 0.5, "{}: ftrsz beat rsz?", profile.name());
+        }
+    }
+}
+
+fn cr_of(f: &ftsz::data::Field, bytes: usize) -> f64 {
+    f.data.len() as f64 * 4.0 / bytes as f64
+}

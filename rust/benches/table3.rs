@@ -1,0 +1,65 @@
+//! Table 3: percentage of runs with correct decompressed data under
+//! mode-A memory-error injection (input array / quantization-bin array),
+//! sz vs ftrsz, four error bounds.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use common::*;
+use ftsz::data::synthetic::Profile;
+use ftsz::inject::mode_a::{BinBitFlip, InputBitFlip};
+use ftsz::inject::{run_and_classify, Engine, Outcome};
+
+fn main() {
+    banner(
+        "Table 3 — mode-A injection: % runs within error bound",
+        "input errors: sz 48-60% correct vs ftrsz 100%; bin errors: sz 0-3% correct, \
+         34-54% non-crash vs ftrsz 100%/100%",
+    );
+    let runs = runs_or(40, 100);
+    let edge = edge_or(40);
+    let f = representative(Profile::Nyx, edge, 7); // paper: NYX dark matter density
+    println!(
+        "{:>8} {:>7} | {:>14} {:>14} | {:>14} {:>14} {:>14}",
+        "bound", "engine", "input:correct", "", "bin:correct", "bin:noncrash", ""
+    );
+    for bound in BOUNDS {
+        let cfg = cfg_rel(bound);
+        let nb = n_blocks(&f, cfg.block_size);
+        for engine in [Engine::Classic, Engine::FaultTolerant] {
+            let mut input_ok = 0;
+            let mut bin_ok = 0;
+            let mut bin_noncrash = 0;
+            for seed in 0..runs as u64 {
+                let mut inj = InputBitFlip::new(seed, 1);
+                if run_and_classify(engine, &f.data, f.dims, &cfg, &mut inj) == Outcome::Correct {
+                    input_ok += 1;
+                }
+                let mut inj = BinBitFlip::new(seed ^ 0x51ab, nb);
+                match run_and_classify(engine, &f.data, f.dims, &cfg, &mut inj) {
+                    Outcome::Correct => {
+                        bin_ok += 1;
+                        bin_noncrash += 1;
+                    }
+                    Outcome::Crash => {}
+                    _ => bin_noncrash += 1,
+                }
+            }
+            let pct = |n: usize| 100.0 * n as f64 / runs as f64;
+            println!(
+                "{:>8.0e} {:>7} | {:>13.0}% {:>14} | {:>13.0}% {:>13.0}% {:>14}",
+                bound,
+                engine.name(),
+                pct(input_ok),
+                "",
+                pct(bin_ok),
+                pct(bin_noncrash),
+                ""
+            );
+            if engine == Engine::FaultTolerant {
+                assert_eq!(input_ok, runs, "ftrsz must correct all input flips");
+                assert_eq!(bin_ok, runs, "ftrsz must correct all bin flips");
+            }
+        }
+    }
+}

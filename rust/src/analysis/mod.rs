@@ -1,0 +1,79 @@
+//! Compression-quality and distortion metrics (rate-distortion plots,
+//! Table-2-style ratio reporting, error-bound conformance checks).
+
+/// Maximum absolute pointwise error.
+pub fn max_abs_err(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| (*x as f64 - *y as f64).abs()).fold(0.0, f64::max)
+}
+
+/// Fraction of points violating an absolute bound.
+pub fn violations(a: &[f32], b: &[f32], bound: f64) -> usize {
+    a.iter().zip(b).filter(|(x, y)| (**x as f64 - **y as f64).abs() > bound).count()
+}
+
+/// Peak signal-to-noise ratio in dB, using the value range as peak
+/// (the SZ-community convention for rate-distortion curves).
+pub fn psnr(orig: &[f32], dec: &[f32]) -> f64 {
+    assert_eq!(orig.len(), dec.len());
+    assert!(!orig.is_empty());
+    let mut lo = f64::INFINITY;
+    let mut hi = f64::NEG_INFINITY;
+    let mut se = 0.0f64;
+    for (&x, &y) in orig.iter().zip(dec) {
+        let (x, y) = (x as f64, y as f64);
+        lo = lo.min(x);
+        hi = hi.max(x);
+        se += (x - y) * (x - y);
+    }
+    let mse = se / orig.len() as f64;
+    if mse == 0.0 {
+        return f64::INFINITY;
+    }
+    let range = (hi - lo).max(f64::MIN_POSITIVE);
+    20.0 * range.log10() - 10.0 * mse.log10()
+}
+
+/// Compression ratio = original bytes / compressed bytes.
+pub fn compression_ratio(original_points: usize, compressed_bytes: usize) -> f64 {
+    (original_points * 4) as f64 / compressed_bytes.max(1) as f64
+}
+
+/// Bit rate = compressed bits per original point.
+pub fn bit_rate(original_points: usize, compressed_bytes: usize) -> f64 {
+    (compressed_bytes * 8) as f64 / original_points.max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn max_err_and_violations() {
+        let a = [0.0f32, 1.0, 2.0];
+        let b = [0.0f32, 1.5, 2.0];
+        assert_eq!(max_abs_err(&a, &b), 0.5);
+        assert_eq!(violations(&a, &b, 0.4), 1);
+        assert_eq!(violations(&a, &b, 0.6), 0);
+    }
+
+    #[test]
+    fn psnr_identity_is_infinite() {
+        let a = [0.0f32, 1.0, 2.0];
+        assert!(psnr(&a, &a).is_infinite());
+    }
+
+    #[test]
+    fn psnr_scales_with_noise() {
+        let a: Vec<f32> = (0..1000).map(|i| (i as f32) / 100.0).collect();
+        let noisy_small: Vec<f32> = a.iter().map(|v| v + 1e-4).collect();
+        let noisy_big: Vec<f32> = a.iter().map(|v| v + 1e-2).collect();
+        assert!(psnr(&a, &noisy_small) > psnr(&a, &noisy_big) + 30.0);
+    }
+
+    #[test]
+    fn ratio_and_bitrate() {
+        assert_eq!(compression_ratio(1000, 400), 10.0);
+        assert_eq!(bit_rate(1000, 400), 3.2);
+    }
+}

@@ -1,0 +1,286 @@
+//! Block decomposition of 1/2/3-D grids (paper §5.1).
+//!
+//! The independent-block model splits the dataset into cubic blocks of edge
+//! `b` (truncated at the domain boundary). Every block compresses and
+//! decompresses with no reference to any other block, which (a) confines an
+//! SDC to one block and (b) enables random-access region decompression.
+
+use crate::data::Dims;
+use crate::error::{Error, Result};
+
+/// Placement of one block inside the global grid.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BlockExtent {
+    /// Global origin (z, y, x).
+    pub origin: (usize, usize, usize),
+    /// Local shape (nz, ny, nx) — edge blocks may be smaller than `b`.
+    pub shape: (usize, usize, usize),
+}
+
+impl BlockExtent {
+    /// Number of points in the block.
+    pub fn len(&self) -> usize {
+        self.shape.0 * self.shape.1 * self.shape.2
+    }
+
+    /// True when empty (never produced by a valid grid).
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// A rectangular region of the global grid (for random access).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Region {
+    /// Origin (z, y, x).
+    pub origin: (usize, usize, usize),
+    /// Shape (nz, ny, nx).
+    pub shape: (usize, usize, usize),
+}
+
+impl Region {
+    /// Whole-domain region for `dims`.
+    pub fn all(dims: Dims) -> Self {
+        let (d, r, c) = dims.as_3d();
+        Region { origin: (0, 0, 0), shape: (d, r, c) }
+    }
+
+    /// Number of points.
+    pub fn len(&self) -> usize {
+        self.shape.0 * self.shape.1 * self.shape.2
+    }
+
+    /// True when empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// The block grid: dims × block edge → block indexing and gather/scatter.
+#[derive(Debug, Clone)]
+pub struct BlockGrid {
+    dims: Dims,
+    shape3: (usize, usize, usize),
+    b: usize,
+    nblocks: (usize, usize, usize),
+}
+
+impl BlockGrid {
+    /// Build a grid; validates shapes.
+    pub fn new(dims: Dims, b: usize) -> Result<Self> {
+        if b < 1 {
+            return Err(Error::Config("block size must be >= 1".into()));
+        }
+        if dims.is_empty() {
+            return Err(Error::InvalidArgument("empty dataset".into()));
+        }
+        let shape3 = dims.as_3d();
+        let nblocks = (shape3.0.div_ceil(b), shape3.1.div_ceil(b), shape3.2.div_ceil(b));
+        Ok(Self { dims, shape3, b, nblocks })
+    }
+
+    /// Dataset dims.
+    pub fn dims(&self) -> Dims {
+        self.dims
+    }
+
+    /// Block edge.
+    pub fn block_size(&self) -> usize {
+        self.b
+    }
+
+    /// Total number of blocks.
+    pub fn n_blocks(&self) -> usize {
+        self.nblocks.0 * self.nblocks.1 * self.nblocks.2
+    }
+
+    /// Block count per axis (z, y, x).
+    pub fn blocks_per_axis(&self) -> (usize, usize, usize) {
+        self.nblocks
+    }
+
+    /// Extent of block `idx` (row-major over block coordinates).
+    pub fn extent(&self, idx: usize) -> BlockExtent {
+        debug_assert!(idx < self.n_blocks());
+        let (_, nby, nbx) = self.nblocks;
+        let bz = idx / (nby * nbx);
+        let by = (idx / nbx) % nby;
+        let bx = idx % nbx;
+        let origin = (bz * self.b, by * self.b, bx * self.b);
+        let shape = (
+            self.b.min(self.shape3.0 - origin.0),
+            self.b.min(self.shape3.1 - origin.1),
+            self.b.min(self.shape3.2 - origin.2),
+        );
+        BlockExtent { origin, shape }
+    }
+
+    /// Gather a block into a dense local array (row-major z,y,x).
+    pub fn extract(&self, data: &[f32], idx: usize, out: &mut Vec<f32>) {
+        let e = self.extent(idx);
+        out.clear();
+        out.reserve(e.len());
+        let (_, ry, rx) = self.shape3;
+        for z in 0..e.shape.0 {
+            for y in 0..e.shape.1 {
+                let base = (e.origin.0 + z) * ry * rx + (e.origin.1 + y) * rx + e.origin.2;
+                out.extend_from_slice(&data[base..base + e.shape.2]);
+            }
+        }
+    }
+
+    /// Scatter a local block back into the global array.
+    pub fn scatter(&self, block: &[f32], idx: usize, out: &mut [f32]) {
+        let e = self.extent(idx);
+        debug_assert_eq!(block.len(), e.len());
+        let (_, ry, rx) = self.shape3;
+        for z in 0..e.shape.0 {
+            for y in 0..e.shape.1 {
+                let src = (z * e.shape.1 + y) * e.shape.2;
+                let dst = (e.origin.0 + z) * ry * rx + (e.origin.1 + y) * rx + e.origin.2;
+                out[dst..dst + e.shape.2].copy_from_slice(&block[src..src + e.shape.2]);
+            }
+        }
+    }
+
+    /// Indices of all blocks intersecting `region`.
+    pub fn blocks_intersecting(&self, region: Region) -> Result<Vec<usize>> {
+        let (dz, dy, dx) = self.shape3;
+        let (oz, oy, ox) = region.origin;
+        let (sz, sy, sx) = region.shape;
+        if region.is_empty() || oz + sz > dz || oy + sy > dy || ox + sx > dx {
+            return Err(Error::InvalidArgument(format!(
+                "region {region:?} outside dataset {:?}",
+                self.shape3
+            )));
+        }
+        let (nbz, nby, nbx) = self.nblocks;
+        let lo = (oz / self.b, oy / self.b, ox / self.b);
+        let hi = ((oz + sz - 1) / self.b, (oy + sy - 1) / self.b, (ox + sx - 1) / self.b);
+        let mut out = Vec::new();
+        for bz in lo.0..=hi.0.min(nbz - 1) {
+            for by in lo.1..=hi.1.min(nby - 1) {
+                for bx in lo.2..=hi.2.min(nbx - 1) {
+                    out.push((bz * nby + by) * nbx + bx);
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Copy the intersection of block `idx` (given as a dense local array)
+    /// into a dense region buffer.
+    pub fn copy_block_into_region(
+        &self,
+        block: &[f32],
+        idx: usize,
+        region: Region,
+        out: &mut [f32],
+    ) {
+        let e = self.extent(idx);
+        debug_assert_eq!(block.len(), e.len());
+        debug_assert_eq!(out.len(), region.len());
+        let (roz, roy, rox) = region.origin;
+        let (rsz, rsy, rsx) = region.shape;
+        // intersection in global coordinates
+        let g0 = (e.origin.0.max(roz), e.origin.1.max(roy), e.origin.2.max(rox));
+        let g1 = (
+            (e.origin.0 + e.shape.0).min(roz + rsz),
+            (e.origin.1 + e.shape.1).min(roy + rsy),
+            (e.origin.2 + e.shape.2).min(rox + rsx),
+        );
+        if g1.0 <= g0.0 || g1.1 <= g0.1 || g1.2 <= g0.2 {
+            return;
+        }
+        for gz in g0.0..g1.0 {
+            for gy in g0.1..g1.1 {
+                let src = ((gz - e.origin.0) * e.shape.1 + (gy - e.origin.1)) * e.shape.2
+                    + (g0.2 - e.origin.2);
+                let dst = ((gz - roz) * rsy + (gy - roy)) * rsx + (g0.2 - rox);
+                let n = g1.2 - g0.2;
+                out[dst..dst + n].copy_from_slice(&block[src..src + n]);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_and_truncation() {
+        let g = BlockGrid::new(Dims::d3(10, 10, 10), 4).unwrap();
+        assert_eq!(g.n_blocks(), 27);
+        let last = g.extent(26);
+        assert_eq!(last.origin, (8, 8, 8));
+        assert_eq!(last.shape, (2, 2, 2));
+    }
+
+    #[test]
+    fn rank_lowering() {
+        let g2 = BlockGrid::new(Dims::d2(7, 9), 4).unwrap();
+        assert_eq!(g2.blocks_per_axis(), (1, 2, 3));
+        let g1 = BlockGrid::new(Dims::d1(100), 10).unwrap();
+        assert_eq!(g1.n_blocks(), 10);
+    }
+
+    #[test]
+    fn extract_scatter_roundtrip() {
+        let dims = Dims::d3(5, 6, 7);
+        let data: Vec<f32> = (0..dims.len()).map(|i| i as f32).collect();
+        let g = BlockGrid::new(dims, 4).unwrap();
+        let mut rebuilt = vec![0.0f32; dims.len()];
+        let mut block = Vec::new();
+        for i in 0..g.n_blocks() {
+            g.extract(&data, i, &mut block);
+            assert_eq!(block.len(), g.extent(i).len());
+            g.scatter(&block, i, &mut rebuilt);
+        }
+        assert_eq!(rebuilt, data);
+    }
+
+    #[test]
+    fn extract_values_are_correct() {
+        let dims = Dims::d2(4, 4);
+        let data: Vec<f32> = (0..16).map(|i| i as f32).collect();
+        let g = BlockGrid::new(dims, 2).unwrap();
+        let mut block = Vec::new();
+        // block 3 = rows 2..4, cols 2..4
+        g.extract(&data, 3, &mut block);
+        assert_eq!(block, vec![10.0, 11.0, 14.0, 15.0]);
+    }
+
+    #[test]
+    fn region_intersection() {
+        let g = BlockGrid::new(Dims::d3(10, 10, 10), 5).unwrap();
+        let r = Region { origin: (4, 4, 4), shape: (2, 2, 2) };
+        let hits = g.blocks_intersecting(r).unwrap();
+        assert_eq!(hits.len(), 8); // straddles every axis boundary
+        let r_inside = Region { origin: (0, 0, 0), shape: (5, 5, 5) };
+        assert_eq!(g.blocks_intersecting(r_inside).unwrap(), vec![0]);
+        let r_bad = Region { origin: (9, 9, 9), shape: (2, 1, 1) };
+        assert!(g.blocks_intersecting(r_bad).is_err());
+    }
+
+    #[test]
+    fn copy_block_into_region_assembles() {
+        let dims = Dims::d2(4, 4);
+        let data: Vec<f32> = (0..16).map(|i| i as f32).collect();
+        let g = BlockGrid::new(dims, 2).unwrap();
+        let region = Region { origin: (0, 1, 1), shape: (1, 2, 2) };
+        let mut out = vec![-1.0f32; region.len()];
+        let mut block = Vec::new();
+        for idx in g.blocks_intersecting(region).unwrap() {
+            g.extract(&data, idx, &mut block);
+            g.copy_block_into_region(&block, idx, region, &mut out);
+        }
+        assert_eq!(out, vec![5.0, 6.0, 9.0, 10.0]);
+    }
+
+    #[test]
+    fn empty_and_invalid() {
+        assert!(BlockGrid::new(Dims::d1(0), 4).is_err());
+        assert!(BlockGrid::new(Dims::d1(4), 0).is_err());
+    }
+}

@@ -1,0 +1,308 @@
+//! The "original SZ" baseline (**sz**) — cross-block dependent compression.
+//!
+//! Same predictors, quantizer and Huffman coding as the independent-block
+//! engine, but with the classic SZ 2.1 data layout:
+//!
+//! * Lorenzo prediction reads decompressed neighbors across block
+//!   boundaries (through the global decompressed array), so one corrupted
+//!   value propagates into every downstream block — the fragility the
+//!   paper's redesign removes;
+//! * one Huffman stream over the whole dataset, Zstd-compressed — the best
+//!   compression ratio (Table 2's `sz` column) but no random access and no
+//!   error confinement.
+
+use super::block::BlockGrid;
+use super::engine::{Arena, Hooks, NoHooks};
+use super::format::{self, BlockMeta, Header, Writer};
+use super::huffman::HuffmanTable;
+use super::lorenzo::{self, GridView};
+use super::quantize::{Quantizer, UNPREDICTABLE};
+use super::regression;
+use super::sampling::{self, Selection};
+use super::{CompressionConfig, Predictor};
+use crate::data::Dims;
+use crate::error::{Error, Result};
+use crate::util::bits::{BitReader, BitWriter};
+
+pub use super::engine::Decompressed;
+
+/// Compress with the classic (dependent) engine.
+pub fn compress(data: &[f32], dims: Dims, cfg: &CompressionConfig) -> Result<Vec<u8>> {
+    compress_with_hooks(data, dims, cfg, &mut NoHooks)
+}
+
+/// Compress with injection hooks (Table 3 / Fig. 6 baselines).
+pub fn compress_with_hooks<H: Hooks>(
+    data: &[f32],
+    dims: Dims,
+    cfg: &CompressionConfig,
+    hooks: &mut H,
+) -> Result<Vec<u8>> {
+    cfg.validate()?;
+    if data.len() != dims.len() {
+        return Err(Error::InvalidArgument(format!(
+            "data length {} != dims {:?}",
+            data.len(),
+            dims
+        )));
+    }
+    let bound = cfg.error_bound.absolute(data);
+    let q = Quantizer::new(bound, cfg.quant_radius);
+    let grid = BlockGrid::new(dims, cfg.block_size)?;
+    let n_blocks = grid.n_blocks();
+    let shape3 = dims.as_3d();
+
+    let mut input = data.to_vec();
+    hooks.on_input_ready(&mut input);
+
+    // estimation per block (same subroutine as rsz)
+    let mut selections: Vec<Selection> = Vec::with_capacity(n_blocks);
+    let mut scratch = Vec::new();
+    for bi in 0..n_blocks {
+        grid.extract(&input, bi, &mut scratch);
+        let shape = grid.extent(bi).shape;
+        let (coeffs, e_lor, e_reg) = sampling::estimate(&scratch, shape);
+        let (coeffs, e_lor, e_reg) = hooks.corrupt_estimation(bi, coeffs, e_lor, e_reg);
+        selections.push(sampling::select(&scratch, shape, cfg.predictor, coeffs, e_lor, e_reg));
+    }
+
+    // main loop: global decompressed array, neighbors cross blocks
+    let mut dcmp = vec![0.0f32; data.len()];
+    let mut codes: Vec<u32> = Vec::with_capacity(data.len());
+    let mut unpred: Vec<f32> = Vec::new();
+    let mut metas: Vec<BlockMeta> = Vec::with_capacity(n_blocks);
+    let (_, ry, rx) = shape3;
+    // coefficient table maintained across the loop (the mode-B arena view
+    // of "regression coefficients in memory"); rebuilt-per-block would be
+    // O(blocks^2)
+    let mut all_coeffs: Vec<[f32; 4]> = selections.iter().map(|s| s.coeffs).collect();
+    for bi in 0..n_blocks {
+        let e = grid.extent(bi);
+        let mut sel = selections[bi];
+        sel.coeffs = all_coeffs[bi]; // earlier strikes are visible here
+        let unpred_before = unpred.len();
+        let code_base = codes.len();
+        for z in 0..e.shape.0 {
+            for y in 0..e.shape.1 {
+                for x in 0..e.shape.2 {
+                    let (gz, gy, gx) = (e.origin.0 + z, e.origin.1 + y, e.origin.2 + x);
+                    let gidx = (gz * ry + gy) * rx + gx;
+                    let val = input[gidx];
+                    let p = gidx; // hook point id = global index
+                    let pred = match sel.predictor {
+                        Predictor::Lorenzo => {
+                            // global view: crosses block boundaries
+                            let view = GridView::dense(&dcmp, shape3);
+                            hooks.corrupt_pred(bi, p, lorenzo::predict(&view, gz, gy, gx))
+                        }
+                        Predictor::Regression => {
+                            hooks.corrupt_pred(bi, p, regression::predict(&sel.coeffs, z, y, x))
+                        }
+                        Predictor::DualQuant => unreachable!("classic never selects dual-quant"),
+                    };
+                    match q.quantize(val, pred) {
+                        Some((code, dcmp_raw)) => {
+                            let d = hooks.corrupt_dcmp(bi, p, dcmp_raw);
+                            if q.within_bound(val, d) {
+                                codes.push(code);
+                                dcmp[gidx] = d;
+                            } else {
+                                codes.push(UNPREDICTABLE);
+                                unpred.push(val);
+                                dcmp[gidx] = val;
+                            }
+                        }
+                        None => {
+                            codes.push(UNPREDICTABLE);
+                            unpred.push(val);
+                            dcmp[gidx] = val;
+                        }
+                    }
+                }
+            }
+        }
+        hooks.on_block_codes(bi, &mut codes[code_base..]);
+        {
+            // mode-B arena access: the same dominant structures are live in
+            // the classic engine
+            let mut arena = Arena {
+                progress: bi,
+                n_blocks,
+                input: &mut input,
+                codes: &mut codes,
+                unpred: &mut unpred,
+                coeffs: &mut all_coeffs,
+            };
+            hooks.on_progress(&mut arena);
+        }
+        // read back through `all_coeffs` so an arena strike on this block's
+        // coefficients lands in the *stored* metadata (the compress-side
+        // prediction above already used the pre-strike copy — the classic
+        // engine's compress/decompress inconsistency under SDC)
+        metas.push(BlockMeta {
+            predictor: sel.predictor,
+            coeffs: all_coeffs[bi],
+            n_unpred: (unpred.len() - unpred_before) as u32,
+            payload_bits: 0, // single stream; filled below for block 0
+        });
+    }
+
+    // single global Huffman stream
+    let n_symbols = q.n_symbols();
+    let mut freqs = vec![0u64; n_symbols];
+    for &c in &codes {
+        let ci = c as usize;
+        if ci >= n_symbols {
+            return Err(Error::CrashEquivalent(format!(
+                "quantization code {c} outside symbol table ({n_symbols})"
+            )));
+        }
+        freqs[ci] += 1;
+    }
+    let table = HuffmanTable::from_frequencies(&freqs)?;
+    let mut w = BitWriter::with_capacity(codes.len() / 4 + 8);
+    for &c in &codes {
+        table.encode(&mut w, c)?;
+    }
+    let total_bits = w.bit_len() as u64;
+    metas[0].payload_bits = total_bits;
+    let stream = w.finish();
+
+    let writer = Writer {
+        header: Header {
+            flags: 0,
+            dims,
+            block_size: cfg.block_size as u32,
+            quant_radius: cfg.quant_radius,
+            error_bound: bound,
+            n_blocks: n_blocks as u64,
+        },
+        table: &table,
+        blocks: vec![],
+        classic_payload: Some((metas, stream)),
+        unpred: &unpred,
+        sum_dc: None,
+        zstd_level: cfg.zstd_level,
+        payload_zstd: false, // classic wraps its single stream in zstd already
+    };
+    writer.write()
+}
+
+/// Decompress a classic archive.
+pub fn decompress(bytes: &[u8]) -> Result<Decompressed> {
+    let archive = format::parse(bytes)?;
+    if !archive.header.is_classic() {
+        return Err(Error::InvalidArgument(
+            "not a classic archive: use compressor::engine::decompress".into(),
+        ));
+    }
+    let dims = archive.header.dims;
+    let grid = BlockGrid::new(dims, archive.header.block_size as usize)?;
+    if grid.n_blocks() as u64 != archive.header.n_blocks {
+        return Err(Error::Format("block count mismatch".into()));
+    }
+    let q = Quantizer::new(archive.header.error_bound, archive.header.quant_radius);
+    let shape3 = dims.as_3d();
+    let (_, ry, rx) = shape3;
+    let total_bits = archive.metas[0].payload_bits as usize;
+    let mut r = BitReader::with_limit(&archive.payload, total_bits)?;
+    let mut out = vec![0.0f32; dims.len()];
+    for bi in 0..grid.n_blocks() {
+        let e = grid.extent(bi);
+        let meta = &archive.metas[bi];
+        let unpred_vals = archive.block_unpred(bi);
+        let mut next_unpred = 0usize;
+        for z in 0..e.shape.0 {
+            for y in 0..e.shape.1 {
+                for x in 0..e.shape.2 {
+                    let (gz, gy, gx) = (e.origin.0 + z, e.origin.1 + y, e.origin.2 + x);
+                    let gidx = (gz * ry + gy) * rx + gx;
+                    let code = archive.table.decode(&mut r)?;
+                    if code == UNPREDICTABLE {
+                        let v = *unpred_vals.get(next_unpred).ok_or_else(|| {
+                            Error::CrashEquivalent(format!(
+                                "block {bi}: unpredictable pool exhausted"
+                            ))
+                        })?;
+                        next_unpred += 1;
+                        out[gidx] = v;
+                    } else {
+                        if code as usize >= q.n_symbols() {
+                            return Err(Error::CrashEquivalent(format!(
+                                "block {bi}: decoded code {code} out of range"
+                            )));
+                        }
+                        let pred = match meta.predictor {
+                            Predictor::Lorenzo => {
+                                let view = GridView::dense(&out, shape3);
+                                lorenzo::predict(&view, gz, gy, gx)
+                            }
+                            Predictor::Regression => regression::predict(&meta.coeffs, z, y, x),
+                            Predictor::DualQuant => {
+                                return Err(Error::Format(
+                                    "dual-quant blocks are invalid in classic archives".into(),
+                                ))
+                            }
+                        };
+                        out[gidx] = q.reconstruct(code, pred);
+                    }
+                }
+            }
+        }
+    }
+    Ok(Decompressed { data: out, dims, error_bound: archive.header.error_bound })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compressor::ErrorBound;
+    use crate::data::synthetic;
+
+    fn cfg(e: f64) -> CompressionConfig {
+        CompressionConfig::new(ErrorBound::Abs(e)).with_block_size(8)
+    }
+
+    #[test]
+    fn roundtrip_respects_bound() {
+        let f = synthetic::hurricane_field("t", Dims::d3(10, 16, 16), 7);
+        for e in [1e-2, 1e-4] {
+            let bytes = compress(&f.data, f.dims, &cfg(e)).unwrap();
+            let dec = decompress(&bytes).unwrap();
+            assert!(crate::analysis::max_abs_err(&f.data, &dec.data) <= e);
+        }
+    }
+
+    #[test]
+    fn classic_beats_rsz_on_ratio() {
+        // the whole reason Table 2 reports an rsz "decrease": classic's
+        // global stream + cross-block prediction compresses better
+        let f = synthetic::nyx_velocity("v", Dims::d3(24, 24, 24), 5);
+        let c = CompressionConfig::new(ErrorBound::Rel(1e-3)).with_block_size(10);
+        let sz = compress(&f.data, f.dims, &c).unwrap();
+        let rsz = crate::compressor::engine::compress(&f.data, f.dims, &c).unwrap();
+        assert!(
+            sz.len() < rsz.len(),
+            "classic {} should be smaller than rsz {}",
+            sz.len(),
+            rsz.len()
+        );
+    }
+
+    #[test]
+    fn engine_mismatch_rejected() {
+        let f = synthetic::nyx_velocity("v", Dims::d3(8, 8, 8), 5);
+        let sz = compress(&f.data, f.dims, &cfg(1e-3)).unwrap();
+        assert!(crate::compressor::engine::decompress(&sz).is_err());
+        let rsz = crate::compressor::engine::compress(&f.data, f.dims, &cfg(1e-3)).unwrap();
+        assert!(decompress(&rsz).is_err());
+    }
+
+    #[test]
+    fn rank2_roundtrip() {
+        let img = synthetic::pluto_image("p", 40, 40, 3);
+        let bytes = compress(&img.data, img.dims, &cfg(1e-3)).unwrap();
+        let dec = decompress(&bytes).unwrap();
+        assert!(crate::analysis::max_abs_err(&img.data, &dec.data) <= 1e-3);
+    }
+}

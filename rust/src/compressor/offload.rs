@@ -1,0 +1,355 @@
+//! Dual-quantization engine — the data-parallel compression path whose
+//! per-block transform is the L1 Pallas kernel (DESIGN.md
+//! §Hardware-Adaptation), integrated as a first-class predictor
+//! ([`Predictor::DualQuant`], archive tag 2).
+//!
+//! Per block:
+//!
+//! 1. dual-quant Lorenzo forward (natively via [`dualquant`], or batched
+//!    through the AOT XLA artifacts via [`crate::runtime::BlockKernels`] —
+//!    the two are bit-identical, so the *archives* are byte-identical);
+//! 2. residual bins inside `(-radius, radius)` become Huffman codes
+//!    (`bin + radius`); out-of-range bins go to an outlier list (code 0);
+//! 3. points whose reconstruction violates the strict bound (f32 slack on
+//!    huge prequant magnitudes — the paper's line-7 concern) are *patched*:
+//!    their exact value is stored and overrides the reconstruction.
+//!
+//! Block-local side data is packed into the archive's unpredictable
+//! section: `[n_outliers (bitcast u32)] ++ outlier bins (bitcast i32) ++
+//! (patch index (bitcast u32), patch value)*`.
+//!
+//! Decoding (wired into [`super::engine::decode_block`]) reverses this and
+//! runs the inverse prefix-sum transform — so region decompression and the
+//! FT `sum_dc` verification work unchanged on dual-quant archives.
+
+use super::block::BlockGrid;
+use super::dualquant;
+use super::format::{BlockMeta, BlockPayload, Header, Writer};
+use super::huffman::HuffmanTable;
+use super::quantize::UNPREDICTABLE;
+use super::{CompressionConfig, Predictor};
+use crate::data::Dims;
+use crate::error::{Error, Result};
+use crate::ft::checksum;
+use crate::runtime::BlockKernels;
+use crate::util::bits::{BitReader, BitWriter};
+
+/// Per-block artifacts of the dual-quant transform, ready for encoding.
+struct DqBlock {
+    codes: Vec<u32>,
+    side: Vec<f32>, // packed side data (see module docs)
+    sum_dc: u64,
+}
+
+fn build_block(
+    block: &[f32],
+    bins: &[i32],
+    dcmp: &[f32],
+    bound: f64,
+    radius: i64,
+) -> DqBlock {
+    let mut codes = Vec::with_capacity(bins.len());
+    let mut outliers: Vec<i32> = Vec::new();
+    let mut patches: Vec<(u32, f32)> = Vec::new();
+    for (p, (&bin, &val)) in bins.iter().zip(block).enumerate() {
+        let shifted = bin as i64 + radius;
+        if bin as i64 > -radius && (bin as i64) < radius {
+            codes.push(shifted as u32);
+        } else {
+            codes.push(UNPREDICTABLE);
+            outliers.push(bin);
+        }
+        // strict-bound patch (non-finite values are always patched)
+        let d = dcmp[p];
+        if !val.is_finite() || (val as f64 - d as f64).abs() > bound {
+            patches.push((p as u32, val));
+        }
+    }
+    // final reconstruction the decoder will produce (dcmp with patches)
+    let mut final_dcmp: Vec<u32> = dcmp.iter().map(|v| v.to_bits()).collect();
+    for &(p, val) in &patches {
+        final_dcmp[p as usize] = val.to_bits();
+    }
+    let sum_dc = {
+        let mut c = checksum::Checksums::default();
+        for (i, w) in final_dcmp.iter().enumerate() {
+            c.add(i, *w);
+        }
+        c.sum
+    };
+    let mut side = Vec::with_capacity(1 + outliers.len() + 2 * patches.len());
+    side.push(f32::from_bits(outliers.len() as u32));
+    side.extend(outliers.iter().map(|&b| f32::from_bits(b as u32)));
+    for (p, val) in patches {
+        side.push(f32::from_bits(p));
+        side.push(val);
+    }
+    DqBlock { codes, side, sum_dc }
+}
+
+/// Compress with the dual-quant engine. `kernels` batches full blocks
+/// through the XLA artifacts (edge-truncated blocks always run natively);
+/// `None` runs everything natively. Both produce byte-identical archives.
+pub fn compress(
+    data: &[f32],
+    dims: Dims,
+    cfg: &CompressionConfig,
+    kernels: Option<&BlockKernels>,
+) -> Result<Vec<u8>> {
+    cfg.validate()?;
+    if data.len() != dims.len() {
+        return Err(Error::InvalidArgument(format!(
+            "data length {} != dims {:?}",
+            data.len(),
+            dims
+        )));
+    }
+    let bound = cfg.error_bound.absolute(data);
+    let grid = BlockGrid::new(dims, cfg.block_size)?;
+    let n_blocks = grid.n_blocks();
+    let radius = cfg.quant_radius as i64;
+    let b = cfg.block_size;
+    if let Some(k) = kernels {
+        if k.b != b {
+            return Err(Error::InvalidArgument(format!(
+                "kernel variant b={} but block size is {b}",
+                k.b
+            )));
+        }
+    }
+
+    // split blocks into full (batchable) and truncated (native)
+    let full_shape = (b, b, b);
+    let mut blocks: Vec<Option<DqBlock>> = (0..n_blocks).map(|_| None).collect();
+    let mut scratch = Vec::new();
+    let (mut bins, mut dcmp) = (Vec::new(), Vec::new());
+
+    let mut batch_ids: Vec<usize> = Vec::new();
+    for bi in 0..n_blocks {
+        let e = grid.extent(bi);
+        if kernels.is_some() && e.shape == full_shape {
+            batch_ids.push(bi);
+            continue;
+        }
+        grid.extract(data, bi, &mut scratch);
+        dualquant::forward(&scratch, e.shape, bound, &mut bins, &mut dcmp);
+        blocks[bi] = Some(build_block(&scratch, &bins, &dcmp, bound, radius));
+    }
+    if let Some(k) = kernels {
+        let blen = k.block_len();
+        let mut batch = vec![0.0f32; k.batch_len()];
+        for chunk in batch_ids.chunks(k.n) {
+            for (slot, &bi) in chunk.iter().enumerate() {
+                grid.extract(data, bi, &mut scratch);
+                batch[slot * blen..(slot + 1) * blen].copy_from_slice(&scratch);
+            }
+            // zero-pad the tail slots (outputs ignored)
+            for slot in chunk.len()..k.n {
+                batch[slot * blen..(slot + 1) * blen].fill(0.0);
+            }
+            let out = k.compress(&batch, bound)?;
+            for (slot, &bi) in chunk.iter().enumerate() {
+                grid.extract(data, bi, &mut scratch);
+                blocks[bi] = Some(build_block(
+                    &scratch,
+                    &out.bins[slot * blen..(slot + 1) * blen],
+                    &out.dcmp[slot * blen..(slot + 1) * blen],
+                    bound,
+                    radius,
+                ));
+            }
+        }
+    }
+
+    // global Huffman over all codes
+    let n_symbols = 2 * cfg.quant_radius as usize;
+    let mut freqs = vec![0u64; n_symbols];
+    for blk in blocks.iter().flatten() {
+        for &c in &blk.codes {
+            freqs[c as usize] += 1;
+        }
+    }
+    let table = HuffmanTable::from_frequencies(&freqs)?;
+
+    let mut payloads = Vec::with_capacity(n_blocks);
+    let mut unpred: Vec<f32> = Vec::new();
+    let mut sums: Vec<u64> = Vec::with_capacity(n_blocks);
+    for blk in blocks.iter().flatten() {
+        let mut w = BitWriter::with_capacity(blk.codes.len() / 4 + 8);
+        for &c in &blk.codes {
+            table.encode(&mut w, c)?;
+        }
+        let payload_bits = w.bit_len() as u64;
+        payloads.push(BlockPayload {
+            meta: BlockMeta {
+                predictor: Predictor::DualQuant,
+                coeffs: [0.0; 4],
+                n_unpred: blk.side.len() as u32,
+                payload_bits,
+            },
+            bytes: w.finish(),
+        });
+        unpred.extend_from_slice(&blk.side);
+        sums.push(blk.sum_dc);
+    }
+
+    Writer {
+        header: Header {
+            flags: 0,
+            dims,
+            block_size: b as u32,
+            quant_radius: cfg.quant_radius,
+            error_bound: bound,
+            n_blocks: n_blocks as u64,
+        },
+        table: &table,
+        blocks: payloads,
+        classic_payload: None,
+        unpred: &unpred,
+        sum_dc: Some(&sums),
+        zstd_level: cfg.zstd_level,
+        payload_zstd: cfg.payload_zstd,
+    }
+    .write()
+}
+
+/// Decode one dual-quant block (called from `engine::decode_block`).
+pub(crate) fn decode_block(
+    table: &HuffmanTable,
+    payload: &[u8],
+    payload_bits: u64,
+    side: &[f32],
+    shape: (usize, usize, usize),
+    radius: i64,
+    error_bound: f64,
+    out_block: &mut Vec<f32>,
+) -> Result<()> {
+    let n = shape.0 * shape.1 * shape.2;
+    let mut r = BitReader::with_limit(payload, payload_bits as usize)?;
+    // side data: n_outliers | outliers | (idx, val)*
+    let (&head, rest) = side
+        .split_first()
+        .ok_or_else(|| Error::CrashEquivalent("dualquant side data empty".into()))?;
+    let n_out = head.to_bits() as usize;
+    if n_out > rest.len() {
+        return Err(Error::CrashEquivalent(format!(
+            "dualquant outlier count {n_out} exceeds side data {}",
+            rest.len()
+        )));
+    }
+    let (outliers, patch_raw) = rest.split_at(n_out);
+    if patch_raw.len() % 2 != 0 {
+        return Err(Error::Format("dualquant patch list truncated".into()));
+    }
+    let mut bins = Vec::with_capacity(n);
+    let mut next_out = 0usize;
+    for _ in 0..n {
+        let code = table.decode(&mut r)?;
+        if code == UNPREDICTABLE {
+            let raw = outliers.get(next_out).ok_or_else(|| {
+                Error::CrashEquivalent("dualquant outlier pool exhausted".into())
+            })?;
+            next_out += 1;
+            bins.push(raw.to_bits() as i32);
+        } else {
+            bins.push((code as i64 - radius) as i32);
+        }
+    }
+    dualquant::inverse(&bins, shape, error_bound, out_block);
+    for pair in patch_raw.chunks_exact(2) {
+        let idx = pair[0].to_bits() as usize;
+        if idx >= n {
+            return Err(Error::CrashEquivalent(format!("dualquant patch index {idx} >= {n}")));
+        }
+        out_block[idx] = pair[1];
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compressor::{engine, ErrorBound};
+    use crate::data::synthetic;
+    use crate::util::rng::Pcg32;
+
+    fn cfg(e: f64) -> CompressionConfig {
+        CompressionConfig::new(ErrorBound::Abs(e)).with_block_size(8)
+    }
+
+    #[test]
+    fn roundtrip_strict_bound() {
+        let f = synthetic::hurricane_field("t", Dims::d3(10, 20, 20), 5);
+        for e in [1e-2, 1e-4] {
+            let bytes = compress(&f.data, f.dims, &cfg(e), None).unwrap();
+            let dec = engine::decompress(&bytes).unwrap();
+            let max = crate::analysis::max_abs_err(&f.data, &dec.data);
+            assert!(max <= e, "bound {e}: {max}");
+        }
+    }
+
+    #[test]
+    fn huge_amplitudes_are_patched_not_broken() {
+        // amplitudes that overflow the f32 prequant slack at this bound —
+        // the patch path must keep the strict bound anyway
+        let mut rng = Pcg32::new(9);
+        let data: Vec<f32> = (0..512).map(|_| rng.normal() as f32 * 1e6).collect();
+        let e = 1e-2;
+        let bytes = compress(&data, Dims::d3(8, 8, 8), &cfg(e), None).unwrap();
+        let dec = engine::decompress(&bytes).unwrap();
+        assert!(crate::analysis::max_abs_err(&data, &dec.data) <= e);
+    }
+
+    #[test]
+    fn nan_inf_patched_verbatim() {
+        let mut data = vec![0.25f32; 512];
+        data[7] = f32::NAN;
+        data[100] = f32::INFINITY;
+        let bytes = compress(&data, Dims::d3(8, 8, 8), &cfg(1e-3), None).unwrap();
+        let dec = engine::decompress(&bytes).unwrap();
+        assert!(dec.data[7].is_nan());
+        assert_eq!(dec.data[100], f32::INFINITY);
+    }
+
+    #[test]
+    fn ft_verification_works_on_dualquant_archives() {
+        let f = synthetic::nyx_velocity("v", Dims::d3(16, 16, 16), 2);
+        let e = {
+            let (lo, hi) = f.range();
+            1e-3 * (hi - lo) as f64
+        };
+        let bytes = compress(&f.data, f.dims, &cfg(e), None).unwrap();
+        let dec = crate::ft::decompress(&bytes).unwrap(); // sum_dc verified
+        assert!(crate::analysis::max_abs_err(&f.data, &dec.data) <= e);
+    }
+
+    #[test]
+    fn region_decode_works() {
+        use crate::compressor::block::Region;
+        let f = synthetic::hurricane_field("t", Dims::d3(9, 15, 15), 8);
+        let bytes = compress(&f.data, f.dims, &cfg(1e-3), None).unwrap();
+        let full = engine::decompress(&bytes).unwrap();
+        let region = Region { origin: (2, 3, 4), shape: (5, 6, 7) };
+        let got = engine::decompress_region(&bytes, region).unwrap();
+        let (_, r, c) = f.dims.as_3d();
+        let mut idx = 0;
+        for z in 0..5 {
+            for y in 0..6 {
+                for x in 0..7 {
+                    let g = ((2 + z) * r + 3 + y) * c + 4 + x;
+                    assert_eq!(got[idx].to_bits(), full.data[g].to_bits());
+                    idx += 1;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn truncated_blocks_handled() {
+        // dims not divisible by block size: edge blocks run natively
+        let f = synthetic::hurricane_field("t", Dims::d3(7, 11, 13), 4);
+        let bytes = compress(&f.data, f.dims, &cfg(1e-3), None).unwrap();
+        let dec = engine::decompress(&bytes).unwrap();
+        assert!(crate::analysis::max_abs_err(&f.data, &dec.data) <= 1e-3);
+    }
+}

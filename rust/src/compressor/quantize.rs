@@ -1,0 +1,171 @@
+//! Linear-scaling quantization (SZ stage 2).
+//!
+//! The difference between a data value and its prediction is mapped onto a
+//! uniform grid of width `2e`:
+//!
+//! ```text
+//! bin  = round((val - pred) / 2e)          (f64 arithmetic, like SZ)
+//! code = bin + radius                      (positive symbol; 0 = unpredictable)
+//! dcmp = pred + bin * 2e                   (reconstruction; |val - dcmp| <= e)
+//! ```
+//!
+//! Non-finite values and bins outside `(-radius, radius)` take the
+//! *unpredictable* path: the raw f32 is stored verbatim (type-2 behaviour
+//! in the paper's resilience analysis — always safe).
+
+/// Reserved code for unpredictable points.
+pub const UNPREDICTABLE: u32 = 0;
+
+/// Quantizer for one absolute error bound.
+#[derive(Debug, Clone, Copy)]
+pub struct Quantizer {
+    /// Absolute error bound `e`.
+    pub bound: f64,
+    two_e: f64,
+    inv_two_e: f64,
+    radius: i64,
+}
+
+impl Quantizer {
+    /// New quantizer; `radius` is the SZ quantization radius (bins span
+    /// `(-radius, radius)`, codes span `1..2*radius`).
+    pub fn new(bound: f64, radius: u32) -> Self {
+        let two_e = 2.0 * bound;
+        Self { bound, two_e, inv_two_e: 1.0 / two_e, radius: radius as i64 }
+    }
+
+    /// Number of Huffman symbols (codes `0..n_symbols`).
+    pub fn n_symbols(&self) -> usize {
+        (2 * self.radius) as usize
+    }
+
+    /// Quantize `val` against `pred`: `Some((code, dcmp))` when predictable
+    /// within range, `None` for the unpredictable path.
+    ///
+    /// The caller must still run the paper's line-7 double check
+    /// (`|val - dcmp| > e` ⇒ unpredictable) — machine epsilon can push a
+    /// reconstruction just outside the bound.
+    #[inline]
+    pub fn quantize(&self, val: f32, pred: f32) -> Option<(u32, f32)> {
+        if !val.is_finite() {
+            return None; // NaN/Inf are stored verbatim
+        }
+        let diff = val as f64 - pred as f64;
+        let bin = (diff * self.inv_two_e).round();
+        if !(bin.abs() < self.radius as f64) {
+            return None; // includes NaN-from-inf preds
+        }
+        let bin = bin as i64;
+        let dcmp = self.reconstruct_bin(bin, pred);
+        Some(((bin + self.radius) as u32, dcmp))
+    }
+
+    /// Reconstruction from a signed bin (shared by compress/decompress —
+    /// byte-identical arithmetic on both sides is what makes the stored
+    /// `sum_dc` checksums meaningful).
+    #[inline]
+    pub fn reconstruct_bin(&self, bin: i64, pred: f32) -> f32 {
+        (pred as f64 + bin as f64 * self.two_e) as f32
+    }
+
+    /// Reconstruction from a code (`code != 0`).
+    #[inline]
+    pub fn reconstruct(&self, code: u32, pred: f32) -> f32 {
+        self.reconstruct_bin(code as i64 - self.radius, pred)
+    }
+
+    /// Duplicated-instruction reconstruction: identical arithmetic order,
+    /// operands laundered through `black_box` so the optimizer cannot fold
+    /// the duplicate into the primary evaluation (bit-identical on clean
+    /// hardware; see [`crate::compressor::lorenzo::predict_dup`]).
+    #[inline]
+    pub fn reconstruct_dup(&self, code: u32, pred: f32) -> f32 {
+        use std::hint::black_box as bb;
+        let bin = bb(code) as i64 - bb(self.radius);
+        (bb(pred) as f64 + bin as f64 * bb(self.two_e)) as f32
+    }
+
+    /// The paper's line-7 double check.
+    #[inline]
+    pub fn within_bound(&self, val: f32, dcmp: f32) -> bool {
+        (val as f64 - dcmp as f64).abs() <= self.bound
+    }
+
+    /// Quantization radius.
+    pub fn radius(&self) -> i64 {
+        self.radius
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn zero_diff_centers() {
+        let q = Quantizer::new(1e-3, 32768);
+        let (code, dcmp) = q.quantize(1.0, 1.0).unwrap();
+        assert_eq!(code, 32768);
+        assert_eq!(dcmp, 1.0);
+    }
+
+    #[test]
+    fn reconstruction_respects_bound() {
+        let q = Quantizer::new(1e-3, 32768);
+        let mut rng = Pcg32::new(4);
+        for _ in 0..10_000 {
+            let val = rng.normal() as f32;
+            let pred = val + (rng.f64() as f32 - 0.5) * 0.1; // pred near val
+            if let Some((code, dcmp)) = q.quantize(val, pred) {
+                assert!(q.within_bound(val, dcmp), "val={val} pred={pred} dcmp={dcmp}");
+                // decompression side must reproduce dcmp bit-exactly
+                assert_eq!(q.reconstruct(code, pred).to_bits(), dcmp.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn out_of_range_is_unpredictable() {
+        let q = Quantizer::new(1e-6, 256);
+        assert!(q.quantize(1.0, 0.0).is_none()); // diff ≫ radius * 2e
+        let q2 = Quantizer::new(1e-3, 32768);
+        assert!(q2.quantize(1e6, 0.0).is_none());
+    }
+
+    #[test]
+    fn non_finite_unpredictable() {
+        let q = Quantizer::new(1e-3, 32768);
+        assert!(q.quantize(f32::NAN, 0.0).is_none());
+        assert!(q.quantize(f32::INFINITY, 0.0).is_none());
+        // non-finite *prediction* must not produce a bogus code either
+        assert!(q.quantize(1.0, f32::NAN).is_none());
+    }
+
+    #[test]
+    fn code_range() {
+        let q = Quantizer::new(0.5, 4);
+        // bins -3..=3 valid → codes 1..=7
+        for bin in -3i64..=3 {
+            let val = (bin as f64 * 1.0) as f32; // diff = bin * 2e exactly
+            let (code, _) = q.quantize(val, 0.0).unwrap();
+            assert_eq!(code as i64, bin + 4);
+            assert!(code >= 1 && code < q.n_symbols() as u32);
+        }
+        // bin = ±4 falls out of range
+        assert!(q.quantize(4.0, 0.0).is_none());
+        assert!(q.quantize(-4.0, 0.0).is_none());
+    }
+
+    #[test]
+    fn round_half_cases_are_consistent() {
+        // whatever rounding f64::round picks, reconstruct must invert it
+        let q = Quantizer::new(0.5, 16);
+        for diff in [-2.5f32, -1.5, -0.5, 0.5, 1.5, 2.5] {
+            if let Some((code, dcmp)) = q.quantize(diff, 0.0) {
+                assert_eq!(q.reconstruct(code, 0.0).to_bits(), dcmp.to_bits());
+                assert!((diff as f64 - dcmp as f64).abs() <= 0.5 + 1e-12);
+            }
+        }
+    }
+}

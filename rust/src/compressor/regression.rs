@@ -1,0 +1,173 @@
+//! Per-block linear-regression predictor (SZ 2.1's second predictor).
+//!
+//! Fits `f(z,y,x) = c0·z + c1·y + c2·x + c3` over a block by closed-form
+//! least squares (the regular grid makes the normal equations diagonal in
+//! centered coordinates). The four coefficients are stored in the archive
+//! per regression block — the paper's §4.2.2 notes they are only
+//! `4/blocksize³` of the footprint, so they are *not* checksummed; an SDC
+//! there only costs ratio, never correctness, because the *stored* (and
+//! hence identical at decompression) coefficients are what prediction uses
+//! on both sides.
+
+use super::lorenzo::GridView;
+
+/// Plane coefficients `[c0 (z), c1 (y), c2 (x), c3]` in 0-based block-local
+/// coordinates.
+pub type Coeffs = [f32; 4];
+
+/// Closed-form least-squares fit over a dense block.
+///
+/// Mirrors `python/compile/kernels/regression.py` (orthogonal
+/// centered-coordinate decomposition), accumulating in f64 for stability.
+pub fn fit(block: &[f32], shape: (usize, usize, usize)) -> Coeffs {
+    let (nz, ny, nx) = shape;
+    let n = (nz * ny * nx) as f64;
+    debug_assert_eq!(block.len(), nz * ny * nx);
+    let cz = (nz as f64 - 1.0) / 2.0;
+    let cy = (ny as f64 - 1.0) / 2.0;
+    let cx = (nx as f64 - 1.0) / 2.0;
+    let (mut sz, mut sy, mut sx, mut st) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+    let mut idx = 0usize;
+    for z in 0..nz {
+        let wz = z as f64 - cz;
+        for y in 0..ny {
+            let wy = y as f64 - cy;
+            for x in 0..nx {
+                let v = block[idx] as f64;
+                idx += 1;
+                sz += v * wz;
+                sy += v * wy;
+                sx += v * (x as f64 - cx);
+                st += v;
+            }
+        }
+    }
+    // Σ (axis-centered coordinate)² over the whole block, per axis
+    let den = |m: usize, others: usize| -> f64 {
+        if m <= 1 {
+            return f64::INFINITY; // degenerate axis → coefficient 0
+        }
+        let m_f = m as f64;
+        others as f64 * m_f * (m_f * m_f - 1.0) / 12.0
+    };
+    let c0 = if nz > 1 { sz / den(nz, ny * nx) } else { 0.0 };
+    let c1 = if ny > 1 { sy / den(ny, nz * nx) } else { 0.0 };
+    let c2 = if nx > 1 { sx / den(nx, nz * ny) } else { 0.0 };
+    let mean = st / n;
+    let c3 = mean - c0 * cz - c1 * cy - c2 * cx;
+    [c0 as f32, c1 as f32, c2 as f32, c3 as f32]
+}
+
+/// Evaluate the plane at block-local (z, y, x) — natural order.
+#[inline]
+pub fn predict(c: &Coeffs, z: usize, y: usize, x: usize) -> f32 {
+    c[0] * z as f32 + c[1] * y as f32 + c[2] * x as f32 + c[3]
+}
+
+/// Duplicated-instruction variant: identical order through
+/// [`std::hint::black_box`] — bit-identical on clean hardware, impossible
+/// for the optimizer to fold into the primary evaluation (see
+/// [`crate::compressor::lorenzo::predict_dup`] for the rationale).
+#[inline]
+pub fn predict_dup(c: &Coeffs, z: usize, y: usize, x: usize) -> f32 {
+    use std::hint::black_box as bb;
+    bb(c[0]) * bb(z as f32) + bb(c[1]) * bb(y as f32) + bb(c[2]) * bb(x as f32) + bb(c[3])
+}
+
+/// Sum of absolute residuals on a sample of block points (for predictor
+/// selection; see [`super::sampling`]).
+pub fn sample_error(block: &[f32], shape: (usize, usize, usize), c: &Coeffs) -> f64 {
+    let v = GridView::dense(block, shape);
+    let mut err = 0.0f64;
+    let (nz, ny, nx) = shape;
+    for z in (0..nz).step_by(2) {
+        for y in (0..ny).step_by(2) {
+            for x in (0..nx).step_by(2) {
+                err += (v.at(z as isize, y as isize, x as isize) as f64
+                    - predict(c, z, y, x) as f64)
+                    .abs();
+            }
+        }
+    }
+    err
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn make_plane(shape: (usize, usize, usize), c: Coeffs) -> Vec<f32> {
+        let (nz, ny, nx) = shape;
+        let mut out = Vec::with_capacity(nz * ny * nx);
+        for z in 0..nz {
+            for y in 0..ny {
+                for x in 0..nx {
+                    out.push(predict(&c, z, y, x));
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn exact_plane_recovered() {
+        let shape = (6, 6, 6);
+        let truth = [1.5f32, -2.0, 0.25, 10.0];
+        let block = make_plane(shape, truth);
+        let got = fit(&block, shape);
+        for (g, t) in got.iter().zip(truth.iter()) {
+            assert!((g - t).abs() < 1e-4, "{got:?} vs {truth:?}");
+        }
+    }
+
+    #[test]
+    fn constant_block() {
+        let shape = (4, 4, 4);
+        let block = vec![3.25f32; 64];
+        let got = fit(&block, shape);
+        assert_eq!(&got[..3], &[0.0, 0.0, 0.0]);
+        assert!((got[3] - 3.25).abs() < 1e-6);
+    }
+
+    #[test]
+    fn degenerate_axes() {
+        // 2D block (nz = 1): c0 must be 0 and the 2D plane still fits
+        let shape = (1, 5, 5);
+        let truth = [0.0f32, 2.0, -1.0, 4.0];
+        let block = make_plane(shape, truth);
+        let got = fit(&block, shape);
+        assert_eq!(got[0], 0.0);
+        for (g, t) in got.iter().zip(truth.iter()).skip(1) {
+            assert!((g - t).abs() < 1e-4);
+        }
+        // 1×1×1 block: mean only
+        let got1 = fit(&[7.5], (1, 1, 1));
+        assert_eq!(got1, [0.0, 0.0, 0.0, 7.5]);
+    }
+
+    #[test]
+    fn fit_beats_lorenzo_on_noisy_planes() {
+        // regression should win on a plane + noise (its design target)
+        let mut rng = Pcg32::new(8);
+        let shape = (8, 8, 8);
+        let mut block = make_plane(shape, [3.0, 1.0, -2.0, 0.0]);
+        for v in block.iter_mut() {
+            *v += (rng.f32() - 0.5) * 0.2;
+        }
+        let c = fit(&block, shape);
+        let reg_err = sample_error(&block, shape, &c);
+        let lor_err = super::super::sampling::lorenzo_sample_error(&block, shape);
+        assert!(reg_err < lor_err, "reg {reg_err} vs lor {lor_err}");
+    }
+
+    #[test]
+    fn dup_variant_agrees() {
+        let c = [1.0f32, 2.0, 3.0, 4.0];
+        for (z, y, x) in [(0usize, 0usize, 0usize), (1, 2, 3), (9, 9, 9)] {
+            let a = predict(&c, z, y, x);
+            let b = predict_dup(&c, z, y, x);
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+}

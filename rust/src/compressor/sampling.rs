@@ -1,0 +1,140 @@
+//! Best-fit predictor selection by sampling (paper Alg. 1 lines 6-9).
+//!
+//! For each block, both predictors' errors are *estimated* on a strided
+//! sample (every 2nd point per axis) and the smaller one wins. The Lorenzo
+//! estimate uses original (not decompressed) neighbors — the standard SZ
+//! 2.1 approximation; §4.1.1 shows this whole stage is naturally resilient:
+//! a wrong selection only costs ratio, never correctness.
+
+use super::lorenzo::{self, GridView};
+use super::regression::{self, Coeffs};
+use super::{Predictor, PredictorPolicy};
+
+/// Lorenzo residual estimate on the strided sample (original neighbors).
+pub fn lorenzo_sample_error(block: &[f32], shape: (usize, usize, usize)) -> f64 {
+    let v = GridView::dense(block, shape);
+    let (nz, ny, nx) = shape;
+    let mut err = 0.0f64;
+    for z in (0..nz).step_by(2) {
+        for y in (0..ny).step_by(2) {
+            for x in (0..nx).step_by(2) {
+                let actual = v.at(z as isize, y as isize, x as isize) as f64;
+                err += (actual - lorenzo::predict(&v, z, y, x) as f64).abs();
+            }
+        }
+    }
+    err
+}
+
+/// Outcome of the selection stage for one block.
+#[derive(Debug, Clone, Copy)]
+pub struct Selection {
+    /// Winning predictor.
+    pub predictor: Predictor,
+    /// Fitted regression coefficients (kept even when Lorenzo wins so the
+    /// fault-injection hooks can perturb the *estimation* stage).
+    pub coeffs: Coeffs,
+    /// Estimated Lorenzo error on the sample.
+    pub e_lorenzo: f64,
+    /// Estimated regression error on the sample.
+    pub e_regression: f64,
+}
+
+/// Select the best-fit predictor for one block.
+pub fn select(
+    block: &[f32],
+    _shape: (usize, usize, usize),
+    policy: PredictorPolicy,
+    coeffs: Coeffs,
+    e_lorenzo: f64,
+    e_regression: f64,
+) -> Selection {
+    let predictor = match policy {
+        PredictorPolicy::LorenzoOnly => Predictor::Lorenzo,
+        PredictorPolicy::RegressionOnly => Predictor::Regression,
+        PredictorPolicy::Auto => {
+            // blocks too small for a meaningful fit fall back to Lorenzo
+            if block.len() < 8 || e_lorenzo <= e_regression {
+                Predictor::Lorenzo
+            } else {
+                Predictor::Regression
+            }
+        }
+    };
+    Selection { predictor, coeffs, e_lorenzo, e_regression }
+}
+
+/// Full estimation for one block: fit + both sample errors.
+pub fn estimate(block: &[f32], shape: (usize, usize, usize)) -> (Coeffs, f64, f64) {
+    let coeffs = regression::fit(block, shape);
+    let e_lor = lorenzo_sample_error(block, shape);
+    let e_reg = regression::sample_error(block, shape, &coeffs);
+    (coeffs, e_lor, e_reg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn select_auto(block: &[f32], shape: (usize, usize, usize)) -> Selection {
+        let (c, el, er) = estimate(block, shape);
+        select(block, shape, PredictorPolicy::Auto, c, el, er)
+    }
+
+    #[test]
+    fn smooth_random_walk_prefers_lorenzo() {
+        let mut rng = Pcg32::new(3);
+        let shape = (8, 8, 8);
+        let mut block = Vec::with_capacity(512);
+        let mut v = 0.0f32;
+        for _ in 0..512 {
+            v += (rng.f32() - 0.5) * 0.01;
+            block.push(v);
+        }
+        // random walk: locally smooth but not planar
+        let sel = select_auto(&block, shape);
+        assert_eq!(sel.predictor, Predictor::Lorenzo);
+    }
+
+    #[test]
+    fn noisy_plane_prefers_regression() {
+        let mut rng = Pcg32::new(5);
+        let shape = (8, 8, 8);
+        let mut block = Vec::with_capacity(512);
+        for z in 0..8 {
+            for y in 0..8 {
+                for x in 0..8 {
+                    let plane = 2.0 * z as f32 + 0.5 * y as f32 - x as f32;
+                    block.push(plane + (rng.f32() - 0.5) * 0.5);
+                }
+            }
+        }
+        let sel = select_auto(&block, shape);
+        assert_eq!(sel.predictor, Predictor::Regression);
+        assert!(sel.e_regression < sel.e_lorenzo);
+    }
+
+    #[test]
+    fn policy_overrides() {
+        let block = vec![0.0f32; 64];
+        let shape = (4, 4, 4);
+        let (c, el, er) = estimate(&block, shape);
+        assert_eq!(
+            select(&block, shape, PredictorPolicy::LorenzoOnly, c, el, er).predictor,
+            Predictor::Lorenzo
+        );
+        assert_eq!(
+            select(&block, shape, PredictorPolicy::RegressionOnly, c, el, er).predictor,
+            Predictor::Regression
+        );
+    }
+
+    #[test]
+    fn tiny_blocks_fall_back_to_lorenzo() {
+        let block = [1.0f32, 2.0];
+        let (c, el, er) = estimate(&block, (1, 1, 2));
+        let sel = select(&block, (1, 1, 2), PredictorPolicy::Auto, c, el, er);
+        assert_eq!(sel.predictor, Predictor::Lorenzo);
+    }
+}

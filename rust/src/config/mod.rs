@@ -1,0 +1,10 @@
+//! Configuration system: a TOML-subset parser (`parser`) and the typed
+//! configuration structs (`types`) used by the CLI launcher and the
+//! coordinator. No serde/toml in the offline vendor set, so parsing is
+//! hand-rolled with strict errors.
+
+pub mod parser;
+pub mod types;
+
+pub use parser::{ConfigDoc, Value};
+pub use types::{PipelineConfig, RunConfig};

@@ -1,0 +1,363 @@
+//! Hand-rolled TOML-subset parser.
+//!
+//! Supported grammar (enough for launcher configs, kept strict):
+//!
+//! ```toml
+//! # comment
+//! key = "string"          # strings (no escapes beyond \" \\ \n \t)
+//! n = 42                  # integers
+//! x = -1.5e-3             # floats
+//! flag = true             # booleans
+//! dims = [512, 512, 512]  # homogeneous arrays of the above
+//!
+//! [section]
+//! key = 1                 # section-scoped keys, addressed "section.key"
+//! [section.sub]           # nested sections
+//! ```
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// A parsed configuration value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    /// UTF-8 string.
+    Str(String),
+    /// 64-bit signed integer.
+    Int(i64),
+    /// 64-bit float.
+    Float(f64),
+    /// Boolean.
+    Bool(bool),
+    /// Homogeneous array.
+    Array(Vec<Value>),
+}
+
+impl Value {
+    /// As string, if it is one.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// As integer (accepts Int only).
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    /// As float (accepts Float or Int).
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    /// As bool.
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    /// As array slice.
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(a) => Some(a),
+            _ => None,
+        }
+    }
+}
+
+/// A parsed document: flat map of dotted keys to values.
+#[derive(Debug, Default, Clone)]
+pub struct ConfigDoc {
+    entries: BTreeMap<String, Value>,
+}
+
+impl ConfigDoc {
+    /// Parse a document from text.
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut doc = ConfigDoc::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest.strip_suffix(']').ok_or_else(|| {
+                    Error::Config(format!("line {}: unterminated section header", lineno + 1))
+                })?;
+                let name = name.trim();
+                if name.is_empty() || !name.split('.').all(is_bare_key) {
+                    return Err(Error::Config(format!(
+                        "line {}: invalid section name '{name}'",
+                        lineno + 1
+                    )));
+                }
+                section = name.to_string();
+                continue;
+            }
+            let eq = line.find('=').ok_or_else(|| {
+                Error::Config(format!("line {}: expected 'key = value'", lineno + 1))
+            })?;
+            let key = line[..eq].trim();
+            if !is_bare_key(key) {
+                return Err(Error::Config(format!("line {}: invalid key '{key}'", lineno + 1)));
+            }
+            let value = parse_value(line[eq + 1..].trim())
+                .map_err(|e| Error::Config(format!("line {}: {e}", lineno + 1)))?;
+            let full = if section.is_empty() { key.to_string() } else { format!("{section}.{key}") };
+            if doc.entries.insert(full.clone(), value).is_some() {
+                return Err(Error::Config(format!("line {}: duplicate key '{full}'", lineno + 1)));
+            }
+        }
+        Ok(doc)
+    }
+
+    /// Parse from a file.
+    pub fn parse_file(path: &std::path::Path) -> Result<Self> {
+        Self::parse(&std::fs::read_to_string(path)?)
+    }
+
+    /// Look up a dotted key.
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.entries.get(key)
+    }
+
+    /// String value or error.
+    pub fn str_of(&self, key: &str) -> Result<&str> {
+        self.get(key)
+            .and_then(Value::as_str)
+            .ok_or_else(|| Error::Config(format!("missing/ill-typed string key '{key}'")))
+    }
+
+    /// Integer value or default.
+    pub fn int_or(&self, key: &str, default: i64) -> Result<i64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .as_int()
+                .ok_or_else(|| Error::Config(format!("key '{key}' is not an integer"))),
+        }
+    }
+
+    /// Float value or default.
+    pub fn float_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .as_float()
+                .ok_or_else(|| Error::Config(format!("key '{key}' is not a float"))),
+        }
+    }
+
+    /// Bool value or default.
+    pub fn bool_or(&self, key: &str, default: bool) -> Result<bool> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .as_bool()
+                .ok_or_else(|| Error::Config(format!("key '{key}' is not a bool"))),
+        }
+    }
+
+    /// String value or default.
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> Result<&'a str> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .as_str()
+                .ok_or_else(|| Error::Config(format!("key '{key}' is not a string"))),
+        }
+    }
+
+    /// Array of integers or error.
+    pub fn int_array(&self, key: &str) -> Result<Vec<i64>> {
+        let arr = self
+            .get(key)
+            .and_then(Value::as_array)
+            .ok_or_else(|| Error::Config(format!("missing/ill-typed array key '{key}'")))?;
+        arr.iter()
+            .map(|v| v.as_int().ok_or_else(|| Error::Config(format!("'{key}' has non-int element"))))
+            .collect()
+    }
+
+    /// All keys (sorted).
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.entries.keys().map(String::as_str)
+    }
+}
+
+fn is_bare_key(s: &str) -> bool {
+    !s.is_empty() && s.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-')
+}
+
+fn strip_comment(line: &str) -> &str {
+    // a '#' inside a quoted string does not start a comment
+    let mut in_str = false;
+    let mut prev_escape = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' if !prev_escape => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+        prev_escape = c == '\\' && !prev_escape;
+    }
+    line
+}
+
+fn parse_value(s: &str) -> std::result::Result<Value, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest.strip_suffix('"').ok_or("unterminated string")?;
+        return Ok(Value::Str(unescape(inner)?));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(rest) = s.strip_prefix('[') {
+        let inner = rest.strip_suffix(']').ok_or("unterminated array")?.trim();
+        if inner.is_empty() {
+            return Ok(Value::Array(vec![]));
+        }
+        let items: std::result::Result<Vec<Value>, String> =
+            split_top_level(inner).into_iter().map(|p| parse_value(p.trim())).collect();
+        return Ok(Value::Array(items?));
+    }
+    // number: int when it parses as i64 and has no float markers
+    if !s.contains(['.', 'e', 'E']) {
+        if let Ok(i) = s.parse::<i64>() {
+            return Ok(Value::Int(i));
+        }
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(format!("cannot parse value '{s}'"))
+}
+
+fn split_top_level(s: &str) -> Vec<&str> {
+    // split on commas not inside strings (arrays are not nested in our subset)
+    let mut parts = Vec::new();
+    let mut start = 0usize;
+    let mut in_str = false;
+    let mut prev_escape = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' if !prev_escape => in_str = !in_str,
+            ',' if !in_str => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+        prev_escape = c == '\\' && !prev_escape;
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+fn unescape(s: &str) -> std::result::Result<String, String> {
+    let mut out = String::with_capacity(s.len());
+    let mut chars = s.chars();
+    while let Some(c) = chars.next() {
+        if c != '\\' {
+            out.push(c);
+            continue;
+        }
+        match chars.next() {
+            Some('"') => out.push('"'),
+            Some('\\') => out.push('\\'),
+            Some('n') => out.push('\n'),
+            Some('t') => out.push('\t'),
+            other => return Err(format!("bad escape '\\{}'", other.unwrap_or(' '))),
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_scalars_and_sections() {
+        let doc = ConfigDoc::parse(
+            r#"
+            # top comment
+            name = "nyx"      # trailing comment
+            level = 3
+            bound = 1e-3
+            fast = true
+
+            [pipeline]
+            workers = 8
+            [pipeline.queue]
+            depth = 4
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.str_of("name").unwrap(), "nyx");
+        assert_eq!(doc.int_or("level", 0).unwrap(), 3);
+        assert!((doc.float_or("bound", 0.0).unwrap() - 1e-3).abs() < 1e-15);
+        assert!(doc.bool_or("fast", false).unwrap());
+        assert_eq!(doc.int_or("pipeline.workers", 0).unwrap(), 8);
+        assert_eq!(doc.int_or("pipeline.queue.depth", 0).unwrap(), 4);
+    }
+
+    #[test]
+    fn arrays() {
+        let doc = ConfigDoc::parse("dims = [512, 512, 512]\nnames = [\"a\", \"b\"]").unwrap();
+        assert_eq!(doc.int_array("dims").unwrap(), vec![512, 512, 512]);
+        let names = doc.get("names").unwrap().as_array().unwrap();
+        assert_eq!(names[1].as_str().unwrap(), "b");
+    }
+
+    #[test]
+    fn string_with_hash_and_escapes() {
+        let doc = ConfigDoc::parse(r#"path = "a#b\n\"q\"""#).unwrap();
+        assert_eq!(doc.str_of("path").unwrap(), "a#b\n\"q\"");
+    }
+
+    #[test]
+    fn negative_and_float_forms() {
+        let doc = ConfigDoc::parse("a = -5\nb = -1.5\nc = 2E4").unwrap();
+        assert_eq!(doc.int_or("a", 0).unwrap(), -5);
+        assert_eq!(doc.float_or("b", 0.0).unwrap(), -1.5);
+        assert_eq!(doc.float_or("c", 0.0).unwrap(), 2e4);
+    }
+
+    #[test]
+    fn errors_are_strict() {
+        assert!(ConfigDoc::parse("bad line").is_err());
+        assert!(ConfigDoc::parse("[unterminated").is_err());
+        assert!(ConfigDoc::parse("k = ").is_err());
+        assert!(ConfigDoc::parse("k = \"unterminated").is_err());
+        assert!(ConfigDoc::parse("k = 1\nk = 2").is_err());
+        assert!(ConfigDoc::parse("bad key! = 1").is_err());
+    }
+
+    #[test]
+    fn defaults_and_type_errors() {
+        let doc = ConfigDoc::parse("n = 3").unwrap();
+        assert_eq!(doc.int_or("missing", 7).unwrap(), 7);
+        assert!(doc.str_of("n").is_err());
+        assert_eq!(doc.float_or("n", 0.0).unwrap(), 3.0); // int widens to float
+    }
+}

@@ -1,0 +1,199 @@
+//! Typed configuration for the CLI launcher and the coordinator.
+
+use super::parser::ConfigDoc;
+use crate::compressor::{CompressionConfig, ErrorBound, PredictorPolicy};
+use crate::data::synthetic::Profile;
+use crate::error::{Error, Result};
+
+/// One compression run (CLI `compress`/`decompress`/`bench` input).
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    /// Dataset profile for synthetic generation.
+    pub profile: Profile,
+    /// Linear scale passed to [`crate::data::synthetic::dataset`].
+    pub edge: usize,
+    /// RNG seed.
+    pub seed: u64,
+    /// Engine: "sz" (classic), "rsz", or "ftrsz".
+    pub engine: String,
+    /// Compression knobs.
+    pub compression: CompressionConfig,
+}
+
+impl RunConfig {
+    /// Parse from a config document. Recognized keys:
+    ///
+    /// ```toml
+    /// profile = "nyx"            # nyx | hurricane | scale-letkf | pluto
+    /// edge = 64
+    /// seed = 42
+    /// engine = "ftrsz"           # sz | rsz | ftrsz
+    /// [compression]
+    /// error_bound = 1e-3
+    /// bound_kind = "rel"         # abs | rel (value-range relative)
+    /// block_size = 10
+    /// quant_radius = 32768
+    /// zstd_level = 3
+    /// predictor = "auto"         # auto | lorenzo | regression
+    /// ```
+    pub fn from_doc(doc: &ConfigDoc) -> Result<Self> {
+        let profile = parse_profile(doc.str_or("profile", "nyx")?)?;
+        let edge = doc.int_or("edge", 64)? as usize;
+        let seed = doc.int_or("seed", 42)? as u64;
+        let engine = doc.str_or("engine", "ftrsz")?.to_string();
+        if !["sz", "rsz", "ftrsz"].contains(&engine.as_str()) {
+            return Err(Error::Config(format!("unknown engine '{engine}'")));
+        }
+        let compression = compression_from_doc(doc, "compression")?;
+        Ok(Self { profile, edge, seed, engine, compression })
+    }
+}
+
+/// Parse a profile name.
+pub fn parse_profile(s: &str) -> Result<Profile> {
+    match s.to_ascii_lowercase().as_str() {
+        "nyx" => Ok(Profile::Nyx),
+        "hurricane" => Ok(Profile::Hurricane),
+        "scale-letkf" | "sl" | "scale_letkf" => Ok(Profile::ScaleLetkf),
+        "pluto" => Ok(Profile::Pluto),
+        other => Err(Error::Config(format!("unknown profile '{other}'"))),
+    }
+}
+
+/// Read a [`CompressionConfig`] from a `[section]` of the document.
+pub fn compression_from_doc(doc: &ConfigDoc, section: &str) -> Result<CompressionConfig> {
+    let key = |k: &str| format!("{section}.{k}");
+    let bound = doc.float_or(&key("error_bound"), 1e-3)?;
+    let kind = doc.str_or(&key("bound_kind"), "rel")?;
+    let error_bound = match kind {
+        "abs" => ErrorBound::Abs(bound),
+        "rel" => ErrorBound::Rel(bound),
+        other => return Err(Error::Config(format!("bound_kind '{other}'"))),
+    };
+    let predictor = match doc.str_or(&key("predictor"), "auto")? {
+        "auto" => PredictorPolicy::Auto,
+        "lorenzo" => PredictorPolicy::LorenzoOnly,
+        "regression" => PredictorPolicy::RegressionOnly,
+        other => return Err(Error::Config(format!("predictor '{other}'"))),
+    };
+    let cfg = CompressionConfig {
+        error_bound,
+        block_size: doc.int_or(&key("block_size"), 10)? as usize,
+        quant_radius: doc.int_or(&key("quant_radius"), 32768)? as u32,
+        zstd_level: doc.int_or(&key("zstd_level"), 3)? as i32,
+        predictor,
+        payload_zstd: doc.bool_or(&key("payload_zstd"), false)?,
+    };
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+/// Coordinator / pipeline configuration (weak-scaling experiments, Fig. 8).
+#[derive(Debug, Clone)]
+pub struct PipelineConfig {
+    /// Worker threads in the compression stage.
+    pub workers: usize,
+    /// Bounded-queue depth between stages (backpressure window).
+    pub queue_depth: usize,
+    /// Simulated ranks (file-per-process writers).
+    pub ranks: usize,
+    /// Per-rank payload in points.
+    pub points_per_rank: usize,
+    /// Simulated PFS aggregate bandwidth, bytes/s.
+    pub pfs_bandwidth: f64,
+    /// Per-file open/close latency, seconds.
+    pub pfs_latency: f64,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        Self {
+            workers: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+            queue_depth: 4,
+            ranks: 256,
+            points_per_rank: 1 << 20,
+            pfs_bandwidth: 100e9, // the paper's PFS-bottleneck regime
+            pfs_latency: 2e-3,
+        }
+    }
+}
+
+impl PipelineConfig {
+    /// Parse from a `[pipeline]` section with defaults.
+    pub fn from_doc(doc: &ConfigDoc) -> Result<Self> {
+        let d = Self::default();
+        let cfg = Self {
+            workers: doc.int_or("pipeline.workers", d.workers as i64)? as usize,
+            queue_depth: doc.int_or("pipeline.queue_depth", d.queue_depth as i64)? as usize,
+            ranks: doc.int_or("pipeline.ranks", d.ranks as i64)? as usize,
+            points_per_rank: doc.int_or("pipeline.points_per_rank", d.points_per_rank as i64)?
+                as usize,
+            pfs_bandwidth: doc.float_or("pipeline.pfs_bandwidth", d.pfs_bandwidth)?,
+            pfs_latency: doc.float_or("pipeline.pfs_latency", d.pfs_latency)?,
+        };
+        if cfg.workers == 0 || cfg.queue_depth == 0 || cfg.ranks == 0 {
+            return Err(Error::Config("pipeline sizes must be positive".into()));
+        }
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_config_defaults() {
+        let doc = ConfigDoc::parse("").unwrap();
+        let rc = RunConfig::from_doc(&doc).unwrap();
+        assert_eq!(rc.profile, Profile::Nyx);
+        assert_eq!(rc.engine, "ftrsz");
+        assert_eq!(rc.compression.block_size, 10);
+    }
+
+    #[test]
+    fn run_config_full() {
+        let doc = ConfigDoc::parse(
+            r#"
+            profile = "scale-letkf"
+            edge = 32
+            engine = "rsz"
+            [compression]
+            error_bound = 1e-4
+            bound_kind = "abs"
+            block_size = 8
+            predictor = "lorenzo"
+            "#,
+        )
+        .unwrap();
+        let rc = RunConfig::from_doc(&doc).unwrap();
+        assert_eq!(rc.profile, Profile::ScaleLetkf);
+        assert_eq!(rc.engine, "rsz");
+        assert!(matches!(rc.compression.error_bound, ErrorBound::Abs(b) if b == 1e-4));
+        assert_eq!(rc.compression.predictor, PredictorPolicy::LorenzoOnly);
+    }
+
+    #[test]
+    fn bad_values_rejected() {
+        for text in [
+            "engine = \"zzz\"",
+            "profile = \"mars\"",
+            "[compression]\nbound_kind = \"weird\"",
+            "[compression]\nerror_bound = -1.0",
+        ] {
+            let doc = ConfigDoc::parse(text).unwrap();
+            assert!(RunConfig::from_doc(&doc).is_err(), "{text} accepted");
+        }
+    }
+
+    #[test]
+    fn pipeline_defaults_and_overrides() {
+        let doc = ConfigDoc::parse("[pipeline]\nranks = 512\nqueue_depth = 8").unwrap();
+        let pc = PipelineConfig::from_doc(&doc).unwrap();
+        assert_eq!(pc.ranks, 512);
+        assert_eq!(pc.queue_depth, 8);
+        assert!(pc.pfs_bandwidth > 0.0);
+        let bad = ConfigDoc::parse("[pipeline]\nworkers = 0").unwrap();
+        assert!(PipelineConfig::from_doc(&bad).is_err());
+    }
+}

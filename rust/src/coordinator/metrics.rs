@@ -1,0 +1,73 @@
+//! Pipeline metrics: per-stage busy time, byte counters, queue pressure.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Atomic metrics shared across pipeline stages.
+#[derive(Debug, Default)]
+pub struct PipelineMetrics {
+    /// Items that entered the pipeline.
+    pub items_in: AtomicU64,
+    /// Items fully written.
+    pub items_out: AtomicU64,
+    /// Uncompressed bytes in.
+    pub bytes_in: AtomicU64,
+    /// Compressed bytes out.
+    pub bytes_out: AtomicU64,
+    /// Nanoseconds workers spent compressing.
+    pub compress_busy_ns: AtomicU64,
+    /// Nanoseconds the writer spent writing.
+    pub write_busy_ns: AtomicU64,
+    /// Times a producer blocked on a full queue (backpressure events).
+    pub backpressure_events: AtomicU64,
+}
+
+impl PipelineMetrics {
+    /// Record one compressed item.
+    pub fn record_compress(&self, bytes_in: usize, bytes_out: usize, ns: u64) {
+        self.bytes_in.fetch_add(bytes_in as u64, Ordering::Relaxed);
+        self.bytes_out.fetch_add(bytes_out as u64, Ordering::Relaxed);
+        self.compress_busy_ns.fetch_add(ns, Ordering::Relaxed);
+    }
+
+    /// Aggregate compression ratio so far.
+    pub fn ratio(&self) -> f64 {
+        let bin = self.bytes_in.load(Ordering::Relaxed) as f64;
+        let bout = self.bytes_out.load(Ordering::Relaxed).max(1) as f64;
+        bin / bout
+    }
+
+    /// Compression throughput in bytes/s of busy time (all workers).
+    pub fn compress_throughput(&self) -> f64 {
+        let ns = self.compress_busy_ns.load(Ordering::Relaxed).max(1);
+        self.bytes_in.load(Ordering::Relaxed) as f64 / (ns as f64 * 1e-9)
+    }
+
+    /// One-line summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "items {}/{} ratio {:.2} compress {:.1} MB/s backpressure {}",
+            self.items_out.load(Ordering::Relaxed),
+            self.items_in.load(Ordering::Relaxed),
+            self.ratio(),
+            self.compress_throughput() / 1e6,
+            self.backpressure_events.load(Ordering::Relaxed),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ratio_and_throughput() {
+        let m = PipelineMetrics::default();
+        m.record_compress(1000, 100, 1_000_000); // 1ms
+        m.record_compress(1000, 100, 1_000_000);
+        assert!((m.ratio() - 10.0).abs() < 1e-9);
+        // 2000 bytes over 2ms busy time = 1 MB/s
+        let tput = m.compress_throughput();
+        assert!((tput - 1e6).abs() / 1e6 < 0.01, "got {tput}");
+        assert!(m.summary().contains("ratio 10.00"));
+    }
+}

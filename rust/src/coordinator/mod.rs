@@ -1,0 +1,22 @@
+//! L3 coordinator: streaming orchestration of compression work.
+//!
+//! The paper's system sits in a data-dumping pipeline: simulation ranks
+//! produce fields, the compressor reduces them, a PFS absorbs the bytes.
+//! This module provides that pipeline as a library:
+//!
+//! * [`pipeline`] — a bounded-queue streaming pipeline (read → compress →
+//!   write) with backpressure and a worker pool;
+//! * [`sharding`] — assignment of fields/shards to ranks with balanced
+//!   rebalancing;
+//! * [`metrics`] — per-stage counters;
+//! * [`weak_scaling`] — the Fig. 8 driver: N ranks file-per-process over
+//!   the simulated PFS, sz vs ftrsz, dump and load breakdowns.
+
+pub mod metrics;
+pub mod pipeline;
+pub mod sharding;
+pub mod weak_scaling;
+
+pub use metrics::PipelineMetrics;
+pub use pipeline::{run_pipeline, PipelineOutput, WorkItem};
+pub use weak_scaling::{weak_scaling_run, WeakScalingPoint};

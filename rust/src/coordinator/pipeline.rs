@@ -1,0 +1,212 @@
+//! Bounded-queue streaming pipeline: read → compress(workers) → write.
+//!
+//! Backpressure comes from the bounded queues ([`BoundedQueue`]): a fast
+//! producer blocks when compression falls behind, and the compression
+//! stage blocks when the writer (PFS) is the bottleneck — exactly the
+//! dynamics the Fig. 8 experiment studies.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+use crate::compressor::CompressionConfig;
+use crate::data::Dims;
+use crate::error::{Error, Result};
+use crate::inject::Engine;
+use crate::util::threadpool::BoundedQueue;
+use crate::{compressor, ft};
+
+use super::metrics::PipelineMetrics;
+
+/// One pipeline work item (a field shard to compress).
+#[derive(Debug, Clone)]
+pub struct WorkItem {
+    /// Stable id (drives output ordering).
+    pub id: usize,
+    /// Shape.
+    pub dims: Dims,
+    /// Values.
+    pub data: Vec<f32>,
+}
+
+/// A compressed item.
+#[derive(Debug)]
+struct DoneItem {
+    id: usize,
+    archive: Vec<u8>,
+}
+
+/// Pipeline results.
+#[derive(Debug)]
+pub struct PipelineOutput {
+    /// (item id, archive bytes), sorted by id.
+    pub archives: Vec<(usize, Vec<u8>)>,
+    /// Shared metrics.
+    pub metrics: Arc<PipelineMetrics>,
+    /// Wall-clock seconds.
+    pub wall_secs: f64,
+}
+
+/// Run the pipeline over `items` with `workers` compression threads and a
+/// queue depth of `queue_depth` between stages.
+pub fn run_pipeline(
+    items: Vec<WorkItem>,
+    engine: Engine,
+    cfg: &CompressionConfig,
+    workers: usize,
+    queue_depth: usize,
+) -> Result<PipelineOutput> {
+    let metrics = Arc::new(PipelineMetrics::default());
+    let in_q: Arc<BoundedQueue<WorkItem>> = Arc::new(BoundedQueue::new(queue_depth.max(1)));
+    let out_q: Arc<BoundedQueue<DoneItem>> = Arc::new(BoundedQueue::new(queue_depth.max(1)));
+    let n_items = items.len();
+    let workers = workers.max(1);
+    let start = std::time::Instant::now();
+    let mut archives: Vec<(usize, Vec<u8>)> = Vec::with_capacity(n_items);
+    let mut first_error: Option<Error> = None;
+
+    crossbeam_utils::thread::scope(|s| {
+        // source
+        {
+            let in_q = in_q.clone();
+            let metrics = metrics.clone();
+            s.spawn(move |_| {
+                for item in items {
+                    metrics.items_in.fetch_add(1, Ordering::Relaxed);
+                    if in_q.len() >= queue_depth.max(1) {
+                        metrics.backpressure_events.fetch_add(1, Ordering::Relaxed);
+                    }
+                    if !in_q.push(item) {
+                        break;
+                    }
+                }
+                in_q.close();
+            });
+        }
+        // compression workers
+        let error_slot: Arc<std::sync::Mutex<Option<Error>>> =
+            Arc::new(std::sync::Mutex::new(None));
+        let done_workers = Arc::new(std::sync::atomic::AtomicUsize::new(0));
+        for _ in 0..workers {
+            let in_q = in_q.clone();
+            let out_q = out_q.clone();
+            let metrics = metrics.clone();
+            let cfg = cfg.clone();
+            let error_slot = error_slot.clone();
+            let done_workers = done_workers.clone();
+            s.spawn(move |_| {
+                while let Some(item) = in_q.pop() {
+                    let t = std::time::Instant::now();
+                    let result = match engine {
+                        Engine::Classic => {
+                            compressor::classic::compress(&item.data, item.dims, &cfg)
+                        }
+                        Engine::RandomAccess => {
+                            compressor::engine::compress(&item.data, item.dims, &cfg)
+                        }
+                        Engine::FaultTolerant => ft::compress(&item.data, item.dims, &cfg),
+                    };
+                    match result {
+                        Ok(archive) => {
+                            metrics.record_compress(
+                                item.data.len() * 4,
+                                archive.len(),
+                                t.elapsed().as_nanos() as u64,
+                            );
+                            if !out_q.push(DoneItem { id: item.id, archive }) {
+                                break;
+                            }
+                        }
+                        Err(e) => {
+                            *error_slot.lock().unwrap() = Some(e);
+                            in_q.close();
+                            break;
+                        }
+                    }
+                }
+                if done_workers.fetch_add(1, Ordering::SeqCst) + 1 == workers {
+                    out_q.close();
+                }
+            });
+        }
+        // sink (this thread)
+        while let Some(done) = out_q.pop() {
+            let t = std::time::Instant::now();
+            metrics.items_out.fetch_add(1, Ordering::Relaxed);
+            archives.push((done.id, done.archive));
+            metrics
+                .write_busy_ns
+                .fetch_add(t.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        }
+        first_error = error_slot.lock().unwrap().take();
+    })
+    .map_err(|_| Error::Runtime("pipeline worker panicked".into()))?;
+
+    if let Some(e) = first_error {
+        return Err(e);
+    }
+    if archives.len() != n_items {
+        return Err(Error::Runtime(format!(
+            "pipeline dropped items: {} of {n_items}",
+            archives.len()
+        )));
+    }
+    archives.sort_by_key(|(id, _)| *id);
+    Ok(PipelineOutput { archives, metrics, wall_secs: start.elapsed().as_secs_f64() })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compressor::ErrorBound;
+    use crate::data::synthetic;
+
+    fn items(n: usize) -> Vec<WorkItem> {
+        (0..n)
+            .map(|i| {
+                let f = synthetic::hurricane_field("t", Dims::d3(6, 10, 10), i as u64);
+                WorkItem { id: i, dims: f.dims, data: f.data }
+            })
+            .collect()
+    }
+
+    fn cfg() -> CompressionConfig {
+        CompressionConfig::new(ErrorBound::Abs(1e-3)).with_block_size(8)
+    }
+
+    #[test]
+    fn pipeline_compresses_everything_in_order() {
+        let out = run_pipeline(items(12), Engine::FaultTolerant, &cfg(), 4, 2).unwrap();
+        assert_eq!(out.archives.len(), 12);
+        for (i, (id, bytes)) in out.archives.iter().enumerate() {
+            assert_eq!(*id, i);
+            let dec = ft::decompress(bytes).unwrap();
+            let f = synthetic::hurricane_field("t", Dims::d3(6, 10, 10), i as u64);
+            assert!(crate::analysis::max_abs_err(&f.data, &dec.data) <= 1e-3);
+        }
+        assert_eq!(out.metrics.items_out.load(Ordering::Relaxed), 12);
+        assert!(out.metrics.ratio() > 1.0);
+    }
+
+    #[test]
+    fn pipeline_single_worker_and_deep_queue() {
+        let out = run_pipeline(items(5), Engine::RandomAccess, &cfg(), 1, 16).unwrap();
+        assert_eq!(out.archives.len(), 5);
+    }
+
+    #[test]
+    fn pipeline_propagates_errors() {
+        // an invalid config must surface as Err, not hang
+        let mut bad = cfg();
+        bad.block_size = 0;
+        let err = run_pipeline(items(3), Engine::RandomAccess, &bad, 2, 2);
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn pipeline_works_for_all_engines() {
+        for e in [Engine::Classic, Engine::RandomAccess, Engine::FaultTolerant] {
+            let out = run_pipeline(items(4), e, &cfg(), 2, 2).unwrap();
+            assert_eq!(out.archives.len(), 4, "engine {}", e.name());
+        }
+    }
+}

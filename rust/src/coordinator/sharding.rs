@@ -1,0 +1,185 @@
+//! Shard assignment: mapping work units (fields / sub-domains) to ranks.
+//!
+//! Two strategies: round-robin (the file-per-process default) and greedy
+//! longest-processing-time balancing for heterogeneous field sizes, plus a
+//! rebalance step used when ranks join/leave (the streaming-orchestrator
+//! part of the L3 design).
+
+/// A unit of work to place.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Shard {
+    /// Stable identifier.
+    pub id: usize,
+    /// Size in points (the balancing weight).
+    pub weight: u64,
+}
+
+/// An assignment of shards to `n_ranks` ranks.
+#[derive(Debug, Clone)]
+pub struct Assignment {
+    /// `ranks[r]` = shard ids on rank r.
+    pub ranks: Vec<Vec<usize>>,
+}
+
+impl Assignment {
+    /// Total weight per rank.
+    pub fn loads(&self, shards: &[Shard]) -> Vec<u64> {
+        let weight_of = |id: usize| shards.iter().find(|s| s.id == id).map_or(0, |s| s.weight);
+        self.ranks.iter().map(|ids| ids.iter().map(|&i| weight_of(i)).sum()).collect()
+    }
+
+    /// Max/mean load imbalance factor (1.0 = perfect).
+    pub fn imbalance(&self, shards: &[Shard]) -> f64 {
+        let loads = self.loads(shards);
+        let max = *loads.iter().max().unwrap_or(&0) as f64;
+        let total: u64 = loads.iter().sum();
+        let mean = total as f64 / loads.len().max(1) as f64;
+        if mean == 0.0 {
+            1.0
+        } else {
+            max / mean
+        }
+    }
+
+    /// Every shard id exactly once?
+    pub fn is_partition(&self, shards: &[Shard]) -> bool {
+        let mut seen = std::collections::BTreeSet::new();
+        for ids in &self.ranks {
+            for &id in ids {
+                if !seen.insert(id) {
+                    return false;
+                }
+            }
+        }
+        seen.len() == shards.len() && shards.iter().all(|s| seen.contains(&s.id))
+    }
+}
+
+/// Round-robin placement (equal-size shards ⇒ perfect balance).
+pub fn round_robin(shards: &[Shard], n_ranks: usize) -> Assignment {
+    let mut ranks = vec![Vec::new(); n_ranks.max(1)];
+    for (i, s) in shards.iter().enumerate() {
+        ranks[i % n_ranks.max(1)].push(s.id);
+    }
+    Assignment { ranks }
+}
+
+/// Greedy LPT: heaviest shard to the least-loaded rank.
+pub fn balanced(shards: &[Shard], n_ranks: usize) -> Assignment {
+    let n_ranks = n_ranks.max(1);
+    let mut order: Vec<&Shard> = shards.iter().collect();
+    order.sort_by_key(|s| std::cmp::Reverse(s.weight));
+    let mut ranks = vec![Vec::new(); n_ranks];
+    let mut loads = vec![0u64; n_ranks];
+    for s in order {
+        let r = loads
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, &l)| l)
+            .map(|(i, _)| i)
+            .unwrap();
+        ranks[r].push(s.id);
+        loads[r] += s.weight;
+    }
+    Assignment { ranks }
+}
+
+/// Rebalance an existing assignment onto a new rank count, moving as few
+/// shards as possible: keep what fits, re-place the rest by LPT.
+pub fn rebalance(current: &Assignment, shards: &[Shard], new_ranks: usize) -> Assignment {
+    let new_ranks = new_ranks.max(1);
+    let weight_of = |id: usize| shards.iter().find(|s| s.id == id).map_or(0, |s| s.weight);
+    let total: u64 = shards.iter().map(|s| s.weight).sum();
+    let target = total.div_ceil(new_ranks as u64);
+    let mut ranks: Vec<Vec<usize>> = vec![Vec::new(); new_ranks];
+    let mut loads = vec![0u64; new_ranks];
+    let mut overflow: Vec<usize> = Vec::new();
+    // keep shards on their (surviving) rank up to the target load
+    for (r, ids) in current.ranks.iter().enumerate() {
+        for &id in ids {
+            if r < new_ranks && loads[r] + weight_of(id) <= target {
+                ranks[r].push(id);
+                loads[r] += weight_of(id);
+            } else {
+                overflow.push(id);
+            }
+        }
+    }
+    // place overflow by LPT
+    overflow.sort_by_key(|&id| std::cmp::Reverse(weight_of(id)));
+    for id in overflow {
+        let r = loads.iter().enumerate().min_by_key(|(_, &l)| l).map(|(i, _)| i).unwrap();
+        ranks[r].push(id);
+        loads[r] += weight_of(id);
+    }
+    Assignment { ranks }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn shards(ws: &[u64]) -> Vec<Shard> {
+        ws.iter().enumerate().map(|(i, &w)| Shard { id: i, weight: w }).collect()
+    }
+
+    #[test]
+    fn round_robin_partitions() {
+        let s = shards(&[1, 1, 1, 1, 1, 1, 1]);
+        let a = round_robin(&s, 3);
+        assert!(a.is_partition(&s));
+        let loads = a.loads(&s);
+        assert_eq!(loads.iter().sum::<u64>(), 7);
+        assert!(loads.iter().all(|&l| l >= 2 && l <= 3));
+    }
+
+    #[test]
+    fn lpt_beats_round_robin_on_skew() {
+        let s = shards(&[100, 1, 1, 1, 100, 1, 1, 1, 100, 1]);
+        let rr = round_robin(&s, 3);
+        let b = balanced(&s, 3);
+        assert!(b.is_partition(&s));
+        assert!(b.imbalance(&s) <= rr.imbalance(&s));
+        assert!(b.imbalance(&s) < 1.1, "LPT imbalance {}", b.imbalance(&s));
+    }
+
+    #[test]
+    fn rebalance_preserves_partition_and_balance() {
+        let mut rng = Pcg32::new(9);
+        let s: Vec<Shard> =
+            (0..40).map(|i| Shard { id: i, weight: 1 + rng.below(100) }).collect();
+        let a = balanced(&s, 8);
+        for new_ranks in [4usize, 8, 16] {
+            let r = rebalance(&a, &s, new_ranks);
+            assert!(r.is_partition(&s), "ranks={new_ranks}");
+            assert!(r.imbalance(&s) < 1.6, "ranks={new_ranks} imb={}", r.imbalance(&s));
+            assert_eq!(r.ranks.len(), new_ranks);
+        }
+    }
+
+    #[test]
+    fn rebalance_moves_few_when_shape_keeps() {
+        let s = shards(&[5, 5, 5, 5, 5, 5, 5, 5]);
+        let a = balanced(&s, 4);
+        let r = rebalance(&a, &s, 4);
+        // same rank count, balanced input: nothing should move
+        let moved: usize = a
+            .ranks
+            .iter()
+            .zip(&r.ranks)
+            .map(|(x, y)| x.iter().filter(|id| !y.contains(id)).count())
+            .sum();
+        assert_eq!(moved, 0);
+    }
+
+    #[test]
+    fn degenerate_cases() {
+        let s = shards(&[3]);
+        let a = balanced(&s, 10);
+        assert!(a.is_partition(&s));
+        let empty: Vec<Shard> = vec![];
+        let a2 = round_robin(&empty, 4);
+        assert!(a2.is_partition(&empty));
+    }
+}

@@ -1,0 +1,223 @@
+//! Dataset abstractions + synthetic field generators.
+//!
+//! The paper evaluates on NYX (cosmology), Hurricane (climate), SCALE-LETKF
+//! (weather) and New Horizons Pluto images (Table 1). Those datasets are
+//! not redistributable here, so [`synthetic`] builds deterministic stand-ins
+//! whose local smoothness statistics are tuned per profile to land in the
+//! same compression-ratio regimes (see DESIGN.md §Substitutions and the
+//! paper-vs-measured tables in EXPERIMENTS.md).
+
+pub mod synthetic;
+
+use crate::error::{Error, Result};
+
+/// Dataset dimensionality (row-major storage; the last axis is fastest).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dims {
+    /// 1D of length n.
+    D1(usize),
+    /// 2D (rows, cols).
+    D2(usize, usize),
+    /// 3D (depth, rows, cols).
+    D3(usize, usize, usize),
+}
+
+impl Dims {
+    /// Convenience constructor.
+    pub fn d1(n: usize) -> Self {
+        Dims::D1(n)
+    }
+
+    /// Convenience constructor.
+    pub fn d2(r: usize, c: usize) -> Self {
+        Dims::D2(r, c)
+    }
+
+    /// Convenience constructor.
+    pub fn d3(d: usize, r: usize, c: usize) -> Self {
+        Dims::D3(d, r, c)
+    }
+
+    /// Total number of points.
+    pub fn len(&self) -> usize {
+        match *self {
+            Dims::D1(n) => n,
+            Dims::D2(r, c) => r * c,
+            Dims::D3(d, r, c) => d * r * c,
+        }
+    }
+
+    /// True when empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Rank (1, 2 or 3).
+    pub fn rank(&self) -> usize {
+        match self {
+            Dims::D1(_) => 1,
+            Dims::D2(..) => 2,
+            Dims::D3(..) => 3,
+        }
+    }
+
+    /// View as (d, r, c) with leading 1s for lower ranks.
+    pub fn as_3d(&self) -> (usize, usize, usize) {
+        match *self {
+            Dims::D1(n) => (1, 1, n),
+            Dims::D2(r, c) => (1, r, c),
+            Dims::D3(d, r, c) => (d, r, c),
+        }
+    }
+
+    /// Serialize to (rank, d0, d1, d2).
+    pub fn encode(&self) -> (u8, u64, u64, u64) {
+        let (d, r, c) = self.as_3d();
+        (self.rank() as u8, d as u64, r as u64, c as u64)
+    }
+
+    /// Deserialize from [`encode`](Self::encode) fields.
+    pub fn decode(rank: u8, d: u64, r: u64, c: u64) -> Result<Self> {
+        let (d, r, c) = (d as usize, r as usize, c as usize);
+        match rank {
+            1 => Ok(Dims::D1(c)),
+            2 => Ok(Dims::D2(r, c)),
+            3 => Ok(Dims::D3(d, r, c)),
+            other => Err(Error::Format(format!("bad dims rank {other}"))),
+        }
+    }
+}
+
+/// A named scalar field.
+#[derive(Debug, Clone)]
+pub struct Field {
+    /// Field name (e.g. "velocity_x").
+    pub name: String,
+    /// Grid shape.
+    pub dims: Dims,
+    /// Row-major values.
+    pub data: Vec<f32>,
+}
+
+impl Field {
+    /// Construct, checking shape consistency.
+    pub fn new(name: impl Into<String>, dims: Dims, data: Vec<f32>) -> Result<Self> {
+        if dims.len() != data.len() {
+            return Err(Error::InvalidArgument(format!(
+                "dims {:?} imply {} points, got {}",
+                dims,
+                dims.len(),
+                data.len()
+            )));
+        }
+        Ok(Self { name: name.into(), dims, data })
+    }
+
+    /// Value range (min, max).
+    pub fn range(&self) -> (f32, f32) {
+        let mut lo = f32::INFINITY;
+        let mut hi = f32::NEG_INFINITY;
+        for &v in &self.data {
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+        (lo, hi)
+    }
+
+    /// Read a raw little-endian f32 file (the SZ dataset convention).
+    pub fn from_raw_file(name: &str, dims: Dims, path: &std::path::Path) -> Result<Self> {
+        let bytes = std::fs::read(path)?;
+        if bytes.len() != dims.len() * 4 {
+            return Err(Error::InvalidArgument(format!(
+                "file {} has {} bytes, dims need {}",
+                path.display(),
+                bytes.len(),
+                dims.len() * 4
+            )));
+        }
+        let data = bytes
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
+            .collect();
+        Field::new(name, dims, data)
+    }
+
+    /// Write as a raw little-endian f32 file.
+    pub fn to_raw_file(&self, path: &std::path::Path) -> Result<()> {
+        let mut bytes = Vec::with_capacity(self.data.len() * 4);
+        for &v in &self.data {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        std::fs::write(path, bytes)?;
+        Ok(())
+    }
+
+    /// Write a 2D field as a binary PGM image (for the Fig-2 visual check).
+    pub fn to_pgm(&self, path: &std::path::Path) -> Result<()> {
+        let (r, c) = match self.dims {
+            Dims::D2(r, c) => (r, c),
+            _ => return Err(Error::InvalidArgument("PGM export needs a 2D field".into())),
+        };
+        let (lo, hi) = self.range();
+        let scale = if hi > lo { 255.0 / (hi - lo) } else { 0.0 };
+        let mut out = format!("P5\n{c} {r}\n255\n").into_bytes();
+        out.extend(self.data.iter().map(|&v| ((v - lo) * scale).round().clamp(0.0, 255.0) as u8));
+        std::fs::write(path, out)?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dims_lengths_and_rank() {
+        assert_eq!(Dims::d1(5).len(), 5);
+        assert_eq!(Dims::d2(3, 4).len(), 12);
+        assert_eq!(Dims::d3(2, 3, 4).len(), 24);
+        assert_eq!(Dims::d3(2, 3, 4).rank(), 3);
+        assert_eq!(Dims::d2(3, 4).as_3d(), (1, 3, 4));
+    }
+
+    #[test]
+    fn dims_encode_decode() {
+        for d in [Dims::d1(7), Dims::d2(3, 9), Dims::d3(4, 5, 6)] {
+            let (r, a, b, c) = d.encode();
+            assert_eq!(Dims::decode(r, a, b, c).unwrap(), d);
+        }
+        assert!(Dims::decode(9, 1, 1, 1).is_err());
+    }
+
+    #[test]
+    fn field_shape_checked() {
+        assert!(Field::new("x", Dims::d2(2, 2), vec![0.0; 4]).is_ok());
+        assert!(Field::new("x", Dims::d2(2, 2), vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn raw_file_roundtrip() {
+        let dir = std::env::temp_dir().join("ftsz_test_raw");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("f.bin");
+        let f = Field::new("t", Dims::d1(4), vec![1.0, -2.5, 3.25, 0.0]).unwrap();
+        f.to_raw_file(&path).unwrap();
+        let g = Field::from_raw_file("t", Dims::d1(4), &path).unwrap();
+        assert_eq!(f.data, g.data);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn range_and_pgm() {
+        let f = Field::new("img", Dims::d2(2, 2), vec![0.0, 1.0, 2.0, 4.0]).unwrap();
+        assert_eq!(f.range(), (0.0, 4.0));
+        let dir = std::env::temp_dir().join("ftsz_test_pgm");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("i.pgm");
+        f.to_pgm(&path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        assert!(bytes.starts_with(b"P5\n2 2\n255\n"));
+        assert_eq!(bytes[bytes.len() - 4..], [0, 64, 128, 255]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,87 @@
+//! Crate-wide error type.
+//!
+//! Decode-side failures are deliberately fine-grained: the fault-injection
+//! experiments (paper §6.4, Table 3 "core-dump segmentation faults") need to
+//! distinguish *crash-equivalent* malformed-state aborts from clean errors.
+
+use thiserror::Error;
+
+/// All the ways compression/decompression and the surrounding system fail.
+#[derive(Debug, Error)]
+pub enum Error {
+    /// Archive is structurally invalid (bad magic, truncated sections...).
+    #[error("malformed archive: {0}")]
+    Format(String),
+
+    /// A Huffman code fell outside the constructed table — the classic
+    /// symptom of a corrupted bin array (paper: causes segfaults in SZ).
+    #[error("huffman decode error: {0}")]
+    HuffmanDecode(String),
+
+    /// Decoded state implies an out-of-range access; in unprotected C this
+    /// would be the "core-dump segmentation fault" of Table 3.
+    #[error("crash-equivalent fault: {0}")]
+    CrashEquivalent(String),
+
+    /// An SDC was detected during compression and could not be corrected.
+    #[error("uncorrectable SDC detected: {0}")]
+    Sdc(String),
+
+    /// SDC detected at decompression even after block re-execution — the
+    /// paper's "SDC in compression" terminal report (Alg. 2 line 19).
+    #[error("SDC happened during compression; archive is corrupt: {0}")]
+    SdcInCompression(String),
+
+    /// Configuration rejected.
+    #[error("invalid configuration: {0}")]
+    Config(String),
+
+    /// Requested region/shape mismatch.
+    #[error("invalid argument: {0}")]
+    InvalidArgument(String),
+
+    /// Lossless backend failure.
+    #[error("lossless codec: {0}")]
+    Lossless(String),
+
+    /// PJRT / XLA runtime failure.
+    #[error("xla runtime: {0}")]
+    Runtime(String),
+
+    /// Underlying I/O failure.
+    #[error(transparent)]
+    Io(#[from] std::io::Error),
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+impl Error {
+    /// True when the error models an abort that would crash unprotected C
+    /// code (used by the injection harness to classify outcomes).
+    pub fn is_crash_equivalent(&self) -> bool {
+        matches!(
+            self,
+            Error::CrashEquivalent(_) | Error::HuffmanDecode(_)
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crash_classification() {
+        assert!(Error::HuffmanDecode("x".into()).is_crash_equivalent());
+        assert!(Error::CrashEquivalent("x".into()).is_crash_equivalent());
+        assert!(!Error::Sdc("x".into()).is_crash_equivalent());
+        assert!(!Error::Format("x".into()).is_crash_equivalent());
+    }
+
+    #[test]
+    fn display_messages() {
+        let e = Error::SdcInCompression("block 3".into());
+        assert!(e.to_string().contains("block 3"));
+    }
+}

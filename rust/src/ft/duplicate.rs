@@ -1,0 +1,68 @@
+//! Selective instruction duplication (paper §5.2 + §4.1 analysis).
+//!
+//! Only two computations in the whole compressor are fragile to transient
+//! computation errors — data prediction (Fig. 1(a) line 2) and
+//! reconstruction of the decompressed value (line 6); everything else is
+//! either naturally resilient (type-2 "unpredictable fallback" behaviour)
+//! or only costs compression ratio. Those two sites are evaluated twice;
+//! a bitwise mismatch triggers a third, clean evaluation (2-of-3 voting
+//! with a deterministic re-execution as the tie-breaker).
+//!
+//! The duplicate evaluations keep the *identical* floating-point operation
+//! order but launder every operand through `std::hint::black_box`, which
+//! stops the optimizer from collapsing the two evaluations into one —
+//! the same goal the paper achieves in C by reordering the additions
+//! (§6.1), minus the false mismatches that reordering would cause under
+//! bitwise comparison in IEEE-754 arithmetic.
+
+/// Compare a (possibly faulted) primary evaluation against its duplicate;
+/// on mismatch, count the catch and return a clean re-execution.
+#[inline]
+pub fn protected_eval(primary: f32, duplicate: f32, recompute: impl FnOnce() -> f32, catches: &mut u64) -> f32 {
+    if primary.to_bits() == duplicate.to_bits() {
+        primary
+    } else {
+        *catches += 1;
+        recompute()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn agreement_passes_through() {
+        let mut catches = 0;
+        let v = protected_eval(1.5, 1.5, || panic!("must not recompute"), &mut catches);
+        assert_eq!(v, 1.5);
+        assert_eq!(catches, 0);
+    }
+
+    #[test]
+    fn mismatch_triggers_clean_recomputation() {
+        let mut catches = 0;
+        let v = protected_eval(1.5, 2.5, || 2.5, &mut catches);
+        assert_eq!(v, 2.5);
+        assert_eq!(catches, 1);
+    }
+
+    #[test]
+    fn nan_corruption_is_caught() {
+        // NaN != NaN numerically, but bit comparison still detects the flip
+        let mut catches = 0;
+        let clean = f32::NAN;
+        let corrupt = f32::from_bits(clean.to_bits() ^ 1);
+        let v = protected_eval(corrupt, clean, || clean, &mut catches);
+        assert_eq!(v.to_bits(), clean.to_bits());
+        assert_eq!(catches, 1);
+    }
+
+    #[test]
+    fn identical_nan_bits_agree() {
+        let mut catches = 0;
+        let v = protected_eval(f32::NAN, f32::NAN, || unreachable!(), &mut catches);
+        assert!(v.is_nan());
+        assert_eq!(catches, 0);
+    }
+}

@@ -1,0 +1,121 @@
+//! **ftrsz** — the fault-tolerant engine (paper Algorithms 1 & 2).
+//!
+//! A thin facade over [`crate::compressor::engine`]'s parameterized core
+//! with both protections on:
+//!
+//! * instruction duplication at the two fragile computation sites;
+//! * per-block input checksums, verified and corrected right before each
+//!   block is predicted;
+//! * per-block quantization-bin checksums, verified and corrected before
+//!   Huffman encoding;
+//! * per-block decompressed-data checksums (`sum_dc[]`) stored
+//!   Zstd-compressed inside the archive and re-verified at decompression,
+//!   with random-access block re-execution as the repair action.
+
+use crate::compressor::engine::{
+    self, compress_core, decompress_core, CoreOutput, CoreParams, Decompressed, DecompressHooks,
+    Hooks, NoDecompressHooks, NoHooks,
+};
+use crate::compressor::CompressionConfig;
+use crate::data::Dims;
+use crate::error::Result;
+use crate::ft::report::DecompressReport;
+
+/// FT core switches (duplication + checksums on).
+pub const FT_PARAMS: CoreParams = CoreParams { protect: true, ft: true };
+
+/// Compress with full fault tolerance (Algorithm 1).
+pub fn compress(data: &[f32], dims: Dims, cfg: &CompressionConfig) -> Result<Vec<u8>> {
+    Ok(compress_core(data, dims, cfg, FT_PARAMS, &mut NoHooks)?.archive)
+}
+
+/// Compress with injection hooks; returns archive + stats + SDC events.
+pub fn compress_with_hooks<H: Hooks>(
+    data: &[f32],
+    dims: Dims,
+    cfg: &CompressionConfig,
+    hooks: &mut H,
+) -> Result<CoreOutput> {
+    compress_core(data, dims, cfg, FT_PARAMS, hooks)
+}
+
+/// Decompress with per-block verification (Algorithm 2). Errors with
+/// [`crate::Error::SdcInCompression`] when a block fails verification even
+/// after re-execution.
+pub fn decompress(bytes: &[u8]) -> Result<Decompressed> {
+    Ok(decompress_core(bytes, &mut NoDecompressHooks, true)?.0)
+}
+
+/// Decompress with verification, injection hooks, and a full report.
+pub fn decompress_verbose<H: DecompressHooks>(
+    bytes: &[u8],
+    hooks: &mut H,
+) -> Result<(Decompressed, DecompressReport)> {
+    decompress_core(bytes, hooks, true)
+}
+
+/// Decompress *without* verification (ablation: measures what the
+/// checksums cost at decompression time).
+pub fn decompress_unverified(bytes: &[u8]) -> Result<Decompressed> {
+    engine::decompress(bytes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compressor::ErrorBound;
+    use crate::data::synthetic;
+    use crate::ft::report::SdcKind;
+
+    fn cfg(e: f64) -> CompressionConfig {
+        CompressionConfig::new(ErrorBound::Abs(e)).with_block_size(8)
+    }
+
+    #[test]
+    fn ft_roundtrip_bound_holds() {
+        let f = synthetic::hurricane_field("t", Dims::d3(10, 16, 16), 1);
+        let bytes = compress(&f.data, f.dims, &cfg(1e-3)).unwrap();
+        let dec = decompress(&bytes).unwrap();
+        assert!(crate::analysis::max_abs_err(&f.data, &dec.data) <= 1e-3);
+    }
+
+    #[test]
+    fn ft_archive_flags_and_fallback_decode() {
+        let f = synthetic::nyx_velocity("v", Dims::d3(8, 8, 8), 2);
+        let bytes = compress(&f.data, f.dims, &cfg(1e-2)).unwrap();
+        // plain engine can still read an ft archive (ignores checksums)
+        let dec = decompress_unverified(&bytes).unwrap();
+        assert!(crate::analysis::max_abs_err(&f.data, &dec.data) <= 1e-2);
+    }
+
+    #[test]
+    fn verifying_non_ft_archive_is_an_error() {
+        let f = synthetic::nyx_velocity("v", Dims::d3(8, 8, 8), 2);
+        let bytes =
+            crate::compressor::engine::compress(&f.data, f.dims, &cfg(1e-2)).unwrap();
+        assert!(decompress(&bytes).is_err());
+    }
+
+    #[test]
+    fn ft_and_rsz_produce_identical_decompressions() {
+        // protection must not change the numerics, only guard them
+        let f = synthetic::scale_letkf_field("q", Dims::d3(6, 12, 12), 3);
+        let a = crate::compressor::engine::compress(&f.data, f.dims, &cfg(1e-3)).unwrap();
+        let b = compress(&f.data, f.dims, &cfg(1e-3)).unwrap();
+        let da = crate::compressor::engine::decompress(&a).unwrap();
+        let db = decompress(&b).unwrap();
+        assert_eq!(
+            da.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            db.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn clean_run_reports_clean() {
+        let f = synthetic::nyx_velocity("v", Dims::d3(8, 8, 8), 4);
+        let bytes = compress(&f.data, f.dims, &cfg(1e-3)).unwrap();
+        let (_, report) = decompress_verbose(&bytes, &mut NoDecompressHooks).unwrap();
+        assert!(report.is_clean());
+        assert_eq!(report.count(SdcKind::DecompCorrected), 0);
+    }
+}

@@ -1,0 +1,19 @@
+//! Fault-tolerance layer — the paper's contribution (§5).
+//!
+//! * [`checksum`] — integer-reinterpretation ABFT checksums: detect, locate
+//!   and correct single corrupted 32-bit words (paper §3.2, §5.4);
+//! * [`duplicate`] — selective instruction duplication around the two
+//!   fragile computations identified by the §4.1 analysis (prediction and
+//!   decompressed-value reconstruction);
+//! * [`ftengine`] — **ftrsz**: Algorithm 1 (soft-error-resilient
+//!   compression) and Algorithm 2 (resilient decompression with per-block
+//!   verification and random-access re-execution);
+//! * [`report`] — SDC event classification for the injection experiments.
+
+pub mod checksum;
+pub mod duplicate;
+pub mod ftengine;
+pub mod report;
+
+pub use ftengine::{compress, compress_with_hooks, decompress, decompress_verbose};
+pub use report::{DecompressReport, SdcEvent};

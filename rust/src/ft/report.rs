@@ -1,0 +1,69 @@
+//! SDC event classification and reporting.
+//!
+//! The injection experiments (Table 3, Fig. 6) need machine-readable
+//! outcomes: what was detected, where, and whether it was repaired.
+
+/// What kind of SDC event the FT machinery observed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SdcKind {
+    /// Input memory error detected and repaired (Alg. 1 l. 11).
+    InputCorrected,
+    /// Input memory error detected but not repairable (multi-error).
+    InputUncorrectable,
+    /// Quantization-bin memory error detected and repaired (Alg. 1 l. 35).
+    BinCorrected,
+    /// Bin memory error detected but not repairable.
+    BinUncorrectable,
+    /// Decompression-time error detected, block re-executed successfully
+    /// (Alg. 2 l. 17).
+    DecompCorrected,
+}
+
+/// One observed SDC event.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SdcEvent {
+    /// Event class.
+    pub kind: SdcKind,
+    /// Block where it occurred.
+    pub block: usize,
+    /// Corrected word index within the block (0 when not applicable).
+    pub index: usize,
+}
+
+/// Summary of a fault-tolerant decompression run.
+#[derive(Debug, Clone, Default)]
+pub struct DecompressReport {
+    /// Events in block order.
+    pub events: Vec<SdcEvent>,
+    /// Blocks that needed random-access re-execution.
+    pub blocks_reexecuted: usize,
+}
+
+impl DecompressReport {
+    /// True when nothing was detected.
+    pub fn is_clean(&self) -> bool {
+        self.events.is_empty() && self.blocks_reexecuted == 0
+    }
+
+    /// Count events of one kind.
+    pub fn count(&self, kind: SdcKind) -> usize {
+        self.events.iter().filter(|e| e.kind == kind).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_counting() {
+        let mut r = DecompressReport::default();
+        assert!(r.is_clean());
+        r.events.push(SdcEvent { kind: SdcKind::DecompCorrected, block: 3, index: 0 });
+        r.events.push(SdcEvent { kind: SdcKind::BinCorrected, block: 1, index: 7 });
+        r.blocks_reexecuted = 1;
+        assert!(!r.is_clean());
+        assert_eq!(r.count(SdcKind::DecompCorrected), 1);
+        assert_eq!(r.count(SdcKind::InputCorrected), 0);
+    }
+}

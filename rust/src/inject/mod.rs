@@ -1,0 +1,26 @@
+//! Fault-injection framework (paper §6.1.2).
+//!
+//! Two evaluation modes, matching the paper:
+//!
+//! * [`mode_a`] — source-level targeted injection into the dominant data
+//!   structures: input array bit-flips (after the input checksums are
+//!   taken, exactly like the paper), quantization-bin bit-flips, and
+//!   computation errors in the prediction-preparation stage / the fragile
+//!   prediction and reconstruction sites / decompression;
+//! * [`mode_b`] — whole-memory injection: the BLCR checkpoint-based (CFI)
+//!   substitute. Every dominant live buffer is reachable through the
+//!   engine's between-blocks [`crate::compressor::engine::Arena`]; a
+//!   scheduled flip picks a random buffer (weighted by its current byte
+//!   size) at a random progress point. A flip scheduled "before time zero"
+//!   corrupts the input before checksumming — reproducing the paper's
+//!   residual ~8% failure window (Fig. 6 analysis).
+//!
+//! [`outcome`] classifies a full compress→decompress run the way the
+//! paper's tables do: crash-equivalent abort, detected-but-unrecoverable,
+//! silently incorrect, or correct within the bound.
+
+pub mod mode_a;
+pub mod mode_b;
+pub mod outcome;
+
+pub use outcome::{classify, run_and_classify, Engine, Outcome};

@@ -1,0 +1,302 @@
+//! Mode A: source-level targeted fault injection (paper §6.1.2-A).
+
+use crate::compressor::engine::{DecompressHooks, Hooks};
+use crate::util::rng::Pcg32;
+
+/// Flip one random bit of one random input element, *after* the input
+/// checksums were taken (the paper's injection point for input memory
+/// errors).
+#[derive(Debug)]
+pub struct InputBitFlip {
+    rng: Pcg32,
+    /// Number of flips to apply (paper: usually 1).
+    pub n_flips: usize,
+    /// (index, bit) actually flipped, for assertions.
+    pub applied: Vec<(usize, u32)>,
+}
+
+impl InputBitFlip {
+    /// New injector with a seed.
+    pub fn new(seed: u64, n_flips: usize) -> Self {
+        Self { rng: Pcg32::new(seed), n_flips, applied: Vec::new() }
+    }
+}
+
+impl Hooks for InputBitFlip {
+    fn on_input_ready(&mut self, input: &mut [f32]) {
+        for _ in 0..self.n_flips {
+            let idx = self.rng.index(input.len());
+            let bit = self.rng.index(32) as u32;
+            input[idx] = f32::from_bits(input[idx].to_bits() ^ (1 << bit));
+            self.applied.push((idx, bit));
+        }
+    }
+}
+
+/// Flip one random bit of one random quantization code in one random block
+/// (the bin-array memory error of Table 3).
+#[derive(Debug)]
+pub struct BinBitFlip {
+    rng: Pcg32,
+    /// Block to strike (chosen up front, uniform over blocks).
+    pub target_block: usize,
+    /// Restrict flips to the low `bit_width` bits (32 = full word). The
+    /// paper flips any bit of the int; high-bit flips are what produce the
+    /// "fresh value beyond the Huffman tree" segfaults.
+    pub bit_width: u32,
+    /// (point, bit) applied.
+    pub applied: Option<(usize, u32)>,
+}
+
+impl BinBitFlip {
+    /// New injector; `n_blocks` must match the upcoming run's block count.
+    pub fn new(seed: u64, n_blocks: usize) -> Self {
+        let mut rng = Pcg32::new(seed);
+        let target_block = rng.index(n_blocks.max(1));
+        Self { rng, target_block, bit_width: 32, applied: None }
+    }
+}
+
+impl Hooks for BinBitFlip {
+    fn on_block_codes(&mut self, block: usize, codes: &mut [u32]) {
+        if block == self.target_block && !codes.is_empty() && self.applied.is_none() {
+            let p = self.rng.index(codes.len());
+            let bit = self.rng.index(self.bit_width as usize) as u32;
+            codes[p] ^= 1 << bit;
+            self.applied = Some((p, bit));
+        }
+    }
+}
+
+/// Computation errors in the prediction-preparation stage (regression
+/// coefficients / sampled error estimates) — Fig. 7's experiment: these are
+/// *naturally resilient*, affecting only the ratio.
+#[derive(Debug)]
+pub struct EstimationFault {
+    rng: Pcg32,
+    /// Blocks to strike (chosen up front).
+    pub targets: Vec<usize>,
+    /// Number applied.
+    pub applied: usize,
+}
+
+impl EstimationFault {
+    /// Strike `n_errors` distinct random blocks out of `n_blocks`.
+    pub fn new(seed: u64, n_blocks: usize, n_errors: usize) -> Self {
+        let mut rng = Pcg32::new(seed);
+        let mut targets = Vec::new();
+        while targets.len() < n_errors.min(n_blocks) {
+            let b = rng.index(n_blocks);
+            if !targets.contains(&b) {
+                targets.push(b);
+            }
+        }
+        Self { rng, targets, applied: 0 }
+    }
+}
+
+impl Hooks for EstimationFault {
+    fn corrupt_estimation(
+        &mut self,
+        block: usize,
+        mut coeffs: [f32; 4],
+        mut e_lor: f64,
+        mut e_reg: f64,
+    ) -> ([f32; 4], f64, f64) {
+        if self.targets.contains(&block) {
+            self.applied += 1;
+            // flip a random bit in either a coefficient or an estimate
+            match self.rng.index(3) {
+                0 => {
+                    let i = self.rng.index(4);
+                    let bit = self.rng.index(32) as u32;
+                    coeffs[i] = f32::from_bits(coeffs[i].to_bits() ^ (1 << bit));
+                }
+                1 => {
+                    let bit = self.rng.index(63) as u32;
+                    e_lor = f64::from_bits(e_lor.to_bits() ^ (1 << bit));
+                }
+                _ => {
+                    let bit = self.rng.index(63) as u32;
+                    e_reg = f64::from_bits(e_reg.to_bits() ^ (1 << bit));
+                }
+            }
+        }
+        (coeffs, e_lor, e_reg)
+    }
+}
+
+/// Transient computation error at the prediction site (Fig. 1(a) line 2):
+/// perturbs the *first* evaluation of one randomly chosen point. Under
+/// ftrsz the instruction duplicate catches it; under sz/rsz it silently
+/// corrupts the archive (Case 1 Situation 2 of §4.1.2).
+#[derive(Debug)]
+pub struct PredFault {
+    /// Target (block, point-within-run-of-that-block).
+    pub target_block: usize,
+    /// Point index within the block.
+    pub target_point: usize,
+    /// Bit to flip in the predicted value.
+    pub bit: u32,
+    /// Whether it fired.
+    pub applied: bool,
+}
+
+impl PredFault {
+    /// Strike a random point of a random block.
+    pub fn new(seed: u64, n_blocks: usize, block_len: usize) -> Self {
+        let mut rng = Pcg32::new(seed);
+        Self {
+            target_block: rng.index(n_blocks.max(1)),
+            target_point: rng.index(block_len.max(1)),
+            bit: rng.index(32) as u32,
+            applied: false,
+        }
+    }
+}
+
+impl Hooks for PredFault {
+    fn corrupt_pred(&mut self, block: usize, point: usize, pred: f32) -> f32 {
+        if !self.applied && block == self.target_block && point == self.target_point {
+            self.applied = true;
+            return f32::from_bits(pred.to_bits() ^ (1 << self.bit));
+        }
+        pred
+    }
+}
+
+/// Transient computation error at the reconstruction site (line 6).
+#[derive(Debug)]
+pub struct DcmpFault {
+    /// Target block.
+    pub target_block: usize,
+    /// Point within the block.
+    pub target_point: usize,
+    /// Bit to flip. Low mantissa bits model the dangerous "slight change
+    /// that skips the double-check" of Case 3 Situation 2.
+    pub bit: u32,
+    /// Whether it fired.
+    pub applied: bool,
+}
+
+impl DcmpFault {
+    /// Strike a random point; `low_bits_only` keeps the perturbation below
+    /// the double-check threshold (the silent-corruption scenario).
+    pub fn new(seed: u64, n_blocks: usize, block_len: usize, low_bits_only: bool) -> Self {
+        let mut rng = Pcg32::new(seed);
+        Self {
+            target_block: rng.index(n_blocks.max(1)),
+            target_point: rng.index(block_len.max(1)),
+            bit: if low_bits_only { rng.index(10) as u32 } else { rng.index(32) as u32 },
+            applied: false,
+        }
+    }
+}
+
+impl Hooks for DcmpFault {
+    fn corrupt_dcmp(&mut self, block: usize, point: usize, dcmp: f32) -> f32 {
+        if !self.applied && block == self.target_block && point == self.target_point {
+            self.applied = true;
+            return f32::from_bits(dcmp.to_bits() ^ (1 << self.bit));
+        }
+        dcmp
+    }
+}
+
+/// Decompression-time computation error (§6.4.4): perturb one predicted
+/// value in one block during the *first* decode pass.
+#[derive(Debug)]
+pub struct DecompFault {
+    /// Target block.
+    pub target_block: usize,
+    /// Point within the block.
+    pub target_point: usize,
+    /// Bit to flip.
+    pub bit: u32,
+    /// Whether it fired.
+    pub applied: bool,
+}
+
+impl DecompFault {
+    /// Strike a random point of a random block.
+    pub fn new(seed: u64, n_blocks: usize, block_len: usize) -> Self {
+        let mut rng = Pcg32::new(seed);
+        Self {
+            target_block: rng.index(n_blocks.max(1)),
+            target_point: rng.index(block_len.max(1)),
+            bit: rng.index(32) as u32,
+            applied: false,
+        }
+    }
+}
+
+impl DecompressHooks for DecompFault {
+    fn corrupt_pred(&mut self, block: usize, point: usize, pred: f32) -> f32 {
+        if !self.applied && block == self.target_block && point == self.target_point {
+            self.applied = true;
+            return f32::from_bits(pred.to_bits() ^ (1 << self.bit));
+        }
+        pred
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compressor::engine::Hooks;
+
+    #[test]
+    fn input_flip_applies_exactly_n() {
+        let mut inj = InputBitFlip::new(1, 2);
+        let mut data = vec![1.0f32; 100];
+        inj.on_input_ready(&mut data);
+        assert_eq!(inj.applied.len(), 2);
+        let changed = data.iter().filter(|v| v.to_bits() != 1.0f32.to_bits()).count();
+        assert!(changed >= 1 && changed <= 2); // same slot twice is possible
+    }
+
+    #[test]
+    fn bin_flip_strikes_only_target_block() {
+        let mut inj = BinBitFlip::new(3, 10);
+        let t = inj.target_block;
+        let mut codes = vec![5u32; 64];
+        for b in 0..10 {
+            if b != t {
+                inj.on_block_codes(b, &mut codes);
+                assert!(codes.iter().all(|&c| c == 5));
+            }
+        }
+        inj.on_block_codes(t, &mut codes);
+        assert_eq!(codes.iter().filter(|&&c| c != 5).count(), 1);
+        assert!(inj.applied.is_some());
+        // second visit must not flip again
+        let snapshot = codes.clone();
+        inj.on_block_codes(t, &mut codes);
+        assert_eq!(codes, snapshot);
+    }
+
+    #[test]
+    fn estimation_fault_hits_targets_once() {
+        let mut inj = EstimationFault::new(7, 20, 3);
+        assert_eq!(inj.targets.len(), 3);
+        let mut hit = 0;
+        for b in 0..20 {
+            let before = ([1.0f32; 4], 10.0, 20.0);
+            let after = inj.corrupt_estimation(b, before.0, before.1, before.2);
+            if after.0 != before.0 || after.1 != before.1 || after.2 != before.2 {
+                hit += 1;
+            }
+        }
+        assert_eq!(hit, 3);
+        assert_eq!(inj.applied, 3);
+    }
+
+    #[test]
+    fn pred_fault_fires_once() {
+        let mut inj = PredFault::new(5, 4, 100);
+        let (b, p) = (inj.target_block, inj.target_point);
+        let v = inj.corrupt_pred(b, p, 1.0);
+        assert_ne!(v.to_bits(), 1.0f32.to_bits());
+        assert_eq!(inj.corrupt_pred(b, p, 1.0), 1.0); // transient: once only
+    }
+}

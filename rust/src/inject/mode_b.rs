@@ -1,0 +1,221 @@
+//! Mode B: whole-memory fault injection — the BLCR/CFI substitute
+//! (paper §6.1.2-B).
+//!
+//! The paper checkpoints the entire process image at a random timestamp,
+//! flips a random bit in the dump, and restarts. The observable effect is
+//! "one random bit of some live buffer flips at a random time during
+//! compression". This injector reproduces exactly that over the engine's
+//! dominant data structures (the same structures §3.4 scopes the analysis
+//! to): at a scheduled progress point it picks a live buffer weighted by
+//! its *current* byte size and flips one random bit.
+//!
+//! A flip scheduled at `trigger == PRE_CHECKSUM` mutates the input before
+//! compression starts (before the checksums are taken) — the residual
+//! vulnerability window the paper measures as its ~8% failure share.
+
+use crate::compressor::engine::{Arena, Hooks};
+use crate::util::rng::Pcg32;
+
+/// Scheduled trigger meaning "before the input checksums".
+pub const PRE_CHECKSUM: isize = -1;
+
+/// Which buffer a flip landed in (for reporting).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Target {
+    /// The input array (pre-checksum window).
+    InputPreChecksum,
+    /// The input array (during compression).
+    Input,
+    /// Quantization codes produced so far.
+    Codes,
+    /// Unpredictable-value pool.
+    Unpred,
+    /// Regression coefficient table.
+    Coeffs,
+}
+
+/// One scheduled bit flip.
+#[derive(Debug, Clone)]
+pub struct ScheduledFlip {
+    /// Block-progress trigger (`PRE_CHECKSUM` = before compression).
+    pub trigger: isize,
+    /// Where it landed (filled after firing).
+    pub landed: Option<Target>,
+}
+
+/// The whole-arena injector.
+#[derive(Debug)]
+pub struct ArenaFlip {
+    rng: Pcg32,
+    /// Scheduled flips, sorted by trigger.
+    pub schedule: Vec<ScheduledFlip>,
+    next: usize,
+}
+
+impl ArenaFlip {
+    /// Schedule `n_errors` flips at uniform random progress points over
+    /// `n_blocks` blocks of compression. The pre-checksum window is modeled
+    /// as one extra "timestamp" slot, matching its relative duration being
+    /// tiny but nonzero (the paper's Fig. 6 discussion).
+    pub fn new(seed: u64, n_blocks: usize, n_errors: usize) -> Self {
+        let mut rng = Pcg32::new(seed);
+        let mut schedule: Vec<ScheduledFlip> = (0..n_errors)
+            .map(|_| {
+                // timestamps: -1 (pre-checksum) .. n_blocks-1; slot -1 gets
+                // a 1-in-(n_blocks+1) share
+                let t = rng.index(n_blocks + 1) as isize - 1;
+                ScheduledFlip { trigger: t, landed: None }
+            })
+            .collect();
+        schedule.sort_by_key(|f| f.trigger);
+        Self { rng, schedule, next: 0 }
+    }
+
+    /// Flip one random bit across the live buffers of `arena`.
+    fn strike(&mut self, arena: &mut Arena) -> Target {
+        // weights = current byte sizes
+        let w_input = arena.input.len() * 4;
+        let w_codes = arena.codes.len() * 4;
+        let w_unpred = arena.unpred.len() * 4;
+        let w_coeffs = arena.coeffs.len() * 16;
+        let total = (w_input + w_codes + w_unpred + w_coeffs).max(1);
+        let mut roll = self.rng.index(total);
+        let bit = self.rng.index(32) as u32;
+        if roll < w_input {
+            let i = roll / 4;
+            arena.input[i] = f32::from_bits(arena.input[i].to_bits() ^ (1 << bit));
+            return Target::Input;
+        }
+        roll -= w_input;
+        if roll < w_codes {
+            let i = roll / 4;
+            arena.codes[i] ^= 1 << bit;
+            return Target::Codes;
+        }
+        roll -= w_codes;
+        if roll < w_unpred {
+            let i = roll / 4;
+            arena.unpred[i] = f32::from_bits(arena.unpred[i].to_bits() ^ (1 << bit));
+            return Target::Unpred;
+        }
+        roll -= w_unpred;
+        let i = (roll / 16).min(arena.coeffs.len().saturating_sub(1));
+        let j = (roll / 4) % 4;
+        arena.coeffs[i][j] = f32::from_bits(arena.coeffs[i][j].to_bits() ^ (1 << bit));
+        Target::Coeffs
+    }
+
+    /// Apply any pre-checksum flips directly to the data (call this before
+    /// handing `data` to the engine).
+    pub fn apply_pre_checksum(&mut self, data: &mut [f32]) {
+        for f in self.schedule.iter_mut() {
+            if f.trigger == PRE_CHECKSUM && f.landed.is_none() {
+                let i = self.rng.index(data.len());
+                let bit = self.rng.index(32) as u32;
+                data[i] = f32::from_bits(data[i].to_bits() ^ (1 << bit));
+                f.landed = Some(Target::InputPreChecksum);
+                self.next += 1;
+            }
+        }
+    }
+
+    /// Number of flips that have fired.
+    pub fn fired(&self) -> usize {
+        self.schedule.iter().filter(|f| f.landed.is_some()).count()
+    }
+}
+
+impl Hooks for ArenaFlip {
+    fn on_progress(&mut self, arena: &mut Arena) {
+        while self.next < self.schedule.len()
+            && self.schedule[self.next].trigger <= arena.progress as isize
+        {
+            let t = self.strike(arena);
+            self.schedule[self.next].landed = Some(t);
+            self.next += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedule_is_sorted_and_fires_all() {
+        let mut inj = ArenaFlip::new(11, 50, 3);
+        assert!(inj.schedule.windows(2).all(|w| w[0].trigger <= w[1].trigger));
+        let mut input = vec![1.0f32; 1000];
+        inj.apply_pre_checksum(&mut input);
+        let mut codes = vec![0u32; 500];
+        let mut unpred = vec![0.0f32; 10];
+        let mut coeffs = vec![[0.0f32; 4]; 50];
+        for bi in 0..50 {
+            let mut arena = Arena {
+                progress: bi,
+                n_blocks: 50,
+                input: &mut input,
+                codes: &mut codes,
+                unpred: &mut unpred,
+                coeffs: &mut coeffs,
+            };
+            inj.on_progress(&mut arena);
+        }
+        assert_eq!(inj.fired(), 3);
+    }
+
+    #[test]
+    fn strikes_mutate_exactly_one_bit() {
+        let mut inj = ArenaFlip::new(5, 10, 1);
+        // force a during-compression trigger
+        inj.schedule[0].trigger = inj.schedule[0].trigger.max(0);
+        let mut input = vec![1.0f32; 64];
+        let snapshot: Vec<u32> = input.iter().map(|v| v.to_bits()).collect();
+        let mut codes = vec![7u32; 64];
+        let codes_snap = codes.clone();
+        let mut unpred: Vec<f32> = vec![];
+        let mut coeffs = vec![[0.5f32; 4]; 8];
+        let coeffs_snap = coeffs.clone();
+        for bi in 0..10 {
+            let mut arena = Arena {
+                progress: bi,
+                n_blocks: 10,
+                input: &mut input,
+                codes: &mut codes,
+                unpred: &mut unpred,
+                coeffs: &mut coeffs,
+            };
+            inj.on_progress(&mut arena);
+        }
+        let input_diff: u32 = input
+            .iter()
+            .zip(&snapshot)
+            .map(|(v, s)| (v.to_bits() ^ s).count_ones())
+            .sum();
+        let codes_diff: u32 =
+            codes.iter().zip(&codes_snap).map(|(a, b)| (a ^ b).count_ones()).sum();
+        let coeffs_diff: u32 = coeffs
+            .iter()
+            .zip(&coeffs_snap)
+            .flat_map(|(a, b)| a.iter().zip(b.iter()))
+            .map(|(x, y)| (x.to_bits() ^ y.to_bits()).count_ones())
+            .sum();
+        assert_eq!(input_diff + codes_diff + coeffs_diff, 1);
+    }
+
+    #[test]
+    fn pre_checksum_flips_hit_before_engine() {
+        // seed hunting: find a seed whose single flip lands pre-checksum
+        for seed in 0..200 {
+            let mut inj = ArenaFlip::new(seed, 4, 1);
+            if inj.schedule[0].trigger == PRE_CHECKSUM {
+                let mut data = vec![1.0f32; 32];
+                inj.apply_pre_checksum(&mut data);
+                assert_eq!(inj.fired(), 1);
+                assert!(data.iter().any(|v| v.to_bits() != 1.0f32.to_bits()));
+                return;
+            }
+        }
+        panic!("no pre-checksum schedule found in 200 seeds");
+    }
+}

@@ -1,0 +1,144 @@
+//! Run-outcome classification — the paper's Table 3 / Fig. 6 metrics.
+
+use crate::compressor::engine::{self, Decompressed, Hooks};
+use crate::compressor::{classic, CompressionConfig};
+use crate::data::Dims;
+use crate::error::{Error, Result};
+use crate::ft;
+
+/// Which engine a run uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Engine {
+    /// Classic dependent-block baseline ("sz").
+    Classic,
+    /// Independent-block engine ("rsz").
+    RandomAccess,
+    /// Fault-tolerant engine ("ftrsz").
+    FaultTolerant,
+}
+
+impl Engine {
+    /// Paper name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Engine::Classic => "sz",
+            Engine::RandomAccess => "rsz",
+            Engine::FaultTolerant => "ftrsz",
+        }
+    }
+}
+
+/// Outcome of one injected run (paper Table 3 columns).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Outcome {
+    /// Completed; decompressed data within the bound of the pristine input.
+    Correct,
+    /// Completed without crash, but the output violates the bound silently.
+    Incorrect,
+    /// The FT machinery detected an unrecoverable SDC and reported it
+    /// (Alg. 2 line 19) — a *safe* failure, unlike `Incorrect`.
+    Detected,
+    /// Crash-equivalent abort (the segfault column of Table 3).
+    Crash,
+}
+
+/// Classify a finished run against the pristine input.
+pub fn classify(original: &[f32], bound: f64, result: Result<Decompressed>) -> Outcome {
+    match result {
+        Ok(dec) => {
+            if dec.data.len() != original.len() {
+                return Outcome::Incorrect;
+            }
+            // pointwise: bit-identical (covers verbatim NaN/Inf round-trips)
+            // or within the bound; NaN poisoning fails both arms.
+            let ok = original.iter().zip(&dec.data).all(|(a, b)| {
+                a.to_bits() == b.to_bits() || (*a as f64 - *b as f64).abs() <= bound
+            });
+            if ok {
+                Outcome::Correct
+            } else {
+                Outcome::Incorrect
+            }
+        }
+        Err(e) if e.is_crash_equivalent() => Outcome::Crash,
+        Err(Error::SdcInCompression(_)) | Err(Error::Sdc(_)) => Outcome::Detected,
+        Err(_) => Outcome::Crash, // malformed archives abort unprotected runs too
+    }
+}
+
+/// Run one compress→decompress cycle with `hooks` on the chosen engine and
+/// classify the result. `data` is the pristine input (hooks may corrupt the
+/// engine's working copy, never this slice).
+pub fn run_and_classify<H: Hooks>(
+    engine_kind: Engine,
+    data: &[f32],
+    dims: Dims,
+    cfg: &CompressionConfig,
+    hooks: &mut H,
+) -> Outcome {
+    let bound = cfg.error_bound.absolute(data);
+    let result: Result<Decompressed> = (|| match engine_kind {
+        Engine::Classic => {
+            let bytes = classic::compress_with_hooks(data, dims, cfg, hooks)?;
+            classic::decompress(&bytes)
+        }
+        Engine::RandomAccess => {
+            let out = engine::compress_with_hooks(data, dims, cfg, hooks)?;
+            engine::decompress(&out.archive)
+        }
+        Engine::FaultTolerant => {
+            let out = ft::compress_with_hooks(data, dims, cfg, hooks)?;
+            ft::decompress(&out.archive)
+        }
+    })();
+    classify(data, bound, result)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compressor::engine::NoHooks;
+    use crate::compressor::ErrorBound;
+    use crate::data::synthetic;
+
+    fn cfg() -> CompressionConfig {
+        CompressionConfig::new(ErrorBound::Abs(1e-3)).with_block_size(8)
+    }
+
+    #[test]
+    fn clean_runs_are_correct_on_all_engines() {
+        let f = synthetic::hurricane_field("t", Dims::d3(8, 12, 12), 1);
+        for e in [Engine::Classic, Engine::RandomAccess, Engine::FaultTolerant] {
+            let o = run_and_classify(e, &f.data, f.dims, &cfg(), &mut NoHooks);
+            assert_eq!(o, Outcome::Correct, "engine {}", e.name());
+        }
+    }
+
+    #[test]
+    fn classify_edge_cases() {
+        let orig = vec![0.0f32; 4];
+        // bound violation
+        let bad = Decompressed {
+            data: vec![1.0f32; 4],
+            dims: Dims::d1(4),
+            error_bound: 1e-3,
+        };
+        assert_eq!(classify(&orig, 1e-3, Ok(bad)), Outcome::Incorrect);
+        // NaN poisoning
+        let nan = Decompressed {
+            data: vec![f32::NAN; 4],
+            dims: Dims::d1(4),
+            error_bound: 1e-3,
+        };
+        assert_eq!(classify(&orig, 1e-3, Ok(nan)), Outcome::Incorrect);
+        // crash classification
+        assert_eq!(
+            classify(&orig, 1e-3, Err(Error::HuffmanDecode("x".into()))),
+            Outcome::Crash
+        );
+        assert_eq!(
+            classify(&orig, 1e-3, Err(Error::SdcInCompression("b".into()))),
+            Outcome::Detected
+        );
+    }
+}

@@ -1,0 +1,9 @@
+//! I/O substrate: the simulated parallel filesystem (Fig. 8's testbed
+//! replacement) and a real file-per-process POSIX writer for the
+//! end-to-end examples.
+
+pub mod pfs;
+pub mod posix;
+
+pub use pfs::SimulatedPfs;
+pub use posix::FilePerProcess;

@@ -1,0 +1,98 @@
+//! Simulated parallel filesystem (PFS) — the Fig. 8 substrate.
+//!
+//! The paper's weak-scaling experiment runs 256–2,048 ranks writing
+//! file-per-process to a production PFS and observes that total dump time
+//! is dominated by the I/O bottleneck, which is why the FT overhead almost
+//! vanishes end-to-end (≤7.3% at 2,048 cores). The mechanism is purely
+//! bandwidth arithmetic: `R` concurrent writers share an aggregate
+//! bandwidth `B`, so wall time for equal shards is
+//!
+//! ```text
+//! t_write = t_open + ceil_share(bytes · R / B)
+//! ```
+//!
+//! This model reproduces exactly that mechanism with two parameters
+//! (aggregate bandwidth, per-file latency) — see DESIGN.md §Substitutions.
+//! Defaults approximate a mid-size Lustre installation (100 GB/s, 2 ms
+//! opens), and the Fig. 8 bench sweeps them.
+
+/// Shared-bandwidth PFS model.
+#[derive(Debug, Clone)]
+pub struct SimulatedPfs {
+    /// Aggregate bandwidth, bytes/second, shared by all concurrent clients.
+    pub aggregate_bandwidth: f64,
+    /// Per-file open/close latency, seconds.
+    pub per_file_latency: f64,
+}
+
+impl Default for SimulatedPfs {
+    fn default() -> Self {
+        Self { aggregate_bandwidth: 100e9, per_file_latency: 2e-3 }
+    }
+}
+
+impl SimulatedPfs {
+    /// New model.
+    pub fn new(aggregate_bandwidth: f64, per_file_latency: f64) -> Self {
+        assert!(aggregate_bandwidth > 0.0);
+        Self { aggregate_bandwidth, per_file_latency }
+    }
+
+    /// Wall time for `ranks` concurrent writers, each writing
+    /// `bytes_per_rank` to its own file.
+    pub fn write_time(&self, bytes_per_rank: u64, ranks: usize) -> f64 {
+        if ranks == 0 {
+            return 0.0;
+        }
+        let total = bytes_per_rank as f64 * ranks as f64;
+        self.per_file_latency + total / self.aggregate_bandwidth
+    }
+
+    /// Wall time for `ranks` concurrent readers (symmetric model).
+    pub fn read_time(&self, bytes_per_rank: u64, ranks: usize) -> f64 {
+        self.write_time(bytes_per_rank, ranks)
+    }
+
+    /// Effective per-rank bandwidth at a given scale.
+    pub fn per_rank_bandwidth(&self, ranks: usize) -> f64 {
+        self.aggregate_bandwidth / ranks.max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scales_linearly_with_ranks_and_bytes() {
+        let pfs = SimulatedPfs::new(1e9, 0.0);
+        let t1 = pfs.write_time(1_000_000, 256);
+        let t2 = pfs.write_time(1_000_000, 512);
+        let t3 = pfs.write_time(2_000_000, 256);
+        assert!((t2 / t1 - 2.0).abs() < 1e-9);
+        assert!((t3 / t1 - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn latency_floor() {
+        let pfs = SimulatedPfs::new(1e12, 5e-3);
+        let t = pfs.write_time(10, 1);
+        assert!(t >= 5e-3);
+    }
+
+    #[test]
+    fn smaller_payload_wins_at_scale() {
+        // the whole point of compression under an I/O bottleneck: bytes
+        // dominate, so a 10x-smaller payload is ~10x faster to dump
+        let pfs = SimulatedPfs::default();
+        let raw = pfs.write_time(3 << 30, 2048);
+        let compressed = pfs.write_time((3 << 30) / 10, 2048);
+        assert!(raw / compressed > 8.0);
+    }
+
+    #[test]
+    fn read_is_symmetric() {
+        let pfs = SimulatedPfs::default();
+        assert_eq!(pfs.read_time(123, 7), pfs.write_time(123, 7));
+    }
+}

@@ -1,0 +1,81 @@
+//! Real file-per-process POSIX I/O (the paper's §6.1.3 I/O mode) for the
+//! end-to-end examples: each rank writes `rank_<i>.ftsz` into a run
+//! directory.
+
+use std::path::{Path, PathBuf};
+
+use crate::error::Result;
+
+/// File-per-process writer rooted at a run directory.
+#[derive(Debug, Clone)]
+pub struct FilePerProcess {
+    root: PathBuf,
+}
+
+impl FilePerProcess {
+    /// Create (and mkdir -p) a writer rooted at `root`.
+    pub fn new(root: impl AsRef<Path>) -> Result<Self> {
+        std::fs::create_dir_all(root.as_ref())?;
+        Ok(Self { root: root.as_ref().to_path_buf() })
+    }
+
+    /// Path of one rank's file.
+    pub fn rank_path(&self, rank: usize) -> PathBuf {
+        self.root.join(format!("rank_{rank:05}.ftsz"))
+    }
+
+    /// Write one rank's archive.
+    pub fn write(&self, rank: usize, bytes: &[u8]) -> Result<()> {
+        std::fs::write(self.rank_path(rank), bytes)?;
+        Ok(())
+    }
+
+    /// Read one rank's archive.
+    pub fn read(&self, rank: usize) -> Result<Vec<u8>> {
+        Ok(std::fs::read(self.rank_path(rank))?)
+    }
+
+    /// Total bytes across all rank files present.
+    pub fn total_bytes(&self) -> Result<u64> {
+        let mut total = 0;
+        for entry in std::fs::read_dir(&self.root)? {
+            let entry = entry?;
+            if entry.path().extension().is_some_and(|e| e == "ftsz") {
+                total += entry.metadata()?.len();
+            }
+        }
+        Ok(total)
+    }
+
+    /// Remove the run directory.
+    pub fn cleanup(&self) -> Result<()> {
+        std::fs::remove_dir_all(&self.root)?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn write_read_roundtrip_and_totals() {
+        let root = std::env::temp_dir().join(format!("ftsz_fpp_{}", std::process::id()));
+        let fpp = FilePerProcess::new(&root).unwrap();
+        fpp.write(0, b"alpha").unwrap();
+        fpp.write(1, b"bravo!").unwrap();
+        assert_eq!(fpp.read(0).unwrap(), b"alpha");
+        assert_eq!(fpp.read(1).unwrap(), b"bravo!");
+        assert_eq!(fpp.total_bytes().unwrap(), 11);
+        fpp.cleanup().unwrap();
+        assert!(!root.exists());
+    }
+
+    #[test]
+    fn missing_rank_errors() {
+        let root = std::env::temp_dir().join(format!("ftsz_fpp2_{}", std::process::id()));
+        let fpp = FilePerProcess::new(&root).unwrap();
+        assert!(fpp.read(9).is_err());
+        fpp.cleanup().unwrap();
+    }
+}

@@ -1,0 +1,55 @@
+//! # FT-SZ — SDC-resilient error-bounded lossy compression
+//!
+//! Reproduction of *"SDC Resilient Error-bounded Lossy Compressor"*
+//! (Li, Liang, Di, Chen, Zhao, Cappello — CS.DC 2020): an SZ-2.1-style
+//! error-bounded lossy compressor hardened against silent data corruption
+//! with algorithm-based fault tolerance (ABFT).
+//!
+//! Three engines share one core:
+//!
+//! * [`compressor::classic`] — the *original SZ* baseline: cross-block
+//!   Lorenzo dependencies, one global Huffman stream, best ratio, no random
+//!   access, fragile under SDC.
+//! * [`compressor::engine`] — **rsz**: independent-block compression; any
+//!   SDC is confined to one block and arbitrary sub-regions decompress
+//!   without touching the rest of the archive.
+//! * [`ft`] — **ftrsz**: rsz plus the paper's fault-tolerance design —
+//!   integer-reinterpretation checksums on the input and the quantization
+//!   bins (detect + locate + correct memory errors), selective instruction
+//!   duplication around the two fragile computations, and per-block
+//!   decompressed-data checksums verified at decompression time.
+//!
+//! The systems stack is three layers (see `DESIGN.md`): this crate is the
+//! L3 coordinator and production hot path; `python/compile` holds the L2
+//! JAX graphs and L1 Pallas kernels that are AOT-lowered to `artifacts/`
+//! and executed from [`runtime`] via PJRT — Python never runs at request
+//! time.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use ftsz::compressor::{CompressionConfig, ErrorBound};
+//! use ftsz::data::Dims;
+//!
+//! let field: Vec<f32> = (0..64 * 64 * 64).map(|i| (i as f32).sin()).collect();
+//! let cfg = CompressionConfig::new(ErrorBound::Abs(1e-3));
+//! let archive = ftsz::ft::compress(&field, Dims::d3(64, 64, 64), &cfg).unwrap();
+//! let restored = ftsz::ft::decompress(&archive).unwrap();
+//! for (a, b) in field.iter().zip(restored.data.iter()) {
+//!     assert!((a - b).abs() <= 1e-3);
+//! }
+//! ```
+
+pub mod analysis;
+pub mod compressor;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod error;
+pub mod ft;
+pub mod inject;
+pub mod io;
+pub mod runtime;
+pub mod util;
+
+pub use error::{Error, Result};

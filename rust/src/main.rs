@@ -1,0 +1,395 @@
+//! `ftsz` — CLI launcher for the SDC-resilient lossy compressor.
+//!
+//! ```text
+//! ftsz gen-data   --profile nyx --edge 64 --seed 42 --out data/
+//! ftsz compress   --input f.bin --dims 64,64,64 --engine ftrsz \
+//!                 --error-bound 1e-3 --bound-kind rel --out f.ftsz
+//! ftsz decompress --input f.ftsz --out f.out.bin [--verify]
+//! ftsz info       --input f.ftsz
+//! ftsz inject     --engine ftrsz --mode b --errors 1 --runs 100
+//! ftsz pipeline   [--config run.toml]
+//! ftsz xla-selftest
+//! ```
+//!
+//! Arguments are `--key value` pairs (no clap in the offline vendor set).
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+use ftsz::compressor::block::Region;
+use ftsz::compressor::{classic, engine, CompressionConfig, ErrorBound};
+use ftsz::config::{types, ConfigDoc, PipelineConfig};
+use ftsz::coordinator::{run_pipeline, WorkItem};
+use ftsz::data::{synthetic, Dims, Field};
+use ftsz::error::{Error, Result};
+use ftsz::inject::mode_b::ArenaFlip;
+use ftsz::inject::{run_and_classify, Engine, Outcome};
+use ftsz::{analysis, ft};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match run(args) {
+        Ok(()) => {}
+        Err(e) => {
+            eprintln!("ftsz: error: {e}");
+            std::process::exit(1);
+        }
+    }
+}
+
+/// Parsed `--key value` flags.
+struct Flags(HashMap<String, String>);
+
+impl Flags {
+    fn parse(args: &[String]) -> Result<Self> {
+        let mut map = HashMap::new();
+        let mut i = 0;
+        while i < args.len() {
+            let k = args[i]
+                .strip_prefix("--")
+                .ok_or_else(|| Error::Config(format!("expected --flag, got '{}'", args[i])))?;
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                map.insert(k.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                map.insert(k.to_string(), "true".to_string());
+                i += 1;
+            }
+        }
+        Ok(Self(map))
+    }
+
+    fn get(&self, k: &str) -> Option<&str> {
+        self.0.get(k).map(String::as_str)
+    }
+
+    fn str_or(&self, k: &str, default: &str) -> String {
+        self.get(k).unwrap_or(default).to_string()
+    }
+
+    fn usize_or(&self, k: &str, default: usize) -> Result<usize> {
+        match self.get(k) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Config(format!("--{k} expects an integer, got '{v}'"))),
+        }
+    }
+
+    fn f64_or(&self, k: &str, default: f64) -> Result<f64> {
+        match self.get(k) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Config(format!("--{k} expects a number, got '{v}'"))),
+        }
+    }
+
+    fn required(&self, k: &str) -> Result<&str> {
+        self.get(k).ok_or_else(|| Error::Config(format!("missing required --{k}")))
+    }
+
+    fn has(&self, k: &str) -> bool {
+        self.get(k).is_some()
+    }
+}
+
+fn compression_config(f: &Flags) -> Result<CompressionConfig> {
+    let bound = f.f64_or("error-bound", 1e-3)?;
+    let error_bound = match f.str_or("bound-kind", "rel").as_str() {
+        "abs" => ErrorBound::Abs(bound),
+        "rel" => ErrorBound::Rel(bound),
+        other => return Err(Error::Config(format!("--bound-kind '{other}'"))),
+    };
+    let cfg = CompressionConfig::new(error_bound)
+        .with_block_size(f.usize_or("block-size", 10)?)
+        .with_quant_radius(f.usize_or("quant-radius", 32768)? as u32);
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn parse_dims(s: &str) -> Result<Dims> {
+    let parts: Vec<usize> = s
+        .split(',')
+        .map(|p| p.trim().parse::<usize>())
+        .collect::<std::result::Result<_, _>>()
+        .map_err(|_| Error::Config(format!("--dims '{s}' must be like 64,64,64")))?;
+    match parts.as_slice() {
+        [n] => Ok(Dims::d1(*n)),
+        [r, c] => Ok(Dims::d2(*r, *c)),
+        [d, r, c] => Ok(Dims::d3(*d, *r, *c)),
+        _ => Err(Error::Config("dims must have 1-3 components".into())),
+    }
+}
+
+fn engine_of(f: &Flags) -> Result<Engine> {
+    match f.str_or("engine", "ftrsz").as_str() {
+        "sz" => Ok(Engine::Classic),
+        "rsz" => Ok(Engine::RandomAccess),
+        "ftrsz" => Ok(Engine::FaultTolerant),
+        other => Err(Error::Config(format!("--engine '{other}' (sz|rsz|ftrsz)"))),
+    }
+}
+
+fn run(args: Vec<String>) -> Result<()> {
+    let Some((cmd, rest)) = args.split_first() else {
+        print_usage();
+        return Ok(());
+    };
+    let flags = Flags::parse(rest)?;
+    match cmd.as_str() {
+        "gen-data" => cmd_gen_data(&flags),
+        "compress" => cmd_compress(&flags),
+        "decompress" => cmd_decompress(&flags),
+        "info" => cmd_info(&flags),
+        "inject" => cmd_inject(&flags),
+        "pipeline" => cmd_pipeline(&flags),
+        "xla-selftest" => cmd_xla_selftest(),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => Err(Error::Config(format!("unknown command '{other}' (try `ftsz help`)"))),
+    }
+}
+
+fn print_usage() {
+    println!(
+        "ftsz — SDC-resilient error-bounded lossy compressor (FT-SZ reproduction)\n\
+         commands:\n\
+         \x20 gen-data   --profile nyx|hurricane|scale-letkf|pluto --edge N --seed S --out DIR\n\
+         \x20 compress   --input RAW --dims D,R,C --engine sz|rsz|ftrsz --error-bound E --out FILE\n\
+         \x20 decompress --input FILE --out RAW [--verify] [--region z,y,x,dz,dy,dx]\n\
+         \x20 info       --input FILE\n\
+         \x20 inject     --engine E --mode a-input|a-bin|b --errors N --runs R [--edge N]\n\
+         \x20 pipeline   [--config FILE] [--ranks N] [--engine E]\n\
+         \x20 xla-selftest"
+    );
+}
+
+fn cmd_gen_data(f: &Flags) -> Result<()> {
+    let profile = types::parse_profile(&f.str_or("profile", "nyx"))?;
+    let edge = f.usize_or("edge", 64)?;
+    let seed = f.usize_or("seed", 42)? as u64;
+    let out = PathBuf::from(f.str_or("out", "data"));
+    std::fs::create_dir_all(&out)?;
+    for field in synthetic::dataset(profile, edge, seed) {
+        let (d, r, c) = field.dims.as_3d();
+        let path = out.join(format!("{}_{d}x{r}x{c}.bin", field.name));
+        field.to_raw_file(&path)?;
+        println!("wrote {} ({} points)", path.display(), field.dims.len());
+    }
+    Ok(())
+}
+
+fn load_input(f: &Flags) -> Result<Field> {
+    if let Some(path) = f.get("input") {
+        let dims = parse_dims(f.required("dims")?)?;
+        Field::from_raw_file("input", dims, std::path::Path::new(path))
+    } else {
+        // synthetic fallback for quick experiments
+        let profile = types::parse_profile(&f.str_or("profile", "nyx"))?;
+        let edge = f.usize_or("edge", 64)?;
+        let seed = f.usize_or("seed", 42)? as u64;
+        Ok(synthetic::dataset(profile, edge, seed).remove(0))
+    }
+}
+
+fn cmd_compress(f: &Flags) -> Result<()> {
+    let field = load_input(f)?;
+    let cfg = compression_config(f)?;
+    let engine_kind = engine_of(f)?;
+    let t = std::time::Instant::now();
+    let bytes = match engine_kind {
+        Engine::Classic => classic::compress(&field.data, field.dims, &cfg)?,
+        Engine::RandomAccess => engine::compress(&field.data, field.dims, &cfg)?,
+        Engine::FaultTolerant => ft::compress(&field.data, field.dims, &cfg)?,
+    };
+    let secs = t.elapsed().as_secs_f64();
+    let out = f.str_or("out", "out.ftsz");
+    std::fs::write(&out, &bytes)?;
+    println!(
+        "{}: {} points -> {} bytes (ratio {:.2}, {:.1} MB/s) -> {}",
+        engine_kind.name(),
+        field.dims.len(),
+        bytes.len(),
+        analysis::compression_ratio(field.dims.len(), bytes.len()),
+        field.dims.len() as f64 * 4.0 / secs / 1e6,
+        out
+    );
+    Ok(())
+}
+
+fn cmd_decompress(f: &Flags) -> Result<()> {
+    let path = f.required("input")?;
+    let bytes = std::fs::read(path)?;
+    if let Some(region) = f.get("region") {
+        let parts: Vec<usize> = region
+            .split(',')
+            .map(|p| p.trim().parse::<usize>())
+            .collect::<std::result::Result<_, _>>()
+            .map_err(|_| Error::Config("--region z,y,x,dz,dy,dx".into()))?;
+        if parts.len() != 6 {
+            return Err(Error::Config("--region needs 6 components".into()));
+        }
+        let region = Region {
+            origin: (parts[0], parts[1], parts[2]),
+            shape: (parts[3], parts[4], parts[5]),
+        };
+        let t = std::time::Instant::now();
+        let data = engine::decompress_region(&bytes, region)?;
+        println!("region {:?}: {} points in {:.3}ms", region, data.len(), t.elapsed().as_secs_f64() * 1e3);
+        return Ok(());
+    }
+    let t = std::time::Instant::now();
+    let dec = if f.has("verify") { ft::decompress(&bytes)? } else { engine::decompress(&bytes).or_else(|_| classic::decompress(&bytes))? };
+    let secs = t.elapsed().as_secs_f64();
+    let out = f.str_or("out", "out.bin");
+    Field::new("out", dec.dims, dec.data)?.to_raw_file(std::path::Path::new(&out))?;
+    println!(
+        "decompressed {} points in {:.3}s ({}) -> {}",
+        dec.dims.len(),
+        secs,
+        if f.has("verify") { "verified" } else { "unverified" },
+        out
+    );
+    Ok(())
+}
+
+fn cmd_info(f: &Flags) -> Result<()> {
+    let bytes = std::fs::read(f.required("input")?)?;
+    let archive = ftsz::compressor::format::parse(&bytes)?;
+    let h = &archive.header;
+    println!(
+        "ftsz archive: dims {:?}  block {}  bound {:.3e}  blocks {}  mode {}{}",
+        h.dims,
+        h.block_size,
+        h.error_bound,
+        h.n_blocks,
+        if h.is_classic() { "classic" } else { "random-access" },
+        if h.is_fault_tolerant() { "+ft" } else { "" },
+    );
+    let lorenzo = archive
+        .metas
+        .iter()
+        .filter(|m| m.predictor == ftsz::compressor::Predictor::Lorenzo)
+        .count();
+    println!(
+        "predictors: {lorenzo} lorenzo / {} regression; unpredictable values: {}",
+        archive.metas.len() - lorenzo,
+        archive.unpred.len(),
+    );
+    Ok(())
+}
+
+fn cmd_inject(f: &Flags) -> Result<()> {
+    let engine_kind = engine_of(f)?;
+    let field = load_input(f)?;
+    let cfg = compression_config(f)?;
+    let runs = f.usize_or("runs", 100)?;
+    let n_errors = f.usize_or("errors", 1)?;
+    let mode = f.str_or("mode", "b");
+    let nb = {
+        let (d, r, c) = field.dims.as_3d();
+        let b = cfg.block_size;
+        d.div_ceil(b) * r.div_ceil(b) * c.div_ceil(b)
+    };
+    let mut tally: HashMap<Outcome, usize> = HashMap::new();
+    for seed in 0..runs as u64 {
+        let outcome = match mode.as_str() {
+            "a-input" => {
+                let mut inj = ftsz::inject::mode_a::InputBitFlip::new(seed, n_errors);
+                run_and_classify(engine_kind, &field.data, field.dims, &cfg, &mut inj)
+            }
+            "a-bin" => {
+                let mut inj = ftsz::inject::mode_a::BinBitFlip::new(seed, nb);
+                run_and_classify(engine_kind, &field.data, field.dims, &cfg, &mut inj)
+            }
+            "b" => {
+                let mut data = field.data.clone();
+                let mut inj = ArenaFlip::new(seed, nb, n_errors);
+                inj.apply_pre_checksum(&mut data);
+                let o = run_and_classify(engine_kind, &data, field.dims, &cfg, &mut inj);
+                // classify against the pristine field
+                if o == Outcome::Correct
+                    && analysis::max_abs_err(&field.data, &data)
+                        > cfg.error_bound.absolute(&field.data)
+                {
+                    Outcome::Incorrect
+                } else {
+                    o
+                }
+            }
+            other => return Err(Error::Config(format!("--mode '{other}'"))),
+        };
+        *tally.entry(outcome).or_insert(0) += 1;
+    }
+    println!(
+        "{} mode={} errors={} runs={}: correct {} incorrect {} detected {} crash {}",
+        engine_kind.name(),
+        mode,
+        n_errors,
+        runs,
+        tally.get(&Outcome::Correct).unwrap_or(&0),
+        tally.get(&Outcome::Incorrect).unwrap_or(&0),
+        tally.get(&Outcome::Detected).unwrap_or(&0),
+        tally.get(&Outcome::Crash).unwrap_or(&0),
+    );
+    Ok(())
+}
+
+fn cmd_pipeline(f: &Flags) -> Result<()> {
+    let doc = match f.get("config") {
+        Some(path) => ConfigDoc::parse_file(std::path::Path::new(path))?,
+        None => ConfigDoc::parse("")?,
+    };
+    let rc = types::RunConfig::from_doc(&doc)?;
+    let pc = PipelineConfig::from_doc(&doc)?;
+    let engine_kind = match f.get("engine") {
+        Some(_) => engine_of(f)?,
+        None => match rc.engine.as_str() {
+            "sz" => Engine::Classic,
+            "rsz" => Engine::RandomAccess,
+            _ => Engine::FaultTolerant,
+        },
+    };
+    let ranks = f.usize_or("ranks", pc.ranks.min(32))?;
+    let items: Vec<WorkItem> = (0..ranks)
+        .map(|i| {
+            let fields = synthetic::dataset(rc.profile, rc.edge, rc.seed ^ (i as u64) << 8);
+            let fl = &fields[i % fields.len()];
+            WorkItem { id: i, dims: fl.dims, data: fl.data.clone() }
+        })
+        .collect();
+    let total_points: usize = items.iter().map(|w| w.data.len()).sum();
+    let out = run_pipeline(items, engine_kind, &rc.compression, pc.workers, pc.queue_depth)?;
+    println!(
+        "pipeline [{}] {} items, {} points, wall {:.3}s | {}",
+        engine_kind.name(),
+        out.archives.len(),
+        total_points,
+        out.wall_secs,
+        out.metrics.summary()
+    );
+    Ok(())
+}
+
+fn cmd_xla_selftest() -> Result<()> {
+    let rt = ftsz::runtime::XlaRuntime::cpu_default()?;
+    println!("PJRT platform: {}", rt.platform());
+    let k = ftsz::runtime::BlockKernels::new(&rt, 4, 4)?;
+    let x: Vec<f32> = (0..k.batch_len()).map(|i| (i as f32 * 0.01).sin()).collect();
+    let out = k.compress(&x, 1e-3)?;
+    let (back, _) = k.decompress(&out.bins, 1e-3)?;
+    let max = analysis::max_abs_err(&x, &back);
+    println!(
+        "xla selftest: {} artifacts, roundtrip max err {:.3e} (bound 1e-3) — {}",
+        rt.manifest()?.len(),
+        max,
+        if max <= 1.05e-3 { "OK" } else { "FAIL" }
+    );
+    if max > 1.05e-3 {
+        return Err(Error::Runtime("selftest bound violated".into()));
+    }
+    Ok(())
+}

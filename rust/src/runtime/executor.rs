@@ -1,0 +1,153 @@
+//! Typed block-kernel executor over the AOT artifacts.
+//!
+//! One [`BlockKernels`] instance binds an (N, B) variant — batch size and
+//! block edge fixed at lowering time (see `aot.py` VARIANTS). Callers batch
+//! whole-block work through it; the last partial batch is zero-padded (the
+//! kernels are pointwise per block, so padding blocks are simply ignored
+//! on output).
+
+use super::XlaRuntime;
+use crate::error::{Error, Result};
+
+/// Outputs of the fused compression graph for a batch of blocks.
+#[derive(Debug, Clone)]
+pub struct CompressedBatch {
+    /// Lorenzo residual lattice, `n * b³` i32.
+    pub bins: Vec<i32>,
+    /// Reconstruction, `n * b³` f32.
+    pub dcmp: Vec<f32>,
+    /// Input checksums per block.
+    pub sum_in: Vec<u64>,
+    /// Weighted input checksums per block.
+    pub isum_in: Vec<u64>,
+    /// Bin checksums per block.
+    pub sum_q: Vec<u64>,
+    /// Weighted bin checksums per block.
+    pub isum_q: Vec<u64>,
+    /// Decompressed-data checksums per block.
+    pub sum_dc: Vec<u64>,
+}
+
+/// Typed executor for one (N, B) artifact variant.
+pub struct BlockKernels<'r> {
+    rt: &'r XlaRuntime,
+    /// Batch size the artifacts were lowered with.
+    pub n: usize,
+    /// Block edge.
+    pub b: usize,
+}
+
+impl<'r> BlockKernels<'r> {
+    /// Bind a variant; verifies the artifacts exist.
+    pub fn new(rt: &'r XlaRuntime, n: usize, b: usize) -> Result<Self> {
+        let k = Self { rt, n, b };
+        rt.load(&k.name("compress"))?;
+        rt.load(&k.name("decompress"))?;
+        Ok(k)
+    }
+
+    fn name(&self, graph: &str) -> String {
+        format!("{graph}_n{}_b{}", self.n, self.b)
+    }
+
+    /// Points per block.
+    pub fn block_len(&self) -> usize {
+        self.b * self.b * self.b
+    }
+
+    /// Points per full batch.
+    pub fn batch_len(&self) -> usize {
+        self.n * self.block_len()
+    }
+
+    fn scale_literal(&self, error_bound: f64) -> xla::Literal {
+        let two_e = (2.0 * error_bound) as f32;
+        xla::Literal::vec1(&[1.0f32 / two_e, two_e])
+    }
+
+    fn shaped_f32(&self, data: &[f32]) -> Result<xla::Literal> {
+        let dims = [self.n as i64, self.b as i64, self.b as i64, self.b as i64];
+        xla::Literal::vec1(data)
+            .reshape(&dims)
+            .map_err(|e| Error::Runtime(format!("reshape f32 batch: {e}")))
+    }
+
+    fn shaped_i32(&self, data: &[i32]) -> Result<xla::Literal> {
+        let dims = [self.n as i64, self.b as i64, self.b as i64, self.b as i64];
+        xla::Literal::vec1(data)
+            .reshape(&dims)
+            .map_err(|e| Error::Runtime(format!("reshape i32 batch: {e}")))
+    }
+
+    /// Run the fused compression graph on a full batch (`n·b³` values).
+    pub fn compress(&self, x: &[f32], error_bound: f64) -> Result<CompressedBatch> {
+        if x.len() != self.batch_len() {
+            return Err(Error::InvalidArgument(format!(
+                "batch must be {} values, got {}",
+                self.batch_len(),
+                x.len()
+            )));
+        }
+        let outs =
+            self.rt.execute(&self.name("compress"), &[self.shaped_f32(x)?, self.scale_literal(error_bound)])?;
+        if outs.len() != 7 {
+            return Err(Error::Runtime(format!("compress graph returned {} outputs", outs.len())));
+        }
+        let to = |i: usize| -> &xla::Literal { &outs[i] };
+        Ok(CompressedBatch {
+            bins: to(0).to_vec::<i32>().map_err(|e| Error::Runtime(e.to_string()))?,
+            dcmp: to(1).to_vec::<f32>().map_err(|e| Error::Runtime(e.to_string()))?,
+            sum_in: to(2).to_vec::<u64>().map_err(|e| Error::Runtime(e.to_string()))?,
+            isum_in: to(3).to_vec::<u64>().map_err(|e| Error::Runtime(e.to_string()))?,
+            sum_q: to(4).to_vec::<u64>().map_err(|e| Error::Runtime(e.to_string()))?,
+            isum_q: to(5).to_vec::<u64>().map_err(|e| Error::Runtime(e.to_string()))?,
+            sum_dc: to(6).to_vec::<u64>().map_err(|e| Error::Runtime(e.to_string()))?,
+        })
+    }
+
+    /// Run the decompression graph: bins → (values, per-block checksums).
+    pub fn decompress(&self, bins: &[i32], error_bound: f64) -> Result<(Vec<f32>, Vec<u64>)> {
+        if bins.len() != self.batch_len() {
+            return Err(Error::InvalidArgument(format!(
+                "batch must be {} bins, got {}",
+                self.batch_len(),
+                bins.len()
+            )));
+        }
+        let outs = self
+            .rt
+            .execute(&self.name("decompress"), &[self.shaped_i32(bins)?, self.scale_literal(error_bound)])?;
+        if outs.len() != 2 {
+            return Err(Error::Runtime(format!(
+                "decompress graph returned {} outputs",
+                outs.len()
+            )));
+        }
+        let x = outs[0].to_vec::<f32>().map_err(|e| Error::Runtime(e.to_string()))?;
+        let sums = outs[1].to_vec::<u64>().map_err(|e| Error::Runtime(e.to_string()))?;
+        Ok((x, sums))
+    }
+
+    /// Per-block regression coefficients (`n × 4`).
+    pub fn regression(&self, x: &[f32]) -> Result<Vec<f32>> {
+        if x.len() != self.batch_len() {
+            return Err(Error::InvalidArgument("bad batch size".into()));
+        }
+        let outs = self.rt.execute(&self.name("regression"), &[self.shaped_f32(x)?])?;
+        outs[0].to_vec::<f32>().map_err(|e| Error::Runtime(e.to_string()))
+    }
+
+    /// Standalone f32 checksums over a `(n, b³)` batch.
+    pub fn checksums_f32(&self, x: &[f32]) -> Result<(Vec<u64>, Vec<u64>)> {
+        if x.len() != self.batch_len() {
+            return Err(Error::InvalidArgument("bad batch size".into()));
+        }
+        let lit = xla::Literal::vec1(x)
+            .reshape(&[self.n as i64, self.block_len() as i64])
+            .map_err(|e| Error::Runtime(e.to_string()))?;
+        let outs = self.rt.execute(&self.name("checksum_f32"), &[lit])?;
+        let s = outs[0].to_vec::<u64>().map_err(|e| Error::Runtime(e.to_string()))?;
+        let i = outs[1].to_vec::<u64>().map_err(|e| Error::Runtime(e.to_string()))?;
+        Ok((s, i))
+    }
+}

@@ -1,0 +1,140 @@
+//! PJRT runtime: load AOT artifacts and execute them from the Rust hot
+//! path — Python never runs at request time.
+//!
+//! `python/compile/aot.py` lowers the L2 JAX graphs (which call the L1
+//! Pallas kernels) to HLO *text* under `artifacts/`; this module parses
+//! each module once (`HloModuleProto::from_text_file`), compiles it on the
+//! PJRT CPU client, and caches the loaded executable. Text is the
+//! interchange format because jax ≥ 0.5 emits protos with 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects (see
+//! /opt/xla-example/README.md).
+
+pub mod executor;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use crate::error::{Error, Result};
+
+pub use executor::BlockKernels;
+
+fn rt_err<E: std::fmt::Display>(ctx: &str) -> impl Fn(E) -> Error + '_ {
+    move |e| Error::Runtime(format!("{ctx}: {e}"))
+}
+
+/// Locate the artifacts directory: `$FTSZ_ARTIFACTS` or `<repo>/artifacts`.
+pub fn default_artifacts_dir() -> PathBuf {
+    if let Ok(p) = std::env::var("FTSZ_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// A PJRT client plus a cache of compiled executables keyed by artifact
+/// name (e.g. `compress_n64_b10`).
+pub struct XlaRuntime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl XlaRuntime {
+    /// CPU-backed runtime over an artifacts directory.
+    pub fn cpu(dir: impl AsRef<Path>) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(rt_err("PjRtClient::cpu"))?;
+        let dir = dir.as_ref().to_path_buf();
+        if !dir.is_dir() {
+            return Err(Error::Runtime(format!(
+                "artifacts directory {} missing — run `make artifacts`",
+                dir.display()
+            )));
+        }
+        Ok(Self { client, dir, cache: Mutex::new(HashMap::new()) })
+    }
+
+    /// CPU runtime over the default artifacts directory.
+    pub fn cpu_default() -> Result<Self> {
+        Self::cpu(default_artifacts_dir())
+    }
+
+    /// Platform string of the underlying PJRT client.
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Names listed in the artifacts manifest.
+    pub fn manifest(&self) -> Result<Vec<String>> {
+        let text = std::fs::read_to_string(self.dir.join("manifest.txt"))?;
+        Ok(text
+            .lines()
+            .filter_map(|l| l.split_whitespace().next())
+            .map(|n| n.trim_end_matches(".hlo.txt").to_string())
+            .collect())
+    }
+
+    /// Load (or fetch from cache) one artifact by name.
+    pub fn load(&self, name: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(name) {
+            return Ok(exe.clone());
+        }
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        if !path.is_file() {
+            return Err(Error::Runtime(format!(
+                "artifact {} not found — run `make artifacts`",
+                path.display()
+            )));
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| Error::Runtime("non-utf8 path".into()))?,
+        )
+        .map_err(rt_err("parse HLO text"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(rt_err("compile"))?;
+        let exe = std::sync::Arc::new(exe);
+        self.cache.lock().unwrap().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute a loaded artifact on literal inputs; returns the flattened
+    /// tuple of output literals (aot.py lowers with `return_tuple=True`).
+    pub fn execute(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self.load(name)?;
+        let result = exe.execute::<xla::Literal>(inputs).map_err(rt_err("execute"))?;
+        let literal = result
+            .first()
+            .and_then(|d| d.first())
+            .ok_or_else(|| Error::Runtime("no output buffer".into()))?
+            .to_literal_sync()
+            .map_err(rt_err("to_literal_sync"))?;
+        literal.to_tuple().map_err(rt_err("untuple"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Runtime tests that need compiled artifacts live in
+    // rust/tests/runtime_parity.rs (they skip when artifacts are absent);
+    // here we only cover the error paths that need no artifacts.
+
+    #[test]
+    fn missing_dir_is_clean_error() {
+        let err = match XlaRuntime::cpu("/nonexistent/ftsz-artifacts") {
+            Err(e) => e,
+            Ok(_) => panic!("missing dir must fail"),
+        };
+        assert!(matches!(err, Error::Runtime(_)));
+        assert!(err.to_string().contains("make artifacts"));
+    }
+
+    #[test]
+    fn missing_artifact_is_clean_error() {
+        let dir = std::env::temp_dir().join("ftsz_rt_empty");
+        std::fs::create_dir_all(&dir).unwrap();
+        let rt = XlaRuntime::cpu(&dir).unwrap();
+        assert!(rt.load("nope").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

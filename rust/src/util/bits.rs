@@ -1,0 +1,354 @@
+//! Bit-granular writer/reader used by the Huffman codec and archive format.
+//!
+//! Bits are packed MSB-first within each byte; the writer pads the final
+//! byte with zeros. The reader performs strict bounds checking and reports
+//! overruns as [`crate::Error::HuffmanDecode`] so corrupted streams surface
+//! as clean decode errors rather than panics.
+
+use crate::error::{Error, Result};
+
+/// Append-only MSB-first bit writer.
+#[derive(Default, Debug)]
+pub struct BitWriter {
+    buf: Vec<u8>,
+    /// Bits already used in the last byte of `buf` (0..8; 0 = byte-aligned).
+    used: u8,
+}
+
+impl BitWriter {
+    /// New empty writer.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// New writer with reserved capacity (in bytes).
+    pub fn with_capacity(bytes: usize) -> Self {
+        Self { buf: Vec::with_capacity(bytes), used: 0 }
+    }
+
+    /// Number of bits written so far.
+    pub fn bit_len(&self) -> usize {
+        if self.used == 0 { self.buf.len() * 8 } else { (self.buf.len() - 1) * 8 + self.used as usize }
+    }
+
+    /// Write the lowest `n` bits of `value`, MSB of the group first.
+    #[inline]
+    pub fn write_bits(&mut self, value: u32, n: u8) {
+        debug_assert!(n <= 32);
+        let mut remaining = n;
+        while remaining > 0 {
+            if self.used == 0 {
+                self.buf.push(0);
+            }
+            let free = 8 - self.used;
+            let take = free.min(remaining);
+            let shift = remaining - take;
+            let chunk = ((value >> shift) as u8) & ((1u16 << take) - 1) as u8;
+            let last = self.buf.last_mut().unwrap();
+            *last |= chunk << (free - take);
+            self.used = (self.used + take) % 8;
+            remaining -= take;
+        }
+    }
+
+    /// Write one bit.
+    #[inline]
+    pub fn write_bit(&mut self, bit: bool) {
+        self.write_bits(bit as u32, 1);
+    }
+
+    /// Finish and return the packed bytes (zero-padded to a byte boundary).
+    pub fn finish(self) -> Vec<u8> {
+        self.buf
+    }
+}
+
+/// Strictly-bounds-checked MSB-first bit reader with a cached 64-bit
+/// window (refilled 8 bytes at a time on the hot path — Huffman decoding
+/// is read_bit-dominated, and the window removes the per-bit byte
+/// addressing and bounds checks; see EXPERIMENTS.md §Perf).
+#[derive(Debug)]
+pub struct BitReader<'a> {
+    buf: &'a [u8],
+    /// Cached upcoming bits, MSB-aligned (bit 63 is the next bit).
+    window: u64,
+    /// Valid bits in `window`.
+    avail: u32,
+    /// Next byte of `buf` to load into the window.
+    next_byte: usize,
+    /// Bits consumed so far.
+    pos: usize,
+    /// Total number of valid bits (callers may cap below `buf.len()*8`).
+    limit: usize,
+}
+
+impl<'a> BitReader<'a> {
+    /// Read over all bits of `buf`.
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, window: 0, avail: 0, next_byte: 0, pos: 0, limit: buf.len() * 8 }
+    }
+
+    /// Read over the first `limit_bits` of `buf`.
+    pub fn with_limit(buf: &'a [u8], limit_bits: usize) -> Result<Self> {
+        if limit_bits > buf.len() * 8 {
+            return Err(Error::Format(format!(
+                "bit limit {limit_bits} exceeds buffer of {} bits",
+                buf.len() * 8
+            )));
+        }
+        Ok(Self { buf, window: 0, avail: 0, next_byte: 0, pos: 0, limit: limit_bits })
+    }
+
+    /// Bits remaining.
+    pub fn remaining(&self) -> usize {
+        self.limit - self.pos
+    }
+
+    #[inline]
+    fn refill(&mut self) {
+        // load whole 8-byte chunks when possible, else byte by byte
+        if self.avail == 0 && self.buf.len() - self.next_byte >= 8 {
+            let chunk: [u8; 8] =
+                self.buf[self.next_byte..self.next_byte + 8].try_into().unwrap();
+            self.window = u64::from_be_bytes(chunk);
+            self.avail = 64;
+            self.next_byte += 8;
+            return;
+        }
+        while self.avail <= 56 && self.next_byte < self.buf.len() {
+            self.window |= (self.buf[self.next_byte] as u64) << (56 - self.avail);
+            self.avail += 8;
+            self.next_byte += 1;
+        }
+    }
+
+    /// Read one bit.
+    #[inline]
+    pub fn read_bit(&mut self) -> Result<bool> {
+        if self.pos >= self.limit {
+            return Err(Error::HuffmanDecode("bitstream exhausted".into()));
+        }
+        if self.avail == 0 {
+            self.refill();
+        }
+        let bit = self.window >> 63;
+        self.window <<= 1;
+        self.avail -= 1;
+        self.pos += 1;
+        Ok(bit == 1)
+    }
+
+    /// Peek at the next `n` bits (n <= 32) without consuming; bits past the
+    /// end of the buffer read as zero. Pair with [`consume`](Self::consume)
+    /// for table-driven decoders.
+    #[inline]
+    pub fn peek_bits(&mut self, n: u8) -> u32 {
+        debug_assert!(n <= 32);
+        if self.avail < n as u32 {
+            self.refill();
+        }
+        // beyond end-of-buffer the window's low bits are already zero
+        (self.window >> (64 - n as u32)) as u32
+    }
+
+    /// Consume `n` previously peeked bits. Errors past the bit limit.
+    #[inline]
+    pub fn consume(&mut self, n: u8) -> Result<()> {
+        if self.pos + n as usize > self.limit {
+            return Err(Error::HuffmanDecode("bitstream exhausted".into()));
+        }
+        debug_assert!(self.avail >= n as u32, "consume without peek");
+        self.window <<= n as u32;
+        self.avail -= n as u32;
+        self.pos += n as usize;
+        Ok(())
+    }
+
+    /// Read `n` bits (n <= 32), MSB-first.
+    #[inline]
+    pub fn read_bits(&mut self, n: u8) -> Result<u32> {
+        debug_assert!(n <= 32);
+        if self.pos + n as usize > self.limit {
+            return Err(Error::HuffmanDecode(format!(
+                "bitstream exhausted reading {n} bits ({} left)",
+                self.remaining()
+            )));
+        }
+        if n == 0 {
+            return Ok(0);
+        }
+        if self.avail < n as u32 {
+            self.refill();
+        }
+        debug_assert!(self.avail >= n as u32, "window underfilled");
+        let out = (self.window >> (64 - n as u32)) as u32;
+        self.window <<= n as u32;
+        self.avail -= n as u32;
+        self.pos += n as usize;
+        Ok(out)
+    }
+}
+
+/// Little-endian byte-level encoding helpers for the archive format.
+pub mod bytes {
+    use crate::error::{Error, Result};
+
+    /// Append `u32` little-endian.
+    pub fn put_u32(buf: &mut Vec<u8>, v: u32) {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Append `u64` little-endian.
+    pub fn put_u64(buf: &mut Vec<u8>, v: u64) {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Append `f64` little-endian.
+    pub fn put_f64(buf: &mut Vec<u8>, v: f64) {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Append `f32` little-endian.
+    pub fn put_f32(buf: &mut Vec<u8>, v: f32) {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Cursor for strict reads.
+    pub struct Cursor<'a> {
+        buf: &'a [u8],
+        pos: usize,
+    }
+
+    impl<'a> Cursor<'a> {
+        /// New cursor at offset 0.
+        pub fn new(buf: &'a [u8]) -> Self {
+            Self { buf, pos: 0 }
+        }
+
+        /// Current offset.
+        pub fn pos(&self) -> usize {
+            self.pos
+        }
+
+        /// Bytes remaining.
+        pub fn remaining(&self) -> usize {
+            self.buf.len() - self.pos
+        }
+
+        fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+            if self.pos + n > self.buf.len() {
+                return Err(Error::Format(format!(
+                    "truncated: need {n} bytes at offset {}, have {}",
+                    self.pos,
+                    self.remaining()
+                )));
+            }
+            let s = &self.buf[self.pos..self.pos + n];
+            self.pos += n;
+            Ok(s)
+        }
+
+        /// Read `n` raw bytes.
+        pub fn bytes(&mut self, n: usize) -> Result<&'a [u8]> {
+            self.take(n)
+        }
+
+        /// Read `u32` little-endian.
+        pub fn u32(&mut self) -> Result<u32> {
+            Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+        }
+
+        /// Read `u64` little-endian.
+        pub fn u64(&mut self) -> Result<u64> {
+            Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+        }
+
+        /// Read `f64` little-endian.
+        pub fn f64(&mut self) -> Result<f64> {
+            Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+        }
+
+        /// Read `f32` little-endian.
+        pub fn f32(&mut self) -> Result<f32> {
+            Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_mixed_widths() {
+        let mut w = BitWriter::new();
+        w.write_bits(0b101, 3);
+        w.write_bits(0xABCD, 16);
+        w.write_bit(true);
+        w.write_bits(0, 5);
+        w.write_bits(u32::MAX, 32);
+        let bit_len = w.bit_len();
+        let bytes = w.finish();
+        let mut r = BitReader::with_limit(&bytes, bit_len).unwrap();
+        assert_eq!(r.read_bits(3).unwrap(), 0b101);
+        assert_eq!(r.read_bits(16).unwrap(), 0xABCD);
+        assert!(r.read_bit().unwrap());
+        assert_eq!(r.read_bits(5).unwrap(), 0);
+        assert_eq!(r.read_bits(32).unwrap(), u32::MAX);
+        assert_eq!(r.remaining(), 0);
+        assert!(r.read_bit().is_err());
+    }
+
+    #[test]
+    fn bit_len_tracks_partials() {
+        let mut w = BitWriter::new();
+        assert_eq!(w.bit_len(), 0);
+        w.write_bits(1, 1);
+        assert_eq!(w.bit_len(), 1);
+        w.write_bits(0x7f, 7);
+        assert_eq!(w.bit_len(), 8);
+        w.write_bits(0x3, 2);
+        assert_eq!(w.bit_len(), 10);
+    }
+
+    #[test]
+    fn exhaustion_is_clean_error() {
+        let bytes = [0xFFu8];
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.read_bits(8).unwrap(), 0xFF);
+        let err = r.read_bits(1).unwrap_err();
+        assert!(matches!(err, Error::HuffmanDecode(_)));
+    }
+
+    #[test]
+    fn limit_respected() {
+        let bytes = [0xFFu8, 0xFF];
+        let mut r = BitReader::with_limit(&bytes, 9).unwrap();
+        assert_eq!(r.read_bits(9).unwrap(), 0x1FF);
+        assert!(r.read_bit().is_err());
+        assert!(BitReader::with_limit(&bytes, 17).is_err());
+    }
+
+    #[test]
+    fn cursor_strict_reads() {
+        let mut buf = Vec::new();
+        bytes::put_u32(&mut buf, 0xDEADBEEF);
+        bytes::put_u64(&mut buf, 42);
+        bytes::put_f64(&mut buf, 1.5);
+        bytes::put_f32(&mut buf, -2.25);
+        let mut c = bytes::Cursor::new(&buf);
+        assert_eq!(c.u32().unwrap(), 0xDEADBEEF);
+        assert_eq!(c.u64().unwrap(), 42);
+        assert_eq!(c.f64().unwrap(), 1.5);
+        assert_eq!(c.f32().unwrap(), -2.25);
+        assert!(c.u32().is_err());
+    }
+
+    #[test]
+    fn msb_first_layout() {
+        let mut w = BitWriter::new();
+        w.write_bit(true); // 1000_0000
+        let b = w.finish();
+        assert_eq!(b, vec![0x80]);
+    }
+}

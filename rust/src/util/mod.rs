@@ -1,0 +1,9 @@
+//! Self-contained substrates: PRNG, bit I/O, timing, thread pool, and a
+//! miniature property-testing framework (the offline vendor set has no
+//! `rand`/`proptest`/`criterion`, so these are built from scratch).
+
+pub mod bits;
+pub mod prop;
+pub mod rng;
+pub mod threadpool;
+pub mod timer;

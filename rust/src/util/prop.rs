@@ -1,0 +1,195 @@
+//! Miniature property-based testing framework (proptest is unavailable in
+//! the offline vendor set).
+//!
+//! `Gen` wraps a seeded PCG32 with convenience generators; [`forall`] runs a
+//! property over many random cases and, on failure, retries with a simple
+//! halving shrink over the size hint, reporting the seed so any failure is
+//! reproducible with `FTSZ_PROP_SEED=<seed> cargo test`.
+
+use crate::util::rng::{Pcg32, SplitMix64};
+
+/// Random case generator handed to properties.
+pub struct Gen {
+    rng: Pcg32,
+    /// Current size hint; shrink passes reduce it.
+    pub size: usize,
+}
+
+impl Gen {
+    /// New generator for one case.
+    pub fn new(seed: u64, size: usize) -> Self {
+        Self { rng: Pcg32::new(seed), size }
+    }
+
+    /// Uniform usize in `[lo, hi]` (inclusive).
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(lo <= hi);
+        lo + self.rng.index(hi - lo + 1)
+    }
+
+    /// Uniform u64.
+    pub fn u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    /// Uniform u32.
+    pub fn u32(&mut self) -> u32 {
+        self.rng.next_u32()
+    }
+
+    /// Uniform f64 in `[lo, hi)`.
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range_f64(lo, hi)
+    }
+
+    /// Finite f32 from a mix of uniform, exponent-stratified and special
+    /// values — good coverage of the float space without NaN/Inf.
+    pub fn f32_finite(&mut self) -> f32 {
+        match self.rng.index(10) {
+            0 => 0.0,
+            1 => -0.0,
+            2 => 1.0,
+            3 => -1.0,
+            4 => f32::MIN_POSITIVE,
+            _ => {
+                let exp = self.rng.index(41) as i32 - 20; // 1e-20 .. 1e20
+                let mant = self.rng.range_f64(-1.0, 1.0);
+                (mant * 10f64.powi(exp)) as f32
+            }
+        }
+    }
+
+    /// Vector of finite f32s sized by the current size hint.
+    pub fn vec_f32(&mut self, max_len: usize) -> Vec<f32> {
+        let len = self.usize_in(1, max_len.min(self.size.max(1)));
+        (0..len).map(|_| self.f32_finite()).collect()
+    }
+
+    /// Vector of smooth f32s (random walk) — compressible data.
+    pub fn vec_f32_smooth(&mut self, max_len: usize) -> Vec<f32> {
+        let len = self.usize_in(1, max_len.min(self.size.max(1)));
+        let mut v = Vec::with_capacity(len);
+        let mut x = self.rng.range_f64(-1.0, 1.0);
+        for _ in 0..len {
+            x += self.rng.range_f64(-0.01, 0.01);
+            v.push(x as f32);
+        }
+        v
+    }
+
+    /// Pick one of the provided items.
+    pub fn choose<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        &items[self.rng.index(items.len())]
+    }
+
+    /// Bernoulli trial.
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.rng.chance(p)
+    }
+}
+
+/// Outcome of a property run.
+pub struct PropResult {
+    /// Seed of the failing case, if any.
+    pub failure: Option<(u64, String)>,
+    /// Cases executed.
+    pub cases: usize,
+}
+
+/// Run `prop` over `cases` random cases. The property returns
+/// `Err(description)` to signal failure. Panics (like assert!) are treated
+/// as failures too, with the seed reported.
+pub fn forall<P>(name: &str, cases: usize, prop: P)
+where
+    P: Fn(&mut Gen) -> Result<(), String> + std::panic::RefUnwindSafe,
+{
+    let base_seed = std::env::var("FTSZ_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse::<u64>().ok())
+        .unwrap_or(0xf7c3_5eed);
+    let mut expander = SplitMix64::new(base_seed);
+    for case in 0..cases {
+        let seed = expander.next_u64();
+        let run = |size: usize| -> Result<(), String> {
+            let mut g = Gen::new(seed, size);
+            match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut g))) {
+                Ok(r) => r,
+                Err(p) => {
+                    let msg = p
+                        .downcast_ref::<&str>()
+                        .map(|s| s.to_string())
+                        .or_else(|| p.downcast_ref::<String>().cloned())
+                        .unwrap_or_else(|| "panic".into());
+                    Err(format!("panicked: {msg}"))
+                }
+            }
+        };
+        if let Err(msg) = run(64) {
+            // shrink: retry with smaller size hints, keep the smallest failure
+            let mut final_msg = msg;
+            let mut final_size = 64usize;
+            let mut size = 32usize;
+            while size >= 1 {
+                if let Err(m) = run(size) {
+                    final_msg = m;
+                    final_size = size;
+                }
+                if size == 1 {
+                    break;
+                }
+                size /= 2;
+            }
+            panic!(
+                "property '{name}' failed (case {case}, seed {seed}, size {final_size}): {final_msg}\n\
+                 reproduce with FTSZ_PROP_SEED={base_seed}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivially() {
+        forall("trivial", 50, |g| {
+            let v = g.usize_in(1, 10);
+            if (1..=10).contains(&v) { Ok(()) } else { Err(format!("{v} out of range")) }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn forall_reports_failures() {
+        forall("fails", 10, |g| {
+            if g.u64() % 2 == 0 || g.u64() % 2 == 1 {
+                Err("always".into())
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "panicked")]
+    fn forall_catches_panics() {
+        forall("panics", 3, |_| -> Result<(), String> { panic!("boom") });
+    }
+
+    #[test]
+    fn generators_are_seed_deterministic() {
+        let mut a = Gen::new(42, 64);
+        let mut b = Gen::new(42, 64);
+        assert_eq!(a.vec_f32(32), b.vec_f32(32));
+    }
+
+    #[test]
+    fn smooth_vectors_are_smooth() {
+        let mut g = Gen::new(7, 64);
+        let v = g.vec_f32_smooth(64);
+        for w in v.windows(2) {
+            assert!((w[1] - w[0]).abs() <= 0.02);
+        }
+    }
+}

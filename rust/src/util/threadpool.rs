@@ -1,0 +1,233 @@
+//! Minimal scoped thread pool + parallel-for (tokio/rayon are unavailable
+//! offline; `crossbeam_utils::thread::scope` provides safe borrowing).
+//!
+//! This is the execution substrate of the [`crate::coordinator`]: bounded
+//! work queues with backpressure, deterministic chunk assignment for
+//! reproducible experiments.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex};
+
+/// Run `f(chunk_index, item_index_range)` over `n_items` split into
+/// contiguous chunks, one chunk stream per worker, work-stealing by atomic
+/// counter. Results are written by the caller through interior mutability
+/// or per-chunk output vectors.
+pub fn parallel_chunks<F>(n_items: usize, chunk: usize, workers: usize, f: F)
+where
+    F: Fn(usize, std::ops::Range<usize>) + Sync,
+{
+    assert!(chunk > 0);
+    let n_chunks = n_items.div_ceil(chunk);
+    let workers = workers.max(1).min(n_chunks.max(1));
+    let next = AtomicUsize::new(0);
+    crossbeam_utils::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|_| loop {
+                let c = next.fetch_add(1, Ordering::Relaxed);
+                if c >= n_chunks {
+                    break;
+                }
+                let lo = c * chunk;
+                let hi = (lo + chunk).min(n_items);
+                f(c, lo..hi);
+            });
+        }
+    })
+    .expect("worker panicked");
+}
+
+/// Map `f` over `0..n` in parallel, collecting results in order.
+pub fn parallel_map<T, F>(n: usize, workers: usize, f: F) -> Vec<T>
+where
+    T: Send + Default + Clone,
+    F: Fn(usize) -> T + Sync,
+{
+    let mut out = vec![T::default(); n];
+    {
+        let slots: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
+        let next = AtomicUsize::new(0);
+        let workers = workers.max(1).min(n.max(1));
+        crossbeam_utils::thread::scope(|s| {
+            for _ in 0..workers {
+                s.spawn(|_| loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let v = f(i);
+                    *slots[i].lock().unwrap() = Some(v);
+                });
+            }
+        })
+        .expect("worker panicked");
+        for (i, slot) in slots.into_iter().enumerate() {
+            out[i] = slot.into_inner().unwrap().unwrap();
+        }
+    }
+    out
+}
+
+/// A bounded MPMC channel built on Mutex+Condvar — the backpressure
+/// primitive for the streaming pipeline (send blocks when full).
+pub struct BoundedQueue<T> {
+    inner: Mutex<QueueInner<T>>,
+    not_full: Condvar,
+    not_empty: Condvar,
+    capacity: usize,
+}
+
+struct QueueInner<T> {
+    items: std::collections::VecDeque<T>,
+    closed: bool,
+}
+
+impl<T> BoundedQueue<T> {
+    /// New queue holding at most `capacity` items.
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0);
+        Self {
+            inner: Mutex::new(QueueInner { items: std::collections::VecDeque::new(), closed: false }),
+            not_full: Condvar::new(),
+            not_empty: Condvar::new(),
+            capacity,
+        }
+    }
+
+    /// Blocking push; returns `false` if the queue was closed.
+    pub fn push(&self, item: T) -> bool {
+        let mut g = self.inner.lock().unwrap();
+        while g.items.len() >= self.capacity && !g.closed {
+            g = self.not_full.wait(g).unwrap();
+        }
+        if g.closed {
+            return false;
+        }
+        g.items.push_back(item);
+        self.not_empty.notify_one();
+        true
+    }
+
+    /// Blocking pop; `None` once closed *and* drained.
+    pub fn pop(&self) -> Option<T> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(v) = g.items.pop_front() {
+                self.not_full.notify_one();
+                return Some(v);
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.not_empty.wait(g).unwrap();
+        }
+    }
+
+    /// Close: pending pops drain, new pushes fail.
+    pub fn close(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    /// Items currently queued.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().items.len()
+    }
+
+    /// True when empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn parallel_chunks_covers_everything_once() {
+        let n = 1003;
+        let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+        parallel_chunks(n, 64, 4, |_, range| {
+            for i in range {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn parallel_map_ordered() {
+        let out = parallel_map(100, 8, |i| i * i);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i * i);
+        }
+    }
+
+    #[test]
+    fn queue_fifo_and_close() {
+        let q = BoundedQueue::new(4);
+        assert!(q.push(1));
+        assert!(q.push(2));
+        assert_eq!(q.pop(), Some(1));
+        q.close();
+        assert!(!q.push(3));
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn queue_backpressure_blocks_until_pop() {
+        let q = std::sync::Arc::new(BoundedQueue::new(1));
+        q.push(0u64);
+        let q2 = q.clone();
+        let pushed = std::sync::Arc::new(AtomicU64::new(0));
+        let p2 = pushed.clone();
+        let h = std::thread::spawn(move || {
+            q2.push(1);
+            p2.store(1, Ordering::SeqCst);
+        });
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        assert_eq!(pushed.load(Ordering::SeqCst), 0, "push must block while full");
+        assert_eq!(q.pop(), Some(0));
+        h.join().unwrap();
+        assert_eq!(pushed.load(Ordering::SeqCst), 1);
+        assert_eq!(q.pop(), Some(1));
+    }
+
+    #[test]
+    fn queue_many_producers_consumers() {
+        let q = std::sync::Arc::new(BoundedQueue::new(8));
+        let total = std::sync::Arc::new(AtomicU64::new(0));
+        crossbeam_utils::thread::scope(|s| {
+            for t in 0..4 {
+                let q = q.clone();
+                s.spawn(move |_| {
+                    for i in 0..100u64 {
+                        q.push(t * 100 + i);
+                    }
+                });
+            }
+            for _ in 0..4 {
+                let q = q.clone();
+                let total = total.clone();
+                s.spawn(move |_| {
+                    while let Some(v) = q.pop() {
+                        total.fetch_add(v, Ordering::Relaxed);
+                    }
+                });
+            }
+            s.spawn(|_| {
+                // closing after producers finish is racy in this toy test;
+                // give producers time then close.
+                std::thread::sleep(std::time::Duration::from_millis(300));
+                q.close();
+            });
+        })
+        .unwrap();
+        let expect: u64 = (0..400u64).sum();
+        assert_eq!(total.load(Ordering::SeqCst), expect);
+    }
+}

@@ -1,0 +1,153 @@
+//! Timing + micro-bench harness (criterion is unavailable offline).
+//!
+//! `bench_fn` measures a closure with warmup, repetitions, and robust
+//! statistics; the bench binaries under `rust/benches/` print paper-style
+//! tables using these primitives.
+
+use std::time::{Duration, Instant};
+
+/// Simple scoped stopwatch.
+#[derive(Debug)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Stopwatch {
+    /// Start timing now.
+    pub fn new() -> Self {
+        Self { start: Instant::now() }
+    }
+
+    /// Elapsed seconds.
+    pub fn secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Elapsed duration.
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    /// Restart and return the lap time in seconds.
+    pub fn lap(&mut self) -> f64 {
+        let s = self.secs();
+        self.start = Instant::now();
+        s
+    }
+}
+
+/// Summary statistics of repeated timing samples (seconds).
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    /// Per-iteration samples, sorted ascending.
+    pub samples: Vec<f64>,
+}
+
+impl BenchStats {
+    /// Build from raw samples.
+    pub fn from_samples(mut samples: Vec<f64>) -> Self {
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Self { samples }
+    }
+
+    /// Minimum sample.
+    pub fn min(&self) -> f64 {
+        *self.samples.first().unwrap_or(&f64::NAN)
+    }
+
+    /// Median sample.
+    pub fn median(&self) -> f64 {
+        let n = self.samples.len();
+        if n == 0 {
+            return f64::NAN;
+        }
+        if n % 2 == 1 { self.samples[n / 2] } else { 0.5 * (self.samples[n / 2 - 1] + self.samples[n / 2]) }
+    }
+
+    /// Arithmetic mean.
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    /// Sample standard deviation.
+    pub fn stddev(&self) -> f64 {
+        let n = self.samples.len();
+        if n < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        (self.samples.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (n - 1) as f64).sqrt()
+    }
+}
+
+/// Measure `f` with `warmup` unrecorded runs then `reps` recorded runs.
+pub fn bench_fn<F: FnMut()>(warmup: usize, reps: usize, mut f: F) -> BenchStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    BenchStats::from_samples(samples)
+}
+
+/// Pretty seconds: picks ns/µs/ms/s.
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{s:.3}s")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_basics() {
+        let st = BenchStats::from_samples(vec![3.0, 1.0, 2.0]);
+        assert_eq!(st.min(), 1.0);
+        assert_eq!(st.median(), 2.0);
+        assert!((st.mean() - 2.0).abs() < 1e-12);
+        assert!((st.stddev() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn even_median() {
+        let st = BenchStats::from_samples(vec![1.0, 2.0, 3.0, 4.0]);
+        assert!((st.median() - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bench_counts_reps() {
+        let mut calls = 0usize;
+        let st = bench_fn(2, 5, || calls += 1);
+        assert_eq!(calls, 7);
+        assert_eq!(st.samples.len(), 5);
+    }
+
+    #[test]
+    fn fmt_ranges() {
+        assert!(fmt_secs(5e-10).ends_with("ns"));
+        assert!(fmt_secs(5e-6).ends_with("µs"));
+        assert!(fmt_secs(5e-3).ends_with("ms"));
+        assert!(fmt_secs(5.0).ends_with('s'));
+    }
+}

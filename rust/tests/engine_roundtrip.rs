@@ -1,0 +1,195 @@
+//! Integration: engine round-trips across datasets, bounds, predictors,
+//! ranks and block sizes — the error-bound contract end to end.
+
+use ftsz::analysis;
+use ftsz::compressor::block::Region;
+use ftsz::compressor::{classic, engine, CompressionConfig, ErrorBound, PredictorPolicy};
+use ftsz::data::synthetic::{self, Profile};
+use ftsz::data::Dims;
+use ftsz::ft;
+use ftsz::inject::Engine;
+use ftsz::util::rng::Pcg32;
+
+fn compress_any(e: Engine, data: &[f32], dims: Dims, cfg: &CompressionConfig) -> Vec<u8> {
+    match e {
+        Engine::Classic => classic::compress(data, dims, cfg).unwrap(),
+        Engine::RandomAccess => engine::compress(data, dims, cfg).unwrap(),
+        Engine::FaultTolerant => ft::compress(data, dims, cfg).unwrap(),
+    }
+}
+
+fn decompress_any(e: Engine, bytes: &[u8]) -> Vec<f32> {
+    match e {
+        Engine::Classic => classic::decompress(bytes).unwrap().data,
+        Engine::RandomAccess => engine::decompress(bytes).unwrap().data,
+        Engine::FaultTolerant => ft::decompress(bytes).unwrap().data,
+    }
+}
+
+#[test]
+fn all_profiles_all_engines_all_bounds() {
+    for profile in Profile::all() {
+        let f = synthetic::dataset(profile, 32, 5).remove(0);
+        for e in [Engine::Classic, Engine::RandomAccess, Engine::FaultTolerant] {
+            for bound in [1e-2, 1e-4] {
+                let cfg = CompressionConfig::new(ErrorBound::Rel(bound));
+                let abs = cfg.error_bound.absolute(&f.data);
+                let bytes = compress_any(e, &f.data, f.dims, &cfg);
+                let dec = decompress_any(e, &bytes);
+                let max = analysis::max_abs_err(&f.data, &dec);
+                assert!(
+                    max <= abs,
+                    "{} {} bound {bound}: {max} > {abs}",
+                    profile.name(),
+                    e.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn forced_predictors_both_respect_bound() {
+    let f = synthetic::dataset(Profile::Hurricane, 32, 9).remove(0);
+    for policy in [PredictorPolicy::LorenzoOnly, PredictorPolicy::RegressionOnly] {
+        let cfg = CompressionConfig::new(ErrorBound::Abs(1e-3)).with_predictor(policy);
+        let bytes = engine::compress(&f.data, f.dims, &cfg).unwrap();
+        let dec = engine::decompress(&bytes).unwrap();
+        assert!(analysis::max_abs_err(&f.data, &dec.data) <= 1e-3, "{policy:?}");
+    }
+}
+
+#[test]
+fn auto_never_loses_to_both_forced_policies() {
+    // auto selection should be at least as small as the worse forced policy
+    let f = synthetic::dataset(Profile::Nyx, 32, 11).remove(0);
+    let base = CompressionConfig::new(ErrorBound::Rel(1e-3));
+    let auto = engine::compress(&f.data, f.dims, &base).unwrap().len();
+    let lor = engine::compress(
+        &f.data,
+        f.dims,
+        &base.clone().with_predictor(PredictorPolicy::LorenzoOnly),
+    )
+    .unwrap()
+    .len();
+    let reg = engine::compress(
+        &f.data,
+        f.dims,
+        &base.clone().with_predictor(PredictorPolicy::RegressionOnly),
+    )
+    .unwrap()
+    .len();
+    assert!(
+        auto <= lor.max(reg),
+        "auto {auto} worse than both lorenzo {lor} and regression {reg}"
+    );
+}
+
+#[test]
+fn quant_radius_variants_roundtrip() {
+    let f = synthetic::dataset(Profile::ScaleLetkf, 32, 3).remove(0);
+    for radius in [256u32, 4096, 32768] {
+        let cfg = CompressionConfig::new(ErrorBound::Rel(1e-3)).with_quant_radius(radius);
+        let bytes = engine::compress(&f.data, f.dims, &cfg).unwrap();
+        let dec = engine::decompress(&bytes).unwrap();
+        let abs = cfg.error_bound.absolute(&f.data);
+        assert!(analysis::max_abs_err(&f.data, &dec.data) <= abs, "radius {radius}");
+    }
+}
+
+#[test]
+fn tiny_and_awkward_shapes() {
+    let mut rng = Pcg32::new(1);
+    for dims in [
+        Dims::d1(1),
+        Dims::d1(7),
+        Dims::d2(1, 13),
+        Dims::d2(3, 1),
+        Dims::d3(1, 1, 1),
+        Dims::d3(2, 3, 5),
+        Dims::d3(11, 1, 17),
+    ] {
+        let data: Vec<f32> = (0..dims.len()).map(|_| rng.normal() as f32).collect();
+        let cfg = CompressionConfig::new(ErrorBound::Abs(1e-2)).with_block_size(4);
+        let bytes = ft::compress(&data, dims, &cfg).unwrap();
+        let dec = ft::decompress(&bytes).unwrap();
+        assert!(analysis::max_abs_err(&data, &dec.data) <= 1e-2, "{dims:?}");
+    }
+}
+
+#[test]
+fn constant_and_extreme_fields() {
+    let dims = Dims::d3(8, 8, 8);
+    for fill in [0.0f32, -0.0, 1e30, -1e30, 1e-30, 3.14159] {
+        let data = vec![fill; dims.len()];
+        let cfg = CompressionConfig::new(ErrorBound::Abs(1e-3));
+        let bytes = ft::compress(&data, dims, &cfg).unwrap();
+        let dec = ft::decompress(&bytes).unwrap();
+        assert!(analysis::max_abs_err(&data, &dec.data) <= 1e-3, "fill {fill}");
+        // constants compress extremely well
+        if fill.abs() < 1e20 {
+            assert!(bytes.len() < dims.len(), "constant field barely compressed");
+        }
+    }
+}
+
+#[test]
+fn random_regions_match_full_decompression() {
+    let f = synthetic::dataset(Profile::Hurricane, 32, 13).remove(0);
+    let cfg = CompressionConfig::new(ErrorBound::Rel(1e-3)).with_block_size(6);
+    let bytes = engine::compress(&f.data, f.dims, &cfg).unwrap();
+    let full = engine::decompress(&bytes).unwrap();
+    let (d, r, c) = f.dims.as_3d();
+    let mut rng = Pcg32::new(77);
+    for _ in 0..25 {
+        let oz = rng.index(d);
+        let oy = rng.index(r);
+        let ox = rng.index(c);
+        let region = Region {
+            origin: (oz, oy, ox),
+            shape: (
+                1 + rng.index(d - oz),
+                1 + rng.index(r - oy),
+                1 + rng.index(c - ox),
+            ),
+        };
+        let got = engine::decompress_region(&bytes, region).unwrap();
+        let mut idx = 0;
+        for z in 0..region.shape.0 {
+            for y in 0..region.shape.1 {
+                for x in 0..region.shape.2 {
+                    let g = ((region.origin.0 + z) * r + region.origin.1 + y) * c
+                        + region.origin.2
+                        + x;
+                    assert_eq!(got[idx].to_bits(), full.data[g].to_bits());
+                    idx += 1;
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn deterministic_archives() {
+    // same input + config => byte-identical archives (required for
+    // reproducible experiments and checksum stability)
+    let f = synthetic::dataset(Profile::Pluto, 24, 21).remove(0);
+    let cfg = CompressionConfig::new(ErrorBound::Rel(1e-4));
+    let a = ft::compress(&f.data, f.dims, &cfg).unwrap();
+    let b = ft::compress(&f.data, f.dims, &cfg).unwrap();
+    assert_eq!(a, b);
+}
+
+#[test]
+fn f64_checksum_path_is_exposed() {
+    // the paper's double-precision scheme: two u32 words per double
+    use ftsz::ft::checksum::{checksum_f64, diagnose, Diagnosis};
+    let data: Vec<f64> = (0..500).map(|i| (i as f64).sqrt()).collect();
+    let c0 = checksum_f64(&data);
+    let mut bad = data.clone();
+    bad[123] = f64::from_bits(bad[123].to_bits() ^ (1 << 57));
+    match diagnose(c0, checksum_f64(&bad), 2 * bad.len()) {
+        Diagnosis::SingleError { index, .. } => assert_eq!(index / 2, 123),
+        other => panic!("{other:?}"),
+    }
+}

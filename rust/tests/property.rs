@@ -1,0 +1,225 @@
+//! Property-based tests over the whole stack (in-repo `util::prop`
+//! framework; proptest is unavailable offline). Each property runs many
+//! seeded random cases; failures print a reproduction seed.
+
+use ftsz::analysis;
+use ftsz::compressor::block::{BlockGrid, Region};
+use ftsz::compressor::huffman::HuffmanTable;
+use ftsz::compressor::{dualquant, engine, CompressionConfig, ErrorBound};
+use ftsz::data::Dims;
+use ftsz::ft::checksum::{self, Correction};
+use ftsz::util::bits::{BitReader, BitWriter};
+use ftsz::util::prop::forall;
+
+#[test]
+fn prop_roundtrip_error_bound() {
+    forall("engine roundtrip respects bound", 40, |g| {
+        let dz = g.usize_in(1, 8);
+        let dy = g.usize_in(1, 12);
+        let dx = g.usize_in(1, 12);
+        let dims = Dims::d3(dz, dy, dx);
+        let mut data = Vec::with_capacity(dims.len());
+        let mut v = g.f64_in(-10.0, 10.0);
+        for _ in 0..dims.len() {
+            v += g.f64_in(-0.5, 0.5);
+            data.push(v as f32);
+        }
+        let e = 10f64.powi(-(g.usize_in(1, 5) as i32));
+        let b = g.usize_in(2, 12);
+        let cfg = CompressionConfig::new(ErrorBound::Abs(e)).with_block_size(b);
+        let bytes = engine::compress(&data, dims, &cfg).map_err(|x| x.to_string())?;
+        let dec = engine::decompress(&bytes).map_err(|x| x.to_string())?;
+        let max = analysis::max_abs_err(&data, &dec.data);
+        if max <= e {
+            Ok(())
+        } else {
+            Err(format!("dims {dims:?} b {b} e {e}: max {max}"))
+        }
+    });
+}
+
+#[test]
+fn prop_ft_roundtrip_bitwise_equals_plain() {
+    forall("ft and plain decompressions agree bitwise", 25, |g| {
+        let n = g.usize_in(8, 600);
+        let data = g.vec_f32_smooth(n.max(8));
+        let dims = Dims::d1(data.len());
+        let cfg = CompressionConfig::new(ErrorBound::Abs(1e-3)).with_block_size(g.usize_in(2, 10));
+        let a = engine::compress(&data, dims, &cfg).map_err(|x| x.to_string())?;
+        let b = ftsz::ft::compress(&data, dims, &cfg).map_err(|x| x.to_string())?;
+        let da = engine::decompress(&a).map_err(|x| x.to_string())?;
+        let db = ftsz::ft::decompress(&b).map_err(|x| x.to_string())?;
+        if da.data.iter().zip(&db.data).all(|(x, y)| x.to_bits() == y.to_bits()) {
+            Ok(())
+        } else {
+            Err("ft changed numerics".into())
+        }
+    });
+}
+
+#[test]
+fn prop_checksum_locates_any_single_flip() {
+    forall("checksum locates any single flip", 120, |g| {
+        let data = g.vec_f32(2000);
+        let c0 = checksum::checksum_f32(&data);
+        let j = g.usize_in(0, data.len() - 1);
+        let bit = g.usize_in(0, 31);
+        let mut bad = data.clone();
+        bad[j] = f32::from_bits(bad[j].to_bits() ^ (1 << bit));
+        match checksum::verify_correct_f32(&mut bad, c0) {
+            Correction::Corrected { index } if index == j => {
+                if bad[j].to_bits() == data[j].to_bits() {
+                    Ok(())
+                } else {
+                    Err("repair produced wrong bits".into())
+                }
+            }
+            Correction::Clean => {
+                // flipping a bit twice in the same spot can't happen here;
+                // Clean means the flip was a no-op (impossible) — fail
+                Err("flip went undetected".into())
+            }
+            other => Err(format!("unexpected {other:?} for j={j} bit={bit}")),
+        }
+    });
+}
+
+#[test]
+fn prop_huffman_roundtrip_arbitrary_histograms() {
+    forall("huffman roundtrip", 60, |g| {
+        let n_sym = g.usize_in(1, 512);
+        let freqs: Vec<u64> = (0..n_sym).map(|_| g.u64() % 1000).collect();
+        if freqs.iter().all(|&f| f == 0) {
+            return Ok(());
+        }
+        let table = HuffmanTable::from_frequencies(&freqs).map_err(|e| e.to_string())?;
+        let live: Vec<u32> =
+            freqs.iter().enumerate().filter(|(_, &f)| f > 0).map(|(s, _)| s as u32).collect();
+        let stream: Vec<u32> =
+            (0..g.usize_in(1, 400)).map(|_| live[g.usize_in(0, live.len() - 1)]).collect();
+        let mut w = BitWriter::new();
+        for &s in &stream {
+            table.encode(&mut w, s).map_err(|e| e.to_string())?;
+        }
+        let bits = w.bit_len();
+        let buf = w.finish();
+        let mut r = BitReader::with_limit(&buf, bits).map_err(|e| e.to_string())?;
+        for &s in &stream {
+            let got = table.decode(&mut r).map_err(|e| e.to_string())?;
+            if got != s {
+                return Err(format!("decoded {got}, wanted {s}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dualquant_inverse_is_exact() {
+    forall("dualquant inverse reproduces forward dcmp bitwise", 60, |g| {
+        let nz = g.usize_in(1, 8);
+        let ny = g.usize_in(1, 8);
+        let nx = g.usize_in(1, 8);
+        let n = nz * ny * nx;
+        let block: Vec<f32> = (0..n).map(|_| g.f64_in(-100.0, 100.0) as f32).collect();
+        let e = 10f64.powi(-(g.usize_in(1, 4) as i32));
+        let (mut bins, mut dcmp, mut back) = (Vec::new(), Vec::new(), Vec::new());
+        dualquant::forward(&block, (nz, ny, nx), e, &mut bins, &mut dcmp);
+        dualquant::inverse(&bins, (nz, ny, nx), e, &mut back);
+        if back.iter().zip(&dcmp).all(|(a, b)| a.to_bits() == b.to_bits()) {
+            Ok(())
+        } else {
+            Err(format!("shape ({nz},{ny},{nx}) e {e}"))
+        }
+    });
+}
+
+#[test]
+fn prop_blockgrid_partition() {
+    forall("blocks partition the domain", 80, |g| {
+        let dims = Dims::d3(g.usize_in(1, 20), g.usize_in(1, 20), g.usize_in(1, 20));
+        let b = g.usize_in(1, 12);
+        let grid = BlockGrid::new(dims, b).map_err(|e| e.to_string())?;
+        let mut covered = vec![0u8; dims.len()];
+        let data: Vec<f32> = (0..dims.len()).map(|i| i as f32).collect();
+        let mut block = Vec::new();
+        let mut total = 0usize;
+        for i in 0..grid.n_blocks() {
+            let e = grid.extent(i);
+            total += e.len();
+            grid.extract(&data, i, &mut block);
+            // mark coverage through scatter of a sentinel
+            let ones = vec![1.0f32; e.len()];
+            let mut cover_f: Vec<f32> = covered.iter().map(|&v| v as f32).collect();
+            grid.scatter(&ones, i, &mut cover_f);
+            for (c, v) in covered.iter_mut().zip(cover_f) {
+                *c = v as u8;
+            }
+        }
+        if total != dims.len() {
+            return Err(format!("extents sum {total} != {}", dims.len()));
+        }
+        if covered.iter().all(|&c| c == 1) {
+            Ok(())
+        } else {
+            Err("not all points covered".into())
+        }
+    });
+}
+
+#[test]
+fn prop_region_decode_equals_full_slice() {
+    forall("region decode equals full-decode slice", 25, |g| {
+        let dims = Dims::d3(g.usize_in(2, 10), g.usize_in(2, 14), g.usize_in(2, 14));
+        let mut data = Vec::with_capacity(dims.len());
+        let mut v = 0.0f64;
+        for _ in 0..dims.len() {
+            v += g.f64_in(-0.1, 0.1);
+            data.push(v as f32);
+        }
+        let cfg = CompressionConfig::new(ErrorBound::Abs(1e-3)).with_block_size(g.usize_in(2, 6));
+        let bytes = engine::compress(&data, dims, &cfg).map_err(|e| e.to_string())?;
+        let full = engine::decompress(&bytes).map_err(|e| e.to_string())?;
+        let (d, r, c) = dims.as_3d();
+        let oz = g.usize_in(0, d - 1);
+        let oy = g.usize_in(0, r - 1);
+        let ox = g.usize_in(0, c - 1);
+        let region = Region {
+            origin: (oz, oy, ox),
+            shape: (g.usize_in(1, d - oz), g.usize_in(1, r - oy), g.usize_in(1, c - ox)),
+        };
+        let got = engine::decompress_region(&bytes, region).map_err(|e| e.to_string())?;
+        let mut idx = 0;
+        for z in 0..region.shape.0 {
+            for y in 0..region.shape.1 {
+                for x in 0..region.shape.2 {
+                    let gidx = ((oz + z) * r + oy + y) * c + ox + x;
+                    if got[idx].to_bits() != full.data[gidx].to_bits() {
+                        return Err(format!("mismatch at {z},{y},{x}"));
+                    }
+                    idx += 1;
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_corrupted_archives_never_panic() {
+    // robustness: arbitrary single-byte corruption of a valid archive must
+    // produce Ok or a clean Err — never a panic (catch via prop harness)
+    forall("archive corruption is panic-free", 60, |g| {
+        let data = g.vec_f32_smooth(400);
+        let dims = Dims::d1(data.len());
+        let cfg = CompressionConfig::new(ErrorBound::Abs(1e-2)).with_block_size(8);
+        let mut bytes = ftsz::ft::compress(&data, dims, &cfg).map_err(|e| e.to_string())?;
+        let pos = g.usize_in(0, bytes.len() - 1);
+        let bit = g.usize_in(0, 7);
+        bytes[pos] ^= 1 << bit;
+        // any outcome is fine except a panic (the harness catches those)
+        let _ = ftsz::ft::decompress(&bytes);
+        let _ = engine::decompress(&bytes);
+        Ok(())
+    });
+}

@@ -1,0 +1,168 @@
+//! Parity: the AOT Pallas/JAX artifacts executed through PJRT must agree
+//! bit-for-bit with the native Rust twins (dual-quant Lorenzo transform and
+//! ABFT checksums), and approximately with the regression fit.
+//!
+//! These tests need `make artifacts` to have run; they skip (with a
+//! message) when the artifacts directory is absent so `cargo test` works in
+//! a fresh checkout.
+
+use ftsz::compressor::dualquant;
+use ftsz::ft::checksum;
+use ftsz::runtime::{default_artifacts_dir, BlockKernels, XlaRuntime};
+use ftsz::util::rng::Pcg32;
+
+const N: usize = 4;
+const B: usize = 4;
+
+fn runtime() -> Option<XlaRuntime> {
+    let dir = default_artifacts_dir();
+    if !dir.join("manifest.txt").is_file() {
+        eprintln!("SKIP: artifacts missing at {} — run `make artifacts`", dir.display());
+        return None;
+    }
+    Some(XlaRuntime::cpu(dir).expect("cpu runtime"))
+}
+
+fn batch(seed: u64) -> Vec<f32> {
+    let mut rng = Pcg32::new(seed);
+    let mut v = 0.0f64;
+    (0..N * B * B * B)
+        .map(|_| {
+            v += rng.range_f64(-0.02, 0.02);
+            v as f32
+        })
+        .collect()
+}
+
+#[test]
+fn lorenzo_bins_and_dcmp_bit_exact() {
+    let Some(rt) = runtime() else { return };
+    let k = BlockKernels::new(&rt, N, B).expect("bind variant");
+    let e = 1e-3f64;
+    let x = batch(1);
+    let out = k.compress(&x, e).expect("xla compress");
+    let blen = B * B * B;
+    for blk in 0..N {
+        let (mut bins, mut dcmp) = (Vec::new(), Vec::new());
+        dualquant::forward(&x[blk * blen..(blk + 1) * blen], (B, B, B), e, &mut bins, &mut dcmp);
+        assert_eq!(&out.bins[blk * blen..(blk + 1) * blen], &bins[..], "block {blk} bins");
+        let xla_bits: Vec<u32> =
+            out.dcmp[blk * blen..(blk + 1) * blen].iter().map(|v| v.to_bits()).collect();
+        let native_bits: Vec<u32> = dcmp.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(xla_bits, native_bits, "block {blk} dcmp");
+    }
+}
+
+#[test]
+fn checksums_bit_exact() {
+    let Some(rt) = runtime() else { return };
+    let k = BlockKernels::new(&rt, N, B).expect("bind variant");
+    let x = batch(2);
+    let blen = B * B * B;
+    let out = k.compress(&x, 1e-3).expect("xla compress");
+    for blk in 0..N {
+        let cs = checksum::checksum_f32(&x[blk * blen..(blk + 1) * blen]);
+        assert_eq!(out.sum_in[blk], cs.sum, "block {blk} sum_in");
+        assert_eq!(out.isum_in[blk], cs.isum, "block {blk} isum_in");
+        let qs = checksum::checksum_i32(&out.bins[blk * blen..(blk + 1) * blen]);
+        assert_eq!(out.sum_q[blk], qs.sum, "block {blk} sum_q");
+        assert_eq!(out.isum_q[blk], qs.isum, "block {blk} isum_q");
+        let ds = checksum::checksum_f32(&out.dcmp[blk * blen..(blk + 1) * blen]);
+        assert_eq!(out.sum_dc[blk], ds.sum, "block {blk} sum_dc");
+    }
+    // standalone checksum graph agrees with the fused one
+    let (s, i) = k.checksums_f32(&x).expect("checksum graph");
+    assert_eq!(s, out.sum_in);
+    assert_eq!(i, out.isum_in);
+}
+
+#[test]
+fn xla_decompress_roundtrips_with_native_forward() {
+    let Some(rt) = runtime() else { return };
+    let k = BlockKernels::new(&rt, N, B).expect("bind variant");
+    let e = 1e-2f64;
+    let x = batch(3);
+    let blen = B * B * B;
+    // native forward → XLA inverse
+    let mut all_bins = Vec::new();
+    let mut all_dcmp = Vec::new();
+    for blk in 0..N {
+        let (mut bins, mut dcmp) = (Vec::new(), Vec::new());
+        dualquant::forward(&x[blk * blen..(blk + 1) * blen], (B, B, B), e, &mut bins, &mut dcmp);
+        all_bins.extend(bins);
+        all_dcmp.extend(dcmp);
+    }
+    let (back, sums) = k.decompress(&all_bins, e).expect("xla decompress");
+    let back_bits: Vec<u32> = back.iter().map(|v| v.to_bits()).collect();
+    let want_bits: Vec<u32> = all_dcmp.iter().map(|v| v.to_bits()).collect();
+    assert_eq!(back_bits, want_bits);
+    for blk in 0..N {
+        let cs = checksum::checksum_f32(&all_dcmp[blk * blen..(blk + 1) * blen]);
+        assert_eq!(sums[blk], cs.sum);
+    }
+    // the error bound holds end to end
+    for (a, b) in x.iter().zip(back.iter()) {
+        assert!((*a as f64 - *b as f64).abs() <= e * 1.05);
+    }
+}
+
+#[test]
+fn regression_coeffs_match_native() {
+    let Some(rt) = runtime() else { return };
+    let k = BlockKernels::new(&rt, N, B).expect("bind variant");
+    let x = batch(4);
+    let blen = B * B * B;
+    let coeffs = k.regression(&x).expect("regression graph");
+    assert_eq!(coeffs.len(), N * 4);
+    for blk in 0..N {
+        let native = ftsz::compressor::regression::fit(&x[blk * blen..(blk + 1) * blen], (B, B, B));
+        for j in 0..4 {
+            let (a, b) = (coeffs[blk * 4 + j], native[j]);
+            assert!(
+                (a - b).abs() <= 1e-4 * (1.0 + b.abs()),
+                "block {blk} c{j}: xla {a} vs native {b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn manifest_lists_bound_variants() {
+    let Some(rt) = runtime() else { return };
+    let names = rt.manifest().expect("manifest");
+    for needed in ["compress_n4_b4", "decompress_n4_b4", "compress_n64_b10"] {
+        assert!(names.iter().any(|n| n == needed), "missing artifact {needed}");
+    }
+    assert_eq!(rt.platform(), "cpu");
+}
+
+#[test]
+fn offload_archives_byte_identical_native_vs_xla() {
+    // the strongest parity statement: the dual-quant engine produces the
+    // SAME archive whether blocks run natively or through the AOT XLA
+    // artifacts, because the two transforms are bit-identical.
+    let Some(rt) = runtime() else { return };
+    let k = BlockKernels::new(&rt, 4, 4).expect("bind variant");
+    let f = ftsz::data::synthetic::hurricane_field(
+        "t",
+        ftsz::data::Dims::d3(8, 10, 10), // mixes full and truncated blocks
+        5,
+    );
+    let cfg = ftsz::compressor::CompressionConfig::new(
+        ftsz::compressor::ErrorBound::Rel(1e-3),
+    )
+    .with_block_size(4);
+    let native = ftsz::compressor::offload::compress(&f.data, f.dims, &cfg, None).unwrap();
+    let xla = ftsz::compressor::offload::compress(&f.data, f.dims, &cfg, Some(&k)).unwrap();
+    assert_eq!(native, xla, "offload archives must be byte-identical");
+    // and they decode within the bound through the standard engine
+    let dec = ftsz::compressor::engine::decompress(&native).unwrap();
+    let bound = cfg.error_bound.absolute(&f.data);
+    let max = f
+        .data
+        .iter()
+        .zip(&dec.data)
+        .map(|(a, b)| (*a as f64 - *b as f64).abs())
+        .fold(0.0f64, f64::max);
+    assert!(max <= bound, "bound violated: {max} > {bound}");
+}
