@@ -56,5 +56,17 @@ fn main() -> ftsz::Result<()> {
         field.data.len(),
         t.elapsed().as_secs_f64() * 1e3
     );
+
+    // block-parallel: same field across all cores, byte-identical archive
+    let workers = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    let t = std::time::Instant::now();
+    let par_bytes =
+        ft::compress(&field.data, field.dims, &cfg.clone().with_workers(workers))?;
+    let par_s = t.elapsed().as_secs_f64();
+    assert_eq!(par_bytes, bytes, "parallelism must never change the archive");
+    println!(
+        "block-parallel ftrsz: {workers} workers, {:.3}s, archive byte-identical",
+        par_s
+    );
     Ok(())
 }

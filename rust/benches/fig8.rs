@@ -24,6 +24,10 @@ fn main() {
     let cfg = cfg_rel(1e-4); // the paper's NYX bound
     let sample = runs_or(2, 6);
     println!(
+        "note: one core per simulated rank — weak_scaling_run pins block-level \
+         parallelism to 1 worker (single-field scaling lives in the hotpath bench)"
+    );
+    println!(
         "{:>6} {:>7} | {:>9} {:>9} {:>9} | {:>9} {:>9} {:>9} | {:>7}",
         "ranks", "engine", "comp s", "write s", "dump s", "decomp s", "read s", "load s", "ratio"
     );

@@ -6,9 +6,9 @@ mod common;
 
 use common::*;
 use ftsz::compressor::huffman::HuffmanTable;
-use ftsz::compressor::{dualquant, engine, CompressionConfig, ErrorBound};
+use ftsz::compressor::{dualquant, engine, CompressionConfig, ErrorBound, Parallelism};
 use ftsz::data::synthetic::Profile;
-use ftsz::ft::checksum;
+use ftsz::ft::{self, checksum};
 use ftsz::inject::Engine;
 use ftsz::util::bits::{BitReader, BitWriter};
 
@@ -36,6 +36,64 @@ fn main() {
             bytes_in as f64 / archive.len() as f64
         );
     }
+
+    // block-parallel scaling: same single field, archives must stay
+    // byte-identical while wall time drops with the worker count
+    println!("--- block-parallel single-field scaling (rsz / ftrsz / decode) ---");
+    let (s1, base) = time_median(reps, || {
+        engine::compress(&f.data, f.dims, &cfg_rel(1e-4)).expect("rsz w1")
+    });
+    println!("{:<22} {:>8.1} MB/s (1 worker baseline)", "rsz compress", mbps(bytes_in, s1));
+    for w in [2usize, 4, 8] {
+        let cfgw = cfg_rel(1e-4).with_workers(w);
+        let (sw, bytes) =
+            time_median(reps, || engine::compress(&f.data, f.dims, &cfgw).expect("rsz wN"));
+        assert_eq!(bytes, base, "parallel archive must be byte-identical");
+        println!(
+            "{:<22} {:>8.1} MB/s ({:.2}x @ {w} workers)",
+            "rsz compress",
+            mbps(bytes_in, sw),
+            s1 / sw
+        );
+    }
+    let (sf1, fbase) = time_median(reps, || {
+        ft::compress(&f.data, f.dims, &cfg_rel(1e-4)).expect("ftrsz w1")
+    });
+    println!("{:<22} {:>8.1} MB/s (1 worker baseline)", "ftrsz compress", mbps(bytes_in, sf1));
+    for w in [4usize] {
+        let cfgw = cfg_rel(1e-4).with_workers(w);
+        let (sw, bytes) =
+            time_median(reps, || ft::compress(&f.data, f.dims, &cfgw).expect("ftrsz wN"));
+        assert_eq!(bytes, fbase, "parallel ft archive must be byte-identical");
+        println!(
+            "{:<22} {:>8.1} MB/s ({:.2}x @ {w} workers)",
+            "ftrsz compress",
+            mbps(bytes_in, sw),
+            sf1 / sw
+        );
+    }
+    let (sd1, _) = time_median(reps, || engine::decompress(&base).expect("decode w1"));
+    let (sd4, _) = time_median(reps, || {
+        engine::decompress_with(&base, Parallelism::Fixed(4)).expect("decode w4")
+    });
+    println!(
+        "{:<22} {:>8.1} MB/s -> {:>8.1} MB/s ({:.2}x @ 4 workers)",
+        "rsz decompress",
+        mbps(bytes_in, sd1),
+        mbps(bytes_in, sd4),
+        sd1 / sd4
+    );
+    let (sv1, _) = time_median(reps, || ft::decompress(&fbase).expect("verify w1"));
+    let (sv4, _) = time_median(reps, || {
+        ft::decompress_with(&fbase, Parallelism::Fixed(4)).expect("verify w4")
+    });
+    println!(
+        "{:<22} {:>8.1} MB/s -> {:>8.1} MB/s ({:.2}x @ 4 workers)",
+        "ftrsz verify+decode",
+        mbps(bytes_in, sv1),
+        mbps(bytes_in, sv4),
+        sv1 / sv4
+    );
 
     // stage: sequential lorenzo+quantize via the engine with lorenzo-only
     let cfg_lor = CompressionConfig::new(ErrorBound::Rel(1e-4))

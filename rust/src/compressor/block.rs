@@ -57,6 +57,12 @@ impl Region {
 }
 
 /// The block grid: dims × block edge → block indexing and gather/scatter.
+///
+/// Immutable after construction (plain data, `Sync`): the block-parallel
+/// engine shares one grid across worker threads, each calling
+/// [`BlockGrid::extract`] into its own scratch buffer. [`BlockGrid::scatter`]
+/// writes to disjoint output ranges per block but takes `&mut [f32]`, so
+/// the parallel decoder decodes concurrently and scatters in block order.
 #[derive(Debug, Clone)]
 pub struct BlockGrid {
     dims: Dims,

@@ -10,6 +10,15 @@
 //! * one Huffman stream over the whole dataset, Zstd-compressed — the best
 //!   compression ratio (Table 2's `sz` column) but no random access and no
 //!   error confinement.
+//!
+//! **`CompressionConfig::parallelism` is deliberately ignored here.** The
+//! classic Lorenzo recurrence reads *decompressed* neighbors through the
+//! global array, so point `(z,y,x)` of one block depends on points of the
+//! previously-compressed neighbor blocks — a loop-carried dependency chain
+//! across the whole sweep. Only the independent-block engines
+//! ([`super::engine`], [`crate::ft`]) can fan blocks out; that is exactly
+//! the paper's redesign, and the reason `sz` keeps this sequential
+//! reference path.
 
 use super::block::BlockGrid;
 use super::engine::{Arena, Hooks, NoHooks};

@@ -39,6 +39,13 @@ use crate::util::bits::{BitReader, BitWriter};
 /// All methods default to no-ops; the production path pays only an inlined
 /// call that the optimizer removes for [`NoHooks`].
 pub trait Hooks {
+    /// True only when every method is a no-op (see [`NoHooks`]). The
+    /// block-parallel core requires it: injection hooks are `&mut self`
+    /// state machines whose semantics (mode-B "between blocks" arena
+    /// access, first-evaluation perturbations) are inherently tied to the
+    /// sequential block order, so any hooked run stays on the sequential
+    /// path regardless of [`super::Parallelism`].
+    const PARALLEL_SAFE: bool = false;
     /// Mutate the in-memory input *after* the input checksums were taken
     /// (mode-A input memory errors land here).
     fn on_input_ready(&mut self, _input: &mut [f32]) {}
@@ -77,7 +84,9 @@ pub trait Hooks {
 /// No-op hooks (production path).
 #[derive(Debug, Default)]
 pub struct NoHooks;
-impl Hooks for NoHooks {}
+impl Hooks for NoHooks {
+    const PARALLEL_SAFE: bool = true;
+}
 
 /// Mutable view of every dominant data structure live during compression —
 /// the BLCR "whole memory" substitute for mode-B injection.
@@ -155,6 +164,10 @@ pub struct Decompressed {
 // ---------------------------------------------------------------------------
 
 /// Run Algorithm 1 (parameterized).
+///
+/// With `cfg.parallelism` > 1 worker and parallel-safe (no-op) hooks this
+/// dispatches to the block-parallel core, which produces **byte-identical
+/// archives**: parallelism reorders computation, never the format.
 pub fn compress_core<H: Hooks>(
     data: &[f32],
     dims: Dims,
@@ -169,6 +182,10 @@ pub fn compress_core<H: Hooks>(
             data.len(),
             dims
         )));
+    }
+    let workers = cfg.parallelism.workers();
+    if H::PARALLEL_SAFE && workers > 1 {
+        return compress_core_parallel(data, dims, cfg, params, workers);
     }
     let bound = cfg.error_bound.absolute(data);
     let q = Quantizer::new(bound, cfg.quant_radius);
@@ -359,6 +376,214 @@ pub fn compress_core<H: Hooks>(
     Ok(CoreOutput { archive, stats, events })
 }
 
+/// Everything one block contributes to the archive and the run report —
+/// produced independently per block by the parallel core, committed in
+/// block order.
+struct BlockArtifacts {
+    selection: Selection,
+    codes: Vec<u32>,
+    unpred: Vec<f32>,
+    /// Stored decompressed-data checksum (ft mode), else 0.
+    dc_sum: u64,
+    events: Vec<SdcEvent>,
+    line7_fallbacks: usize,
+    dup_pred_catches: u64,
+    dup_dcmp_catches: u64,
+}
+
+/// Block-parallel Algorithm 1: the per-block work (checksum → estimate →
+/// predict → quantize, then Huffman encoding once the shared table exists)
+/// runs over [`crate::util::threadpool::parallel_map`], which returns
+/// results in block index order.
+/// Every array the archive serializes (codes, unpredictables, coefficients,
+/// per-block payloads, `sum_dc`) is concatenated in that order, so the
+/// bytes are identical to the sequential path at any worker count.
+///
+/// Only reachable with parallel-safe (no-op) hooks, so the input working
+/// copy is never perturbed and stays shared-immutable; an input-checksum
+/// mismatch here can only mean a real in-flight memory fault, which the
+/// per-block verify repairs in the block's private scratch copy.
+fn compress_core_parallel(
+    data: &[f32],
+    dims: Dims,
+    cfg: &CompressionConfig,
+    params: CoreParams,
+    workers: usize,
+) -> Result<CoreOutput> {
+    let bound = cfg.error_bound.absolute(data);
+    let q = Quantizer::new(bound, cfg.quant_radius);
+    let grid = BlockGrid::new(dims, cfg.block_size)?;
+    let n_blocks = grid.n_blocks();
+
+    // ---- Alg.1 l.1-32 fan-out: blocks are fully independent ----
+    let arts: Vec<BlockArtifacts> = crate::util::threadpool::parallel_map(n_blocks, workers, |bi| {
+        let mut scratch = Vec::new();
+        grid.extract(data, bi, &mut scratch);
+        let shape = grid.extent(bi).shape;
+        let mut events = Vec::new();
+
+        // l.3-4: input checksum before the estimation pass reads the block
+        let in_sum = if params.ft { Some(checksum::checksum_f32(&scratch)) } else { None };
+
+        // l.6-9: estimation + selection (naturally resilient)
+        let (coeffs, e_lor, e_reg) = sampling::estimate(&scratch, shape);
+        let sel = sampling::select(&scratch, shape, cfg.predictor, coeffs, e_lor, e_reg);
+
+        // l.11: verify + correct the block's memory after the estimation
+        // window (mirrors the sequential pass; repairs land in scratch)
+        if let Some(sums) = in_sum {
+            match checksum::verify_correct_f32(&mut scratch, sums) {
+                Correction::Clean => {}
+                Correction::Corrected { index } => {
+                    events.push(SdcEvent { kind: SdcKind::InputCorrected, block: bi, index });
+                }
+                Correction::Failed => {
+                    events.push(SdcEvent {
+                        kind: SdcKind::InputUncorrectable,
+                        block: bi,
+                        index: 0,
+                    });
+                }
+            }
+        }
+
+        // l.12-32: predict → quantize → reconstruct
+        let mut local = CompressStats::default();
+        let mut codes = Vec::with_capacity(scratch.len());
+        let mut unpred = Vec::new();
+        let mut dcmp_block = Vec::new();
+        compress_block(
+            bi,
+            &scratch,
+            shape,
+            &sel,
+            &q,
+            params.protect,
+            &mut NoHooks,
+            &mut codes,
+            &mut unpred,
+            &mut dcmp_block,
+            &mut local,
+        );
+
+        // l.24 + l.33-35: bin checksum, verified before the codes feed the
+        // shared Huffman table; l.29: decompressed-data checksum
+        let mut dc_sum = 0u64;
+        if params.ft {
+            let q_sum = checksum::checksum_u32(&codes);
+            match checksum::verify_correct_u32(&mut codes, q_sum) {
+                Correction::Clean => {}
+                Correction::Corrected { index } => {
+                    events.push(SdcEvent { kind: SdcKind::BinCorrected, block: bi, index });
+                }
+                Correction::Failed => {
+                    events.push(SdcEvent { kind: SdcKind::BinUncorrectable, block: bi, index: 0 });
+                }
+            }
+            dc_sum = checksum::checksum_f32(&dcmp_block).sum;
+        }
+
+        BlockArtifacts {
+            selection: sel,
+            codes,
+            unpred,
+            dc_sum,
+            events,
+            line7_fallbacks: local.line7_fallbacks,
+            dup_pred_catches: local.dup_pred_catches,
+            dup_dcmp_catches: local.dup_dcmp_catches,
+        }
+    });
+
+    // ---- ordered commit: identical layout to the sequential path ----
+    let mut stats = CompressStats {
+        n_points: data.len(),
+        n_blocks,
+        ..Default::default()
+    };
+    let mut events = Vec::new();
+    for a in &arts {
+        match a.selection.predictor {
+            Predictor::Lorenzo => stats.lorenzo_blocks += 1,
+            Predictor::Regression | Predictor::DualQuant => stats.regression_blocks += 1,
+        }
+        stats.n_unpred += a.unpred.len();
+        stats.line7_fallbacks += a.line7_fallbacks;
+        stats.dup_pred_catches += a.dup_pred_catches;
+        stats.dup_dcmp_catches += a.dup_dcmp_catches;
+        events.extend(a.events.iter().copied());
+    }
+
+    // l.36: global frequency table over all codes, in block order
+    let n_symbols = q.n_symbols();
+    let mut freqs = vec![0u64; n_symbols];
+    for a in &arts {
+        for &c in &a.codes {
+            let ci = c as usize;
+            if ci >= n_symbols {
+                return Err(Error::CrashEquivalent(format!(
+                    "quantization code {c} outside symbol table ({n_symbols})"
+                )));
+            }
+            freqs[ci] += 1;
+        }
+    }
+    let table = HuffmanTable::from_frequencies(&freqs)?;
+
+    // l.37-38: per-block Huffman encoding against the shared table is
+    // independent again — second fan-out, committed in block order
+    let encoded: Vec<Result<BlockPayload>> =
+        crate::util::threadpool::parallel_map(n_blocks, workers, |bi| {
+            let a = &arts[bi];
+            let mut w = BitWriter::with_capacity(a.codes.len() / 4 + 8);
+            for &c in &a.codes {
+                table.encode(&mut w, c)?;
+            }
+            let payload_bits = w.bit_len() as u64;
+            Ok(BlockPayload {
+                meta: BlockMeta {
+                    predictor: a.selection.predictor,
+                    coeffs: a.selection.coeffs,
+                    n_unpred: a.unpred.len() as u32,
+                    payload_bits,
+                },
+                bytes: w.finish(),
+            })
+        });
+    let mut blocks = Vec::with_capacity(n_blocks);
+    for payload in encoded {
+        blocks.push(payload?);
+    }
+
+    let mut unpred = Vec::with_capacity(stats.n_unpred);
+    let mut dc_sums = Vec::with_capacity(n_blocks);
+    for a in &arts {
+        unpred.extend_from_slice(&a.unpred);
+        dc_sums.push(a.dc_sum);
+    }
+
+    let writer = Writer {
+        header: Header {
+            flags: 0,
+            dims,
+            block_size: cfg.block_size as u32,
+            quant_radius: cfg.quant_radius,
+            error_bound: bound,
+            n_blocks: n_blocks as u64,
+        },
+        table: &table,
+        blocks,
+        classic_payload: None,
+        unpred: &unpred,
+        sum_dc: if params.ft { Some(&dc_sums) } else { None },
+        zstd_level: cfg.zstd_level,
+        payload_zstd: cfg.payload_zstd,
+    };
+    let archive = writer.write()?;
+    stats.compressed_bytes = archive.len();
+    Ok(CoreOutput { archive, stats, events })
+}
+
 /// Compress one block (both predictors), appending codes/unpred and filling
 /// `dcmp_block` with the reconstruction the decompressor will produce.
 #[allow(clippy::too_many_arguments)]
@@ -468,6 +693,10 @@ fn compress_block<H: Hooks>(
 /// Decompression-side fault hooks (first decode pass of each block only —
 /// the paper's §6.4.4 decompression-error experiment).
 pub trait DecompressHooks {
+    /// True only when every method is a no-op — required for the
+    /// block-parallel decode path (same contract as [`Hooks::PARALLEL_SAFE`]).
+    const PARALLEL_SAFE: bool = false;
+
     /// Perturb a predicted value during block decoding.
     fn corrupt_pred(&mut self, _block: usize, _point: usize, pred: f32) -> f32 {
         pred
@@ -477,7 +706,9 @@ pub trait DecompressHooks {
 /// No-op decompression hooks.
 #[derive(Debug, Default)]
 pub struct NoDecompressHooks;
-impl DecompressHooks for NoDecompressHooks {}
+impl DecompressHooks for NoDecompressHooks {
+    const PARALLEL_SAFE: bool = true;
+}
 
 /// Decode one block into `out_block` (dense, block-local).
 pub(crate) fn decode_block<H: DecompressHooks>(
@@ -573,10 +804,17 @@ pub(crate) fn open(bytes: &[u8]) -> Result<(Archive, BlockGrid, Quantizer)> {
 }
 
 /// Full decompression with optional per-block FT verification.
+///
+/// `par` fans the per-block decode (and, in verify mode, the checksum +
+/// re-execution repair — both block-local) over worker threads; blocks are
+/// scattered into the output in index order, so the result is bitwise
+/// identical to the sequential path. Hooked runs (injection) stay
+/// sequential, as on the compression side.
 pub(crate) fn decompress_core<H: DecompressHooks>(
     bytes: &[u8],
     hooks: &mut H,
     verify: bool,
+    par: super::Parallelism,
 ) -> Result<(Decompressed, DecompressReport)> {
     let (archive, grid, q) = open(bytes)?;
     if verify && archive.sum_dc.is_none() {
@@ -587,6 +825,54 @@ pub(crate) fn decompress_core<H: DecompressHooks>(
     let dims = archive.header.dims;
     let mut out = vec![0.0f32; dims.len()];
     let mut report = DecompressReport::default();
+    let workers = par.workers();
+    if H::PARALLEL_SAFE && workers > 1 {
+        let n_blocks = grid.n_blocks();
+        let results: Vec<Result<(Vec<f32>, bool)>> =
+            crate::util::threadpool::parallel_map(n_blocks, workers, |bi| {
+                let mut block = Vec::new();
+                decode_block(&archive, &grid, &q, bi, &mut NoDecompressHooks, true, &mut block)?;
+                let mut reexecuted = false;
+                if verify {
+                    let sums = archive.sum_dc.as_ref().unwrap();
+                    if checksum::checksum_f32(&block).sum != sums[bi] {
+                        // Alg.2 l.14: block-local re-execution repair
+                        reexecuted = true;
+                        decode_block(
+                            &archive,
+                            &grid,
+                            &q,
+                            bi,
+                            &mut NoDecompressHooks,
+                            false,
+                            &mut block,
+                        )?;
+                        if checksum::checksum_f32(&block).sum != sums[bi] {
+                            return Err(Error::SdcInCompression(format!("block {bi}")));
+                        }
+                    }
+                }
+                Ok((block, reexecuted))
+            });
+        // commit in block order; `?` surfaces the lowest failing block
+        // first, exactly like the sequential sweep
+        for (bi, r) in results.into_iter().enumerate() {
+            let (block, reexecuted) = r?;
+            if reexecuted {
+                report.blocks_reexecuted += 1;
+                report.events.push(SdcEvent {
+                    kind: SdcKind::DecompCorrected,
+                    block: bi,
+                    index: 0,
+                });
+            }
+            grid.scatter(&block, bi, &mut out);
+        }
+        return Ok((
+            Decompressed { data: out, dims, error_bound: archive.header.error_bound },
+            report,
+        ));
+    }
     let mut block = Vec::new();
     for bi in 0..grid.n_blocks() {
         decode_block(&archive, &grid, &q, bi, hooks, true, &mut block)?;
@@ -638,16 +924,55 @@ pub fn compress_with_hooks<H: Hooks>(
 
 /// Decompress a (rsz or ftrsz) archive without FT verification.
 pub fn decompress(bytes: &[u8]) -> Result<Decompressed> {
-    Ok(decompress_core(bytes, &mut NoDecompressHooks, false)?.0)
+    decompress_with(bytes, super::Parallelism::Sequential)
+}
+
+/// Decompress with a block-parallel worker pool. Output is bitwise
+/// identical to [`decompress`] at any worker count.
+pub fn decompress_with(bytes: &[u8], par: super::Parallelism) -> Result<Decompressed> {
+    Ok(decompress_core(bytes, &mut NoDecompressHooks, false, par)?.0)
 }
 
 /// Random-access decompression of a sub-region (paper §5.1, Fig. 4):
 /// touches only the blocks intersecting `region`.
 pub fn decompress_region(bytes: &[u8], region: Region) -> Result<Vec<f32>> {
+    decompress_region_with(bytes, region, super::Parallelism::Sequential)
+}
+
+/// Random-access region decompression with a block-parallel worker pool:
+/// the intersecting blocks decode concurrently, then copy into the region
+/// buffer in block order (bitwise identical to [`decompress_region`]).
+pub fn decompress_region_with(
+    bytes: &[u8],
+    region: Region,
+    par: super::Parallelism,
+) -> Result<Vec<f32>> {
     let (archive, grid, q) = open(bytes)?;
     let mut out = vec![0.0f32; region.len()];
+    let hits = grid.blocks_intersecting(region)?;
+    let workers = par.workers();
+    if workers > 1 && hits.len() > 1 {
+        let decoded: Vec<Result<Vec<f32>>> =
+            crate::util::threadpool::parallel_map(hits.len(), workers, |i| {
+                let mut block = Vec::new();
+                decode_block(
+                    &archive,
+                    &grid,
+                    &q,
+                    hits[i],
+                    &mut NoDecompressHooks,
+                    false,
+                    &mut block,
+                )?;
+                Ok(block)
+            });
+        for (i, r) in decoded.into_iter().enumerate() {
+            grid.copy_block_into_region(&r?, hits[i], region, &mut out);
+        }
+        return Ok(out);
+    }
     let mut block = Vec::new();
-    for bi in grid.blocks_intersecting(region)? {
+    for bi in hits {
         decode_block(&archive, &grid, &q, bi, &mut NoDecompressHooks, false, &mut block)?;
         grid.copy_block_into_region(&block, bi, region, &mut out);
     }
@@ -785,6 +1110,66 @@ mod tests {
                 "block size {b}"
             );
         }
+    }
+
+    #[test]
+    fn parallel_archives_byte_identical() {
+        use crate::compressor::Parallelism;
+        let f = synthetic::hurricane_field("t", Dims::d3(9, 14, 14), 6);
+        let base = compress(&f.data, f.dims, &cfg(1e-3)).unwrap();
+        for w in [2usize, 3, 8] {
+            let c = cfg(1e-3).with_workers(w);
+            assert_eq!(compress(&f.data, f.dims, &c).unwrap(), base, "workers {w}");
+        }
+        // Auto must also match
+        let c = cfg(1e-3).with_parallelism(Parallelism::Auto);
+        assert_eq!(compress(&f.data, f.dims, &c).unwrap(), base);
+    }
+
+    #[test]
+    fn parallel_decompression_bitwise_identical() {
+        use crate::compressor::Parallelism;
+        let f = synthetic::nyx_velocity("v", Dims::d3(12, 12, 12), 8);
+        let bytes = compress(&f.data, f.dims, &cfg(1e-3)).unwrap();
+        let seq = decompress(&bytes).unwrap();
+        let par = decompress_with(&bytes, Parallelism::Fixed(4)).unwrap();
+        assert_eq!(
+            seq.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            par.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn parallel_region_decode_matches_sequential() {
+        use crate::compressor::Parallelism;
+        let f = synthetic::hurricane_field("t", Dims::d3(10, 16, 16), 3);
+        let bytes = compress(&f.data, f.dims, &cfg(1e-3)).unwrap();
+        let region = Region { origin: (2, 4, 1), shape: (6, 9, 11) };
+        let seq = decompress_region(&bytes, region).unwrap();
+        let par = decompress_region_with(&bytes, region, Parallelism::Fixed(4)).unwrap();
+        assert_eq!(
+            seq.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            par.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn parallel_stats_match_sequential() {
+        let f = synthetic::scale_letkf_field("q", Dims::d3(8, 16, 16), 2);
+        let s1 = compress_with_hooks(&f.data, f.dims, &cfg(1e-4), &mut NoHooks)
+            .unwrap()
+            .stats;
+        let s4 =
+            compress_with_hooks(&f.data, f.dims, &cfg(1e-4).with_workers(4), &mut NoHooks)
+                .unwrap()
+                .stats;
+        assert_eq!(s1.n_points, s4.n_points);
+        assert_eq!(s1.n_blocks, s4.n_blocks);
+        assert_eq!(s1.lorenzo_blocks, s4.lorenzo_blocks);
+        assert_eq!(s1.regression_blocks, s4.regression_blocks);
+        assert_eq!(s1.n_unpred, s4.n_unpred);
+        assert_eq!(s1.line7_fallbacks, s4.line7_fallbacks);
+        assert_eq!(s1.compressed_bytes, s4.compressed_bytes);
     }
 
     #[test]

@@ -1,8 +1,14 @@
 //! Lossless backend (SZ stage 4).
 //!
-//! The paper uses Zstd [5]; the vendored `zstd` crate provides the real
-//! codec. A `Store` codec exists for ablations (bench `cr_bound` and the
-//! fig5 overhead decomposition) and as a deterministic fallback.
+//! The paper uses Zstd [5]; the optional `zstd` cargo feature provides the
+//! real codec. A `Store` codec exists for ablations (bench `cr_bound` and
+//! the fig5 overhead decomposition) and as a deterministic fallback: when
+//! the crate is built *without* the `zstd` feature (the offline default —
+//! no crates can be fetched), [`compress`] silently downgrades
+//! `Codec::Zstd` sections to `Store`. The format stays self-describing
+//! through the tag byte, so archives written either way decode everywhere
+//! zstd is available; zstd-tagged sections fail with a clean
+//! [`Error::Lossless`] on a store-only build.
 
 use crate::error::{Error, Result};
 
@@ -34,6 +40,7 @@ pub fn compress(data: &[u8], codec: Codec) -> Result<Vec<u8>> {
             out.extend_from_slice(data);
             Ok(out)
         }
+        #[cfg(feature = "zstd")]
         Codec::Zstd(level) => {
             let mut out = vec![codec.tag()];
             let body = zstd::bulk::compress(data, level)
@@ -41,6 +48,8 @@ pub fn compress(data: &[u8], codec: Codec) -> Result<Vec<u8>> {
             out.extend_from_slice(&body);
             Ok(out)
         }
+        #[cfg(not(feature = "zstd"))]
+        Codec::Zstd(_level) => compress(data, Codec::Store),
     }
 }
 
@@ -60,8 +69,13 @@ pub fn decompress(data: &[u8], max_size: usize) -> Result<Vec<u8>> {
             }
             Ok(body.to_vec())
         }
+        #[cfg(feature = "zstd")]
         1 => zstd::bulk::decompress(body, max_size)
             .map_err(|e| Error::Lossless(format!("zstd decompress: {e}"))),
+        #[cfg(not(feature = "zstd"))]
+        1 => Err(Error::Lossless(
+            "zstd-tagged section but the `zstd` feature is not compiled in".into(),
+        )),
         other => Err(Error::Lossless(format!("unknown lossless codec tag {other}"))),
     }
 }
@@ -72,12 +86,26 @@ mod tests {
     use crate::util::rng::Pcg32;
 
     #[test]
+    #[cfg(feature = "zstd")]
     fn zstd_roundtrip_compressible() {
         let data: Vec<u8> = (0..100_000u32).map(|i| (i / 97) as u8).collect();
         let packed = compress(&data, Codec::Zstd(3)).unwrap();
         assert!(packed.len() < data.len() / 4, "zstd should squash runs");
         let back = decompress(&packed, data.len()).unwrap();
         assert_eq!(back, data);
+    }
+
+    #[test]
+    #[cfg(not(feature = "zstd"))]
+    fn zstd_request_falls_back_to_store() {
+        let data: Vec<u8> = (0..1000u32).map(|i| i as u8).collect();
+        let packed = compress(&data, Codec::Zstd(3)).unwrap();
+        assert_eq!(packed[0], Codec::Store.tag(), "store-only build must tag as store");
+        assert_eq!(decompress(&packed, data.len()).unwrap(), data);
+        // a zstd-tagged section must fail cleanly, not crash
+        let mut alien = packed.clone();
+        alien[0] = 1;
+        assert!(decompress(&alien, data.len()).is_err());
     }
 
     #[test]

@@ -87,6 +87,52 @@ pub enum PredictorPolicy {
     RegressionOnly,
 }
 
+/// How many worker threads the block-parallel engine core may use.
+///
+/// The independent-block design makes every block's predict → quantize →
+/// Huffman work embarrassingly parallel; this knob only reorders the
+/// *computation*, never the archive: results are committed in block order,
+/// so the bytes are identical at any worker count (property-tested in
+/// `rust/tests/property.rs`). The [`classic`] engine ignores it — its
+/// Lorenzo predictor reads decompressed neighbors across block boundaries,
+/// a loop-carried dependency that serializes the whole sweep.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Parallelism {
+    /// One thread, zero spawn overhead (the reference path, default).
+    #[default]
+    Sequential,
+    /// Exactly `n` worker threads (values < 1 are clamped to 1).
+    Fixed(usize),
+    /// One worker per available hardware thread.
+    Auto,
+}
+
+impl Parallelism {
+    /// The one place the worker-count convention lives — shared by the
+    /// CLI `--workers` flag, the `workers` config key, and
+    /// [`CompressionConfig::with_workers`]: `0` = one worker per core
+    /// ([`Parallelism::Auto`]), `1` = [`Parallelism::Sequential`],
+    /// `n > 1` = [`Parallelism::Fixed`].
+    pub fn from_workers(n: usize) -> Self {
+        match n {
+            0 => Parallelism::Auto,
+            1 => Parallelism::Sequential,
+            n => Parallelism::Fixed(n),
+        }
+    }
+
+    /// Resolve to a concrete worker count (≥ 1).
+    pub fn workers(&self) -> usize {
+        match *self {
+            Parallelism::Sequential => 1,
+            Parallelism::Fixed(n) => n.max(1),
+            Parallelism::Auto => {
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+            }
+        }
+    }
+}
+
 /// Knobs shared by all engines.
 #[derive(Debug, Clone)]
 pub struct CompressionConfig {
@@ -105,6 +151,10 @@ pub struct CompressionConfig {
     /// narrows the ratio gap to classic sz at the cost of one extra zstd
     /// pass before any random access — see the `table2` bench).
     pub payload_zstd: bool,
+    /// Worker threads for the block-parallel core (rsz/ftrsz compression;
+    /// decompression takes its own knob, see `engine::decompress_with`).
+    /// Archives are byte-identical at any setting.
+    pub parallelism: Parallelism,
 }
 
 impl CompressionConfig {
@@ -117,7 +167,20 @@ impl CompressionConfig {
             zstd_level: 3,
             predictor: PredictorPolicy::Auto,
             payload_zstd: false,
+            parallelism: Parallelism::Sequential,
         }
+    }
+
+    /// Builder: worker threads for the block-parallel core.
+    pub fn with_parallelism(mut self, p: Parallelism) -> Self {
+        self.parallelism = p;
+        self
+    }
+
+    /// Builder: worker-count shorthand; see [`Parallelism::from_workers`]
+    /// for the convention (`0` = auto, `1` = sequential, else fixed).
+    pub fn with_workers(self, n: usize) -> Self {
+        self.with_parallelism(Parallelism::from_workers(n))
     }
 
     /// Builder: Zstd the payload section too (ablation).
@@ -185,6 +248,21 @@ mod tests {
         let data = [5.0f32; 4];
         // constant field: range collapses, fall back to 1.0 scale
         assert_eq!(ErrorBound::Rel(1e-2).absolute(&data), 1e-2);
+    }
+
+    #[test]
+    fn parallelism_resolves_to_positive_workers() {
+        assert_eq!(Parallelism::Sequential.workers(), 1);
+        assert_eq!(Parallelism::Fixed(0).workers(), 1);
+        assert_eq!(Parallelism::Fixed(6).workers(), 6);
+        assert!(Parallelism::Auto.workers() >= 1);
+        let cfg = CompressionConfig::new(ErrorBound::Abs(1e-3)).with_workers(4);
+        assert_eq!(cfg.parallelism, Parallelism::Fixed(4));
+        let cfg = CompressionConfig::new(ErrorBound::Abs(1e-3)).with_workers(1);
+        assert_eq!(cfg.parallelism, Parallelism::Sequential);
+        // 0 matches the CLI/config convention: one worker per core
+        let cfg = CompressionConfig::new(ErrorBound::Abs(1e-3)).with_workers(0);
+        assert_eq!(cfg.parallelism, Parallelism::Auto);
     }
 
     #[test]

@@ -1,7 +1,7 @@
 //! Typed configuration for the CLI launcher and the coordinator.
 
 use super::parser::ConfigDoc;
-use crate::compressor::{CompressionConfig, ErrorBound, PredictorPolicy};
+use crate::compressor::{CompressionConfig, ErrorBound, Parallelism, PredictorPolicy};
 use crate::data::synthetic::Profile;
 use crate::error::{Error, Result};
 
@@ -35,6 +35,7 @@ impl RunConfig {
     /// quant_radius = 32768
     /// zstd_level = 3
     /// predictor = "auto"         # auto | lorenzo | regression
+    /// workers = 1                # block-parallel threads (0 = auto)
     /// ```
     pub fn from_doc(doc: &ConfigDoc) -> Result<Self> {
         let profile = parse_profile(doc.str_or("profile", "nyx")?)?;
@@ -76,6 +77,11 @@ pub fn compression_from_doc(doc: &ConfigDoc, section: &str) -> Result<Compressio
         "regression" => PredictorPolicy::RegressionOnly,
         other => return Err(Error::Config(format!("predictor '{other}'"))),
     };
+    // workers = 0 means "auto" (one per hardware thread); 1 is sequential
+    let parallelism = match doc.int_or(&key("workers"), 1)? {
+        n if n >= 0 => Parallelism::from_workers(n as usize),
+        n => return Err(Error::Config(format!("{section}.workers = {n} must be >= 0"))),
+    };
     let cfg = CompressionConfig {
         error_bound,
         block_size: doc.int_or(&key("block_size"), 10)? as usize,
@@ -83,6 +89,7 @@ pub fn compression_from_doc(doc: &ConfigDoc, section: &str) -> Result<Compressio
         zstd_level: doc.int_or(&key("zstd_level"), 3)? as i32,
         predictor,
         payload_zstd: doc.bool_or(&key("payload_zstd"), false)?,
+        parallelism,
     };
     cfg.validate()?;
     Ok(cfg)

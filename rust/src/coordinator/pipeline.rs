@@ -35,6 +35,18 @@ struct DoneItem {
     archive: Vec<u8>,
 }
 
+/// Runs its closure when dropped — including during a panic unwind, so a
+/// dying pipeline stage still closes its queue and the other stages drain
+/// and join instead of blocking forever on a queue nobody will close (the
+/// panic then propagates out of `std::thread::scope` at join).
+struct OnDrop<F: FnMut()>(F);
+
+impl<F: FnMut()> Drop for OnDrop<F> {
+    fn drop(&mut self) {
+        (self.0)();
+    }
+}
+
 /// Pipeline results.
 #[derive(Debug)]
 pub struct PipelineOutput {
@@ -46,8 +58,18 @@ pub struct PipelineOutput {
     pub wall_secs: f64,
 }
 
-/// Run the pipeline over `items` with `workers` compression threads and a
-/// queue depth of `queue_depth` between stages.
+/// Run the pipeline over `items` with a **total thread budget** of
+/// `workers` and a queue depth of `queue_depth` between stages.
+///
+/// The budget is shared between the two parallelism levels: `f` field-level
+/// workers (one item each) × `workers / f` block-level threads inside each
+/// item's engine (see [`crate::compressor::Parallelism`]). Running both
+/// levels at full width would oversubscribe the machine `workers`-fold, so
+/// the pipeline owns the split: it favors field-level concurrency while
+/// items outnumber workers (weak-scaling regime) and gives the leftover
+/// budget to the block-parallel core — which matters exactly when there are
+/// fewer in-flight items than threads (e.g. one huge field). Any
+/// `cfg.parallelism` set by the caller is overridden inside the pipeline.
 pub fn run_pipeline(
     items: Vec<WorkItem>,
     engine: Engine,
@@ -60,40 +82,57 @@ pub fn run_pipeline(
     let out_q: Arc<BoundedQueue<DoneItem>> = Arc::new(BoundedQueue::new(queue_depth.max(1)));
     let n_items = items.len();
     let workers = workers.max(1);
+    // split the budget: field-level threads × per-item block-level threads
+    let field_workers = workers.min(n_items.max(1));
+    let block_workers = (workers / field_workers.max(1)).max(1);
+    let cfg = cfg.clone().with_workers(block_workers);
+    let cfg = &cfg;
     let start = std::time::Instant::now();
     let mut archives: Vec<(usize, Vec<u8>)> = Vec::with_capacity(n_items);
     let mut first_error: Option<Error> = None;
 
-    crossbeam_utils::thread::scope(|s| {
+    std::thread::scope(|s| {
         // source
         {
             let in_q = in_q.clone();
             let metrics = metrics.clone();
-            s.spawn(move |_| {
+            s.spawn(move || {
+                // close on every exit path, panics included, or the
+                // workers would block forever on in_q.pop()
+                let in_q2 = in_q.clone();
+                let _close = OnDrop(move || in_q2.close());
                 for item in items {
                     metrics.items_in.fetch_add(1, Ordering::Relaxed);
-                    if in_q.len() >= queue_depth.max(1) {
-                        metrics.backpressure_events.fetch_add(1, Ordering::Relaxed);
-                    }
+                    // backpressure is counted *inside* push, under the
+                    // queue lock — a len() check here would race with the
+                    // consumers and under/over-count
                     if !in_q.push(item) {
                         break;
                     }
                 }
-                in_q.close();
             });
         }
         // compression workers
         let error_slot: Arc<std::sync::Mutex<Option<Error>>> =
             Arc::new(std::sync::Mutex::new(None));
         let done_workers = Arc::new(std::sync::atomic::AtomicUsize::new(0));
-        for _ in 0..workers {
+        for _ in 0..field_workers {
             let in_q = in_q.clone();
             let out_q = out_q.clone();
             let metrics = metrics.clone();
             let cfg = cfg.clone();
             let error_slot = error_slot.clone();
             let done_workers = done_workers.clone();
-            s.spawn(move |_| {
+            s.spawn(move || {
+                // last worker out (panicking or not) closes out_q so the
+                // sink's drain loop always terminates
+                let out_q2 = out_q.clone();
+                let done2 = done_workers.clone();
+                let _done = OnDrop(move || {
+                    if done2.fetch_add(1, Ordering::SeqCst) + 1 == field_workers {
+                        out_q2.close();
+                    }
+                });
                 while let Some(item) = in_q.pop() {
                     let t = std::time::Instant::now();
                     let result = match engine {
@@ -123,9 +162,6 @@ pub fn run_pipeline(
                         }
                     }
                 }
-                if done_workers.fetch_add(1, Ordering::SeqCst) + 1 == workers {
-                    out_q.close();
-                }
             });
         }
         // sink (this thread)
@@ -138,8 +174,12 @@ pub fn run_pipeline(
                 .fetch_add(t.elapsed().as_nanos() as u64, Ordering::Relaxed);
         }
         first_error = error_slot.lock().unwrap().take();
-    })
-    .map_err(|_| Error::Runtime("pipeline worker panicked".into()))?;
+    });
+    // fold the exact per-queue blocked-push counts into the shared metrics
+    metrics.backpressure_events.store(
+        in_q.blocked_pushes() + out_q.blocked_pushes(),
+        Ordering::Relaxed,
+    );
 
     if let Some(e) = first_error {
         return Err(e);
@@ -200,6 +240,26 @@ mod tests {
         bad.block_size = 0;
         let err = run_pipeline(items(3), Engine::RandomAccess, &bad, 2, 2);
         assert!(err.is_err());
+    }
+
+    #[test]
+    fn single_item_spends_budget_on_block_parallelism_bytes_identical() {
+        // one item, budget 4 → 1 field worker × 4 block workers; the
+        // archive must still be byte-identical to the sequential path
+        let f = synthetic::hurricane_field("t", Dims::d3(12, 16, 16), 7);
+        let seq = ft::compress(&f.data, f.dims, &cfg()).unwrap();
+        let item = vec![WorkItem { id: 0, dims: f.dims, data: f.data.clone() }];
+        let out = run_pipeline(item, Engine::FaultTolerant, &cfg(), 4, 2).unwrap();
+        assert_eq!(out.archives[0].1, seq);
+    }
+
+    #[test]
+    fn backpressure_counter_never_exceeds_total_pushes() {
+        // 16 items → 16 in_q pushes + 16 out_q pushes; the counter counts
+        // actual blocked pushes, so it can never exceed 32
+        let out = run_pipeline(items(16), Engine::RandomAccess, &cfg(), 2, 1).unwrap();
+        let bp = out.metrics.backpressure_events.load(Ordering::Relaxed);
+        assert!(bp <= 32, "counted {bp} blocked pushes out of 32 total");
     }
 
     #[test]

@@ -76,7 +76,13 @@ pub fn weak_scaling_run(
     let points_per_rank = shards[0].1.len();
 
     // measure compression per rank (parallel over available cores like a
-    // real node would run one rank per core)
+    // real node would run one rank per core). Each simulated rank owns ONE
+    // core, so block-level parallelism is forced off here — otherwise the
+    // per-rank timing would no longer be the scale-independent quantity
+    // weak scaling holds constant (and ranks × block workers would
+    // oversubscribe the node). Single-field block parallelism is measured
+    // separately in the `hotpath` bench.
+    let cfg = &cfg.clone().with_workers(1);
     let workers = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
     let results: Vec<(f64, usize)> = parallel_map(sample, workers, |r| {
         let (dims, data) = &shards[r];

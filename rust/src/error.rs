@@ -4,53 +4,78 @@
 //! experiments (paper §6.4, Table 3 "core-dump segmentation faults") need to
 //! distinguish *crash-equivalent* malformed-state aborts from clean errors.
 
-use thiserror::Error;
-
 /// All the ways compression/decompression and the surrounding system fail.
-#[derive(Debug, Error)]
+///
+/// (Display/From are hand-implemented — the offline build carries no
+/// derive-macro dependencies.)
+#[derive(Debug)]
 pub enum Error {
     /// Archive is structurally invalid (bad magic, truncated sections...).
-    #[error("malformed archive: {0}")]
     Format(String),
 
     /// A Huffman code fell outside the constructed table — the classic
     /// symptom of a corrupted bin array (paper: causes segfaults in SZ).
-    #[error("huffman decode error: {0}")]
     HuffmanDecode(String),
 
     /// Decoded state implies an out-of-range access; in unprotected C this
     /// would be the "core-dump segmentation fault" of Table 3.
-    #[error("crash-equivalent fault: {0}")]
     CrashEquivalent(String),
 
     /// An SDC was detected during compression and could not be corrected.
-    #[error("uncorrectable SDC detected: {0}")]
     Sdc(String),
 
     /// SDC detected at decompression even after block re-execution — the
     /// paper's "SDC in compression" terminal report (Alg. 2 line 19).
-    #[error("SDC happened during compression; archive is corrupt: {0}")]
     SdcInCompression(String),
 
     /// Configuration rejected.
-    #[error("invalid configuration: {0}")]
     Config(String),
 
     /// Requested region/shape mismatch.
-    #[error("invalid argument: {0}")]
     InvalidArgument(String),
 
     /// Lossless backend failure.
-    #[error("lossless codec: {0}")]
     Lossless(String),
 
     /// PJRT / XLA runtime failure.
-    #[error("xla runtime: {0}")]
     Runtime(String),
 
     /// Underlying I/O failure.
-    #[error(transparent)]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::Format(m) => write!(f, "malformed archive: {m}"),
+            Error::HuffmanDecode(m) => write!(f, "huffman decode error: {m}"),
+            Error::CrashEquivalent(m) => write!(f, "crash-equivalent fault: {m}"),
+            Error::Sdc(m) => write!(f, "uncorrectable SDC detected: {m}"),
+            Error::SdcInCompression(m) => {
+                write!(f, "SDC happened during compression; archive is corrupt: {m}")
+            }
+            Error::Config(m) => write!(f, "invalid configuration: {m}"),
+            Error::InvalidArgument(m) => write!(f, "invalid argument: {m}"),
+            Error::Lossless(m) => write!(f, "lossless codec: {m}"),
+            Error::Runtime(m) => write!(f, "xla runtime: {m}"),
+            Error::Io(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 /// Crate-wide result alias.

@@ -15,9 +15,13 @@
 //!
 //! ```text
 //! Δsum  = w[j]' - w[j]         (a 33-bit signed quantity, wrapped)
-//! Δisum = j · Δsum             ⇒  j = Δisum / Δsum  (exact division)
+//! Δisum = j · Δsum             ⇒  solve j·Δsum ≡ Δisum (mod 2^64)
 //! w[j]  = w[j]' - Δsum         (wrapped back to 32 bits)
 //! ```
+//!
+//! The index congruence is solved exactly via the odd-part modular
+//! inverse (see [`diagnose`]) — plain integer division overflows once
+//! `j·Δsum` exceeds 2^63, i.e. for word indexes ≥ 2^31.
 //!
 //! so detection, location *and* correction come from two u64 accumulators.
 //! This module mirrors the L1 Pallas kernel `python/compile/kernels/
@@ -107,22 +111,56 @@ pub enum Diagnosis {
     Uncorrectable,
 }
 
+/// Multiplicative inverse of an odd `a` in Z_2^64 (Newton / Hensel
+/// lifting: each step doubles the number of correct low bits; `x = a` is
+/// already correct mod 8, so five steps reach well past 64 bits).
+fn inv_odd(a: u64) -> u64 {
+    debug_assert!(a & 1 == 1, "only odd numbers are invertible mod 2^64");
+    let mut x = a;
+    for _ in 0..5 {
+        x = x.wrapping_mul(2u64.wrapping_sub(a.wrapping_mul(x)));
+    }
+    x
+}
+
 /// Compare the checksum pair recorded at time t0 with one recomputed at t1
 /// over `n_words` words.
+///
+/// A single corrupted word `j` satisfies `j·Δsum ≡ Δisum (mod 2^64)`.
+/// That congruence is solved *exactly*: write `Δsum = odd · 2^t`; the
+/// solution exists iff `2^t | Δisum` and is then unique mod `2^(64-t)`,
+/// namely `j ≡ (Δisum >> t) · odd⁻¹`. (A signed-i64 division here would
+/// overflow once `j·Δsum ≥ 2^63` — e.g. word index ≥ 2^31 with a
+/// full-word delta — misreporting a correctable error as uncorrectable,
+/// and could even *mislocate* power-of-two deltas.) When more than one
+/// index below `n_words` satisfies the congruence the error is genuinely
+/// ambiguous and reported [`Diagnosis::Uncorrectable`] rather than
+/// guessing.
 pub fn diagnose(expected: Checksums, actual: Checksums, n_words: usize) -> Diagnosis {
     let ds = actual.sum.wrapping_sub(expected.sum);
     let di = actual.isum.wrapping_sub(expected.isum);
     if ds == 0 {
         return if di == 0 { Diagnosis::Clean } else { Diagnosis::Uncorrectable };
     }
-    // Single error: di = j * ds in Z_2^64. Both fit comfortably in i64
-    // (|ds| < 2^32 for a single word, j < n <= archive blocks), so signed
-    // exact division recovers j; validate by re-multiplying.
-    let ds_s = ds as i64;
-    let di_s = di as i64;
-    if ds_s != 0 && di_s % ds_s == 0 {
-        let j = di_s / ds_s;
-        if j >= 0 && (j as usize) < n_words && (j as u64).wrapping_mul(ds) == di {
+    let t = ds.trailing_zeros();
+    // di must share the factor 2^t (di == 0 has 64 trailing zeros and
+    // passes: j = 0 mod 2^(64-t) is then the candidate solution).
+    if di.trailing_zeros() < t {
+        return Diagnosis::Uncorrectable;
+    }
+    let inv = inv_odd(ds >> t);
+    let modulus_bits = 64 - t;
+    let j = if modulus_bits == 64 {
+        (di >> t).wrapping_mul(inv)
+    } else {
+        (di >> t).wrapping_mul(inv) & ((1u64 << modulus_bits) - 1)
+    };
+    if (j as usize) < n_words && j.wrapping_mul(ds) == di {
+        // uniqueness: the next solution is j + 2^(64-t); if it also falls
+        // below n_words the locator cannot distinguish the candidates
+        let unique =
+            modulus_bits == 64 || (j as u128 + (1u128 << modulus_bits)) >= n_words as u128;
+        if unique {
             return Diagnosis::SingleError { index: j as usize, delta: ds };
         }
     }
@@ -308,6 +346,72 @@ mod tests {
             data[j] = new;
         }
         assert_eq!(live, checksum_f32(&data));
+    }
+
+    #[test]
+    fn huge_index_full_word_delta_is_located() {
+        // Regression: word index > 2^31 with a (near-)full-word delta makes
+        // j·Δsum ≥ 2^63, which overflowed the old signed-i64 division and
+        // misreported a correctable single error as Uncorrectable. The
+        // checksums are synthesized directly — no 8-GiB buffer needed.
+        let n_words: usize = 1 << 33;
+        for (j, delta) in [
+            (3usize << 31, 0xDEAD_BEEFu64),       // j ≈ 3.2e9, full-word delta
+            ((1usize << 33) - 1, 0xFFFF_FFFFu64), // max index, max delta
+            ((1usize << 32) + 12345, 1u64 << 31), // even delta (odd-part shift)
+        ] {
+            let expected =
+                Checksums { sum: 0x0123_4567_89AB_CDEF, isum: 0xFEDC_BA98_7654_3210 };
+            let actual = Checksums {
+                sum: expected.sum.wrapping_add(delta),
+                isum: expected.isum.wrapping_add((j as u64).wrapping_mul(delta)),
+            };
+            match diagnose(expected, actual, n_words) {
+                Diagnosis::SingleError { index, delta: d } => {
+                    assert_eq!(index, j, "located wrong index for delta {delta:#x}");
+                    assert_eq!(d, delta);
+                }
+                other => panic!("j={j} delta={delta:#x}: expected SingleError, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn ambiguous_power_of_two_delta_refused_not_mislocated() {
+        // Δsum = 2^63: every odd index yields identical (Δsum, Δisum), so a
+        // unique location does not exist. The old division happily returned
+        // index 1; the exact solver must refuse.
+        let delta = 1u64 << 63;
+        let j = 5usize;
+        let expected = Checksums { sum: 100, isum: 200 };
+        let actual = Checksums {
+            sum: expected.sum.wrapping_add(delta),
+            isum: expected.isum.wrapping_add((j as u64).wrapping_mul(delta)),
+        };
+        assert_eq!(diagnose(expected, actual, 16), Diagnosis::Uncorrectable);
+    }
+
+    #[test]
+    fn power_of_two_delta_unique_when_range_is_small() {
+        // Same power-of-two delta but only 2 words: index 1 is the unique
+        // odd index, so correction is allowed.
+        let delta = 1u64 << 63;
+        let expected = Checksums { sum: 7, isum: 9 };
+        let actual = Checksums {
+            sum: expected.sum.wrapping_add(delta),
+            isum: expected.isum.wrapping_add(delta), // j = 1
+        };
+        assert_eq!(
+            diagnose(expected, actual, 2),
+            Diagnosis::SingleError { index: 1, delta }
+        );
+    }
+
+    #[test]
+    fn inv_odd_is_inverse() {
+        for a in [1u64, 3, 5, 0xDEAD_BEEF, u64::MAX, 0x1234_5678_9ABC_DEF1] {
+            assert_eq!(a.wrapping_mul(super::inv_odd(a)), 1, "a = {a:#x}");
+        }
     }
 
     #[test]

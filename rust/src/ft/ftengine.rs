@@ -16,7 +16,7 @@ use crate::compressor::engine::{
     self, compress_core, decompress_core, CoreOutput, CoreParams, Decompressed, DecompressHooks,
     Hooks, NoDecompressHooks, NoHooks,
 };
-use crate::compressor::CompressionConfig;
+use crate::compressor::{CompressionConfig, Parallelism};
 use crate::data::Dims;
 use crate::error::Result;
 use crate::ft::report::DecompressReport;
@@ -24,7 +24,10 @@ use crate::ft::report::DecompressReport;
 /// FT core switches (duplication + checksums on).
 pub const FT_PARAMS: CoreParams = CoreParams { protect: true, ft: true };
 
-/// Compress with full fault tolerance (Algorithm 1).
+/// Compress with full fault tolerance (Algorithm 1). Honors
+/// `cfg.parallelism`: the per-block checksums are block-local, so
+/// verification and repair parallelize with the rest of the block work and
+/// the archive stays byte-identical at any worker count.
 pub fn compress(data: &[f32], dims: Dims, cfg: &CompressionConfig) -> Result<Vec<u8>> {
     Ok(compress_core(data, dims, cfg, FT_PARAMS, &mut NoHooks)?.archive)
 }
@@ -43,15 +46,24 @@ pub fn compress_with_hooks<H: Hooks>(
 /// [`crate::Error::SdcInCompression`] when a block fails verification even
 /// after re-execution.
 pub fn decompress(bytes: &[u8]) -> Result<Decompressed> {
-    Ok(decompress_core(bytes, &mut NoDecompressHooks, true)?.0)
+    decompress_with(bytes, Parallelism::Sequential)
+}
+
+/// Verified decompression with a block-parallel worker pool: decode,
+/// checksum verification and re-execution repair are all block-local, so
+/// they fan out together. Output is bitwise identical to [`decompress`].
+pub fn decompress_with(bytes: &[u8], par: Parallelism) -> Result<Decompressed> {
+    Ok(decompress_core(bytes, &mut NoDecompressHooks, true, par)?.0)
 }
 
 /// Decompress with verification, injection hooks, and a full report.
+/// Hooked runs are sequential by construction (see
+/// [`crate::compressor::engine::Hooks::PARALLEL_SAFE`]).
 pub fn decompress_verbose<H: DecompressHooks>(
     bytes: &[u8],
     hooks: &mut H,
 ) -> Result<(Decompressed, DecompressReport)> {
-    decompress_core(bytes, hooks, true)
+    decompress_core(bytes, hooks, true, Parallelism::Sequential)
 }
 
 /// Decompress *without* verification (ablation: measures what the
@@ -107,6 +119,23 @@ mod tests {
         assert_eq!(
             da.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
             db.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn ft_parallel_compress_and_verify_byte_identical() {
+        let f = synthetic::hurricane_field("t", Dims::d3(10, 16, 16), 12);
+        let seq = compress(&f.data, f.dims, &cfg(1e-3)).unwrap();
+        for w in [2usize, 4, 7] {
+            let par = compress(&f.data, f.dims, &cfg(1e-3).with_workers(w)).unwrap();
+            assert_eq!(par, seq, "ft archive differs at {w} workers");
+        }
+        // verified parallel decompression agrees bitwise with sequential
+        let a = decompress(&seq).unwrap();
+        let b = decompress_with(&seq, Parallelism::Fixed(4)).unwrap();
+        assert_eq!(
+            a.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            b.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
         );
     }
 

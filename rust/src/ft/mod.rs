@@ -15,5 +15,7 @@ pub mod duplicate;
 pub mod ftengine;
 pub mod report;
 
-pub use ftengine::{compress, compress_with_hooks, decompress, decompress_verbose};
+pub use ftengine::{
+    compress, compress_with_hooks, decompress, decompress_verbose, decompress_with,
+};
 pub use report::{DecompressReport, SdcEvent};

@@ -39,6 +39,30 @@
 //!     assert!((a - b).abs() <= 1e-3);
 //! }
 //! ```
+//!
+//! ## Block-parallel execution
+//!
+//! The independent-block design makes every block's work embarrassingly
+//! parallel; a single field compresses/decompresses across cores with the
+//! [`compressor::Parallelism`] knob — **archives are byte-identical at any
+//! worker count** (parallelism reorders computation, never the format):
+//!
+//! ```no_run
+//! use ftsz::compressor::{CompressionConfig, ErrorBound, Parallelism};
+//! use ftsz::data::Dims;
+//!
+//! let field: Vec<f32> = (0..64 * 64 * 64).map(|i| (i as f32).sin()).collect();
+//! let cfg = CompressionConfig::new(ErrorBound::Abs(1e-3)).with_workers(8);
+//! let archive = ftsz::ft::compress(&field, Dims::d3(64, 64, 64), &cfg).unwrap();
+//! // verified decompression fans out the same way
+//! let restored = ftsz::ft::decompress_with(&archive, Parallelism::Auto).unwrap();
+//! # let _ = restored;
+//! ```
+//!
+//! Only [`compressor::classic`] stays sequential: its cross-block Lorenzo
+//! dependency chain is exactly the fragility the paper's redesign removes.
+//! Fault-injection runs (hooked) are also sequential by construction — see
+//! `compressor::engine::Hooks::PARALLEL_SAFE`.
 
 pub mod analysis;
 pub mod compressor;

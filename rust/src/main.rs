@@ -17,7 +17,7 @@ use std::collections::HashMap;
 use std::path::PathBuf;
 
 use ftsz::compressor::block::Region;
-use ftsz::compressor::{classic, engine, CompressionConfig, ErrorBound};
+use ftsz::compressor::{classic, engine, CompressionConfig, ErrorBound, Parallelism};
 use ftsz::config::{types, ConfigDoc, PipelineConfig};
 use ftsz::coordinator::{run_pipeline, WorkItem};
 use ftsz::data::{synthetic, Dims, Field};
@@ -103,9 +103,15 @@ fn compression_config(f: &Flags) -> Result<CompressionConfig> {
     };
     let cfg = CompressionConfig::new(error_bound)
         .with_block_size(f.usize_or("block-size", 10)?)
-        .with_quant_radius(f.usize_or("quant-radius", 32768)? as u32);
+        .with_quant_radius(f.usize_or("quant-radius", 32768)? as u32)
+        .with_parallelism(parallelism_of(f)?);
     cfg.validate()?;
     Ok(cfg)
+}
+
+/// `--workers N` → block-parallel worker count (0 = one per core).
+fn parallelism_of(f: &Flags) -> Result<Parallelism> {
+    Ok(Parallelism::from_workers(f.usize_or("workers", 1)?))
 }
 
 fn parse_dims(s: &str) -> Result<Dims> {
@@ -158,8 +164,9 @@ fn print_usage() {
         "ftsz — SDC-resilient error-bounded lossy compressor (FT-SZ reproduction)\n\
          commands:\n\
          \x20 gen-data   --profile nyx|hurricane|scale-letkf|pluto --edge N --seed S --out DIR\n\
-         \x20 compress   --input RAW --dims D,R,C --engine sz|rsz|ftrsz --error-bound E --out FILE\n\
-         \x20 decompress --input FILE --out RAW [--verify] [--region z,y,x,dz,dy,dx]\n\
+         \x20 compress   --input RAW --dims D,R,C --engine sz|rsz|ftrsz\n\
+         \x20            --error-bound E [--workers N (0 = auto)] --out FILE\n\
+         \x20 decompress --input FILE --out RAW [--verify] [--workers N] [--region z,y,x,dz,dy,dx]\n\
          \x20 info       --input FILE\n\
          \x20 inject     --engine E --mode a-input|a-bin|b --errors N --runs R [--edge N]\n\
          \x20 pipeline   [--config FILE] [--ranks N] [--engine E]\n\
@@ -237,12 +244,17 @@ fn cmd_decompress(f: &Flags) -> Result<()> {
             shape: (parts[3], parts[4], parts[5]),
         };
         let t = std::time::Instant::now();
-        let data = engine::decompress_region(&bytes, region)?;
+        let data = engine::decompress_region_with(&bytes, region, parallelism_of(f)?)?;
         println!("region {:?}: {} points in {:.3}ms", region, data.len(), t.elapsed().as_secs_f64() * 1e3);
         return Ok(());
     }
+    let par = parallelism_of(f)?;
     let t = std::time::Instant::now();
-    let dec = if f.has("verify") { ft::decompress(&bytes)? } else { engine::decompress(&bytes).or_else(|_| classic::decompress(&bytes))? };
+    let dec = if f.has("verify") {
+        ft::decompress_with(&bytes, par)?
+    } else {
+        engine::decompress_with(&bytes, par).or_else(|_| classic::decompress(&bytes))?
+    };
     let secs = t.elapsed().as_secs_f64();
     let out = f.str_or("out", "out.bin");
     Field::new("out", dec.dims, dec.data)?.to_raw_file(std::path::Path::new(&out))?;

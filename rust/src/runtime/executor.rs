@@ -6,27 +6,8 @@
 //! kernels are pointwise per block, so padding blocks are simply ignored
 //! on output).
 
-use super::XlaRuntime;
+use super::{CompressedBatch, XlaRuntime};
 use crate::error::{Error, Result};
-
-/// Outputs of the fused compression graph for a batch of blocks.
-#[derive(Debug, Clone)]
-pub struct CompressedBatch {
-    /// Lorenzo residual lattice, `n * b³` i32.
-    pub bins: Vec<i32>,
-    /// Reconstruction, `n * b³` f32.
-    pub dcmp: Vec<f32>,
-    /// Input checksums per block.
-    pub sum_in: Vec<u64>,
-    /// Weighted input checksums per block.
-    pub isum_in: Vec<u64>,
-    /// Bin checksums per block.
-    pub sum_q: Vec<u64>,
-    /// Weighted bin checksums per block.
-    pub isum_q: Vec<u64>,
-    /// Decompressed-data checksums per block.
-    pub sum_dc: Vec<u64>,
-}
 
 /// Typed executor for one (N, B) artifact variant.
 pub struct BlockKernels<'r> {

@@ -8,20 +8,23 @@
 //! interchange format because jax ≥ 0.5 emits protos with 64-bit
 //! instruction ids that xla_extension 0.5.1 rejects (see
 //! /opt/xla-example/README.md).
+//!
+//! The whole backend sits behind the **`pjrt` cargo feature** (the offline
+//! default build cannot fetch the `xla` crate). Without it this module
+//! exposes the same API surface as a stub: constructors return
+//! [`Error::Runtime`], so every offload call-site — the benches, the e2e
+//! example, `ftsz xla-selftest` — skips gracefully instead of failing to
+//! compile.
 
-pub mod executor;
-
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
-use std::sync::Mutex;
+use std::path::PathBuf;
 
 use crate::error::{Error, Result};
 
-pub use executor::BlockKernels;
+#[cfg(feature = "pjrt")]
+pub mod executor;
 
-fn rt_err<E: std::fmt::Display>(ctx: &str) -> impl Fn(E) -> Error + '_ {
-    move |e| Error::Runtime(format!("{ctx}: {e}"))
-}
+#[cfg(feature = "pjrt")]
+pub use executor::BlockKernels;
 
 /// Locate the artifacts directory: `$FTSZ_ARTIFACTS` or `<repo>/artifacts`.
 pub fn default_artifacts_dir() -> PathBuf {
@@ -31,85 +34,215 @@ pub fn default_artifacts_dir() -> PathBuf {
     PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
 }
 
-/// A PJRT client plus a cache of compiled executables keyed by artifact
-/// name (e.g. `compress_n64_b10`).
-pub struct XlaRuntime {
-    client: xla::PjRtClient,
-    dir: PathBuf,
-    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+/// Outputs of the fused compression graph for a batch of blocks. Defined
+/// once, outside the cfg-gated backends, so the pjrt executor and the
+/// offline stub can never drift apart.
+#[derive(Debug, Clone)]
+pub struct CompressedBatch {
+    /// Lorenzo residual lattice, `n * b³` i32.
+    pub bins: Vec<i32>,
+    /// Reconstruction, `n * b³` f32.
+    pub dcmp: Vec<f32>,
+    /// Input checksums per block.
+    pub sum_in: Vec<u64>,
+    /// Weighted input checksums per block.
+    pub isum_in: Vec<u64>,
+    /// Bin checksums per block.
+    pub sum_q: Vec<u64>,
+    /// Weighted bin checksums per block.
+    pub isum_q: Vec<u64>,
+    /// Decompressed-data checksums per block.
+    pub sum_dc: Vec<u64>,
 }
 
-impl XlaRuntime {
-    /// CPU-backed runtime over an artifacts directory.
-    pub fn cpu(dir: impl AsRef<Path>) -> Result<Self> {
-        let client = xla::PjRtClient::cpu().map_err(rt_err("PjRtClient::cpu"))?;
-        let dir = dir.as_ref().to_path_buf();
-        if !dir.is_dir() {
-            return Err(Error::Runtime(format!(
-                "artifacts directory {} missing — run `make artifacts`",
-                dir.display()
-            )));
+#[cfg(feature = "pjrt")]
+mod backend {
+    use std::collections::HashMap;
+    use std::path::Path;
+    use std::sync::Mutex;
+
+    use super::*;
+
+    pub(super) fn rt_err<E: std::fmt::Display>(ctx: &str) -> impl Fn(E) -> Error + '_ {
+        move |e| Error::Runtime(format!("{ctx}: {e}"))
+    }
+
+    /// A PJRT client plus a cache of compiled executables keyed by artifact
+    /// name (e.g. `compress_n64_b10`).
+    pub struct XlaRuntime {
+        client: xla::PjRtClient,
+        dir: PathBuf,
+        cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+    }
+
+    impl XlaRuntime {
+        /// CPU-backed runtime over an artifacts directory.
+        pub fn cpu(dir: impl AsRef<Path>) -> Result<Self> {
+            let client = xla::PjRtClient::cpu().map_err(rt_err("PjRtClient::cpu"))?;
+            let dir = dir.as_ref().to_path_buf();
+            if !dir.is_dir() {
+                return Err(Error::Runtime(format!(
+                    "artifacts directory {} missing — run `make artifacts`",
+                    dir.display()
+                )));
+            }
+            Ok(Self { client, dir, cache: Mutex::new(HashMap::new()) })
         }
-        Ok(Self { client, dir, cache: Mutex::new(HashMap::new()) })
-    }
 
-    /// CPU runtime over the default artifacts directory.
-    pub fn cpu_default() -> Result<Self> {
-        Self::cpu(default_artifacts_dir())
-    }
-
-    /// Platform string of the underlying PJRT client.
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Names listed in the artifacts manifest.
-    pub fn manifest(&self) -> Result<Vec<String>> {
-        let text = std::fs::read_to_string(self.dir.join("manifest.txt"))?;
-        Ok(text
-            .lines()
-            .filter_map(|l| l.split_whitespace().next())
-            .map(|n| n.trim_end_matches(".hlo.txt").to_string())
-            .collect())
-    }
-
-    /// Load (or fetch from cache) one artifact by name.
-    pub fn load(&self, name: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
-        if let Some(exe) = self.cache.lock().unwrap().get(name) {
-            return Ok(exe.clone());
+        /// CPU runtime over the default artifacts directory.
+        pub fn cpu_default() -> Result<Self> {
+            Self::cpu(default_artifacts_dir())
         }
-        let path = self.dir.join(format!("{name}.hlo.txt"));
-        if !path.is_file() {
-            return Err(Error::Runtime(format!(
-                "artifact {} not found — run `make artifacts`",
-                path.display()
-            )));
+
+        /// Platform string of the underlying PJRT client.
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
         }
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| Error::Runtime("non-utf8 path".into()))?,
+
+        /// Names listed in the artifacts manifest.
+        pub fn manifest(&self) -> Result<Vec<String>> {
+            let text = std::fs::read_to_string(self.dir.join("manifest.txt"))?;
+            Ok(text
+                .lines()
+                .filter_map(|l| l.split_whitespace().next())
+                .map(|n| n.trim_end_matches(".hlo.txt").to_string())
+                .collect())
+        }
+
+        /// Load (or fetch from cache) one artifact by name.
+        pub fn load(&self, name: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+            if let Some(exe) = self.cache.lock().unwrap().get(name) {
+                return Ok(exe.clone());
+            }
+            let path = self.dir.join(format!("{name}.hlo.txt"));
+            if !path.is_file() {
+                return Err(Error::Runtime(format!(
+                    "artifact {} not found — run `make artifacts`",
+                    path.display()
+                )));
+            }
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| Error::Runtime("non-utf8 path".into()))?,
+            )
+            .map_err(rt_err("parse HLO text"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp).map_err(rt_err("compile"))?;
+            let exe = std::sync::Arc::new(exe);
+            self.cache.lock().unwrap().insert(name.to_string(), exe.clone());
+            Ok(exe)
+        }
+
+        /// Execute a loaded artifact on literal inputs; returns the
+        /// flattened tuple of output literals (aot.py lowers with
+        /// `return_tuple=True`).
+        pub fn execute(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+            let exe = self.load(name)?;
+            let result = exe.execute::<xla::Literal>(inputs).map_err(rt_err("execute"))?;
+            let literal = result
+                .first()
+                .and_then(|d| d.first())
+                .ok_or_else(|| Error::Runtime("no output buffer".into()))?
+                .to_literal_sync()
+                .map_err(rt_err("to_literal_sync"))?;
+            literal.to_tuple().map_err(rt_err("untuple"))
+        }
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+mod backend {
+    use super::*;
+
+    fn unavailable() -> Error {
+        Error::Runtime(
+            "PJRT/XLA support not compiled in — rebuild with `--features pjrt`".into(),
         )
-        .map_err(rt_err("parse HLO text"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp).map_err(rt_err("compile"))?;
-        let exe = std::sync::Arc::new(exe);
-        self.cache.lock().unwrap().insert(name.to_string(), exe.clone());
-        Ok(exe)
     }
 
-    /// Execute a loaded artifact on literal inputs; returns the flattened
-    /// tuple of output literals (aot.py lowers with `return_tuple=True`).
-    pub fn execute(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
-        let exe = self.load(name)?;
-        let result = exe.execute::<xla::Literal>(inputs).map_err(rt_err("execute"))?;
-        let literal = result
-            .first()
-            .and_then(|d| d.first())
-            .ok_or_else(|| Error::Runtime("no output buffer".into()))?
-            .to_literal_sync()
-            .map_err(rt_err("to_literal_sync"))?;
-        literal.to_tuple().map_err(rt_err("untuple"))
+    /// Stub runtime: same API, every constructor fails cleanly so offload
+    /// call-sites (`if let Ok(rt) = XlaRuntime::cpu_default() ...`) skip.
+    pub struct XlaRuntime {
+        _private: (),
+    }
+
+    impl XlaRuntime {
+        /// Always fails on a non-`pjrt` build.
+        pub fn cpu(_dir: impl AsRef<std::path::Path>) -> Result<Self> {
+            Err(unavailable())
+        }
+
+        /// Always fails on a non-`pjrt` build.
+        pub fn cpu_default() -> Result<Self> {
+            Err(unavailable())
+        }
+
+        /// Unreachable in practice (no instance can exist).
+        pub fn platform(&self) -> String {
+            "unavailable".into()
+        }
+
+        /// Unreachable in practice (no instance can exist).
+        pub fn manifest(&self) -> Result<Vec<String>> {
+            Err(unavailable())
+        }
+    }
+
+    /// Stub typed executor; [`BlockKernels::new`] always fails because no
+    /// [`XlaRuntime`] can exist on this build.
+    pub struct BlockKernels<'r> {
+        _rt: &'r XlaRuntime,
+        /// Batch size the artifacts were lowered with.
+        pub n: usize,
+        /// Block edge.
+        pub b: usize,
+    }
+
+    impl<'r> BlockKernels<'r> {
+        /// Always fails on a non-`pjrt` build.
+        pub fn new(_rt: &'r XlaRuntime, _n: usize, _b: usize) -> Result<Self> {
+            Err(unavailable())
+        }
+
+        /// Points per block.
+        pub fn block_len(&self) -> usize {
+            self.b * self.b * self.b
+        }
+
+        /// Points per full batch.
+        pub fn batch_len(&self) -> usize {
+            self.n * self.block_len()
+        }
+
+        /// Unreachable in practice (no instance can exist).
+        pub fn compress(&self, _x: &[f32], _error_bound: f64) -> Result<CompressedBatch> {
+            Err(unavailable())
+        }
+
+        /// Unreachable in practice (no instance can exist).
+        pub fn decompress(
+            &self,
+            _bins: &[i32],
+            _error_bound: f64,
+        ) -> Result<(Vec<f32>, Vec<u64>)> {
+            Err(unavailable())
+        }
+
+        /// Unreachable in practice (no instance can exist).
+        pub fn regression(&self, _x: &[f32]) -> Result<Vec<f32>> {
+            Err(unavailable())
+        }
+
+        /// Unreachable in practice (no instance can exist).
+        pub fn checksums_f32(&self, _x: &[f32]) -> Result<(Vec<u64>, Vec<u64>)> {
+            Err(unavailable())
+        }
     }
 }
+
+pub use backend::XlaRuntime;
+
+#[cfg(not(feature = "pjrt"))]
+pub use backend::BlockKernels;
 
 #[cfg(test)]
 mod tests {
@@ -120,6 +253,7 @@ mod tests {
     // here we only cover the error paths that need no artifacts.
 
     #[test]
+    #[cfg(feature = "pjrt")]
     fn missing_dir_is_clean_error() {
         let err = match XlaRuntime::cpu("/nonexistent/ftsz-artifacts") {
             Err(e) => e,
@@ -130,11 +264,24 @@ mod tests {
     }
 
     #[test]
+    #[cfg(feature = "pjrt")]
     fn missing_artifact_is_clean_error() {
         let dir = std::env::temp_dir().join("ftsz_rt_empty");
         std::fs::create_dir_all(&dir).unwrap();
         let rt = XlaRuntime::cpu(&dir).unwrap();
         assert!(rt.load("nope").is_err());
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    #[cfg(not(feature = "pjrt"))]
+    fn stub_constructors_fail_cleanly() {
+        let err = match XlaRuntime::cpu_default() {
+            Err(e) => e,
+            Ok(_) => panic!("stub must fail"),
+        };
+        assert!(matches!(err, Error::Runtime(_)));
+        assert!(err.to_string().contains("pjrt"));
+        assert!(XlaRuntime::cpu("/anywhere").is_err());
     }
 }

@@ -1,11 +1,13 @@
 //! Minimal scoped thread pool + parallel-for (tokio/rayon are unavailable
-//! offline; `crossbeam_utils::thread::scope` provides safe borrowing).
+//! offline; `std::thread::scope` provides safe borrowing with no external
+//! dependency).
 //!
-//! This is the execution substrate of the [`crate::coordinator`]: bounded
-//! work queues with backpressure, deterministic chunk assignment for
-//! reproducible experiments.
+//! This is the execution substrate of the [`crate::coordinator`] and of the
+//! block-parallel compression core ([`crate::compressor::engine`]): bounded
+//! work queues with backpressure, deterministic result ordering for
+//! byte-identical archives and reproducible experiments.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Condvar, Mutex};
 
 /// Run `f(chunk_index, item_index_range)` over `n_items` split into
@@ -19,10 +21,17 @@ where
     assert!(chunk > 0);
     let n_chunks = n_items.div_ceil(chunk);
     let workers = workers.max(1).min(n_chunks.max(1));
+    if workers <= 1 {
+        for c in 0..n_chunks {
+            let lo = c * chunk;
+            f(c, lo..(lo + chunk).min(n_items));
+        }
+        return;
+    }
     let next = AtomicUsize::new(0);
-    crossbeam_utils::thread::scope(|s| {
+    std::thread::scope(|s| {
         for _ in 0..workers {
-            s.spawn(|_| loop {
+            s.spawn(|| loop {
                 let c = next.fetch_add(1, Ordering::Relaxed);
                 if c >= n_chunks {
                     break;
@@ -32,39 +41,41 @@ where
                 f(c, lo..hi);
             });
         }
-    })
-    .expect("worker panicked");
+    });
 }
 
-/// Map `f` over `0..n` in parallel, collecting results in order.
+/// Map `f` over `0..n` in parallel, collecting results **in index order**
+/// regardless of completion order — the property the block-parallel engine
+/// relies on for byte-identical archives. `workers <= 1` (or `n <= 1`)
+/// runs inline with zero thread overhead, so the sequential path really is
+/// the 1-worker path.
 pub fn parallel_map<T, F>(n: usize, workers: usize, f: F) -> Vec<T>
 where
-    T: Send + Default + Clone,
+    T: Send,
     F: Fn(usize) -> T + Sync,
 {
-    let mut out = vec![T::default(); n];
-    {
-        let slots: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
-        let next = AtomicUsize::new(0);
-        let workers = workers.max(1).min(n.max(1));
-        crossbeam_utils::thread::scope(|s| {
-            for _ in 0..workers {
-                s.spawn(|_| loop {
-                    let i = next.fetch_add(1, Ordering::Relaxed);
-                    if i >= n {
-                        break;
-                    }
-                    let v = f(i);
-                    *slots[i].lock().unwrap() = Some(v);
-                });
-            }
-        })
-        .expect("worker panicked");
-        for (i, slot) in slots.into_iter().enumerate() {
-            out[i] = slot.into_inner().unwrap().unwrap();
-        }
+    let workers = workers.max(1).min(n.max(1));
+    if workers <= 1 {
+        return (0..n).map(f).collect();
     }
-    out
+    let slots: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let v = f(i);
+                *slots[i].lock().unwrap() = Some(v);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|slot| slot.into_inner().unwrap().expect("worker filled every slot"))
+        .collect()
 }
 
 /// A bounded MPMC channel built on Mutex+Condvar — the backpressure
@@ -74,6 +85,10 @@ pub struct BoundedQueue<T> {
     not_full: Condvar,
     not_empty: Condvar,
     capacity: usize,
+    /// Pushes that actually blocked on a full queue. Counted here, under
+    /// the queue lock, because any check made *before* calling `push`
+    /// races with concurrent pops/pushes and under/over-counts.
+    blocked_pushes: AtomicU64,
 }
 
 struct QueueInner<T> {
@@ -90,14 +105,19 @@ impl<T> BoundedQueue<T> {
             not_full: Condvar::new(),
             not_empty: Condvar::new(),
             capacity,
+            blocked_pushes: AtomicU64::new(0),
         }
     }
 
     /// Blocking push; returns `false` if the queue was closed.
     pub fn push(&self, item: T) -> bool {
         let mut g = self.inner.lock().unwrap();
-        while g.items.len() >= self.capacity && !g.closed {
-            g = self.not_full.wait(g).unwrap();
+        if g.items.len() >= self.capacity && !g.closed {
+            // count each push that really blocks, exactly once
+            self.blocked_pushes.fetch_add(1, Ordering::Relaxed);
+            while g.items.len() >= self.capacity && !g.closed {
+                g = self.not_full.wait(g).unwrap();
+            }
         }
         if g.closed {
             return false;
@@ -139,6 +159,11 @@ impl<T> BoundedQueue<T> {
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
+
+    /// Pushes that blocked on a full queue so far (backpressure events).
+    pub fn blocked_pushes(&self) -> u64 {
+        self.blocked_pushes.load(Ordering::Relaxed)
+    }
 }
 
 #[cfg(test)]
@@ -164,6 +189,24 @@ mod tests {
         for (i, v) in out.iter().enumerate() {
             assert_eq!(*v, i * i);
         }
+    }
+
+    #[test]
+    fn parallel_map_accepts_non_default_non_clone_types() {
+        // the engine maps blocks to big result structs that are neither
+        // Default nor Clone; the pool must not require either
+        struct Big(Vec<u32>);
+        let out = parallel_map(17, 4, |i| Big(vec![i as u32; i + 1]));
+        for (i, b) in out.iter().enumerate() {
+            assert_eq!(b.0.len(), i + 1);
+        }
+    }
+
+    #[test]
+    fn parallel_map_single_worker_runs_inline() {
+        // must work from within an active thread (nested parallelism)
+        let out = parallel_map(4, 1, |i| parallel_map(3, 2, move |j| i * 3 + j));
+        assert_eq!(out[2], vec![6, 7, 8]);
     }
 
     #[test]
@@ -195,16 +238,53 @@ mod tests {
         h.join().unwrap();
         assert_eq!(pushed.load(Ordering::SeqCst), 1);
         assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.blocked_pushes(), 1, "exactly one push blocked");
+    }
+
+    #[test]
+    fn blocked_push_count_is_exact_single_threaded() {
+        // non-blocking pushes must not count
+        let q = BoundedQueue::new(8);
+        for i in 0..8 {
+            assert!(q.push(i));
+        }
+        assert_eq!(q.blocked_pushes(), 0);
+    }
+
+    #[test]
+    fn blocked_push_count_matches_forced_blocks() {
+        // capacity 1, producer pushes N items while a slow consumer pops:
+        // every push after the first finds the queue full and must block
+        let n = 50u64;
+        let q = std::sync::Arc::new(BoundedQueue::new(1));
+        let qp = q.clone();
+        let producer = std::thread::spawn(move || {
+            for i in 0..n {
+                qp.push(i);
+            }
+            qp.close();
+        });
+        let mut got = Vec::new();
+        while let Some(v) = q.pop() {
+            std::thread::sleep(std::time::Duration::from_micros(200));
+            got.push(v);
+        }
+        producer.join().unwrap();
+        assert_eq!(got.len(), n as usize);
+        // at least the steady-state pushes blocked; never more than n
+        let blocked = q.blocked_pushes();
+        assert!(blocked <= n, "blocked {blocked} > pushes {n}");
+        assert!(blocked >= n / 2, "expected most pushes to block, got {blocked}");
     }
 
     #[test]
     fn queue_many_producers_consumers() {
         let q = std::sync::Arc::new(BoundedQueue::new(8));
         let total = std::sync::Arc::new(AtomicU64::new(0));
-        crossbeam_utils::thread::scope(|s| {
+        std::thread::scope(|s| {
             for t in 0..4 {
                 let q = q.clone();
-                s.spawn(move |_| {
+                s.spawn(move || {
                     for i in 0..100u64 {
                         q.push(t * 100 + i);
                     }
@@ -213,20 +293,19 @@ mod tests {
             for _ in 0..4 {
                 let q = q.clone();
                 let total = total.clone();
-                s.spawn(move |_| {
+                s.spawn(move || {
                     while let Some(v) = q.pop() {
                         total.fetch_add(v, Ordering::Relaxed);
                     }
                 });
             }
-            s.spawn(|_| {
+            s.spawn(|| {
                 // closing after producers finish is racy in this toy test;
                 // give producers time then close.
                 std::thread::sleep(std::time::Duration::from_millis(300));
                 q.close();
             });
-        })
-        .unwrap();
+        });
         let expect: u64 = (0..400u64).sum();
         assert_eq!(total.load(Ordering::SeqCst), expect);
     }

@@ -5,7 +5,7 @@
 use ftsz::analysis;
 use ftsz::compressor::block::{BlockGrid, Region};
 use ftsz::compressor::huffman::HuffmanTable;
-use ftsz::compressor::{dualquant, engine, CompressionConfig, ErrorBound};
+use ftsz::compressor::{classic, dualquant, engine, CompressionConfig, ErrorBound, Parallelism};
 use ftsz::data::Dims;
 use ftsz::ft::checksum::{self, Correction};
 use ftsz::util::bits::{BitReader, BitWriter};
@@ -200,6 +200,76 @@ fn prop_region_decode_equals_full_slice() {
                     idx += 1;
                 }
             }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_parallel_and_sequential_byte_identical_all_engines() {
+    // The tentpole invariant: the Parallelism knob reorders computation,
+    // never the format. For every engine, random shape, block size and
+    // 1–8 workers, the archive bytes and the decompressed bits must be
+    // identical to the sequential reference.
+    forall("parallel == sequential (bytes and bits)", 20, |g| {
+        let dims = Dims::d3(g.usize_in(2, 8), g.usize_in(2, 12), g.usize_in(2, 12));
+        let mut data = Vec::with_capacity(dims.len());
+        let mut v = g.f64_in(-5.0, 5.0);
+        for _ in 0..dims.len() {
+            v += g.f64_in(-0.3, 0.3);
+            data.push(v as f32);
+        }
+        let b = g.usize_in(2, 12);
+        let workers = g.usize_in(1, 8);
+        let seq_cfg = CompressionConfig::new(ErrorBound::Abs(1e-3)).with_block_size(b);
+        let par_cfg = seq_cfg.clone().with_workers(workers);
+
+        // rsz: archives byte-identical
+        let a_seq = engine::compress(&data, dims, &seq_cfg).map_err(|e| e.to_string())?;
+        let a_par = engine::compress(&data, dims, &par_cfg).map_err(|e| e.to_string())?;
+        if a_seq != a_par {
+            return Err(format!("rsz archive differs at {workers} workers (b={b})"));
+        }
+        // ftrsz: archives byte-identical (checksums are block-local)
+        let f_seq = ftsz::ft::compress(&data, dims, &seq_cfg).map_err(|e| e.to_string())?;
+        let f_par = ftsz::ft::compress(&data, dims, &par_cfg).map_err(|e| e.to_string())?;
+        if f_seq != f_par {
+            return Err(format!("ftrsz archive differs at {workers} workers (b={b})"));
+        }
+        // classic: the knob is documented-ignored; bytes must not change
+        let c_seq = classic::compress(&data, dims, &seq_cfg).map_err(|e| e.to_string())?;
+        let c_par = classic::compress(&data, dims, &par_cfg).map_err(|e| e.to_string())?;
+        if c_seq != c_par {
+            return Err("classic archive changed under the parallelism knob".into());
+        }
+
+        // decompressions bitwise identical (plain + verified)
+        let par = Parallelism::Fixed(workers);
+        let d_seq = engine::decompress(&a_seq).map_err(|e| e.to_string())?;
+        let d_par = engine::decompress_with(&a_seq, par).map_err(|e| e.to_string())?;
+        if !d_seq.data.iter().zip(&d_par.data).all(|(x, y)| x.to_bits() == y.to_bits()) {
+            return Err(format!("rsz decode differs at {workers} workers"));
+        }
+        let v_seq = ftsz::ft::decompress(&f_seq).map_err(|e| e.to_string())?;
+        let v_par = ftsz::ft::decompress_with(&f_seq, par).map_err(|e| e.to_string())?;
+        if !v_seq.data.iter().zip(&v_par.data).all(|(x, y)| x.to_bits() == y.to_bits()) {
+            return Err(format!("ftrsz verified decode differs at {workers} workers"));
+        }
+
+        // random-access region decode bitwise identical
+        let (d, r, c) = dims.as_3d();
+        let oz = g.usize_in(0, d - 1);
+        let oy = g.usize_in(0, r - 1);
+        let ox = g.usize_in(0, c - 1);
+        let region = Region {
+            origin: (oz, oy, ox),
+            shape: (g.usize_in(1, d - oz), g.usize_in(1, r - oy), g.usize_in(1, c - ox)),
+        };
+        let r_seq = engine::decompress_region(&a_seq, region).map_err(|e| e.to_string())?;
+        let r_par = engine::decompress_region_with(&a_seq, region, par)
+            .map_err(|e| e.to_string())?;
+        if !r_seq.iter().zip(&r_par).all(|(x, y)| x.to_bits() == y.to_bits()) {
+            return Err(format!("region decode differs at {workers} workers"));
         }
         Ok(())
     });

@@ -15,6 +15,10 @@ const N: usize = 4;
 const B: usize = 4;
 
 fn runtime() -> Option<XlaRuntime> {
+    if !cfg!(feature = "pjrt") {
+        eprintln!("SKIP: built without the `pjrt` feature — rebuild with --features pjrt");
+        return None;
+    }
     let dir = default_artifacts_dir();
     if !dir.join("manifest.txt").is_file() {
         eprintln!("SKIP: artifacts missing at {} — run `make artifacts`", dir.display());
