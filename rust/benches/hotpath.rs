@@ -8,6 +8,7 @@ use common::*;
 use ftsz::compressor::huffman::HuffmanTable;
 use ftsz::compressor::{dualquant, engine, CompressionConfig, ErrorBound, Parallelism};
 use ftsz::data::synthetic::Profile;
+use ftsz::ft::parity::ParityParams;
 use ftsz::ft::{self, checksum};
 use ftsz::inject::Engine;
 use ftsz::util::bits::{BitReader, BitWriter};
@@ -93,6 +94,44 @@ fn main() {
         mbps(bytes_in, sv1),
         mbps(bytes_in, sv4),
         sv1 / sv4
+    );
+
+    // archive parity (format v2): what self-healing costs at the default
+    // geometry — targets: <3% compressed size, <5% compress time
+    println!("--- archive parity (format v2) overhead ---");
+    let cfg_v1 = cfg_rel(1e-4);
+    let (s_v1, a_v1) = time_median(reps, || {
+        ft::compress(&f.data, f.dims, &cfg_v1).expect("ftrsz v1")
+    });
+    let cfg_v2 = cfg_rel(1e-4).with_archive_parity(ParityParams::default());
+    let (s_v2, a_v2) = time_median(reps, || {
+        ft::compress(&f.data, f.dims, &cfg_v2).expect("ftrsz v2")
+    });
+    let size_ovh = 100.0 * (a_v2.len() as f64 - a_v1.len() as f64) / a_v1.len() as f64;
+    let time_ovh = 100.0 * (s_v2 - s_v1) / s_v1;
+    println!(
+        "{:<22} v1 {} B -> v2 {} B  (+{:.2}% size, target <3%)",
+        "ftrsz archive", a_v1.len(), a_v2.len(), size_ovh
+    );
+    println!(
+        "{:<22} v1 {:>8.1} MB/s -> v2 {:>8.1} MB/s  (+{:.2}% time, target <5%)",
+        "ftrsz compress",
+        mbps(bytes_in, s_v1),
+        mbps(bytes_in, s_v2),
+        time_ovh
+    );
+    let (s_rec, _) = time_median(reps, || {
+        assert!(matches!(
+            ft::parity::recover(&a_v2).expect("recover"),
+            ft::parity::Recovery::Clean
+        ));
+    });
+    println!("{:<22} {:>8.1} MB/s (clean verify pass)", "parity recover", mbps(a_v2.len(), s_rec));
+    let (s_dec2, _) = time_median(reps, || ft::decompress(&a_v2).expect("v2 verify+decode"));
+    println!(
+        "{:<22} {:>8.1} MB/s (CRC verify + decode)",
+        "ftrsz v2 decompress",
+        mbps(bytes_in, s_dec2)
     );
 
     // stage: sequential lorenzo+quantize via the engine with lorenzo-only

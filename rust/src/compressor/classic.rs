@@ -22,7 +22,7 @@
 
 use super::block::BlockGrid;
 use super::engine::{Arena, Hooks, NoHooks};
-use super::format::{self, BlockMeta, Header, Writer};
+use super::format::{BlockMeta, Header, Writer};
 use super::huffman::HuffmanTable;
 use super::lorenzo::{self, GridView};
 use super::quantize::{Quantizer, UNPREDICTABLE};
@@ -193,13 +193,14 @@ pub fn compress_with_hooks<H: Hooks>(
         sum_dc: None,
         zstd_level: cfg.zstd_level,
         payload_zstd: false, // classic wraps its single stream in zstd already
+        parity: cfg.archive_parity,
     };
     writer.write()
 }
 
-/// Decompress a classic archive.
+/// Decompress a classic archive (healing v2 archives from parity first).
 pub fn decompress(bytes: &[u8]) -> Result<Decompressed> {
-    let archive = format::parse(bytes)?;
+    let archive = crate::ft::parity::parse_recovering(bytes)?;
     if !archive.header.is_classic() {
         return Err(Error::InvalidArgument(
             "not a classic archive: use compressor::engine::decompress".into(),

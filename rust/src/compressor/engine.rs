@@ -20,7 +20,7 @@
 //! injector.
 
 use super::block::{BlockGrid, Region};
-use super::format::{self, Archive, BlockMeta, BlockPayload, Header, Writer};
+use super::format::{Archive, BlockMeta, BlockPayload, Header, Writer};
 use super::huffman::HuffmanTable;
 use super::lorenzo::{self, GridView};
 use super::quantize::{Quantizer, UNPREDICTABLE};
@@ -370,6 +370,7 @@ pub fn compress_core<H: Hooks>(
         sum_dc: if params.ft { Some(&dc_sums) } else { None },
         zstd_level: cfg.zstd_level,
         payload_zstd: cfg.payload_zstd,
+        parity: cfg.archive_parity,
     };
     let archive = writer.write()?;
     stats.compressed_bytes = archive.len();
@@ -578,6 +579,7 @@ fn compress_core_parallel(
         sum_dc: if params.ft { Some(&dc_sums) } else { None },
         zstd_level: cfg.zstd_level,
         payload_zstd: cfg.payload_zstd,
+        parity: cfg.archive_parity,
     };
     let archive = writer.write()?;
     stats.compressed_bytes = archive.len();
@@ -787,9 +789,11 @@ pub(crate) fn decode_block<H: DecompressHooks>(
     Ok(())
 }
 
-/// Parse + sanity-check an archive against this engine.
+/// Parse + sanity-check an archive against this engine. Parity-protected
+/// (v2) archives are verified against their CRCs first and healed from
+/// their parity groups if damaged (`archive.recovered` records repairs).
 pub(crate) fn open(bytes: &[u8]) -> Result<(Archive, BlockGrid, Quantizer)> {
-    let archive = format::parse(bytes)?;
+    let archive = crate::ft::parity::parse_recovering(bytes)?;
     if archive.header.is_classic() {
         return Err(Error::InvalidArgument(
             "classic archive: use compressor::classic::decompress".into(),
@@ -825,6 +829,15 @@ pub(crate) fn decompress_core<H: DecompressHooks>(
     let dims = archive.header.dims;
     let mut out = vec![0.0f32; dims.len()];
     let mut report = DecompressReport::default();
+    if let Some(rec) = &archive.recovered {
+        for &s in &rec.stripes_repaired {
+            report.events.push(SdcEvent {
+                kind: SdcKind::ArchiveStripeRepaired,
+                block: s,
+                index: 0,
+            });
+        }
+    }
     let workers = par.workers();
     if H::PARALLEL_SAFE && workers > 1 {
         let n_blocks = grid.n_blocks();

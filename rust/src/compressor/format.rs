@@ -1,5 +1,7 @@
 //! Archive format shared by all three engines.
 //!
+//! Format **v1** (no archive-level protection):
+//!
 //! ```text
 //! +--------+---------+-------+------+-------+--------+--------+----------+
 //! | "FTSZ" | version | flags | dims | block | radius | bound  | n_blocks |
@@ -12,6 +14,29 @@
 //! +-----------------------------------------------------------------------+
 //! ```
 //!
+//! Format **v2** (self-healing archives — storage/transmission SDC
+//! resilience, written when [`Writer::parity`] is set):
+//!
+//! ```text
+//! +--------+-----------+----------------------------------------------+
+//! | "FTSZ" | version=2 | fixed header ×3, each followed by its CRC32  |
+//! +--------+-----------+----------------------------------------------+
+//! | meta body | unpred body | payload body | [ft body]   (protected)  |
+//! | parity section: per-stripe CRC32s + interleaved XOR parity groups |
+//! +------------------------------------------------------------------+
+//! ```
+//!
+//! The v2 fixed header carries every framing fact (section lengths and
+//! CRC32s, parity geometry) and is stored three times with a CRC each, so
+//! the parser can out-vote any single corrupted copy. The four section
+//! bodies form one contiguous *protected region* that
+//! [`crate::ft::parity`] slices into fixed-size stripes: each stripe gets
+//! a CRC32 (localization) and stripes are XOR-ed into interleaved parity
+//! groups (reconstruction), so a flipped bit — or a burst up to one
+//! stripe long — in the archive at rest is repaired before decoding
+//! instead of aborting the run or silently decoding garbage. See
+//! [`crate::ft::parity::recover`] for the repair pass.
+//!
 //! Per-block metadata records predictor choice, regression coefficients,
 //! unpredictable count and payload bit length — everything random-access
 //! decompression needs to decode one block in isolation (paper §5.1).
@@ -21,12 +46,17 @@ use super::lossless::{self, Codec};
 use super::Predictor;
 use crate::data::Dims;
 use crate::error::{Error, Result};
+use crate::ft::parity::{self, ParityParams, RecoverReport};
 use crate::util::bits::bytes::{self, Cursor};
+use crate::util::crc32::crc32;
 
 /// Archive magic.
 pub const MAGIC: &[u8; 4] = b"FTSZ";
-/// Current format version.
+/// Format version 1: unprotected framing (legacy default).
 pub const VERSION: u32 = 1;
+/// Format version 2: CRC-checked sections, triplicated voting header and
+/// XOR-parity self-healing (written when archive parity is enabled).
+pub const VERSION_V2: u32 = 2;
 
 /// Flag bit: independent-block (random-access) archive.
 pub const FLAG_RANDOM_ACCESS: u32 = 1 << 0;
@@ -34,10 +64,25 @@ pub const FLAG_RANDOM_ACCESS: u32 = 1 << 0;
 pub const FLAG_FAULT_TOLERANT: u32 = 1 << 1;
 /// Flag bit: classic (cross-block dependent) archive.
 pub const FLAG_CLASSIC: u32 = 1 << 2;
+/// Flag bit: archive-level parity protection present (format v2).
+pub const FLAG_ARCHIVE_PARITY: u32 = 1 << 3;
 
 /// Sanity cap for section sizes (prevents hostile/corrupt headers from
 /// driving huge allocations).
 const MAX_SECTION: usize = 1 << 33;
+
+/// Serialized length of the core header fields (flags, dims, block size,
+/// quant radius, error bound, n_blocks) — shared by v1 and v2.
+const CORE_HEADER_LEN: usize = 4 + 1 + 24 + 4 + 4 + 8 + 8;
+
+/// Serialized length of one v2 header body: core fields + parity geometry
+/// (stripe_len, group_width) + five `(len u64, crc u32)` section records
+/// (meta, unpred, payload, ft, parity).
+pub(crate) const V2_HEADER_BODY_LEN: usize = CORE_HEADER_LEN + 8 + 5 * 12;
+
+/// Offset of the protected section region in a v2 archive: magic +
+/// version + three `(header body, crc32)` copies.
+pub(crate) const V2_BODY_START: usize = 8 + 3 * (V2_HEADER_BODY_LEN + 4);
 
 /// Per-block metadata.
 #[derive(Debug, Clone)]
@@ -84,6 +129,11 @@ impl Header {
     pub fn is_classic(&self) -> bool {
         self.flags & FLAG_CLASSIC != 0
     }
+
+    /// True when the archive carries parity self-healing (format v2).
+    pub fn has_archive_parity(&self) -> bool {
+        self.flags & FLAG_ARCHIVE_PARITY != 0
+    }
 }
 
 /// Fully parsed archive (owned sections, ready for block decoding).
@@ -91,6 +141,13 @@ impl Header {
 pub struct Archive {
     /// Header fields.
     pub header: Header,
+    /// Format version the archive was stored in (1 or 2).
+    pub version: u32,
+    /// Parity geometry (v2 archives).
+    pub parity: Option<ParityParams>,
+    /// Repairs applied by [`crate::ft::parity::recover`] before this parse
+    /// (None = the stored bytes were used as-is).
+    pub recovered: Option<RecoverReport>,
     /// Global canonical Huffman table.
     pub table: HuffmanTable,
     /// Per-block metadata.
@@ -133,9 +190,13 @@ pub struct BlockPayload {
 ///
 /// `sum_dc` present ⇒ FT flag set. `classic_payload` present ⇒ classic
 /// layout: the caller passes the whole (already concatenated) stream and
-/// per-block `payload_bits` describe bit lengths inside it.
+/// per-block `payload_bits` describe bit lengths inside it. `parity`
+/// present ⇒ format v2 with archive-level self-healing; `None` produces
+/// bytes bitwise-identical to the historical v1 writer.
 pub struct Writer<'a> {
-    /// Header (flags are completed by `write`).
+    /// Header. `write` completes the flags from the archive contents;
+    /// caller-set bits are kept (OR-ed in) but must be consistent with the
+    /// contents — a caller flag the writer would not compute is rejected.
     pub header: Header,
     /// Huffman table.
     pub table: &'a HuffmanTable,
@@ -151,44 +212,37 @@ pub struct Writer<'a> {
     pub zstd_level: i32,
     /// Also Zstd the (rsz) payload section — the `payload_zstd` ablation.
     pub payload_zstd: bool,
+    /// Archive-level parity protection (format v2). `None` = v1.
+    pub parity: Option<ParityParams>,
 }
 
 impl<'a> Writer<'a> {
     /// Produce the archive bytes.
     pub fn write(mut self) -> Result<Vec<u8>> {
         let classic = self.classic_payload.is_some();
-        self.header.flags = if classic { FLAG_CLASSIC } else { FLAG_RANDOM_ACCESS };
+        let mut computed = if classic { FLAG_CLASSIC } else { FLAG_RANDOM_ACCESS };
         if self.sum_dc.is_some() {
-            self.header.flags |= FLAG_FAULT_TOLERANT;
+            computed |= FLAG_FAULT_TOLERANT;
         }
-        let mut out = Vec::new();
-        out.extend_from_slice(MAGIC);
-        bytes::put_u32(&mut out, VERSION);
-        bytes::put_u32(&mut out, self.header.flags);
-        let (rank, d, r, c) = self.header.dims.encode();
-        out.push(rank);
-        bytes::put_u64(&mut out, d);
-        bytes::put_u64(&mut out, r);
-        bytes::put_u64(&mut out, c);
-        bytes::put_u32(&mut out, self.header.block_size);
-        bytes::put_u32(&mut out, self.header.quant_radius);
-        bytes::put_f64(&mut out, self.header.error_bound);
-        bytes::put_u64(&mut out, self.header.n_blocks);
+        if self.parity.is_some() {
+            computed |= FLAG_ARCHIVE_PARITY;
+        }
+        // OR-in the computed flags; a caller-set bit the contents do not
+        // justify (or an unknown bit) would lie to every reader — reject.
+        if self.header.flags & !computed != 0 {
+            return Err(Error::Format(format!(
+                "caller flags {:#06x} inconsistent with archive contents (computed {:#06x})",
+                self.header.flags, computed
+            )));
+        }
+        self.header.flags |= computed;
 
         // ---- meta section ----
         let mut meta_raw = Vec::new();
         self.table.serialize(&mut meta_raw);
-        let metas: &[BlockMeta] = match &self.classic_payload {
-            Some((m, _)) => m,
-            None => {
-                // temporary collection borrowed below
-                &[]
-            }
-        };
-        let metas_vec: Vec<&BlockMeta> = if classic {
-            metas.iter().collect()
-        } else {
-            self.blocks.iter().map(|b| &b.meta).collect()
+        let metas_vec: Vec<&BlockMeta> = match &self.classic_payload {
+            Some((m, _)) => m.iter().collect(),
+            None => self.blocks.iter().map(|b| &b.meta).collect(),
         };
         if metas_vec.len() as u64 != self.header.n_blocks {
             return Err(Error::Format(format!(
@@ -211,23 +265,20 @@ impl<'a> Writer<'a> {
                 }
             }
         }
-        write_section(&mut out, &lossless::compress(&meta_raw, Codec::Zstd(self.zstd_level))?);
+        let meta_body = lossless::compress(&meta_raw, Codec::Zstd(self.zstd_level))?;
 
         // ---- unpred section ----
         let mut unpred_raw = Vec::with_capacity(self.unpred.len() * 4);
         for v in self.unpred {
             bytes::put_f32(&mut unpred_raw, *v);
         }
-        write_section(&mut out, &lossless::compress(&unpred_raw, Codec::Zstd(self.zstd_level))?);
+        let unpred_body = lossless::compress(&unpred_raw, Codec::Zstd(self.zstd_level))?;
 
         // ---- payload section ----
-        match self.classic_payload.take() {
+        let payload_body = match self.classic_payload.take() {
             Some((_, stream)) => {
                 // classic: zstd squeezes the single huffman stream further
-                write_section(
-                    &mut out,
-                    &lossless::compress(&stream, Codec::Zstd(self.zstd_level))?,
-                );
+                lossless::compress(&stream, Codec::Zstd(self.zstd_level))?
             }
             None => {
                 let total: usize = self.blocks.iter().map(|b| b.bytes.len()).sum();
@@ -242,23 +293,109 @@ impl<'a> Writer<'a> {
                 // ablation trades that away for ratio.
                 let codec =
                     if self.payload_zstd { Codec::Zstd(self.zstd_level) } else { Codec::Store };
-                write_section(&mut out, &lossless::compress(&payload, codec)?);
+                lossless::compress(&payload, codec)?
             }
-        }
+        };
 
         // ---- ft section ----
-        match self.sum_dc {
+        let ft_body = match self.sum_dc {
             Some(sums) => {
                 let mut raw = Vec::with_capacity(sums.len() * 8);
                 for s in sums {
                     bytes::put_u64(&mut raw, *s);
                 }
-                write_section(&mut out, &lossless::compress(&raw, Codec::Zstd(self.zstd_level))?);
+                Some(lossless::compress(&raw, Codec::Zstd(self.zstd_level))?)
             }
-            None => bytes::put_u64(&mut out, 0),
+            None => None,
+        };
+
+        match self.parity {
+            None => Ok(write_v1(&self.header, &meta_body, &unpred_body, &payload_body, &ft_body)),
+            Some(p) => write_v2(&self.header, p, &meta_body, &unpred_body, &payload_body, &ft_body),
         }
-        Ok(out)
     }
+}
+
+/// Serialize the core header fields (shared by v1 and the v2 header body).
+fn put_core_header(out: &mut Vec<u8>, h: &Header) {
+    bytes::put_u32(out, h.flags);
+    let (rank, d, r, c) = h.dims.encode();
+    out.push(rank);
+    bytes::put_u64(out, d);
+    bytes::put_u64(out, r);
+    bytes::put_u64(out, c);
+    bytes::put_u32(out, h.block_size);
+    bytes::put_u32(out, h.quant_radius);
+    bytes::put_f64(out, h.error_bound);
+    bytes::put_u64(out, h.n_blocks);
+}
+
+/// v1 assembly — bitwise-identical to the historical writer.
+fn write_v1(
+    header: &Header,
+    meta_body: &[u8],
+    unpred_body: &[u8],
+    payload_body: &[u8],
+    ft_body: &Option<Vec<u8>>,
+) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.extend_from_slice(MAGIC);
+    bytes::put_u32(&mut out, VERSION);
+    put_core_header(&mut out, header);
+    write_section(&mut out, meta_body);
+    write_section(&mut out, unpred_body);
+    write_section(&mut out, payload_body);
+    match ft_body {
+        Some(b) => write_section(&mut out, b),
+        None => bytes::put_u64(&mut out, 0),
+    }
+    out
+}
+
+/// v2 assembly: triplicated CRC-guarded header, CRC-checked sections, and
+/// an XOR-parity section over the protected region.
+fn write_v2(
+    header: &Header,
+    params: ParityParams,
+    meta_body: &[u8],
+    unpred_body: &[u8],
+    payload_body: &[u8],
+    ft_body: &Option<Vec<u8>>,
+) -> Result<Vec<u8>> {
+    params.validate()?;
+    let ft_slice: &[u8] = ft_body.as_deref().unwrap_or(&[]);
+    let protected_len =
+        meta_body.len() + unpred_body.len() + payload_body.len() + ft_slice.len();
+    let mut protected = Vec::with_capacity(protected_len);
+    protected.extend_from_slice(meta_body);
+    protected.extend_from_slice(unpred_body);
+    protected.extend_from_slice(payload_body);
+    protected.extend_from_slice(ft_slice);
+    let parity_body = parity::build(&protected, &params);
+
+    let sections: [&[u8]; 5] = [meta_body, unpred_body, payload_body, ft_slice, &parity_body];
+    let mut hb = Vec::with_capacity(V2_HEADER_BODY_LEN);
+    put_core_header(&mut hb, header);
+    bytes::put_u32(&mut hb, params.stripe_len);
+    bytes::put_u32(&mut hb, params.group_width);
+    for s in sections {
+        bytes::put_u64(&mut hb, s.len() as u64);
+        bytes::put_u32(&mut hb, crc32(s));
+    }
+    debug_assert_eq!(hb.len(), V2_HEADER_BODY_LEN);
+    let hb_crc = crc32(&hb);
+
+    let mut out =
+        Vec::with_capacity(V2_BODY_START + protected.len() + parity_body.len());
+    out.extend_from_slice(MAGIC);
+    bytes::put_u32(&mut out, VERSION_V2);
+    for _ in 0..3 {
+        out.extend_from_slice(&hb);
+        bytes::put_u32(&mut out, hb_crc);
+    }
+    out.extend_from_slice(&protected);
+    out.extend_from_slice(&parity_body);
+    Ok(out)
 }
 
 fn write_section(out: &mut Vec<u8>, body: &[u8]) {
@@ -274,16 +411,8 @@ fn read_section<'b>(c: &mut Cursor<'b>) -> Result<&'b [u8]> {
     c.bytes(len)
 }
 
-/// Parse an archive produced by [`Writer`].
-pub fn parse(data: &[u8]) -> Result<Archive> {
-    let mut c = Cursor::new(data);
-    if c.bytes(4)? != MAGIC {
-        return Err(Error::Format("bad magic".into()));
-    }
-    let version = c.u32()?;
-    if version != VERSION {
-        return Err(Error::Format(format!("unsupported version {version}")));
-    }
+/// Read + validate the core header fields (shared by v1 and v2).
+fn read_core_fields(c: &mut Cursor) -> Result<Header> {
     let flags = c.u32()?;
     let rank = c.bytes(1)?[0];
     let (d, r, cc) = (c.u64()?, c.u64()?, c.u64()?);
@@ -298,11 +427,222 @@ pub fn parse(data: &[u8]) -> Result<Archive> {
     if n_blocks as usize > dims.len() {
         return Err(Error::Format("block count exceeds point count".into()));
     }
-    let header = Header { flags, dims, block_size, quant_radius, error_bound, n_blocks };
+    Ok(Header { flags, dims, block_size, quant_radius, error_bound, n_blocks })
+}
+
+/// The voted v2 prelude: header fields plus the framing facts (section
+/// lengths/CRCs, parity geometry) that v2 stores redundantly.
+pub(crate) struct V2Prelude {
+    /// Core header fields.
+    pub header: Header,
+    /// Parity geometry.
+    pub params: ParityParams,
+    /// Section lengths: meta, unpred, payload, ft, parity.
+    pub lens: [usize; 5],
+    /// Section CRC32s, same order.
+    pub crcs: [u32; 5],
+}
+
+impl V2Prelude {
+    /// Byte offset of section `i` (0..=4) within the archive.
+    pub fn section_start(&self, i: usize) -> usize {
+        V2_BODY_START + self.lens[..i].iter().sum::<usize>()
+    }
+
+    /// Total archive length the prelude implies.
+    pub fn expected_len(&self) -> usize {
+        V2_BODY_START + self.lens.iter().sum::<usize>()
+    }
+
+    /// Length of the protected region (the four section bodies).
+    pub fn protected_len(&self) -> usize {
+        self.lens[..4].iter().sum()
+    }
+}
+
+/// Bitwise 2-of-3 majority.
+fn majority(a: u8, b: u8, c: u8) -> u8 {
+    (a & b) | (a & c) | (b & c)
+}
+
+/// Read the v2 prelude, out-voting corrupted header copies: the first
+/// copy whose CRC32 verifies wins; if all three fail, a bitwise majority
+/// vote across the copies is tried and must CRC-verify.
+pub(crate) fn read_v2_prelude(data: &[u8]) -> Result<V2Prelude> {
+    if data.len() < V2_BODY_START {
+        return Err(Error::Format(format!(
+            "truncated v2 header: {} bytes, need {V2_BODY_START}",
+            data.len()
+        )));
+    }
+    if &data[..4] != MAGIC {
+        return Err(Error::Format("bad magic".into()));
+    }
+    if u32::from_le_bytes(data[4..8].try_into().unwrap()) != VERSION_V2 {
+        return Err(Error::Format("not a v2 archive".into()));
+    }
+    const STRIDE: usize = V2_HEADER_BODY_LEN + 4;
+    fn copy(data: &[u8], i: usize) -> (&[u8], u32) {
+        let start = 8 + i * STRIDE;
+        let body = &data[start..start + V2_HEADER_BODY_LEN];
+        let crc = u32::from_le_bytes(
+            data[start + V2_HEADER_BODY_LEN..start + STRIDE].try_into().unwrap(),
+        );
+        (body, crc)
+    }
+    let mut body: Option<Vec<u8>> = None;
+    for i in 0..3 {
+        let (b, crc) = copy(data, i);
+        if crc32(b) == crc {
+            body = Some(b.to_vec());
+            break;
+        }
+    }
+    let body = match body {
+        Some(b) => b,
+        None => {
+            // every copy individually damaged: bitwise-majority vote (the
+            // vote also covers the stored CRCs, which then must confirm)
+            let (b0, c0) = copy(data, 0);
+            let (b1, c1) = copy(data, 1);
+            let (b2, c2) = copy(data, 2);
+            let voted: Vec<u8> = (0..V2_HEADER_BODY_LEN)
+                .map(|j| majority(b0[j], b1[j], b2[j]))
+                .collect();
+            let voted_crc = u32::from_le_bytes(std::array::from_fn(|j| {
+                majority(c0.to_le_bytes()[j], c1.to_le_bytes()[j], c2.to_le_bytes()[j])
+            }));
+            if crc32(&voted) != voted_crc {
+                return Err(Error::Sdc(
+                    "archive header unrecoverable: all three copies damaged beyond voting"
+                        .into(),
+                ));
+            }
+            voted
+        }
+    };
+    let mut hc = Cursor::new(&body);
+    let header = read_core_fields(&mut hc)?;
+    let stripe_len = hc.u32()?;
+    let group_width = hc.u32()?;
+    let params = ParityParams { stripe_len, group_width };
+    params.validate()?;
+    let mut lens = [0usize; 5];
+    let mut crcs = [0u32; 5];
+    for i in 0..5 {
+        let l = hc.u64()?;
+        if l > MAX_SECTION as u64 {
+            return Err(Error::Format(format!("section of {l} bytes exceeds cap")));
+        }
+        lens[i] = l as usize;
+        crcs[i] = hc.u32()?;
+    }
+    Ok(V2Prelude { header, params, lens, crcs })
+}
+
+/// Parse an archive produced by [`Writer`] (v1 or v2). Strict: v2 section
+/// CRC mismatches are reported as [`Error::Format`] — use
+/// [`crate::ft::parity::parse_recovering`] (what all decode paths do) to
+/// attempt parity repair first. The parity section itself is redundancy
+/// and is deliberately *not* CRC-gated here: damage to it never impairs
+/// decoding the data sections.
+pub fn parse(data: &[u8]) -> Result<Archive> {
+    let mut c = Cursor::new(data);
+    if c.bytes(4)? != MAGIC {
+        return Err(Error::Format("bad magic".into()));
+    }
+    let version = c.u32()?;
+    match version {
+        VERSION => parse_v1(c),
+        VERSION_V2 => parse_v2(data),
+        other => Err(Error::Format(format!("unsupported version {other}"))),
+    }
+}
+
+/// v1 body: sequential `len || body` sections after the fixed header.
+fn parse_v1(mut c: Cursor) -> Result<Archive> {
+    let header = read_core_fields(&mut c)?;
+    // a v1 archive can never carry parity: the writer only sets the flag
+    // when it emits v2. A set bit here is corruption (or forgery) and
+    // would falsely promise self-healing to readers.
+    if header.has_archive_parity() {
+        return Err(Error::Format("v1 archive claims archive parity".into()));
+    }
+    let meta_raw = lossless::decompress(read_section(&mut c)?, MAX_SECTION)?;
+    let unpred_raw = lossless::decompress(read_section(&mut c)?, MAX_SECTION)?;
+    let payload = lossless::decompress(read_section(&mut c)?, MAX_SECTION)?;
+    let ft_raw = if header.is_fault_tolerant() {
+        Some(lossless::decompress(read_section(&mut c)?, MAX_SECTION)?)
+    } else {
+        let z = c.u64()?;
+        if z != 0 {
+            return Err(Error::Format("unexpected ft section".into()));
+        }
+        None
+    };
+    assemble(header, VERSION, None, meta_raw, unpred_raw, payload, ft_raw)
+}
+
+/// v2 body: voted prelude, then CRC-verified contiguous section bodies.
+fn parse_v2(data: &[u8]) -> Result<Archive> {
+    let pre = read_v2_prelude(data)?;
+    parse_v2_with(data, pre, true)
+}
+
+/// v2 body parse against an already-voted prelude. `verify_crcs: false`
+/// skips the section-CRC pass — only for callers that just verified (or
+/// repaired and re-verified) the same bytes, i.e.
+/// [`crate::ft::parity::parse_recovering`]; everyone else must verify.
+pub(crate) fn parse_v2_with(data: &[u8], pre: V2Prelude, verify_crcs: bool) -> Result<Archive> {
+    let expected = pre.expected_len();
+    if expected != data.len() {
+        return Err(Error::Format(format!(
+            "v2 archive length {} != header-implied {expected}",
+            data.len()
+        )));
+    }
+    // the inverse of the v1 check: v2 always carries parity
+    if !pre.header.has_archive_parity() {
+        return Err(Error::Format("v2 archive missing the parity flag".into()));
+    }
+    const NAMES: [&str; 4] = ["meta", "unpred", "payload", "ft"];
+    let mut bodies: [&[u8]; 4] = [&[]; 4];
+    for i in 0..4 {
+        let s = &data[pre.section_start(i)..pre.section_start(i) + pre.lens[i]];
+        if verify_crcs && crc32(s) != pre.crcs[i] {
+            return Err(Error::Format(format!(
+                "{} section CRC mismatch (archive corrupt; parity recovery not attempted \
+                 or exhausted)",
+                NAMES[i]
+            )));
+        }
+        bodies[i] = s;
+    }
+    let ft_present = pre.header.is_fault_tolerant();
+    if ft_present == (pre.lens[3] == 0) {
+        return Err(Error::Format("ft flag and ft section length disagree".into()));
+    }
+    let meta_raw = lossless::decompress(bodies[0], MAX_SECTION)?;
+    let unpred_raw = lossless::decompress(bodies[1], MAX_SECTION)?;
+    let payload = lossless::decompress(bodies[2], MAX_SECTION)?;
+    let ft_raw =
+        if ft_present { Some(lossless::decompress(bodies[3], MAX_SECTION)?) } else { None };
+    assemble(pre.header, VERSION_V2, Some(pre.params), meta_raw, unpred_raw, payload, ft_raw)
+}
+
+/// Decode the section payloads into an [`Archive`] (shared by v1/v2).
+fn assemble(
+    header: Header,
+    version: u32,
+    parity: Option<ParityParams>,
+    meta_raw: Vec<u8>,
+    unpred_raw: Vec<u8>,
+    payload: Vec<u8>,
+    ft_raw: Option<Vec<u8>>,
+) -> Result<Archive> {
+    let n_blocks = header.n_blocks;
 
     // ---- meta ----
-    let meta_z = read_section(&mut c)?;
-    let meta_raw = lossless::decompress(meta_z, MAX_SECTION)?;
     let mut mc = Cursor::new(&meta_raw);
     let table = HuffmanTable::deserialize(&mut mc)?;
     let mut metas = Vec::with_capacity(n_blocks as usize);
@@ -326,8 +666,6 @@ pub fn parse(data: &[u8]) -> Result<Archive> {
     }
 
     // ---- unpred ----
-    let unpred_z = read_section(&mut c)?;
-    let unpred_raw = lossless::decompress(unpred_z, MAX_SECTION)?;
     if unpred_raw.len() % 4 != 0 {
         return Err(Error::Format("unpred section not a multiple of 4".into()));
     }
@@ -352,8 +690,6 @@ pub fn parse(data: &[u8]) -> Result<Archive> {
     }
 
     // ---- payload ----
-    let payload_z = read_section(&mut c)?;
-    let payload = lossless::decompress(payload_z, MAX_SECTION)?;
     let mut payload_offsets = Vec::with_capacity(metas.len() + 1);
     payload_offsets.push(0);
     if header.is_classic() {
@@ -378,26 +714,33 @@ pub fn parse(data: &[u8]) -> Result<Archive> {
     }
 
     // ---- ft ----
-    let sum_dc = if header.is_fault_tolerant() {
-        let ft_z = read_section(&mut c)?;
-        let raw = lossless::decompress(ft_z, MAX_SECTION)?;
-        if raw.len() != 8 * metas.len() {
-            return Err(Error::Format("ft section size mismatch".into()));
+    let sum_dc = match ft_raw {
+        Some(raw) => {
+            if raw.len() != 8 * metas.len() {
+                return Err(Error::Format("ft section size mismatch".into()));
+            }
+            Some(
+                raw.chunks_exact(8)
+                    .map(|b| u64::from_le_bytes(b.try_into().unwrap()))
+                    .collect(),
+            )
         }
-        Some(
-            raw.chunks_exact(8)
-                .map(|b| u64::from_le_bytes(b.try_into().unwrap()))
-                .collect(),
-        )
-    } else {
-        let z = c.u64()?;
-        if z != 0 {
-            return Err(Error::Format("unexpected ft section".into()));
-        }
-        None
+        None => None,
     };
 
-    Ok(Archive { header, table, metas, unpred, unpred_offsets, payload, payload_offsets, sum_dc })
+    Ok(Archive {
+        header,
+        version,
+        parity,
+        recovered: None,
+        table,
+        metas,
+        unpred,
+        unpred_offsets,
+        payload,
+        payload_offsets,
+        sum_dc,
+    })
 }
 
 #[cfg(test)]
@@ -444,6 +787,7 @@ mod tests {
             sum_dc: None,
             zstd_level: 3,
             payload_zstd: false,
+            parity: None,
         }
     }
 
@@ -455,6 +799,8 @@ mod tests {
         let a = parse(&data).unwrap();
         assert!(a.header.is_random_access());
         assert!(!a.header.is_fault_tolerant());
+        assert_eq!(a.version, VERSION);
+        assert!(a.parity.is_none());
         assert_eq!(a.metas.len(), 2);
         assert_eq!(a.metas[1].coeffs, [1.0, 2.0, 3.0, 4.0]);
         assert_eq!(a.block_payload(0), &[0xAB, 0xC0]);
@@ -510,6 +856,7 @@ mod tests {
             sum_dc: None,
             zstd_level: 3,
             payload_zstd: false,
+            parity: None,
         };
         let data = w.write().unwrap();
         let a = parse(&data).unwrap();
@@ -540,5 +887,164 @@ mod tests {
         assert!(w.write().is_ok()); // writer doesn't know — parser checks
         let data = sample_writer(&table, &unpred).write().unwrap();
         assert!(parse(&data).is_err());
+    }
+
+    #[test]
+    fn caller_flags_kept_or_rejected() {
+        let table = tiny_table();
+        let unpred = [7.5f32, -2.0];
+        let sums = [1u64, 2];
+        // consistent caller flag is kept (not silently overwritten)
+        let mut w = sample_writer(&table, &unpred);
+        w.sum_dc = Some(&sums);
+        w.header.flags = FLAG_FAULT_TOLERANT;
+        let data = w.write().unwrap();
+        let a = parse(&data).unwrap();
+        assert!(a.header.is_fault_tolerant() && a.header.is_random_access());
+        // classic flag on a random-access archive is a lie — rejected
+        let mut w = sample_writer(&table, &unpred);
+        w.header.flags = FLAG_CLASSIC;
+        assert!(w.write().is_err());
+        // ft flag without checksums is a lie — rejected
+        let mut w = sample_writer(&table, &unpred);
+        w.header.flags = FLAG_FAULT_TOLERANT;
+        assert!(w.write().is_err());
+        // parity flag without parity geometry is a lie — rejected
+        let mut w = sample_writer(&table, &unpred);
+        w.header.flags = FLAG_ARCHIVE_PARITY;
+        assert!(w.write().is_err());
+        // unknown flag bits are rejected
+        let mut w = sample_writer(&table, &unpred);
+        w.header.flags = 1 << 7;
+        assert!(w.write().is_err());
+        // parity flag WITH parity geometry is consistent
+        let mut w = sample_writer(&table, &unpred);
+        w.parity = Some(ParityParams::default());
+        w.header.flags = FLAG_ARCHIVE_PARITY | FLAG_RANDOM_ACCESS;
+        let a = parse(&w.write().unwrap()).unwrap();
+        assert!(a.header.has_archive_parity());
+    }
+
+    #[test]
+    fn unprotected_writer_emits_v1_bytes() {
+        let table = tiny_table();
+        let unpred = [7.5f32, -2.0];
+        let data = sample_writer(&table, &unpred).write().unwrap();
+        assert_eq!(&data[..4], MAGIC);
+        assert_eq!(u32::from_le_bytes(data[4..8].try_into().unwrap()), VERSION);
+    }
+
+    #[test]
+    fn v2_roundtrip_matches_v1_content() {
+        let table = tiny_table();
+        let unpred = [7.5f32, -2.0];
+        let sums = [42u64, 7];
+        let mut w1 = sample_writer(&table, &unpred);
+        w1.sum_dc = Some(&sums);
+        let v1 = w1.write().unwrap();
+        let mut w2 = sample_writer(&table, &unpred);
+        w2.sum_dc = Some(&sums);
+        w2.parity = Some(ParityParams { stripe_len: 32, group_width: 4 });
+        let v2 = w2.write().unwrap();
+        assert_eq!(u32::from_le_bytes(v2[4..8].try_into().unwrap()), VERSION_V2);
+        let a1 = parse(&v1).unwrap();
+        let a2 = parse(&v2).unwrap();
+        assert_eq!(a2.version, VERSION_V2);
+        assert_eq!(a2.parity, Some(ParityParams { stripe_len: 32, group_width: 4 }));
+        assert!(a2.header.has_archive_parity());
+        assert!(!a1.header.has_archive_parity());
+        // identical decoded content
+        assert_eq!(a1.payload, a2.payload);
+        assert_eq!(a1.unpred, a2.unpred);
+        assert_eq!(a1.sum_dc, a2.sum_dc);
+        assert_eq!(a1.metas.len(), a2.metas.len());
+        // v2 truncations also error cleanly at every prefix
+        for cut in 0..v2.len() {
+            assert!(parse(&v2[..cut]).is_err(), "v2 prefix {cut} parsed");
+        }
+    }
+
+    #[test]
+    fn v2_header_copy_corruption_is_outvoted() {
+        let table = tiny_table();
+        let unpred = [7.5f32, -2.0];
+        let mut w = sample_writer(&table, &unpred);
+        w.parity = Some(ParityParams { stripe_len: 32, group_width: 4 });
+        let good = w.write().unwrap();
+        // smash the entire first header copy
+        let mut bad = good.clone();
+        for b in bad[8..8 + V2_HEADER_BODY_LEN + 4].iter_mut() {
+            *b ^= 0x5A;
+        }
+        let a = parse(&bad).unwrap();
+        assert_eq!(a.header.n_blocks, 2);
+        // smash two copies: the third still wins
+        let mut bad2 = bad.clone();
+        let s = 8 + (V2_HEADER_BODY_LEN + 4);
+        for b in bad2[s..s + V2_HEADER_BODY_LEN + 4].iter_mut() {
+            *b ^= 0xA5;
+        }
+        assert!(parse(&bad2).is_ok());
+    }
+
+    #[test]
+    fn v2_exhaustive_single_bit_flip_trichotomy() {
+        // extends the corruption_detected truncation loop: EVERY single-bit
+        // flip of a v2 archive must end in corrected output or a clean
+        // error — never a panic, never silently wrong data
+        use crate::compressor::{CompressionConfig, ErrorBound};
+        use crate::data::synthetic;
+        use crate::ft;
+        use crate::inject::outcome::{classify_archive, ArchiveOutcome};
+
+        let f = synthetic::hurricane_field("t", Dims::d3(6, 6, 6), 11);
+        let cfg = CompressionConfig::new(ErrorBound::Abs(1e-2))
+            .with_block_size(3)
+            .with_archive_parity(ParityParams { stripe_len: 64, group_width: 8 });
+        let good = ft::compress(&f.data, f.dims, &cfg).unwrap();
+        let mut corrected = 0usize;
+        let mut clean = 0usize;
+        for byte in 0..good.len() {
+            for bit in 0..8 {
+                let mut bad = good.clone();
+                bad[byte] ^= 1 << bit;
+                match classify_archive(&f.data, 1e-2, ft::decompress(&bad)) {
+                    ArchiveOutcome::Corrected => corrected += 1,
+                    ArchiveOutcome::CleanError => clean += 1,
+                    ArchiveOutcome::SilentSdc => {
+                        panic!("silent SDC at byte {byte} bit {bit}")
+                    }
+                }
+            }
+        }
+        // only the 8 magic/version bytes are outside every redundancy
+        // domain; everything else must heal
+        let rate = corrected as f64 / (corrected + clean) as f64;
+        assert!(rate >= 0.95, "corrected {corrected}, clean {clean}, rate {rate:.4}");
+        assert!(clean <= 8 * 8, "more unhealable bytes than magic+version: {clean}");
+    }
+
+    #[test]
+    fn v2_section_corruption_detected_by_strict_parse() {
+        let table = tiny_table();
+        let unpred = [7.5f32, -2.0];
+        let mut w = sample_writer(&table, &unpred);
+        w.parity = Some(ParityParams { stripe_len: 32, group_width: 4 });
+        let good = w.write().unwrap();
+        // flip one bit in every protected-region byte position in turn:
+        // strict parse must detect each one
+        for off in V2_BODY_START..good.len() {
+            let mut bad = good.clone();
+            bad[off] ^= 0x01;
+            // flips inside the parity section are redundancy damage and
+            // still parse; flips in the data sections must be caught
+            let pre = read_v2_prelude(&good).unwrap();
+            let in_data = off < V2_BODY_START + pre.protected_len();
+            if in_data {
+                assert!(parse(&bad).is_err(), "flip at {off} undetected");
+            } else {
+                assert!(parse(&bad).is_ok(), "parity-section flip at {off} broke parse");
+            }
+        }
     }
 }

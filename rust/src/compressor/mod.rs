@@ -155,6 +155,10 @@ pub struct CompressionConfig {
     /// decompression takes its own knob, see `engine::decompress_with`).
     /// Archives are byte-identical at any setting.
     pub parallelism: Parallelism,
+    /// Archive-at-rest parity protection: `Some` writes format v2
+    /// (CRC-checked sections, voting header, XOR parity groups — see
+    /// [`crate::ft::parity`]); `None` writes the legacy v1 bytes.
+    pub archive_parity: Option<crate::ft::parity::ParityParams>,
 }
 
 impl CompressionConfig {
@@ -168,7 +172,14 @@ impl CompressionConfig {
             predictor: PredictorPolicy::Auto,
             payload_zstd: false,
             parallelism: Parallelism::Sequential,
+            archive_parity: None,
         }
+    }
+
+    /// Builder: enable archive-at-rest parity self-healing (format v2).
+    pub fn with_archive_parity(mut self, p: crate::ft::parity::ParityParams) -> Self {
+        self.archive_parity = Some(p);
+        self
     }
 
     /// Builder: worker threads for the block-parallel core.
@@ -227,6 +238,9 @@ impl CompressionConfig {
         if !(e.is_finite() && e > 0.0) {
             return Err(Error::Config(format!("error bound {e} must be finite and positive")));
         }
+        if let Some(p) = &self.archive_parity {
+            p.validate()?;
+        }
         Ok(())
     }
 }
@@ -268,6 +282,18 @@ mod tests {
     #[test]
     fn config_validation() {
         assert!(CompressionConfig::new(ErrorBound::Abs(1e-3)).validate().is_ok());
+        // parity geometry is validated with the rest of the config
+        let p = crate::ft::parity::ParityParams { stripe_len: 4, group_width: 4 };
+        assert!(
+            CompressionConfig::new(ErrorBound::Abs(1e-3)).with_archive_parity(p).validate().is_err()
+        );
+        let good = crate::ft::parity::ParityParams::default();
+        assert!(
+            CompressionConfig::new(ErrorBound::Abs(1e-3))
+                .with_archive_parity(good)
+                .validate()
+                .is_ok()
+        );
         assert!(CompressionConfig::new(ErrorBound::Abs(0.0)).validate().is_err());
         assert!(CompressionConfig::new(ErrorBound::Abs(f64::NAN)).validate().is_err());
         assert!(

@@ -209,6 +209,7 @@ pub fn compress(
         sum_dc: Some(&sums),
         zstd_level: cfg.zstd_level,
         payload_zstd: cfg.payload_zstd,
+        parity: cfg.archive_parity,
     }
     .write()
 }

@@ -36,6 +36,9 @@ impl RunConfig {
     /// zstd_level = 3
     /// predictor = "auto"         # auto | lorenzo | regression
     /// workers = 1                # block-parallel threads (0 = auto)
+    /// archive_parity = false     # format-v2 self-healing archives
+    /// parity_stripe_len = 512    # bytes per CRC-localized stripe
+    /// parity_group_width = 64    # stripes per XOR parity group
     /// ```
     pub fn from_doc(doc: &ConfigDoc) -> Result<Self> {
         let profile = parse_profile(doc.str_or("profile", "nyx")?)?;
@@ -82,6 +85,40 @@ pub fn compression_from_doc(doc: &ConfigDoc, section: &str) -> Result<Compressio
         n if n >= 0 => Parallelism::from_workers(n as usize),
         n => return Err(Error::Config(format!("{section}.workers = {n} must be >= 0"))),
     };
+    // archive_parity = true enables format-v2 self-healing; the stripe
+    // geometry keys default to ParityParams::default(). Range-check
+    // before the narrowing cast (like `workers` above) so out-of-range
+    // values are rejected instead of silently wrapping.
+    let parity_enabled = doc.bool_or(&key("archive_parity"), false)?;
+    if !parity_enabled {
+        // geometry without the enable flag would silently write
+        // unprotected v1 archives under an operator who believes parity
+        // is on — reject instead
+        for k in ["parity_stripe_len", "parity_group_width"] {
+            if doc.get(&key(k)).is_some() {
+                return Err(Error::Config(format!(
+                    "{} is set but {} = true is not — archives would be unprotected",
+                    key(k),
+                    key("archive_parity")
+                )));
+            }
+        }
+    }
+    let archive_parity = if parity_enabled {
+        let d = crate::ft::parity::ParityParams::default();
+        let stripe = doc.int_or(&key("parity_stripe_len"), d.stripe_len as i64)?;
+        let width = doc.int_or(&key("parity_group_width"), d.group_width as i64)?;
+        let as_u32 = |k: &str, v: i64| -> Result<u32> {
+            u32::try_from(v)
+                .map_err(|_| Error::Config(format!("{} = {v} out of range", key(k))))
+        };
+        Some(crate::ft::parity::ParityParams {
+            stripe_len: as_u32("parity_stripe_len", stripe)?,
+            group_width: as_u32("parity_group_width", width)?,
+        })
+    } else {
+        None
+    };
     let cfg = CompressionConfig {
         error_bound,
         block_size: doc.int_or(&key("block_size"), 10)? as usize,
@@ -90,6 +127,7 @@ pub fn compression_from_doc(doc: &ConfigDoc, section: &str) -> Result<Compressio
         predictor,
         payload_zstd: doc.bool_or(&key("payload_zstd"), false)?,
         parallelism,
+        archive_parity,
     };
     cfg.validate()?;
     Ok(cfg)

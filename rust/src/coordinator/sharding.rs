@@ -21,11 +21,28 @@ pub struct Assignment {
     pub ranks: Vec<Vec<usize>>,
 }
 
+/// Index shard weights by id once. On duplicate ids the *first*
+/// occurrence wins — the same shard `find` used to resolve, so callers
+/// with (buggy) duplicated catalogs keep their previous numbers instead
+/// of silently changing.
+fn weight_index(shards: &[Shard]) -> std::collections::HashMap<usize, u64> {
+    let mut m = std::collections::HashMap::with_capacity(shards.len());
+    for s in shards {
+        m.entry(s.id).or_insert(s.weight);
+    }
+    m
+}
+
 impl Assignment {
-    /// Total weight per rank.
+    /// Total weight per rank. One pass to index the weights, then O(ids):
+    /// the old per-id linear `find` made this O(shards × ids), which sat
+    /// inside every [`Assignment::imbalance`] call of a rebalance loop.
     pub fn loads(&self, shards: &[Shard]) -> Vec<u64> {
-        let weight_of = |id: usize| shards.iter().find(|s| s.id == id).map_or(0, |s| s.weight);
-        self.ranks.iter().map(|ids| ids.iter().map(|&i| weight_of(i)).sum()).collect()
+        let w = weight_index(shards);
+        self.ranks
+            .iter()
+            .map(|ids| ids.iter().map(|i| w.get(i).copied().unwrap_or(0)).sum())
+            .collect()
     }
 
     /// Max/mean load imbalance factor (1.0 = perfect).
@@ -88,7 +105,8 @@ pub fn balanced(shards: &[Shard], n_ranks: usize) -> Assignment {
 /// shards as possible: keep what fits, re-place the rest by LPT.
 pub fn rebalance(current: &Assignment, shards: &[Shard], new_ranks: usize) -> Assignment {
     let new_ranks = new_ranks.max(1);
-    let weight_of = |id: usize| shards.iter().find(|s| s.id == id).map_or(0, |s| s.weight);
+    let index = weight_index(shards);
+    let weight_of = |id: usize| index.get(&id).copied().unwrap_or(0);
     let total: u64 = shards.iter().map(|s| s.weight).sum();
     let target = total.div_ceil(new_ranks as u64);
     let mut ranks: Vec<Vec<usize>> = vec![Vec::new(); new_ranks];
@@ -171,6 +189,28 @@ mod tests {
             .map(|(x, y)| x.iter().filter(|id| !y.contains(id)).count())
             .sum();
         assert_eq!(moved, 0);
+    }
+
+    #[test]
+    fn duplicate_ids_resolve_to_first_occurrence() {
+        // a duplicated catalog entry must not change load accounting:
+        // the map keeps the first occurrence, exactly like the old
+        // linear `find`
+        let shards = vec![
+            Shard { id: 0, weight: 5 },
+            Shard { id: 1, weight: 7 },
+            Shard { id: 0, weight: 999 },
+        ];
+        let a = Assignment { ranks: vec![vec![0], vec![1], vec![]] };
+        assert_eq!(a.loads(&shards), vec![5, 7, 0]);
+        assert!((a.imbalance(&shards) - 7.0 / 4.0).abs() < 1e-12);
+        // unknown ids weigh nothing instead of panicking
+        let b = Assignment { ranks: vec![vec![42]] };
+        assert_eq!(b.loads(&shards), vec![0]);
+        // rebalance over the duplicated catalog keeps every placed id
+        let r = rebalance(&a, &shards, 2);
+        let placed: usize = r.ranks.iter().map(Vec::len).sum();
+        assert_eq!(placed, 2);
     }
 
     #[test]

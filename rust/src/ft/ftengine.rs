@@ -11,6 +11,12 @@
 //! * per-block decompressed-data checksums (`sum_dc[]`) stored
 //!   Zstd-compressed inside the archive and re-verified at decompression,
 //!   with random-access block re-execution as the repair action.
+//!
+//! Re-execution repairs *transient decode-time* faults only: it re-reads
+//! the same stored bytes, so persistent corruption of the archive at rest
+//! is detected by `sum_dc` but deterministically fails again on retry.
+//! That failure domain belongs to [`crate::ft::parity`] (format v2),
+//! which every decode path here consults before touching the bytes.
 
 use crate::compressor::engine::{
     self, compress_core, decompress_core, CoreOutput, CoreParams, Decompressed, DecompressHooks,

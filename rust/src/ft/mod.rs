@@ -8,14 +8,20 @@
 //! * [`ftengine`] — **ftrsz**: Algorithm 1 (soft-error-resilient
 //!   compression) and Algorithm 2 (resilient decompression with per-block
 //!   verification and random-access re-execution);
+//! * [`parity`] — archive-at-rest resilience (format v2): per-stripe
+//!   CRC32 localization plus interleaved XOR parity groups, with
+//!   [`parity::recover`] healing persistent archive corruption that
+//!   re-execution cannot touch;
 //! * [`report`] — SDC event classification for the injection experiments.
 
 pub mod checksum;
 pub mod duplicate;
 pub mod ftengine;
+pub mod parity;
 pub mod report;
 
 pub use ftengine::{
     compress, compress_with_hooks, decompress, decompress_verbose, decompress_with,
 };
+pub use parity::{recover, ParityParams, Recovery};
 pub use report::{DecompressReport, SdcEvent};

@@ -1,0 +1,445 @@
+//! Archive-at-rest SDC resilience: the format-v2 parity codec and the
+//! recovery engine (`recover`).
+//!
+//! The compute-time ABFT layer ([`crate::ft::checksum`]) detects a block
+//! whose *decompressed* data disagrees with its stored `sum_dc` and
+//! repairs it by re-executing the block — which re-reads the **same
+//! stored bytes**. That heals transient decode-time faults but is
+//! powerless against persistent corruption of the archive itself (bit rot
+//! on disk, radiation hits in a probe's flash, link errors in transit):
+//! re-execution deterministically reproduces the wrong answer. Parity is
+//! the designed answer for that failure domain.
+//!
+//! Scheme (format v2, see [`crate::compressor::format`]):
+//!
+//! * the four section bodies form one contiguous *protected region*,
+//!   sliced into fixed-size stripes of [`ParityParams::stripe_len`] bytes
+//!   (the last stripe may be short);
+//! * every stripe gets a CRC32 → **localization** of damage;
+//! * stripe `i` belongs to parity group `i % n_groups`, and each group
+//!   stores the XOR of its member stripes (short tail zero-padded) →
+//!   **reconstruction** of any single damaged stripe per group;
+//! * group membership is *interleaved*, so adjacent stripes always land
+//!   in different groups: a burst up to one stripe long touches at most
+//!   two stripes and both are repairable.
+//!
+//! The per-stripe CRC table and parity blobs live in a trailing parity
+//! section whose own CRC32 sits in the voted header. A falsely-accused
+//! stripe (its CRC table entry corrupted, data intact) is harmless:
+//! XOR-reconstruction of an intact stripe reproduces the same bytes, and
+//! the section CRCs re-verify after every repair. Repair therefore never
+//! *introduces* corruption; when it cannot prove a clean result it
+//! reports an unrecoverable (but detected) archive instead.
+
+use crate::compressor::format::{self, Archive, MAGIC, VERSION_V2, V2_BODY_START};
+use crate::error::{Error, Result};
+use crate::util::bits::bytes;
+use crate::util::crc32::crc32;
+
+/// Geometry of the v2 parity section.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ParityParams {
+    /// Stripe size in bytes. Smaller stripes localize damage more finely
+    /// (and tolerate longer relative bursts) at the cost of a larger CRC
+    /// table: the CRC overhead is `4 / stripe_len` of the archive.
+    pub stripe_len: u32,
+    /// Stripes per parity group; the parity overhead is roughly
+    /// `1 / group_width` of the archive. Each group tolerates one damaged
+    /// stripe.
+    pub group_width: u32,
+}
+
+impl Default for ParityParams {
+    /// Defaults chosen so the total archive-size overhead stays under 3%:
+    /// 512-byte stripes (CRC table ≈ 0.8%) in 64-stripe groups
+    /// (parity ≈ 1.6%).
+    fn default() -> Self {
+        Self { stripe_len: 512, group_width: 64 }
+    }
+}
+
+impl ParityParams {
+    /// Reject geometries that would be useless or hostile.
+    pub fn validate(&self) -> Result<()> {
+        if !(16..=1 << 20).contains(&self.stripe_len) {
+            return Err(Error::Config(format!(
+                "parity stripe_len {} out of supported range 16..=1048576",
+                self.stripe_len
+            )));
+        }
+        if !(2..=1 << 16).contains(&self.group_width) {
+            return Err(Error::Config(format!(
+                "parity group_width {} out of supported range 2..=65536",
+                self.group_width
+            )));
+        }
+        Ok(())
+    }
+
+    /// Number of stripes covering `protected_len` bytes.
+    fn n_stripes(&self, protected_len: usize) -> usize {
+        protected_len.div_ceil(self.stripe_len as usize)
+    }
+
+    /// Number of interleaved parity groups for `n_stripes`. At least two
+    /// whenever there are two stripes, so *adjacent* stripes always land
+    /// in different groups and a burst up to one stripe long (touching at
+    /// most two adjacent stripes) stays repairable even in tiny archives.
+    fn n_groups(&self, n_stripes: usize) -> usize {
+        match n_stripes {
+            0 => 0,
+            1 => 1,
+            n => n.div_ceil(self.group_width as usize).clamp(2, n),
+        }
+    }
+}
+
+/// Build the parity section body over the protected region:
+/// `n_stripes u32 | n_groups u32 | stripe CRC32s | per-group XOR blobs`.
+pub(crate) fn build(protected: &[u8], p: &ParityParams) -> Vec<u8> {
+    let stripe = p.stripe_len as usize;
+    let n = p.n_stripes(protected.len());
+    let g = p.n_groups(n);
+    let mut body = Vec::with_capacity(8 + 4 * n + g * stripe);
+    bytes::put_u32(&mut body, n as u32);
+    bytes::put_u32(&mut body, g as u32);
+    for i in 0..n {
+        bytes::put_u32(&mut body, crc32(stripe_of(protected, i, stripe)));
+    }
+    let mut blobs = vec![0u8; g * stripe];
+    for i in 0..n {
+        let dst = &mut blobs[(i % g) * stripe..];
+        for (j, &b) in stripe_of(protected, i, stripe).iter().enumerate() {
+            dst[j] ^= b;
+        }
+    }
+    body.extend_from_slice(&blobs);
+    body
+}
+
+/// Stripe `i` of the protected region (the tail stripe may be short).
+fn stripe_of(protected: &[u8], i: usize, stripe: usize) -> &[u8] {
+    let start = i * stripe;
+    &protected[start..protected.len().min(start + stripe)]
+}
+
+/// What [`recover`] repaired.
+#[derive(Debug, Clone, Default)]
+pub struct RecoverReport {
+    /// Indices of the protected-region stripes rebuilt from parity.
+    pub stripes_repaired: Vec<usize>,
+}
+
+/// Result of an archive recovery pass.
+#[derive(Debug)]
+pub enum Recovery {
+    /// v1 (or foreign) bytes, or a v2 archive whose length disagrees with
+    /// its header — nothing the parity layer can do; strict parsing will
+    /// report the precise problem.
+    Unprotected,
+    /// Every CRC verified; the stored bytes are usable as-is.
+    Clean,
+    /// Damage was localized and rebuilt from parity: `bytes` is the healed
+    /// archive, re-verified against the section CRCs.
+    Repaired {
+        /// The healed archive.
+        bytes: Vec<u8>,
+        /// What was repaired.
+        report: RecoverReport,
+    },
+}
+
+/// Verify a stored archive against its v2 redundancy and repair what the
+/// parity groups can reconstruct.
+///
+/// Errors mean *detected but unrecoverable* corruption ([`Error::Sdc`]):
+/// all header copies damaged, two stripes of one parity group damaged, or
+/// a damaged parity section alongside damaged data. A clean error is the
+/// designed outcome there — the caller must never decode such bytes.
+pub fn recover(data: &[u8]) -> Result<Recovery> {
+    // non-v2 bytes, and v2 bytes truncated below even the header region,
+    // are both "length damage parity cannot reconstruct" — Unprotected,
+    // matching the longer-truncation path inside recover_with
+    if !looks_v2(data) || data.len() < V2_BODY_START {
+        return Ok(Recovery::Unprotected);
+    }
+    let pre = format::read_v2_prelude(data)?;
+    recover_with(data, &pre)
+}
+
+/// True when the bytes carry the v2 magic + version.
+fn looks_v2(data: &[u8]) -> bool {
+    data.len() >= 8
+        && &data[..4] == MAGIC
+        && u32::from_le_bytes(data[4..8].try_into().unwrap()) == VERSION_V2
+}
+
+/// [`recover`] against an already-voted prelude (lets
+/// [`parse_recovering`] vote and CRC-verify the archive exactly once).
+fn recover_with(data: &[u8], pre: &format::V2Prelude) -> Result<Recovery> {
+    if pre.expected_len() != data.len() {
+        // truncation/extension: parity reconstructs flipped bytes, not
+        // missing ones — let strict parsing report the length mismatch
+        return Ok(Recovery::Unprotected);
+    }
+    let section = |i: usize| &data[pre.section_start(i)..pre.section_start(i) + pre.lens[i]];
+    let bad_sections: Vec<usize> = (0..4).filter(|&i| crc32(section(i)) != pre.crcs[i]).collect();
+    if bad_sections.is_empty() {
+        return Ok(Recovery::Clean);
+    }
+
+    // data damage exists — the parity section must prove itself first
+    let parity_body = section(4);
+    if crc32(parity_body) != pre.crcs[4] {
+        return Err(Error::Sdc(
+            "archive data and parity section both damaged — unrecoverable".into(),
+        ));
+    }
+    let stripe = pre.params.stripe_len as usize;
+    let protected_len = pre.protected_len();
+    let n = pre.params.n_stripes(protected_len);
+    let g = pre.params.n_groups(n);
+    if parity_body.len() != 8 + 4 * n + g * stripe
+        || u32::from_le_bytes(parity_body[0..4].try_into().unwrap()) != n as u32
+        || u32::from_le_bytes(parity_body[4..8].try_into().unwrap()) != g as u32
+    {
+        return Err(Error::Sdc("parity section geometry mismatch — unrecoverable".into()));
+    }
+    let stripe_crcs: Vec<u32> = parity_body[8..8 + 4 * n]
+        .chunks_exact(4)
+        .map(|b| u32::from_le_bytes(b.try_into().unwrap()))
+        .collect();
+    let blobs = &parity_body[8 + 4 * n..];
+
+    let protected = &data[V2_BODY_START..V2_BODY_START + protected_len];
+    let bad_stripes: Vec<usize> =
+        (0..n).filter(|&i| crc32(stripe_of(protected, i, stripe)) != stripe_crcs[i]).collect();
+    if bad_stripes.is_empty() {
+        return Err(Error::Sdc(
+            "section checksum mismatch could not be localized to a stripe — unrecoverable"
+                .into(),
+        ));
+    }
+    let mut per_group = vec![0usize; g];
+    for &s in &bad_stripes {
+        per_group[s % g] += 1;
+        if per_group[s % g] > 1 {
+            return Err(Error::Sdc(format!(
+                "two damaged stripes in parity group {} — unrecoverable",
+                s % g
+            )));
+        }
+    }
+
+    let mut healed = data.to_vec();
+    for &s in &bad_stripes {
+        let grp = s % g;
+        let mut rebuilt = blobs[grp * stripe..(grp + 1) * stripe].to_vec();
+        for i in (grp..n).step_by(g) {
+            if i != s {
+                for (j, &b) in stripe_of(protected, i, stripe).iter().enumerate() {
+                    rebuilt[j] ^= b;
+                }
+            }
+        }
+        let start = V2_BODY_START + s * stripe;
+        let end = V2_BODY_START + protected_len.min((s + 1) * stripe);
+        healed[start..end].copy_from_slice(&rebuilt[..end - start]);
+    }
+
+    // the repaired archive must re-verify end to end before anyone decodes it
+    for i in 0..4 {
+        let s = &healed[pre.section_start(i)..pre.section_start(i) + pre.lens[i]];
+        if crc32(s) != pre.crcs[i] {
+            return Err(Error::Sdc(
+                "parity reconstruction failed post-repair verification — unrecoverable".into(),
+            ));
+        }
+    }
+    let report = RecoverReport { stripes_repaired: bad_stripes };
+    Ok(Recovery::Repaired { bytes: healed, report })
+}
+
+/// Parse an archive, healing it from its parity redundancy first when it
+/// is damaged. This is the entry point every decode path uses; v1
+/// archives pass straight through to the strict parser.
+///
+/// The header vote and the section-CRC pass run exactly once here — the
+/// subsequent parse reuses the voted prelude and skips re-verification
+/// (on the repaired path the healed bytes were already re-verified inside
+/// [`recover`]).
+pub fn parse_recovering(data: &[u8]) -> Result<Archive> {
+    if !looks_v2(data) {
+        return format::parse(data);
+    }
+    let pre = format::read_v2_prelude(data)?;
+    match recover_with(data, &pre)? {
+        // length/header disagreement: the strict parser owns the message
+        Recovery::Unprotected => format::parse(data),
+        Recovery::Clean => format::parse_v2_with(data, pre, false),
+        Recovery::Repaired { bytes, report } => {
+            let mut a = format::parse_v2_with(&bytes, pre, false)?;
+            a.recovered = Some(report);
+            Ok(a)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compressor::{CompressionConfig, ErrorBound};
+    use crate::data::{synthetic, Dims};
+    use crate::ft;
+    use crate::util::rng::Pcg32;
+
+    fn cfg_v2() -> CompressionConfig {
+        CompressionConfig::new(ErrorBound::Abs(1e-3))
+            .with_block_size(4)
+            .with_archive_parity(ParityParams { stripe_len: 64, group_width: 8 })
+    }
+
+    fn sample_v2() -> (Vec<f32>, Vec<u8>) {
+        let f = synthetic::hurricane_field("t", Dims::d3(6, 8, 8), 5);
+        let bytes = ft::compress(&f.data, f.dims, &cfg_v2()).unwrap();
+        (f.data, bytes)
+    }
+
+    #[test]
+    fn clean_archive_passes_through() {
+        let (_, bytes) = sample_v2();
+        assert!(matches!(recover(&bytes).unwrap(), Recovery::Clean));
+        assert!(parse_recovering(&bytes).unwrap().recovered.is_none());
+    }
+
+    #[test]
+    fn v1_bytes_are_unprotected() {
+        let f = synthetic::hurricane_field("t", Dims::d3(6, 8, 8), 5);
+        let cfg = CompressionConfig::new(ErrorBound::Abs(1e-3)).with_block_size(4);
+        let v1 = ft::compress(&f.data, f.dims, &cfg).unwrap();
+        assert!(matches!(recover(&v1).unwrap(), Recovery::Unprotected));
+        assert!(matches!(recover(b"not an archive").unwrap(), Recovery::Unprotected));
+    }
+
+    #[test]
+    fn single_byte_damage_is_repaired_exactly() {
+        let (_, good) = sample_v2();
+        let protected_len = format::read_v2_prelude(&good).unwrap().protected_len();
+        let mut rng = Pcg32::new(17);
+        for _ in 0..50 {
+            let mut bad = good.clone();
+            // damage somewhere in the protected region
+            let off = V2_BODY_START + rng.index(protected_len);
+            bad[off] ^= 1 << rng.index(8);
+            match recover(&bad).unwrap() {
+                Recovery::Repaired { bytes, report } => {
+                    assert_eq!(bytes, good, "repair did not restore the original");
+                    assert_eq!(report.stripes_repaired.len(), 1);
+                }
+                other => panic!("expected repair at {off}, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn burst_across_stripe_boundary_is_repaired() {
+        let (_, good) = sample_v2();
+        let pre = format::read_v2_prelude(&good).unwrap();
+        let stripe = pre.params.stripe_len as usize;
+        let g = pre.params.n_groups(pre.params.n_stripes(pre.protected_len()));
+        assert!(g >= 3, "stripes 1 and 2 must land in distinct groups (got {g})");
+        // straddle the boundary between stripes 1 and 2
+        let start = V2_BODY_START + 2 * stripe - 8;
+        let mut bad = good.clone();
+        for b in bad[start..start + 16].iter_mut() {
+            *b ^= 0xFF;
+        }
+        match recover(&bad).unwrap() {
+            Recovery::Repaired { bytes, report } => {
+                assert_eq!(bytes, good);
+                assert_eq!(report.stripes_repaired, vec![1, 2]);
+            }
+            other => panic!("expected burst repair, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn two_stripes_in_one_group_is_detected_unrecoverable() {
+        let (_, good) = sample_v2();
+        let pre = format::read_v2_prelude(&good).unwrap();
+        let stripe = pre.params.stripe_len as usize;
+        let n = pre.params.n_stripes(pre.protected_len());
+        let g = pre.params.n_groups(n);
+        // stripes 0 and g share group 0 (needs at least g+1 stripes)
+        assert!(n > g, "test archive too small: {n} stripes, {g} groups");
+        let mut bad = good.clone();
+        bad[V2_BODY_START] ^= 0x01;
+        bad[V2_BODY_START + g * stripe] ^= 0x01;
+        assert!(matches!(recover(&bad), Err(Error::Sdc(_))));
+    }
+
+    #[test]
+    fn damaged_parity_section_with_clean_data_is_clean() {
+        let (_, good) = sample_v2();
+        let pre = format::read_v2_prelude(&good).unwrap();
+        let mut bad = good.clone();
+        let p_start = pre.section_start(4);
+        bad[p_start + 12] ^= 0x10; // somewhere in the stripe-CRC table
+        // data sections are intact → usable as-is, parity never consulted
+        assert!(matches!(recover(&bad).unwrap(), Recovery::Clean));
+        assert!(parse_recovering(&bad).is_ok());
+    }
+
+    #[test]
+    fn damaged_parity_and_data_is_unrecoverable_not_silent() {
+        let (_, good) = sample_v2();
+        let pre = format::read_v2_prelude(&good).unwrap();
+        let mut bad = good.clone();
+        bad[V2_BODY_START + 3] ^= 0x40; // data
+        bad[pre.section_start(4) + 20] ^= 0x02; // parity
+        assert!(matches!(recover(&bad), Err(Error::Sdc(_))));
+        assert!(parse_recovering(&bad).is_err());
+    }
+
+    #[test]
+    fn repaired_archive_decodes_within_bound() {
+        let (orig, good) = sample_v2();
+        let mut rng = Pcg32::new(23);
+        for _ in 0..25 {
+            let mut bad = good.clone();
+            let off = rng.index(good.len());
+            bad[off] ^= 1 << rng.index(8);
+            // whatever happened, it is repaired, cleanly rejected, or was
+            // harmless — never silently wrong
+            if let Ok(dec) = ft::decompress(&bad) {
+                let max = crate::analysis::max_abs_err(&orig, &dec.data);
+                assert!(max <= 1e-3, "silent SDC after flip at {off}: err {max}");
+            }
+        }
+    }
+
+    #[test]
+    fn codec_layout_roundtrip() {
+        let p = ParityParams { stripe_len: 16, group_width: 2 };
+        let data: Vec<u8> = (0..100u8).collect();
+        let body = build(&data, &p);
+        let n = p.n_stripes(data.len());
+        let g = p.n_groups(n);
+        assert_eq!(n, 7);
+        assert_eq!(g, 4);
+        assert_eq!(body.len(), 8 + 4 * n + g * 16);
+        // XOR of group 0 members (stripes 0 and 4) matches the blob
+        let blob0 = &body[8 + 4 * n..8 + 4 * n + 16];
+        for j in 0..16 {
+            assert_eq!(blob0[j], data[j] ^ data[4 * 16 + j]);
+        }
+    }
+
+    #[test]
+    fn params_validation() {
+        assert!(ParityParams::default().validate().is_ok());
+        assert!(ParityParams { stripe_len: 8, group_width: 8 }.validate().is_err());
+        assert!(ParityParams { stripe_len: 64, group_width: 1 }.validate().is_err());
+        assert!(ParityParams { stripe_len: 1 << 21, group_width: 8 }.validate().is_err());
+    }
+}

@@ -17,6 +17,10 @@ pub enum SdcKind {
     /// Decompression-time error detected, block re-executed successfully
     /// (Alg. 2 l. 17).
     DecompCorrected,
+    /// Persistent archive corruption localized and rebuilt from a v2
+    /// parity group before decoding (`block` holds the stripe index —
+    /// see [`crate::ft::parity::recover`]).
+    ArchiveStripeRepaired,
 }
 
 /// One observed SDC event.

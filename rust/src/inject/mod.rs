@@ -13,14 +13,21 @@
 //!   scheduled flip picks a random buffer (weighted by its current byte
 //!   size) at a random progress point. A flip scheduled "before time zero"
 //!   corrupts the input before checksumming — reproducing the paper's
-//!   residual ~8% failure window (Fig. 6 analysis).
+//!   residual ~8% failure window (Fig. 6 analysis);
+//! * [`mode_c`] — archive-at-rest injection: bit flips and bursts in the
+//!   finished archive bytes (storage/transmission SDC), the campaign the
+//!   format-v2 parity layer ([`crate::ft::parity`]) is evaluated against.
 //!
 //! [`outcome`] classifies a full compress→decompress run the way the
 //! paper's tables do: crash-equivalent abort, detected-but-unrecoverable,
-//! silently incorrect, or correct within the bound.
+//! silently incorrect, or correct within the bound — plus the mode-C
+//! trichotomy (corrected / clean error / silent SDC).
 
 pub mod mode_a;
 pub mod mode_b;
+pub mod mode_c;
 pub mod outcome;
 
-pub use outcome::{classify, run_and_classify, Engine, Outcome};
+pub use outcome::{
+    classify, classify_archive, run_and_classify, ArchiveOutcome, Engine, Outcome,
+};

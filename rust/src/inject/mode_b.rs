@@ -32,6 +32,9 @@ pub enum Target {
     Unpred,
     /// Regression coefficient table.
     Coeffs,
+    /// Every live buffer was empty — the flip had nothing to land in
+    /// (degenerate arenas must not panic; the strike is a recorded no-op).
+    Nothing,
 }
 
 /// One scheduled bit flip.
@@ -71,14 +74,20 @@ impl ArenaFlip {
         Self { rng, schedule, next: 0 }
     }
 
-    /// Flip one random bit across the live buffers of `arena`.
+    /// Flip one random bit across the live buffers of `arena`. A fully
+    /// empty arena (every buffer zero-length) is a recorded no-op — the
+    /// old weighted roll clamped `total` to 1 and fell through to an
+    /// out-of-bounds index into the empty coefficient table.
     fn strike(&mut self, arena: &mut Arena) -> Target {
         // weights = current byte sizes
         let w_input = arena.input.len() * 4;
         let w_codes = arena.codes.len() * 4;
         let w_unpred = arena.unpred.len() * 4;
         let w_coeffs = arena.coeffs.len() * 16;
-        let total = (w_input + w_codes + w_unpred + w_coeffs).max(1);
+        let total = w_input + w_codes + w_unpred + w_coeffs;
+        if total == 0 {
+            return Target::Nothing;
+        }
         let mut roll = self.rng.index(total);
         let bit = self.rng.index(32) as u32;
         if roll < w_input {
@@ -99,21 +108,27 @@ impl ArenaFlip {
             return Target::Unpred;
         }
         roll -= w_unpred;
-        let i = (roll / 16).min(arena.coeffs.len().saturating_sub(1));
+        // roll < w_coeffs = len*16 here, so the indices are in range
+        let i = roll / 16;
         let j = (roll / 4) % 4;
         arena.coeffs[i][j] = f32::from_bits(arena.coeffs[i][j].to_bits() ^ (1 << bit));
         Target::Coeffs
     }
 
     /// Apply any pre-checksum flips directly to the data (call this before
-    /// handing `data` to the engine).
+    /// handing `data` to the engine). Empty inputs record the flip as a
+    /// no-op instead of indexing into nothing.
     pub fn apply_pre_checksum(&mut self, data: &mut [f32]) {
         for f in self.schedule.iter_mut() {
             if f.trigger == PRE_CHECKSUM && f.landed.is_none() {
-                let i = self.rng.index(data.len());
-                let bit = self.rng.index(32) as u32;
-                data[i] = f32::from_bits(data[i].to_bits() ^ (1 << bit));
-                f.landed = Some(Target::InputPreChecksum);
+                if data.is_empty() {
+                    f.landed = Some(Target::Nothing);
+                } else {
+                    let i = self.rng.index(data.len());
+                    let bit = self.rng.index(32) as u32;
+                    data[i] = f32::from_bits(data[i].to_bits() ^ (1 << bit));
+                    f.landed = Some(Target::InputPreChecksum);
+                }
                 self.next += 1;
             }
         }
@@ -201,6 +216,52 @@ mod tests {
             .map(|(x, y)| (x.to_bits() ^ y.to_bits()).count_ones())
             .sum();
         assert_eq!(input_diff + codes_diff + coeffs_diff, 1);
+    }
+
+    #[test]
+    fn zero_weight_arena_strike_is_recorded_noop() {
+        // regression: all live buffers empty used to clamp the weighted
+        // roll to 1 and index coeffs[0] of an empty table — a panic
+        let mut inj = ArenaFlip::new(3, 4, 2);
+        for s in inj.schedule.iter_mut() {
+            s.trigger = s.trigger.max(0);
+        }
+        let mut input: Vec<f32> = vec![];
+        let mut codes: Vec<u32> = vec![];
+        let mut unpred: Vec<f32> = vec![];
+        let mut coeffs: Vec<[f32; 4]> = vec![];
+        for bi in 0..4 {
+            let mut arena = Arena {
+                progress: bi,
+                n_blocks: 4,
+                input: &mut input,
+                codes: &mut codes,
+                unpred: &mut unpred,
+                coeffs: &mut coeffs,
+            };
+            inj.on_progress(&mut arena);
+        }
+        assert_eq!(inj.fired(), 2);
+        assert!(inj.schedule.iter().all(|f| f.landed == Some(Target::Nothing)));
+    }
+
+    #[test]
+    fn pre_checksum_on_empty_data_is_recorded_noop() {
+        // regression: the same latent hazard in apply_pre_checksum —
+        // rng.index(0) on empty data indexed data[0]
+        let mut inj = ArenaFlip::new(1, 4, 1);
+        inj.schedule[0].trigger = PRE_CHECKSUM;
+        let mut data: Vec<f32> = vec![];
+        inj.apply_pre_checksum(&mut data);
+        assert_eq!(inj.fired(), 1);
+        assert_eq!(inj.schedule[0].landed, Some(Target::Nothing));
+        // and nonempty data still flips as before
+        let mut inj = ArenaFlip::new(1, 4, 1);
+        inj.schedule[0].trigger = PRE_CHECKSUM;
+        let mut data = vec![1.0f32; 16];
+        inj.apply_pre_checksum(&mut data);
+        assert_eq!(inj.schedule[0].landed, Some(Target::InputPreChecksum));
+        assert!(data.iter().any(|v| v.to_bits() != 1.0f32.to_bits()));
     }
 
     #[test]

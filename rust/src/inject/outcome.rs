@@ -66,6 +66,39 @@ pub fn classify(original: &[f32], bound: f64, result: Result<Decompressed>) -> O
     }
 }
 
+/// Outcome of one archive-at-rest corruption trial (mode C). The designed
+/// trichotomy: the run is *corrected* (output within the bound despite the
+/// fault — parity repaired it, redundancy out-voted it, or the fault landed
+/// in redundancy bytes), fails with a *clean error*, or — never — produces
+/// silently wrong data. A panic would fail the harness itself.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ArchiveOutcome {
+    /// Decompression produced data within the bound of the pristine input.
+    Corrected,
+    /// Decompression reported an error (detection without recovery) — a
+    /// safe failure.
+    CleanError,
+    /// Decompression "succeeded" with out-of-bound data: the outcome the
+    /// v2 format exists to eliminate.
+    SilentSdc,
+}
+
+/// Classify one archive-corruption trial against the pristine input.
+pub fn classify_archive(
+    original: &[f32],
+    bound: f64,
+    result: Result<Decompressed>,
+) -> ArchiveOutcome {
+    match classify(original, bound, result) {
+        Outcome::Correct => ArchiveOutcome::Corrected,
+        Outcome::Incorrect => ArchiveOutcome::SilentSdc,
+        // at the archive layer every reported error is an equally safe
+        // abort: the distinction rsz/ftrsz draw between crash-equivalent
+        // and detected aborts is about unprotected *compute*, not storage
+        Outcome::Detected | Outcome::Crash => ArchiveOutcome::CleanError,
+    }
+}
+
 /// Run one compress→decompress cycle with `hooks` on the chosen engine and
 /// classify the result. `data` is the pristine input (hooks may corrupt the
 /// engine's working copy, never this slice).

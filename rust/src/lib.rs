@@ -63,6 +63,37 @@
 //! dependency chain is exactly the fragility the paper's redesign removes.
 //! Fault-injection runs (hooked) are also sequential by construction — see
 //! `compressor::engine::Hooks::PARALLEL_SAFE`.
+//!
+//! ## Self-healing archives (format v2)
+//!
+//! The ABFT layer above protects the *computation*; it cannot repair
+//! persistent corruption of the archive **at rest** (bit rot, radiation
+//! hits in a space probe's storage, transmission errors). The `sum_dc`
+//! verification detects such damage, but its repair action — re-executing
+//! the block — re-reads the same corrupted bytes and deterministically
+//! fails again; and for non-FT archives a flipped Huffman bit can decode
+//! to plausible garbage. Archive parity is the designed answer: format v2
+//! stores a triplicated (voting) header, per-section and per-stripe
+//! CRC32s, and interleaved XOR parity groups, and every decode path heals
+//! the bytes via [`ft::parity::recover`] before touching them:
+//!
+//! ```no_run
+//! use ftsz::compressor::{CompressionConfig, ErrorBound};
+//! use ftsz::data::Dims;
+//! use ftsz::ft::parity::ParityParams;
+//!
+//! let field: Vec<f32> = (0..64 * 64 * 64).map(|i| (i as f32).sin()).collect();
+//! let cfg = CompressionConfig::new(ErrorBound::Abs(1e-3))
+//!     .with_archive_parity(ParityParams::default()); // < 3% size overhead
+//! let mut archive = ftsz::ft::compress(&field, Dims::d3(64, 64, 64), &cfg).unwrap();
+//! archive[archive.len() / 2] ^= 0x10; // a cosmic ray hits the stored bytes
+//! let restored = ftsz::ft::decompress(&archive).unwrap(); // healed, in bound
+//! # let _ = restored;
+//! ```
+//!
+//! Damage beyond the parity budget (two stripes of one group) is still
+//! *detected* and reported as a clean error — never silently decoded. The
+//! `inject::mode_c` campaign measures exactly this trichotomy.
 
 pub mod analysis;
 pub mod compressor;

@@ -22,8 +22,10 @@ use ftsz::config::{types, ConfigDoc, PipelineConfig};
 use ftsz::coordinator::{run_pipeline, WorkItem};
 use ftsz::data::{synthetic, Dims, Field};
 use ftsz::error::{Error, Result};
+use ftsz::ft::parity::ParityParams;
 use ftsz::inject::mode_b::ArenaFlip;
-use ftsz::inject::{run_and_classify, Engine, Outcome};
+use ftsz::inject::mode_c::{self, ArchiveFault};
+use ftsz::inject::{run_and_classify, ArchiveOutcome, Engine, Outcome};
 use ftsz::{analysis, ft};
 
 fn main() {
@@ -101,10 +103,21 @@ fn compression_config(f: &Flags) -> Result<CompressionConfig> {
         "rel" => ErrorBound::Rel(bound),
         other => return Err(Error::Config(format!("--bound-kind '{other}'"))),
     };
-    let cfg = CompressionConfig::new(error_bound)
+    let mut cfg = CompressionConfig::new(error_bound)
         .with_block_size(f.usize_or("block-size", 10)?)
         .with_quant_radius(f.usize_or("quant-radius", 32768)? as u32)
         .with_parallelism(parallelism_of(f)?);
+    // --archive-parity [GROUP_WIDTH]: format-v2 self-healing archives;
+    // the optional value overrides the stripes-per-parity-group default
+    if let Some(v) = f.get("archive-parity") {
+        let mut p = ParityParams::default();
+        if v != "true" {
+            p.group_width = v.parse().map_err(|_| {
+                Error::Config(format!("--archive-parity expects a group width, got '{v}'"))
+            })?;
+        }
+        cfg = cfg.with_archive_parity(p);
+    }
     cfg.validate()?;
     Ok(cfg)
 }
@@ -165,10 +178,12 @@ fn print_usage() {
          commands:\n\
          \x20 gen-data   --profile nyx|hurricane|scale-letkf|pluto --edge N --seed S --out DIR\n\
          \x20 compress   --input RAW --dims D,R,C --engine sz|rsz|ftrsz\n\
-         \x20            --error-bound E [--workers N (0 = auto)] --out FILE\n\
+         \x20            --error-bound E [--workers N (0 = auto)]\n\
+         \x20            [--archive-parity [GROUP_WIDTH]  (self-healing format v2)] --out FILE\n\
          \x20 decompress --input FILE --out RAW [--verify] [--workers N] [--region z,y,x,dz,dy,dx]\n\
          \x20 info       --input FILE\n\
-         \x20 inject     --engine E --mode a-input|a-bin|b --errors N --runs R [--edge N]\n\
+         \x20 inject     --engine E --mode a-input|a-bin|b|c --errors N --runs R [--edge N]\n\
+         \x20            (mode c: archive flips; [--burst BYTES] [--archive-parity] [--strict])\n\
          \x20 pipeline   [--config FILE] [--ranks N] [--engine E]\n\
          \x20 xla-selftest"
     );
@@ -270,17 +285,33 @@ fn cmd_decompress(f: &Flags) -> Result<()> {
 
 fn cmd_info(f: &Flags) -> Result<()> {
     let bytes = std::fs::read(f.required("input")?)?;
-    let archive = ftsz::compressor::format::parse(&bytes)?;
+    // heal v2 archives from parity before reading them
+    let archive = ftsz::ft::parity::parse_recovering(&bytes)?;
     let h = &archive.header;
     println!(
-        "ftsz archive: dims {:?}  block {}  bound {:.3e}  blocks {}  mode {}{}",
+        "ftsz archive v{}: dims {:?}  block {}  bound {:.3e}  blocks {}  mode {}{}{}",
+        archive.version,
         h.dims,
         h.block_size,
         h.error_bound,
         h.n_blocks,
         if h.is_classic() { "classic" } else { "random-access" },
         if h.is_fault_tolerant() { "+ft" } else { "" },
+        if h.has_archive_parity() { "+parity" } else { "" },
     );
+    if let Some(p) = &archive.parity {
+        println!(
+            "parity: {}-byte stripes, {} stripes/group",
+            p.stripe_len, p.group_width
+        );
+    }
+    if let Some(rec) = &archive.recovered {
+        println!(
+            "WARNING: stored bytes were damaged; {} stripe(s) rebuilt from parity: {:?}",
+            rec.stripes_repaired.len(),
+            rec.stripes_repaired
+        );
+    }
     let lorenzo = archive
         .metas
         .iter()
@@ -301,6 +332,60 @@ fn cmd_inject(f: &Flags) -> Result<()> {
     let runs = f.usize_or("runs", 100)?;
     let n_errors = f.usize_or("errors", 1)?;
     let mode = f.str_or("mode", "b");
+    if mode == "c" {
+        // archive-at-rest campaign: strike the finished bytes, not the run
+        let fault = match f.usize_or("burst", 0)? {
+            0 => ArchiveFault::BitFlip,
+            n => ArchiveFault::Burst { len: n },
+        };
+        let tally = mode_c::campaign(
+            engine_kind,
+            &field.data,
+            field.dims,
+            &cfg,
+            runs,
+            fault,
+            n_errors,
+            0,
+        )?;
+        println!(
+            "{} mode=c {} runs={} archive={}B: corrected {} ({:.1}%) clean-error {} silent-sdc {}",
+            engine_kind.name(),
+            match fault {
+                ArchiveFault::BitFlip => "fault=bit-flip".to_string(),
+                ArchiveFault::Burst { len } => format!("fault=burst:{len}"),
+            },
+            runs,
+            tally.archive_bytes,
+            tally.count(ArchiveOutcome::Corrected),
+            100.0 * tally.corrected_rate(),
+            tally.count(ArchiveOutcome::CleanError),
+            tally.count(ArchiveOutcome::SilentSdc),
+        );
+        // --strict: the CI smoke gate — any silent SDC fails the run; the
+        // ≥95%-corrected target additionally applies to single-bit-flip
+        // campaigns with parity on (bursts and multi-fault trials have
+        // legitimate unrecoverable-but-detected windows)
+        if f.has("strict") {
+            if tally.count(ArchiveOutcome::SilentSdc) > 0 {
+                return Err(Error::Sdc(format!(
+                    "{} silent SDC outcomes in mode-C campaign",
+                    tally.count(ArchiveOutcome::SilentSdc)
+                )));
+            }
+            if cfg.archive_parity.is_some()
+                && fault == ArchiveFault::BitFlip
+                && n_errors <= 1
+                && tally.corrected_rate() < 0.95
+            {
+                return Err(Error::Sdc(format!(
+                    "corrected rate {:.1}% below the 95% target",
+                    100.0 * tally.corrected_rate()
+                )));
+            }
+        }
+        return Ok(());
+    }
     let nb = {
         let (d, r, c) = field.dims.as_3d();
         let b = cfg.block_size;

@@ -3,6 +3,7 @@
 //! `rand`/`proptest`/`criterion`, so these are built from scratch).
 
 pub mod bits;
+pub mod crc32;
 pub mod prop;
 pub mod rng;
 pub mod threadpool;
