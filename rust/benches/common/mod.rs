@@ -6,10 +6,9 @@
 //! * `FTSZ_BENCH_EDGE=N` — override dataset edge.
 #![allow(dead_code)]
 
-use ftsz::compressor::{classic, engine, CompressionConfig, ErrorBound};
+use ftsz::compressor::{CompressionConfig, ErrorBound, Parallelism};
 use ftsz::data::synthetic::{self, Profile};
 use ftsz::data::Field;
-use ftsz::ft;
 use ftsz::inject::Engine;
 
 /// True when the paper-scale switch is on.
@@ -49,22 +48,15 @@ pub fn representative(profile: Profile, edge: usize, seed: u64) -> Field {
     fields.swap_remove(pick)
 }
 
-/// Compress with one engine.
+/// Compress with one engine (unified [`ftsz::compressor::stage::BlockCodec`]
+/// dispatch).
 pub fn compress(engine_kind: Engine, f: &Field, cfg: &CompressionConfig) -> Vec<u8> {
-    match engine_kind {
-        Engine::Classic => classic::compress(&f.data, f.dims, cfg).expect("sz compress"),
-        Engine::RandomAccess => engine::compress(&f.data, f.dims, cfg).expect("rsz compress"),
-        Engine::FaultTolerant => ft::compress(&f.data, f.dims, cfg).expect("ftrsz compress"),
-    }
+    engine_kind.codec().compress(&f.data, f.dims, cfg).expect("compress")
 }
 
-/// Decompress with one engine.
+/// Decompress with one engine (ftrsz takes its natural verified path).
 pub fn decompress(engine_kind: Engine, bytes: &[u8]) -> Vec<f32> {
-    match engine_kind {
-        Engine::Classic => classic::decompress(bytes).expect("sz decompress").data,
-        Engine::RandomAccess => engine::decompress(bytes).expect("rsz decompress").data,
-        Engine::FaultTolerant => ft::decompress(bytes).expect("ftrsz decompress").data,
-    }
+    engine_kind.codec().decompress(bytes, Parallelism::Sequential).expect("decompress").data
 }
 
 /// Default paper config at a relative bound.

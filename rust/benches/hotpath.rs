@@ -1,11 +1,18 @@
 //! Hot-path microbenchmarks (the §Perf iteration harness): per-stage
 //! throughput of the compression pipeline plus the XLA offload path.
+//!
+//! `--json` additionally writes `BENCH_hotpath.json` (flat `key: number`
+//! object, schema `ftsz.hotpath.v1`) so the perf trajectory is tracked
+//! across PRs; `--check` turns the stage-pipeline comparison into a gate:
+//! the run fails if the pipelined 1-worker path is > 10% slower than the
+//! plain sequential driver on the synthetic field.
 
 #[path = "common/mod.rs"]
 mod common;
 
 use common::*;
 use ftsz::compressor::huffman::HuffmanTable;
+use ftsz::compressor::stage::BlockStage;
 use ftsz::compressor::{dualquant, engine, CompressionConfig, ErrorBound, Parallelism};
 use ftsz::data::synthetic::Profile;
 use ftsz::ft::parity::ParityParams;
@@ -17,18 +24,53 @@ fn mbps(bytes: usize, secs: f64) -> f64 {
     bytes as f64 / secs / 1e6
 }
 
+/// Flat metric sink for the `--json` mode.
+#[derive(Default)]
+struct Metrics {
+    entries: Vec<(String, f64)>,
+}
+
+impl Metrics {
+    fn put(&mut self, key: &str, v: f64) {
+        self.entries.push((key.to_string(), v));
+    }
+
+    fn write_json(&self, path: &str) {
+        let mut out = String::from("{\n  \"schema\": \"ftsz.hotpath.v1\"");
+        for (k, v) in &self.entries {
+            if v.is_finite() {
+                out.push_str(&format!(",\n  \"{k}\": {v:.6}"));
+            }
+        }
+        out.push_str("\n}\n");
+        std::fs::write(path, out).expect("write BENCH_hotpath.json");
+        println!("wrote {path}");
+    }
+}
+
 fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let json = args.iter().any(|a| a == "--json");
+    let check = args.iter().any(|a| a == "--check");
+    let mut m = Metrics::default();
+
     banner("hot-path microbenchmarks", "n/a (engineering baseline for EXPERIMENTS.md §Perf)");
     let edge = edge_or(64);
     let f = representative(Profile::Hurricane, edge, 3);
     let bytes_in = f.data.len() * 4;
     let reps = runs_or(5, 11);
+    m.put("edge", edge as f64);
+    m.put("reps", reps as f64);
 
     // end-to-end engines
     for engine_kind in [Engine::Classic, Engine::RandomAccess, Engine::FaultTolerant] {
         let cfg = cfg_rel(1e-4);
-        let (cs, archive) = time_median(reps, || compress(engine_kind, &f, &cfg));
-        let (ds, _) = time_median(reps, || decompress(engine_kind, &archive));
+        let codec = engine_kind.codec();
+        let (cs, archive) =
+            time_median(reps, || codec.compress(&f.data, f.dims, &cfg).expect("compress"));
+        let (ds, _) = time_median(reps, || {
+            codec.decompress(&archive, Parallelism::Sequential).expect("decompress")
+        });
         println!(
             "{:<22} compress {:>8.1} MB/s   decompress {:>8.1} MB/s   ratio {:>6.2}",
             engine_kind.name(),
@@ -36,6 +78,80 @@ fn main() {
             mbps(bytes_in, ds),
             bytes_in as f64 / archive.len() as f64
         );
+        let name = engine_kind.name();
+        m.put(&format!("{name}.compress_mbps"), mbps(bytes_in, cs));
+        m.put(&format!("{name}.decompress_mbps"), mbps(bytes_in, ds));
+        m.put(&format!("{name}.ratio"), bytes_in as f64 / archive.len() as f64);
+    }
+
+    // stage-pipelined 1-worker path vs the plain sequential driver: same
+    // bytes, overlapped stages (ROADMAP follow-up; gated under --check)
+    println!("--- 1-worker per-stage software pipeline (stage graph) ---");
+    for (name, ft_mode) in [("rsz", false), ("ftrsz", true)] {
+        let cfg_serial = cfg_rel(1e-4).with_stage_overlap(false);
+        let cfg_piped = cfg_rel(1e-4);
+        let run = |cfg: &CompressionConfig| {
+            if ft_mode {
+                ft::compress_with_hooks(&f.data, f.dims, cfg, &mut engine::NoHooks)
+                    .expect("compress")
+            } else {
+                engine::compress_with_hooks(&f.data, f.dims, cfg, &mut engine::NoHooks)
+                    .expect("compress")
+            }
+        };
+        let (t_serial, out_serial) = time_median(reps, || run(&cfg_serial));
+        let (t_piped, out_piped) = time_median(reps, || run(&cfg_piped));
+        assert_eq!(
+            out_piped.archive, out_serial.archive,
+            "{name}: stage pipelining must not change a single byte"
+        );
+        assert!(out_piped.stages.pipelined && !out_serial.stages.pipelined);
+        let speedup = t_serial / t_piped;
+        let overlap = out_piped.stages.overlap_ratio();
+        println!(
+            "{:<22} serial {:>8.1} MB/s -> pipelined {:>8.1} MB/s ({:.2}x, stage busy/wall {:.2})",
+            format!("{name} 1-worker"),
+            mbps(bytes_in, t_serial),
+            mbps(bytes_in, t_piped),
+            speedup,
+            overlap,
+        );
+        for stage in BlockStage::ALL {
+            println!(
+                "  {:<20} serial {:>9} ns   pipelined {:>9} ns",
+                stage.name(),
+                out_serial.stages.ns(stage),
+                out_piped.stages.ns(stage)
+            );
+            m.put(
+                &format!("stage.{name}.serial.{}_ns", stage.name()),
+                out_serial.stages.ns(stage) as f64,
+            );
+            m.put(
+                &format!("stage.{name}.pipelined.{}_ns", stage.name()),
+                out_piped.stages.ns(stage) as f64,
+            );
+        }
+        m.put(&format!("stage.{name}.serial.wall_ns"), out_serial.stages.wall_ns as f64);
+        m.put(&format!("stage.{name}.pipelined.wall_ns"), out_piped.stages.wall_ns as f64);
+        m.put(&format!("stage.{name}.serial_mbps"), mbps(bytes_in, t_serial));
+        m.put(&format!("stage.{name}.pipelined_mbps"), mbps(bytes_in, t_piped));
+        m.put(&format!("stage.{name}.speedup"), speedup);
+        m.put(&format!("stage.{name}.overlap_ratio"), overlap);
+        // the --check gate only applies when the workload is big enough
+        // for a wall-time ratio to be meaningful (sub-ms runs are pure
+        // scheduler noise on shared runners)
+        if check && t_serial >= 1e-3 && t_piped > t_serial * 1.10 {
+            if json {
+                m.write_json("BENCH_hotpath.json");
+            }
+            eprintln!(
+                "FAIL: {name} stage-pipelined 1-worker path regressed {:.1}% vs the \
+                 non-pipelined driver (gate: 10%)",
+                (t_piped / t_serial - 1.0) * 100.0
+            );
+            std::process::exit(1);
+        }
     }
 
     // block-parallel scaling: same single field, archives must stay
@@ -45,6 +161,7 @@ fn main() {
         engine::compress(&f.data, f.dims, &cfg_rel(1e-4)).expect("rsz w1")
     });
     println!("{:<22} {:>8.1} MB/s (1 worker baseline)", "rsz compress", mbps(bytes_in, s1));
+    m.put("scaling.rsz.w1_mbps", mbps(bytes_in, s1));
     for w in [2usize, 4, 8] {
         let cfgw = cfg_rel(1e-4).with_workers(w);
         let (sw, bytes) =
@@ -56,11 +173,13 @@ fn main() {
             mbps(bytes_in, sw),
             s1 / sw
         );
+        m.put(&format!("scaling.rsz.w{w}_mbps"), mbps(bytes_in, sw));
     }
     let (sf1, fbase) = time_median(reps, || {
         ft::compress(&f.data, f.dims, &cfg_rel(1e-4)).expect("ftrsz w1")
     });
     println!("{:<22} {:>8.1} MB/s (1 worker baseline)", "ftrsz compress", mbps(bytes_in, sf1));
+    m.put("scaling.ftrsz.w1_mbps", mbps(bytes_in, sf1));
     for w in [4usize] {
         let cfgw = cfg_rel(1e-4).with_workers(w);
         let (sw, bytes) =
@@ -72,6 +191,7 @@ fn main() {
             mbps(bytes_in, sw),
             sf1 / sw
         );
+        m.put(&format!("scaling.ftrsz.w{w}_mbps"), mbps(bytes_in, sw));
     }
     let (sd1, _) = time_median(reps, || engine::decompress(&base).expect("decode w1"));
     let (sd4, _) = time_median(reps, || {
@@ -84,6 +204,8 @@ fn main() {
         mbps(bytes_in, sd4),
         sd1 / sd4
     );
+    m.put("scaling.rsz_decode.w1_mbps", mbps(bytes_in, sd1));
+    m.put("scaling.rsz_decode.w4_mbps", mbps(bytes_in, sd4));
     let (sv1, _) = time_median(reps, || ft::decompress(&fbase).expect("verify w1"));
     let (sv4, _) = time_median(reps, || {
         ft::decompress_with(&fbase, Parallelism::Fixed(4)).expect("verify w4")
@@ -95,6 +217,8 @@ fn main() {
         mbps(bytes_in, sv4),
         sv1 / sv4
     );
+    m.put("scaling.ftrsz_verify.w1_mbps", mbps(bytes_in, sv1));
+    m.put("scaling.ftrsz_verify.w4_mbps", mbps(bytes_in, sv4));
 
     // archive parity (format v2): what self-healing costs at the default
     // geometry — targets: <3% compressed size, <5% compress time
@@ -120,6 +244,8 @@ fn main() {
         mbps(bytes_in, s_v2),
         time_ovh
     );
+    m.put("parity.size_overhead_pct", size_ovh);
+    m.put("parity.time_overhead_pct", time_ovh);
     let (s_rec, _) = time_median(reps, || {
         assert!(matches!(
             ft::parity::recover(&a_v2).expect("recover"),
@@ -127,12 +253,14 @@ fn main() {
         ));
     });
     println!("{:<22} {:>8.1} MB/s (clean verify pass)", "parity recover", mbps(a_v2.len(), s_rec));
+    m.put("parity.recover_mbps", mbps(a_v2.len(), s_rec));
     let (s_dec2, _) = time_median(reps, || ft::decompress(&a_v2).expect("v2 verify+decode"));
     println!(
         "{:<22} {:>8.1} MB/s (CRC verify + decode)",
         "ftrsz v2 decompress",
         mbps(bytes_in, s_dec2)
     );
+    m.put("parity.v2_decompress_mbps", mbps(bytes_in, s_dec2));
 
     // stage: sequential lorenzo+quantize via the engine with lorenzo-only
     let cfg_lor = CompressionConfig::new(ErrorBound::Rel(1e-4))
@@ -141,6 +269,7 @@ fn main() {
         engine::compress(&f.data, f.dims, &cfg_lor).expect("lorenzo-only")
     });
     println!("{:<22} {:>8.1} MB/s", "lorenzo-only engine", mbps(bytes_in, s));
+    m.put("lorenzo_only_mbps", mbps(bytes_in, s));
 
     // stage: dual-quant transform (the XLA-twin data-parallel path)
     let shape = (10usize, 10, 10);
@@ -152,18 +281,16 @@ fn main() {
         }
     });
     println!("{:<22} {:>8.1} MB/s", "dualquant fwd", mbps(1000 * 4000, s));
+    m.put("dualquant_fwd_mbps", mbps(1000 * 4000, s));
 
     // stage: checksums
     let (s, _) = time_median(reps, || {
         std::hint::black_box(checksum::checksum_f32(&f.data));
     });
     println!("{:<22} {:>8.1} MB/s", "checksum f32", mbps(bytes_in, s));
+    m.put("checksum_f32_mbps", mbps(bytes_in, s));
 
     // stage: huffman encode + decode on a realistic code distribution
-    let cfg = cfg_rel(1e-4);
-    let out = engine::compress_with_hooks(&f.data, f.dims, &cfg, &mut engine::NoHooks)
-        .expect("compress");
-    let _ = out;
     let mut freqs = vec![0u64; 65536];
     let codes: Vec<u32> = f
         .data
@@ -183,6 +310,7 @@ fn main() {
         (w.finish(), bits)
     });
     println!("{:<22} {:>8.1} Msym/s", "huffman encode", codes.len() as f64 / s_enc / 1e6);
+    m.put("huffman_encode_msyms", codes.len() as f64 / s_enc / 1e6);
     let (buf, bits) = stream;
     let (s_dec, _) = time_median(reps, || {
         let mut r = BitReader::with_limit(&buf, bits).expect("reader");
@@ -191,6 +319,7 @@ fn main() {
         }
     });
     println!("{:<22} {:>8.1} Msym/s", "huffman decode", codes.len() as f64 / s_dec / 1e6);
+    m.put("huffman_decode_msyms", codes.len() as f64 / s_dec / 1e6);
 
     // XLA offload path (when artifacts exist)
     if let Ok(rt) = ftsz::runtime::XlaRuntime::cpu_default() {
@@ -205,8 +334,13 @@ fn main() {
                 "xla offload compress",
                 mbps(batch.len() * 4, s)
             );
+            m.put("xla_offload_mbps", mbps(batch.len() * 4, s));
         }
     } else {
         println!("xla offload: skipped (run `make artifacts`)");
+    }
+
+    if json {
+        m.write_json("BENCH_hotpath.json");
     }
 }

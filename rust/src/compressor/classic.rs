@@ -27,11 +27,12 @@ use super::huffman::HuffmanTable;
 use super::lorenzo::{self, GridView};
 use super::quantize::{Quantizer, UNPREDICTABLE};
 use super::regression;
-use super::sampling::{self, Selection};
-use super::{CompressionConfig, Predictor};
+use super::sampling::Selection;
+use super::stage::{self, BlockCodec};
+use super::{CompressionConfig, Parallelism, Predictor};
 use crate::data::Dims;
 use crate::error::{Error, Result};
-use crate::util::bits::{BitReader, BitWriter};
+use crate::util::bits::BitReader;
 
 pub use super::engine::Decompressed;
 
@@ -64,16 +65,10 @@ pub fn compress_with_hooks<H: Hooks>(
     let mut input = data.to_vec();
     hooks.on_input_ready(&mut input);
 
-    // estimation per block (same subroutine as rsz)
-    let mut selections: Vec<Selection> = Vec::with_capacity(n_blocks);
-    let mut scratch = Vec::new();
-    for bi in 0..n_blocks {
-        grid.extract(&input, bi, &mut scratch);
-        let shape = grid.extent(bi).shape;
-        let (coeffs, e_lor, e_reg) = sampling::estimate(&scratch, shape);
-        let (coeffs, e_lor, e_reg) = hooks.corrupt_estimation(bi, coeffs, e_lor, e_reg);
-        selections.push(sampling::select(&scratch, shape, cfg.predictor, coeffs, e_lor, e_reg));
-    }
+    // prepare stage: per-block estimation + selection (the same stage
+    // function the independent-block drivers run)
+    let selections: Vec<Selection> =
+        stage::hooked_selections(&grid, &input, cfg.predictor, hooks);
 
     // main loop: global decompressed array, neighbors cross blocks
     let mut dcmp = vec![0.0f32; data.len()];
@@ -156,26 +151,13 @@ pub fn compress_with_hooks<H: Hooks>(
         });
     }
 
-    // single global Huffman stream
-    let n_symbols = q.n_symbols();
-    let mut freqs = vec![0u64; n_symbols];
-    for &c in &codes {
-        let ci = c as usize;
-        if ci >= n_symbols {
-            return Err(Error::CrashEquivalent(format!(
-                "quantization code {c} outside symbol table ({n_symbols})"
-            )));
-        }
-        freqs[ci] += 1;
-    }
+    // histogram + table barrier (shared stage function), then one encode
+    // over the whole dataset: the classic single global Huffman stream
+    let mut freqs = vec![0u64; q.n_symbols()];
+    stage::count_freqs(&mut freqs, &codes)?;
     let table = HuffmanTable::from_frequencies(&freqs)?;
-    let mut w = BitWriter::with_capacity(codes.len() / 4 + 8);
-    for &c in &codes {
-        table.encode(&mut w, c)?;
-    }
-    let total_bits = w.bit_len() as u64;
+    let (stream, total_bits) = table.encode_all(&codes)?;
     metas[0].payload_bits = total_bits;
-    let stream = w.finish();
 
     let writer = Writer {
         header: Header {
@@ -194,8 +176,34 @@ pub fn compress_with_hooks<H: Hooks>(
         zstd_level: cfg.zstd_level,
         payload_zstd: false, // classic wraps its single stream in zstd already
         parity: cfg.archive_parity,
+        unpred_body: None,
     };
     writer.write()
+}
+
+/// **sz** behind the unified [`BlockCodec`] dispatch. The cross-block
+/// Lorenzo recurrence keeps it sequential (the `par` arguments are
+/// accepted and ignored, like `cfg.parallelism`) and rules out both
+/// random access and verified decompression — exactly the fragilities the
+/// paper's redesign removes.
+#[derive(Debug, Default)]
+pub struct ClassicCodec;
+
+/// The `sz` codec singleton ([`crate::inject::Engine::codec`]).
+pub static CLASSIC_CODEC: ClassicCodec = ClassicCodec;
+
+impl BlockCodec for ClassicCodec {
+    fn name(&self) -> &'static str {
+        "sz"
+    }
+
+    fn compress(&self, data: &[f32], dims: Dims, cfg: &CompressionConfig) -> Result<Vec<u8>> {
+        compress(data, dims, cfg)
+    }
+
+    fn decompress(&self, bytes: &[u8], _par: Parallelism) -> Result<Decompressed> {
+        decompress(bytes)
+    }
 }
 
 /// Decompress a classic archive (healing v2 archives from parity first).

@@ -12,6 +12,12 @@
 //!
 //! `rsz` = core with both off. `ftrsz` = core with both on.
 //!
+//! The compression chain itself lives in [`super::stage`] as an explicit
+//! stage graph (prepare → quantize → protect → encode → serialize) with
+//! three byte-identical drivers: sequential (hooked), the 1-worker
+//! software pipeline, and the block-parallel fan-out. This module keeps
+//! the engine's types, the decompression core, and the public rsz API.
+//!
 //! Fault injection enters through [`Hooks`]: every site the evaluation
 //! (§6.1.2) perturbs is a hook — input memory after checksumming,
 //! first-evaluation prediction/reconstruction (computation errors),
@@ -20,19 +26,17 @@
 //! injector.
 
 use super::block::{BlockGrid, Region};
-use super::format::{Archive, BlockMeta, BlockPayload, Header, Writer};
-use super::huffman::HuffmanTable;
+use super::format::Archive;
 use super::lorenzo::{self, GridView};
 use super::quantize::{Quantizer, UNPREDICTABLE};
 use super::regression;
-use super::sampling::{self, Selection};
+use super::stage::{self, StageTimings};
 use super::{CompressionConfig, Predictor};
 use crate::data::Dims;
 use crate::error::{Error, Result};
-use crate::ft::checksum::{self, Checksums, Correction};
-use crate::ft::duplicate::protected_eval;
+use crate::ft::checksum;
 use crate::ft::report::{DecompressReport, SdcEvent, SdcKind};
-use crate::util::bits::{BitReader, BitWriter};
+use crate::util::bits::BitReader;
 
 /// Compression-side fault-injection / instrumentation hooks.
 ///
@@ -146,6 +150,8 @@ pub struct CoreOutput {
     pub stats: CompressStats,
     /// SDC events detected/corrected during compression (ft mode).
     pub events: Vec<SdcEvent>,
+    /// Per-stage busy times of the run (see [`super::stage`]).
+    pub stages: StageTimings,
 }
 
 /// A decompressed dataset.
@@ -163,11 +169,14 @@ pub struct Decompressed {
 // compression core
 // ---------------------------------------------------------------------------
 
-/// Run Algorithm 1 (parameterized).
+/// Run Algorithm 1 (parameterized) through the stage graph
+/// ([`super::stage`]).
 ///
-/// With `cfg.parallelism` > 1 worker and parallel-safe (no-op) hooks this
-/// dispatches to the block-parallel core, which produces **byte-identical
-/// archives**: parallelism reorders computation, never the format.
+/// Driver selection is the stage graph's job: hooked runs stay on the
+/// sequential reference driver; parallel-safe runs take the 1-worker
+/// software pipeline or, with `cfg.parallelism` > 1, the block-parallel
+/// fan-out. All drivers produce **byte-identical archives**: scheduling
+/// reorders computation, never the format.
 pub fn compress_core<H: Hooks>(
     data: &[f32],
     dims: Dims,
@@ -175,517 +184,7 @@ pub fn compress_core<H: Hooks>(
     params: CoreParams,
     hooks: &mut H,
 ) -> Result<CoreOutput> {
-    cfg.validate()?;
-    if data.len() != dims.len() {
-        return Err(Error::InvalidArgument(format!(
-            "data length {} != dims {:?}",
-            data.len(),
-            dims
-        )));
-    }
-    let workers = cfg.parallelism.workers();
-    if H::PARALLEL_SAFE && workers > 1 {
-        return compress_core_parallel(data, dims, cfg, params, workers);
-    }
-    let bound = cfg.error_bound.absolute(data);
-    let q = Quantizer::new(bound, cfg.quant_radius);
-    let grid = BlockGrid::new(dims, cfg.block_size)?;
-    let n_blocks = grid.n_blocks();
-    let mut stats = CompressStats {
-        n_points: data.len(),
-        n_blocks,
-        ..Default::default()
-    };
-    let mut events = Vec::new();
-
-    // The working copy models "the input data in memory" — the thing that
-    // memory errors strike.
-    let mut input = data.to_vec();
-
-    // ---- Alg.1 l.1-5: per-block input checksums ----
-    let mut in_sums: Vec<Checksums> = Vec::new();
-    let mut scratch = Vec::new();
-    if params.ft {
-        in_sums.reserve(n_blocks);
-        for bi in 0..n_blocks {
-            grid.extract(&input, bi, &mut scratch);
-            in_sums.push(checksum::checksum_f32(&scratch));
-        }
-    }
-    hooks.on_input_ready(&mut input);
-
-    // ---- Alg.1 l.6-9: estimation + selection (naturally resilient) ----
-    let mut selections: Vec<Selection> = Vec::with_capacity(n_blocks);
-    for bi in 0..n_blocks {
-        grid.extract(&input, bi, &mut scratch);
-        let shape = grid.extent(bi).shape;
-        let (coeffs, e_lor, e_reg) = sampling::estimate(&scratch, shape);
-        let (coeffs, e_lor, e_reg) = hooks.corrupt_estimation(bi, coeffs, e_lor, e_reg);
-        selections.push(sampling::select(&scratch, shape, cfg.predictor, coeffs, e_lor, e_reg));
-    }
-
-    // ---- Alg.1 l.10-32: main compression loop ----
-    let mut codes: Vec<u32> = Vec::with_capacity(data.len());
-    let mut code_block_offsets: Vec<usize> = Vec::with_capacity(n_blocks + 1);
-    code_block_offsets.push(0);
-    let mut unpred: Vec<f32> = Vec::new();
-    let mut unpred_counts: Vec<u32> = Vec::with_capacity(n_blocks);
-    let mut q_sums: Vec<Checksums> = Vec::with_capacity(n_blocks);
-    let mut dc_sums: Vec<u64> = Vec::with_capacity(n_blocks);
-    let mut all_coeffs: Vec<[f32; 4]> = selections.iter().map(|s| s.coeffs).collect();
-    let mut dcmp_block: Vec<f32> = Vec::new();
-
-    for bi in 0..n_blocks {
-        grid.extract(&input, bi, &mut scratch);
-        let shape = grid.extent(bi).shape;
-
-        // l.11: verify + correct the block's input memory
-        if params.ft {
-            match checksum::verify_correct_f32(&mut scratch, in_sums[bi]) {
-                Correction::Clean => {}
-                Correction::Corrected { index } => {
-                    events.push(SdcEvent { kind: SdcKind::InputCorrected, block: bi, index });
-                    // write the repaired value back to the working copy so
-                    // later stages (and the caller's view of memory) heal
-                    grid.scatter(&scratch, bi, &mut input);
-                }
-                Correction::Failed => {
-                    events.push(SdcEvent {
-                        kind: SdcKind::InputUncorrectable,
-                        block: bi,
-                        index: 0,
-                    });
-                }
-            }
-        }
-
-        let sel = selections[bi];
-        let unpred_before = unpred.len();
-        let code_base = codes.len();
-        compress_block(
-            bi,
-            &scratch,
-            shape,
-            &sel,
-            &q,
-            params.protect,
-            hooks,
-            &mut codes,
-            &mut unpred,
-            &mut dcmp_block,
-            &mut stats,
-        );
-        match sel.predictor {
-            Predictor::Lorenzo => stats.lorenzo_blocks += 1,
-            Predictor::Regression | Predictor::DualQuant => stats.regression_blocks += 1,
-        }
-        unpred_counts.push((unpred.len() - unpred_before) as u32);
-        code_block_offsets.push(codes.len());
-
-        // l.24 + l.29: bin checksums + decompressed-data checksum
-        if params.ft {
-            q_sums.push(checksum::checksum_u32(&codes[code_base..]));
-            dc_sums.push(checksum::checksum_f32(&dcmp_block).sum);
-        }
-
-        hooks.on_block_codes(bi, &mut codes[code_base..]);
-        let mut arena = Arena {
-            progress: bi,
-            n_blocks,
-            input: &mut input,
-            codes: &mut codes,
-            unpred: &mut unpred,
-            coeffs: &mut all_coeffs,
-        };
-        hooks.on_progress(&mut arena);
-    }
-    stats.n_unpred = unpred.len();
-
-    // ---- l.33-38: verify bins, build tree, encode ----
-    // (bin verification is hoisted before the tree build so a repaired code
-    // is guaranteed to be inside the constructed table; see DESIGN.md)
-    if params.ft {
-        for bi in 0..n_blocks {
-            let span = &mut codes[code_block_offsets[bi]..code_block_offsets[bi + 1]];
-            match checksum::verify_correct_u32(span, q_sums[bi]) {
-                Correction::Clean => {}
-                Correction::Corrected { index } => {
-                    events.push(SdcEvent { kind: SdcKind::BinCorrected, block: bi, index });
-                }
-                Correction::Failed => {
-                    events.push(SdcEvent { kind: SdcKind::BinUncorrectable, block: bi, index: 0 });
-                }
-            }
-        }
-    }
-
-    let n_symbols = q.n_symbols();
-    let mut freqs = vec![0u64; n_symbols];
-    for &c in &codes {
-        let ci = c as usize;
-        if ci >= n_symbols {
-            // unprotected SZ dies here (or at decode) — model as the
-            // paper's "core-dump segmentation fault" outcome
-            return Err(Error::CrashEquivalent(format!(
-                "quantization code {c} outside symbol table ({n_symbols})"
-            )));
-        }
-        freqs[ci] += 1;
-    }
-    let table = HuffmanTable::from_frequencies(&freqs)?;
-
-    let mut blocks = Vec::with_capacity(n_blocks);
-    for bi in 0..n_blocks {
-        let span = &codes[code_block_offsets[bi]..code_block_offsets[bi + 1]];
-        let mut w = BitWriter::with_capacity(span.len() / 4 + 8);
-        for &c in span {
-            table.encode(&mut w, c)?;
-        }
-        let payload_bits = w.bit_len() as u64;
-        let sel = &selections[bi];
-        blocks.push(BlockPayload {
-            meta: BlockMeta {
-                predictor: sel.predictor,
-                coeffs: all_coeffs[bi],
-                n_unpred: unpred_counts[bi],
-                payload_bits,
-            },
-            bytes: w.finish(),
-        });
-    }
-
-    let writer = Writer {
-        header: Header {
-            flags: 0,
-            dims,
-            block_size: cfg.block_size as u32,
-            quant_radius: cfg.quant_radius,
-            error_bound: bound,
-            n_blocks: n_blocks as u64,
-        },
-        table: &table,
-        blocks,
-        classic_payload: None,
-        unpred: &unpred,
-        sum_dc: if params.ft { Some(&dc_sums) } else { None },
-        zstd_level: cfg.zstd_level,
-        payload_zstd: cfg.payload_zstd,
-        parity: cfg.archive_parity,
-    };
-    let archive = writer.write()?;
-    stats.compressed_bytes = archive.len();
-    Ok(CoreOutput { archive, stats, events })
-}
-
-/// Everything one block contributes to the archive and the run report —
-/// produced independently per block by the parallel core, committed in
-/// block order.
-struct BlockArtifacts {
-    selection: Selection,
-    codes: Vec<u32>,
-    unpred: Vec<f32>,
-    /// Stored decompressed-data checksum (ft mode), else 0.
-    dc_sum: u64,
-    events: Vec<SdcEvent>,
-    line7_fallbacks: usize,
-    dup_pred_catches: u64,
-    dup_dcmp_catches: u64,
-}
-
-/// Block-parallel Algorithm 1: the per-block work (checksum → estimate →
-/// predict → quantize, then Huffman encoding once the shared table exists)
-/// runs over [`crate::util::threadpool::parallel_map`], which returns
-/// results in block index order.
-/// Every array the archive serializes (codes, unpredictables, coefficients,
-/// per-block payloads, `sum_dc`) is concatenated in that order, so the
-/// bytes are identical to the sequential path at any worker count.
-///
-/// Only reachable with parallel-safe (no-op) hooks, so the input working
-/// copy is never perturbed and stays shared-immutable; an input-checksum
-/// mismatch here can only mean a real in-flight memory fault, which the
-/// per-block verify repairs in the block's private scratch copy.
-fn compress_core_parallel(
-    data: &[f32],
-    dims: Dims,
-    cfg: &CompressionConfig,
-    params: CoreParams,
-    workers: usize,
-) -> Result<CoreOutput> {
-    let bound = cfg.error_bound.absolute(data);
-    let q = Quantizer::new(bound, cfg.quant_radius);
-    let grid = BlockGrid::new(dims, cfg.block_size)?;
-    let n_blocks = grid.n_blocks();
-
-    // ---- Alg.1 l.1-32 fan-out: blocks are fully independent ----
-    let arts: Vec<BlockArtifacts> = crate::util::threadpool::parallel_map(n_blocks, workers, |bi| {
-        let mut scratch = Vec::new();
-        grid.extract(data, bi, &mut scratch);
-        let shape = grid.extent(bi).shape;
-        let mut events = Vec::new();
-
-        // l.3-4: input checksum before the estimation pass reads the block
-        let in_sum = if params.ft { Some(checksum::checksum_f32(&scratch)) } else { None };
-
-        // l.6-9: estimation + selection (naturally resilient)
-        let (coeffs, e_lor, e_reg) = sampling::estimate(&scratch, shape);
-        let sel = sampling::select(&scratch, shape, cfg.predictor, coeffs, e_lor, e_reg);
-
-        // l.11: verify + correct the block's memory after the estimation
-        // window (mirrors the sequential pass; repairs land in scratch)
-        if let Some(sums) = in_sum {
-            match checksum::verify_correct_f32(&mut scratch, sums) {
-                Correction::Clean => {}
-                Correction::Corrected { index } => {
-                    events.push(SdcEvent { kind: SdcKind::InputCorrected, block: bi, index });
-                }
-                Correction::Failed => {
-                    events.push(SdcEvent {
-                        kind: SdcKind::InputUncorrectable,
-                        block: bi,
-                        index: 0,
-                    });
-                }
-            }
-        }
-
-        // l.12-32: predict → quantize → reconstruct
-        let mut local = CompressStats::default();
-        let mut codes = Vec::with_capacity(scratch.len());
-        let mut unpred = Vec::new();
-        let mut dcmp_block = Vec::new();
-        compress_block(
-            bi,
-            &scratch,
-            shape,
-            &sel,
-            &q,
-            params.protect,
-            &mut NoHooks,
-            &mut codes,
-            &mut unpred,
-            &mut dcmp_block,
-            &mut local,
-        );
-
-        // l.24 + l.33-35: bin checksum, verified before the codes feed the
-        // shared Huffman table; l.29: decompressed-data checksum
-        let mut dc_sum = 0u64;
-        if params.ft {
-            let q_sum = checksum::checksum_u32(&codes);
-            match checksum::verify_correct_u32(&mut codes, q_sum) {
-                Correction::Clean => {}
-                Correction::Corrected { index } => {
-                    events.push(SdcEvent { kind: SdcKind::BinCorrected, block: bi, index });
-                }
-                Correction::Failed => {
-                    events.push(SdcEvent { kind: SdcKind::BinUncorrectable, block: bi, index: 0 });
-                }
-            }
-            dc_sum = checksum::checksum_f32(&dcmp_block).sum;
-        }
-
-        BlockArtifacts {
-            selection: sel,
-            codes,
-            unpred,
-            dc_sum,
-            events,
-            line7_fallbacks: local.line7_fallbacks,
-            dup_pred_catches: local.dup_pred_catches,
-            dup_dcmp_catches: local.dup_dcmp_catches,
-        }
-    });
-
-    // ---- ordered commit: identical layout to the sequential path ----
-    let mut stats = CompressStats {
-        n_points: data.len(),
-        n_blocks,
-        ..Default::default()
-    };
-    let mut events = Vec::new();
-    for a in &arts {
-        match a.selection.predictor {
-            Predictor::Lorenzo => stats.lorenzo_blocks += 1,
-            Predictor::Regression | Predictor::DualQuant => stats.regression_blocks += 1,
-        }
-        stats.n_unpred += a.unpred.len();
-        stats.line7_fallbacks += a.line7_fallbacks;
-        stats.dup_pred_catches += a.dup_pred_catches;
-        stats.dup_dcmp_catches += a.dup_dcmp_catches;
-        events.extend(a.events.iter().copied());
-    }
-
-    // l.36: global frequency table over all codes, in block order
-    let n_symbols = q.n_symbols();
-    let mut freqs = vec![0u64; n_symbols];
-    for a in &arts {
-        for &c in &a.codes {
-            let ci = c as usize;
-            if ci >= n_symbols {
-                return Err(Error::CrashEquivalent(format!(
-                    "quantization code {c} outside symbol table ({n_symbols})"
-                )));
-            }
-            freqs[ci] += 1;
-        }
-    }
-    let table = HuffmanTable::from_frequencies(&freqs)?;
-
-    // l.37-38: per-block Huffman encoding against the shared table is
-    // independent again — second fan-out, committed in block order
-    let encoded: Vec<Result<BlockPayload>> =
-        crate::util::threadpool::parallel_map(n_blocks, workers, |bi| {
-            let a = &arts[bi];
-            let mut w = BitWriter::with_capacity(a.codes.len() / 4 + 8);
-            for &c in &a.codes {
-                table.encode(&mut w, c)?;
-            }
-            let payload_bits = w.bit_len() as u64;
-            Ok(BlockPayload {
-                meta: BlockMeta {
-                    predictor: a.selection.predictor,
-                    coeffs: a.selection.coeffs,
-                    n_unpred: a.unpred.len() as u32,
-                    payload_bits,
-                },
-                bytes: w.finish(),
-            })
-        });
-    let mut blocks = Vec::with_capacity(n_blocks);
-    for payload in encoded {
-        blocks.push(payload?);
-    }
-
-    let mut unpred = Vec::with_capacity(stats.n_unpred);
-    let mut dc_sums = Vec::with_capacity(n_blocks);
-    for a in &arts {
-        unpred.extend_from_slice(&a.unpred);
-        dc_sums.push(a.dc_sum);
-    }
-
-    let writer = Writer {
-        header: Header {
-            flags: 0,
-            dims,
-            block_size: cfg.block_size as u32,
-            quant_radius: cfg.quant_radius,
-            error_bound: bound,
-            n_blocks: n_blocks as u64,
-        },
-        table: &table,
-        blocks,
-        classic_payload: None,
-        unpred: &unpred,
-        sum_dc: if params.ft { Some(&dc_sums) } else { None },
-        zstd_level: cfg.zstd_level,
-        payload_zstd: cfg.payload_zstd,
-        parity: cfg.archive_parity,
-    };
-    let archive = writer.write()?;
-    stats.compressed_bytes = archive.len();
-    Ok(CoreOutput { archive, stats, events })
-}
-
-/// Compress one block (both predictors), appending codes/unpred and filling
-/// `dcmp_block` with the reconstruction the decompressor will produce.
-#[allow(clippy::too_many_arguments)]
-fn compress_block<H: Hooks>(
-    bi: usize,
-    block: &[f32],
-    shape: (usize, usize, usize),
-    sel: &Selection,
-    q: &Quantizer,
-    protect: bool,
-    hooks: &mut H,
-    codes: &mut Vec<u32>,
-    unpred: &mut Vec<f32>,
-    dcmp_block: &mut Vec<f32>,
-    stats: &mut CompressStats,
-) {
-    let (nz, ny, nx) = shape;
-    dcmp_block.clear();
-    dcmp_block.resize(block.len(), 0.0);
-    let mut p = 0usize;
-    for z in 0..nz {
-        for y in 0..ny {
-            for x in 0..nx {
-                let val = block[p];
-                // ---- prediction (fragile site #1, duplicated if protect) ----
-                let pred = match sel.predictor {
-                    Predictor::Lorenzo if z > 0 && y > 0 && x > 0 => {
-                        // interior fast path (identical arithmetic order —
-                        // bit-identical to the branchy boundary path)
-                        let (sy, sz) = (nx, ny * nx);
-                        let raw = lorenzo::predict_interior_dense(dcmp_block, p, sy, sz);
-                        let first = hooks.corrupt_pred(bi, p, raw);
-                        if protect {
-                            let dup =
-                                lorenzo::predict_interior_dense_dup(dcmp_block, p, sy, sz);
-                            protected_eval(
-                                first,
-                                dup,
-                                || lorenzo::predict_interior_dense(dcmp_block, p, sy, sz),
-                                &mut stats.dup_pred_catches,
-                            )
-                        } else {
-                            first
-                        }
-                    }
-                    Predictor::Lorenzo => {
-                        let view = GridView::dense(dcmp_block, shape);
-                        let first = hooks.corrupt_pred(bi, p, lorenzo::predict(&view, z, y, x));
-                        if protect {
-                            let dup = lorenzo::predict_dup(&view, z, y, x);
-                            protected_eval(first, dup, || lorenzo::predict(&view, z, y, x), &mut stats.dup_pred_catches)
-                        } else {
-                            first
-                        }
-                    }
-                    Predictor::Regression => {
-                        let c = &sel.coeffs;
-                        let first = hooks.corrupt_pred(bi, p, regression::predict(c, z, y, x));
-                        if protect {
-                            let dup = regression::predict_dup(c, z, y, x);
-                            protected_eval(first, dup, || regression::predict(c, z, y, x), &mut stats.dup_pred_catches)
-                        } else {
-                            first
-                        }
-                    }
-                    Predictor::DualQuant => {
-                        unreachable!("sampling never selects dual-quant; use offload::compress")
-                    }
-                };
-                // ---- quantize + reconstruct (fragile site #2) ----
-                match q.quantize(val, pred) {
-                    Some((code, dcmp_raw)) => {
-                        let first = hooks.corrupt_dcmp(bi, p, dcmp_raw);
-                        let dcmp = if protect {
-                            let dup = q.reconstruct_dup(code, pred);
-                            protected_eval(first, dup, || q.reconstruct(code, pred), &mut stats.dup_dcmp_catches)
-                        } else {
-                            first
-                        };
-                        if q.within_bound(val, dcmp) {
-                            codes.push(code);
-                            dcmp_block[p] = dcmp;
-                        } else {
-                            // paper Fig.1(a) l.7-8 double check
-                            stats.line7_fallbacks += 1;
-                            codes.push(UNPREDICTABLE);
-                            unpred.push(val);
-                            dcmp_block[p] = val;
-                        }
-                    }
-                    None => {
-                        codes.push(UNPREDICTABLE);
-                        unpred.push(val);
-                        dcmp_block[p] = val;
-                    }
-                }
-                p += 1;
-            }
-        }
-    }
+    stage::compress_graph(data, dims, cfg, params, hooks)
 }
 
 // ---------------------------------------------------------------------------
@@ -923,6 +422,42 @@ pub(crate) fn decompress_core<H: DecompressHooks>(
 /// Compress with the independent-block engine (**rsz**).
 pub fn compress(data: &[f32], dims: Dims, cfg: &CompressionConfig) -> Result<Vec<u8>> {
     Ok(compress_core(data, dims, cfg, CoreParams::default(), &mut NoHooks)?.archive)
+}
+
+/// **rsz** behind the unified [`stage::BlockCodec`] dispatch: the stage
+/// graph with both protection switches off. Random access works (the
+/// format is per-block); verified decompression does not (no `sum_dc`).
+#[derive(Debug, Default)]
+pub struct RszCodec;
+
+/// The `rsz` codec singleton ([`crate::inject::Engine::codec`]).
+pub static RSZ_CODEC: RszCodec = RszCodec;
+
+impl stage::BlockCodec for RszCodec {
+    fn name(&self) -> &'static str {
+        "rsz"
+    }
+
+    fn compress(&self, data: &[f32], dims: Dims, cfg: &CompressionConfig) -> Result<Vec<u8>> {
+        compress(data, dims, cfg)
+    }
+
+    fn decompress(&self, bytes: &[u8], par: super::Parallelism) -> Result<Decompressed> {
+        decompress_with(bytes, par)
+    }
+
+    fn decompress_region(
+        &self,
+        bytes: &[u8],
+        region: Region,
+        par: super::Parallelism,
+    ) -> Result<Vec<f32>> {
+        decompress_region_with(bytes, region, par)
+    }
+
+    fn supports_region(&self) -> bool {
+        true
+    }
 }
 
 /// Compress with hooks/stats (injection harness entry point).

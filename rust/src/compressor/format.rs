@@ -214,6 +214,24 @@ pub struct Writer<'a> {
     pub payload_zstd: bool,
     /// Archive-level parity protection (format v2). `None` = v1.
     pub parity: Option<ParityParams>,
+    /// Pre-compressed unpredictable-section body, if the caller already
+    /// built one (via the crate-internal `compress_unpred_section`) from
+    /// exactly `unpred` and `zstd_level` — the stage-pipelined driver
+    /// does, overlapping the Huffman encode stage. `None` = the writer
+    /// compresses `unpred` itself; the bytes are identical either way.
+    pub unpred_body: Option<Vec<u8>>,
+}
+
+/// Build the unpredictable-section body (raw little-endian f32s through
+/// the lossless codec) — the serialize-stage piece that depends only on
+/// the quantize stage, so the pipelined driver runs it while the encode
+/// stage is still working.
+pub(crate) fn compress_unpred_section(unpred: &[f32], zstd_level: i32) -> Result<Vec<u8>> {
+    let mut unpred_raw = Vec::with_capacity(unpred.len() * 4);
+    for v in unpred {
+        bytes::put_f32(&mut unpred_raw, *v);
+    }
+    lossless::compress(&unpred_raw, Codec::Zstd(zstd_level))
 }
 
 impl<'a> Writer<'a> {
@@ -268,11 +286,10 @@ impl<'a> Writer<'a> {
         let meta_body = lossless::compress(&meta_raw, Codec::Zstd(self.zstd_level))?;
 
         // ---- unpred section ----
-        let mut unpred_raw = Vec::with_capacity(self.unpred.len() * 4);
-        for v in self.unpred {
-            bytes::put_f32(&mut unpred_raw, *v);
-        }
-        let unpred_body = lossless::compress(&unpred_raw, Codec::Zstd(self.zstd_level))?;
+        let unpred_body = match self.unpred_body.take() {
+            Some(body) => body,
+            None => compress_unpred_section(self.unpred, self.zstd_level)?,
+        };
 
         // ---- payload section ----
         let payload_body = match self.classic_payload.take() {
@@ -788,6 +805,7 @@ mod tests {
             zstd_level: 3,
             payload_zstd: false,
             parity: None,
+            unpred_body: None,
         }
     }
 
@@ -857,6 +875,7 @@ mod tests {
             zstd_level: 3,
             payload_zstd: false,
             parity: None,
+            unpred_body: None,
         };
         let data = w.write().unwrap();
         let a = parse(&data).unwrap();

@@ -190,6 +190,18 @@ impl HuffmanTable {
         Err(Error::HuffmanDecode("code not in table".into()))
     }
 
+    /// Encode stage of the block codec chain: one block's code stream into
+    /// a fresh byte-aligned bitstream. Returns `(bytes, bit length)` —
+    /// exactly what a [`crate::compressor::format::BlockPayload`] needs.
+    pub fn encode_all(&self, codes: &[u32]) -> Result<(Vec<u8>, u64)> {
+        let mut w = BitWriter::with_capacity(codes.len() / 4 + 8);
+        for &c in codes {
+            self.encode(&mut w, c)?;
+        }
+        let bits = w.bit_len() as u64;
+        Ok((w.finish(), bits))
+    }
+
     /// Total encoded size in bits for a histogram (for rate estimation).
     pub fn encoded_bits(&self, freqs: &[u64]) -> u64 {
         freqs

@@ -12,7 +12,10 @@
 //! Pipeline per block (paper §3.1): predict (Lorenzo or per-block linear
 //! regression, chosen by sampling) → linear-scaling quantization against the
 //! user error bound → canonical Huffman coding → Zstd on the metadata
-//! sections.
+//! sections. That chain lives once, as an explicit stage graph, in
+//! [`stage`] — with the [`stage::BlockCodec`] trait as the unified
+//! dispatch over all three engines and three byte-identical schedulers
+//! (sequential, 1-worker software-pipelined, block-parallel).
 
 pub mod block;
 pub mod classic;
@@ -26,6 +29,7 @@ pub mod offload;
 pub mod quantize;
 pub mod regression;
 pub mod sampling;
+pub mod stage;
 
 use crate::error::{Error, Result};
 
@@ -155,6 +159,12 @@ pub struct CompressionConfig {
     /// decompression takes its own knob, see `engine::decompress_with`).
     /// Archives are byte-identical at any setting.
     pub parallelism: Parallelism,
+    /// Per-stage software pipelining on the 1-worker path: a companion
+    /// thread runs the protect + histogram stage of block *i* while the
+    /// main thread quantizes block *i+1* (see [`stage`]). On by default;
+    /// bytes are identical either way — this knob exists so the benches
+    /// can measure the overlap against the plain sequential driver.
+    pub stage_overlap: bool,
     /// Archive-at-rest parity protection: `Some` writes format v2
     /// (CRC-checked sections, voting header, XOR parity groups — see
     /// [`crate::ft::parity`]); `None` writes the legacy v1 bytes.
@@ -172,8 +182,16 @@ impl CompressionConfig {
             predictor: PredictorPolicy::Auto,
             payload_zstd: false,
             parallelism: Parallelism::Sequential,
+            stage_overlap: true,
             archive_parity: None,
         }
+    }
+
+    /// Builder: toggle 1-worker per-stage software pipelining (see
+    /// [`stage`]). Bytes are identical either way.
+    pub fn with_stage_overlap(mut self, on: bool) -> Self {
+        self.stage_overlap = on;
+        self
     }
 
     /// Builder: enable archive-at-rest parity self-healing (format v2).

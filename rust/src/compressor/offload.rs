@@ -18,7 +18,8 @@
 //! section: `[n_outliers (bitcast u32)] ++ outlier bins (bitcast i32) ++
 //! (patch index (bitcast u32), patch value)*`.
 //!
-//! Decoding (wired into [`super::engine::decode_block`]) reverses this and
+//! Decoding (wired into the crate-internal `engine::decode_block`, the
+//! decode half of the [`super::stage`] chain) reverses this and
 //! runs the inverse prefix-sum transform — so region decompression and the
 //! FT `sum_dc` verification work unchanged on dual-quant archives.
 
@@ -32,7 +33,7 @@ use crate::data::Dims;
 use crate::error::{Error, Result};
 use crate::ft::checksum;
 use crate::runtime::BlockKernels;
-use crate::util::bits::{BitReader, BitWriter};
+use crate::util::bits::BitReader;
 
 /// Per-block artifacts of the dual-quant transform, ready for encoding.
 struct DqBlock {
@@ -161,13 +162,13 @@ pub fn compress(
         }
     }
 
-    // global Huffman over all codes
+    // global Huffman over all codes (shared histogram + encode stages of
+    // the block codec chain — the dual-quant path plugs in after its own
+    // quantize stage)
     let n_symbols = 2 * cfg.quant_radius as usize;
     let mut freqs = vec![0u64; n_symbols];
     for blk in blocks.iter().flatten() {
-        for &c in &blk.codes {
-            freqs[c as usize] += 1;
-        }
+        super::stage::count_freqs(&mut freqs, &blk.codes)?;
     }
     let table = HuffmanTable::from_frequencies(&freqs)?;
 
@@ -175,11 +176,7 @@ pub fn compress(
     let mut unpred: Vec<f32> = Vec::new();
     let mut sums: Vec<u64> = Vec::with_capacity(n_blocks);
     for blk in blocks.iter().flatten() {
-        let mut w = BitWriter::with_capacity(blk.codes.len() / 4 + 8);
-        for &c in &blk.codes {
-            table.encode(&mut w, c)?;
-        }
-        let payload_bits = w.bit_len() as u64;
+        let (bytes, payload_bits) = table.encode_all(&blk.codes)?;
         payloads.push(BlockPayload {
             meta: BlockMeta {
                 predictor: Predictor::DualQuant,
@@ -187,7 +184,7 @@ pub fn compress(
                 n_unpred: blk.side.len() as u32,
                 payload_bits,
             },
-            bytes: w.finish(),
+            bytes,
         });
         unpred.extend_from_slice(&blk.side);
         sums.push(blk.sum_dc);
@@ -210,6 +207,7 @@ pub fn compress(
         zstd_level: cfg.zstd_level,
         payload_zstd: cfg.payload_zstd,
         parity: cfg.archive_parity,
+        unpred_body: None,
     }
     .write()
 }

@@ -1,0 +1,1164 @@
+//! The stage-graph codec core: one explicit per-block stage chain shared
+//! by every engine, plus the drivers that schedule it.
+//!
+//! The paper's independent-block model makes each block a chain of stages
+//!
+//! ```text
+//! prepare (extract + input checksum + estimate/select)
+//!   → predict + dual-quant   (codes, unpredictables, reconstruction)
+//!   → protect                (bin checksums, sum_dc — ft mode)
+//!   → [histogram barrier: the global canonical Huffman table]
+//!   → encode                 (per-block Huffman bitstream)
+//!   → serialize              (section bodies → archive bytes)
+//! ```
+//!
+//! and this module is where that chain lives **once**. The three engines
+//! are thin parameterizations of it (see [`BlockCodec`]): `rsz` runs the
+//! chain with both protection switches off, `ftrsz` layers the protect
+//! stage on (checksums + instruction duplication), and `classic` replaces
+//! the per-block encode with its cross-block recurrence and single global
+//! stream while still sharing the prepare, histogram and serialize stages.
+//!
+//! Three drivers schedule the chain — all producing **byte-identical
+//! archives**, because every array the archive serializes is committed in
+//! block order no matter which driver ran:
+//!
+//! * `run_sequential`: one thread, hook points live — the reference path
+//!   and the only one fault-injection runs may take (hooks are stateful
+//!   `&mut` machines tied to the sequential block order);
+//! * `run_pipelined`: the 1-worker software pipeline — a companion
+//!   thread runs the protect + histogram stage of block *i* while the main
+//!   thread quantizes block *i+1*, and the unpredictable-section
+//!   serialization overlaps the post-barrier Huffman encode. The Huffman
+//!   *bit-emission* itself cannot start before the last block is quantized
+//!   — the global table is a true barrier in this format — so what the
+//!   pipeline removes from the critical path is every stage that used to
+//!   be serialized around it;
+//! * `run_parallel`: the block-parallel fan-out over
+//!   [`crate::util::threadpool::parallel_map`] (workers > 1).
+//!
+//! [`StageTimings`] records per-stage busy time so the `hotpath` bench can
+//! show the overlap (`busy / wall > 1` on the pipelined path) and gate
+//! regressions.
+
+use std::sync::mpsc;
+use std::time::Instant;
+
+use super::block::{BlockGrid, Region};
+use super::engine::{
+    Arena, CompressStats, CoreOutput, CoreParams, Decompressed, Hooks, NoHooks,
+};
+use super::format::{self, BlockMeta, BlockPayload, Header, Writer};
+use super::huffman::HuffmanTable;
+use super::lorenzo::{self, GridView};
+use super::quantize::{Quantizer, UNPREDICTABLE};
+use super::regression;
+use super::sampling::{self, Selection};
+use super::{CompressionConfig, Parallelism, Predictor, PredictorPolicy};
+use crate::data::Dims;
+use crate::error::{Error, Result};
+use crate::ft::checksum::{self, Correction};
+use crate::ft::duplicate::protected_eval;
+use crate::ft::report::{DecompressReport, SdcEvent, SdcKind};
+
+/// The stages of the per-block codec chain, in execution order. Used as
+/// timing keys by [`StageTimings`] and as the vocabulary of the module
+/// docs; the histogram barrier sits between `Protect` and `Encode`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BlockStage {
+    /// Extract + input checksum + estimation/selection.
+    Prepare,
+    /// Prediction and dual (linear-scaling) quantization.
+    Quantize,
+    /// Bin checksums and `sum_dc` (ft mode); histogram accumulation.
+    Protect,
+    /// Per-block Huffman bit-emission against the global table.
+    Encode,
+    /// Section bodies → archive bytes.
+    Serialize,
+}
+
+impl BlockStage {
+    /// All stages, in chain order.
+    pub const ALL: [BlockStage; 5] = [
+        BlockStage::Prepare,
+        BlockStage::Quantize,
+        BlockStage::Protect,
+        BlockStage::Encode,
+        BlockStage::Serialize,
+    ];
+
+    /// Stable lowercase name (bench JSON keys).
+    pub fn name(&self) -> &'static str {
+        match self {
+            BlockStage::Prepare => "prepare",
+            BlockStage::Quantize => "quantize",
+            BlockStage::Protect => "protect",
+            BlockStage::Encode => "encode",
+            BlockStage::Serialize => "serialize",
+        }
+    }
+}
+
+/// Per-stage busy time of one compression run. On the pipelined driver the
+/// stage threads run concurrently, so `busy_ns() > wall_ns` is the direct
+/// evidence of overlap; on the one-thread sequential driver the two are
+/// equal up to unattributed glue.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StageTimings {
+    /// Busy nanoseconds of the prepare stage.
+    pub prepare_ns: u64,
+    /// Busy nanoseconds of the predict + quantize stage.
+    pub quantize_ns: u64,
+    /// Busy nanoseconds of the protect + histogram stage.
+    pub protect_ns: u64,
+    /// Busy nanoseconds of the Huffman encode stage.
+    pub encode_ns: u64,
+    /// Busy nanoseconds of the serialize stage.
+    pub serialize_ns: u64,
+    /// Wall-clock nanoseconds of the whole run.
+    pub wall_ns: u64,
+    /// True when the run used the software-pipelined driver.
+    pub pipelined: bool,
+}
+
+impl StageTimings {
+    /// Busy time of one stage.
+    pub fn ns(&self, stage: BlockStage) -> u64 {
+        match stage {
+            BlockStage::Prepare => self.prepare_ns,
+            BlockStage::Quantize => self.quantize_ns,
+            BlockStage::Protect => self.protect_ns,
+            BlockStage::Encode => self.encode_ns,
+            BlockStage::Serialize => self.serialize_ns,
+        }
+    }
+
+    /// Total busy time across all stages.
+    pub fn busy_ns(&self) -> u64 {
+        BlockStage::ALL.iter().map(|s| self.ns(*s)).sum()
+    }
+
+    /// Busy/wall ratio: > 1.0 means stages genuinely overlapped.
+    pub fn overlap_ratio(&self) -> f64 {
+        self.busy_ns() as f64 / self.wall_ns.max(1) as f64
+    }
+}
+
+// ---------------------------------------------------------------------------
+// unified codec dispatch
+// ---------------------------------------------------------------------------
+
+/// One engine behind the stage graph. `rsz`, `ftrsz` and `classic` all
+/// implement this, and everything that dispatches over engines — the
+/// coordinator pipeline, the CLI, the benches, the injection harness —
+/// goes through it (`crate::inject::Engine::codec`).
+///
+/// Adding an engine is ~50 lines: implement `compress` on top of
+/// [`crate::compressor::engine::compress_core`] (pick the [`CoreParams`]
+/// switches your protect stage needs) and delegate the decode methods —
+/// see the `lib.rs` quickstart.
+pub trait BlockCodec: Sync {
+    /// Paper name (`sz` / `rsz` / `ftrsz`).
+    fn name(&self) -> &'static str;
+
+    /// The stage switches this codec runs the chain with (introspection
+    /// for tooling/benches; default: both protections off).
+    fn params(&self) -> CoreParams {
+        CoreParams::default()
+    }
+
+    /// Compress one field. Honors `cfg.parallelism` where the engine can
+    /// (classic is sequential by design — its cross-block Lorenzo
+    /// recurrence is a loop-carried dependency).
+    fn compress(&self, data: &[f32], dims: Dims, cfg: &CompressionConfig) -> Result<Vec<u8>>;
+
+    /// The codec's natural decode path: plain decode for `sz`/`rsz`,
+    /// verified decode (Algorithm 2) for `ftrsz`.
+    fn decompress(&self, bytes: &[u8], par: Parallelism) -> Result<Decompressed>;
+
+    /// Verified decompression (Algorithm 2). Default: unsupported.
+    fn decompress_verified(
+        &self,
+        bytes: &[u8],
+        par: Parallelism,
+    ) -> Result<(Decompressed, DecompressReport)> {
+        let _ = par;
+        let _ = bytes;
+        Err(Error::InvalidArgument(format!(
+            "{}: verified decompression unsupported (no per-block sum_dc)",
+            self.name()
+        )))
+    }
+
+    /// Random-access region decode. Default: unsupported.
+    fn decompress_region(
+        &self,
+        bytes: &[u8],
+        region: Region,
+        par: Parallelism,
+    ) -> Result<Vec<f32>> {
+        let _ = par;
+        let _ = (bytes, region);
+        Err(Error::InvalidArgument(format!(
+            "{}: random-access region decode unsupported (single dependent stream)",
+            self.name()
+        )))
+    }
+
+    /// True when [`BlockCodec::decompress_verified`] is implemented.
+    fn supports_verify(&self) -> bool {
+        false
+    }
+
+    /// True when [`BlockCodec::decompress_region`] is implemented.
+    fn supports_region(&self) -> bool {
+        false
+    }
+}
+
+// ---------------------------------------------------------------------------
+// graph entry point
+// ---------------------------------------------------------------------------
+
+/// Pipelining needs at least two blocks to overlap anything.
+const MIN_OVERLAP_BLOCKS: usize = 2;
+
+/// Minimum dataset size for the pipelined driver: below this, the
+/// companion-thread spawn + channel traffic (~tens of µs) rivals the
+/// compression work itself, so tiny fields stay on the plain sequential
+/// driver (bytes are identical either way).
+const MIN_OVERLAP_POINTS: usize = 4096;
+
+/// Bounded depth of the quantize → protect channel on the pipelined path:
+/// deep enough to ride out stage-time jitter, shallow enough that the
+/// in-flight codes/reconstruction buffers stay cache-sized.
+const PIPE_DEPTH: usize = 4;
+
+/// Run the stage graph for an independent-block codec (Algorithm 1,
+/// parameterized). Driver choice:
+///
+/// * hooks live (injection) → [`run_sequential`], always;
+/// * `cfg.parallelism` > 1 worker → [`run_parallel`];
+/// * 1 worker, `cfg.stage_overlap`, ≥ 2 blocks and a dataset big enough
+///   to amortize the companion thread → [`run_pipelined`];
+/// * otherwise → [`run_sequential`] with no-op hooks.
+///
+/// All drivers commit results in block order: archives are byte-identical
+/// regardless of which one ran (property-tested, golden-bytes-tested).
+pub(crate) fn compress_graph<H: Hooks>(
+    data: &[f32],
+    dims: Dims,
+    cfg: &CompressionConfig,
+    params: CoreParams,
+    hooks: &mut H,
+) -> Result<CoreOutput> {
+    cfg.validate()?;
+    if data.len() != dims.len() {
+        return Err(Error::InvalidArgument(format!(
+            "data length {} != dims {:?}",
+            data.len(),
+            dims
+        )));
+    }
+    let workers = cfg.parallelism.workers();
+    if H::PARALLEL_SAFE && workers > 1 {
+        return run_parallel(data, dims, cfg, params, workers);
+    }
+    if H::PARALLEL_SAFE
+        && cfg.stage_overlap
+        && data.len() >= MIN_OVERLAP_POINTS
+        && BlockGrid::new(dims, cfg.block_size)?.n_blocks() >= MIN_OVERLAP_BLOCKS
+    {
+        return run_pipelined(data, dims, cfg, params);
+    }
+    run_sequential(data, dims, cfg, params, hooks)
+}
+
+// ---------------------------------------------------------------------------
+// shared stage functions
+// ---------------------------------------------------------------------------
+
+/// Prepare stage, hooked flavor (shared with [`super::classic`]): per-block
+/// estimation + predictor selection, with the estimation-perturbation hook
+/// applied between the two.
+pub(crate) fn hooked_selections<H: Hooks>(
+    grid: &BlockGrid,
+    input: &[f32],
+    policy: PredictorPolicy,
+    hooks: &mut H,
+) -> Vec<Selection> {
+    let n_blocks = grid.n_blocks();
+    let mut selections = Vec::with_capacity(n_blocks);
+    let mut scratch = Vec::new();
+    for bi in 0..n_blocks {
+        grid.extract(input, bi, &mut scratch);
+        let shape = grid.extent(bi).shape;
+        let (coeffs, e_lor, e_reg) = sampling::estimate(&scratch, shape);
+        let (coeffs, e_lor, e_reg) = hooks.corrupt_estimation(bi, coeffs, e_lor, e_reg);
+        selections.push(sampling::select(&scratch, shape, policy, coeffs, e_lor, e_reg));
+    }
+    selections
+}
+
+/// Histogram accumulation (shared by every driver and by `classic`).
+/// An out-of-range code is the paper's "core-dump" outcome: unprotected SZ
+/// dies here or at decode.
+pub(crate) fn count_freqs(freqs: &mut [u64], codes: &[u32]) -> Result<()> {
+    let n_symbols = freqs.len();
+    for &c in codes {
+        let ci = c as usize;
+        if ci >= n_symbols {
+            return Err(Error::CrashEquivalent(format!(
+                "quantization code {c} outside symbol table ({n_symbols})"
+            )));
+        }
+        freqs[ci] += 1;
+    }
+    Ok(())
+}
+
+/// Encode stage: one block's codes against the shared table.
+fn encode_block(
+    table: &HuffmanTable,
+    predictor: Predictor,
+    coeffs: [f32; 4],
+    n_unpred: u32,
+    codes: &[u32],
+) -> Result<BlockPayload> {
+    let (bytes, payload_bits) = table.encode_all(codes)?;
+    Ok(BlockPayload {
+        meta: BlockMeta { predictor, coeffs, n_unpred, payload_bits },
+        bytes,
+    })
+}
+
+/// Serialize stage: assemble the archive from the stage outputs.
+/// `unpred_body` hands over a pre-compressed unpredictable section (the
+/// pipelined driver builds it while the encode stage is still running).
+#[allow(clippy::too_many_arguments)]
+fn write_archive(
+    cfg: &CompressionConfig,
+    dims: Dims,
+    bound: f64,
+    n_blocks: usize,
+    table: &HuffmanTable,
+    blocks: Vec<BlockPayload>,
+    unpred: &[f32],
+    dc_sums: Option<&[u64]>,
+    unpred_body: Option<Vec<u8>>,
+) -> Result<Vec<u8>> {
+    Writer {
+        header: Header {
+            flags: 0,
+            dims,
+            block_size: cfg.block_size as u32,
+            quant_radius: cfg.quant_radius,
+            error_bound: bound,
+            n_blocks: n_blocks as u64,
+        },
+        table,
+        blocks,
+        classic_payload: None,
+        unpred,
+        sum_dc: dc_sums,
+        zstd_level: cfg.zstd_level,
+        payload_zstd: cfg.payload_zstd,
+        parity: cfg.archive_parity,
+        unpred_body,
+    }
+    .write()
+}
+
+/// Quantize stage: compress one block (both predictors), appending
+/// codes/unpred and filling `dcmp_block` with the reconstruction the
+/// decompressor will produce. Hook points and instruction duplication live
+/// here — the two fragile sites of the paper's §4.1 analysis.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn compress_block<H: Hooks>(
+    bi: usize,
+    block: &[f32],
+    shape: (usize, usize, usize),
+    sel: &Selection,
+    q: &Quantizer,
+    protect: bool,
+    hooks: &mut H,
+    codes: &mut Vec<u32>,
+    unpred: &mut Vec<f32>,
+    dcmp_block: &mut Vec<f32>,
+    stats: &mut CompressStats,
+) {
+    let (nz, ny, nx) = shape;
+    dcmp_block.clear();
+    dcmp_block.resize(block.len(), 0.0);
+    let mut p = 0usize;
+    for z in 0..nz {
+        for y in 0..ny {
+            for x in 0..nx {
+                let val = block[p];
+                // ---- prediction (fragile site #1, duplicated if protect) ----
+                let pred = match sel.predictor {
+                    Predictor::Lorenzo if z > 0 && y > 0 && x > 0 => {
+                        // interior fast path (identical arithmetic order —
+                        // bit-identical to the branchy boundary path)
+                        let (sy, sz) = (nx, ny * nx);
+                        let raw = lorenzo::predict_interior_dense(dcmp_block, p, sy, sz);
+                        let first = hooks.corrupt_pred(bi, p, raw);
+                        if protect {
+                            let dup =
+                                lorenzo::predict_interior_dense_dup(dcmp_block, p, sy, sz);
+                            protected_eval(
+                                first,
+                                dup,
+                                || lorenzo::predict_interior_dense(dcmp_block, p, sy, sz),
+                                &mut stats.dup_pred_catches,
+                            )
+                        } else {
+                            first
+                        }
+                    }
+                    Predictor::Lorenzo => {
+                        let view = GridView::dense(dcmp_block, shape);
+                        let first = hooks.corrupt_pred(bi, p, lorenzo::predict(&view, z, y, x));
+                        if protect {
+                            let dup = lorenzo::predict_dup(&view, z, y, x);
+                            protected_eval(
+                                first,
+                                dup,
+                                || lorenzo::predict(&view, z, y, x),
+                                &mut stats.dup_pred_catches,
+                            )
+                        } else {
+                            first
+                        }
+                    }
+                    Predictor::Regression => {
+                        let c = &sel.coeffs;
+                        let first = hooks.corrupt_pred(bi, p, regression::predict(c, z, y, x));
+                        if protect {
+                            let dup = regression::predict_dup(c, z, y, x);
+                            protected_eval(
+                                first,
+                                dup,
+                                || regression::predict(c, z, y, x),
+                                &mut stats.dup_pred_catches,
+                            )
+                        } else {
+                            first
+                        }
+                    }
+                    Predictor::DualQuant => {
+                        unreachable!("sampling never selects dual-quant; use offload::compress")
+                    }
+                };
+                // ---- quantize + reconstruct (fragile site #2) ----
+                match q.quantize(val, pred) {
+                    Some((code, dcmp_raw)) => {
+                        let first = hooks.corrupt_dcmp(bi, p, dcmp_raw);
+                        let dcmp = if protect {
+                            let dup = q.reconstruct_dup(code, pred);
+                            protected_eval(
+                                first,
+                                dup,
+                                || q.reconstruct(code, pred),
+                                &mut stats.dup_dcmp_catches,
+                            )
+                        } else {
+                            first
+                        };
+                        if q.within_bound(val, dcmp) {
+                            codes.push(code);
+                            dcmp_block[p] = dcmp;
+                        } else {
+                            // paper Fig.1(a) l.7-8 double check
+                            stats.line7_fallbacks += 1;
+                            codes.push(UNPREDICTABLE);
+                            unpred.push(val);
+                            dcmp_block[p] = val;
+                        }
+                    }
+                    None => {
+                        codes.push(UNPREDICTABLE);
+                        unpred.push(val);
+                        dcmp_block[p] = val;
+                    }
+                }
+                p += 1;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// driver 1: sequential (hook points live)
+// ---------------------------------------------------------------------------
+
+/// One-thread reference driver — the only one hooked (injection) runs may
+/// take: hooks are `&mut` state machines tied to the sequential block
+/// order (mode-B arena access, first-evaluation perturbations).
+fn run_sequential<H: Hooks>(
+    data: &[f32],
+    dims: Dims,
+    cfg: &CompressionConfig,
+    params: CoreParams,
+    hooks: &mut H,
+) -> Result<CoreOutput> {
+    let wall = Instant::now();
+    let mut stages = StageTimings::default();
+    let bound = cfg.error_bound.absolute(data);
+    let q = Quantizer::new(bound, cfg.quant_radius);
+    let grid = BlockGrid::new(dims, cfg.block_size)?;
+    let n_blocks = grid.n_blocks();
+    let mut stats = CompressStats {
+        n_points: data.len(),
+        n_blocks,
+        ..Default::default()
+    };
+    let mut events = Vec::new();
+
+    // The working copy models "the input data in memory" — the thing that
+    // memory errors strike.
+    let mut input = data.to_vec();
+
+    // ---- prepare stage (Alg.1 l.1-9) ----
+    let t = Instant::now();
+    let mut in_sums: Vec<checksum::Checksums> = Vec::new();
+    let mut scratch = Vec::new();
+    if params.ft {
+        in_sums.reserve(n_blocks);
+        for bi in 0..n_blocks {
+            grid.extract(&input, bi, &mut scratch);
+            in_sums.push(checksum::checksum_f32(&scratch));
+        }
+    }
+    hooks.on_input_ready(&mut input);
+    let selections = hooked_selections(&grid, &input, cfg.predictor, hooks);
+    stages.prepare_ns = t.elapsed().as_nanos() as u64;
+
+    // ---- quantize stage (Alg.1 l.10-32 main loop) ----
+    let t = Instant::now();
+    let mut codes: Vec<u32> = Vec::with_capacity(data.len());
+    let mut code_block_offsets: Vec<usize> = Vec::with_capacity(n_blocks + 1);
+    code_block_offsets.push(0);
+    let mut unpred: Vec<f32> = Vec::new();
+    let mut unpred_counts: Vec<u32> = Vec::with_capacity(n_blocks);
+    let mut q_sums: Vec<checksum::Checksums> = Vec::with_capacity(n_blocks);
+    let mut dc_sums: Vec<u64> = Vec::with_capacity(n_blocks);
+    let mut all_coeffs: Vec<[f32; 4]> = selections.iter().map(|s| s.coeffs).collect();
+    let mut dcmp_block: Vec<f32> = Vec::new();
+
+    for bi in 0..n_blocks {
+        grid.extract(&input, bi, &mut scratch);
+        let shape = grid.extent(bi).shape;
+
+        // l.11: verify + correct the block's input memory
+        if params.ft {
+            match checksum::verify_correct_f32(&mut scratch, in_sums[bi]) {
+                Correction::Clean => {}
+                Correction::Corrected { index } => {
+                    events.push(SdcEvent { kind: SdcKind::InputCorrected, block: bi, index });
+                    // write the repaired value back to the working copy so
+                    // later stages (and the caller's view of memory) heal
+                    grid.scatter(&scratch, bi, &mut input);
+                }
+                Correction::Failed => {
+                    events.push(SdcEvent {
+                        kind: SdcKind::InputUncorrectable,
+                        block: bi,
+                        index: 0,
+                    });
+                }
+            }
+        }
+
+        let sel = selections[bi];
+        let unpred_before = unpred.len();
+        let code_base = codes.len();
+        compress_block(
+            bi,
+            &scratch,
+            shape,
+            &sel,
+            &q,
+            params.protect,
+            hooks,
+            &mut codes,
+            &mut unpred,
+            &mut dcmp_block,
+            &mut stats,
+        );
+        match sel.predictor {
+            Predictor::Lorenzo => stats.lorenzo_blocks += 1,
+            Predictor::Regression | Predictor::DualQuant => stats.regression_blocks += 1,
+        }
+        unpred_counts.push((unpred.len() - unpred_before) as u32);
+        code_block_offsets.push(codes.len());
+
+        // l.24 + l.29: bin checksums + decompressed-data checksum
+        if params.ft {
+            q_sums.push(checksum::checksum_u32(&codes[code_base..]));
+            dc_sums.push(checksum::checksum_f32(&dcmp_block).sum);
+        }
+
+        hooks.on_block_codes(bi, &mut codes[code_base..]);
+        let mut arena = Arena {
+            progress: bi,
+            n_blocks,
+            input: &mut input,
+            codes: &mut codes,
+            unpred: &mut unpred,
+            coeffs: &mut all_coeffs,
+        };
+        hooks.on_progress(&mut arena);
+    }
+    stats.n_unpred = unpred.len();
+    stages.quantize_ns = t.elapsed().as_nanos() as u64;
+
+    // ---- protect stage (l.33-35): verify bins before the table build ----
+    // (hoisted before the tree build so a repaired code is guaranteed to
+    // be inside the constructed table; see DESIGN.md)
+    let t = Instant::now();
+    if params.ft {
+        for bi in 0..n_blocks {
+            let span = &mut codes[code_block_offsets[bi]..code_block_offsets[bi + 1]];
+            match checksum::verify_correct_u32(span, q_sums[bi]) {
+                Correction::Clean => {}
+                Correction::Corrected { index } => {
+                    events.push(SdcEvent { kind: SdcKind::BinCorrected, block: bi, index });
+                }
+                Correction::Failed => {
+                    events.push(SdcEvent { kind: SdcKind::BinUncorrectable, block: bi, index: 0 });
+                }
+            }
+        }
+    }
+    let mut freqs = vec![0u64; q.n_symbols()];
+    count_freqs(&mut freqs, &codes)?;
+    stages.protect_ns = t.elapsed().as_nanos() as u64;
+
+    // ---- encode stage (l.36-38): table barrier, then per-block encode ----
+    let t = Instant::now();
+    let table = HuffmanTable::from_frequencies(&freqs)?;
+    let mut blocks = Vec::with_capacity(n_blocks);
+    for bi in 0..n_blocks {
+        let span = &codes[code_block_offsets[bi]..code_block_offsets[bi + 1]];
+        let sel = &selections[bi];
+        blocks.push(encode_block(
+            &table,
+            sel.predictor,
+            all_coeffs[bi],
+            unpred_counts[bi],
+            span,
+        )?);
+    }
+    stages.encode_ns = t.elapsed().as_nanos() as u64;
+
+    // ---- serialize stage ----
+    let t = Instant::now();
+    let archive = write_archive(
+        cfg,
+        dims,
+        bound,
+        n_blocks,
+        &table,
+        blocks,
+        &unpred,
+        if params.ft { Some(&dc_sums) } else { None },
+        None,
+    )?;
+    stages.serialize_ns = t.elapsed().as_nanos() as u64;
+    stages.wall_ns = wall.elapsed().as_nanos() as u64;
+    stats.compressed_bytes = archive.len();
+    Ok(CoreOutput { archive, stats, events, stages })
+}
+
+// ---------------------------------------------------------------------------
+// the shared per-block chain (prepare → quantize, protect)
+// ---------------------------------------------------------------------------
+
+/// Output of the per-block prepare + quantize stages — one shared
+/// implementation for both overlap-capable drivers. (The hooked
+/// sequential driver keeps its own interleaving: injection hooks mutate
+/// shared state between blocks, which is exactly what this hook-free
+/// chain rules out.)
+struct QuantizedBlock {
+    selection: Selection,
+    codes: Vec<u32>,
+    /// Reconstruction (`sum_dc` input) — `Some` iff the ft switch is on.
+    dcmp: Option<Vec<f32>>,
+    unpred: Vec<f32>,
+    events: Vec<SdcEvent>,
+    line7_fallbacks: usize,
+    dup_pred_catches: u64,
+    dup_dcmp_catches: u64,
+    /// Busy nanoseconds of this block's prepare stage.
+    prepare_ns: u64,
+    /// Busy nanoseconds of this block's quantize stage.
+    quantize_ns: u64,
+}
+
+/// Prepare + quantize one block (parallel-safe, hook-free): extract,
+/// input checksum (ft), estimate/select, verify + correct in the block's
+/// private scratch copy (the shared input stays immutable), then
+/// predict + dual-quant. Every driver runs this exact operation order —
+/// byte identity depends on it.
+fn quantize_stage(
+    grid: &BlockGrid,
+    q: &Quantizer,
+    cfg: &CompressionConfig,
+    params: CoreParams,
+    bi: usize,
+    scratch: &mut Vec<f32>,
+    data: &[f32],
+) -> QuantizedBlock {
+    let t = Instant::now();
+    grid.extract(data, bi, scratch);
+    let shape = grid.extent(bi).shape;
+    let mut events = Vec::new();
+    // l.3-4: input checksum before the estimation pass reads the block
+    let in_sum = if params.ft { Some(checksum::checksum_f32(scratch)) } else { None };
+    // l.6-9: estimation + selection (naturally resilient)
+    let (coeffs, e_lor, e_reg) = sampling::estimate(scratch, shape);
+    let sel = sampling::select(scratch, shape, cfg.predictor, coeffs, e_lor, e_reg);
+    // l.11: verify + correct the block's memory after the estimation window
+    if let Some(sums) = in_sum {
+        match checksum::verify_correct_f32(scratch, sums) {
+            Correction::Clean => {}
+            Correction::Corrected { index } => {
+                events.push(SdcEvent { kind: SdcKind::InputCorrected, block: bi, index });
+            }
+            Correction::Failed => {
+                events.push(SdcEvent {
+                    kind: SdcKind::InputUncorrectable,
+                    block: bi,
+                    index: 0,
+                });
+            }
+        }
+    }
+    let prepare_ns = t.elapsed().as_nanos() as u64;
+
+    // l.12-32: predict → quantize → reconstruct
+    let t = Instant::now();
+    let mut local = CompressStats::default();
+    let mut codes = Vec::with_capacity(scratch.len());
+    let mut unpred = Vec::new();
+    let mut dcmp = Vec::new();
+    compress_block(
+        bi,
+        scratch,
+        shape,
+        &sel,
+        q,
+        params.protect,
+        &mut NoHooks,
+        &mut codes,
+        &mut unpred,
+        &mut dcmp,
+        &mut local,
+    );
+    QuantizedBlock {
+        selection: sel,
+        codes,
+        dcmp: if params.ft { Some(dcmp) } else { None },
+        unpred,
+        events,
+        line7_fallbacks: local.line7_fallbacks,
+        dup_pred_catches: local.dup_pred_catches,
+        dup_dcmp_catches: local.dup_dcmp_catches,
+        prepare_ns,
+        quantize_ns: t.elapsed().as_nanos() as u64,
+    }
+}
+
+/// Protect stage for one block (l.24 + l.33-35 + l.29): the bin checksum
+/// is verified before the codes feed the shared Huffman table, and the
+/// stored `sum_dc` is taken from the reconstruction. Returns the block's
+/// `dc_sum` (0 when ft is off).
+fn protect_stage(
+    params: CoreParams,
+    bi: usize,
+    codes: &mut Vec<u32>,
+    dcmp: Option<&[f32]>,
+    events: &mut Vec<SdcEvent>,
+) -> u64 {
+    if !params.ft {
+        return 0;
+    }
+    let q_sum = checksum::checksum_u32(codes);
+    match checksum::verify_correct_u32(codes, q_sum) {
+        Correction::Clean => {}
+        Correction::Corrected { index } => {
+            events.push(SdcEvent { kind: SdcKind::BinCorrected, block: bi, index });
+        }
+        Correction::Failed => {
+            events.push(SdcEvent { kind: SdcKind::BinUncorrectable, block: bi, index: 0 });
+        }
+    }
+    checksum::checksum_f32(dcmp.unwrap_or(&[])).sum
+}
+
+/// Ordered-commit fold shared by the overlap drivers: one block's
+/// contribution to the run report. (The hooked sequential driver
+/// accumulates inline — its stats are threaded through the hooks.)
+fn fold_block_report(
+    qb: &QuantizedBlock,
+    stats: &mut CompressStats,
+    events: &mut Vec<SdcEvent>,
+) {
+    match qb.selection.predictor {
+        Predictor::Lorenzo => stats.lorenzo_blocks += 1,
+        Predictor::Regression | Predictor::DualQuant => stats.regression_blocks += 1,
+    }
+    stats.n_unpred += qb.unpred.len();
+    stats.line7_fallbacks += qb.line7_fallbacks;
+    stats.dup_pred_catches += qb.dup_pred_catches;
+    stats.dup_dcmp_catches += qb.dup_dcmp_catches;
+    events.extend(qb.events.iter().copied());
+}
+
+// ---------------------------------------------------------------------------
+// driver 2: 1-worker software pipeline
+// ---------------------------------------------------------------------------
+
+/// The 1-worker per-stage software pipeline (ROADMAP follow-up): the
+/// companion thread runs the protect + histogram stage of block *i* while
+/// the main thread prepares and quantizes block *i+1*; after the global
+/// Huffman table barrier the companion encodes while the main thread
+/// serializes the unpredictable section. Byte-identical to the sequential
+/// driver: the channel preserves block order and every serialized array is
+/// committed in that order.
+fn run_pipelined(
+    data: &[f32],
+    dims: Dims,
+    cfg: &CompressionConfig,
+    params: CoreParams,
+) -> Result<CoreOutput> {
+    let wall = Instant::now();
+    let bound = cfg.error_bound.absolute(data);
+    let q = Quantizer::new(bound, cfg.quant_radius);
+    let grid = BlockGrid::new(dims, cfg.block_size)?;
+    let n_blocks = grid.n_blocks();
+    let n_symbols = q.n_symbols();
+
+    let mut stages = StageTimings { pipelined: true, ..Default::default() };
+    let mut unpred_all: Vec<f32> = Vec::new();
+
+    type Arts = Vec<(QuantizedBlock, u64)>;
+    type ProtectOut = Result<(Arts, HuffmanTable, Vec<BlockPayload>, u64, u64)>;
+    let (arts, table, blocks, unpred_body) = std::thread::scope(
+        |s| -> Result<(Arts, HuffmanTable, Vec<BlockPayload>, Vec<u8>)> {
+            let (tx, rx) = mpsc::sync_channel::<QuantizedBlock>(PIPE_DEPTH);
+
+            // companion thread: protect + histogram, table barrier, encode
+            let companion = s.spawn(move || -> ProtectOut {
+                let mut protect_ns = 0u64;
+                let mut freqs = vec![0u64; n_symbols];
+                let mut arts: Arts = Vec::with_capacity(n_blocks);
+                while let Ok(mut qb) = rx.recv() {
+                    let t = Instant::now();
+                    // blocks arrive in order: this block's index is arts.len()
+                    let dc_sum = protect_stage(
+                        params,
+                        arts.len(),
+                        &mut qb.codes,
+                        qb.dcmp.as_deref(),
+                        &mut qb.events,
+                    );
+                    count_freqs(&mut freqs, &qb.codes)?;
+                    protect_ns += t.elapsed().as_nanos() as u64;
+                    qb.dcmp = None; // the reconstruction is spent; free it early
+                    arts.push((qb, dc_sum));
+                }
+                // table barrier, then the encode stage (overlaps the main
+                // thread's unpredictable-section serialization)
+                let t = Instant::now();
+                let table = HuffmanTable::from_frequencies(&freqs)?;
+                let mut blocks = Vec::with_capacity(arts.len());
+                for (qb, _) in &arts {
+                    blocks.push(encode_block(
+                        &table,
+                        qb.selection.predictor,
+                        qb.selection.coeffs,
+                        qb.unpred.len() as u32,
+                        &qb.codes,
+                    )?);
+                }
+                let encode_ns = t.elapsed().as_nanos() as u64;
+                Ok((arts, table, blocks, protect_ns, encode_ns))
+            });
+
+            // main thread: prepare + quantize per block, in order
+            let mut scratch = Vec::new();
+            for bi in 0..n_blocks {
+                let qb = quantize_stage(&grid, &q, cfg, params, bi, &mut scratch, data);
+                stages.prepare_ns += qb.prepare_ns;
+                stages.quantize_ns += qb.quantize_ns;
+                // the unpredictables are also needed on this side, for the
+                // serialize stage below (tiny for compressible data)
+                unpred_all.extend_from_slice(&qb.unpred);
+                if tx.send(qb).is_err() {
+                    // companion exited early (it owns the error) — stop
+                    break;
+                }
+            }
+            drop(tx);
+
+            // serialize stage, part 1: pre-compress the unpredictable
+            // section while the companion is still encoding
+            let t = Instant::now();
+            let unpred_body = format::compress_unpred_section(&unpred_all, cfg.zstd_level)?;
+            stages.serialize_ns += t.elapsed().as_nanos() as u64;
+
+            let (arts, table, blocks, protect_ns, encode_ns) = match companion.join() {
+                Ok(r) => r?,
+                Err(p) => std::panic::resume_unwind(p),
+            };
+            stages.protect_ns = protect_ns;
+            stages.encode_ns = encode_ns;
+            Ok((arts, table, blocks, unpred_body))
+        },
+    )?;
+
+    // ordered commit of the run report (identical totals to every driver)
+    let mut stats = CompressStats {
+        n_points: data.len(),
+        n_blocks,
+        ..Default::default()
+    };
+    let mut events = Vec::new();
+    let mut dc_sums = Vec::with_capacity(n_blocks);
+    for (qb, dc_sum) in &arts {
+        fold_block_report(qb, &mut stats, &mut events);
+        dc_sums.push(*dc_sum);
+    }
+
+    // serialize stage, part 2
+    let t = Instant::now();
+    let archive = write_archive(
+        cfg,
+        dims,
+        bound,
+        n_blocks,
+        &table,
+        blocks,
+        &unpred_all,
+        if params.ft { Some(&dc_sums) } else { None },
+        Some(unpred_body),
+    )?;
+    stages.serialize_ns += t.elapsed().as_nanos() as u64;
+    stages.wall_ns = wall.elapsed().as_nanos() as u64;
+    stats.compressed_bytes = archive.len();
+    Ok(CoreOutput { archive, stats, events, stages })
+}
+
+// ---------------------------------------------------------------------------
+// driver 3: block-parallel fan-out
+// ---------------------------------------------------------------------------
+
+/// Block-parallel Algorithm 1: the per-block stage chain (prepare →
+/// quantize → protect) fans out over
+/// [`crate::util::threadpool::parallel_map`], which returns results in
+/// block index order; after the table barrier the encode stage fans out
+/// again. Every array the archive serializes (codes, unpredictables,
+/// coefficients, per-block payloads, `sum_dc`) is concatenated in that
+/// order, so the bytes are identical to the sequential driver at any
+/// worker count.
+///
+/// Stage timings are per-block **busy** sums across all workers, so
+/// `busy / wall` on this driver reads as the achieved parallel speedup.
+fn run_parallel(
+    data: &[f32],
+    dims: Dims,
+    cfg: &CompressionConfig,
+    params: CoreParams,
+    workers: usize,
+) -> Result<CoreOutput> {
+    let wall = Instant::now();
+    let mut stages = StageTimings::default();
+    let bound = cfg.error_bound.absolute(data);
+    let q = Quantizer::new(bound, cfg.quant_radius);
+    let grid = BlockGrid::new(dims, cfg.block_size)?;
+    let n_blocks = grid.n_blocks();
+
+    // ---- prepare + quantize + protect fan-out: blocks are independent ----
+    let arts: Vec<(QuantizedBlock, u64, u64)> =
+        crate::util::threadpool::parallel_map(n_blocks, workers, |bi| {
+            let mut scratch = Vec::new();
+            let mut qb = quantize_stage(&grid, &q, cfg, params, bi, &mut scratch, data);
+            let t = Instant::now();
+            let dc_sum =
+                protect_stage(params, bi, &mut qb.codes, qb.dcmp.as_deref(), &mut qb.events);
+            let protect_ns = t.elapsed().as_nanos() as u64;
+            qb.dcmp = None;
+            (qb, dc_sum, protect_ns)
+        });
+
+    // ---- ordered commit: identical layout to the sequential driver ----
+    let mut stats = CompressStats {
+        n_points: data.len(),
+        n_blocks,
+        ..Default::default()
+    };
+    let mut events = Vec::new();
+    for (qb, _, protect_ns) in &arts {
+        fold_block_report(qb, &mut stats, &mut events);
+        stages.prepare_ns += qb.prepare_ns;
+        stages.quantize_ns += qb.quantize_ns;
+        stages.protect_ns += protect_ns;
+    }
+
+    // l.36: global frequency table over all codes, in block order (the
+    // serial tail of the protect stage)
+    let t = Instant::now();
+    let mut freqs = vec![0u64; q.n_symbols()];
+    for (qb, _, _) in &arts {
+        count_freqs(&mut freqs, &qb.codes)?;
+    }
+    stages.protect_ns += t.elapsed().as_nanos() as u64;
+
+    // l.37-38: per-block Huffman encoding against the shared table is
+    // independent again — second fan-out, committed in block order
+    let table = HuffmanTable::from_frequencies(&freqs)?;
+    let encoded: Vec<Result<(BlockPayload, u64)>> =
+        crate::util::threadpool::parallel_map(n_blocks, workers, |bi| {
+            let (qb, _, _) = &arts[bi];
+            let t = Instant::now();
+            let payload = encode_block(
+                &table,
+                qb.selection.predictor,
+                qb.selection.coeffs,
+                qb.unpred.len() as u32,
+                &qb.codes,
+            )?;
+            Ok((payload, t.elapsed().as_nanos() as u64))
+        });
+    let mut blocks = Vec::with_capacity(n_blocks);
+    for r in encoded {
+        let (payload, ns) = r?;
+        stages.encode_ns += ns;
+        blocks.push(payload);
+    }
+
+    let mut unpred = Vec::with_capacity(stats.n_unpred);
+    let mut dc_sums = Vec::with_capacity(n_blocks);
+    for (qb, dc_sum, _) in &arts {
+        unpred.extend_from_slice(&qb.unpred);
+        dc_sums.push(*dc_sum);
+    }
+
+    let t = Instant::now();
+    let archive = write_archive(
+        cfg,
+        dims,
+        bound,
+        n_blocks,
+        &table,
+        blocks,
+        &unpred,
+        if params.ft { Some(&dc_sums) } else { None },
+        None,
+    )?;
+    stages.serialize_ns = t.elapsed().as_nanos() as u64;
+    stages.wall_ns = wall.elapsed().as_nanos() as u64;
+    stats.compressed_bytes = archive.len();
+    Ok(CoreOutput { archive, stats, events, stages })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compressor::{engine, ErrorBound};
+    use crate::data::synthetic;
+
+    fn cfg(e: f64) -> CompressionConfig {
+        CompressionConfig::new(ErrorBound::Abs(e)).with_block_size(8)
+    }
+
+    #[test]
+    fn pipelined_bytes_identical_to_plain_sequential() {
+        let f = synthetic::hurricane_field("t", Dims::d3(9, 14, 14), 21);
+        for ft in [false, true] {
+            let params = CoreParams { protect: ft, ft };
+            let plain = run_sequential(&f.data, f.dims, &cfg(1e-3), params, &mut NoHooks)
+                .unwrap();
+            let piped = run_pipelined(&f.data, f.dims, &cfg(1e-3), params).unwrap();
+            assert_eq!(piped.archive, plain.archive, "ft={ft}");
+            assert!(piped.stages.pipelined);
+            assert_eq!(piped.stats.n_unpred, plain.stats.n_unpred);
+            assert_eq!(piped.stats.lorenzo_blocks, plain.stats.lorenzo_blocks);
+            assert_eq!(piped.stats.line7_fallbacks, plain.stats.line7_fallbacks);
+        }
+    }
+
+    #[test]
+    fn pipelined_is_the_default_one_worker_path() {
+        // big enough to clear MIN_OVERLAP_POINTS
+        let f = synthetic::nyx_velocity("v", Dims::d3(20, 20, 20), 4);
+        let out = engine::compress_with_hooks(&f.data, f.dims, &cfg(1e-3), &mut NoHooks)
+            .unwrap();
+        assert!(out.stages.pipelined, "stage overlap should engage by default");
+        let off = engine::compress_with_hooks(
+            &f.data,
+            f.dims,
+            &cfg(1e-3).with_stage_overlap(false),
+            &mut NoHooks,
+        )
+        .unwrap();
+        assert!(!off.stages.pipelined);
+        assert_eq!(out.archive, off.archive);
+        // tiny fields stay on the plain sequential driver
+        let tiny = synthetic::nyx_velocity("v", Dims::d3(8, 8, 8), 4);
+        let t = engine::compress_with_hooks(&tiny.data, tiny.dims, &cfg(1e-3), &mut NoHooks)
+            .unwrap();
+        assert!(!t.stages.pipelined, "512 points must not pay for a companion thread");
+    }
+
+    #[test]
+    fn stage_timings_cover_the_run() {
+        let f = synthetic::hurricane_field("t", Dims::d3(8, 12, 12), 2);
+        let out = engine::compress_with_hooks(&f.data, f.dims, &cfg(1e-4), &mut NoHooks)
+            .unwrap();
+        let s = &out.stages;
+        assert!(s.wall_ns > 0);
+        assert!(s.quantize_ns > 0);
+        assert!(s.encode_ns > 0);
+        assert!(s.busy_ns() > 0);
+        // the ratio is finite and sane on any driver
+        assert!(s.overlap_ratio() > 0.0 && s.overlap_ratio() < 16.0);
+    }
+
+    #[test]
+    fn codec_dispatch_roundtrips_every_engine() {
+        use crate::inject::Engine;
+        let f = synthetic::hurricane_field("t", Dims::d3(8, 10, 10), 5);
+        for e in [Engine::Classic, Engine::RandomAccess, Engine::FaultTolerant] {
+            let codec = e.codec();
+            assert_eq!(codec.name(), e.name());
+            let bytes = codec.compress(&f.data, f.dims, &cfg(1e-3)).unwrap();
+            let dec = codec.decompress(&bytes, Parallelism::Sequential).unwrap();
+            assert!(crate::analysis::max_abs_err(&f.data, &dec.data) <= 1e-3, "{}", e.name());
+            // capability flags match the format
+            assert_eq!(codec.supports_verify(), e == Engine::FaultTolerant);
+            assert_eq!(codec.supports_region(), e != Engine::Classic);
+        }
+    }
+
+    #[test]
+    fn codec_unsupported_paths_error_cleanly() {
+        use crate::inject::Engine;
+        let f = synthetic::nyx_velocity("v", Dims::d3(6, 6, 6), 3);
+        let classic = Engine::Classic.codec();
+        let bytes = classic.compress(&f.data, f.dims, &cfg(1e-3)).unwrap();
+        assert!(classic.decompress_verified(&bytes, Parallelism::Sequential).is_err());
+        let region = Region { origin: (0, 0, 0), shape: (2, 2, 2) };
+        assert!(classic.decompress_region(&bytes, region, Parallelism::Sequential).is_err());
+        // rsz supports region but not verify
+        let rsz = Engine::RandomAccess.codec();
+        let bytes = rsz.compress(&f.data, f.dims, &cfg(1e-3)).unwrap();
+        assert!(rsz.decompress_verified(&bytes, Parallelism::Sequential).is_err());
+        assert!(rsz
+            .decompress_region(&bytes, region, Parallelism::Sequential)
+            .is_ok());
+    }
+}

@@ -36,6 +36,7 @@ impl RunConfig {
     /// zstd_level = 3
     /// predictor = "auto"         # auto | lorenzo | regression
     /// workers = 1                # block-parallel threads (0 = auto)
+    /// stage_overlap = true       # 1-worker per-stage software pipeline
     /// archive_parity = false     # format-v2 self-healing archives
     /// parity_stripe_len = 512    # bytes per CRC-localized stripe
     /// parity_group_width = 64    # stripes per XOR parity group
@@ -127,6 +128,9 @@ pub fn compression_from_doc(doc: &ConfigDoc, section: &str) -> Result<Compressio
         predictor,
         payload_zstd: doc.bool_or(&key("payload_zstd"), false)?,
         parallelism,
+        // stage_overlap = false pins the plain sequential driver (bytes
+        // are identical either way; this is a measurement knob)
+        stage_overlap: doc.bool_or(&key("stage_overlap"), true)?,
         archive_parity,
     };
     cfg.validate()?;

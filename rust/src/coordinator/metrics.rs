@@ -3,7 +3,7 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Atomic metrics shared across pipeline stages.
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct PipelineMetrics {
     /// Items that entered the pipeline.
     pub items_in: AtomicU64,
@@ -19,6 +19,32 @@ pub struct PipelineMetrics {
     pub write_busy_ns: AtomicU64,
     /// Times a producer blocked on a full queue (backpressure events).
     pub backpressure_events: AtomicU64,
+    /// Smallest per-item block-parallel budget the adaptive split granted
+    /// (`u64::MAX` until the first grant; read through
+    /// [`PipelineMetrics::block_budget_lo`]).
+    pub block_budget_min: AtomicU64,
+    /// Largest per-item block-parallel budget the adaptive split granted.
+    pub block_budget_max: AtomicU64,
+    /// Items whose granted budget differed from the static
+    /// `workers / field_workers` rule (occupancy-driven re-splits).
+    pub budget_resplits: AtomicU64,
+}
+
+impl Default for PipelineMetrics {
+    fn default() -> Self {
+        Self {
+            items_in: AtomicU64::new(0),
+            items_out: AtomicU64::new(0),
+            bytes_in: AtomicU64::new(0),
+            bytes_out: AtomicU64::new(0),
+            compress_busy_ns: AtomicU64::new(0),
+            write_busy_ns: AtomicU64::new(0),
+            backpressure_events: AtomicU64::new(0),
+            block_budget_min: AtomicU64::new(u64::MAX),
+            block_budget_max: AtomicU64::new(0),
+            budget_resplits: AtomicU64::new(0),
+        }
+    }
 }
 
 impl PipelineMetrics {
@@ -42,15 +68,37 @@ impl PipelineMetrics {
         self.bytes_in.load(Ordering::Relaxed) as f64 / (ns as f64 * 1e-9)
     }
 
+    /// Record one adaptive field×block budget decision: `granted` block
+    /// workers for an item vs the `static_rule` split.
+    pub fn record_budget(&self, granted: usize, static_rule: usize) {
+        self.block_budget_min.fetch_min(granted as u64, Ordering::Relaxed);
+        self.block_budget_max.fetch_max(granted as u64, Ordering::Relaxed);
+        if granted != static_rule {
+            self.budget_resplits.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Smallest block budget granted so far (0 = no grants yet).
+    pub fn block_budget_lo(&self) -> u64 {
+        match self.block_budget_min.load(Ordering::Relaxed) {
+            u64::MAX => 0,
+            v => v,
+        }
+    }
+
     /// One-line summary.
     pub fn summary(&self) -> String {
         format!(
-            "items {}/{} ratio {:.2} compress {:.1} MB/s backpressure {}",
+            "items {}/{} ratio {:.2} compress {:.1} MB/s backpressure {} \
+             block-budget {}..{} (resplits {})",
             self.items_out.load(Ordering::Relaxed),
             self.items_in.load(Ordering::Relaxed),
             self.ratio(),
             self.compress_throughput() / 1e6,
             self.backpressure_events.load(Ordering::Relaxed),
+            self.block_budget_lo(),
+            self.block_budget_max.load(Ordering::Relaxed),
+            self.budget_resplits.load(Ordering::Relaxed),
         )
     }
 }
@@ -69,5 +117,17 @@ mod tests {
         let tput = m.compress_throughput();
         assert!((tput - 1e6).abs() / 1e6 < 0.01, "got {tput}");
         assert!(m.summary().contains("ratio 10.00"));
+    }
+
+    #[test]
+    fn budget_split_recording() {
+        let m = PipelineMetrics::default();
+        assert_eq!(m.block_budget_lo(), 0, "no grants yet reads as 0");
+        m.record_budget(2, 2);
+        m.record_budget(4, 2);
+        assert_eq!(m.block_budget_lo(), 2);
+        assert_eq!(m.block_budget_max.load(Ordering::Relaxed), 4);
+        assert_eq!(m.budget_resplits.load(Ordering::Relaxed), 1);
+        assert!(m.summary().contains("block-budget 2..4 (resplits 1)"));
     }
 }

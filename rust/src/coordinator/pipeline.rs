@@ -5,7 +5,7 @@
 //! stage blocks when the writer (PFS) is the bottleneck — exactly the
 //! dynamics the Fig. 8 experiment studies.
 
-use std::sync::atomic::Ordering;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 
 use crate::compressor::CompressionConfig;
@@ -13,7 +13,6 @@ use crate::data::Dims;
 use crate::error::{Error, Result};
 use crate::inject::Engine;
 use crate::util::threadpool::BoundedQueue;
-use crate::{compressor, ft};
 
 use super::metrics::PipelineMetrics;
 
@@ -61,15 +60,23 @@ pub struct PipelineOutput {
 /// Run the pipeline over `items` with a **total thread budget** of
 /// `workers` and a queue depth of `queue_depth` between stages.
 ///
-/// The budget is shared between the two parallelism levels: `f` field-level
-/// workers (one item each) × `workers / f` block-level threads inside each
-/// item's engine (see [`crate::compressor::Parallelism`]). Running both
-/// levels at full width would oversubscribe the machine `workers`-fold, so
-/// the pipeline owns the split: it favors field-level concurrency while
-/// items outnumber workers (weak-scaling regime) and gives the leftover
-/// budget to the block-parallel core — which matters exactly when there are
-/// fewer in-flight items than threads (e.g. one huge field). Any
-/// `cfg.parallelism` set by the caller is overridden inside the pipeline.
+/// The budget is shared between the two parallelism levels: field-level
+/// workers (one item each) × block-level threads inside each item's
+/// engine (see [`crate::compressor::Parallelism`]). Running both levels
+/// at full width would oversubscribe the machine `workers`-fold, so the
+/// pipeline owns the split — and the split is **adaptive**, driven by
+/// observed queue occupancy instead of the old static
+/// `workers / field_workers` rule: when a worker picks an item it grants
+/// it `workers / demand` block threads, where `demand` = items currently
+/// being compressed + items waiting in the input queue. While items
+/// outnumber workers (weak-scaling regime) that reproduces the static
+/// split; as the queue drains — the tail of a batch, or a single huge
+/// field — the leftover budget flows to the block-parallel core instead
+/// of idling. Archives are unaffected: bytes are identical at any worker
+/// count. Any `cfg.parallelism` set by the caller is overridden inside
+/// the pipeline (`stage_overlap` too — its companion thread would escape
+/// the lease accounting); grants are recorded in
+/// [`PipelineMetrics::block_budget_min`]/`max`/`budget_resplits`.
 pub fn run_pipeline(
     items: Vec<WorkItem>,
     engine: Engine,
@@ -82,11 +89,24 @@ pub fn run_pipeline(
     let out_q: Arc<BoundedQueue<DoneItem>> = Arc::new(BoundedQueue::new(queue_depth.max(1)));
     let n_items = items.len();
     let workers = workers.max(1);
-    // split the budget: field-level threads × per-item block-level threads
     let field_workers = workers.min(n_items.max(1));
-    let block_workers = (workers / field_workers.max(1)).max(1);
-    let cfg = cfg.clone().with_workers(block_workers);
-    let cfg = &cfg;
+    // the static rule the adaptive split falls back to under full load,
+    // and the baseline `budget_resplits` counts deviations from
+    let static_block_workers = (workers / field_workers.max(1)).max(1);
+    // items currently inside an engine (the in-flight half of `demand`)
+    let active_items = Arc::new(AtomicUsize::new(0));
+    // items picked up so far — `n_items - started` floors the demand
+    // estimate, so a momentarily-lagging feeder (empty queue at startup)
+    // cannot fool an early pickup into grabbing the whole budget while
+    // eleven more items are about to arrive
+    let started = Arc::new(AtomicUsize::new(0));
+    // block threads currently leased out of the total budget: grants are
+    // capped by what is left. Worst-case transient: a pickup that finds
+    // the budget exhausted still runs with 1 thread (its own), so
+    // oversubscription is bounded by one thread per concurrent pickup —
+    // never by a full-budget grant per worker
+    let leased = Arc::new(AtomicUsize::new(0));
+    let cfg = &cfg.clone();
     let start = std::time::Instant::now();
     let mut archives: Vec<(usize, Vec<u8>)> = Vec::with_capacity(n_items);
     let mut first_error: Option<Error> = None;
@@ -123,6 +143,9 @@ pub fn run_pipeline(
             let cfg = cfg.clone();
             let error_slot = error_slot.clone();
             let done_workers = done_workers.clone();
+            let active_items = active_items.clone();
+            let started = started.clone();
+            let leased = leased.clone();
             s.spawn(move || {
                 // last worker out (panicking or not) closes out_q so the
                 // sink's drain loop always terminates
@@ -133,17 +156,41 @@ pub fn run_pipeline(
                         out_q2.close();
                     }
                 });
+                let codec = engine.codec();
                 while let Some(item) = in_q.pop() {
                     let t = std::time::Instant::now();
-                    let result = match engine {
-                        Engine::Classic => {
-                            compressor::classic::compress(&item.data, item.dims, &cfg)
-                        }
-                        Engine::RandomAccess => {
-                            compressor::engine::compress(&item.data, item.dims, &cfg)
-                        }
-                        Engine::FaultTolerant => ft::compress(&item.data, item.dims, &cfg),
-                    };
+                    // adaptive budget split: demand = items being
+                    // compressed right now + items visibly waiting,
+                    // floored by the items that have not entered the
+                    // pipeline yet. Under full load this reproduces the
+                    // static rule; at the tail (or for a single huge
+                    // field) the freed budget flows to block parallelism
+                    let prev_started = started.fetch_add(1, Ordering::SeqCst);
+                    let remaining = n_items.saturating_sub(prev_started); // incl. this item
+                    let in_flight = active_items.fetch_add(1, Ordering::SeqCst) + 1;
+                    let demand = (in_flight + in_q.len())
+                        .max(remaining.min(field_workers))
+                        .clamp(1, field_workers);
+                    let want = (workers / demand).max(1);
+                    // lease the grant out of the shared budget (≥ 1: the
+                    // field worker itself always runs)
+                    let prev = leased
+                        .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |cur| {
+                            let avail = workers.saturating_sub(cur).max(1);
+                            Some(cur + want.min(avail))
+                        })
+                        .unwrap_or(0);
+                    let granted = want.min(workers.saturating_sub(prev).max(1));
+                    metrics.record_budget(granted, static_block_workers);
+                    // stage overlap is pinned off: a granted=1 item would
+                    // otherwise still spawn a pipeline companion thread,
+                    // busting the lease accounting (granted>1 items take
+                    // the block-parallel driver, where overlap is moot)
+                    let item_cfg =
+                        cfg.clone().with_workers(granted).with_stage_overlap(false);
+                    let result = codec.compress(&item.data, item.dims, &item_cfg);
+                    leased.fetch_sub(granted, Ordering::SeqCst);
+                    active_items.fetch_sub(1, Ordering::SeqCst);
                     match result {
                         Ok(archive) => {
                             metrics.record_compress(
@@ -199,6 +246,7 @@ mod tests {
     use super::*;
     use crate::compressor::ErrorBound;
     use crate::data::synthetic;
+    use crate::ft;
 
     fn items(n: usize) -> Vec<WorkItem> {
         (0..n)
@@ -267,6 +315,33 @@ mod tests {
         for e in [Engine::Classic, Engine::RandomAccess, Engine::FaultTolerant] {
             let out = run_pipeline(items(4), e, &cfg(), 2, 2).unwrap();
             assert_eq!(out.archives.len(), 4, "engine {}", e.name());
+        }
+    }
+
+    #[test]
+    fn adaptive_split_grants_full_budget_to_single_item() {
+        // one item in flight, empty queue → demand 1 → the whole budget
+        // goes to block-level parallelism (the old static rule also got
+        // here, but only because field_workers collapsed to 1)
+        let f = synthetic::hurricane_field("t", Dims::d3(12, 16, 16), 7);
+        let item = vec![WorkItem { id: 0, dims: f.dims, data: f.data }];
+        let out = run_pipeline(item, Engine::FaultTolerant, &cfg(), 4, 2).unwrap();
+        assert_eq!(out.metrics.block_budget_lo(), 4);
+        assert_eq!(out.metrics.block_budget_max.load(Ordering::Relaxed), 4);
+    }
+
+    #[test]
+    fn adaptive_split_stays_in_budget_and_bytes_stay_identical() {
+        let out = run_pipeline(items(12), Engine::RandomAccess, &cfg(), 4, 2).unwrap();
+        let lo = out.metrics.block_budget_lo();
+        let hi = out.metrics.block_budget_max.load(Ordering::Relaxed);
+        assert!(lo >= 1 && hi <= 4, "grants {lo}..{hi} outside the budget");
+        // whatever split each item got, its archive matches the
+        // sequential reference byte for byte
+        for (i, (_, bytes)) in out.archives.iter().enumerate() {
+            let f = synthetic::hurricane_field("t", Dims::d3(6, 10, 10), i as u64);
+            let seq = crate::compressor::engine::compress(&f.data, f.dims, &cfg()).unwrap();
+            assert_eq!(bytes, &seq, "item {i}");
         }
     }
 }

@@ -16,7 +16,6 @@ use crate::error::Result;
 use crate::inject::Engine;
 use crate::io::SimulatedPfs;
 use crate::util::threadpool::parallel_map;
-use crate::{compressor, ft};
 
 /// One point of the weak-scaling sweep.
 #[derive(Debug, Clone)]
@@ -82,8 +81,11 @@ pub fn weak_scaling_run(
     // weak scaling holds constant (and ranks × block workers would
     // oversubscribe the node). Single-field block parallelism is measured
     // separately in the `hotpath` bench.
-    let cfg = &cfg.clone().with_workers(1);
+    // stage overlap is pinned off too: its companion thread would give
+    // every rank a second core and break the one-core-per-rank premise
+    let cfg = &cfg.clone().with_workers(1).with_stage_overlap(false);
     let workers = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    let codec = engine.codec();
     let results: Vec<(f64, usize)> = parallel_map(sample, workers, |r| {
         let (dims, data) = &shards[r];
         // warm once, then take the best of three (jitter suppression — the
@@ -92,11 +94,7 @@ pub fn weak_scaling_run(
         let mut size = 0usize;
         for rep in 0..4 {
             let t = std::time::Instant::now();
-            let archive = match engine {
-                Engine::Classic => compressor::classic::compress(data, *dims, cfg).unwrap(),
-                Engine::RandomAccess => compressor::engine::compress(data, *dims, cfg).unwrap(),
-                Engine::FaultTolerant => ft::compress(data, *dims, cfg).unwrap(),
-            };
+            let archive = codec.compress(data, *dims, cfg).unwrap();
             let secs = t.elapsed().as_secs_f64();
             if rep > 0 {
                 best = best.min(secs);
@@ -112,23 +110,9 @@ pub fn weak_scaling_run(
 
     // measure decompression on rank 0's archive
     let (dims0, data0) = &shards[0];
-    let archive0 = match engine {
-        Engine::Classic => compressor::classic::compress(data0, *dims0, cfg)?,
-        Engine::RandomAccess => compressor::engine::compress(data0, *dims0, cfg)?,
-        Engine::FaultTolerant => ft::compress(data0, *dims0, cfg)?,
-    };
+    let archive0 = codec.compress(data0, *dims0, cfg)?;
     let t = std::time::Instant::now();
-    match engine {
-        Engine::Classic => {
-            compressor::classic::decompress(&archive0)?;
-        }
-        Engine::RandomAccess => {
-            compressor::engine::decompress(&archive0)?;
-        }
-        Engine::FaultTolerant => {
-            ft::decompress(&archive0)?;
-        }
-    }
+    codec.decompress(&archive0, crate::compressor::Parallelism::Sequential)?;
     let decompress_secs = t.elapsed().as_secs_f64();
 
     Ok(WeakScalingPoint {

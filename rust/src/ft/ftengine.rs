@@ -18,10 +18,12 @@
 //! That failure domain belongs to [`crate::ft::parity`] (format v2),
 //! which every decode path here consults before touching the bytes.
 
+use crate::compressor::block::Region;
 use crate::compressor::engine::{
     self, compress_core, decompress_core, CoreOutput, CoreParams, Decompressed, DecompressHooks,
     Hooks, NoDecompressHooks, NoHooks,
 };
+use crate::compressor::stage::BlockCodec;
 use crate::compressor::{CompressionConfig, Parallelism};
 use crate::data::Dims;
 use crate::error::Result;
@@ -29,6 +31,59 @@ use crate::ft::report::DecompressReport;
 
 /// FT core switches (duplication + checksums on).
 pub const FT_PARAMS: CoreParams = CoreParams { protect: true, ft: true };
+
+/// **ftrsz** behind the unified [`BlockCodec`] dispatch: the stage graph
+/// with the protect stage fully on. The only codec whose archives carry
+/// `sum_dc`, so the only one with verified decompression; random access
+/// works exactly as in rsz.
+#[derive(Debug, Default)]
+pub struct FtrszCodec;
+
+/// The `ftrsz` codec singleton ([`crate::inject::Engine::codec`]).
+pub static FTRSZ_CODEC: FtrszCodec = FtrszCodec;
+
+impl BlockCodec for FtrszCodec {
+    fn name(&self) -> &'static str {
+        "ftrsz"
+    }
+
+    fn params(&self) -> CoreParams {
+        FT_PARAMS
+    }
+
+    fn compress(&self, data: &[f32], dims: Dims, cfg: &CompressionConfig) -> Result<Vec<u8>> {
+        compress(data, dims, cfg)
+    }
+
+    fn decompress(&self, bytes: &[u8], par: Parallelism) -> Result<Decompressed> {
+        decompress_with(bytes, par)
+    }
+
+    fn decompress_verified(
+        &self,
+        bytes: &[u8],
+        par: Parallelism,
+    ) -> Result<(Decompressed, DecompressReport)> {
+        decompress_core(bytes, &mut NoDecompressHooks, true, par)
+    }
+
+    fn decompress_region(
+        &self,
+        bytes: &[u8],
+        region: Region,
+        par: Parallelism,
+    ) -> Result<Vec<f32>> {
+        engine::decompress_region_with(bytes, region, par)
+    }
+
+    fn supports_verify(&self) -> bool {
+        true
+    }
+
+    fn supports_region(&self) -> bool {
+        true
+    }
+}
 
 /// Compress with full fault tolerance (Algorithm 1). Honors
 /// `cfg.parallelism`: the per-block checksums are block-local, so

@@ -11,7 +11,9 @@
 //! * [`parity`] — archive-at-rest resilience (format v2): per-stripe
 //!   CRC32 localization plus interleaved XOR parity groups, with
 //!   [`parity::recover`] healing persistent archive corruption that
-//!   re-execution cannot touch;
+//!   re-execution cannot touch, and [`parity::scrub_file`] rewriting
+//!   long-lived archives in place before latent flips outgrow the
+//!   parity budget (CLI `ftsz scrub`);
 //! * [`report`] — SDC event classification for the injection experiments.
 
 pub mod checksum;
@@ -23,5 +25,5 @@ pub mod report;
 pub use ftengine::{
     compress, compress_with_hooks, decompress, decompress_verbose, decompress_with,
 };
-pub use parity::{recover, ParityParams, Recovery};
+pub use parity::{recover, scrub, scrub_file, ParityParams, Recovery, ScrubOutcome};
 pub use report::{DecompressReport, SdcEvent};

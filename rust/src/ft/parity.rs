@@ -260,6 +260,68 @@ fn recover_with(data: &[u8], pre: &format::V2Prelude) -> Result<Recovery> {
     Ok(Recovery::Repaired { bytes: healed, report })
 }
 
+/// Outcome of one [`scrub`]/[`scrub_file`] pass.
+#[derive(Debug, Clone)]
+pub enum ScrubOutcome {
+    /// v1 (or foreign) bytes — no redundancy to scrub against.
+    Unprotected,
+    /// Every CRC verified; nothing rewritten.
+    Clean,
+    /// Damage was found and healed; the stripes listed were rebuilt from
+    /// their parity groups (and, for [`scrub_file`], rewritten in place).
+    Repaired(RecoverReport),
+}
+
+/// Scrub a stored archive: verify it against its v2 redundancy and, when
+/// stripes are damaged, return the healed bytes to write back. The
+/// maintenance counterpart of [`recover`] for long-lived archives —
+/// latent flips are repaired *while the parity budget still covers them*
+/// instead of accumulating toward a two-damaged-stripes-per-group loss.
+///
+/// Returns the outcome plus the healed bytes (`Some` only on repair).
+/// Errors are [`recover`]'s: detected but unrecoverable damage.
+pub fn scrub(data: &[u8]) -> Result<(ScrubOutcome, Option<Vec<u8>>)> {
+    match recover(data)? {
+        Recovery::Unprotected => Ok((ScrubOutcome::Unprotected, None)),
+        Recovery::Clean => Ok((ScrubOutcome::Clean, None)),
+        Recovery::Repaired { bytes, report } => {
+            Ok((ScrubOutcome::Repaired(report), Some(bytes)))
+        }
+    }
+}
+
+/// Scrub an archive file in place: read, [`scrub`], and — only when a
+/// repair happened — atomically rewrite the file (write to a sibling
+/// temporary, fsync it, then rename over the original, so a crash
+/// mid-scrub never leaves a half-written archive).
+pub fn scrub_file(path: &std::path::Path) -> Result<ScrubOutcome> {
+    use std::io::Write;
+    let data = std::fs::read(path)?;
+    let (outcome, healed) = scrub(&data)?;
+    if let Some(bytes) = healed {
+        let mut tmp = path.as_os_str().to_owned();
+        tmp.push(".scrub-tmp");
+        let tmp = std::path::PathBuf::from(tmp);
+        let write_synced = |bytes: &[u8]| -> std::io::Result<()> {
+            let mut f = std::fs::File::create(&tmp)?;
+            f.write_all(bytes)?;
+            // the rename below must never become durable before the data
+            f.sync_all()
+        };
+        if let Err(e) = write_synced(&bytes).and_then(|()| std::fs::rename(&tmp, path)) {
+            let _ = std::fs::remove_file(&tmp);
+            return Err(e.into());
+        }
+        // best-effort directory fsync so the rename itself is durable
+        if let Some(dir) = path.parent().filter(|d| !d.as_os_str().is_empty()) {
+            if let Ok(d) = std::fs::File::open(dir) {
+                let _ = d.sync_all();
+            }
+        }
+    }
+    Ok(outcome)
+}
+
 /// Parse an archive, healing it from its parity redundancy first when it
 /// is damaged. This is the entry point every decode path uses; v1
 /// archives pass straight through to the strict parser.
@@ -433,6 +495,63 @@ mod tests {
         for j in 0..16 {
             assert_eq!(blob0[j], data[j] ^ data[4 * 16 + j]);
         }
+    }
+
+    #[test]
+    fn scrub_heals_a_seeded_burst_in_place() {
+        let (_, good) = sample_v2();
+        let pre = format::read_v2_prelude(&good).unwrap();
+        let stripe = pre.params.stripe_len as usize;
+        // seeded burst inside the protected region, straddling stripes
+        let mut rng = Pcg32::new(41);
+        let start = V2_BODY_START + stripe + rng.index(stripe / 2);
+        let mut bad = good.clone();
+        for b in bad[start..start + 12].iter_mut() {
+            *b ^= 0xA5;
+        }
+        let path = std::env::temp_dir().join(format!(
+            "ftsz-scrub-test-{}-{start}.ftsz",
+            std::process::id()
+        ));
+        std::fs::write(&path, &bad).unwrap();
+        // pass 1: repairs and rewrites in place
+        match scrub_file(&path).unwrap() {
+            ScrubOutcome::Repaired(report) => {
+                assert!(!report.stripes_repaired.is_empty());
+            }
+            other => panic!("expected a repair, got {other:?}"),
+        }
+        assert_eq!(std::fs::read(&path).unwrap(), good, "file not healed in place");
+        // pass 2: now clean, nothing rewritten
+        assert!(matches!(scrub_file(&path).unwrap(), ScrubOutcome::Clean));
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn scrub_reports_v1_bytes_as_unprotected() {
+        let f = synthetic::hurricane_field("t", Dims::d3(6, 8, 8), 5);
+        let cfg = CompressionConfig::new(ErrorBound::Abs(1e-3)).with_block_size(4);
+        let v1 = ft::compress(&f.data, f.dims, &cfg).unwrap();
+        let (outcome, healed) = scrub(&v1).unwrap();
+        assert!(matches!(outcome, ScrubOutcome::Unprotected));
+        assert!(healed.is_none());
+    }
+
+    #[test]
+    fn scrub_refuses_unrecoverable_damage_without_touching_the_file() {
+        let (_, good) = sample_v2();
+        let pre = format::read_v2_prelude(&good).unwrap();
+        let mut bad = good.clone();
+        bad[V2_BODY_START + 3] ^= 0x40; // data
+        bad[pre.section_start(4) + 20] ^= 0x02; // parity
+        let path = std::env::temp_dir().join(format!(
+            "ftsz-scrub-unrec-{}.ftsz",
+            std::process::id()
+        ));
+        std::fs::write(&path, &bad).unwrap();
+        assert!(scrub_file(&path).is_err());
+        assert_eq!(std::fs::read(&path).unwrap(), bad, "file must be untouched");
+        std::fs::remove_file(&path).unwrap();
     }
 
     #[test]

@@ -26,6 +26,17 @@ impl Engine {
             Engine::FaultTolerant => "ftrsz",
         }
     }
+
+    /// The engine as a [`crate::compressor::stage::BlockCodec`] — the one
+    /// dispatch point everything engine-generic (coordinator pipeline,
+    /// CLI, benches, tests) goes through.
+    pub fn codec(&self) -> &'static dyn crate::compressor::stage::BlockCodec {
+        match self {
+            Engine::Classic => &classic::CLASSIC_CODEC,
+            Engine::RandomAccess => &engine::RSZ_CODEC,
+            Engine::FaultTolerant => &crate::ft::ftengine::FTRSZ_CODEC,
+        }
+    }
 }
 
 /// Outcome of one injected run (paper Table 3 columns).

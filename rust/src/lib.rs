@@ -64,6 +64,78 @@
 //! Fault-injection runs (hooked) are also sequential by construction — see
 //! `compressor::engine::Hooks::PARALLEL_SAFE`.
 //!
+//! On the 1-worker path the engine still overlaps work: the stage graph
+//! (next section) runs the protect + histogram stage of block *i* on a
+//! companion thread while block *i+1* is being quantized — with, again,
+//! byte-identical output. `CompressionConfig::with_stage_overlap(false)`
+//! pins the plain sequential driver (a measurement knob, not a semantic
+//! one).
+//!
+//! ## The stage graph: one codec core, three engines
+//!
+//! Every engine is a parameterization of one explicit per-block stage
+//! chain ([`compressor::stage`]):
+//!
+//! ```text
+//! prepare → predict+dual-quant → protect → [table barrier] → encode → serialize
+//! ```
+//!
+//! and one trait, [`compressor::stage::BlockCodec`], is the dispatch
+//! surface everything engine-generic uses — the coordinator pipeline, the
+//! CLI, the benches, the injection harness ([`inject::Engine::codec`]):
+//!
+//! ```no_run
+//! use ftsz::compressor::{CompressionConfig, ErrorBound, Parallelism};
+//! use ftsz::data::Dims;
+//! use ftsz::inject::Engine;
+//!
+//! let field: Vec<f32> = (0..32 * 32 * 32).map(|i| (i as f32).sin()).collect();
+//! let cfg = CompressionConfig::new(ErrorBound::Abs(1e-3));
+//! for engine in [Engine::Classic, Engine::RandomAccess, Engine::FaultTolerant] {
+//!     let codec = engine.codec(); // &'static dyn BlockCodec
+//!     let bytes = codec.compress(&field, Dims::d3(32, 32, 32), &cfg).unwrap();
+//!     let back = codec.decompress(&bytes, Parallelism::Auto).unwrap();
+//!     assert_eq!(back.data.len(), field.len());
+//! }
+//! ```
+//!
+//! Adding an engine is ~50 lines, because the chain and its drivers are
+//! shared; only the switches and the decode delegation are yours to
+//! write:
+//!
+//! ```no_run
+//! use ftsz::compressor::engine::{self, compress_core, CoreParams, Decompressed, NoHooks};
+//! use ftsz::compressor::stage::BlockCodec;
+//! use ftsz::compressor::{CompressionConfig, Parallelism};
+//! use ftsz::data::Dims;
+//! use ftsz::Result;
+//!
+//! /// Checksums on, instruction duplication off: a mid-cost engine.
+//! struct ChecksumOnlyCodec;
+//!
+//! impl BlockCodec for ChecksumOnlyCodec {
+//!     fn name(&self) -> &'static str {
+//!         "csz"
+//!     }
+//!     fn params(&self) -> CoreParams {
+//!         CoreParams { protect: false, ft: true }
+//!     }
+//!     fn compress(&self, data: &[f32], dims: Dims, cfg: &CompressionConfig) -> Result<Vec<u8>> {
+//!         Ok(compress_core(data, dims, cfg, self.params(), &mut NoHooks)?.archive)
+//!     }
+//!     fn decompress(&self, bytes: &[u8], par: Parallelism) -> Result<Decompressed> {
+//!         engine::decompress_with(bytes, par) // per-block format ⇒ free random access
+//!     }
+//!     fn supports_region(&self) -> bool {
+//!         true
+//!     }
+//! }
+//! ```
+//!
+//! The stage split is also the performance contract: per-stage busy times
+//! come back in `CoreOutput::stages` ([`compressor::stage::StageTimings`])
+//! and the `hotpath --json` bench tracks them across PRs.
+//!
 //! ## Self-healing archives (format v2)
 //!
 //! The ABFT layer above protects the *computation*; it cannot repair

@@ -106,7 +106,10 @@ fn compression_config(f: &Flags) -> Result<CompressionConfig> {
     let mut cfg = CompressionConfig::new(error_bound)
         .with_block_size(f.usize_or("block-size", 10)?)
         .with_quant_radius(f.usize_or("quant-radius", 32768)? as u32)
-        .with_parallelism(parallelism_of(f)?);
+        .with_parallelism(parallelism_of(f)?)
+        // measurement knob: pin the plain sequential driver (bytes are
+        // identical either way — see compressor::stage)
+        .with_stage_overlap(!f.has("no-stage-overlap"));
     // --archive-parity [GROUP_WIDTH]: format-v2 self-healing archives;
     // the optional value overrides the stripes-per-parity-group default
     if let Some(v) = f.get("archive-parity") {
@@ -161,6 +164,7 @@ fn run(args: Vec<String>) -> Result<()> {
         "compress" => cmd_compress(&flags),
         "decompress" => cmd_decompress(&flags),
         "info" => cmd_info(&flags),
+        "scrub" => cmd_scrub(&flags),
         "inject" => cmd_inject(&flags),
         "pipeline" => cmd_pipeline(&flags),
         "xla-selftest" => cmd_xla_selftest(),
@@ -182,6 +186,7 @@ fn print_usage() {
          \x20            [--archive-parity [GROUP_WIDTH]  (self-healing format v2)] --out FILE\n\
          \x20 decompress --input FILE --out RAW [--verify] [--workers N] [--region z,y,x,dz,dy,dx]\n\
          \x20 info       --input FILE\n\
+         \x20 scrub      --input FILE [--dry-run]   (heal a v2 archive in place from parity)\n\
          \x20 inject     --engine E --mode a-input|a-bin|b|c --errors N --runs R [--edge N]\n\
          \x20            (mode c: archive flips; [--burst BYTES] [--archive-parity] [--strict])\n\
          \x20 pipeline   [--config FILE] [--ranks N] [--engine E]\n\
@@ -222,11 +227,8 @@ fn cmd_compress(f: &Flags) -> Result<()> {
     let cfg = compression_config(f)?;
     let engine_kind = engine_of(f)?;
     let t = std::time::Instant::now();
-    let bytes = match engine_kind {
-        Engine::Classic => classic::compress(&field.data, field.dims, &cfg)?,
-        Engine::RandomAccess => engine::compress(&field.data, field.dims, &cfg)?,
-        Engine::FaultTolerant => ft::compress(&field.data, field.dims, &cfg)?,
-    };
+    // one dispatch for every engine: the unified BlockCodec
+    let bytes = engine_kind.codec().compress(&field.data, field.dims, &cfg)?;
     let secs = t.elapsed().as_secs_f64();
     let out = f.str_or("out", "out.ftsz");
     std::fs::write(&out, &bytes)?;
@@ -322,6 +324,39 @@ fn cmd_info(f: &Flags) -> Result<()> {
         archive.metas.len() - lorenzo,
         archive.unpred.len(),
     );
+    Ok(())
+}
+
+fn cmd_scrub(f: &Flags) -> Result<()> {
+    let path = std::path::PathBuf::from(f.required("input")?);
+    let outcome = if f.has("dry-run") {
+        // verify + localize without rewriting anything
+        let data = std::fs::read(&path)?;
+        ftsz::ft::parity::scrub(&data)?.0
+    } else {
+        ftsz::ft::parity::scrub_file(&path)?
+    };
+    match outcome {
+        ftsz::ft::ScrubOutcome::Unprotected => {
+            println!(
+                "{}: v1/unprotected archive — nothing to scrub against (recompress with \
+                 --archive-parity to protect it)",
+                path.display()
+            );
+        }
+        ftsz::ft::ScrubOutcome::Clean => {
+            println!("{}: clean — every stripe CRC verified", path.display());
+        }
+        ftsz::ft::ScrubOutcome::Repaired(report) => {
+            println!(
+                "{}: {} stripe(s) rebuilt from parity{}: {:?}",
+                path.display(),
+                report.stripes_repaired.len(),
+                if f.has("dry-run") { " (dry run, file untouched)" } else { ", rewritten in place" },
+                report.stripes_repaired,
+            );
+        }
+    }
     Ok(())
 }
 

@@ -1,0 +1,494 @@
+//! Golden-bytes regression tests for the stage-graph refactor: the
+//! archive format is a contract, and refactoring the codec core must not
+//! move a single bit of it.
+//!
+//! Two layers of proof:
+//!
+//! 1. **Retained pre-refactor reference** (`legacy` module below): a
+//!    faithful copy of the sequential monolith the stage graph replaced —
+//!    rsz/ftrsz (`compress_core` with no-op hooks) and classic — built
+//!    only from the crate's public leaf APIs. Every engine × format
+//!    version × {1, 2, 4} workers must reproduce its bytes exactly.
+//! 2. **Committed fixtures** (`rust/tests/data/*.bin`): blessed archive
+//!    bytes checked in as test data, so *future* refactors are compared
+//!    against bytes produced by *this* PR's code, not just against an
+//!    in-tree reference that might be refactored alongside. Bless with
+//!    `FTSZ_BLESS=1 cargo test --test golden_bytes` and commit the files;
+//!    when a fixture is absent the comparison is skipped with a note (the
+//!    legacy-reference layer still runs).
+
+use ftsz::compressor::{classic, engine, CompressionConfig, ErrorBound};
+use ftsz::data::{synthetic, Dims};
+use ftsz::ft;
+use ftsz::ft::parity::ParityParams;
+
+/// A small but predictor-diverse field: smooth regions (regression wins)
+/// and vortex structure (Lorenzo wins).
+fn field() -> (Vec<f32>, Dims) {
+    let f = synthetic::hurricane_field("t", Dims::d3(6, 10, 10), 3);
+    (f.data, f.dims)
+}
+
+fn cfg(parity: bool) -> CompressionConfig {
+    let c = CompressionConfig::new(ErrorBound::Abs(1e-3)).with_block_size(4);
+    if parity {
+        c.with_archive_parity(ParityParams { stripe_len: 64, group_width: 8 })
+    } else {
+        c
+    }
+}
+
+/// Compare against a committed fixture, or bless it under `FTSZ_BLESS=1`.
+fn fixture_check(name: &str, bytes: &[u8]) {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/data");
+    let path = dir.join(name);
+    if std::env::var("FTSZ_BLESS").ok().as_deref() == Some("1") {
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(&path, bytes).unwrap();
+        return;
+    }
+    match std::fs::read(&path) {
+        Ok(stored) => assert_eq!(
+            stored, bytes,
+            "golden fixture {name} drifted — the archive bytes changed across PRs"
+        ),
+        Err(_) => eprintln!(
+            "note: golden fixture {name} absent; bless with \
+             `FTSZ_BLESS=1 cargo test --test golden_bytes` and commit rust/tests/data"
+        ),
+    }
+}
+
+/// The core assertion: `new` produces `legacy`'s bytes at 1, 2 and 4
+/// workers, for v1 and v2, and the fixture layer agrees.
+fn assert_golden(
+    name: &str,
+    legacy: impl Fn(&[f32], Dims, &CompressionConfig) -> Vec<u8>,
+    new: impl Fn(&[f32], Dims, &CompressionConfig) -> Vec<u8>,
+) {
+    let (data, dims) = field();
+    for parity in [false, true] {
+        let version = if parity { "v2" } else { "v1" };
+        let base = cfg(parity);
+        let want = legacy(&data, dims, &base);
+        for w in [1usize, 2, 4] {
+            let c = base.clone().with_workers(w);
+            let got = new(&data, dims, &c);
+            assert_eq!(
+                got, want,
+                "{name} {version} at {w} workers differs from the pre-refactor reference"
+            );
+            // the pipelined and plain sequential drivers must agree too
+            let c_off = base.clone().with_workers(w).with_stage_overlap(false);
+            assert_eq!(new(&data, dims, &c_off), want, "{name} {version} overlap-off");
+        }
+        fixture_check(&format!("golden_{name}_{version}.bin"), &want);
+    }
+}
+
+#[test]
+fn rsz_bytes_match_pre_refactor_reference() {
+    assert_golden(
+        "rsz",
+        |d, dims, c| legacy::rsz_ftrsz_compress(d, dims, c, false),
+        |d, dims, c| engine::compress(d, dims, c).unwrap(),
+    );
+}
+
+#[test]
+fn ftrsz_bytes_match_pre_refactor_reference() {
+    assert_golden(
+        "ftrsz",
+        |d, dims, c| legacy::rsz_ftrsz_compress(d, dims, c, true),
+        |d, dims, c| ft::compress(d, dims, c).unwrap(),
+    );
+}
+
+#[test]
+fn classic_bytes_match_pre_refactor_reference() {
+    assert_golden(
+        "sz",
+        legacy::classic_compress,
+        |d, dims, c| classic::compress(d, dims, c).unwrap(),
+    );
+}
+
+#[test]
+fn legacy_reference_archives_decode_within_bound() {
+    // sanity for the reference itself: its bytes are real archives
+    let (data, dims) = field();
+    let rsz = legacy::rsz_ftrsz_compress(&data, dims, &cfg(false), false);
+    let dec = engine::decompress(&rsz).unwrap();
+    assert!(ftsz::analysis::max_abs_err(&data, &dec.data) <= 1e-3);
+    let ftr = legacy::rsz_ftrsz_compress(&data, dims, &cfg(true), true);
+    let dec = ft::decompress(&ftr).unwrap();
+    assert!(ftsz::analysis::max_abs_err(&data, &dec.data) <= 1e-3);
+    let sz = legacy::classic_compress(&data, dims, &cfg(false));
+    let dec = classic::decompress(&sz).unwrap();
+    assert!(ftsz::analysis::max_abs_err(&data, &dec.data) <= 1e-3);
+}
+
+/// Faithful copies of the pre-refactor (PR 2) compression paths, with the
+/// injection hooks specialized to no-ops — byte-for-byte the code the
+/// stage graph replaced, built on the crate's public leaf APIs only. Do
+/// not "clean this up": its value is that it does NOT evolve with the
+/// production code.
+mod legacy {
+    use ftsz::compressor::block::BlockGrid;
+    use ftsz::compressor::format::{BlockMeta, BlockPayload, Header, Writer};
+    use ftsz::compressor::huffman::HuffmanTable;
+    use ftsz::compressor::lorenzo::{self, GridView};
+    use ftsz::compressor::quantize::{Quantizer, UNPREDICTABLE};
+    use ftsz::compressor::sampling::{self, Selection};
+    use ftsz::compressor::{regression, CompressionConfig, Predictor};
+    use ftsz::data::Dims;
+    use ftsz::ft::checksum::{self, Correction};
+    use ftsz::ft::duplicate::protected_eval;
+    use ftsz::util::bits::BitWriter;
+
+    /// Pre-refactor `compress_block` (hooks = no-ops).
+    #[allow(clippy::too_many_arguments)]
+    fn compress_block(
+        block: &[f32],
+        shape: (usize, usize, usize),
+        sel: &Selection,
+        q: &Quantizer,
+        protect: bool,
+        codes: &mut Vec<u32>,
+        unpred: &mut Vec<f32>,
+        dcmp_block: &mut Vec<f32>,
+    ) {
+        let (nz, ny, nx) = shape;
+        dcmp_block.clear();
+        dcmp_block.resize(block.len(), 0.0);
+        let mut catches = 0u64;
+        let mut p = 0usize;
+        for z in 0..nz {
+            for y in 0..ny {
+                for x in 0..nx {
+                    let val = block[p];
+                    let pred = match sel.predictor {
+                        Predictor::Lorenzo if z > 0 && y > 0 && x > 0 => {
+                            let (sy, sz) = (nx, ny * nx);
+                            let first = lorenzo::predict_interior_dense(dcmp_block, p, sy, sz);
+                            if protect {
+                                let dup =
+                                    lorenzo::predict_interior_dense_dup(dcmp_block, p, sy, sz);
+                                protected_eval(
+                                    first,
+                                    dup,
+                                    || lorenzo::predict_interior_dense(dcmp_block, p, sy, sz),
+                                    &mut catches,
+                                )
+                            } else {
+                                first
+                            }
+                        }
+                        Predictor::Lorenzo => {
+                            let view = GridView::dense(dcmp_block, shape);
+                            let first = lorenzo::predict(&view, z, y, x);
+                            if protect {
+                                let dup = lorenzo::predict_dup(&view, z, y, x);
+                                protected_eval(
+                                    first,
+                                    dup,
+                                    || lorenzo::predict(&view, z, y, x),
+                                    &mut catches,
+                                )
+                            } else {
+                                first
+                            }
+                        }
+                        Predictor::Regression => {
+                            let c = &sel.coeffs;
+                            let first = regression::predict(c, z, y, x);
+                            if protect {
+                                let dup = regression::predict_dup(c, z, y, x);
+                                protected_eval(
+                                    first,
+                                    dup,
+                                    || regression::predict(c, z, y, x),
+                                    &mut catches,
+                                )
+                            } else {
+                                first
+                            }
+                        }
+                        Predictor::DualQuant => unreachable!("sampling never selects dual-quant"),
+                    };
+                    match q.quantize(val, pred) {
+                        Some((code, dcmp_raw)) => {
+                            let dcmp = if protect {
+                                let dup = q.reconstruct_dup(code, pred);
+                                protected_eval(
+                                    dcmp_raw,
+                                    dup,
+                                    || q.reconstruct(code, pred),
+                                    &mut catches,
+                                )
+                            } else {
+                                dcmp_raw
+                            };
+                            if q.within_bound(val, dcmp) {
+                                codes.push(code);
+                                dcmp_block[p] = dcmp;
+                            } else {
+                                codes.push(UNPREDICTABLE);
+                                unpred.push(val);
+                                dcmp_block[p] = val;
+                            }
+                        }
+                        None => {
+                            codes.push(UNPREDICTABLE);
+                            unpred.push(val);
+                            dcmp_block[p] = val;
+                        }
+                    }
+                    p += 1;
+                }
+            }
+        }
+    }
+
+    /// Pre-refactor sequential `compress_core` (hooks = no-ops):
+    /// `ft = false` is rsz, `ft = true` is ftrsz (protect + checksums).
+    pub fn rsz_ftrsz_compress(
+        data: &[f32],
+        dims: Dims,
+        cfg: &CompressionConfig,
+        ft: bool,
+    ) -> Vec<u8> {
+        let protect = ft;
+        let bound = cfg.error_bound.absolute(data);
+        let q = Quantizer::new(bound, cfg.quant_radius);
+        let grid = BlockGrid::new(dims, cfg.block_size).unwrap();
+        let n_blocks = grid.n_blocks();
+        let input = data.to_vec();
+
+        // Alg.1 l.1-5: per-block input checksums
+        let mut in_sums = Vec::new();
+        let mut scratch = Vec::new();
+        if ft {
+            for bi in 0..n_blocks {
+                grid.extract(&input, bi, &mut scratch);
+                in_sums.push(checksum::checksum_f32(&scratch));
+            }
+        }
+
+        // Alg.1 l.6-9: estimation + selection
+        let mut selections: Vec<Selection> = Vec::with_capacity(n_blocks);
+        for bi in 0..n_blocks {
+            grid.extract(&input, bi, &mut scratch);
+            let shape = grid.extent(bi).shape;
+            let (coeffs, e_lor, e_reg) = sampling::estimate(&scratch, shape);
+            selections.push(sampling::select(&scratch, shape, cfg.predictor, coeffs, e_lor, e_reg));
+        }
+
+        // Alg.1 l.10-32: main loop
+        let mut codes: Vec<u32> = Vec::with_capacity(data.len());
+        let mut code_block_offsets = vec![0usize];
+        let mut unpred: Vec<f32> = Vec::new();
+        let mut unpred_counts: Vec<u32> = Vec::with_capacity(n_blocks);
+        let mut q_sums = Vec::with_capacity(n_blocks);
+        let mut dc_sums: Vec<u64> = Vec::with_capacity(n_blocks);
+        let all_coeffs: Vec<[f32; 4]> = selections.iter().map(|s| s.coeffs).collect();
+        let mut dcmp_block: Vec<f32> = Vec::new();
+        for bi in 0..n_blocks {
+            grid.extract(&input, bi, &mut scratch);
+            let shape = grid.extent(bi).shape;
+            if ft {
+                // l.11: clean input verifies clean — kept for fidelity
+                assert!(matches!(
+                    checksum::verify_correct_f32(&mut scratch, in_sums[bi]),
+                    Correction::Clean
+                ));
+            }
+            let sel = selections[bi];
+            let unpred_before = unpred.len();
+            let code_base = codes.len();
+            compress_block(
+                &scratch,
+                shape,
+                &sel,
+                &q,
+                protect,
+                &mut codes,
+                &mut unpred,
+                &mut dcmp_block,
+            );
+            unpred_counts.push((unpred.len() - unpred_before) as u32);
+            code_block_offsets.push(codes.len());
+            if ft {
+                q_sums.push(checksum::checksum_u32(&codes[code_base..]));
+                dc_sums.push(checksum::checksum_f32(&dcmp_block).sum);
+            }
+        }
+
+        // l.33-35: verify bins before the tree build
+        if ft {
+            for bi in 0..n_blocks {
+                let span = &mut codes[code_block_offsets[bi]..code_block_offsets[bi + 1]];
+                assert!(matches!(
+                    checksum::verify_correct_u32(span, q_sums[bi]),
+                    Correction::Clean
+                ));
+            }
+        }
+
+        // l.36-38: global table + per-block encode
+        let n_symbols = q.n_symbols();
+        let mut freqs = vec![0u64; n_symbols];
+        for &c in &codes {
+            freqs[c as usize] += 1;
+        }
+        let table = HuffmanTable::from_frequencies(&freqs).unwrap();
+        let mut blocks = Vec::with_capacity(n_blocks);
+        for bi in 0..n_blocks {
+            let span = &codes[code_block_offsets[bi]..code_block_offsets[bi + 1]];
+            let mut w = BitWriter::with_capacity(span.len() / 4 + 8);
+            for &c in span {
+                table.encode(&mut w, c).unwrap();
+            }
+            let payload_bits = w.bit_len() as u64;
+            let sel = &selections[bi];
+            blocks.push(BlockPayload {
+                meta: BlockMeta {
+                    predictor: sel.predictor,
+                    coeffs: all_coeffs[bi],
+                    n_unpred: unpred_counts[bi],
+                    payload_bits,
+                },
+                bytes: w.finish(),
+            });
+        }
+
+        Writer {
+            header: Header {
+                flags: 0,
+                dims,
+                block_size: cfg.block_size as u32,
+                quant_radius: cfg.quant_radius,
+                error_bound: bound,
+                n_blocks: n_blocks as u64,
+            },
+            table: &table,
+            blocks,
+            classic_payload: None,
+            unpred: &unpred,
+            sum_dc: if ft { Some(&dc_sums) } else { None },
+            zstd_level: cfg.zstd_level,
+            payload_zstd: cfg.payload_zstd,
+            parity: cfg.archive_parity,
+            unpred_body: None,
+        }
+        .write()
+        .unwrap()
+    }
+
+    /// Pre-refactor `classic::compress` (hooks = no-ops).
+    pub fn classic_compress(data: &[f32], dims: Dims, cfg: &CompressionConfig) -> Vec<u8> {
+        let bound = cfg.error_bound.absolute(data);
+        let q = Quantizer::new(bound, cfg.quant_radius);
+        let grid = BlockGrid::new(dims, cfg.block_size).unwrap();
+        let n_blocks = grid.n_blocks();
+        let shape3 = dims.as_3d();
+        let input = data.to_vec();
+
+        let mut selections: Vec<Selection> = Vec::with_capacity(n_blocks);
+        let mut scratch = Vec::new();
+        for bi in 0..n_blocks {
+            grid.extract(&input, bi, &mut scratch);
+            let shape = grid.extent(bi).shape;
+            let (coeffs, e_lor, e_reg) = sampling::estimate(&scratch, shape);
+            selections.push(sampling::select(&scratch, shape, cfg.predictor, coeffs, e_lor, e_reg));
+        }
+
+        let mut dcmp = vec![0.0f32; data.len()];
+        let mut codes: Vec<u32> = Vec::with_capacity(data.len());
+        let mut unpred: Vec<f32> = Vec::new();
+        let mut metas: Vec<BlockMeta> = Vec::with_capacity(n_blocks);
+        let (_, ry, rx) = shape3;
+        for bi in 0..n_blocks {
+            let e = grid.extent(bi);
+            let sel = selections[bi];
+            let unpred_before = unpred.len();
+            for z in 0..e.shape.0 {
+                for y in 0..e.shape.1 {
+                    for x in 0..e.shape.2 {
+                        let (gz, gy, gx) = (e.origin.0 + z, e.origin.1 + y, e.origin.2 + x);
+                        let gidx = (gz * ry + gy) * rx + gx;
+                        let val = input[gidx];
+                        let pred = match sel.predictor {
+                            Predictor::Lorenzo => {
+                                let view = GridView::dense(&dcmp, shape3);
+                                lorenzo::predict(&view, gz, gy, gx)
+                            }
+                            Predictor::Regression => regression::predict(&sel.coeffs, z, y, x),
+                            Predictor::DualQuant => {
+                                unreachable!("classic never selects dual-quant")
+                            }
+                        };
+                        match q.quantize(val, pred) {
+                            Some((code, d)) => {
+                                if q.within_bound(val, d) {
+                                    codes.push(code);
+                                    dcmp[gidx] = d;
+                                } else {
+                                    codes.push(UNPREDICTABLE);
+                                    unpred.push(val);
+                                    dcmp[gidx] = val;
+                                }
+                            }
+                            None => {
+                                codes.push(UNPREDICTABLE);
+                                unpred.push(val);
+                                dcmp[gidx] = val;
+                            }
+                        }
+                    }
+                }
+            }
+            metas.push(BlockMeta {
+                predictor: sel.predictor,
+                coeffs: sel.coeffs,
+                n_unpred: (unpred.len() - unpred_before) as u32,
+                payload_bits: 0,
+            });
+        }
+
+        let n_symbols = q.n_symbols();
+        let mut freqs = vec![0u64; n_symbols];
+        for &c in &codes {
+            freqs[c as usize] += 1;
+        }
+        let table = HuffmanTable::from_frequencies(&freqs).unwrap();
+        let mut w = BitWriter::with_capacity(codes.len() / 4 + 8);
+        for &c in &codes {
+            table.encode(&mut w, c).unwrap();
+        }
+        metas[0].payload_bits = w.bit_len() as u64;
+        let stream = w.finish();
+
+        Writer {
+            header: Header {
+                flags: 0,
+                dims,
+                block_size: cfg.block_size as u32,
+                quant_radius: cfg.quant_radius,
+                error_bound: bound,
+                n_blocks: n_blocks as u64,
+            },
+            table: &table,
+            blocks: vec![],
+            classic_payload: Some((metas, stream)),
+            unpred: &unpred,
+            sum_dc: None,
+            zstd_level: cfg.zstd_level,
+            payload_zstd: false,
+            parity: cfg.archive_parity,
+            unpred_body: None,
+        }
+        .write()
+        .unwrap()
+    }
+}

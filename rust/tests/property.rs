@@ -276,6 +276,144 @@ fn prop_parallel_and_sequential_byte_identical_all_engines() {
 }
 
 #[test]
+fn prop_unified_codec_dispatch_all_engines() {
+    // The stage-graph contract: every engine behind the one BlockCodec
+    // dispatch, exercised end to end — compress, natural decompress,
+    // verified decompress, and region decode — for random shapes,
+    // {1, 2, 4} workers, and parity (format v2) on/off. Bytes and bits
+    // must be independent of the worker count; unsupported paths must be
+    // clean errors, never panics or silent misdecodes.
+    use ftsz::ft::parity::ParityParams;
+    use ftsz::inject::Engine;
+    forall("unified BlockCodec dispatch", 12, |g| {
+        let dims = Dims::d3(g.usize_in(2, 6), g.usize_in(2, 10), g.usize_in(2, 10));
+        let mut data = Vec::with_capacity(dims.len());
+        let mut v = g.f64_in(-5.0, 5.0);
+        for _ in 0..dims.len() {
+            v += g.f64_in(-0.3, 0.3);
+            data.push(v as f32);
+        }
+        let mut cfg =
+            CompressionConfig::new(ErrorBound::Abs(1e-3)).with_block_size(g.usize_in(2, 8));
+        let parity = g.usize_in(0, 1) == 1;
+        if parity {
+            cfg = cfg.with_archive_parity(ParityParams { stripe_len: 64, group_width: 8 });
+        }
+        let (d, r, c) = dims.as_3d();
+        let oz = g.usize_in(0, d - 1);
+        let oy = g.usize_in(0, r - 1);
+        let ox = g.usize_in(0, c - 1);
+        let region = Region {
+            origin: (oz, oy, ox),
+            shape: (g.usize_in(1, d - oz), g.usize_in(1, r - oy), g.usize_in(1, c - ox)),
+        };
+        for e in [Engine::Classic, Engine::RandomAccess, Engine::FaultTolerant] {
+            let codec = e.codec();
+            let base = codec
+                .compress(&data, dims, &cfg)
+                .map_err(|x| format!("{} compress: {x}", e.name()))?;
+            let full = codec
+                .decompress(&base, Parallelism::Sequential)
+                .map_err(|x| format!("{} decompress: {x}", e.name()))?;
+            if analysis::max_abs_err(&data, &full.data) > 1e-3 {
+                return Err(format!("{} bound violated (parity={parity})", e.name()));
+            }
+            for w in [1usize, 2, 4] {
+                let par = Parallelism::Fixed(w);
+                // compression bytes independent of the worker count
+                let b = codec
+                    .compress(&data, dims, &cfg.clone().with_workers(w))
+                    .map_err(|x| x.to_string())?;
+                if b != base {
+                    return Err(format!("{} bytes differ at {w} workers", e.name()));
+                }
+                // natural decode bitwise stable across worker counts
+                let dw = codec.decompress(&base, par).map_err(|x| x.to_string())?;
+                if !dw.data.iter().zip(&full.data).all(|(a, b)| a.to_bits() == b.to_bits()) {
+                    return Err(format!("{} decode differs at {w} workers", e.name()));
+                }
+                // verified decompression: supported ⇔ ftrsz, clean either way
+                match codec.decompress_verified(&base, par) {
+                    Ok((dv, report)) => {
+                        if !codec.supports_verify() {
+                            return Err(format!("{} verified but unsupported", e.name()));
+                        }
+                        if !report.is_clean() {
+                            return Err(format!("{} clean run reported events", e.name()));
+                        }
+                        if !dv.data.iter().zip(&full.data).all(|(a, b)| a.to_bits() == b.to_bits())
+                        {
+                            return Err(format!("{} verify changed bits (w={w})", e.name()));
+                        }
+                    }
+                    Err(_) if !codec.supports_verify() => {}
+                    Err(x) => return Err(format!("{} verify failed: {x}", e.name())),
+                }
+                // region decode: supported ⇔ rsz/ftrsz, matches the full
+                // decode slice bitwise
+                match codec.decompress_region(&base, region, par) {
+                    Ok(got) => {
+                        if !codec.supports_region() {
+                            return Err(format!("{} region but unsupported", e.name()));
+                        }
+                        let mut idx = 0;
+                        for z in 0..region.shape.0 {
+                            for y in 0..region.shape.1 {
+                                for x in 0..region.shape.2 {
+                                    let gi = ((oz + z) * r + oy + y) * c + ox + x;
+                                    if got[idx].to_bits() != full.data[gi].to_bits() {
+                                        return Err(format!(
+                                            "{} region mismatch at {z},{y},{x} (w={w})",
+                                            e.name()
+                                        ));
+                                    }
+                                    idx += 1;
+                                }
+                            }
+                        }
+                    }
+                    Err(_) if !codec.supports_region() => {}
+                    Err(x) => return Err(format!("{} region failed: {x}", e.name())),
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_stage_overlap_never_changes_bytes() {
+    // the pipelined 1-worker driver vs the plain sequential driver: same
+    // bytes for every engine/shape/block size (rsz + ftrsz take the
+    // pipeline; classic must simply ignore the knob)
+    forall("stage overlap off == on (bytes)", 15, |g| {
+        // span the MIN_OVERLAP_POINTS gate: small cases take the plain
+        // driver on both sides, large ones genuinely exercise the pipeline
+        let n = g.usize_in(512, 8000);
+        let data = g.vec_f32_smooth(n);
+        let dims = Dims::d1(data.len());
+        let on = CompressionConfig::new(ErrorBound::Abs(1e-3)).with_block_size(g.usize_in(2, 10));
+        let off = on.clone().with_stage_overlap(false);
+        let a = engine::compress(&data, dims, &on).map_err(|e| e.to_string())?;
+        let b = engine::compress(&data, dims, &off).map_err(|e| e.to_string())?;
+        if a != b {
+            return Err("rsz pipelined bytes differ".into());
+        }
+        let a = ftsz::ft::compress(&data, dims, &on).map_err(|e| e.to_string())?;
+        let b = ftsz::ft::compress(&data, dims, &off).map_err(|e| e.to_string())?;
+        if a != b {
+            return Err("ftrsz pipelined bytes differ".into());
+        }
+        let a = classic::compress(&data, dims, &on).map_err(|e| e.to_string())?;
+        let b = classic::compress(&data, dims, &off).map_err(|e| e.to_string())?;
+        if a != b {
+            return Err("classic changed under the stage-overlap knob".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_corrupted_archives_never_panic() {
     // robustness: arbitrary single-byte corruption of a valid archive must
     // produce Ok or a clean Err — never a panic (catch via prop harness)
