@@ -11,6 +11,7 @@
 mod common;
 
 use common::*;
+use ftsz::compressor::destage::{self, DecodeDriver, DecodeStage};
 use ftsz::compressor::huffman::HuffmanTable;
 use ftsz::compressor::stage::BlockStage;
 use ftsz::compressor::{dualquant, engine, CompressionConfig, ErrorBound, Parallelism};
@@ -193,7 +194,14 @@ fn main() {
         );
         m.put(&format!("scaling.ftrsz.w{w}_mbps"), mbps(bytes_in, sw));
     }
-    let (sd1, _) = time_median(reps, || engine::decompress(&base).expect("decode w1"));
+    // w1 baselines pin the plain sequential decode driver so the scaling
+    // ratio (and the EXPERIMENTS.md trend columns) keep meaning one
+    // thread — the default 1-worker path is the pipelined driver, which
+    // the dstage section below measures explicitly
+    let (sd1, _) = time_median(reps, || {
+        destage::decode_with_driver(&base, false, None, DecodeDriver::Sequential)
+            .expect("decode w1")
+    });
     let (sd4, _) = time_median(reps, || {
         engine::decompress_with(&base, Parallelism::Fixed(4)).expect("decode w4")
     });
@@ -206,7 +214,10 @@ fn main() {
     );
     m.put("scaling.rsz_decode.w1_mbps", mbps(bytes_in, sd1));
     m.put("scaling.rsz_decode.w4_mbps", mbps(bytes_in, sd4));
-    let (sv1, _) = time_median(reps, || ft::decompress(&fbase).expect("verify w1"));
+    let (sv1, _) = time_median(reps, || {
+        destage::decode_with_driver(&fbase, true, None, DecodeDriver::Sequential)
+            .expect("verify w1")
+    });
     let (sv4, _) = time_median(reps, || {
         ft::decompress_with(&fbase, Parallelism::Fixed(4)).expect("verify w4")
     });
@@ -219,6 +230,100 @@ fn main() {
     );
     m.put("scaling.ftrsz_verify.w1_mbps", mbps(bytes_in, sv1));
     m.put("scaling.ftrsz_verify.w4_mbps", mbps(bytes_in, sv4));
+
+    // decode stage graph (destage): serial vs pipelined 1-worker driver,
+    // per-stage busy times; --check gates a >10% pipelined regression the
+    // same way it does for the compress-side pipeline
+    println!("--- decode stage graph (dstage): serial vs pipelined 1-worker ---");
+    for (name, archive, verify) in
+        [("rsz", &base, false), ("ftrsz", &fbase, true)]
+    {
+        let (t_serial, out_serial) = time_median(reps, || {
+            destage::decode_with_driver(archive, verify, None, DecodeDriver::Sequential)
+                .expect("decode serial")
+        });
+        let (t_piped, out_piped) = time_median(reps, || {
+            destage::decode_with_driver(archive, verify, None, DecodeDriver::Pipelined)
+                .expect("decode pipelined")
+        });
+        assert_eq!(
+            out_piped.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            out_serial.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            "{name}: decode pipelining must not change a single bit"
+        );
+        assert!(out_piped.timings.pipelined && !out_serial.timings.pipelined);
+        let speedup = t_serial / t_piped;
+        let overlap = out_piped.timings.overlap_ratio();
+        println!(
+            "{:<22} serial {:>8.1} MB/s -> pipelined {:>8.1} MB/s ({:.2}x, stage busy/wall {:.2})",
+            format!("{name} decode 1-worker"),
+            mbps(bytes_in, t_serial),
+            mbps(bytes_in, t_piped),
+            speedup,
+            overlap,
+        );
+        for stage in DecodeStage::ALL {
+            println!(
+                "  {:<20} serial {:>9} ns   pipelined {:>9} ns",
+                stage.name(),
+                out_serial.timings.ns(stage),
+                out_piped.timings.ns(stage)
+            );
+            m.put(
+                &format!("dstage.{name}.serial.{}_ns", stage.name()),
+                out_serial.timings.ns(stage) as f64,
+            );
+            m.put(
+                &format!("dstage.{name}.pipelined.{}_ns", stage.name()),
+                out_piped.timings.ns(stage) as f64,
+            );
+        }
+        m.put(&format!("dstage.{name}.serial.wall_ns"), out_serial.timings.wall_ns as f64);
+        m.put(&format!("dstage.{name}.pipelined.wall_ns"), out_piped.timings.wall_ns as f64);
+        m.put(&format!("dstage.{name}.serial_mbps"), mbps(bytes_in, t_serial));
+        m.put(&format!("dstage.{name}.pipelined_mbps"), mbps(bytes_in, t_piped));
+        m.put(&format!("dstage.{name}.speedup"), speedup);
+        m.put(&format!("dstage.{name}.overlap_ratio"), overlap);
+        // same sub-ms noise guard as the compress-side gate
+        if check && t_serial >= 1e-3 && t_piped > t_serial * 1.10 {
+            if json {
+                m.write_json("BENCH_hotpath.json");
+            }
+            eprintln!(
+                "FAIL: {name} pipelined 1-worker decode regressed {:.1}% vs the \
+                 sequential driver (gate: 10%)",
+                (t_piped / t_serial - 1.0) * 100.0
+            );
+            std::process::exit(1);
+        }
+    }
+    // verified region decode through the same chain (the newly supported
+    // scenario): quarter-volume sub-cube, sequential vs 4 workers
+    {
+        let (d, r, c) = f.dims.as_3d();
+        let region = ftsz::compressor::block::Region {
+            origin: (d / 4, r / 4, c / 4),
+            shape: (d / 2, r / 2, c / 2),
+        };
+        let region_bytes = region.len() * 4;
+        let (s_rv1, _) = time_median(reps, || {
+            ftsz::ft::decompress_region_verified(&fbase, region, Parallelism::Sequential)
+                .expect("verified region w1")
+        });
+        let (s_rv4, _) = time_median(reps, || {
+            ftsz::ft::decompress_region_verified(&fbase, region, Parallelism::Fixed(4))
+                .expect("verified region w4")
+        });
+        println!(
+            "{:<22} {:>8.1} MB/s -> {:>8.1} MB/s ({:.2}x @ 4 workers)",
+            "verified region decode",
+            mbps(region_bytes, s_rv1),
+            mbps(region_bytes, s_rv4),
+            s_rv1 / s_rv4
+        );
+        m.put("dstage.region_verified.w1_mbps", mbps(region_bytes, s_rv1));
+        m.put("dstage.region_verified.w4_mbps", mbps(region_bytes, s_rv4));
+    }
 
     // archive parity (format v2): what self-healing costs at the default
     // geometry — targets: <3% compressed size, <5% compress time

@@ -208,7 +208,22 @@ impl BlockCodec for ClassicCodec {
 
 /// Decompress a classic archive (healing v2 archives from parity first).
 pub fn decompress(bytes: &[u8]) -> Result<Decompressed> {
+    Ok(decompress_reported(bytes)?.0)
+}
+
+/// [`decompress`] plus the run report: classic archives have no `sum_dc`
+/// (no Algorithm 2), but v2 parity healing still happens in the recover
+/// stage and its stripe repairs are surfaced here
+/// (`report.stripes_repaired`) — the same visibility the independent-block
+/// engines get from [`super::destage`].
+pub fn decompress_reported(
+    bytes: &[u8],
+) -> Result<(Decompressed, crate::ft::report::DecompressReport)> {
     let archive = crate::ft::parity::parse_recovering(bytes)?;
+    let mut report = crate::ft::report::DecompressReport::default();
+    if let Some(rec) = &archive.recovered {
+        report.stripes_repaired = rec.stripes_repaired.clone();
+    }
     if !archive.header.is_classic() {
         return Err(Error::InvalidArgument(
             "not a classic archive: use compressor::engine::decompress".into(),
@@ -268,7 +283,10 @@ pub fn decompress(bytes: &[u8]) -> Result<Decompressed> {
             }
         }
     }
-    Ok(Decompressed { data: out, dims, error_bound: archive.header.error_bound })
+    Ok((
+        Decompressed { data: out, dims, error_bound: archive.header.error_bound },
+        report,
+    ))
 }
 
 #[cfg(test)]

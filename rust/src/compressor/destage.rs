@@ -1,0 +1,782 @@
+//! The decode-side stage graph: one explicit per-block decode chain shared
+//! by every random-access decode path, plus the drivers that schedule it.
+//!
+//! Mirror of [`super::stage`] for the other direction of the codec. The
+//! paper's Algorithm 2 makes each block of a random-access archive an
+//! independent chain of stages
+//!
+//! ```text
+//! recover  (parity-heal the stored bytes + voted parse/open — archive-wide)
+//!   → decode  (Huffman decode → dequant → predict-reconstruct, per block)
+//!   → verify  (sum_dc checksum check + re-execution repair — ft mode)
+//!   → place   (scatter into the full array, or copy into a region buffer)
+//! ```
+//!
+//! and this module is where that chain lives **once**. Full decompression,
+//! verified decompression (Algorithm 2), verbose/hooked injection decode,
+//! unverified ablation decode and random-access region decode (paper §5.1)
+//! are all the same core parameterized by a `DecodeSink` (full-array
+//! scatter vs. region copy), a work list (all blocks vs. the blocks
+//! intersecting the region), and the `verify` switch. In particular the
+//! Algorithm 2 verify/re-execute loop body exists exactly once
+//! (`verify_stage`), and its outcome is folded into the
+//! [`DecompressReport`] exactly once (`fold_block_outcome`) — there is no
+//! second copy to drift.
+//!
+//! Three drivers schedule the chain — all producing **bitwise-identical
+//! output**, because blocks are committed to the sink in work-list order no
+//! matter which driver ran:
+//!
+//! * `run_sequential`: one thread, decode hook points live — the
+//!   reference path and the only one fault-injection runs may take (decode
+//!   hooks are stateful `&mut` machines tied to the sequential block
+//!   order, exactly like the compression side);
+//! * `run_pipelined`: the 1-worker software pipeline — a companion
+//!   thread runs the checksum verify (and, rarely, the re-execution
+//!   repair) and the place stage of block *i* while the main thread
+//!   decodes block *i+1*. The recover stage (parity heal + section-CRC
+//!   validation + voted parse) is a true prerequisite of every block
+//!   decode — nothing can read the bytes before they are proven or healed
+//!   — so, like the compress side's global-Huffman-table barrier, the
+//!   pipeline overlaps everything *after* it and the recover pass itself
+//!   stays on the critical path;
+//! * `run_parallel`: the block-parallel fan-out over
+//!   [`crate::util::threadpool::parallel_map`] (workers > 1): decode,
+//!   verify and re-execution are all block-local, so they fan out
+//!   together.
+//!
+//! [`DecodeTimings`] records per-stage busy time so the `hotpath` bench
+//! can show the overlap (`dstage.*` keys; busy/wall > 1 on the pipelined
+//! path) and gate regressions.
+//!
+//! The domain split to keep in mind (see [`crate::ft::parity`]): the
+//! verify stage's re-execution heals *transient decode-time* faults — it
+//! re-reads the same stored bytes, so a fault that lives in the bytes
+//! deterministically reproduces. Persistent at-rest damage is the recover
+//! stage's job; both repairs are surfaced separately in the report
+//! (`blocks_reexecuted` vs. `stripes_repaired`).
+
+use std::sync::mpsc;
+use std::time::Instant;
+
+use super::block::{BlockGrid, Region};
+use super::engine::{DecompressHooks, NoDecompressHooks};
+use super::format::Archive;
+use super::lorenzo::{self, GridView};
+use super::quantize::{Quantizer, UNPREDICTABLE};
+use super::regression;
+use super::{Parallelism, Predictor};
+use crate::data::Dims;
+use crate::error::{Error, Result};
+use crate::ft::checksum;
+use crate::ft::report::{DecompressReport, SdcEvent, SdcKind};
+use crate::util::bits::BitReader;
+
+/// The stages of the per-block decode chain, in execution order. Used as
+/// timing keys by [`DecodeTimings`] and as the vocabulary of the module
+/// docs; the recover stage is archive-wide and precedes every block.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DecodeStage {
+    /// Parity heal + section-CRC validation + voted parse/open.
+    Recover,
+    /// Huffman decode → dequant → predict-reconstruct (one block).
+    Decode,
+    /// `sum_dc` checksum check + re-execution repair (ft mode).
+    Verify,
+    /// Scatter into the full array / copy into the region buffer.
+    Place,
+}
+
+impl DecodeStage {
+    /// All stages, in chain order.
+    pub const ALL: [DecodeStage; 4] = [
+        DecodeStage::Recover,
+        DecodeStage::Decode,
+        DecodeStage::Verify,
+        DecodeStage::Place,
+    ];
+
+    /// Stable lowercase name (bench JSON keys, `dstage.*`).
+    pub fn name(&self) -> &'static str {
+        match self {
+            DecodeStage::Recover => "recover",
+            DecodeStage::Decode => "decode",
+            DecodeStage::Verify => "verify",
+            DecodeStage::Place => "place",
+        }
+    }
+}
+
+/// Per-stage busy time of one decompression run. On the pipelined driver
+/// the verify + place stages run on a companion thread concurrently with
+/// the decode stage, so `busy_ns() > wall_ns` is the direct evidence of
+/// overlap; on the one-thread sequential driver the two agree up to
+/// unattributed glue.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct DecodeTimings {
+    /// Busy nanoseconds of the recover (heal + parse) stage.
+    pub recover_ns: u64,
+    /// Busy nanoseconds of the per-block decode stage.
+    pub decode_ns: u64,
+    /// Busy nanoseconds of the verify (+ re-execution) stage.
+    pub verify_ns: u64,
+    /// Busy nanoseconds of the place stage.
+    pub place_ns: u64,
+    /// Wall-clock nanoseconds of the whole run.
+    pub wall_ns: u64,
+    /// True when the run used the software-pipelined driver.
+    pub pipelined: bool,
+}
+
+impl DecodeTimings {
+    /// Busy time of one stage.
+    pub fn ns(&self, stage: DecodeStage) -> u64 {
+        match stage {
+            DecodeStage::Recover => self.recover_ns,
+            DecodeStage::Decode => self.decode_ns,
+            DecodeStage::Verify => self.verify_ns,
+            DecodeStage::Place => self.place_ns,
+        }
+    }
+
+    /// Total busy time across all stages.
+    pub fn busy_ns(&self) -> u64 {
+        DecodeStage::ALL.iter().map(|s| self.ns(*s)).sum()
+    }
+
+    /// Busy/wall ratio: > 1.0 means stages genuinely overlapped.
+    pub fn overlap_ratio(&self) -> f64 {
+        self.busy_ns() as f64 / self.wall_ns.max(1) as f64
+    }
+}
+
+/// Which driver schedules the decode chain. [`decode_with_driver`] pins
+/// one explicitly (benches, golden tests); the library entry points pick
+/// automatically from the [`Parallelism`] knob and the hook contract.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DecodeDriver {
+    /// One-thread reference driver (decode hook points live).
+    Sequential,
+    /// 1-worker software pipeline: verify + place of block *i* overlap the
+    /// decode of block *i+1*.
+    Pipelined,
+    /// Block-parallel fan-out with this many workers.
+    Parallel(usize),
+}
+
+/// Output of one run of the decode graph.
+#[derive(Debug)]
+pub struct DecodeOutput {
+    /// Decoded values: the whole dataset for a full decode, the dense
+    /// region buffer for a region decode.
+    pub data: Vec<f32>,
+    /// Shape of `data` (the archive dims, or the region shape).
+    pub dims: Dims,
+    /// Absolute error bound recorded in the archive.
+    pub error_bound: f64,
+    /// What the FT machinery observed/repaired.
+    pub report: DecompressReport,
+    /// Per-stage busy times of the run.
+    pub timings: DecodeTimings,
+}
+
+// ---------------------------------------------------------------------------
+// recover stage: parse + sanity-check (archive-wide)
+// ---------------------------------------------------------------------------
+
+/// Parse + sanity-check an archive against the independent-block engines.
+/// Parity-protected (v2) archives are verified against their CRCs first
+/// and healed from their parity groups if damaged (`archive.recovered`
+/// records repairs).
+pub(crate) fn open(bytes: &[u8]) -> Result<(Archive, BlockGrid, Quantizer)> {
+    let archive = crate::ft::parity::parse_recovering(bytes)?;
+    if archive.header.is_classic() {
+        return Err(Error::InvalidArgument(
+            "classic archive: use compressor::classic::decompress".into(),
+        ));
+    }
+    let grid = BlockGrid::new(archive.header.dims, archive.header.block_size as usize)?;
+    if grid.n_blocks() as u64 != archive.header.n_blocks {
+        return Err(Error::Format("block count mismatch".into()));
+    }
+    let q = Quantizer::new(archive.header.error_bound, archive.header.quant_radius);
+    Ok((archive, grid, q))
+}
+
+// ---------------------------------------------------------------------------
+// decode stage: one block
+// ---------------------------------------------------------------------------
+
+/// Decode one block into `out_block` (dense, block-local): Huffman decode
+/// against the global table, dequant, predict-reconstruct. `apply_hooks`
+/// is false on the re-execution pass — the second evaluation never repeats
+/// a transient fault.
+pub(crate) fn decode_block<H: DecompressHooks>(
+    archive: &Archive,
+    grid: &BlockGrid,
+    q: &Quantizer,
+    idx: usize,
+    hooks: &mut H,
+    apply_hooks: bool,
+    out_block: &mut Vec<f32>,
+) -> Result<()> {
+    let meta = &archive.metas[idx];
+    let e = grid.extent(idx);
+    let shape = e.shape;
+    let n = e.len();
+    if meta.predictor == Predictor::DualQuant {
+        // data-parallel path: whole-block inverse transform (no per-point
+        // hooks — the dual-quant path is guarded by checksums, not
+        // instruction duplication)
+        return super::offload::decode_block(
+            &archive.table,
+            archive.block_payload(idx),
+            meta.payload_bits,
+            archive.block_unpred(idx),
+            shape,
+            archive.header.quant_radius as i64,
+            archive.header.error_bound,
+            out_block,
+        );
+    }
+    out_block.clear();
+    out_block.resize(n, 0.0);
+    let payload = archive.block_payload(idx);
+    let mut r = BitReader::with_limit(payload, meta.payload_bits as usize)?;
+    let unpred_vals = archive.block_unpred(idx);
+    let mut next_unpred = 0usize;
+    let (nz, ny, nx) = shape;
+    let mut p = 0usize;
+    for z in 0..nz {
+        for y in 0..ny {
+            for x in 0..nx {
+                let code = archive.table.decode(&mut r)?;
+                if code == UNPREDICTABLE {
+                    let v = *unpred_vals.get(next_unpred).ok_or_else(|| {
+                        Error::CrashEquivalent(format!(
+                            "block {idx}: unpredictable pool exhausted at point {p}"
+                        ))
+                    })?;
+                    next_unpred += 1;
+                    out_block[p] = v;
+                } else {
+                    if code as usize >= q.n_symbols() {
+                        return Err(Error::CrashEquivalent(format!(
+                            "block {idx}: decoded code {code} out of range"
+                        )));
+                    }
+                    let pred = match meta.predictor {
+                        Predictor::Lorenzo if z > 0 && y > 0 && x > 0 => {
+                            lorenzo::predict_interior_dense(out_block, p, nx, ny * nx)
+                        }
+                        Predictor::Lorenzo => {
+                            let view = GridView::dense(out_block, shape);
+                            lorenzo::predict(&view, z, y, x)
+                        }
+                        Predictor::Regression => regression::predict(&meta.coeffs, z, y, x),
+                        Predictor::DualQuant => unreachable!("handled above"),
+                    };
+                    let pred =
+                        if apply_hooks { hooks.corrupt_pred(idx, p, pred) } else { pred };
+                    out_block[p] = q.reconstruct(code, pred);
+                }
+                p += 1;
+            }
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// verify stage + ordered report fold (the one Algorithm 2 loop body)
+// ---------------------------------------------------------------------------
+
+/// Shared read-only context of one decode run.
+struct DecodeCtx<'a> {
+    archive: &'a Archive,
+    grid: &'a BlockGrid,
+    q: &'a Quantizer,
+    verify: bool,
+}
+
+/// The Algorithm 2 verify/re-execute loop body — the **one**
+/// implementation every driver and every decode scenario runs. Checks the
+/// freshly decoded block against its stored `sum_dc`; on mismatch
+/// re-executes the block (Alg. 2 l. 14 — random access makes this
+/// block-local) with the transient fault hooks off, and errors with
+/// [`Error::SdcInCompression`] (Alg. 2 l. 19) when even the re-execution
+/// disagrees. Returns whether a re-execution repair happened.
+fn verify_stage(ctx: &DecodeCtx, bi: usize, block: &mut Vec<f32>) -> Result<bool> {
+    if !ctx.verify {
+        return Ok(false);
+    }
+    let sums = ctx.archive.sum_dc.as_ref().expect("verify requires sum_dc");
+    if checksum::checksum_f32(block).sum == sums[bi] {
+        return Ok(false);
+    }
+    decode_block(ctx.archive, ctx.grid, ctx.q, bi, &mut NoDecompressHooks, false, block)?;
+    if checksum::checksum_f32(block).sum != sums[bi] {
+        return Err(Error::SdcInCompression(format!("block {bi}")));
+    }
+    Ok(true)
+}
+
+/// Ordered-commit fold shared by every driver: the single place a
+/// re-execution repair enters the run report.
+fn fold_block_outcome(report: &mut DecompressReport, bi: usize, reexecuted: bool) {
+    if reexecuted {
+        report.blocks_reexecuted += 1;
+        report.events.push(SdcEvent { kind: SdcKind::DecompCorrected, block: bi, index: 0 });
+    }
+}
+
+// ---------------------------------------------------------------------------
+// place stage: the sink parameterization
+// ---------------------------------------------------------------------------
+
+/// Where decoded blocks land: the full-array scatter of a whole-dataset
+/// decode, or the region copy of random access. This is the one
+/// parameterization that lets full, verified, verbose, unverified and
+/// region decompression share a single core.
+enum DecodeSink<'a> {
+    /// Scatter each block into the global array.
+    Full(&'a mut [f32]),
+    /// Copy each block's intersection with `region` into a dense region
+    /// buffer.
+    Region {
+        /// The dense region buffer (`region.len()` values).
+        out: &'a mut [f32],
+        /// The requested region.
+        region: Region,
+    },
+}
+
+impl DecodeSink<'_> {
+    /// Place one decoded block.
+    fn place(&mut self, grid: &BlockGrid, bi: usize, block: &[f32]) {
+        match self {
+            DecodeSink::Full(out) => grid.scatter(block, bi, out),
+            DecodeSink::Region { out, region } => {
+                grid.copy_block_into_region(block, bi, *region, out)
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// graph entry points
+// ---------------------------------------------------------------------------
+
+/// Pipelining needs at least two blocks to overlap anything.
+const MIN_OVERLAP_BLOCKS: usize = 2;
+
+/// Minimum output size for the pipelined driver: below this, the
+/// companion-thread spawn + channel traffic rivals the decode work itself,
+/// so tiny decodes stay on the plain sequential driver (bits are identical
+/// either way). Same rationale and value as the compress side.
+const MIN_OVERLAP_POINTS: usize = 4096;
+
+/// Bounded depth of the decode → verify channel on the pipelined path.
+const PIPE_DEPTH: usize = 4;
+
+/// Run the decode graph with automatic driver selection (the library
+/// entry point behind `engine`/`ft` decompression and region decode):
+///
+/// * hooks live (injection) → [`run_sequential`], always;
+/// * `par` > 1 worker and > 1 block of work → [`run_parallel`];
+/// * 1 worker, ≥ 2 blocks and an output big enough to amortize the
+///   companion thread → [`run_pipelined`];
+/// * otherwise → [`run_sequential`] with no-op hooks.
+///
+/// `region: None` decodes the whole dataset (full-array sink);
+/// `Some(region)` decodes only the intersecting blocks (region sink).
+/// All drivers commit blocks in work-list order: output bits are
+/// identical regardless of which one ran (property- and golden-tested).
+pub(crate) fn decode_graph<H: DecompressHooks>(
+    bytes: &[u8],
+    hooks: &mut H,
+    verify: bool,
+    region: Option<Region>,
+    par: Parallelism,
+) -> Result<DecodeOutput> {
+    run(bytes, hooks, verify, region, None, par)
+}
+
+/// Run the decode graph with an explicitly pinned driver (hook-free).
+/// This is the measurement/verification surface: the `hotpath` bench
+/// compares drivers per stage, and `tests/golden_decode.rs` asserts their
+/// outputs are bit-identical.
+pub fn decode_with_driver(
+    bytes: &[u8],
+    verify: bool,
+    region: Option<Region>,
+    driver: DecodeDriver,
+) -> Result<DecodeOutput> {
+    run(
+        bytes,
+        &mut NoDecompressHooks,
+        verify,
+        region,
+        Some(driver),
+        Parallelism::Sequential,
+    )
+}
+
+/// Shared core of [`decode_graph`] / [`decode_with_driver`].
+fn run<H: DecompressHooks>(
+    bytes: &[u8],
+    hooks: &mut H,
+    verify: bool,
+    region: Option<Region>,
+    forced: Option<DecodeDriver>,
+    par: Parallelism,
+) -> Result<DecodeOutput> {
+    let wall = Instant::now();
+    let mut timings = DecodeTimings::default();
+
+    // ---- recover stage (archive-wide): heal, vote, parse, sanity-check ----
+    let t = Instant::now();
+    let (archive, grid, q) = open(bytes)?;
+    timings.recover_ns = t.elapsed().as_nanos() as u64;
+    if verify && archive.sum_dc.is_none() {
+        return Err(Error::InvalidArgument(
+            "archive has no FT checksums; compress with ft::compress".into(),
+        ));
+    }
+    let work: Vec<usize> = match region {
+        None => (0..grid.n_blocks()).collect(),
+        Some(r) => grid.blocks_intersecting(r)?,
+    };
+    let (out_len, dims) = match region {
+        None => (archive.header.dims.len(), archive.header.dims),
+        Some(r) => (r.len(), Dims::d3(r.shape.0, r.shape.1, r.shape.2)),
+    };
+    let mut out = vec![0.0f32; out_len];
+    let mut report = DecompressReport::default();
+    if let Some(rec) = &archive.recovered {
+        report.stripes_repaired = rec.stripes_repaired.clone();
+    }
+
+    let ctx = DecodeCtx { archive: &archive, grid: &grid, q: &q, verify };
+    let mut sink = match region {
+        None => DecodeSink::Full(&mut out),
+        Some(r) => DecodeSink::Region { out: &mut out, region: r },
+    };
+    // hooked runs stay on the sequential reference driver regardless of
+    // the knob — decode hooks are `&mut` state machines tied to the
+    // sequential block order (same contract as the compression side)
+    let driver = if !H::PARALLEL_SAFE {
+        DecodeDriver::Sequential
+    } else {
+        forced.unwrap_or_else(|| {
+            let workers = par.workers();
+            if workers > 1 && work.len() > 1 {
+                DecodeDriver::Parallel(workers)
+            } else if work.len() >= MIN_OVERLAP_BLOCKS && out_len >= MIN_OVERLAP_POINTS {
+                DecodeDriver::Pipelined
+            } else {
+                DecodeDriver::Sequential
+            }
+        })
+    };
+    match driver {
+        DecodeDriver::Sequential => {
+            run_sequential(&ctx, &work, hooks, &mut sink, &mut report, &mut timings)?
+        }
+        DecodeDriver::Pipelined => {
+            run_pipelined(&ctx, &work, &mut sink, &mut report, &mut timings)?
+        }
+        DecodeDriver::Parallel(w) => {
+            run_parallel(&ctx, &work, w, &mut sink, &mut report, &mut timings)?
+        }
+    }
+    timings.wall_ns = wall.elapsed().as_nanos() as u64;
+    Ok(DecodeOutput {
+        data: out,
+        dims,
+        error_bound: archive.header.error_bound,
+        report,
+        timings,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// driver 1: sequential (decode hook points live)
+// ---------------------------------------------------------------------------
+
+/// One-thread reference driver — the only one hooked (injection) runs may
+/// take. Decode, verify and place run back to back per block, in
+/// work-list order.
+fn run_sequential<H: DecompressHooks>(
+    ctx: &DecodeCtx,
+    work: &[usize],
+    hooks: &mut H,
+    sink: &mut DecodeSink,
+    report: &mut DecompressReport,
+    timings: &mut DecodeTimings,
+) -> Result<()> {
+    let mut block = Vec::new();
+    for &bi in work {
+        let t = Instant::now();
+        decode_block(ctx.archive, ctx.grid, ctx.q, bi, hooks, true, &mut block)?;
+        timings.decode_ns += t.elapsed().as_nanos() as u64;
+        let t = Instant::now();
+        let reexecuted = verify_stage(ctx, bi, &mut block)?;
+        timings.verify_ns += t.elapsed().as_nanos() as u64;
+        fold_block_outcome(report, bi, reexecuted);
+        let t = Instant::now();
+        sink.place(ctx.grid, bi, &block);
+        timings.place_ns += t.elapsed().as_nanos() as u64;
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// driver 2: 1-worker software pipeline
+// ---------------------------------------------------------------------------
+
+/// The 1-worker per-stage software pipeline: the main thread decodes
+/// blocks in work-list order and hands each to a companion thread that
+/// runs the verify stage (checksum + rare re-execution) and the place
+/// stage — so the checksum of block *i* overlaps the decode of block
+/// *i+1*. The bounded channel preserves order, so the sink is filled in
+/// exactly the sequential commit order and the output bits are identical.
+///
+/// Error precedence matches the sequential sweep: a companion (verify)
+/// error always concerns an earlier block than any main-thread decode
+/// error, so it wins; both surfaces are the same lowest-failing-block
+/// error the other drivers report.
+fn run_pipelined(
+    ctx: &DecodeCtx,
+    work: &[usize],
+    sink: &mut DecodeSink,
+    report: &mut DecompressReport,
+    timings: &mut DecodeTimings,
+) -> Result<()> {
+    timings.pipelined = true;
+    let (verify_ns, place_ns) = std::thread::scope(|s| -> Result<(u64, u64)> {
+        let (tx, rx) = mpsc::sync_channel::<(usize, Vec<f32>)>(PIPE_DEPTH);
+
+        // companion thread: verify + place, in arrival (= work-list) order
+        let companion = s.spawn(move || -> Result<(u64, u64)> {
+            let (mut verify_ns, mut place_ns) = (0u64, 0u64);
+            while let Ok((bi, mut block)) = rx.recv() {
+                let t = Instant::now();
+                let reexecuted = verify_stage(ctx, bi, &mut block)?;
+                verify_ns += t.elapsed().as_nanos() as u64;
+                fold_block_outcome(report, bi, reexecuted);
+                let t = Instant::now();
+                sink.place(ctx.grid, bi, &block);
+                place_ns += t.elapsed().as_nanos() as u64;
+            }
+            Ok((verify_ns, place_ns))
+        });
+
+        // main thread: decode stage, in order
+        let mut main_err: Option<Error> = None;
+        for &bi in work {
+            let mut block = Vec::new();
+            let t = Instant::now();
+            if let Err(e) = decode_block(
+                ctx.archive,
+                ctx.grid,
+                ctx.q,
+                bi,
+                &mut NoDecompressHooks,
+                true,
+                &mut block,
+            ) {
+                main_err = Some(e);
+                break;
+            }
+            timings.decode_ns += t.elapsed().as_nanos() as u64;
+            if tx.send((bi, block)).is_err() {
+                // companion exited early (it owns the error) — stop
+                break;
+            }
+        }
+        drop(tx);
+        let joined = match companion.join() {
+            Ok(r) => r,
+            Err(p) => std::panic::resume_unwind(p),
+        };
+        match (joined, main_err) {
+            // the companion's block precedes any still-undecoded block
+            (Err(e), _) => Err(e),
+            (Ok(_), Some(e)) => Err(e),
+            (Ok(ns), None) => Ok(ns),
+        }
+    })?;
+    timings.verify_ns = verify_ns;
+    timings.place_ns = place_ns;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// driver 3: block-parallel fan-out
+// ---------------------------------------------------------------------------
+
+/// Block-parallel Algorithm 2: decode + verify (+ re-execution) are all
+/// block-local, so they fan out together over
+/// [`crate::util::threadpool::parallel_map`], which returns results in
+/// work-list order; blocks are then placed in that order, so the output
+/// bits are identical to the sequential driver at any worker count and
+/// the `?` in the ordered commit surfaces the lowest failing block first,
+/// exactly like the sequential sweep.
+///
+/// Stage timings are per-block **busy** sums across all workers, so
+/// `busy / wall` on this driver reads as the achieved parallel speedup.
+fn run_parallel(
+    ctx: &DecodeCtx,
+    work: &[usize],
+    workers: usize,
+    sink: &mut DecodeSink,
+    report: &mut DecompressReport,
+    timings: &mut DecodeTimings,
+) -> Result<()> {
+    let results: Vec<Result<(Vec<f32>, bool, u64, u64)>> =
+        crate::util::threadpool::parallel_map(work.len(), workers, |i| {
+            let bi = work[i];
+            let mut block = Vec::new();
+            let t = Instant::now();
+            decode_block(
+                ctx.archive,
+                ctx.grid,
+                ctx.q,
+                bi,
+                &mut NoDecompressHooks,
+                true,
+                &mut block,
+            )?;
+            let decode_ns = t.elapsed().as_nanos() as u64;
+            let t = Instant::now();
+            let reexecuted = verify_stage(ctx, bi, &mut block)?;
+            Ok((block, reexecuted, decode_ns, t.elapsed().as_nanos() as u64))
+        });
+    for (i, r) in results.into_iter().enumerate() {
+        let (block, reexecuted, decode_ns, verify_ns) = r?;
+        timings.decode_ns += decode_ns;
+        timings.verify_ns += verify_ns;
+        fold_block_outcome(report, work[i], reexecuted);
+        let t = Instant::now();
+        sink.place(ctx.grid, work[i], &block);
+        timings.place_ns += t.elapsed().as_nanos() as u64;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compressor::{engine, CompressionConfig, ErrorBound};
+    use crate::data::synthetic;
+    use crate::ft;
+
+    fn cfg(e: f64) -> CompressionConfig {
+        CompressionConfig::new(ErrorBound::Abs(e)).with_block_size(8)
+    }
+
+    fn bits(v: &[f32]) -> Vec<u32> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    #[test]
+    fn drivers_bit_identical_full_decode() {
+        let f = synthetic::hurricane_field("t", Dims::d3(10, 16, 16), 19);
+        for (verify, bytes) in [
+            (false, engine::compress(&f.data, f.dims, &cfg(1e-3)).unwrap()),
+            (true, ft::compress(&f.data, f.dims, &cfg(1e-3)).unwrap()),
+        ] {
+            let seq =
+                decode_with_driver(&bytes, verify, None, DecodeDriver::Sequential).unwrap();
+            let piped =
+                decode_with_driver(&bytes, verify, None, DecodeDriver::Pipelined).unwrap();
+            let par =
+                decode_with_driver(&bytes, verify, None, DecodeDriver::Parallel(4)).unwrap();
+            assert_eq!(bits(&seq.data), bits(&piped.data), "verify={verify}");
+            assert_eq!(bits(&seq.data), bits(&par.data), "verify={verify}");
+            assert!(piped.timings.pipelined && !seq.timings.pipelined);
+            assert!(seq.report.is_clean() && piped.report.is_clean() && par.report.is_clean());
+        }
+    }
+
+    #[test]
+    fn pipelined_is_the_default_one_worker_path() {
+        // big enough to clear MIN_OVERLAP_POINTS
+        let f = synthetic::nyx_velocity("v", Dims::d3(20, 20, 20), 4);
+        let bytes = engine::compress(&f.data, f.dims, &cfg(1e-3)).unwrap();
+        let out = decode_graph(
+            &bytes,
+            &mut NoDecompressHooks,
+            false,
+            None,
+            Parallelism::Sequential,
+        )
+        .unwrap();
+        assert!(out.timings.pipelined, "decode overlap should engage by default");
+        // tiny decodes stay on the plain sequential driver
+        let tiny = synthetic::nyx_velocity("v", Dims::d3(8, 8, 8), 4);
+        let bytes = engine::compress(&tiny.data, tiny.dims, &cfg(1e-3)).unwrap();
+        let out = decode_graph(
+            &bytes,
+            &mut NoDecompressHooks,
+            false,
+            None,
+            Parallelism::Sequential,
+        )
+        .unwrap();
+        assert!(!out.timings.pipelined, "512 points must not pay for a companion thread");
+    }
+
+    #[test]
+    fn decode_timings_cover_the_run() {
+        let f = synthetic::hurricane_field("t", Dims::d3(10, 14, 14), 5);
+        let bytes = ft::compress(&f.data, f.dims, &cfg(1e-4)).unwrap();
+        let out = decode_with_driver(&bytes, true, None, DecodeDriver::Pipelined).unwrap();
+        let s = &out.timings;
+        assert!(s.wall_ns > 0);
+        assert!(s.recover_ns > 0);
+        assert!(s.decode_ns > 0);
+        assert!(s.busy_ns() > 0);
+        assert!(s.overlap_ratio() > 0.0 && s.overlap_ratio() < 16.0);
+    }
+
+    #[test]
+    fn region_sink_matches_full_decode_slice_on_every_driver() {
+        let f = synthetic::hurricane_field("t", Dims::d3(10, 16, 16), 7);
+        let bytes = ft::compress(&f.data, f.dims, &cfg(1e-3)).unwrap();
+        let full =
+            decode_with_driver(&bytes, true, None, DecodeDriver::Sequential).unwrap();
+        let region = Region { origin: (3, 5, 2), shape: (5, 8, 9) };
+        let (_, ry, rx) = f.dims.as_3d();
+        let mut want = Vec::new();
+        for z in 0..region.shape.0 {
+            for y in 0..region.shape.1 {
+                for x in 0..region.shape.2 {
+                    let g = ((region.origin.0 + z) * ry + region.origin.1 + y) * rx
+                        + region.origin.2
+                        + x;
+                    want.push(full.data[g]);
+                }
+            }
+        }
+        for driver in
+            [DecodeDriver::Sequential, DecodeDriver::Pipelined, DecodeDriver::Parallel(3)]
+        {
+            let got = decode_with_driver(&bytes, true, Some(region), driver).unwrap();
+            assert_eq!(bits(&got.data), bits(&want), "{driver:?}");
+            assert_eq!(got.dims.len(), region.len());
+        }
+    }
+
+    #[test]
+    fn verified_decode_of_non_ft_archive_is_an_error_on_every_driver() {
+        let f = synthetic::nyx_velocity("v", Dims::d3(8, 8, 8), 2);
+        let bytes = engine::compress(&f.data, f.dims, &cfg(1e-2)).unwrap();
+        for driver in
+            [DecodeDriver::Sequential, DecodeDriver::Pipelined, DecodeDriver::Parallel(2)]
+        {
+            assert!(decode_with_driver(&bytes, true, None, driver).is_err());
+        }
+    }
+}

@@ -15,8 +15,11 @@
 //! The compression chain itself lives in [`super::stage`] as an explicit
 //! stage graph (prepare → quantize → protect → encode → serialize) with
 //! three byte-identical drivers: sequential (hooked), the 1-worker
-//! software pipeline, and the block-parallel fan-out. This module keeps
-//! the engine's types, the decompression core, and the public rsz API.
+//! software pipeline, and the block-parallel fan-out. The decompression
+//! chain — the paper's Algorithm 2, shared by full, verified, verbose,
+//! unverified and region decode — lives the same way in [`super::destage`]
+//! (recover → decode → verify/re-execute → place). This module keeps the
+//! engine's types and the public rsz API.
 //!
 //! Fault injection enters through [`Hooks`]: every site the evaluation
 //! (§6.1.2) perturbs is a hook — input memory after checksumming,
@@ -25,18 +28,13 @@
 //! between-blocks whole-arena access used by the mode-B (BLCR-substitute)
 //! injector.
 
-use super::block::{BlockGrid, Region};
-use super::format::Archive;
-use super::lorenzo::{self, GridView};
-use super::quantize::{Quantizer, UNPREDICTABLE};
-use super::regression;
+use super::block::Region;
+use super::destage;
 use super::stage::{self, StageTimings};
-use super::{CompressionConfig, Predictor};
+use super::CompressionConfig;
 use crate::data::Dims;
-use crate::error::{Error, Result};
-use crate::ft::checksum;
-use crate::ft::report::{DecompressReport, SdcEvent, SdcKind};
-use crate::util::bits::BitReader;
+use crate::error::Result;
+use crate::ft::report::{DecompressReport, SdcEvent};
 
 /// Compression-side fault-injection / instrumentation hooks.
 ///
@@ -211,208 +209,23 @@ impl DecompressHooks for NoDecompressHooks {
     const PARALLEL_SAFE: bool = true;
 }
 
-/// Decode one block into `out_block` (dense, block-local).
-pub(crate) fn decode_block<H: DecompressHooks>(
-    archive: &Archive,
-    grid: &BlockGrid,
-    q: &Quantizer,
-    idx: usize,
-    hooks: &mut H,
-    apply_hooks: bool,
-    out_block: &mut Vec<f32>,
-) -> Result<()> {
-    let meta = &archive.metas[idx];
-    let e = grid.extent(idx);
-    let shape = e.shape;
-    let n = e.len();
-    if meta.predictor == Predictor::DualQuant {
-        // data-parallel path: whole-block inverse transform (no per-point
-        // hooks — the dual-quant path is guarded by checksums, not
-        // instruction duplication)
-        return super::offload::decode_block(
-            &archive.table,
-            archive.block_payload(idx),
-            meta.payload_bits,
-            archive.block_unpred(idx),
-            shape,
-            archive.header.quant_radius as i64,
-            archive.header.error_bound,
-            out_block,
-        );
-    }
-    out_block.clear();
-    out_block.resize(n, 0.0);
-    let payload = archive.block_payload(idx);
-    let mut r = BitReader::with_limit(payload, meta.payload_bits as usize)?;
-    let unpred_vals = archive.block_unpred(idx);
-    let mut next_unpred = 0usize;
-    let (nz, ny, nx) = shape;
-    let mut p = 0usize;
-    for z in 0..nz {
-        for y in 0..ny {
-            for x in 0..nx {
-                let code = archive.table.decode(&mut r)?;
-                if code == UNPREDICTABLE {
-                    let v = *unpred_vals.get(next_unpred).ok_or_else(|| {
-                        Error::CrashEquivalent(format!(
-                            "block {idx}: unpredictable pool exhausted at point {p}"
-                        ))
-                    })?;
-                    next_unpred += 1;
-                    out_block[p] = v;
-                } else {
-                    if code as usize >= q.n_symbols() {
-                        return Err(Error::CrashEquivalent(format!(
-                            "block {idx}: decoded code {code} out of range"
-                        )));
-                    }
-                    let pred = match meta.predictor {
-                        Predictor::Lorenzo if z > 0 && y > 0 && x > 0 => {
-                            lorenzo::predict_interior_dense(out_block, p, nx, ny * nx)
-                        }
-                        Predictor::Lorenzo => {
-                            let view = GridView::dense(out_block, shape);
-                            lorenzo::predict(&view, z, y, x)
-                        }
-                        Predictor::Regression => regression::predict(&meta.coeffs, z, y, x),
-                        Predictor::DualQuant => unreachable!("handled above"),
-                    };
-                    let pred =
-                        if apply_hooks { hooks.corrupt_pred(idx, p, pred) } else { pred };
-                    out_block[p] = q.reconstruct(code, pred);
-                }
-                p += 1;
-            }
-        }
-    }
-    Ok(())
-}
-
-/// Parse + sanity-check an archive against this engine. Parity-protected
-/// (v2) archives are verified against their CRCs first and healed from
-/// their parity groups if damaged (`archive.recovered` records repairs).
-pub(crate) fn open(bytes: &[u8]) -> Result<(Archive, BlockGrid, Quantizer)> {
-    let archive = crate::ft::parity::parse_recovering(bytes)?;
-    if archive.header.is_classic() {
-        return Err(Error::InvalidArgument(
-            "classic archive: use compressor::classic::decompress".into(),
-        ));
-    }
-    let grid = BlockGrid::new(archive.header.dims, archive.header.block_size as usize)?;
-    if grid.n_blocks() as u64 != archive.header.n_blocks {
-        return Err(Error::Format("block count mismatch".into()));
-    }
-    let q = Quantizer::new(archive.header.error_bound, archive.header.quant_radius);
-    Ok((archive, grid, q))
-}
-
-/// Full decompression with optional per-block FT verification.
+/// Full decompression with optional per-block FT verification — a thin
+/// wrapper over the decode stage graph ([`super::destage`]).
 ///
-/// `par` fans the per-block decode (and, in verify mode, the checksum +
-/// re-execution repair — both block-local) over worker threads; blocks are
-/// scattered into the output in index order, so the result is bitwise
-/// identical to the sequential path. Hooked runs (injection) stay
-/// sequential, as on the compression side.
+/// Driver selection is the graph's job: hooked runs stay on the
+/// sequential reference driver; `par` > 1 worker takes the block-parallel
+/// fan-out (decode, checksum verify and re-execution repair are all
+/// block-local); the 1-worker path takes the software pipeline when the
+/// dataset is big enough. Output bits are identical on every driver.
 pub(crate) fn decompress_core<H: DecompressHooks>(
     bytes: &[u8],
     hooks: &mut H,
     verify: bool,
     par: super::Parallelism,
 ) -> Result<(Decompressed, DecompressReport)> {
-    let (archive, grid, q) = open(bytes)?;
-    if verify && archive.sum_dc.is_none() {
-        return Err(Error::InvalidArgument(
-            "archive has no FT checksums; compress with ft::compress".into(),
-        ));
-    }
-    let dims = archive.header.dims;
-    let mut out = vec![0.0f32; dims.len()];
-    let mut report = DecompressReport::default();
-    if let Some(rec) = &archive.recovered {
-        for &s in &rec.stripes_repaired {
-            report.events.push(SdcEvent {
-                kind: SdcKind::ArchiveStripeRepaired,
-                block: s,
-                index: 0,
-            });
-        }
-    }
-    let workers = par.workers();
-    if H::PARALLEL_SAFE && workers > 1 {
-        let n_blocks = grid.n_blocks();
-        let results: Vec<Result<(Vec<f32>, bool)>> =
-            crate::util::threadpool::parallel_map(n_blocks, workers, |bi| {
-                let mut block = Vec::new();
-                decode_block(&archive, &grid, &q, bi, &mut NoDecompressHooks, true, &mut block)?;
-                let mut reexecuted = false;
-                if verify {
-                    let sums = archive.sum_dc.as_ref().unwrap();
-                    if checksum::checksum_f32(&block).sum != sums[bi] {
-                        // Alg.2 l.14: block-local re-execution repair
-                        reexecuted = true;
-                        decode_block(
-                            &archive,
-                            &grid,
-                            &q,
-                            bi,
-                            &mut NoDecompressHooks,
-                            false,
-                            &mut block,
-                        )?;
-                        if checksum::checksum_f32(&block).sum != sums[bi] {
-                            return Err(Error::SdcInCompression(format!("block {bi}")));
-                        }
-                    }
-                }
-                Ok((block, reexecuted))
-            });
-        // commit in block order; `?` surfaces the lowest failing block
-        // first, exactly like the sequential sweep
-        for (bi, r) in results.into_iter().enumerate() {
-            let (block, reexecuted) = r?;
-            if reexecuted {
-                report.blocks_reexecuted += 1;
-                report.events.push(SdcEvent {
-                    kind: SdcKind::DecompCorrected,
-                    block: bi,
-                    index: 0,
-                });
-            }
-            grid.scatter(&block, bi, &mut out);
-        }
-        return Ok((
-            Decompressed { data: out, dims, error_bound: archive.header.error_bound },
-            report,
-        ));
-    }
-    let mut block = Vec::new();
-    for bi in 0..grid.n_blocks() {
-        decode_block(&archive, &grid, &q, bi, hooks, true, &mut block)?;
-        if verify {
-            let sums = archive.sum_dc.as_ref().unwrap();
-            if checksum::checksum_f32(&block).sum != sums[bi] {
-                // Alg.2 l.14: re-execute this block (random access); the
-                // second pass skips the (transient) fault hooks.
-                report.blocks_reexecuted += 1;
-                decode_block(&archive, &grid, &q, bi, hooks, false, &mut block)?;
-                if checksum::checksum_f32(&block).sum == sums[bi] {
-                    report.events.push(SdcEvent {
-                        kind: SdcKind::DecompCorrected,
-                        block: bi,
-                        index: 0,
-                    });
-                } else {
-                    // Alg.2 l.19: SDC during compression
-                    return Err(Error::SdcInCompression(format!("block {bi}")));
-                }
-            }
-        }
-        grid.scatter(&block, bi, &mut out);
-    }
-    Ok((
-        Decompressed { data: out, dims, error_bound: archive.header.error_bound },
-        report,
-    ))
+    let destage::DecodeOutput { data, dims, error_bound, report, .. } =
+        destage::decode_graph(bytes, hooks, verify, None, par)?;
+    Ok((Decompressed { data, dims, error_bound }, report))
 }
 
 // ---------------------------------------------------------------------------
@@ -495,36 +308,34 @@ pub fn decompress_region_with(
     region: Region,
     par: super::Parallelism,
 ) -> Result<Vec<f32>> {
-    let (archive, grid, q) = open(bytes)?;
-    let mut out = vec![0.0f32; region.len()];
-    let hits = grid.blocks_intersecting(region)?;
-    let workers = par.workers();
-    if workers > 1 && hits.len() > 1 {
-        let decoded: Vec<Result<Vec<f32>>> =
-            crate::util::threadpool::parallel_map(hits.len(), workers, |i| {
-                let mut block = Vec::new();
-                decode_block(
-                    &archive,
-                    &grid,
-                    &q,
-                    hits[i],
-                    &mut NoDecompressHooks,
-                    false,
-                    &mut block,
-                )?;
-                Ok(block)
-            });
-        for (i, r) in decoded.into_iter().enumerate() {
-            grid.copy_block_into_region(&r?, hits[i], region, &mut out);
-        }
-        return Ok(out);
-    }
-    let mut block = Vec::new();
-    for bi in hits {
-        decode_block(&archive, &grid, &q, bi, &mut NoDecompressHooks, false, &mut block)?;
-        grid.copy_block_into_region(&block, bi, region, &mut out);
-    }
-    Ok(out)
+    Ok(destage::decode_graph(bytes, &mut NoDecompressHooks, false, Some(region), par)?.data)
+}
+
+/// Verified random-access region decompression: Algorithm 2 applied per
+/// intersecting block. The region values come with the usual report —
+/// re-executed blocks and parity-rebuilt stripes — so random access is no
+/// longer the one decode path without SDC protection. Errors like full
+/// verified decompression: no `sum_dc` in the archive is
+/// [`crate::Error::InvalidArgument`], a block that fails verification even
+/// after re-execution is [`crate::Error::SdcInCompression`].
+pub fn decompress_region_verified(
+    bytes: &[u8],
+    region: Region,
+    par: super::Parallelism,
+) -> Result<(Vec<f32>, DecompressReport)> {
+    let out = destage::decode_graph(bytes, &mut NoDecompressHooks, true, Some(region), par)?;
+    Ok((out.data, out.report))
+}
+
+/// Decompress without verification but *with* the run report — the
+/// visibility path for parity repairs performed by the recover stage
+/// (`report.stripes_repaired`) when no Algorithm 2 verification runs
+/// (plain rsz decode, the ftrsz unverified ablation, mode-C tooling).
+pub fn decompress_reported(
+    bytes: &[u8],
+    par: super::Parallelism,
+) -> Result<(Decompressed, DecompressReport)> {
+    decompress_core(bytes, &mut NoDecompressHooks, false, par)
 }
 
 #[cfg(test)]

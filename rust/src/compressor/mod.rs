@@ -15,10 +15,14 @@
 //! sections. That chain lives once, as an explicit stage graph, in
 //! [`stage`] — with the [`stage::BlockCodec`] trait as the unified
 //! dispatch over all three engines and three byte-identical schedulers
-//! (sequential, 1-worker software-pipelined, block-parallel).
+//! (sequential, 1-worker software-pipelined, block-parallel). The decode
+//! direction mirrors it in [`destage`]: one recover → decode →
+//! verify/re-execute → place chain behind full, verified and region
+//! decompression, with the same three drivers.
 
 pub mod block;
 pub mod classic;
+pub mod destage;
 pub mod dualquant;
 pub mod engine;
 pub mod format;

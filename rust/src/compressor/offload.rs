@@ -18,8 +18,8 @@
 //! section: `[n_outliers (bitcast u32)] ++ outlier bins (bitcast i32) ++
 //! (patch index (bitcast u32), patch value)*`.
 //!
-//! Decoding (wired into the crate-internal `engine::decode_block`, the
-//! decode half of the [`super::stage`] chain) reverses this and
+//! Decoding (wired into the crate-internal `destage::decode_block`, the
+//! decode stage of the [`super::destage`] chain) reverses this and
 //! runs the inverse prefix-sum transform — so region decompression and the
 //! FT `sum_dc` verification work unchanged on dual-quant archives.
 
@@ -212,7 +212,7 @@ pub fn compress(
     .write()
 }
 
-/// Decode one dual-quant block (called from `engine::decode_block`).
+/// Decode one dual-quant block (called from `destage::decode_block`).
 pub(crate) fn decode_block(
     table: &HuffmanTable,
     payload: &[u8],

@@ -206,6 +206,25 @@ pub trait BlockCodec: Sync {
         )))
     }
 
+    /// Verified random-access region decode: Algorithm 2 applied per
+    /// intersecting block (paper §5.1 random access with the §5.4 SDC
+    /// protection it previously lacked). Default: unsupported — it needs
+    /// both a per-block format and stored `sum_dc`, so only `ftrsz`
+    /// implements it.
+    fn decompress_region_verified(
+        &self,
+        bytes: &[u8],
+        region: Region,
+        par: Parallelism,
+    ) -> Result<(Vec<f32>, DecompressReport)> {
+        let _ = par;
+        let _ = (bytes, region);
+        Err(Error::InvalidArgument(format!(
+            "{}: verified region decode unsupported (needs per-block sum_dc and random access)",
+            self.name()
+        )))
+    }
+
     /// True when [`BlockCodec::decompress_verified`] is implemented.
     fn supports_verify(&self) -> bool {
         false
@@ -213,6 +232,11 @@ pub trait BlockCodec: Sync {
 
     /// True when [`BlockCodec::decompress_region`] is implemented.
     fn supports_region(&self) -> bool {
+        false
+    }
+
+    /// True when [`BlockCodec::decompress_region_verified`] is implemented.
+    fn supports_region_verified(&self) -> bool {
         false
     }
 }
@@ -1141,6 +1165,7 @@ mod tests {
             // capability flags match the format
             assert_eq!(codec.supports_verify(), e == Engine::FaultTolerant);
             assert_eq!(codec.supports_region(), e != Engine::Classic);
+            assert_eq!(codec.supports_region_verified(), e == Engine::FaultTolerant);
         }
     }
 
@@ -1153,12 +1178,26 @@ mod tests {
         assert!(classic.decompress_verified(&bytes, Parallelism::Sequential).is_err());
         let region = Region { origin: (0, 0, 0), shape: (2, 2, 2) };
         assert!(classic.decompress_region(&bytes, region, Parallelism::Sequential).is_err());
-        // rsz supports region but not verify
+        assert!(classic
+            .decompress_region_verified(&bytes, region, Parallelism::Sequential)
+            .is_err());
+        // rsz supports region but not verify (plain or region — no sum_dc)
         let rsz = Engine::RandomAccess.codec();
         let bytes = rsz.compress(&f.data, f.dims, &cfg(1e-3)).unwrap();
         assert!(rsz.decompress_verified(&bytes, Parallelism::Sequential).is_err());
         assert!(rsz
             .decompress_region(&bytes, region, Parallelism::Sequential)
             .is_ok());
+        assert!(rsz
+            .decompress_region_verified(&bytes, region, Parallelism::Sequential)
+            .is_err());
+        // ftrsz supports everything
+        let ftrsz = Engine::FaultTolerant.codec();
+        let bytes = ftrsz.compress(&f.data, f.dims, &cfg(1e-3)).unwrap();
+        let (vals, report) = ftrsz
+            .decompress_region_verified(&bytes, region, Parallelism::Sequential)
+            .unwrap();
+        assert_eq!(vals.len(), region.len());
+        assert!(report.is_clean());
     }
 }

@@ -108,11 +108,29 @@ pub fn weak_scaling_run(
     let compress_secs = compress_times[compress_times.len() / 2];
     let bytes_per_rank = results.iter().map(|(_, b)| *b).sum::<usize>() / sample;
 
-    // measure decompression on rank 0's archive
+    // measure decompression on rank 0's archive. The one-core-per-rank
+    // premise applies here too: the default 1-worker decode path is the
+    // software-pipelined driver, whose companion thread would give the
+    // rank a second core — pin the plain sequential decode driver (the
+    // decode-side analogue of the stage_overlap pin above). classic has
+    // no destage chain and is single-threaded already; ftrsz keeps its
+    // natural verified decode.
     let (dims0, data0) = &shards[0];
     let archive0 = codec.compress(data0, *dims0, cfg)?;
     let t = std::time::Instant::now();
-    codec.decompress(&archive0, crate::compressor::Parallelism::Sequential)?;
+    match engine {
+        Engine::Classic => {
+            codec.decompress(&archive0, crate::compressor::Parallelism::Sequential)?;
+        }
+        _ => {
+            crate::compressor::destage::decode_with_driver(
+                &archive0,
+                codec.supports_verify(),
+                None,
+                crate::compressor::destage::DecodeDriver::Sequential,
+            )?;
+        }
+    }
     let decompress_secs = t.elapsed().as_secs_f64();
 
     Ok(WeakScalingPoint {

@@ -34,8 +34,9 @@ pub const FT_PARAMS: CoreParams = CoreParams { protect: true, ft: true };
 
 /// **ftrsz** behind the unified [`BlockCodec`] dispatch: the stage graph
 /// with the protect stage fully on. The only codec whose archives carry
-/// `sum_dc`, so the only one with verified decompression; random access
-/// works exactly as in rsz.
+/// `sum_dc`, so the only one with verified decompression — full *and*
+/// region (Algorithm 2 per intersecting block); plain random access works
+/// exactly as in rsz.
 #[derive(Debug, Default)]
 pub struct FtrszCodec;
 
@@ -76,11 +77,24 @@ impl BlockCodec for FtrszCodec {
         engine::decompress_region_with(bytes, region, par)
     }
 
+    fn decompress_region_verified(
+        &self,
+        bytes: &[u8],
+        region: Region,
+        par: Parallelism,
+    ) -> Result<(Vec<f32>, DecompressReport)> {
+        engine::decompress_region_verified(bytes, region, par)
+    }
+
     fn supports_verify(&self) -> bool {
         true
     }
 
     fn supports_region(&self) -> bool {
+        true
+    }
+
+    fn supports_region_verified(&self) -> bool {
         true
     }
 }
@@ -127,10 +141,34 @@ pub fn decompress_verbose<H: DecompressHooks>(
     decompress_core(bytes, hooks, true, Parallelism::Sequential)
 }
 
+/// Verified decompression with the run report (hook-free counterpart of
+/// [`decompress_verbose`] that may fan out): what the CLI and tooling use
+/// to show re-executed blocks and parity-rebuilt stripes.
+pub fn decompress_with_report(
+    bytes: &[u8],
+    par: Parallelism,
+) -> Result<(Decompressed, DecompressReport)> {
+    decompress_core(bytes, &mut NoDecompressHooks, true, par)
+}
+
+/// Verified random-access region decompression (Algorithm 2 applied to
+/// each block intersecting `region`) — see
+/// [`crate::compressor::engine::decompress_region_verified`].
+pub fn decompress_region_verified(
+    bytes: &[u8],
+    region: Region,
+    par: Parallelism,
+) -> Result<(Vec<f32>, DecompressReport)> {
+    engine::decompress_region_verified(bytes, region, par)
+}
+
 /// Decompress *without* verification (ablation: measures what the
-/// checksums cost at decompression time).
-pub fn decompress_unverified(bytes: &[u8]) -> Result<Decompressed> {
-    engine::decompress(bytes)
+/// checksums cost at decompression time). The [`DecompressReport`] is
+/// still returned: parity repairs performed by the recover stage happen
+/// before — and independently of — Algorithm 2 verification, and dropping
+/// them here used to make at-rest healing invisible in the ablation path.
+pub fn decompress_unverified(bytes: &[u8]) -> Result<(Decompressed, DecompressReport)> {
+    engine::decompress_reported(bytes, Parallelism::Sequential)
 }
 
 #[cfg(test)]
@@ -156,9 +194,45 @@ mod tests {
     fn ft_archive_flags_and_fallback_decode() {
         let f = synthetic::nyx_velocity("v", Dims::d3(8, 8, 8), 2);
         let bytes = compress(&f.data, f.dims, &cfg(1e-2)).unwrap();
-        // plain engine can still read an ft archive (ignores checksums)
-        let dec = decompress_unverified(&bytes).unwrap();
+        // plain engine can still read an ft archive (ignores checksums);
+        // the ablation path reports too (clean here — nothing to repair)
+        let (dec, report) = decompress_unverified(&bytes).unwrap();
         assert!(crate::analysis::max_abs_err(&f.data, &dec.data) <= 1e-2);
+        assert!(report.is_clean());
+    }
+
+    #[test]
+    fn verified_region_matches_full_decode_slice() {
+        let f = synthetic::hurricane_field("t", Dims::d3(10, 16, 16), 8);
+        let bytes = compress(&f.data, f.dims, &cfg(1e-3)).unwrap();
+        let full = decompress(&bytes).unwrap();
+        let region = Region { origin: (2, 5, 3), shape: (6, 8, 9) };
+        let (_, ry, rx) = f.dims.as_3d();
+        for par in [Parallelism::Sequential, Parallelism::Fixed(4)] {
+            let (got, report) = decompress_region_verified(&bytes, region, par).unwrap();
+            assert!(report.is_clean());
+            let mut idx = 0;
+            for z in 0..region.shape.0 {
+                for y in 0..region.shape.1 {
+                    for x in 0..region.shape.2 {
+                        let g = ((region.origin.0 + z) * ry + region.origin.1 + y) * rx
+                            + region.origin.2
+                            + x;
+                        assert_eq!(got[idx].to_bits(), full.data[g].to_bits());
+                        idx += 1;
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn verified_region_of_non_ft_archive_is_an_error() {
+        let f = synthetic::nyx_velocity("v", Dims::d3(8, 8, 8), 2);
+        let bytes =
+            crate::compressor::engine::compress(&f.data, f.dims, &cfg(1e-2)).unwrap();
+        let region = Region { origin: (0, 0, 0), shape: (4, 4, 4) };
+        assert!(decompress_region_verified(&bytes, region, Parallelism::Sequential).is_err());
     }
 
     #[test]

@@ -17,10 +17,6 @@ pub enum SdcKind {
     /// Decompression-time error detected, block re-executed successfully
     /// (Alg. 2 l. 17).
     DecompCorrected,
-    /// Persistent archive corruption localized and rebuilt from a v2
-    /// parity group before decoding (`block` holds the stripe index —
-    /// see [`crate::ft::parity::recover`]).
-    ArchiveStripeRepaired,
 }
 
 /// One observed SDC event.
@@ -35,18 +31,29 @@ pub struct SdcEvent {
 }
 
 /// Summary of a fault-tolerant decompression run.
+///
+/// Two repair domains are reported separately because they are different
+/// coordinate spaces and different failure modes: `blocks_reexecuted`
+/// counts *blocks* healed by Algorithm 2 re-execution (transient
+/// decode-time faults), while `stripes_repaired` lists *parity stripes*
+/// of the stored archive rebuilt by [`crate::ft::parity::recover`] before
+/// decoding (persistent at-rest damage). Earlier versions stuffed stripe
+/// indices into [`SdcEvent::block`], conflating the two id spaces.
 #[derive(Debug, Clone, Default)]
 pub struct DecompressReport {
     /// Events in block order.
     pub events: Vec<SdcEvent>,
     /// Blocks that needed random-access re-execution.
     pub blocks_reexecuted: usize,
+    /// Protected-region *stripe* indices rebuilt from their v2 parity
+    /// groups before decoding (empty for clean or v1 archives).
+    pub stripes_repaired: Vec<usize>,
 }
 
 impl DecompressReport {
     /// True when nothing was detected.
     pub fn is_clean(&self) -> bool {
-        self.events.is_empty() && self.blocks_reexecuted == 0
+        self.events.is_empty() && self.blocks_reexecuted == 0 && self.stripes_repaired.is_empty()
     }
 
     /// Count events of one kind.
@@ -69,5 +76,15 @@ mod tests {
         assert!(!r.is_clean());
         assert_eq!(r.count(SdcKind::DecompCorrected), 1);
         assert_eq!(r.count(SdcKind::InputCorrected), 0);
+    }
+
+    #[test]
+    fn stripe_repairs_live_in_their_own_list_and_taint_cleanliness() {
+        let mut r = DecompressReport::default();
+        r.stripes_repaired = vec![4, 17];
+        // stripe repairs are not block events — the two id spaces must not mix
+        assert!(r.events.is_empty());
+        assert_eq!(r.blocks_reexecuted, 0);
+        assert!(!r.is_clean());
     }
 }

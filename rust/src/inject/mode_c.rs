@@ -16,7 +16,7 @@
 
 use std::collections::HashMap;
 
-use crate::compressor::{classic, engine, CompressionConfig};
+use crate::compressor::{classic, engine, CompressionConfig, Parallelism};
 use crate::data::Dims;
 use crate::error::Result;
 use crate::ft;
@@ -75,6 +75,12 @@ pub struct CampaignTally {
     pub trials: usize,
     /// Archive size the campaign struck.
     pub archive_bytes: usize,
+    /// Trials in which the recover stage rebuilt at least one parity
+    /// stripe (distinguishes "corrected by parity repair" from "the fault
+    /// landed in redundancy/slack bytes and decoding never noticed").
+    pub parity_repaired_trials: usize,
+    /// Total stripes rebuilt across all trials.
+    pub stripes_rebuilt: usize,
 }
 
 impl CampaignTally {
@@ -92,12 +98,20 @@ impl CampaignTally {
     }
 }
 
-/// Decompress `bytes` with the decoder matching `engine_kind`.
-fn decode(engine_kind: Engine, bytes: &[u8]) -> Result<engine::Decompressed> {
-    match engine_kind {
-        Engine::Classic => classic::decompress(bytes),
-        Engine::RandomAccess => engine::decompress(bytes),
-        Engine::FaultTolerant => ft::decompress(bytes),
+/// Decompress `bytes` with the decoder matching `engine_kind`, returning
+/// the decoded data plus the number of parity stripes the recover stage
+/// rebuilt (0 on error or when nothing needed repair). Every engine
+/// surfaces the report now — this is exactly the visibility the decode
+/// stage graph exists to provide.
+fn decode(engine_kind: Engine, bytes: &[u8]) -> (Result<engine::Decompressed>, usize) {
+    let reported = match engine_kind {
+        Engine::Classic => classic::decompress_reported(bytes),
+        Engine::RandomAccess => engine::decompress_reported(bytes, Parallelism::Sequential),
+        Engine::FaultTolerant => ft::decompress_with_report(bytes, Parallelism::Sequential),
+    };
+    match reported {
+        Ok((dec, report)) => (Ok(dec), report.stripes_repaired.len()),
+        Err(e) => (Err(e), 0),
     }
 }
 
@@ -133,7 +147,12 @@ pub fn campaign(
         for _ in 0..strikes.max(1) {
             strike(&mut bad, &mut rng, fault);
         }
-        let outcome = classify_archive(data, bound, decode(engine_kind, &bad));
+        let (result, stripes) = decode(engine_kind, &bad);
+        if stripes > 0 {
+            tally.parity_repaired_trials += 1;
+            tally.stripes_rebuilt += stripes;
+        }
+        let outcome = classify_archive(data, bound, result);
         *tally.counts.entry(outcome).or_insert(0) += 1;
     }
     Ok(tally)
@@ -209,6 +228,14 @@ mod tests {
                 engine_kind.name(),
                 100.0 * tally.corrected_rate()
             );
+            // most flips land in the protected region, so the campaign
+            // must actually observe parity rebuilds (not just "no error")
+            assert!(
+                tally.parity_repaired_trials > 0,
+                "{}: no trial surfaced a parity repair",
+                engine_kind.name()
+            );
+            assert!(tally.stripes_rebuilt >= tally.parity_repaired_trials);
         }
     }
 

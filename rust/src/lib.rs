@@ -136,6 +136,64 @@
 //! come back in `CoreOutput::stages` ([`compressor::stage::StageTimings`])
 //! and the `hotpath --json` bench tracks them across PRs.
 //!
+//! ## The decode stage graph: Algorithm 2 as a chain
+//!
+//! Decompression mirrors the compress side in
+//! [`compressor::destage`]: every random-access decode scenario — full,
+//! verified (Algorithm 2), verbose/hooked, unverified, and region — is one
+//! per-block chain
+//!
+//! ```text
+//! recover (parity-heal + voted parse) → decode → verify/re-execute → place
+//! ```
+//!
+//! parameterized by a sink (full-array scatter vs. region copy), with the
+//! same three bit-identical drivers (sequential-hooked, 1-worker
+//! pipelined — the checksum verify of block *i* overlaps the decode of
+//! block *i+1* — and block-parallel). The verify stage is where the two
+//! repair domains meet, and the split matters:
+//!
+//! * **re-execution heals transient decode faults** — a block whose
+//!   decoded data disagrees with its stored `sum_dc` is simply decoded
+//!   again (Alg. 2 l. 14), which works because the fault was in the
+//!   *computation*, not the bytes;
+//! * **parity heals at-rest damage** — a fault that lives in the stored
+//!   bytes would deterministically re-decode wrong, so the recover stage
+//!   repairs it *before* any block is decoded (format v2,
+//!   [`ft::parity::recover`]).
+//!
+//! Both repairs surface in [`ft::DecompressReport`]
+//! (`blocks_reexecuted` vs. `stripes_repaired` — block ids and stripe
+//! indices are different coordinate spaces and are never mixed). Verified
+//! **random access** applies Algorithm 2 to exactly the blocks a region
+//! intersects, closing the one decode path that previously skipped SDC
+//! checking:
+//!
+//! ```no_run
+//! use ftsz::compressor::block::Region;
+//! use ftsz::compressor::{CompressionConfig, ErrorBound, Parallelism};
+//! use ftsz::data::Dims;
+//!
+//! let field: Vec<f32> = (0..64 * 64 * 64).map(|i| (i as f32).sin()).collect();
+//! let cfg = CompressionConfig::new(ErrorBound::Abs(1e-3));
+//! let archive = ftsz::ft::compress(&field, Dims::d3(64, 64, 64), &cfg).unwrap();
+//! // decode one sub-cube, with per-block sum_dc verification + repair
+//! let region = Region { origin: (8, 8, 8), shape: (16, 16, 16) };
+//! let (values, report) =
+//!     ftsz::ft::decompress_region_verified(&archive, region, Parallelism::Auto).unwrap();
+//! assert_eq!(values.len(), region.len());
+//! assert!(report.is_clean()); // no re-executions, no stripe rebuilds
+//! ```
+//!
+//! The same capability is dispatchable over engines via
+//! [`compressor::stage::BlockCodec::decompress_region_verified`]
+//! (`ftrsz` implements it; `sz`/`rsz` report a clean *unsupported* error —
+//! no `sum_dc`, nothing to verify against). Per-stage decode timings come
+//! back from [`compressor::destage::decode_with_driver`]
+//! ([`compressor::destage::DecodeTimings`], `dstage.*` in the bench
+//! JSON), and the `hotpath --check` gate covers the pipelined decode
+//! driver exactly like the compress side.
+//!
 //! ## Self-healing archives (format v2)
 //!
 //! The ABFT layer above protects the *computation*; it cannot repair

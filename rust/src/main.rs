@@ -185,6 +185,7 @@ fn print_usage() {
          \x20            --error-bound E [--workers N (0 = auto)]\n\
          \x20            [--archive-parity [GROUP_WIDTH]  (self-healing format v2)] --out FILE\n\
          \x20 decompress --input FILE --out RAW [--verify] [--workers N] [--region z,y,x,dz,dy,dx]\n\
+         \x20            (--region composes with --verify: Alg. 2 per intersecting block)\n\
          \x20 info       --input FILE\n\
          \x20 scrub      --input FILE [--dry-run]   (heal a v2 archive in place from parity)\n\
          \x20 inject     --engine E --mode a-input|a-bin|b|c --errors N --runs R [--edge N]\n\
@@ -244,9 +245,27 @@ fn cmd_compress(f: &Flags) -> Result<()> {
     Ok(())
 }
 
+/// Print the SDC repairs a decompression run surfaced (if any).
+fn print_report(report: &ftsz::ft::DecompressReport) {
+    if !report.stripes_repaired.is_empty() {
+        println!(
+            "WARNING: stored bytes were damaged; {} stripe(s) rebuilt from parity: {:?}",
+            report.stripes_repaired.len(),
+            report.stripes_repaired
+        );
+    }
+    if report.blocks_reexecuted > 0 {
+        println!(
+            "WARNING: {} block(s) failed sum_dc verification and were re-executed",
+            report.blocks_reexecuted
+        );
+    }
+}
+
 fn cmd_decompress(f: &Flags) -> Result<()> {
     let path = f.required("input")?;
     let bytes = std::fs::read(path)?;
+    let par = parallelism_of(f)?;
     if let Some(region) = f.get("region") {
         let parts: Vec<usize> = region
             .split(',')
@@ -261,16 +280,40 @@ fn cmd_decompress(f: &Flags) -> Result<()> {
             shape: (parts[3], parts[4], parts[5]),
         };
         let t = std::time::Instant::now();
-        let data = engine::decompress_region_with(&bytes, region, parallelism_of(f)?)?;
-        println!("region {:?}: {} points in {:.3}ms", region, data.len(), t.elapsed().as_secs_f64() * 1e3);
+        // --verify: Algorithm 2 per intersecting block (ftrsz archives)
+        let data = if f.has("verify") {
+            let (data, report) = ft::decompress_region_verified(&bytes, region, par)?;
+            print_report(&report);
+            data
+        } else {
+            engine::decompress_region_with(&bytes, region, par)?
+        };
+        println!(
+            "region {:?}: {} points in {:.3}ms ({})",
+            region,
+            data.len(),
+            t.elapsed().as_secs_f64() * 1e3,
+            if f.has("verify") { "verified" } else { "unverified" },
+        );
+        if let Some(out) = f.get("out") {
+            let dims = Dims::d3(region.shape.0, region.shape.1, region.shape.2);
+            Field::new("region", dims, data)?.to_raw_file(std::path::Path::new(out))?;
+            println!("wrote {out}");
+        }
         return Ok(());
     }
-    let par = parallelism_of(f)?;
     let t = std::time::Instant::now();
     let dec = if f.has("verify") {
-        ft::decompress_with(&bytes, par)?
+        let (dec, report) = ft::decompress_with_report(&bytes, par)?;
+        print_report(&report);
+        dec
     } else {
-        engine::decompress_with(&bytes, par).or_else(|_| classic::decompress(&bytes))?
+        // report even without --verify: parity repairs happen in the
+        // recover stage and the user should learn their archive is rotting
+        let (dec, report) = engine::decompress_reported(&bytes, par)
+            .or_else(|_| classic::decompress_reported(&bytes))?;
+        print_report(&report);
+        dec
     };
     let secs = t.elapsed().as_secs_f64();
     let out = f.str_or("out", "out.bin");
@@ -384,7 +427,8 @@ fn cmd_inject(f: &Flags) -> Result<()> {
             0,
         )?;
         println!(
-            "{} mode=c {} runs={} archive={}B: corrected {} ({:.1}%) clean-error {} silent-sdc {}",
+            "{} mode=c {} runs={} archive={}B: corrected {} ({:.1}%) clean-error {} silent-sdc {} \
+             | parity repaired {} trial(s), {} stripe(s)",
             engine_kind.name(),
             match fault {
                 ArchiveFault::BitFlip => "fault=bit-flip".to_string(),
@@ -396,6 +440,8 @@ fn cmd_inject(f: &Flags) -> Result<()> {
             100.0 * tally.corrected_rate(),
             tally.count(ArchiveOutcome::CleanError),
             tally.count(ArchiveOutcome::SilentSdc),
+            tally.parity_repaired_trials,
+            tally.stripes_rebuilt,
         );
         // --strict: the CI smoke gate — any silent SDC fails the run; the
         // ≥95%-corrected target additionally applies to single-bit-flip

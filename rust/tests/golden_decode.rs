@@ -1,0 +1,286 @@
+//! Golden decode: the decode stage graph's three drivers are
+//! bit-interchangeable. Decoded `f32` output must be identical across
+//! sequential / pipelined / block-parallel drivers × {1, 2, 4} workers ×
+//! v1/v2 archives × engines — for full, verified, region and
+//! verified-region decompression — and verified-region decode must detect
+//! exactly the injected faults full verified decode detects.
+
+use ftsz::compressor::block::Region;
+use ftsz::compressor::destage::{self, DecodeDriver};
+use ftsz::compressor::{classic, engine, CompressionConfig, ErrorBound, Parallelism};
+use ftsz::data::{synthetic, Dims, Field};
+use ftsz::ft::{self, parity::ParityParams};
+use ftsz::inject::Engine;
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// The expected region values: the `region` slice of a full decode.
+fn region_slice(full: &[f32], dims: Dims, region: Region) -> Vec<f32> {
+    let (_, ry, rx) = dims.as_3d();
+    let mut want = Vec::with_capacity(region.len());
+    for z in 0..region.shape.0 {
+        for y in 0..region.shape.1 {
+            for x in 0..region.shape.2 {
+                let g = ((region.origin.0 + z) * ry + region.origin.1 + y) * rx
+                    + region.origin.2
+                    + x;
+                want.push(full[g]);
+            }
+        }
+    }
+    want
+}
+
+fn field() -> Field {
+    synthetic::hurricane_field("t", Dims::d3(10, 16, 16), 311)
+}
+
+fn cfg(parity: bool) -> CompressionConfig {
+    let c = CompressionConfig::new(ErrorBound::Abs(1e-3)).with_block_size(6);
+    if parity {
+        c.with_archive_parity(ParityParams { stripe_len: 64, group_width: 8 })
+    } else {
+        c
+    }
+}
+
+const DRIVERS: [DecodeDriver; 4] = [
+    DecodeDriver::Sequential,
+    DecodeDriver::Pipelined,
+    DecodeDriver::Parallel(2),
+    DecodeDriver::Parallel(4),
+];
+
+#[test]
+fn full_decode_bit_identical_across_drivers_engines_and_formats() {
+    let f = field();
+    for parity in [false, true] {
+        for e in [Engine::RandomAccess, Engine::FaultTolerant] {
+            let bytes = e.codec().compress(&f.data, f.dims, &cfg(parity)).unwrap();
+            let verify = e == Engine::FaultTolerant;
+            let reference =
+                destage::decode_with_driver(&bytes, false, None, DecodeDriver::Sequential)
+                    .unwrap();
+            for driver in DRIVERS {
+                for v in [false, verify] {
+                    let got = destage::decode_with_driver(&bytes, v, None, driver).unwrap();
+                    assert_eq!(
+                        bits(&got.data),
+                        bits(&reference.data),
+                        "{} parity={parity} verify={v} {driver:?}",
+                        e.name()
+                    );
+                }
+            }
+            // the public worker-count knob must agree with the drivers too
+            for w in [1usize, 2, 4] {
+                let got =
+                    e.codec().decompress(&bytes, Parallelism::from_workers(w)).unwrap();
+                assert_eq!(
+                    bits(&got.data),
+                    bits(&reference.data),
+                    "{} parity={parity} w={w}",
+                    e.name()
+                );
+            }
+        }
+        // classic is not part of the destage chain (single dependent
+        // stream) but must keep decoding identically through its codec
+        let bytes = Engine::Classic.codec().compress(&f.data, f.dims, &cfg(parity)).unwrap();
+        let a = classic::decompress(&bytes).unwrap();
+        let b = Engine::Classic.codec().decompress(&bytes, Parallelism::Fixed(4)).unwrap();
+        assert_eq!(bits(&a.data), bits(&b.data));
+    }
+}
+
+#[test]
+fn region_decode_bit_identical_across_drivers_and_matches_full_slice() {
+    let f = field();
+    let region = Region { origin: (3, 4, 2), shape: (5, 9, 11) };
+    for parity in [false, true] {
+        for e in [Engine::RandomAccess, Engine::FaultTolerant] {
+            let bytes = e.codec().compress(&f.data, f.dims, &cfg(parity)).unwrap();
+            let full = destage::decode_with_driver(&bytes, false, None, DecodeDriver::Sequential)
+                .unwrap();
+            let want = region_slice(&full.data, f.dims, region);
+            let verify_modes: &[bool] =
+                if e == Engine::FaultTolerant { &[false, true] } else { &[false] };
+            for &v in verify_modes {
+                for driver in DRIVERS {
+                    let got =
+                        destage::decode_with_driver(&bytes, v, Some(region), driver).unwrap();
+                    assert_eq!(
+                        bits(&got.data),
+                        bits(&want),
+                        "{} parity={parity} verify={v} {driver:?}",
+                        e.name()
+                    );
+                }
+            }
+            // public region APIs at {1,2,4} workers
+            for w in [1usize, 2, 4] {
+                let got = e
+                    .codec()
+                    .decompress_region(&bytes, region, Parallelism::from_workers(w))
+                    .unwrap();
+                assert_eq!(bits(&got), bits(&want), "{} region w={w}", e.name());
+                if e == Engine::FaultTolerant {
+                    let (got, report) = e
+                        .codec()
+                        .decompress_region_verified(
+                            &bytes,
+                            region,
+                            Parallelism::from_workers(w),
+                        )
+                        .unwrap();
+                    assert_eq!(bits(&got), bits(&want), "{} vregion w={w}", e.name());
+                    assert!(report.is_clean());
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn v2_repairs_are_reported_as_stripes_on_every_decode_path() {
+    let f = field();
+    let bytes = ft::compress(&f.data, f.dims, &cfg(true)).unwrap();
+    // find a flip in the protected region that the parity layer repairs
+    let mut damaged = bytes.clone();
+    damaged[bytes.len() / 2] ^= 0x08;
+    let (dec, report) = ft::decompress_with_report(&damaged, Parallelism::Sequential).unwrap();
+    assert!(
+        !report.stripes_repaired.is_empty(),
+        "mid-archive flip should have needed a parity rebuild"
+    );
+    assert_eq!(report.blocks_reexecuted, 0, "at-rest damage is not a re-execution");
+    assert!(ftsz::analysis::max_abs_err(&f.data, &dec.data) <= 1e-3);
+    // the unverified ablation path surfaces the same repair now
+    let (_, unv) = ft::decompress_unverified(&damaged).unwrap();
+    assert_eq!(unv.stripes_repaired, report.stripes_repaired);
+    // ...and so does verified region decode
+    let region = Region { origin: (0, 0, 0), shape: (4, 4, 4) };
+    let (_, reg) = ft::decompress_region_verified(&damaged, region, Parallelism::Sequential)
+        .unwrap();
+    assert_eq!(reg.stripes_repaired, report.stripes_repaired);
+}
+
+#[test]
+fn verified_region_detects_flips_that_full_verified_decode_detects() {
+    // an ftrsz v1 archive (no parity): a bit flip in the stored bytes is
+    // persistent, so re-execution cannot heal it — full verified decode
+    // reports it as an error. Verified region decode over the whole domain
+    // must reach the same verdict; unprotected region decode of the same
+    // bytes is exactly the silent path this PR closed.
+    let f = field();
+    let bytes = ft::compress(&f.data, f.dims, &cfg(false)).unwrap();
+    let all = Region::all(f.dims);
+    let mut detected = 0usize;
+    for seed in 0..60u64 {
+        let mut bad = bytes.clone();
+        // deterministic pseudo-random strike derived from the seed
+        let off = (seed as usize * 2654435761) % bytes.len();
+        let bit = (seed % 8) as u8;
+        bad[off] ^= 1 << bit;
+        match ft::decompress(&bad) {
+            Err(_) => {
+                detected += 1;
+                assert!(
+                    ft::decompress_region_verified(&bad, all, Parallelism::Sequential)
+                        .is_err(),
+                    "seed {seed}: full verify detected the flip at byte {off} but \
+                     verified region decode of the whole domain did not"
+                );
+            }
+            Ok(dec) => {
+                // harmless flip (slack/metadata that still decodes in
+                // bound): verified region must then also succeed in bound
+                assert!(ftsz::analysis::max_abs_err(&f.data, &dec.data) <= 1e-3);
+                let (got, _) =
+                    ft::decompress_region_verified(&bad, all, Parallelism::Sequential)
+                        .unwrap();
+                assert_eq!(bits(&got), bits(&dec.data));
+            }
+        }
+    }
+    assert!(detected > 10, "campaign too weak: only {detected}/60 flips detected");
+}
+
+#[test]
+fn verified_subregion_localizes_detection_to_the_damaged_block() {
+    // strike one block's payload; a verified region that contains the
+    // block must error, a verified region disjoint from it must succeed
+    let f = field();
+    let b = 6usize; // cfg() block size
+    let bytes = ft::compress(&f.data, f.dims, &cfg(false)).unwrap();
+    let clean = engine::decompress(&bytes).unwrap();
+    let (dz, ry, rx) = f.dims.as_3d();
+    let mut exercised = 0usize;
+    for seed in 0..200u64 {
+        let mut bad = bytes.clone();
+        let off = (seed as usize * 40503) % bytes.len();
+        bad[off] ^= 1 << (seed % 8);
+        // interesting case: full verified decode detects, but the bytes
+        // still parse and decode unverified — the silent-SDC shape
+        if ft::decompress(&bad).is_ok() {
+            continue;
+        }
+        let Ok(dirty) = engine::decompress(&bad) else { continue };
+        // locate the damaged points; skip if more than one block is hit
+        let mut hit_block: Option<(usize, usize, usize)> = None;
+        let mut multi = false;
+        for (i, (a, d)) in clean.data.iter().zip(&dirty.data).enumerate() {
+            if a.to_bits() != d.to_bits() {
+                let z = i / (ry * rx);
+                let y = (i / rx) % ry;
+                let x = i % rx;
+                let blk = (z / b, y / b, x / b);
+                match hit_block {
+                    None => hit_block = Some(blk),
+                    Some(h) if h != blk => multi = true,
+                    Some(_) => {}
+                }
+            }
+        }
+        let Some((bz, by, bx)) = hit_block else { continue };
+        if multi {
+            continue;
+        }
+        exercised += 1;
+        // region = exactly the damaged block
+        let damaged_region = Region {
+            origin: (bz * b, by * b, bx * b),
+            shape: (
+                b.min(dz - bz * b),
+                b.min(ry - by * b),
+                b.min(rx - bx * b),
+            ),
+        };
+        assert!(
+            ft::decompress_region_verified(&bad, damaged_region, Parallelism::Sequential)
+                .is_err(),
+            "seed {seed}: verified region over the damaged block must detect"
+        );
+        // region = a block far away (opposite corner), must verify clean
+        let far = Region {
+            origin: (0, 0, 0),
+            shape: (b.min(dz), b.min(ry), b.min(rx)),
+        };
+        if far.origin != damaged_region.origin {
+            let (got, report) =
+                ft::decompress_region_verified(&bad, far, Parallelism::Sequential).unwrap();
+            assert!(report.is_clean());
+            assert_eq!(
+                bits(&got),
+                bits(&region_slice(&clean.data, f.dims, far)),
+                "seed {seed}: clean far-away block decoded differently"
+            );
+        }
+        if exercised >= 5 {
+            break;
+        }
+    }
+    assert!(exercised > 0, "no strike produced the single-damaged-block shape");
+}

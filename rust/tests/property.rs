@@ -375,6 +375,89 @@ fn prop_unified_codec_dispatch_all_engines() {
                     Err(_) if !codec.supports_region() => {}
                     Err(x) => return Err(format!("{} region failed: {x}", e.name())),
                 }
+                // verified region decode: supported ⇔ ftrsz, bits match the
+                // full decode slice, clean report on clean archives
+                match codec.decompress_region_verified(&base, region, par) {
+                    Ok((got, report)) => {
+                        if !codec.supports_region_verified() {
+                            return Err(format!("{} vregion but unsupported", e.name()));
+                        }
+                        if !report.is_clean() {
+                            return Err(format!("{} clean vregion reported events", e.name()));
+                        }
+                        let mut idx = 0;
+                        for z in 0..region.shape.0 {
+                            for y in 0..region.shape.1 {
+                                for x in 0..region.shape.2 {
+                                    let gi = ((oz + z) * r + oy + y) * c + ox + x;
+                                    if got[idx].to_bits() != full.data[gi].to_bits() {
+                                        return Err(format!(
+                                            "{} vregion mismatch at {z},{y},{x} (w={w})",
+                                            e.name()
+                                        ));
+                                    }
+                                    idx += 1;
+                                }
+                            }
+                        }
+                    }
+                    Err(_) if !codec.supports_region_verified() => {}
+                    Err(x) => return Err(format!("{} vregion failed: {x}", e.name())),
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_decode_drivers_bit_identical() {
+    // the decode-graph tentpole invariant: sequential / pipelined /
+    // block-parallel drivers are bit-interchangeable for full, verified
+    // and region decode at random shapes and block sizes
+    use ftsz::compressor::destage::{decode_with_driver, DecodeDriver};
+    forall("decode drivers bit-identical", 15, |g| {
+        let dims = Dims::d3(g.usize_in(2, 8), g.usize_in(2, 12), g.usize_in(2, 12));
+        let mut data = Vec::with_capacity(dims.len());
+        let mut v = g.f64_in(-5.0, 5.0);
+        for _ in 0..dims.len() {
+            v += g.f64_in(-0.3, 0.3);
+            data.push(v as f32);
+        }
+        let cfg = CompressionConfig::new(ErrorBound::Abs(1e-3)).with_block_size(g.usize_in(2, 8));
+        let bytes = ftsz::ft::compress(&data, dims, &cfg).map_err(|e| e.to_string())?;
+        let (d, r, c) = dims.as_3d();
+        let oz = g.usize_in(0, d - 1);
+        let oy = g.usize_in(0, r - 1);
+        let ox = g.usize_in(0, c - 1);
+        let region = Region {
+            origin: (oz, oy, ox),
+            shape: (g.usize_in(1, d - oz), g.usize_in(1, r - oy), g.usize_in(1, c - ox)),
+        };
+        let verify = g.usize_in(0, 1) == 1;
+        let reg = g.usize_in(0, 1) == 1;
+        let region_arg = if reg { Some(region) } else { None };
+        let base = decode_with_driver(&bytes, verify, region_arg, DecodeDriver::Sequential)
+            .map_err(|e| e.to_string())?;
+        for driver in
+            [DecodeDriver::Pipelined, DecodeDriver::Parallel(2), DecodeDriver::Parallel(5)]
+        {
+            let got = decode_with_driver(&bytes, verify, region_arg, driver)
+                .map_err(|e| e.to_string())?;
+            if got.data.len() != base.data.len() {
+                return Err(format!(
+                    "decode length differs ({driver:?}): {} vs {}",
+                    got.data.len(),
+                    base.data.len()
+                ));
+            }
+            if !got.data.iter().zip(&base.data).all(|(a, b)| a.to_bits() == b.to_bits()) {
+                return Err(format!(
+                    "decode differs ({driver:?}, verify={verify}, region={reg})"
+                ));
+            }
+            if !got.report.is_clean() {
+                return Err(format!("clean archive reported repairs ({driver:?})"));
             }
         }
         Ok(())

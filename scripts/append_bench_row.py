@@ -1,0 +1,60 @@
+#!/usr/bin/env python3
+"""Append one dated summary row of a hotpath bench run to EXPERIMENTS.md.
+
+Usage: python3 scripts/append_bench_row.py [BENCH_hotpath.json] [EXPERIMENTS.md]
+
+Reads the flat `ftsz.hotpath.v1` JSON the `hotpath --json` bench writes
+(default: rust/BENCH_hotpath.json) and appends a markdown table row to
+EXPERIMENTS.md (created by PR 4; the table header defines the columns).
+Missing keys render as `-` so schema growth never breaks the archiver.
+"""
+
+import datetime
+import json
+import os
+import subprocess
+import sys
+
+
+def main() -> int:
+    bench_path = sys.argv[1] if len(sys.argv) > 1 else "rust/BENCH_hotpath.json"
+    exp_path = sys.argv[2] if len(sys.argv) > 2 else "EXPERIMENTS.md"
+    with open(bench_path) as f:
+        m = json.load(f)
+    if m.get("schema") != "ftsz.hotpath.v1":
+        print(f"warning: unexpected schema {m.get('schema')!r}", file=sys.stderr)
+
+    def v(key: str, fmt: str = "{:.1f}") -> str:
+        x = m.get(key)
+        return fmt.format(x) if isinstance(x, (int, float)) else "-"
+
+    try:
+        commit = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, check=True,
+        ).stdout.strip()
+    except Exception:
+        commit = os.environ.get("GITHUB_SHA", "unknown")[:9]
+
+    date = datetime.date.today().isoformat()
+    row = "| {} | {} | {} | {} | {} | {} | {} | {} | {} | {} | {} |\n".format(
+        date,
+        commit,
+        v("rsz.compress_mbps"),
+        v("ftrsz.compress_mbps"),
+        v("scaling.rsz_decode.w1_mbps"),
+        v("scaling.ftrsz_verify.w1_mbps"),
+        v("stage.rsz.speedup", "{:.2f}"),
+        v("dstage.rsz.speedup", "{:.2f}"),
+        v("dstage.ftrsz.speedup", "{:.2f}"),
+        v("dstage.region_verified.w1_mbps"),
+        v("parity.size_overhead_pct", "{:.2f}"),
+    )
+    with open(exp_path, "a") as f:
+        f.write(row)
+    print(f"appended to {exp_path}: {row}", end="")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
