@@ -129,6 +129,11 @@ pub struct CompressStats {
     pub regression_blocks: usize,
     /// Points stored verbatim.
     pub n_unpred: usize,
+    /// Blocks encoded as a single constant ([`super::xsz`] only — the
+    /// SZx-style constant-block detection; always 0 for the predictive
+    /// engines, whose per-block mode lives in `lorenzo_blocks` /
+    /// `regression_blocks` instead).
+    pub constant_blocks: usize,
     /// Paper line-7 double-check demotions (machine-epsilon edge cases).
     pub line7_fallbacks: usize,
     /// Instruction-duplication catches at the prediction site.
@@ -324,6 +329,20 @@ pub fn decompress_region_verified(
     par: super::Parallelism,
 ) -> Result<(Vec<f32>, DecompressReport)> {
     let out = destage::decode_graph(bytes, &mut NoDecompressHooks, true, Some(region), par)?;
+    Ok((out.data, out.report))
+}
+
+/// Random-access region decompression with the run report — the region
+/// counterpart of [`decompress_reported`]: the recover stage's parity
+/// repairs (`report.stripes_repaired`) stay visible even though no
+/// Algorithm 2 verification runs (the unverified-ablation gap the
+/// region path kept after PR 4 closed it for full decodes).
+pub fn decompress_region_reported(
+    bytes: &[u8],
+    region: Region,
+    par: super::Parallelism,
+) -> Result<(Vec<f32>, DecompressReport)> {
+    let out = destage::decode_graph(bytes, &mut NoDecompressHooks, false, Some(region), par)?;
     Ok((out.data, out.report))
 }
 

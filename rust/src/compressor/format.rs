@@ -66,6 +66,14 @@ pub const FLAG_FAULT_TOLERANT: u32 = 1 << 1;
 pub const FLAG_CLASSIC: u32 = 1 << 2;
 /// Flag bit: archive-level parity protection present (format v2).
 pub const FLAG_ARCHIVE_PARITY: u32 = 1 << 3;
+/// Flag bit: SZx-style ultra-fast archive ([`super::xsz`]). The payload
+/// section holds self-describing per-block byte streams (constant /
+/// fixed-point / verbatim — no Huffman coding), the meta section's Huffman
+/// table is a 2-symbol placeholder that is never consulted, and the
+/// per-block predictor tags are a fixed `Lorenzo` filler. Everything else
+/// (sections, offsets, unpred pool, `sum_dc`, parity) reads exactly like
+/// an rsz/ftrsz archive, which is why every decode path works unchanged.
+pub const FLAG_XSZ: u32 = 1 << 4;
 
 /// Sanity cap for section sizes (prevents hostile/corrupt headers from
 /// driving huge allocations).
@@ -133,6 +141,11 @@ impl Header {
     /// True when the archive carries parity self-healing (format v2).
     pub fn has_archive_parity(&self) -> bool {
         self.flags & FLAG_ARCHIVE_PARITY != 0
+    }
+
+    /// True for SZx-style ultra-fast archives ([`super::xsz`]).
+    pub fn is_xsz(&self) -> bool {
+        self.flags & FLAG_XSZ != 0
     }
 }
 
@@ -244,6 +257,16 @@ impl<'a> Writer<'a> {
         }
         if self.parity.is_some() {
             computed |= FLAG_ARCHIVE_PARITY;
+        }
+        // FLAG_XSZ is caller-declared: the writer cannot tell an xsz
+        // payload from an rsz one by looking at the bytes, so the engine
+        // asserts it. It only makes sense for per-block (random-access)
+        // layouts — a classic archive claiming it would be a lie.
+        if self.header.flags & FLAG_XSZ != 0 {
+            if classic {
+                return Err(Error::Format("classic archive claims the xsz layout".into()));
+            }
+            computed |= FLAG_XSZ;
         }
         // OR-in the computed flags; a caller-set bit the contents do not
         // justify (or an unknown bit) would lie to every reader — reject.
@@ -942,6 +965,51 @@ mod tests {
         w.header.flags = FLAG_ARCHIVE_PARITY | FLAG_RANDOM_ACCESS;
         let a = parse(&w.write().unwrap()).unwrap();
         assert!(a.header.has_archive_parity());
+    }
+
+    #[test]
+    fn xsz_flag_kept_for_random_access_rejected_for_classic() {
+        let table = tiny_table();
+        let unpred = [7.5f32, -2.0];
+        // the engine-declared xsz flag survives the write + parse roundtrip
+        let mut w = sample_writer(&table, &unpred);
+        w.header.flags = FLAG_XSZ;
+        let a = parse(&w.write().unwrap()).unwrap();
+        assert!(a.header.is_xsz());
+        assert!(a.header.is_random_access());
+        // ...and composes with parity (v2) like any other engine
+        let mut w = sample_writer(&table, &unpred);
+        w.parity = Some(ParityParams { stripe_len: 32, group_width: 4 });
+        w.header.flags = FLAG_XSZ;
+        let a = parse(&w.write().unwrap()).unwrap();
+        assert!(a.header.is_xsz() && a.header.has_archive_parity());
+        // a classic archive claiming the xsz layout is a lie — rejected
+        let metas = vec![BlockMeta {
+            predictor: Predictor::Lorenzo,
+            coeffs: [0.0; 4],
+            n_unpred: 0,
+            payload_bits: 8,
+        }];
+        let w = Writer {
+            header: Header {
+                flags: FLAG_XSZ,
+                dims: Dims::d1(4),
+                block_size: 4,
+                quant_radius: 2,
+                error_bound: 1e-3,
+                n_blocks: 1,
+            },
+            table: &table,
+            blocks: vec![],
+            classic_payload: Some((metas, vec![0xAA])),
+            unpred: &[],
+            sum_dc: None,
+            zstd_level: 3,
+            payload_zstd: false,
+            parity: None,
+            unpred_body: None,
+        };
+        assert!(w.write().is_err());
     }
 
     #[test]

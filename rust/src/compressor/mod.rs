@@ -1,13 +1,17 @@
 //! SZ-2.1-style error-bounded lossy compression core.
 //!
-//! Three entry points share the subroutines in this module:
+//! Four entry points share the subroutines in this module:
 //!
 //! * [`classic`] — the "original SZ" baseline with cross-block prediction
 //!   dependencies (best ratio, fragile under SDC, no random access);
 //! * [`engine`] — the paper's independent-block redesign (**rsz**):
 //!   per-block prediction + quantization + Huffman payloads, random-access
 //!   region decompression;
-//! * [`crate::ft`] — **ftrsz**, the fault-tolerant engine layered on top.
+//! * [`crate::ft`] — **ftrsz**, the fault-tolerant engine layered on top;
+//! * [`xsz`] — the SZx-style ultra-fast engine (**xsz** / **ftxsz**): no
+//!   estimation, no prediction, no Huffman — constant-block detection plus
+//!   necessary-leading-bytes fixed-point codes, for throughput-bound
+//!   workloads (in-memory checkpointing, burst buffers).
 //!
 //! Pipeline per block (paper §3.1): predict (Lorenzo or per-block linear
 //! regression, chosen by sampling) → linear-scaling quantization against the
@@ -34,6 +38,7 @@ pub mod quantize;
 pub mod regression;
 pub mod sampling;
 pub mod stage;
+pub mod xsz;
 
 use crate::error::{Error, Result};
 

@@ -157,9 +157,12 @@ impl StageTimings {
 /// Adding an engine is ~50 lines: implement `compress` on top of
 /// [`crate::compressor::engine::compress_core`] (pick the [`CoreParams`]
 /// switches your protect stage needs) and delegate the decode methods —
-/// see the `lib.rs` quickstart.
+/// see the `lib.rs` quickstart. An engine may also bring its own compress
+/// chain entirely (the SZx-style [`crate::compressor::xsz`] does — no
+/// Huffman barrier, so its pipeline overlaps fully) and still get every
+/// decode path for free by emitting the shared per-block container.
 pub trait BlockCodec: Sync {
-    /// Paper name (`sz` / `rsz` / `ftrsz`).
+    /// Paper name (`sz` / `rsz` / `ftrsz` / `xsz` / `ftxsz`).
     fn name(&self) -> &'static str;
 
     /// The stage switches this codec runs the chain with (introspection
@@ -1156,16 +1159,18 @@ mod tests {
     fn codec_dispatch_roundtrips_every_engine() {
         use crate::inject::Engine;
         let f = synthetic::hurricane_field("t", Dims::d3(8, 10, 10), 5);
-        for e in [Engine::Classic, Engine::RandomAccess, Engine::FaultTolerant] {
+        for e in Engine::ALL {
             let codec = e.codec();
             assert_eq!(codec.name(), e.name());
             let bytes = codec.compress(&f.data, f.dims, &cfg(1e-3)).unwrap();
             let dec = codec.decompress(&bytes, Parallelism::Sequential).unwrap();
             assert!(crate::analysis::max_abs_err(&f.data, &dec.data) <= 1e-3, "{}", e.name());
-            // capability flags match the format
-            assert_eq!(codec.supports_verify(), e == Engine::FaultTolerant);
-            assert_eq!(codec.supports_region(), e != Engine::Classic);
-            assert_eq!(codec.supports_region_verified(), e == Engine::FaultTolerant);
+            // capability flags match the format: only the ft engines carry
+            // sum_dc, only classic lacks a per-block layout
+            let ft = matches!(e, Engine::FaultTolerant | Engine::UltraFastFT);
+            assert_eq!(codec.supports_verify(), ft, "{}", e.name());
+            assert_eq!(codec.supports_region(), e != Engine::Classic, "{}", e.name());
+            assert_eq!(codec.supports_region_verified(), ft, "{}", e.name());
         }
     }
 
@@ -1191,13 +1196,23 @@ mod tests {
         assert!(rsz
             .decompress_region_verified(&bytes, region, Parallelism::Sequential)
             .is_err());
-        // ftrsz supports everything
-        let ftrsz = Engine::FaultTolerant.codec();
-        let bytes = ftrsz.compress(&f.data, f.dims, &cfg(1e-3)).unwrap();
-        let (vals, report) = ftrsz
+        // xsz: region yes (per-block layout), verify no (no sum_dc)
+        let xsz = Engine::UltraFast.codec();
+        let bytes = xsz.compress(&f.data, f.dims, &cfg(1e-3)).unwrap();
+        assert!(xsz.decompress_verified(&bytes, Parallelism::Sequential).is_err());
+        assert!(xsz.decompress_region(&bytes, region, Parallelism::Sequential).is_ok());
+        assert!(xsz
             .decompress_region_verified(&bytes, region, Parallelism::Sequential)
-            .unwrap();
-        assert_eq!(vals.len(), region.len());
-        assert!(report.is_clean());
+            .is_err());
+        // the ft engines support everything
+        for e in [Engine::FaultTolerant, Engine::UltraFastFT] {
+            let codec = e.codec();
+            let bytes = codec.compress(&f.data, f.dims, &cfg(1e-3)).unwrap();
+            let (vals, report) = codec
+                .decompress_region_verified(&bytes, region, Parallelism::Sequential)
+                .unwrap();
+            assert_eq!(vals.len(), region.len(), "{}", e.name());
+            assert!(report.is_clean(), "{}", e.name());
+        }
     }
 }

@@ -1,0 +1,1246 @@
+//! **xsz** — the SZx-style ultra-fast engine (fourth [`BlockCodec`]), plus
+//! its `ft`-protected variant **ftxsz**.
+//!
+//! Where rsz spends its time predicting (Lorenzo / per-block regression,
+//! chosen by a sampling pass) and entropy-coding (a global canonical
+//! Huffman table), xsz — following SZx (Yu et al., 2022) — spends almost
+//! none: there is **no sampling/estimation pass**, **no prediction**, and
+//! **no Huffman coding**. Each block is encoded in one of three
+//! self-describing modes:
+//!
+//! * **constant** — when the block's midrange value covers every point
+//!   within the error bound (`max - min <= 2e`), the block serializes to a
+//!   single f32. Scientific fields are full of such blocks (halos, masked
+//!   regions, converged zones), and detecting them costs one min/max scan;
+//! * **fixed-point** — otherwise each value quantizes to
+//!   `round((v - min) / 2e)` and only the *necessary leading bytes* of
+//!   that integer are stored: 1, 2, 3 or 4 bytes per point, chosen per
+//!   block from the range. The all-ones code of the chosen width is an
+//!   escape into the shared unpredictable pool (non-finite values, values
+//!   the double-check pushes out of bound);
+//! * **verbatim** — degenerate blocks (no finite values, or a range too
+//!   wide for 4-byte codes) store every value raw in the unpredictable
+//!   pool.
+//!
+//! The archive is the ordinary container format with [`format::FLAG_XSZ`]
+//! set: per-block byte payloads behind `payload_offsets`, escapes in the
+//! unpred section, and — for **ftxsz** — per-block `sum_dc` checksums in
+//! the ft section. That is deliberate: the *entire decode stack*
+//! ([`super::destage`] — full, verified, region, verified-region, all
+//! three drivers, parity recovery, scrub) works on xsz archives through a
+//! single dispatch branch in `destage::decode_block`. Adding the engine
+//! touched no decode driver.
+//!
+//! **ftxsz** runs the same protection stages as ftrsz, minus the ones
+//! whose fragile sites xsz deleted: per-block input checksums (verified +
+//! corrected before encoding), code-array checksums (verified + corrected
+//! before serialization), instruction duplication around the
+//! reconstruction (the one fragile computation left — there is no
+//! prediction site), and stored `sum_dc` driving Algorithm 2 verification
+//! with block re-execution at decode time.
+//!
+//! Compression has the same three byte-identical drivers as the stage
+//! graph — sequential (hooked, the injection path), 1-worker
+//! software-pipelined, and block-parallel — but with one structural
+//! difference worth measuring: **xsz has no global-Huffman-table
+//! barrier**. On the rsz pipeline the companion thread must stall before
+//! bit-emission until the last block is quantized; on the xsz pipeline
+//! the companion *encodes and commits each block's payload bytes the
+//! moment its codes arrive*, so every stage after quantize overlaps fully
+//! and the serial tail is just the final section assembly. The `hotpath`
+//! bench's `stage.xsz.*` keys record exactly that, and its `--check` gate
+//! holds xsz to ≥ 2× the rsz compression throughput.
+
+use std::sync::mpsc;
+use std::time::Instant;
+
+use super::block::{BlockGrid, Region};
+use super::engine::{
+    self, Arena, CompressStats, CoreOutput, CoreParams, Decompressed, DecompressHooks, Hooks,
+    NoHooks,
+};
+use super::format::{self, Archive, BlockMeta, BlockPayload, Header, Writer};
+use super::huffman::HuffmanTable;
+use super::stage::{BlockCodec, StageTimings};
+use super::{CompressionConfig, Parallelism};
+use crate::data::Dims;
+use crate::error::{Error, Result};
+use crate::ft::checksum::{self, Correction};
+use crate::ft::duplicate::protected_eval;
+use crate::ft::report::{DecompressReport, SdcEvent, SdcKind};
+use crate::util::bits::bytes::{self, Cursor};
+
+/// FT core switches for **ftxsz** (duplication + checksums on).
+pub const FTXSZ_PARAMS: CoreParams = CoreParams { protect: true, ft: true };
+
+/// Block mode tag: the whole block is one constant (a single f32 follows).
+const MODE_CONSTANT: u8 = 0;
+/// Block mode tags 1..=4: fixed-point codes of that many bytes per point
+/// (an f32 base then `n * tag` code bytes follow).
+const MODE_FIXED_MAX: u8 = 4;
+/// Block mode tag: every value lives verbatim in the unpred pool.
+const MODE_VERBATIM: u8 = 5;
+
+/// Pipelining needs at least two blocks to overlap anything.
+const MIN_OVERLAP_BLOCKS: usize = 2;
+/// Minimum dataset size for the pipelined driver (same rationale and value
+/// as [`super::stage`]): below this the companion thread costs more than
+/// the compression work.
+const MIN_OVERLAP_POINTS: usize = 4096;
+/// Bounded depth of the quantize → encode channel on the pipelined path.
+const PIPE_DEPTH: usize = 4;
+
+// ---------------------------------------------------------------------------
+// the shared per-block encoder (hook points live)
+// ---------------------------------------------------------------------------
+
+/// Encode one block: mode decision + code emission + reconstruction.
+/// Appends fixed-point codes to `codes` and escaped/verbatim values to
+/// `unpred`; fills `dcmp_block` with the bit-exact reconstruction the
+/// decoder will produce (the `sum_dc` input in ft mode). Returns the mode
+/// tag and the block parameter (constant mid / fixed base; 0.0 verbatim).
+///
+/// The reconstruction is the one fragile computation site left in this
+/// engine (there is no prediction), so the `corrupt_dcmp` hook and — with
+/// `protect` — instruction duplication live here, exactly like the
+/// quantize stage of the predictive engines.
+#[allow(clippy::too_many_arguments)]
+fn quantize_block<H: Hooks>(
+    bi: usize,
+    block: &[f32],
+    bound: f64,
+    protect: bool,
+    hooks: &mut H,
+    codes: &mut Vec<u32>,
+    unpred: &mut Vec<f32>,
+    dcmp_block: &mut Vec<f32>,
+    stats: &mut CompressStats,
+) -> (u8, f32) {
+    use std::hint::black_box as bb;
+    let twoe = 2.0 * bound;
+    dcmp_block.clear();
+    dcmp_block.resize(block.len(), 0.0);
+
+    // one scan: finite min/max (the whole "estimation pass" of this engine)
+    let mut lo = f64::INFINITY;
+    let mut hi = f64::NEG_INFINITY;
+    let mut n_finite = 0usize;
+    for &v in block {
+        if v.is_finite() {
+            let v = v as f64;
+            if v < lo {
+                lo = v;
+            }
+            if v > hi {
+                hi = v;
+            }
+            n_finite += 1;
+        }
+    }
+
+    // ---- constant-block detection (SZx's fast path) ----
+    if n_finite == block.len() && hi - lo <= twoe {
+        let mid = ((lo + hi) * 0.5) as f32;
+        let mut ok = true;
+        for (p, &v) in block.iter().enumerate() {
+            let first = hooks.corrupt_dcmp(bi, p, mid);
+            let d = if protect {
+                // identical arithmetic order, operands laundered so the
+                // duplicate cannot fold into the primary evaluation
+                let dup = ((bb(lo) + bb(hi)) * 0.5) as f32;
+                protected_eval(first, dup, || ((lo + hi) * 0.5) as f32, &mut stats.dup_dcmp_catches)
+            } else {
+                first
+            };
+            if (v as f64 - d as f64).abs() <= bound {
+                dcmp_block[p] = d;
+            } else {
+                ok = false;
+                break;
+            }
+        }
+        if ok {
+            stats.constant_blocks += 1;
+            return (MODE_CONSTANT, mid);
+        }
+        // midrange rounding pushed a point out of bound (or an uncaught
+        // perturbation did): demote to the fixed-point path — the xsz
+        // analogue of the paper's line-7 double-check fallback
+        stats.line7_fallbacks += 1;
+    }
+
+    // ---- degenerate blocks: nothing finite to anchor a base on ----
+    if n_finite == 0 {
+        for (p, &v) in block.iter().enumerate() {
+            unpred.push(v);
+            dcmp_block[p] = v;
+        }
+        return (MODE_VERBATIM, 0.0);
+    }
+
+    // ---- necessary-leading-bytes width from the block range ----
+    // base is an f32 from the data, so `base as f64 == lo` exactly: the
+    // decoder reads the stored f32 and reproduces identical arithmetic.
+    let base = lo as f32;
+    let qmax = ((hi - lo) / twoe).round();
+    let mut nb = 0u8;
+    for cand in 1..=MODE_FIXED_MAX {
+        // codes 0..=qmax plus the all-ones escape must fit in `cand` bytes
+        let cap = ((1u64 << (8 * cand as u32)) - 2) as f64;
+        if qmax <= cap {
+            nb = cand;
+            break;
+        }
+    }
+    if nb == 0 {
+        // range too wide even for 4-byte codes at this bound
+        for (p, &v) in block.iter().enumerate() {
+            unpred.push(v);
+            dcmp_block[p] = v;
+        }
+        return (MODE_VERBATIM, 0.0);
+    }
+    let escape: u64 = (1u64 << (8 * nb as u32)) - 1;
+
+    // ---- fixed-point quantization with escape + double check ----
+    for (p, &v) in block.iter().enumerate() {
+        let mut encoded = false;
+        if v.is_finite() {
+            let q = ((v as f64 - lo) / twoe).round();
+            if q >= 0.0 && q < escape as f64 {
+                let qi = q as u64;
+                let raw = (lo + qi as f64 * twoe) as f32;
+                let first = hooks.corrupt_dcmp(bi, p, raw);
+                let d = if protect {
+                    let dup = (bb(lo) + bb(qi) as f64 * bb(twoe)) as f32;
+                    protected_eval(
+                        first,
+                        dup,
+                        || (lo + qi as f64 * twoe) as f32,
+                        &mut stats.dup_dcmp_catches,
+                    )
+                } else {
+                    first
+                };
+                if (v as f64 - d as f64).abs() <= bound {
+                    codes.push(qi as u32);
+                    dcmp_block[p] = d;
+                    encoded = true;
+                } else {
+                    stats.line7_fallbacks += 1;
+                }
+            }
+        }
+        if !encoded {
+            codes.push(escape as u32);
+            unpred.push(v);
+            dcmp_block[p] = v;
+        }
+    }
+    (nb, base)
+}
+
+/// Encode stage: pack one quantized block into its self-describing byte
+/// payload. A code that no longer fits the block's byte width (possible
+/// only after an uncorrected memory fault in the code array) is the xsz
+/// analogue of the paper's out-of-table "core dump" outcome — a crash-
+/// equivalent abort, never a silent truncation.
+fn pack_block(mode: u8, param: f32, codes: &[u32], n_unpred: u32) -> Result<BlockPayload> {
+    let mut out = Vec::with_capacity(1 + 4 + codes.len() * mode.min(4) as usize);
+    out.push(mode);
+    match mode {
+        MODE_CONSTANT | MODE_VERBATIM => {
+            if mode == MODE_CONSTANT {
+                bytes::put_f32(&mut out, param);
+            }
+        }
+        1..=MODE_FIXED_MAX => {
+            bytes::put_f32(&mut out, param);
+            let nb = mode as usize;
+            let cap: u64 = 1u64 << (8 * nb as u32);
+            for &c in codes {
+                if (c as u64) >= cap {
+                    return Err(Error::CrashEquivalent(format!(
+                        "xsz code {c} outside the block's {nb}-byte width"
+                    )));
+                }
+                out.extend_from_slice(&c.to_le_bytes()[..nb]);
+            }
+        }
+        other => {
+            return Err(Error::Format(format!("xsz: internal bad mode tag {other}")));
+        }
+    }
+    let payload_bits = out.len() as u64 * 8;
+    Ok(BlockPayload {
+        meta: BlockMeta {
+            // fixed filler tag: FLAG_XSZ archives never consult the
+            // predictor (documented at `format::FLAG_XSZ`)
+            predictor: super::Predictor::Lorenzo,
+            coeffs: [0.0; 4],
+            n_unpred,
+            payload_bits,
+        },
+        bytes: out,
+    })
+}
+
+/// Serialize stage: assemble the archive. The container is the ordinary
+/// format with [`format::FLAG_XSZ`]; the meta section's Huffman table slot
+/// holds a 2-symbol placeholder (~13 bytes) that no decode path reads.
+#[allow(clippy::too_many_arguments)]
+fn write_archive(
+    cfg: &CompressionConfig,
+    dims: Dims,
+    bound: f64,
+    n_blocks: usize,
+    blocks: Vec<BlockPayload>,
+    unpred: &[f32],
+    dc_sums: Option<&[u64]>,
+    unpred_body: Option<Vec<u8>>,
+) -> Result<Vec<u8>> {
+    let table = HuffmanTable::from_frequencies(&[1, 1])?;
+    Writer {
+        header: Header {
+            flags: format::FLAG_XSZ,
+            dims,
+            block_size: cfg.block_size as u32,
+            quant_radius: cfg.quant_radius,
+            error_bound: bound,
+            n_blocks: n_blocks as u64,
+        },
+        table: &table,
+        blocks,
+        classic_payload: None,
+        unpred,
+        sum_dc: dc_sums,
+        zstd_level: cfg.zstd_level,
+        payload_zstd: cfg.payload_zstd,
+        parity: cfg.archive_parity,
+        unpred_body,
+    }
+    .write()
+}
+
+// ---------------------------------------------------------------------------
+// graph entry point + drivers
+// ---------------------------------------------------------------------------
+
+/// Run the xsz compression chain. Driver choice mirrors the stage graph:
+/// hooked runs pin the sequential reference driver; otherwise the
+/// parallelism knob picks the block-parallel fan-out, and the 1-worker
+/// path takes the software pipeline when the dataset is big enough. All
+/// drivers commit results in block order — archives are byte-identical
+/// regardless of which one ran.
+pub fn compress_core<H: Hooks>(
+    data: &[f32],
+    dims: Dims,
+    cfg: &CompressionConfig,
+    params: CoreParams,
+    hooks: &mut H,
+) -> Result<CoreOutput> {
+    cfg.validate()?;
+    if data.len() != dims.len() {
+        return Err(Error::InvalidArgument(format!(
+            "data length {} != dims {:?}",
+            data.len(),
+            dims
+        )));
+    }
+    let workers = cfg.parallelism.workers();
+    if H::PARALLEL_SAFE && workers > 1 {
+        return run_parallel(data, dims, cfg, params, workers);
+    }
+    if H::PARALLEL_SAFE
+        && cfg.stage_overlap
+        && data.len() >= MIN_OVERLAP_POINTS
+        && BlockGrid::new(dims, cfg.block_size)?.n_blocks() >= MIN_OVERLAP_BLOCKS
+    {
+        return run_pipelined(data, dims, cfg, params);
+    }
+    run_sequential(data, dims, cfg, params, hooks)
+}
+
+/// One-thread reference driver — the only one hooked (injection) runs may
+/// take, for the same reason as the stage graph: hooks are `&mut` state
+/// machines tied to the sequential block order.
+fn run_sequential<H: Hooks>(
+    data: &[f32],
+    dims: Dims,
+    cfg: &CompressionConfig,
+    params: CoreParams,
+    hooks: &mut H,
+) -> Result<CoreOutput> {
+    let wall = Instant::now();
+    let mut stages = StageTimings::default();
+    let bound = cfg.error_bound.absolute(data);
+    let grid = BlockGrid::new(dims, cfg.block_size)?;
+    let n_blocks = grid.n_blocks();
+    let mut stats = CompressStats {
+        n_points: data.len(),
+        n_blocks,
+        ..Default::default()
+    };
+    let mut events = Vec::new();
+    let mut input = data.to_vec();
+
+    // ---- prepare stage: input checksums only (no estimation pass) ----
+    let t = Instant::now();
+    let mut in_sums: Vec<checksum::Checksums> = Vec::new();
+    let mut scratch = Vec::new();
+    if params.ft {
+        in_sums.reserve(n_blocks);
+        for bi in 0..n_blocks {
+            grid.extract(&input, bi, &mut scratch);
+            in_sums.push(checksum::checksum_f32(&scratch));
+        }
+    }
+    hooks.on_input_ready(&mut input);
+    stages.prepare_ns = t.elapsed().as_nanos() as u64;
+
+    // ---- quantize stage ----
+    let t = Instant::now();
+    let mut codes: Vec<u32> = Vec::new();
+    let mut code_offsets: Vec<usize> = Vec::with_capacity(n_blocks + 1);
+    code_offsets.push(0);
+    let mut unpred: Vec<f32> = Vec::new();
+    let mut unpred_counts: Vec<u32> = Vec::with_capacity(n_blocks);
+    let mut modes: Vec<u8> = Vec::with_capacity(n_blocks);
+    // per-block [mid-or-base, 0, 0, 0] — doubles as the mode-B arena's
+    // "coefficient table": the constant/base values are this engine's
+    // dominant non-array state, so whole-memory injection can strike them
+    let mut all_params: Vec<[f32; 4]> = Vec::with_capacity(n_blocks);
+    let mut q_sums: Vec<checksum::Checksums> = Vec::with_capacity(n_blocks);
+    let mut dc_sums: Vec<u64> = Vec::with_capacity(n_blocks);
+    let mut dcmp_block: Vec<f32> = Vec::new();
+
+    for bi in 0..n_blocks {
+        grid.extract(&input, bi, &mut scratch);
+        // verify + correct the block's input memory against its checksum
+        if params.ft {
+            match checksum::verify_correct_f32(&mut scratch, in_sums[bi]) {
+                Correction::Clean => {}
+                Correction::Corrected { index } => {
+                    events.push(SdcEvent { kind: SdcKind::InputCorrected, block: bi, index });
+                    grid.scatter(&scratch, bi, &mut input);
+                }
+                Correction::Failed => {
+                    events.push(SdcEvent {
+                        kind: SdcKind::InputUncorrectable,
+                        block: bi,
+                        index: 0,
+                    });
+                }
+            }
+        }
+        let code_base = codes.len();
+        let unpred_before = unpred.len();
+        let (mode, param) = quantize_block(
+            bi,
+            &scratch,
+            bound,
+            params.protect,
+            hooks,
+            &mut codes,
+            &mut unpred,
+            &mut dcmp_block,
+            &mut stats,
+        );
+        modes.push(mode);
+        all_params.push([param, 0.0, 0.0, 0.0]);
+        unpred_counts.push((unpred.len() - unpred_before) as u32);
+        code_offsets.push(codes.len());
+
+        // code-array checksum + reconstruction checksum (ft)
+        if params.ft {
+            q_sums.push(checksum::checksum_u32(&codes[code_base..]));
+            dc_sums.push(checksum::checksum_f32(&dcmp_block).sum);
+        }
+
+        hooks.on_block_codes(bi, &mut codes[code_base..]);
+        let mut arena = Arena {
+            progress: bi,
+            n_blocks,
+            input: &mut input,
+            codes: &mut codes,
+            unpred: &mut unpred,
+            coeffs: &mut all_params,
+        };
+        hooks.on_progress(&mut arena);
+    }
+    stats.n_unpred = unpred.len();
+    stages.quantize_ns = t.elapsed().as_nanos() as u64;
+
+    // ---- protect stage: verify the code arrays before serialization ----
+    let t = Instant::now();
+    if params.ft {
+        for bi in 0..n_blocks {
+            let span = &mut codes[code_offsets[bi]..code_offsets[bi + 1]];
+            match checksum::verify_correct_u32(span, q_sums[bi]) {
+                Correction::Clean => {}
+                Correction::Corrected { index } => {
+                    events.push(SdcEvent { kind: SdcKind::BinCorrected, block: bi, index });
+                }
+                Correction::Failed => {
+                    events.push(SdcEvent { kind: SdcKind::BinUncorrectable, block: bi, index: 0 });
+                }
+            }
+        }
+    }
+    stages.protect_ns = t.elapsed().as_nanos() as u64;
+
+    // ---- encode stage: per-block byte packing (no table barrier) ----
+    let t = Instant::now();
+    let mut blocks = Vec::with_capacity(n_blocks);
+    for bi in 0..n_blocks {
+        let span = &codes[code_offsets[bi]..code_offsets[bi + 1]];
+        blocks.push(pack_block(modes[bi], all_params[bi][0], span, unpred_counts[bi])?);
+    }
+    stages.encode_ns = t.elapsed().as_nanos() as u64;
+
+    // ---- serialize stage ----
+    let t = Instant::now();
+    let archive = write_archive(
+        cfg,
+        dims,
+        bound,
+        n_blocks,
+        blocks,
+        &unpred,
+        if params.ft { Some(&dc_sums) } else { None },
+        None,
+    )?;
+    stages.serialize_ns = t.elapsed().as_nanos() as u64;
+    stages.wall_ns = wall.elapsed().as_nanos() as u64;
+    stats.compressed_bytes = archive.len();
+    Ok(CoreOutput { archive, stats, events, stages })
+}
+
+/// Output of the hook-free per-block prepare + quantize chain (the overlap
+/// drivers' unit of work).
+struct QuantizedBlock {
+    mode: u8,
+    param: f32,
+    codes: Vec<u32>,
+    unpred: Vec<f32>,
+    /// Reconstruction (`sum_dc` input) — `Some` iff the ft switch is on.
+    dcmp: Option<Vec<f32>>,
+    events: Vec<SdcEvent>,
+    constant: bool,
+    line7_fallbacks: usize,
+    dup_dcmp_catches: u64,
+    prepare_ns: u64,
+    quantize_ns: u64,
+}
+
+/// Prepare + quantize one block (parallel-safe, hook-free): extract, then
+/// the mode decision + code emission. Identical operation order on every
+/// driver — byte identity depends on it.
+///
+/// Unlike the predictive engines' overlap path, **no input checksum is
+/// taken here**: rsz's chain has an estimation pass between checksum and
+/// verify (a real, if small, protection window), and xsz's sequential
+/// driver checksums every block up front and verifies at use (protecting
+/// the whole sweep). This path extracts and consumes each block
+/// immediately — summing a buffer and verifying the same untouched bytes
+/// in the next statement protects a zero-length window, so it would be
+/// two wasted passes per block on the engine whose contract is raw
+/// throughput. The bytes are identical either way (`in_sums` are never
+/// serialized), and hooked/injection runs always take the sequential
+/// driver with its full checksum semantics.
+fn quantize_stage(
+    grid: &BlockGrid,
+    bound: f64,
+    params: CoreParams,
+    bi: usize,
+    scratch: &mut Vec<f32>,
+    data: &[f32],
+) -> QuantizedBlock {
+    let t = Instant::now();
+    grid.extract(data, bi, scratch);
+    let events = Vec::new();
+    let prepare_ns = t.elapsed().as_nanos() as u64;
+
+    let t = Instant::now();
+    let mut local = CompressStats::default();
+    let mut codes = Vec::new();
+    let mut unpred = Vec::new();
+    let mut dcmp = Vec::new();
+    let (mode, param) = quantize_block(
+        bi,
+        scratch,
+        bound,
+        params.protect,
+        &mut NoHooks,
+        &mut codes,
+        &mut unpred,
+        &mut dcmp,
+        &mut local,
+    );
+    QuantizedBlock {
+        mode,
+        param,
+        codes,
+        unpred,
+        dcmp: if params.ft { Some(dcmp) } else { None },
+        events,
+        constant: local.constant_blocks > 0,
+        line7_fallbacks: local.line7_fallbacks,
+        dup_dcmp_catches: local.dup_dcmp_catches,
+        prepare_ns,
+        quantize_ns: t.elapsed().as_nanos() as u64,
+    }
+}
+
+/// Protect stage for one block (overlap drivers): the stored `sum_dc`.
+/// Returns 0 when ft is off.
+///
+/// The code-array checksum is deliberately **not** taken here, for the
+/// same reason [`quantize_stage`] skips the input checksum: on these
+/// drivers the codes are produced and consumed back to back, so summing
+/// the buffer and verifying the same untouched bytes in the next
+/// statement protects a zero-length window at the cost of two passes per
+/// block. The sequential driver keeps the real window (codes are summed
+/// at quantize time and verified after the whole sweep — where the mode-B
+/// arena faults land), and `sum_dc` still guards the overlap drivers end
+/// to end: any code corruption past this point decodes to a different
+/// reconstruction and fails Algorithm 2.
+fn protect_stage(params: CoreParams, qb: &QuantizedBlock) -> u64 {
+    if !params.ft {
+        return 0;
+    }
+    checksum::checksum_f32(qb.dcmp.as_deref().unwrap_or(&[])).sum
+}
+
+/// Ordered-commit fold shared by the overlap drivers.
+fn fold_block_report(qb: &QuantizedBlock, stats: &mut CompressStats, events: &mut Vec<SdcEvent>) {
+    if qb.constant {
+        stats.constant_blocks += 1;
+    }
+    stats.n_unpred += qb.unpred.len();
+    stats.line7_fallbacks += qb.line7_fallbacks;
+    stats.dup_dcmp_catches += qb.dup_dcmp_catches;
+    events.extend(qb.events.iter().copied());
+}
+
+/// The 1-worker software pipeline. Unlike the rsz pipeline, whose encode
+/// stage must wait behind the global-Huffman-table barrier, the companion
+/// thread here runs protect + encode and **commits each block's payload
+/// bytes immediately** — there is no barrier, so every post-quantize stage
+/// of block *i* fully overlaps the quantize of block *i+1* and the only
+/// serial tail is the final section assembly (which itself overlaps the
+/// pre-compression of the unpredictable section on the main thread).
+fn run_pipelined(
+    data: &[f32],
+    dims: Dims,
+    cfg: &CompressionConfig,
+    params: CoreParams,
+) -> Result<CoreOutput> {
+    let wall = Instant::now();
+    let bound = cfg.error_bound.absolute(data);
+    let grid = BlockGrid::new(dims, cfg.block_size)?;
+    let n_blocks = grid.n_blocks();
+
+    let mut stages = StageTimings { pipelined: true, ..Default::default() };
+    let mut unpred_all: Vec<f32> = Vec::new();
+
+    type Arts = Vec<(QuantizedBlock, u64, BlockPayload)>;
+    type CompanionOut = Result<(Arts, u64, u64)>;
+    let (arts, unpred_body) = std::thread::scope(|s| -> Result<(Arts, Vec<u8>)> {
+        let (tx, rx) = mpsc::sync_channel::<QuantizedBlock>(PIPE_DEPTH);
+
+        // companion: protect + encode per block, committed on arrival
+        let companion = s.spawn(move || -> CompanionOut {
+            let (mut protect_ns, mut encode_ns) = (0u64, 0u64);
+            let mut arts: Arts = Vec::with_capacity(n_blocks);
+            while let Ok(mut qb) = rx.recv() {
+                let t = Instant::now();
+                let dc_sum = protect_stage(params, &qb);
+                protect_ns += t.elapsed().as_nanos() as u64;
+                let t = Instant::now();
+                let payload =
+                    pack_block(qb.mode, qb.param, &qb.codes, qb.unpred.len() as u32)?;
+                encode_ns += t.elapsed().as_nanos() as u64;
+                qb.dcmp = None; // the reconstruction is spent; free it early
+                qb.codes = Vec::new(); // the payload bytes carry them now
+                arts.push((qb, dc_sum, payload));
+            }
+            Ok((arts, protect_ns, encode_ns))
+        });
+
+        // main thread: prepare + quantize per block, in order
+        let mut scratch = Vec::new();
+        for bi in 0..n_blocks {
+            let qb = quantize_stage(&grid, bound, params, bi, &mut scratch, data);
+            stages.prepare_ns += qb.prepare_ns;
+            stages.quantize_ns += qb.quantize_ns;
+            unpred_all.extend_from_slice(&qb.unpred);
+            if tx.send(qb).is_err() {
+                // companion exited early (it owns the error) — stop
+                break;
+            }
+        }
+        drop(tx);
+
+        // pre-compress the unpredictable section while the companion
+        // drains its queue tail
+        let t = Instant::now();
+        let unpred_body = format::compress_unpred_section(&unpred_all, cfg.zstd_level)?;
+        stages.serialize_ns += t.elapsed().as_nanos() as u64;
+
+        let (arts, protect_ns, encode_ns) = match companion.join() {
+            Ok(r) => r?,
+            Err(p) => std::panic::resume_unwind(p),
+        };
+        stages.protect_ns = protect_ns;
+        stages.encode_ns = encode_ns;
+        Ok((arts, unpred_body))
+    })?;
+
+    // ordered commit of the run report (identical totals to every driver)
+    let mut stats = CompressStats {
+        n_points: data.len(),
+        n_blocks,
+        ..Default::default()
+    };
+    let mut events = Vec::new();
+    let mut dc_sums = Vec::with_capacity(n_blocks);
+    let mut blocks = Vec::with_capacity(n_blocks);
+    for (qb, dc_sum, payload) in arts {
+        fold_block_report(&qb, &mut stats, &mut events);
+        dc_sums.push(dc_sum);
+        blocks.push(payload);
+    }
+
+    let t = Instant::now();
+    let archive = write_archive(
+        cfg,
+        dims,
+        bound,
+        n_blocks,
+        blocks,
+        &unpred_all,
+        if params.ft { Some(&dc_sums) } else { None },
+        Some(unpred_body),
+    )?;
+    stages.serialize_ns += t.elapsed().as_nanos() as u64;
+    stages.wall_ns = wall.elapsed().as_nanos() as u64;
+    stats.compressed_bytes = archive.len();
+    Ok(CoreOutput { archive, stats, events, stages })
+}
+
+/// Block-parallel fan-out: with no table barrier the whole chain — prepare
+/// → quantize → protect → encode — runs inside one fan-out per block (the
+/// rsz graph needs a second fan-out after its barrier). Results commit in
+/// block order, so the bytes are identical to the sequential driver at any
+/// worker count.
+fn run_parallel(
+    data: &[f32],
+    dims: Dims,
+    cfg: &CompressionConfig,
+    params: CoreParams,
+    workers: usize,
+) -> Result<CoreOutput> {
+    let wall = Instant::now();
+    let mut stages = StageTimings::default();
+    let bound = cfg.error_bound.absolute(data);
+    let grid = BlockGrid::new(dims, cfg.block_size)?;
+    let n_blocks = grid.n_blocks();
+
+    type Art = Result<(QuantizedBlock, u64, BlockPayload, u64, u64)>;
+    let arts: Vec<Art> = crate::util::threadpool::parallel_map(n_blocks, workers, |bi| {
+        let mut scratch = Vec::new();
+        let mut qb = quantize_stage(&grid, bound, params, bi, &mut scratch, data);
+        let t = Instant::now();
+        let dc_sum = protect_stage(params, &qb);
+        let protect_ns = t.elapsed().as_nanos() as u64;
+        let t = Instant::now();
+        let payload = pack_block(qb.mode, qb.param, &qb.codes, qb.unpred.len() as u32)?;
+        let encode_ns = t.elapsed().as_nanos() as u64;
+        qb.dcmp = None;
+        qb.codes = Vec::new();
+        Ok((qb, dc_sum, payload, protect_ns, encode_ns))
+    });
+
+    let mut stats = CompressStats {
+        n_points: data.len(),
+        n_blocks,
+        ..Default::default()
+    };
+    let mut events = Vec::new();
+    let mut unpred: Vec<f32> = Vec::new();
+    let mut dc_sums = Vec::with_capacity(n_blocks);
+    let mut blocks = Vec::with_capacity(n_blocks);
+    for art in arts {
+        let (qb, dc_sum, payload, protect_ns, encode_ns) = art?;
+        fold_block_report(&qb, &mut stats, &mut events);
+        stages.prepare_ns += qb.prepare_ns;
+        stages.quantize_ns += qb.quantize_ns;
+        stages.protect_ns += protect_ns;
+        stages.encode_ns += encode_ns;
+        unpred.extend_from_slice(&qb.unpred);
+        dc_sums.push(dc_sum);
+        blocks.push(payload);
+    }
+
+    let t = Instant::now();
+    let archive = write_archive(
+        cfg,
+        dims,
+        bound,
+        n_blocks,
+        blocks,
+        &unpred,
+        if params.ft { Some(&dc_sums) } else { None },
+        None,
+    )?;
+    stages.serialize_ns = t.elapsed().as_nanos() as u64;
+    stages.wall_ns = wall.elapsed().as_nanos() as u64;
+    stats.compressed_bytes = archive.len();
+    Ok(CoreOutput { archive, stats, events, stages })
+}
+
+// ---------------------------------------------------------------------------
+// decode (called from the destage graph)
+// ---------------------------------------------------------------------------
+
+/// Decode one xsz block into `out_block` — the [`super::destage`] decode
+/// stage for [`format::FLAG_XSZ`] archives. The reconstruction arithmetic
+/// is the bit-exact mirror of [`quantize_block`], which is what makes the
+/// stored `sum_dc` meaningful. The `corrupt_pred` decode hook perturbs the
+/// fixed-point reconstruction (the one computation in this path); constant
+/// fills and verbatim copies have no computation to perturb.
+pub(crate) fn decode_block<H: DecompressHooks>(
+    archive: &Archive,
+    grid: &BlockGrid,
+    idx: usize,
+    hooks: &mut H,
+    apply_hooks: bool,
+    out_block: &mut Vec<f32>,
+) -> Result<()> {
+    let n = grid.extent(idx).len();
+    out_block.clear();
+    out_block.resize(n, 0.0);
+    let payload = archive.block_payload(idx);
+    let unpred_vals = archive.block_unpred(idx);
+    let mut c = Cursor::new(payload);
+    let tag = c.bytes(1)?[0];
+    let twoe = 2.0 * archive.header.error_bound;
+    match tag {
+        MODE_CONSTANT => {
+            let mid = c.f32()?;
+            out_block.fill(mid);
+        }
+        MODE_VERBATIM => {
+            if unpred_vals.len() != n {
+                return Err(Error::CrashEquivalent(format!(
+                    "xsz block {idx}: verbatim pool holds {} of {n} values",
+                    unpred_vals.len()
+                )));
+            }
+            out_block.copy_from_slice(unpred_vals);
+        }
+        1..=MODE_FIXED_MAX => {
+            let base = c.f32()? as f64;
+            let nb = tag as usize;
+            let body = c.bytes(n * nb)?;
+            let escape: u64 = (1u64 << (8 * nb as u32)) - 1;
+            let mut next_unpred = 0usize;
+            for (p, chunk) in body.chunks_exact(nb).enumerate() {
+                let mut q: u64 = 0;
+                for (k, &b) in chunk.iter().enumerate() {
+                    q |= (b as u64) << (8 * k);
+                }
+                if q == escape {
+                    let v = *unpred_vals.get(next_unpred).ok_or_else(|| {
+                        Error::CrashEquivalent(format!(
+                            "xsz block {idx}: escape pool exhausted at point {p}"
+                        ))
+                    })?;
+                    next_unpred += 1;
+                    out_block[p] = v;
+                } else {
+                    let raw = (base + q as f64 * twoe) as f32;
+                    out_block[p] =
+                        if apply_hooks { hooks.corrupt_pred(idx, p, raw) } else { raw };
+                }
+            }
+        }
+        other => {
+            return Err(Error::CrashEquivalent(format!(
+                "xsz block {idx}: bad mode tag {other}"
+            )));
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// public API + unified codec dispatch
+// ---------------------------------------------------------------------------
+
+/// Compress with the unprotected ultra-fast engine (**xsz**).
+pub fn compress(data: &[f32], dims: Dims, cfg: &CompressionConfig) -> Result<Vec<u8>> {
+    Ok(compress_core(data, dims, cfg, CoreParams::default(), &mut NoHooks)?.archive)
+}
+
+/// Compress with the fault-tolerant ultra-fast engine (**ftxsz**).
+pub fn compress_ft(data: &[f32], dims: Dims, cfg: &CompressionConfig) -> Result<Vec<u8>> {
+    Ok(compress_core(data, dims, cfg, FTXSZ_PARAMS, &mut NoHooks)?.archive)
+}
+
+/// xsz compression with injection hooks (mode-A/B harness entry point).
+pub fn compress_with_hooks<H: Hooks>(
+    data: &[f32],
+    dims: Dims,
+    cfg: &CompressionConfig,
+    hooks: &mut H,
+) -> Result<CoreOutput> {
+    compress_core(data, dims, cfg, CoreParams::default(), hooks)
+}
+
+/// ftxsz compression with injection hooks.
+pub fn compress_ft_with_hooks<H: Hooks>(
+    data: &[f32],
+    dims: Dims,
+    cfg: &CompressionConfig,
+    hooks: &mut H,
+) -> Result<CoreOutput> {
+    compress_core(data, dims, cfg, FTXSZ_PARAMS, hooks)
+}
+
+/// **xsz** behind the unified [`BlockCodec`] dispatch. Decompression is the
+/// ordinary destage graph — the archive is a standard per-block container
+/// — so random access works; there is no `sum_dc`, so no verification.
+#[derive(Debug, Default)]
+pub struct XszCodec;
+
+/// The `xsz` codec singleton ([`crate::inject::Engine::codec`]).
+pub static XSZ_CODEC: XszCodec = XszCodec;
+
+impl BlockCodec for XszCodec {
+    fn name(&self) -> &'static str {
+        "xsz"
+    }
+
+    fn compress(&self, data: &[f32], dims: Dims, cfg: &CompressionConfig) -> Result<Vec<u8>> {
+        compress(data, dims, cfg)
+    }
+
+    fn decompress(&self, bytes: &[u8], par: Parallelism) -> Result<Decompressed> {
+        engine::decompress_with(bytes, par)
+    }
+
+    fn decompress_region(
+        &self,
+        bytes: &[u8],
+        region: Region,
+        par: Parallelism,
+    ) -> Result<Vec<f32>> {
+        engine::decompress_region_with(bytes, region, par)
+    }
+
+    fn supports_region(&self) -> bool {
+        true
+    }
+}
+
+/// **ftxsz** behind the unified [`BlockCodec`] dispatch: xsz with the full
+/// protect stage on. Its archives carry `sum_dc`, so every verified path —
+/// full and region (Algorithm 2 per intersecting block) — works through
+/// the same destage graph as ftrsz.
+#[derive(Debug, Default)]
+pub struct FtxszCodec;
+
+/// The `ftxsz` codec singleton ([`crate::inject::Engine::codec`]).
+pub static FTXSZ_CODEC: FtxszCodec = FtxszCodec;
+
+impl BlockCodec for FtxszCodec {
+    fn name(&self) -> &'static str {
+        "ftxsz"
+    }
+
+    fn params(&self) -> CoreParams {
+        FTXSZ_PARAMS
+    }
+
+    fn compress(&self, data: &[f32], dims: Dims, cfg: &CompressionConfig) -> Result<Vec<u8>> {
+        compress_ft(data, dims, cfg)
+    }
+
+    fn decompress(&self, bytes: &[u8], par: Parallelism) -> Result<Decompressed> {
+        crate::ft::decompress_with(bytes, par)
+    }
+
+    fn decompress_verified(
+        &self,
+        bytes: &[u8],
+        par: Parallelism,
+    ) -> Result<(Decompressed, DecompressReport)> {
+        crate::ft::decompress_with_report(bytes, par)
+    }
+
+    fn decompress_region(
+        &self,
+        bytes: &[u8],
+        region: Region,
+        par: Parallelism,
+    ) -> Result<Vec<f32>> {
+        engine::decompress_region_with(bytes, region, par)
+    }
+
+    fn decompress_region_verified(
+        &self,
+        bytes: &[u8],
+        region: Region,
+        par: Parallelism,
+    ) -> Result<(Vec<f32>, DecompressReport)> {
+        engine::decompress_region_verified(bytes, region, par)
+    }
+
+    fn supports_verify(&self) -> bool {
+        true
+    }
+
+    fn supports_region(&self) -> bool {
+        true
+    }
+
+    fn supports_region_verified(&self) -> bool {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compressor::ErrorBound;
+    use crate::data::synthetic;
+    use crate::util::rng::Pcg32;
+
+    fn cfg(e: f64) -> CompressionConfig {
+        CompressionConfig::new(ErrorBound::Abs(e)).with_block_size(8)
+    }
+
+    #[test]
+    fn roundtrip_respects_bound_smooth_field() {
+        let f = synthetic::hurricane_field("t", Dims::d3(12, 20, 20), 3);
+        for e in [1e-1, 1e-3, 1e-5] {
+            let bytes = compress(&f.data, f.dims, &cfg(e)).unwrap();
+            let dec = engine::decompress(&bytes).unwrap();
+            assert_eq!(dec.dims, f.dims);
+            let max = crate::analysis::max_abs_err(&f.data, &dec.data);
+            assert!(max <= e, "bound {e} violated: {max}");
+        }
+    }
+
+    #[test]
+    fn roundtrip_random_noise() {
+        let mut rng = Pcg32::new(5);
+        let data: Vec<f32> = (0..4096).map(|_| rng.normal() as f32 * 100.0).collect();
+        let e = 1e-2;
+        let bytes = compress(&data, Dims::d3(16, 16, 16), &cfg(e)).unwrap();
+        let dec = engine::decompress(&bytes).unwrap();
+        assert!(crate::analysis::max_abs_err(&data, &dec.data) <= e);
+    }
+
+    #[test]
+    fn constant_blocks_are_detected_and_tiny() {
+        let data = vec![7.25f32; 1000];
+        let out =
+            compress_with_hooks(&data, Dims::d3(10, 10, 10), &cfg(1e-3), &mut NoHooks).unwrap();
+        assert_eq!(out.stats.constant_blocks, out.stats.n_blocks);
+        assert_eq!(out.stats.n_unpred, 0);
+        // a fully constant field compresses to almost nothing
+        assert!(out.archive.len() < data.len(), "archive {}B", out.archive.len());
+        let dec = engine::decompress(&out.archive).unwrap();
+        assert!(dec.data.iter().all(|v| (*v - 7.25).abs() <= 1e-3));
+    }
+
+    #[test]
+    fn nan_inf_survive_verbatim() {
+        let mut data = vec![1.0f32; 64];
+        data[10] = f32::NAN;
+        data[20] = f32::INFINITY;
+        data[30] = f32::NEG_INFINITY;
+        for compressor in [compress, compress_ft] {
+            let bytes = compressor(&data, Dims::d3(4, 4, 4), &cfg(1e-3)).unwrap();
+            let dec = engine::decompress(&bytes).unwrap();
+            assert!(dec.data[10].is_nan());
+            assert_eq!(dec.data[20], f32::INFINITY);
+            assert_eq!(dec.data[30], f32::NEG_INFINITY);
+        }
+        // a block that is nothing but non-finite values takes the verbatim
+        // mode and still roundtrips exactly
+        let data = vec![f32::INFINITY; 64];
+        let bytes = compress(&data, Dims::d3(4, 4, 4), &cfg(1e-3)).unwrap();
+        let dec = engine::decompress(&bytes).unwrap();
+        assert!(dec.data.iter().all(|v| *v == f32::INFINITY));
+    }
+
+    #[test]
+    fn wide_range_blocks_fall_back_to_verbatim() {
+        // range / (2e) above u32 capacity: fixed-point cannot represent it
+        let mut data = vec![0.0f32; 512];
+        data[100] = 1e30;
+        let e = 1e-6;
+        let bytes = compress(&data, Dims::d3(8, 8, 8), &cfg(e)).unwrap();
+        let dec = engine::decompress(&bytes).unwrap();
+        assert_eq!(dec.data[100], 1e30);
+        assert!(crate::analysis::max_abs_err(&data, &dec.data) <= e);
+    }
+
+    #[test]
+    fn drivers_are_byte_identical() {
+        let f = synthetic::nyx_velocity("v", Dims::d3(20, 20, 20), 9);
+        for params in [CoreParams::default(), FTXSZ_PARAMS] {
+            let seq =
+                run_sequential(&f.data, f.dims, &cfg(1e-3), params, &mut NoHooks).unwrap();
+            let piped = run_pipelined(&f.data, f.dims, &cfg(1e-3), params).unwrap();
+            assert_eq!(piped.archive, seq.archive, "pipelined ft={}", params.ft);
+            assert!(piped.stages.pipelined && !seq.stages.pipelined);
+            for w in [2usize, 4, 7] {
+                let par = run_parallel(&f.data, f.dims, &cfg(1e-3), params, w).unwrap();
+                assert_eq!(par.archive, seq.archive, "parallel w={w} ft={}", params.ft);
+            }
+            // and the stats agree across drivers
+            let par = run_parallel(&f.data, f.dims, &cfg(1e-3), params, 4).unwrap();
+            assert_eq!(par.stats.n_unpred, seq.stats.n_unpred);
+            assert_eq!(par.stats.constant_blocks, seq.stats.constant_blocks);
+            assert_eq!(par.stats.line7_fallbacks, seq.stats.line7_fallbacks);
+        }
+    }
+
+    #[test]
+    fn pipelined_is_the_default_one_worker_path() {
+        let f = synthetic::nyx_velocity("v", Dims::d3(20, 20, 20), 4);
+        let out = compress_with_hooks(&f.data, f.dims, &cfg(1e-3), &mut NoHooks).unwrap();
+        assert!(out.stages.pipelined, "stage overlap should engage by default");
+        let off = compress_with_hooks(
+            &f.data,
+            f.dims,
+            &cfg(1e-3).with_stage_overlap(false),
+            &mut NoHooks,
+        )
+        .unwrap();
+        assert!(!off.stages.pipelined);
+        assert_eq!(out.archive, off.archive);
+        // tiny fields stay on the plain sequential driver
+        let tiny = synthetic::nyx_velocity("v", Dims::d3(8, 8, 8), 4);
+        let t = compress_with_hooks(&tiny.data, tiny.dims, &cfg(1e-3), &mut NoHooks).unwrap();
+        assert!(!t.stages.pipelined, "512 points must not pay for a companion thread");
+    }
+
+    #[test]
+    fn ftxsz_verified_roundtrip_and_region() {
+        let f = synthetic::hurricane_field("t", Dims::d3(10, 16, 16), 8);
+        let bytes = compress_ft(&f.data, f.dims, &cfg(1e-3)).unwrap();
+        let (dec, report) =
+            crate::ft::decompress_with_report(&bytes, Parallelism::Sequential).unwrap();
+        assert!(report.is_clean());
+        assert!(crate::analysis::max_abs_err(&f.data, &dec.data) <= 1e-3);
+        // verified region decode matches the full decode slice bitwise
+        let region = Region { origin: (2, 5, 3), shape: (6, 8, 9) };
+        let (got, report) =
+            engine::decompress_region_verified(&bytes, region, Parallelism::Fixed(3)).unwrap();
+        assert!(report.is_clean());
+        let (_, ry, rx) = f.dims.as_3d();
+        let mut idx = 0;
+        for z in 0..region.shape.0 {
+            for y in 0..region.shape.1 {
+                for x in 0..region.shape.2 {
+                    let g = ((region.origin.0 + z) * ry + region.origin.1 + y) * rx
+                        + region.origin.2
+                        + x;
+                    assert_eq!(got[idx].to_bits(), dec.data[g].to_bits());
+                    idx += 1;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn xsz_archive_has_the_flag_and_no_verify_without_ft() {
+        let f = synthetic::nyx_velocity("v", Dims::d3(8, 8, 8), 2);
+        let bytes = compress(&f.data, f.dims, &cfg(1e-2)).unwrap();
+        let archive = format::parse(&bytes).unwrap();
+        assert!(archive.header.is_xsz());
+        assert!(archive.header.is_random_access());
+        assert!(!archive.header.is_fault_tolerant());
+        // no sum_dc → verified decompression is a clean error
+        assert!(crate::ft::decompress(&bytes).is_err());
+        let ftb = compress_ft(&f.data, f.dims, &cfg(1e-2)).unwrap();
+        assert!(format::parse(&ftb).unwrap().header.is_fault_tolerant());
+    }
+
+    #[test]
+    fn xsz_and_ftxsz_decode_bit_identical() {
+        // protection must not change the numerics, only guard them
+        let f = synthetic::scale_letkf_field("q", Dims::d3(6, 12, 12), 3);
+        let a = compress(&f.data, f.dims, &cfg(1e-3)).unwrap();
+        let b = compress_ft(&f.data, f.dims, &cfg(1e-3)).unwrap();
+        let da = engine::decompress(&a).unwrap();
+        let db = crate::ft::decompress(&b).unwrap();
+        assert_eq!(
+            da.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            db.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn truncated_and_corrupt_payloads_fail_cleanly() {
+        let f = synthetic::hurricane_field("t", Dims::d3(6, 8, 8), 5);
+        let bytes = compress(&f.data, f.dims, &cfg(1e-3)).unwrap();
+        for cut in [0, 10, bytes.len() / 2, bytes.len() - 1] {
+            assert!(engine::decompress(&bytes[..cut]).is_err());
+        }
+    }
+
+    #[test]
+    fn all_block_sizes_and_ranks_roundtrip() {
+        let f = synthetic::hurricane_field("t", Dims::d3(7, 13, 11), 4);
+        for b in [2usize, 3, 5, 10, 16] {
+            let c = CompressionConfig::new(ErrorBound::Abs(1e-3)).with_block_size(b);
+            let bytes = compress(&f.data, f.dims, &c).unwrap();
+            let dec = engine::decompress(&bytes).unwrap();
+            assert!(
+                crate::analysis::max_abs_err(&f.data, &dec.data) <= 1e-3,
+                "block size {b}"
+            );
+        }
+        // 1-D and 2-D shapes
+        let mut rng = Pcg32::new(3);
+        let mut v = 0.0f32;
+        let data: Vec<f32> = (0..500)
+            .map(|_| {
+                v += (rng.f32() - 0.5) * 0.1;
+                v
+            })
+            .collect();
+        let bytes = compress(&data, Dims::d1(500), &cfg(1e-3)).unwrap();
+        let dec = engine::decompress(&bytes).unwrap();
+        assert!(crate::analysis::max_abs_err(&data, &dec.data) <= 1e-3);
+        let img = synthetic::pluto_image("p", 40, 50, 8);
+        let bytes2 = compress(&img.data, img.dims, &cfg(1e-3)).unwrap();
+        let dec2 = engine::decompress(&bytes2).unwrap();
+        assert!(crate::analysis::max_abs_err(&img.data, &dec2.data) <= 1e-3);
+    }
+
+    #[test]
+    fn parity_v2_composes_with_xsz() {
+        use crate::ft::parity::ParityParams;
+        let f = synthetic::hurricane_field("t", Dims::d3(8, 10, 10), 7);
+        let c = cfg(1e-3)
+            .with_archive_parity(ParityParams { stripe_len: 64, group_width: 8 });
+        let clean = compress_ft(&f.data, f.dims, &c).unwrap();
+        // damage the protected region: the recover stage heals it and the
+        // repair is visible in the report
+        let mut bad = clean.clone();
+        bad[clean.len() / 2] ^= 0x20;
+        let (dec, report) =
+            crate::ft::decompress_with_report(&bad, Parallelism::Sequential).unwrap();
+        assert!(!report.stripes_repaired.is_empty());
+        assert_eq!(report.blocks_reexecuted, 0);
+        assert!(crate::analysis::max_abs_err(&f.data, &dec.data) <= 1e-3);
+    }
+}

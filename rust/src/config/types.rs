@@ -27,7 +27,7 @@ impl RunConfig {
     /// profile = "nyx"            # nyx | hurricane | scale-letkf | pluto
     /// edge = 64
     /// seed = 42
-    /// engine = "ftrsz"           # sz | rsz | ftrsz
+    /// engine = "ftrsz"           # sz | rsz | ftrsz | xsz | ftxsz
     /// [compression]
     /// error_bound = 1e-3
     /// bound_kind = "rel"         # abs | rel (value-range relative)
@@ -46,7 +46,7 @@ impl RunConfig {
         let edge = doc.int_or("edge", 64)? as usize;
         let seed = doc.int_or("seed", 42)? as u64;
         let engine = doc.str_or("engine", "ftrsz")?.to_string();
-        if !["sz", "rsz", "ftrsz"].contains(&engine.as_str()) {
+        if !["sz", "rsz", "ftrsz", "xsz", "ftxsz"].contains(&engine.as_str()) {
             return Err(Error::Config(format!("unknown engine '{engine}'")));
         }
         let compression = compression_from_doc(doc, "compression")?;

@@ -312,7 +312,7 @@ mod tests {
 
     #[test]
     fn pipeline_works_for_all_engines() {
-        for e in [Engine::Classic, Engine::RandomAccess, Engine::FaultTolerant] {
+        for e in Engine::ALL {
             let out = run_pipeline(items(4), e, &cfg(), 2, 2).unwrap();
             assert_eq!(out.archives.len(), 4, "engine {}", e.name());
         }

@@ -20,6 +20,14 @@ use crate::util::rng::Pcg32;
 pub const PRE_CHECKSUM: isize = -1;
 
 /// Which buffer a flip landed in (for reporting).
+///
+/// The targets are engine-agnostic views of the [`Arena`]: for the
+/// predictive engines `Codes` are quantization bins and `Coeffs` are
+/// regression coefficients; for the SZx-style engine
+/// ([`crate::compressor::xsz`]) `Codes` are the necessary-leading-bytes
+/// fixed-point codes and `Coeffs` carry the per-block constant/base
+/// values — so whole-memory injection covers the new engine's dominant
+/// state with no injector changes.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Target {
     /// The input array (pre-checksum window).
@@ -30,7 +38,7 @@ pub enum Target {
     Codes,
     /// Unpredictable-value pool.
     Unpred,
-    /// Regression coefficient table.
+    /// Regression coefficient table (constant/base params for xsz).
     Coeffs,
     /// Every live buffer was empty — the flip had nothing to land in
     /// (degenerate arenas must not panic; the strike is a recorded no-op).

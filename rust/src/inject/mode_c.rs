@@ -16,7 +16,7 @@
 
 use std::collections::HashMap;
 
-use crate::compressor::{classic, engine, CompressionConfig, Parallelism};
+use crate::compressor::{classic, engine, xsz, CompressionConfig, Parallelism};
 use crate::data::Dims;
 use crate::error::Result;
 use crate::ft;
@@ -106,8 +106,12 @@ impl CampaignTally {
 fn decode(engine_kind: Engine, bytes: &[u8]) -> (Result<engine::Decompressed>, usize) {
     let reported = match engine_kind {
         Engine::Classic => classic::decompress_reported(bytes),
-        Engine::RandomAccess => engine::decompress_reported(bytes, Parallelism::Sequential),
-        Engine::FaultTolerant => ft::decompress_with_report(bytes, Parallelism::Sequential),
+        Engine::RandomAccess | Engine::UltraFast => {
+            engine::decompress_reported(bytes, Parallelism::Sequential)
+        }
+        Engine::FaultTolerant | Engine::UltraFastFT => {
+            ft::decompress_with_report(bytes, Parallelism::Sequential)
+        }
     };
     match reported {
         Ok((dec, report)) => (Ok(dec), report.stripes_repaired.len()),
@@ -135,6 +139,8 @@ pub fn campaign(
         Engine::Classic => classic::compress(data, dims, cfg)?,
         Engine::RandomAccess => engine::compress(data, dims, cfg)?,
         Engine::FaultTolerant => ft::compress(data, dims, cfg)?,
+        Engine::UltraFast => xsz::compress(data, dims, cfg)?,
+        Engine::UltraFastFT => xsz::compress_ft(data, dims, cfg)?,
     };
     let mut tally = CampaignTally {
         trials,
@@ -204,7 +210,12 @@ mod tests {
     #[test]
     fn parity_campaign_corrects_and_never_lies() {
         let (data, dims) = field();
-        for engine_kind in [Engine::RandomAccess, Engine::FaultTolerant] {
+        for engine_kind in [
+            Engine::RandomAccess,
+            Engine::FaultTolerant,
+            Engine::UltraFast,
+            Engine::UltraFastFT,
+        ] {
             let tally = campaign(
                 engine_kind,
                 &data,

@@ -1,7 +1,7 @@
 //! Run-outcome classification — the paper's Table 3 / Fig. 6 metrics.
 
 use crate::compressor::engine::{self, Decompressed, Hooks};
-use crate::compressor::{classic, CompressionConfig};
+use crate::compressor::{classic, xsz, CompressionConfig};
 use crate::data::Dims;
 use crate::error::{Error, Result};
 use crate::ft;
@@ -15,15 +15,30 @@ pub enum Engine {
     RandomAccess,
     /// Fault-tolerant engine ("ftrsz").
     FaultTolerant,
+    /// SZx-style ultra-fast engine ("xsz").
+    UltraFast,
+    /// Fault-tolerant ultra-fast engine ("ftxsz").
+    UltraFastFT,
 }
 
 impl Engine {
+    /// Every engine, in the canonical bench/test order.
+    pub const ALL: [Engine; 5] = [
+        Engine::Classic,
+        Engine::RandomAccess,
+        Engine::FaultTolerant,
+        Engine::UltraFast,
+        Engine::UltraFastFT,
+    ];
+
     /// Paper name.
     pub fn name(&self) -> &'static str {
         match self {
             Engine::Classic => "sz",
             Engine::RandomAccess => "rsz",
             Engine::FaultTolerant => "ftrsz",
+            Engine::UltraFast => "xsz",
+            Engine::UltraFastFT => "ftxsz",
         }
     }
 
@@ -35,6 +50,8 @@ impl Engine {
             Engine::Classic => &classic::CLASSIC_CODEC,
             Engine::RandomAccess => &engine::RSZ_CODEC,
             Engine::FaultTolerant => &crate::ft::ftengine::FTRSZ_CODEC,
+            Engine::UltraFast => &xsz::XSZ_CODEC,
+            Engine::UltraFastFT => &xsz::FTXSZ_CODEC,
         }
     }
 }
@@ -134,6 +151,16 @@ pub fn run_and_classify<H: Hooks>(
             let out = ft::compress_with_hooks(data, dims, cfg, hooks)?;
             ft::decompress(&out.archive)
         }
+        Engine::UltraFast => {
+            let out = xsz::compress_with_hooks(data, dims, cfg, hooks)?;
+            engine::decompress(&out.archive)
+        }
+        Engine::UltraFastFT => {
+            // the verified decode path is engine-generic (destage): the
+            // same Algorithm 2 loop ftrsz takes
+            let out = xsz::compress_ft_with_hooks(data, dims, cfg, hooks)?;
+            ft::decompress(&out.archive)
+        }
     })();
     classify(data, bound, result)
 }
@@ -152,7 +179,7 @@ mod tests {
     #[test]
     fn clean_runs_are_correct_on_all_engines() {
         let f = synthetic::hurricane_field("t", Dims::d3(8, 12, 12), 1);
-        for e in [Engine::Classic, Engine::RandomAccess, Engine::FaultTolerant] {
+        for e in Engine::ALL {
             let o = run_and_classify(e, &f.data, f.dims, &cfg(), &mut NoHooks);
             assert_eq!(o, Outcome::Correct, "engine {}", e.name());
         }

@@ -5,7 +5,7 @@
 //! error-bounded lossy compressor hardened against silent data corruption
 //! with algorithm-based fault tolerance (ABFT).
 //!
-//! Three engines share one core:
+//! Five engines share one container format and one decode stack:
 //!
 //! * [`compressor::classic`] — the *original SZ* baseline: cross-block
 //!   Lorenzo dependencies, one global Huffman stream, best ratio, no random
@@ -18,6 +18,31 @@
 //!   bins (detect + locate + correct memory errors), selective instruction
 //!   duplication around the two fragile computations, and per-block
 //!   decompressed-data checksums verified at decompression time.
+//! * [`compressor::xsz`] — **xsz** / **ftxsz**: the SZx-style ultra-fast
+//!   pair — no estimation pass, no prediction, no Huffman coding;
+//!   constant-block detection plus necessary-leading-bytes fixed-point
+//!   codes. The speed tier for throughput-bound workloads (in-memory
+//!   checkpointing, burst buffers).
+//!
+//! ## Choosing an engine
+//!
+//! Ratio buys verification features nothing, and vice versa — pick by the
+//! axis that is actually scarce:
+//!
+//! | engine   | ratio | compress throughput | verify (Alg. 2) | region | region + verify |
+//! |----------|-------|---------------------|-----------------|--------|-----------------|
+//! | `sz`     | best  | slow (1 thread)     | –               | –      | –               |
+//! | `rsz`    | high  | fast, scales        | –               | yes    | –               |
+//! | `ftrsz`  | high  | fast, scales        | yes             | yes    | yes             |
+//! | `xsz`    | lower | **fastest** (≥ 2× rsz, gated in `hotpath --check`) | – | yes | – |
+//! | `ftxsz`  | lower | fastest + checksums | yes             | yes    | yes             |
+//!
+//! Rules of thumb: archival of cold data → `sz`; the production default →
+//! `ftrsz` (full SDC story at predictive-engine ratios); a bandwidth-bound
+//! hot path that must keep up with the interconnect → `xsz`, or `ftxsz`
+//! when the data must also be verifiable after the fact. The `--verify`
+//! and `--region` capabilities follow the archive, not the CLI flag: only
+//! the ft engines store the per-block `sum_dc` that Algorithm 2 needs.
 //!
 //! The systems stack is three layers (see `DESIGN.md`): this crate is the
 //! L3 coordinator and production hot path; `python/compile` holds the L2
@@ -91,7 +116,7 @@
 //!
 //! let field: Vec<f32> = (0..32 * 32 * 32).map(|i| (i as f32).sin()).collect();
 //! let cfg = CompressionConfig::new(ErrorBound::Abs(1e-3));
-//! for engine in [Engine::Classic, Engine::RandomAccess, Engine::FaultTolerant] {
+//! for engine in Engine::ALL {
 //!     let codec = engine.codec(); // &'static dyn BlockCodec
 //!     let bytes = codec.compress(&field, Dims::d3(32, 32, 32), &cfg).unwrap();
 //!     let back = codec.decompress(&bytes, Parallelism::Auto).unwrap();

@@ -149,7 +149,9 @@ fn engine_of(f: &Flags) -> Result<Engine> {
         "sz" => Ok(Engine::Classic),
         "rsz" => Ok(Engine::RandomAccess),
         "ftrsz" => Ok(Engine::FaultTolerant),
-        other => Err(Error::Config(format!("--engine '{other}' (sz|rsz|ftrsz)"))),
+        "xsz" => Ok(Engine::UltraFast),
+        "ftxsz" => Ok(Engine::UltraFastFT),
+        other => Err(Error::Config(format!("--engine '{other}' (sz|rsz|ftrsz|xsz|ftxsz)"))),
     }
 }
 
@@ -181,7 +183,7 @@ fn print_usage() {
         "ftsz — SDC-resilient error-bounded lossy compressor (FT-SZ reproduction)\n\
          commands:\n\
          \x20 gen-data   --profile nyx|hurricane|scale-letkf|pluto --edge N --seed S --out DIR\n\
-         \x20 compress   --input RAW --dims D,R,C --engine sz|rsz|ftrsz\n\
+         \x20 compress   --input RAW --dims D,R,C --engine sz|rsz|ftrsz|xsz|ftxsz\n\
          \x20            --error-bound E [--workers N (0 = auto)]\n\
          \x20            [--archive-parity [GROUP_WIDTH]  (self-healing format v2)] --out FILE\n\
          \x20 decompress --input FILE --out RAW [--verify] [--workers N] [--region z,y,x,dz,dy,dx]\n\
@@ -340,7 +342,13 @@ fn cmd_info(f: &Flags) -> Result<()> {
         h.block_size,
         h.error_bound,
         h.n_blocks,
-        if h.is_classic() { "classic" } else { "random-access" },
+        if h.is_classic() {
+            "classic"
+        } else if h.is_xsz() {
+            "xsz (random-access)"
+        } else {
+            "random-access"
+        },
         if h.is_fault_tolerant() { "+ft" } else { "" },
         if h.has_archive_parity() { "+parity" } else { "" },
     );
@@ -356,6 +364,35 @@ fn cmd_info(f: &Flags) -> Result<()> {
             rec.stripes_repaired.len(),
             rec.stripes_repaired
         );
+    }
+    if h.is_xsz() {
+        // xsz metas carry a filler predictor tag; the real per-block mode
+        // is the first payload byte (0 = constant, 1-4 = fixed-point code
+        // width in bytes, 5 = verbatim). Verbatim blocks park ALL their
+        // points in the unpred pool, so the fixed-point escape count is
+        // the pool minus those.
+        let grid = ftsz::compressor::block::BlockGrid::new(h.dims, h.block_size as usize)?;
+        if grid.n_blocks() as u64 != h.n_blocks {
+            return Err(Error::Config("block count inconsistent with dims".into()));
+        }
+        let (mut constant, mut verbatim, mut verbatim_points) = (0usize, 0usize, 0usize);
+        for i in 0..archive.metas.len() {
+            match archive.block_payload(i).first() {
+                Some(0) => constant += 1,
+                Some(5) => {
+                    verbatim += 1;
+                    verbatim_points += grid.extent(i).len();
+                }
+                _ => {}
+            }
+        }
+        println!(
+            "xsz blocks: {constant} constant / {} coded / {verbatim} verbatim; \
+             escaped values: {} (+ {verbatim_points} verbatim points in the pool)",
+            archive.metas.len() - constant - verbatim,
+            archive.unpred.len() - verbatim_points.min(archive.unpred.len()),
+        );
+        return Ok(());
     }
     let lorenzo = archive
         .metas
@@ -526,9 +563,15 @@ fn cmd_pipeline(f: &Flags) -> Result<()> {
     let engine_kind = match f.get("engine") {
         Some(_) => engine_of(f)?,
         None => match rc.engine.as_str() {
+            // RunConfig::from_doc already validated the name; keep this
+            // list exhaustive so a future engine cannot silently fall
+            // through to ftrsz
             "sz" => Engine::Classic,
             "rsz" => Engine::RandomAccess,
-            _ => Engine::FaultTolerant,
+            "ftrsz" => Engine::FaultTolerant,
+            "xsz" => Engine::UltraFast,
+            "ftxsz" => Engine::UltraFastFT,
+            other => return Err(Error::Config(format!("config engine '{other}'"))),
         },
     };
     let ranks = f.usize_or("ranks", pc.ranks.min(32))?;

@@ -1,0 +1,285 @@
+//! Cross-engine differential harness: every engine × worker count ×
+//! archive format over one seeded corpus of awkward fields.
+//!
+//! The paper's independent-block model is engine-agnostic, and PR 5 made
+//! that concrete with a fourth `BlockCodec`. The invariants every engine
+//! must share — the ones this harness pins — are:
+//!
+//! * **round-trip within ε** for every corpus field;
+//! * **byte-stable archives** across {1, 2, 4} workers (parallelism
+//!   reorders computation, never the format);
+//! * **clean reports agree**: a clean archive decodes with
+//!   `DecompressReport::is_clean()` on every engine, through whichever
+//!   reporting path the engine supports (verified decode for the ft
+//!   engines, the reported-unverified path otherwise);
+//! * all of the above in both **v1 and v2 (parity)** containers.
+//!
+//! Every assertion message is a minimized reproducer — `engine=… seed=…
+//! shape=… field=… workers=… parity=…` — so a failure pastes straight
+//! into a regression test.
+
+use ftsz::analysis;
+use ftsz::compressor::{classic, engine, CompressionConfig, ErrorBound, Parallelism};
+use ftsz::data::{Dims, Field};
+use ftsz::ft::parity::ParityParams;
+use ftsz::ft::DecompressReport;
+use ftsz::inject::Engine;
+use ftsz::util::rng::Pcg32;
+
+/// One corpus entry: a named, seeded field.
+struct Case {
+    kind: &'static str,
+    seed: u64,
+    dims: Dims,
+    data: Vec<f32>,
+}
+
+impl Case {
+    fn repro(&self, e: Engine, workers: usize, parity: bool) -> String {
+        format!(
+            "engine={} seed={} shape={:?} field={} workers={workers} parity={parity}",
+            e.name(),
+            self.seed,
+            self.dims,
+            self.kind
+        )
+    }
+}
+
+/// A smooth random-walk field (compresses well on every engine).
+fn smooth(seed: u64, dims: Dims) -> Vec<f32> {
+    let mut rng = Pcg32::new(seed);
+    let mut v = rng.range_f64(-5.0, 5.0);
+    (0..dims.len())
+        .map(|_| {
+            v += rng.range_f64(-0.3, 0.3);
+            v as f32
+        })
+        .collect()
+}
+
+/// White noise (compresses badly; exercises escape/unpredictable paths).
+fn noisy(seed: u64, dims: Dims) -> Vec<f32> {
+    let mut rng = Pcg32::new(seed);
+    (0..dims.len()).map(|_| rng.normal() as f32 * 10.0).collect()
+}
+
+/// Piecewise-constant plateaus with occasional spikes (exercises the xsz
+/// constant-block detection next to wide-range blocks).
+fn plateaus(seed: u64, dims: Dims) -> Vec<f32> {
+    let mut rng = Pcg32::new(seed);
+    let mut level = 1.0f32;
+    (0..dims.len())
+        .map(|i| {
+            if i % 97 == 0 {
+                level = (rng.index(7) as f32) * 2.5;
+            }
+            if rng.index(211) == 0 {
+                level * 1000.0 // spike
+            } else {
+                level
+            }
+        })
+        .collect()
+}
+
+/// The seeded corpus: smooth / noisy / constant / plateau fields over
+/// tiny, odd-shaped and regular grids. All values are finite (non-finite
+/// round-trips are covered by per-engine unit tests; the differential
+/// bound check needs comparable numerics).
+fn corpus() -> Vec<Case> {
+    let mut cases = Vec::new();
+    let shapes = [
+        Dims::d1(7),           // smaller than any block
+        Dims::d1(500),         // rank-1
+        Dims::d2(3, 5),        // odd rank-2
+        Dims::d2(17, 23),      // awkward primes
+        Dims::d3(1, 1, 9),     // degenerate axis
+        Dims::d3(2, 3, 5),     // tiny odd cube
+        Dims::d3(8, 10, 12),   // regular multi-block grid
+    ];
+    for (i, dims) in shapes.iter().enumerate() {
+        let seed = 100 + i as u64;
+        cases.push(Case { kind: "smooth", seed, dims: *dims, data: smooth(seed, *dims) });
+    }
+    // field variety on a mid-size grid
+    let dims = Dims::d3(6, 10, 10);
+    cases.push(Case { kind: "noisy", seed: 42, dims, data: noisy(42, dims) });
+    cases.push(Case { kind: "constant", seed: 7, dims, data: vec![3.25; dims.len()] });
+    cases.push(Case { kind: "plateaus", seed: 9, dims, data: plateaus(9, dims) });
+    cases
+}
+
+/// The engine's natural reporting decode: verified (Algorithm 2) where
+/// `sum_dc` exists, the reported-unverified path otherwise — every engine
+/// has *some* path that surfaces the repair report.
+fn report_of(e: Engine, bytes: &[u8]) -> Result<DecompressReport, ftsz::Error> {
+    let codec = e.codec();
+    if codec.supports_verify() {
+        return codec.decompress_verified(bytes, Parallelism::Sequential).map(|(_, r)| r);
+    }
+    match e {
+        Engine::Classic => classic::decompress_reported(bytes).map(|(_, r)| r),
+        _ => engine::decompress_reported(bytes, Parallelism::Sequential).map(|(_, r)| r),
+    }
+}
+
+#[test]
+fn differential_all_engines_workers_and_formats() {
+    let bound = 1e-3;
+    for case in corpus() {
+        for parity in [false, true] {
+            let mut cfg =
+                CompressionConfig::new(ErrorBound::Abs(bound)).with_block_size(4);
+            if parity {
+                cfg = cfg.with_archive_parity(ParityParams { stripe_len: 64, group_width: 8 });
+            }
+            for e in Engine::ALL {
+                let codec = e.codec();
+                let base = codec
+                    .compress(&case.data, case.dims, &cfg)
+                    .unwrap_or_else(|err| {
+                        panic!("{}: compress failed: {err}", case.repro(e, 1, parity))
+                    });
+                for workers in [1usize, 2, 4] {
+                    // archives byte-stable across worker counts
+                    let b = codec
+                        .compress(&case.data, case.dims, &cfg.clone().with_workers(workers))
+                        .unwrap_or_else(|err| {
+                            panic!(
+                                "{}: compress failed: {err}",
+                                case.repro(e, workers, parity)
+                            )
+                        });
+                    assert_eq!(
+                        b,
+                        base,
+                        "{}: archive bytes differ from the 1-worker reference",
+                        case.repro(e, workers, parity)
+                    );
+                    // round-trip within ε at every worker count
+                    let dec = codec
+                        .decompress(&base, Parallelism::from_workers(workers))
+                        .unwrap_or_else(|err| {
+                            panic!(
+                                "{}: decompress failed: {err}",
+                                case.repro(e, workers, parity)
+                            )
+                        });
+                    assert_eq!(
+                        dec.data.len(),
+                        case.data.len(),
+                        "{}: wrong output length",
+                        case.repro(e, workers, parity)
+                    );
+                    let max = analysis::max_abs_err(&case.data, &dec.data);
+                    assert!(
+                        max <= bound,
+                        "{}: bound violated ({max} > {bound})",
+                        case.repro(e, workers, parity)
+                    );
+                }
+                // clean archives report clean — and every engine agrees
+                let report = report_of(e, &base).unwrap_or_else(|err| {
+                    panic!("{}: reporting decode failed: {err}", case.repro(e, 1, parity))
+                });
+                assert!(
+                    report.is_clean(),
+                    "{}: clean archive reported events: {report:?}",
+                    case.repro(e, 1, parity)
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn differential_decodes_agree_where_numerics_are_shared() {
+    // rsz/ftrsz and xsz/ftxsz are protection pairs over identical
+    // numerics: the archives differ (ft sections) but the decoded bits
+    // must not. (Classic has different numerics by design — cross-block
+    // prediction — so it only shares the ε contract, not the bits.)
+    for case in corpus() {
+        let cfg = CompressionConfig::new(ErrorBound::Abs(1e-3)).with_block_size(4);
+        for (plain, protected) in [
+            (Engine::RandomAccess, Engine::FaultTolerant),
+            (Engine::UltraFast, Engine::UltraFastFT),
+        ] {
+            let a = plain.codec().compress(&case.data, case.dims, &cfg).unwrap();
+            let b = protected.codec().compress(&case.data, case.dims, &cfg).unwrap();
+            let da = plain.codec().decompress(&a, Parallelism::Sequential).unwrap();
+            let db = protected.codec().decompress(&b, Parallelism::Sequential).unwrap();
+            assert_eq!(
+                da.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                db.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "{} vs {}: {}",
+                plain.name(),
+                protected.name(),
+                case.repro(plain, 1, false)
+            );
+        }
+    }
+}
+
+#[test]
+fn differential_region_decode_matches_full_slice_on_region_engines() {
+    // the region contract, cross-engine: every engine that claims
+    // supports_region() must produce the full-decode slice bitwise
+    let case = Case {
+        kind: "smooth",
+        seed: 321,
+        dims: Dims::d3(9, 11, 13),
+        data: smooth(321, Dims::d3(9, 11, 13)),
+    };
+    let cfg = CompressionConfig::new(ErrorBound::Abs(1e-3)).with_block_size(4);
+    let region = ftsz::compressor::block::Region { origin: (2, 3, 4), shape: (5, 6, 7) };
+    let (_, ry, rx) = case.dims.as_3d();
+    for e in Engine::ALL {
+        let codec = e.codec();
+        if !codec.supports_region() {
+            continue;
+        }
+        let bytes = codec.compress(&case.data, case.dims, &cfg).unwrap();
+        let full = codec.decompress(&bytes, Parallelism::Sequential).unwrap();
+        for workers in [1usize, 4] {
+            let got = codec
+                .decompress_region(&bytes, region, Parallelism::from_workers(workers))
+                .unwrap_or_else(|err| {
+                    panic!("{}: region decode failed: {err}", case.repro(e, workers, false))
+                });
+            let mut idx = 0;
+            for z in 0..region.shape.0 {
+                for y in 0..region.shape.1 {
+                    for x in 0..region.shape.2 {
+                        let g = ((region.origin.0 + z) * ry + region.origin.1 + y) * rx
+                            + region.origin.2
+                            + x;
+                        assert_eq!(
+                            got[idx].to_bits(),
+                            full.data[g].to_bits(),
+                            "{}: region mismatch at ({z},{y},{x})",
+                            case.repro(e, workers, false)
+                        );
+                        idx += 1;
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn corpus_is_well_formed() {
+    // the harness's own precondition: finite data, matching lengths
+    for case in corpus() {
+        assert_eq!(case.data.len(), case.dims.len(), "{} seed {}", case.kind, case.seed);
+        assert!(
+            case.data.iter().all(|v| v.is_finite()),
+            "{} seed {}: non-finite corpus value",
+            case.kind,
+            case.seed
+        );
+        // Field construction validates dims/data agreement too
+        let _ = Field::new(case.kind, case.dims, case.data).unwrap();
+    }
+}

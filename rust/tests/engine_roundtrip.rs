@@ -15,14 +15,16 @@ fn compress_any(e: Engine, data: &[f32], dims: Dims, cfg: &CompressionConfig) ->
         Engine::Classic => classic::compress(data, dims, cfg).unwrap(),
         Engine::RandomAccess => engine::compress(data, dims, cfg).unwrap(),
         Engine::FaultTolerant => ft::compress(data, dims, cfg).unwrap(),
+        Engine::UltraFast => ftsz::compressor::xsz::compress(data, dims, cfg).unwrap(),
+        Engine::UltraFastFT => ftsz::compressor::xsz::compress_ft(data, dims, cfg).unwrap(),
     }
 }
 
 fn decompress_any(e: Engine, bytes: &[u8]) -> Vec<f32> {
     match e {
         Engine::Classic => classic::decompress(bytes).unwrap().data,
-        Engine::RandomAccess => engine::decompress(bytes).unwrap().data,
-        Engine::FaultTolerant => ft::decompress(bytes).unwrap().data,
+        Engine::RandomAccess | Engine::UltraFast => engine::decompress(bytes).unwrap().data,
+        Engine::FaultTolerant | Engine::UltraFastFT => ft::decompress(bytes).unwrap().data,
     }
 }
 
@@ -30,7 +32,7 @@ fn decompress_any(e: Engine, bytes: &[u8]) -> Vec<f32> {
 fn all_profiles_all_engines_all_bounds() {
     for profile in Profile::all() {
         let f = synthetic::dataset(profile, 32, 5).remove(0);
-        for e in [Engine::Classic, Engine::RandomAccess, Engine::FaultTolerant] {
+        for e in Engine::ALL {
             for bound in [1e-2, 1e-4] {
                 let cfg = CompressionConfig::new(ErrorBound::Rel(bound));
                 let abs = cfg.error_bound.absolute(&f.data);

@@ -57,9 +57,14 @@ const DRIVERS: [DecodeDriver; 4] = [
 fn full_decode_bit_identical_across_drivers_engines_and_formats() {
     let f = field();
     for parity in [false, true] {
-        for e in [Engine::RandomAccess, Engine::FaultTolerant] {
+        for e in [
+            Engine::RandomAccess,
+            Engine::FaultTolerant,
+            Engine::UltraFast,
+            Engine::UltraFastFT,
+        ] {
             let bytes = e.codec().compress(&f.data, f.dims, &cfg(parity)).unwrap();
-            let verify = e == Engine::FaultTolerant;
+            let verify = e.codec().supports_verify();
             let reference =
                 destage::decode_with_driver(&bytes, false, None, DecodeDriver::Sequential)
                     .unwrap();
@@ -100,13 +105,18 @@ fn region_decode_bit_identical_across_drivers_and_matches_full_slice() {
     let f = field();
     let region = Region { origin: (3, 4, 2), shape: (5, 9, 11) };
     for parity in [false, true] {
-        for e in [Engine::RandomAccess, Engine::FaultTolerant] {
+        for e in [
+            Engine::RandomAccess,
+            Engine::FaultTolerant,
+            Engine::UltraFast,
+            Engine::UltraFastFT,
+        ] {
             let bytes = e.codec().compress(&f.data, f.dims, &cfg(parity)).unwrap();
             let full = destage::decode_with_driver(&bytes, false, None, DecodeDriver::Sequential)
                 .unwrap();
             let want = region_slice(&full.data, f.dims, region);
             let verify_modes: &[bool] =
-                if e == Engine::FaultTolerant { &[false, true] } else { &[false] };
+                if e.codec().supports_verify() { &[false, true] } else { &[false] };
             for &v in verify_modes {
                 for driver in DRIVERS {
                     let got =
@@ -126,7 +136,7 @@ fn region_decode_bit_identical_across_drivers_and_matches_full_slice() {
                     .decompress_region(&bytes, region, Parallelism::from_workers(w))
                     .unwrap();
                 assert_eq!(bits(&got), bits(&want), "{} region w={w}", e.name());
-                if e == Engine::FaultTolerant {
+                if e.codec().supports_region_verified() {
                     let (got, report) = e
                         .codec()
                         .decompress_region_verified(
@@ -283,4 +293,78 @@ fn verified_subregion_localizes_detection_to_the_damaged_block() {
         }
     }
     assert!(exercised > 0, "no strike produced the single-damaged-block shape");
+}
+
+#[test]
+fn region_decode_reports_parity_repairs_on_unverified_engines() {
+    // PR 4 closed the report gap for *full* unverified decodes; the
+    // region path kept it. A damaged v2 archive decoded through
+    // `engine::decompress_region_reported` must surface the stripe
+    // rebuild for the engines with no verify path at all (rsz, xsz) —
+    // otherwise at-rest healing is invisible exactly where random access
+    // makes it most likely to go unnoticed.
+    let f = field();
+    let region = Region { origin: (2, 3, 1), shape: (4, 6, 8) };
+    for e in [Engine::RandomAccess, Engine::UltraFast] {
+        let bytes = e.codec().compress(&f.data, f.dims, &cfg(true)).unwrap();
+        let want = {
+            let full =
+                destage::decode_with_driver(&bytes, false, None, DecodeDriver::Sequential)
+                    .unwrap();
+            region_slice(&full.data, f.dims, region)
+        };
+        let mut damaged = bytes.clone();
+        damaged[bytes.len() / 2] ^= 0x08;
+        for w in [1usize, 4] {
+            let (got, report) = engine::decompress_region_reported(
+                &damaged,
+                region,
+                Parallelism::from_workers(w),
+            )
+            .unwrap();
+            assert!(
+                !report.stripes_repaired.is_empty(),
+                "{} w={w}: region decode hid the parity rebuild",
+                e.name()
+            );
+            assert_eq!(report.blocks_reexecuted, 0, "{}: at-rest repair domain", e.name());
+            assert_eq!(bits(&got), bits(&want), "{} w={w}: healed region differs", e.name());
+        }
+        // the same damage through the plain (report-less) region API must
+        // still heal — the report variant only adds visibility
+        let got = engine::decompress_region(&damaged, region).unwrap();
+        assert_eq!(bits(&got), bits(&want), "{}: plain region decode", e.name());
+    }
+}
+
+#[test]
+fn scrub_heals_an_xsz_v2_archive_in_place() {
+    // the maintenance path (PR 3's scrub API) applies to the fourth
+    // engine's archives unchanged: damage inside the protected region is
+    // localized, rebuilt, and the healed bytes decode identically
+    use ftsz::compressor::xsz;
+    use ftsz::ft::ScrubOutcome;
+    let f = field();
+    let clean = xsz::compress_ft(&f.data, f.dims, &cfg(true)).unwrap();
+    let reference = ft::decompress(&clean).unwrap();
+    // clean archives scrub clean
+    let (outcome, healed) = ft::parity::scrub(&clean).unwrap();
+    assert!(matches!(outcome, ScrubOutcome::Clean));
+    assert!(healed.is_none());
+    // damaged archives are repaired and the healed bytes round-trip
+    let mut damaged = clean.clone();
+    damaged[clean.len() / 3] ^= 0x40;
+    let (outcome, healed) = ft::parity::scrub(&damaged).unwrap();
+    let ScrubOutcome::Repaired(report) = outcome else {
+        panic!("damaged xsz archive scrubbed as {outcome:?}");
+    };
+    assert!(!report.stripes_repaired.is_empty());
+    let healed = healed.expect("repair returns the healed bytes");
+    assert_eq!(healed, clean, "scrub must restore the original bytes exactly");
+    let dec = ft::decompress(&healed).unwrap();
+    assert_eq!(bits(&dec.data), bits(&reference.data));
+    // v1 (unprotected) xsz archives report Unprotected, not an error
+    let v1 = xsz::compress_ft(&f.data, f.dims, &cfg(false)).unwrap();
+    let (outcome, _) = ft::parity::scrub(&v1).unwrap();
+    assert!(matches!(outcome, ScrubOutcome::Unprotected));
 }

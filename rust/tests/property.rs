@@ -5,7 +5,9 @@
 use ftsz::analysis;
 use ftsz::compressor::block::{BlockGrid, Region};
 use ftsz::compressor::huffman::HuffmanTable;
-use ftsz::compressor::{classic, dualquant, engine, CompressionConfig, ErrorBound, Parallelism};
+use ftsz::compressor::{
+    classic, dualquant, engine, xsz, CompressionConfig, ErrorBound, Parallelism,
+};
 use ftsz::data::Dims;
 use ftsz::ft::checksum::{self, Correction};
 use ftsz::util::bits::{BitReader, BitWriter};
@@ -236,6 +238,17 @@ fn prop_parallel_and_sequential_byte_identical_all_engines() {
         if f_seq != f_par {
             return Err(format!("ftrsz archive differs at {workers} workers (b={b})"));
         }
+        // xsz / ftxsz: the SZx-style chain has its own drivers — same law
+        let x_seq = xsz::compress(&data, dims, &seq_cfg).map_err(|e| e.to_string())?;
+        let x_par = xsz::compress(&data, dims, &par_cfg).map_err(|e| e.to_string())?;
+        if x_seq != x_par {
+            return Err(format!("xsz archive differs at {workers} workers (b={b})"));
+        }
+        let fx_seq = xsz::compress_ft(&data, dims, &seq_cfg).map_err(|e| e.to_string())?;
+        let fx_par = xsz::compress_ft(&data, dims, &par_cfg).map_err(|e| e.to_string())?;
+        if fx_seq != fx_par {
+            return Err(format!("ftxsz archive differs at {workers} workers (b={b})"));
+        }
         // classic: the knob is documented-ignored; bytes must not change
         let c_seq = classic::compress(&data, dims, &seq_cfg).map_err(|e| e.to_string())?;
         let c_par = classic::compress(&data, dims, &par_cfg).map_err(|e| e.to_string())?;
@@ -254,6 +267,11 @@ fn prop_parallel_and_sequential_byte_identical_all_engines() {
         let v_par = ftsz::ft::decompress_with(&f_seq, par).map_err(|e| e.to_string())?;
         if !v_seq.data.iter().zip(&v_par.data).all(|(x, y)| x.to_bits() == y.to_bits()) {
             return Err(format!("ftrsz verified decode differs at {workers} workers"));
+        }
+        let vx_seq = ftsz::ft::decompress(&fx_seq).map_err(|e| e.to_string())?;
+        let vx_par = ftsz::ft::decompress_with(&fx_seq, par).map_err(|e| e.to_string())?;
+        if !vx_seq.data.iter().zip(&vx_par.data).all(|(x, y)| x.to_bits() == y.to_bits()) {
+            return Err(format!("ftxsz verified decode differs at {workers} workers"));
         }
 
         // random-access region decode bitwise identical
@@ -307,7 +325,7 @@ fn prop_unified_codec_dispatch_all_engines() {
             origin: (oz, oy, ox),
             shape: (g.usize_in(1, d - oz), g.usize_in(1, r - oy), g.usize_in(1, c - ox)),
         };
-        for e in [Engine::Classic, Engine::RandomAccess, Engine::FaultTolerant] {
+        for e in Engine::ALL {
             let codec = e.codec();
             let base = codec
                 .compress(&data, dims, &cfg)
@@ -487,6 +505,17 @@ fn prop_stage_overlap_never_changes_bytes() {
         if a != b {
             return Err("ftrsz pipelined bytes differ".into());
         }
+        // the xsz pipeline has no Huffman barrier — still byte-stable
+        let a = xsz::compress(&data, dims, &on).map_err(|e| e.to_string())?;
+        let b = xsz::compress(&data, dims, &off).map_err(|e| e.to_string())?;
+        if a != b {
+            return Err("xsz pipelined bytes differ".into());
+        }
+        let a = xsz::compress_ft(&data, dims, &on).map_err(|e| e.to_string())?;
+        let b = xsz::compress_ft(&data, dims, &off).map_err(|e| e.to_string())?;
+        if a != b {
+            return Err("ftxsz pipelined bytes differ".into());
+        }
         let a = classic::compress(&data, dims, &on).map_err(|e| e.to_string())?;
         let b = classic::compress(&data, dims, &off).map_err(|e| e.to_string())?;
         if a != b {
@@ -511,6 +540,12 @@ fn prop_corrupted_archives_never_panic() {
         // any outcome is fine except a panic (the harness catches those)
         let _ = ftsz::ft::decompress(&bytes);
         let _ = engine::decompress(&bytes);
+        // same law for the xsz container (self-describing payload tags)
+        let mut xbytes = xsz::compress_ft(&data, dims, &cfg).map_err(|e| e.to_string())?;
+        let xpos = g.usize_in(0, xbytes.len() - 1);
+        xbytes[xpos] ^= 1 << bit;
+        let _ = ftsz::ft::decompress(&xbytes);
+        let _ = engine::decompress(&xbytes);
         Ok(())
     });
 }

@@ -37,11 +37,13 @@ def main() -> int:
         commit = os.environ.get("GITHUB_SHA", "unknown")[:9]
 
     date = datetime.date.today().isoformat()
-    row = "| {} | {} | {} | {} | {} | {} | {} | {} | {} | {} | {} |\n".format(
+    row = "| {} | {} | {} | {} | {} | {} | {} | {} | {} | {} | {} | {} | {} |\n".format(
         date,
         commit,
         v("rsz.compress_mbps"),
         v("ftrsz.compress_mbps"),
+        v("xsz.compress_mbps"),
+        v("xsz.vs_rsz_compress_speedup", "{:.2f}"),
         v("scaling.rsz_decode.w1_mbps"),
         v("scaling.ftrsz_verify.w1_mbps"),
         v("stage.rsz.speedup", "{:.2f}"),
