@@ -361,6 +361,96 @@ fn main() {
         m.put("dstage.region_verified.w4_mbps", mbps(region_bytes, s_rv4));
     }
 
+    // chain shape 3: slab-bounded streaming vs the in-memory path. The
+    // contract is twofold: identical bytes (asserted every run) and
+    // throughput >= 80% of in-memory (gated under --check, with the same
+    // sub-ms noise guard as the pipeline gates — the streaming source
+    // here is an in-memory slice, so the delta measured is pure chain
+    // overhead, not disk speed)
+    println!("--- streaming chain shape (slab-bounded) vs in-memory ---");
+    {
+        use ftsz::compressor::stream::{SliceSource, VecSink};
+        for engine_kind in [
+            Engine::RandomAccess,
+            Engine::FaultTolerant,
+            Engine::UltraFast,
+            Engine::UltraFastFT,
+        ] {
+            let cfg = cfg_rel(1e-4);
+            let codec = engine_kind.codec();
+            let (t_mem, archive) =
+                time_median(reps, || codec.compress(&f.data, f.dims, &cfg).expect("compress"));
+            let (t_strm, strm) = time_median(reps, || {
+                let mut src = SliceSource::new(f.dims, &f.data).expect("source");
+                codec.compress_stream(&mut src, &cfg).expect("stream compress")
+            });
+            assert_eq!(
+                strm,
+                archive,
+                "{}: streaming compress must emit identical bytes",
+                engine_kind.name()
+            );
+            let frac = t_mem / t_strm;
+            println!(
+                "{:<22} in-mem {:>8.1} MB/s -> stream {:>8.1} MB/s ({:.0}% of in-memory)",
+                format!("{} compress", engine_kind.name()),
+                mbps(bytes_in, t_mem),
+                mbps(bytes_in, t_strm),
+                100.0 * frac,
+            );
+            let name = engine_kind.name();
+            m.put(&format!("stream.{name}.compress_mbps"), mbps(bytes_in, t_strm));
+            m.put(&format!("stream.{name}.compress_vs_inmem"), frac);
+            if check && t_mem >= 1e-3 && !(frac >= 0.80) {
+                if json {
+                    m.write_json("BENCH_hotpath.json");
+                }
+                eprintln!(
+                    "FAIL: {} streaming compress at {:.0}% of the in-memory path \
+                     (gate: >= 80%)",
+                    engine_kind.name(),
+                    100.0 * frac
+                );
+                std::process::exit(1);
+            }
+        }
+        // streaming decode: same placement bits, bounded assembly memory
+        let rsz_archive = engine::compress(&f.data, f.dims, &cfg_rel(1e-4)).expect("rsz");
+        let (t_mem, want) = time_median(reps, || {
+            engine::decompress_with(&rsz_archive, Parallelism::Sequential).expect("decode")
+        });
+        let (t_strm, placed) = time_median(reps, || {
+            let mut sink = VecSink::new(f.dims.len());
+            engine::decompress_stream(&rsz_archive, &mut sink, Parallelism::Sequential)
+                .expect("stream decode");
+            sink.into_data()
+        });
+        assert!(
+            placed.iter().zip(&want.data).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "streaming decode must place identical bits"
+        );
+        let frac = t_mem / t_strm;
+        println!(
+            "{:<22} in-mem {:>8.1} MB/s -> stream {:>8.1} MB/s ({:.0}% of in-memory)",
+            "rsz decompress",
+            mbps(bytes_in, t_mem),
+            mbps(bytes_in, t_strm),
+            100.0 * frac,
+        );
+        m.put("stream.rsz.decompress_mbps", mbps(bytes_in, t_strm));
+        m.put("stream.rsz.decompress_vs_inmem", frac);
+        if check && t_mem >= 1e-3 && !(frac >= 0.80) {
+            if json {
+                m.write_json("BENCH_hotpath.json");
+            }
+            eprintln!(
+                "FAIL: streaming rsz decompress at {:.0}% of the in-memory path (gate: >= 80%)",
+                100.0 * frac
+            );
+            std::process::exit(1);
+        }
+    }
+
     // archive parity (format v2): what self-healing costs at the default
     // geometry — targets: <3% compressed size, <5% compress time
     println!("--- archive parity (format v2) overhead ---");

@@ -1,0 +1,345 @@
+//! The generic chain-driver layer: one implementation of the
+//! sequential / 1-worker-software-pipelined / block-parallel driver trio,
+//! instantiated by every per-block chain in the codebase.
+//!
+//! Before this module existed the driver scaffolding — companion thread +
+//! bounded channel + ordered commit for the software pipeline,
+//! `parallel_map` fan-out + ordered commit for the block-parallel driver,
+//! and the selection policy that picks between them — was copied three
+//! times: [`super::stage`] (rsz/ftrsz compress), [`super::destage`]
+//! (decode), and [`super::xsz`] (SZx-style compress). A chain is always
+//! the same shape:
+//!
+//! ```text
+//! front(i)   — produce block i's unit of work, in index order
+//!   → step(i) — consume it (protect/encode/verify/place), in index order
+//!   → finish  — the chain's barrier tail (Huffman table + encode for
+//!               rsz, nothing for the barrier-free xsz, timing hand-back
+//!               for decode)
+//! ```
+//!
+//! and the three schedules of that shape live **here, once**:
+//!
+//! * **sequential** — the hooked reference drivers stay engine-local by
+//!   design: injection hooks are stateful `&mut` machines threaded through
+//!   every stage, which is precisely the coupling this hook-free layer
+//!   rules out. What is shared is the *policy* ([`select_driver`]) that
+//!   routes hooked or tiny runs to them;
+//! * **pipelined** ([`run_pipelined`]) — a companion thread runs
+//!   `step` on block *i* while the calling thread runs `front` on block
+//!   *i+1*, connected by a bounded channel ([`PIPE_DEPTH`] — the honest
+//!   backpressure that also bounds in-flight blocks for the streaming
+//!   chain shape); after the last send the calling thread runs `tail`
+//!   (e.g. pre-compressing the unpredictable section) overlapping the
+//!   companion's drain + `finish`;
+//! * **parallel** ([`run_parallel`]) — fan-out over
+//!   [`crate::util::threadpool::parallel_map`] with a strictly ordered
+//!   commit, so every serialized array is assembled in block order and the
+//!   first error surfaced is the lowest failing block, exactly like a
+//!   sequential sweep.
+//!
+//! Every instantiation commits results in block-index order, which is why
+//! all drivers of one chain are byte-identical (property- and
+//! golden-tested per chain).
+//!
+//! The same machinery drives the third chain shape, **streaming**
+//! ([`super::stream`]): there the `front` closure owns a slab cursor that
+//! reads fixed-size chunks from a [`super::stream::SlabSource`] instead of
+//! indexing an in-memory array, and the channel depth is the in-flight
+//! block budget. Nothing else changes — which is the point of this layer,
+//! and the extension surface a future archive server's chains would plug
+//! into.
+
+use std::sync::mpsc;
+
+use crate::error::{Error, Result};
+
+/// Pipelining needs at least two blocks to overlap anything.
+pub(crate) const MIN_OVERLAP_BLOCKS: usize = 2;
+
+/// Minimum dataset size for the pipelined driver: below this, the
+/// companion-thread spawn + channel traffic (~tens of µs) rivals the
+/// chain work itself, so tiny runs stay on the plain sequential driver
+/// (bytes are identical either way).
+pub(crate) const MIN_OVERLAP_POINTS: usize = 4096;
+
+/// Bounded depth of the front → step channel on the pipelined path: deep
+/// enough to ride out stage-time jitter, shallow enough that the in-flight
+/// blocks stay cache-sized. On the streaming chain shape this is the
+/// in-flight block budget.
+pub(crate) const PIPE_DEPTH: usize = 4;
+
+/// Which driver schedules a chain. [`select_driver`] picks one from the
+/// run's shape; benches and golden tests pin one explicitly.
+/// ([`super::destage`] re-exports this as `DecodeDriver` — same type.)
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChainDriver {
+    /// One-thread reference driver (hook points live).
+    Sequential,
+    /// 1-worker software pipeline: `step` of block *i* overlaps `front`
+    /// of block *i+1* on a companion thread.
+    Pipelined,
+    /// Block-parallel fan-out with this many workers.
+    Parallel(usize),
+}
+
+/// The one driver-selection policy (previously copied per chain):
+///
+/// * hooks live (`!parallel_safe`) → sequential, always — hooks are
+///   stateful `&mut` machines tied to the sequential block order;
+/// * an explicitly `forced` driver wins (measurement/verification paths);
+/// * \> 1 worker and > 1 item → parallel;
+/// * overlap enabled, ≥ [`MIN_OVERLAP_BLOCKS`] items and ≥
+///   [`MIN_OVERLAP_POINTS`] points → pipelined;
+/// * otherwise → sequential.
+pub(crate) fn select_driver(
+    parallel_safe: bool,
+    overlap_enabled: bool,
+    workers: usize,
+    n_items: usize,
+    n_points: usize,
+    forced: Option<ChainDriver>,
+) -> ChainDriver {
+    if !parallel_safe {
+        return ChainDriver::Sequential;
+    }
+    if let Some(d) = forced {
+        return d;
+    }
+    if workers > 1 && n_items > 1 {
+        return ChainDriver::Parallel(workers);
+    }
+    if overlap_enabled && n_items >= MIN_OVERLAP_BLOCKS && n_points >= MIN_OVERLAP_POINTS {
+        return ChainDriver::Pipelined;
+    }
+    ChainDriver::Sequential
+}
+
+/// The 1-worker software pipeline, written once.
+///
+/// * calling thread: `front(main, i)` for `i` in `0..n_items`, each result
+///   sent over a bounded channel of depth [`PIPE_DEPTH`];
+/// * companion thread: `step(state, i, item)` per arrival (arrival order
+///   *is* index order — the channel preserves it), then `finish(state)`
+///   after the channel closes;
+/// * calling thread, after the last send: `tail(main)` — overlapping the
+///   companion's drain and `finish`.
+///
+/// `main` is the calling thread's mutable state (timings, accumulators, a
+/// streaming slab cursor) threaded through `front` and `tail` — one `&mut`
+/// borrow instead of two conflicting closures. Error precedence matches a
+/// sequential sweep: a companion (`step`/`finish`) error always concerns a
+/// block no later than any front error, so it wins; then the front error;
+/// `tail`'s result is surfaced last. A panic on the companion resumes on
+/// the caller.
+pub(crate) fn run_pipelined<M, Front, State, Out, Tail>(
+    n_items: usize,
+    main: &mut M,
+    state: State,
+    mut front: impl FnMut(&mut M, usize) -> Result<Front>,
+    step: impl FnMut(&mut State, usize, Front) -> Result<()> + Send,
+    finish: impl FnOnce(State) -> Result<Out> + Send,
+    tail: impl FnOnce(&mut M) -> Result<Tail>,
+) -> Result<(Out, Tail)>
+where
+    Front: Send,
+    State: Send,
+    Out: Send,
+{
+    std::thread::scope(|s| {
+        let (tx, rx) = mpsc::sync_channel::<Front>(PIPE_DEPTH);
+
+        // companion thread: step per arrival, finish after the close
+        let companion = s.spawn(move || -> Result<Out> {
+            let mut state = state;
+            let mut step = step;
+            let mut i = 0usize;
+            while let Ok(item) = rx.recv() {
+                step(&mut state, i, item)?;
+                i += 1;
+            }
+            finish(state)
+        });
+
+        // calling thread: front per block, in order
+        let mut front_err: Option<Error> = None;
+        for i in 0..n_items {
+            match front(main, i) {
+                Ok(item) => {
+                    if tx.send(item).is_err() {
+                        // companion exited early (it owns the error) — stop
+                        break;
+                    }
+                }
+                Err(e) => {
+                    front_err = Some(e);
+                    break;
+                }
+            }
+        }
+        drop(tx);
+
+        // tail overlaps the companion's queue drain + finish
+        let tail_out = tail(main);
+
+        let joined = match companion.join() {
+            Ok(r) => r,
+            Err(p) => std::panic::resume_unwind(p),
+        };
+        match (joined, front_err) {
+            // the companion's block precedes any still-unprocessed block
+            (Err(e), _) => Err(e),
+            (Ok(_), Some(e)) => Err(e),
+            (Ok(out), None) => Ok((out, tail_out?)),
+        }
+    })
+}
+
+/// The block-parallel driver, written once: fan `work` out over
+/// [`crate::util::threadpool::parallel_map`] (which returns results in
+/// index order, running inline at ≤ 1 effective worker), then `commit`
+/// each result strictly in index order. The `?` in the ordered commit
+/// surfaces the lowest failing block first, exactly like a sequential
+/// sweep — every chain's byte-identity across drivers depends on this
+/// commit order.
+pub(crate) fn run_parallel<Out: Send>(
+    n_items: usize,
+    workers: usize,
+    work: impl Fn(usize) -> Result<Out> + Sync,
+    mut commit: impl FnMut(usize, Out) -> Result<()>,
+) -> Result<()> {
+    let results: Vec<Result<Out>> =
+        crate::util::threadpool::parallel_map(n_items, workers, &work);
+    for (i, r) in results.into_iter().enumerate() {
+        commit(i, r?)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn select_driver_policy() {
+        // hooks pin sequential no matter what
+        assert_eq!(
+            select_driver(false, true, 8, 100, 1 << 20, Some(ChainDriver::Pipelined)),
+            ChainDriver::Sequential
+        );
+        // forced wins over auto selection
+        assert_eq!(
+            select_driver(true, true, 8, 100, 1 << 20, Some(ChainDriver::Sequential)),
+            ChainDriver::Sequential
+        );
+        // workers > 1 with real work → parallel
+        assert_eq!(select_driver(true, true, 4, 10, 10_000, None), ChainDriver::Parallel(4));
+        // a single block never fans out
+        assert_eq!(select_driver(true, true, 4, 1, 10_000, None), ChainDriver::Sequential);
+        // 1 worker + big enough → pipelined; overlap off or tiny → sequential
+        assert_eq!(select_driver(true, true, 1, 10, 10_000, None), ChainDriver::Pipelined);
+        assert_eq!(select_driver(true, false, 1, 10, 10_000, None), ChainDriver::Sequential);
+        assert_eq!(select_driver(true, true, 1, 10, 512, None), ChainDriver::Sequential);
+        assert_eq!(select_driver(true, true, 1, 1, 10_000, None), ChainDriver::Sequential);
+    }
+
+    #[test]
+    fn pipelined_commits_in_order_and_runs_tail() {
+        let mut main_log: Vec<usize> = Vec::new();
+        let ((seen, sum), tail) = run_pipelined(
+            10,
+            &mut main_log,
+            (Vec::new(), 0u64),
+            |log, i| {
+                log.push(i);
+                Ok(i as u64 * 10)
+            },
+            |st, i, v| {
+                assert_eq!(v, i as u64 * 10);
+                st.0.push(i);
+                st.1 += v;
+                Ok(())
+            },
+            |st| Ok(st),
+            |log| Ok(log.len()),
+        )
+        .unwrap();
+        assert_eq!(seen, (0..10).collect::<Vec<_>>());
+        assert_eq!(sum, 450);
+        assert_eq!(tail, 10);
+        assert_eq!(main_log, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn pipelined_step_error_wins_over_front_error() {
+        // the companion fails on block 2; the front would fail on block 5
+        let err = run_pipelined(
+            10,
+            &mut (),
+            (),
+            |_, i| {
+                if i == 5 {
+                    Err(Error::Format("front 5".into()))
+                } else {
+                    Ok(i)
+                }
+            },
+            |_, i, _| {
+                if i == 2 {
+                    Err(Error::Format("step 2".into()))
+                } else {
+                    Ok(())
+                }
+            },
+            |_| Ok(()),
+            |_| Ok(()),
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("step 2"), "{err}");
+    }
+
+    #[test]
+    fn parallel_commit_surfaces_lowest_failing_block() {
+        for workers in [1usize, 4] {
+            let mut committed = Vec::new();
+            let err = run_parallel(
+                16,
+                workers,
+                |i| {
+                    if i % 5 == 4 {
+                        Err(Error::Format(format!("block {i}")))
+                    } else {
+                        Ok(i)
+                    }
+                },
+                |i, v| {
+                    assert_eq!(i, v);
+                    committed.push(i);
+                    Ok(())
+                },
+            )
+            .unwrap_err();
+            assert!(err.to_string().contains("block 4"), "workers={workers}: {err}");
+            assert_eq!(committed, vec![0, 1, 2, 3], "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn parallel_results_are_ordered_at_any_worker_count() {
+        for workers in [1usize, 2, 7] {
+            let mut out = Vec::new();
+            run_parallel(
+                100,
+                workers,
+                |i| Ok(i * i),
+                |i, v| {
+                    assert_eq!(v, i * i);
+                    out.push(i);
+                    Ok(())
+                },
+            )
+            .unwrap();
+            assert_eq!(out, (0..100).collect::<Vec<_>>());
+        }
+    }
+}

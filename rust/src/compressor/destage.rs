@@ -25,7 +25,9 @@
 //!
 //! Three drivers schedule the chain — all producing **bitwise-identical
 //! output**, because blocks are committed to the sink in work-list order no
-//! matter which driver ran:
+//! matter which driver ran. The drivers themselves live in
+//! [`super::chain`], written once and shared with both compress graphs;
+//! this module only instantiates them with the decode chain's stages:
 //!
 //! * `run_sequential`: one thread, decode hook points live — the
 //!   reference path and the only one fault-injection runs may take (decode
@@ -56,15 +58,16 @@
 //! stage's job; both repairs are surfaced separately in the report
 //! (`blocks_reexecuted` vs. `stripes_repaired`).
 
-use std::sync::mpsc;
 use std::time::Instant;
 
 use super::block::{BlockGrid, Region};
+use super::chain::{self, ChainDriver};
 use super::engine::{DecompressHooks, NoDecompressHooks};
 use super::format::Archive;
 use super::lorenzo::{self, GridView};
 use super::quantize::{Quantizer, UNPREDICTABLE};
 use super::regression;
+use super::stream::{SlabSink, StreamPlacer};
 use super::{Parallelism, Predictor};
 use crate::data::Dims;
 use crate::error::{Error, Result};
@@ -153,16 +156,9 @@ impl DecodeTimings {
 /// Which driver schedules the decode chain. [`decode_with_driver`] pins
 /// one explicitly (benches, golden tests); the library entry points pick
 /// automatically from the [`Parallelism`] knob and the hook contract.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum DecodeDriver {
-    /// One-thread reference driver (decode hook points live).
-    Sequential,
-    /// 1-worker software pipeline: verify + place of block *i* overlap the
-    /// decode of block *i+1*.
-    Pipelined,
-    /// Block-parallel fan-out with this many workers.
-    Parallel(usize),
-}
+/// Since the driver trio was unified behind [`super::chain`], this is the
+/// shared [`ChainDriver`] under its historical decode-side name.
+pub use super::chain::ChainDriver as DecodeDriver;
 
 /// Output of one run of the decode graph.
 #[derive(Debug)]
@@ -343,9 +339,10 @@ fn fold_block_outcome(report: &mut DecompressReport, bi: usize, reexecuted: bool
 // ---------------------------------------------------------------------------
 
 /// Where decoded blocks land: the full-array scatter of a whole-dataset
-/// decode, or the region copy of random access. This is the one
-/// parameterization that lets full, verified, verbose, unverified and
-/// region decompression share a single core.
+/// decode, the region copy of random access, or the bounded-memory slab
+/// assembler of the streaming chain shape. This is the one
+/// parameterization that lets full, verified, verbose, unverified, region
+/// and streaming decompression share a single core.
 enum DecodeSink<'a> {
     /// Scatter each block into the global array.
     Full(&'a mut [f32]),
@@ -357,16 +354,32 @@ enum DecodeSink<'a> {
         /// The requested region.
         region: Region,
     },
+    /// Assemble blocks into one slab buffer and flush each completed slab
+    /// to a [`SlabSink`] — the output is never materialized whole.
+    Stream(StreamPlacer<'a>),
 }
 
 impl DecodeSink<'_> {
     /// Place one decoded block.
-    fn place(&mut self, grid: &BlockGrid, bi: usize, block: &[f32]) {
+    fn place(&mut self, grid: &BlockGrid, bi: usize, block: &[f32]) -> Result<()> {
         match self {
-            DecodeSink::Full(out) => grid.scatter(block, bi, out),
-            DecodeSink::Region { out, region } => {
-                grid.copy_block_into_region(block, bi, *region, out)
+            DecodeSink::Full(out) => {
+                grid.scatter(block, bi, out);
+                Ok(())
             }
+            DecodeSink::Region { out, region } => {
+                grid.copy_block_into_region(block, bi, *region, out);
+                Ok(())
+            }
+            DecodeSink::Stream(placer) => placer.place(bi, block),
+        }
+    }
+
+    /// Flush any buffered tail (streaming sink only).
+    fn close(&mut self) -> Result<()> {
+        match self {
+            DecodeSink::Stream(placer) => placer.close(),
+            _ => Ok(()),
         }
     }
 }
@@ -374,18 +387,6 @@ impl DecodeSink<'_> {
 // ---------------------------------------------------------------------------
 // graph entry points
 // ---------------------------------------------------------------------------
-
-/// Pipelining needs at least two blocks to overlap anything.
-const MIN_OVERLAP_BLOCKS: usize = 2;
-
-/// Minimum output size for the pipelined driver: below this, the
-/// companion-thread spawn + channel traffic rivals the decode work itself,
-/// so tiny decodes stay on the plain sequential driver (bits are identical
-/// either way). Same rationale and value as the compress side.
-const MIN_OVERLAP_POINTS: usize = 4096;
-
-/// Bounded depth of the decode → verify channel on the pipelined path.
-const PIPE_DEPTH: usize = 4;
 
 /// Run the decode graph with automatic driver selection (the library
 /// entry point behind `engine`/`ft` decompression and region decode):
@@ -470,31 +471,25 @@ fn run<H: DecompressHooks>(
         None => DecodeSink::Full(&mut out),
         Some(r) => DecodeSink::Region { out: &mut out, region: r },
     };
-    // hooked runs stay on the sequential reference driver regardless of
-    // the knob — decode hooks are `&mut` state machines tied to the
-    // sequential block order (same contract as the compression side)
-    let driver = if !H::PARALLEL_SAFE {
-        DecodeDriver::Sequential
-    } else {
-        forced.unwrap_or_else(|| {
-            let workers = par.workers();
-            if workers > 1 && work.len() > 1 {
-                DecodeDriver::Parallel(workers)
-            } else if work.len() >= MIN_OVERLAP_BLOCKS && out_len >= MIN_OVERLAP_POINTS {
-                DecodeDriver::Pipelined
-            } else {
-                DecodeDriver::Sequential
-            }
-        })
-    };
-    match driver {
-        DecodeDriver::Sequential => {
+    // shared chain policy; hooked runs stay on the sequential reference
+    // driver regardless of the knob — decode hooks are `&mut` state
+    // machines tied to the sequential block order (same contract as the
+    // compression side)
+    match chain::select_driver(
+        H::PARALLEL_SAFE,
+        true,
+        par.workers(),
+        work.len(),
+        out_len,
+        forced,
+    ) {
+        ChainDriver::Sequential => {
             run_sequential(&ctx, &work, hooks, &mut sink, &mut report, &mut timings)?
         }
-        DecodeDriver::Pipelined => {
+        ChainDriver::Pipelined => {
             run_pipelined(&ctx, &work, &mut sink, &mut report, &mut timings)?
         }
-        DecodeDriver::Parallel(w) => {
+        ChainDriver::Parallel(w) => {
             run_parallel(&ctx, &work, w, &mut sink, &mut report, &mut timings)?
         }
     }
@@ -533,7 +528,7 @@ fn run_sequential<H: DecompressHooks>(
         timings.verify_ns += t.elapsed().as_nanos() as u64;
         fold_block_outcome(report, bi, reexecuted);
         let t = Instant::now();
-        sink.place(ctx.grid, bi, &block);
+        sink.place(ctx.grid, bi, &block)?;
         timings.place_ns += t.elapsed().as_nanos() as u64;
     }
     Ok(())
@@ -543,17 +538,19 @@ fn run_sequential<H: DecompressHooks>(
 // driver 2: 1-worker software pipeline
 // ---------------------------------------------------------------------------
 
-/// The 1-worker per-stage software pipeline: the main thread decodes
-/// blocks in work-list order and hands each to a companion thread that
+/// The 1-worker per-stage software pipeline, instantiated from
+/// [`chain::run_pipelined`]: the calling thread decodes blocks in
+/// work-list order (the chain's `front`) and the chain's companion thread
 /// runs the verify stage (checksum + rare re-execution) and the place
-/// stage — so the checksum of block *i* overlaps the decode of block
-/// *i+1*. The bounded channel preserves order, so the sink is filled in
-/// exactly the sequential commit order and the output bits are identical.
+/// stage (the chain's `step`) — so the checksum of block *i* overlaps the
+/// decode of block *i+1*. The chain's bounded channel preserves order, so
+/// the sink is filled in exactly the sequential commit order and the
+/// output bits are identical.
 ///
 /// Error precedence matches the sequential sweep: a companion (verify)
 /// error always concerns an earlier block than any main-thread decode
-/// error, so it wins; both surfaces are the same lowest-failing-block
-/// error the other drivers report.
+/// error, so the chain lets it win; both surfaces are the same
+/// lowest-failing-block error the other drivers report.
 fn run_pipelined(
     ctx: &DecodeCtx,
     work: &[usize],
@@ -562,30 +559,15 @@ fn run_pipelined(
     timings: &mut DecodeTimings,
 ) -> Result<()> {
     timings.pipelined = true;
-    let (verify_ns, place_ns) = std::thread::scope(|s| -> Result<(u64, u64)> {
-        let (tx, rx) = mpsc::sync_channel::<(usize, Vec<f32>)>(PIPE_DEPTH);
-
-        // companion thread: verify + place, in arrival (= work-list) order
-        let companion = s.spawn(move || -> Result<(u64, u64)> {
-            let (mut verify_ns, mut place_ns) = (0u64, 0u64);
-            while let Ok((bi, mut block)) = rx.recv() {
-                let t = Instant::now();
-                let reexecuted = verify_stage(ctx, bi, &mut block)?;
-                verify_ns += t.elapsed().as_nanos() as u64;
-                fold_block_outcome(report, bi, reexecuted);
-                let t = Instant::now();
-                sink.place(ctx.grid, bi, &block);
-                place_ns += t.elapsed().as_nanos() as u64;
-            }
-            Ok((verify_ns, place_ns))
-        });
-
-        // main thread: decode stage, in order
-        let mut main_err: Option<Error> = None;
-        for &bi in work {
+    let ((verify_ns, place_ns), ()) = chain::run_pipelined(
+        work.len(),
+        timings,
+        (0u64, 0u64),
+        |tm, i| {
+            let bi = work[i];
             let mut block = Vec::new();
             let t = Instant::now();
-            if let Err(e) = decode_block(
+            decode_block(
                 ctx.archive,
                 ctx.grid,
                 ctx.q,
@@ -593,28 +575,23 @@ fn run_pipelined(
                 &mut NoDecompressHooks,
                 true,
                 &mut block,
-            ) {
-                main_err = Some(e);
-                break;
-            }
-            timings.decode_ns += t.elapsed().as_nanos() as u64;
-            if tx.send((bi, block)).is_err() {
-                // companion exited early (it owns the error) — stop
-                break;
-            }
-        }
-        drop(tx);
-        let joined = match companion.join() {
-            Ok(r) => r,
-            Err(p) => std::panic::resume_unwind(p),
-        };
-        match (joined, main_err) {
-            // the companion's block precedes any still-undecoded block
-            (Err(e), _) => Err(e),
-            (Ok(_), Some(e)) => Err(e),
-            (Ok(ns), None) => Ok(ns),
-        }
-    })?;
+            )?;
+            tm.decode_ns += t.elapsed().as_nanos() as u64;
+            Ok((bi, block))
+        },
+        |ns, _, (bi, mut block)| {
+            let t = Instant::now();
+            let reexecuted = verify_stage(ctx, bi, &mut block)?;
+            ns.0 += t.elapsed().as_nanos() as u64;
+            fold_block_outcome(report, bi, reexecuted);
+            let t = Instant::now();
+            sink.place(ctx.grid, bi, &block)?;
+            ns.1 += t.elapsed().as_nanos() as u64;
+            Ok(())
+        },
+        Ok,
+        |_| Ok(()),
+    )?;
     timings.verify_ns = verify_ns;
     timings.place_ns = place_ns;
     Ok(())
@@ -624,12 +601,11 @@ fn run_pipelined(
 // driver 3: block-parallel fan-out
 // ---------------------------------------------------------------------------
 
-/// Block-parallel Algorithm 2: decode + verify (+ re-execution) are all
-/// block-local, so they fan out together over
-/// [`crate::util::threadpool::parallel_map`], which returns results in
-/// work-list order; blocks are then placed in that order, so the output
+/// Block-parallel Algorithm 2, instantiated from [`chain::run_parallel`]:
+/// decode + verify (+ re-execution) are all block-local, so they fan out
+/// together; blocks are then placed in work-list order, so the output
 /// bits are identical to the sequential driver at any worker count and
-/// the `?` in the ordered commit surfaces the lowest failing block first,
+/// the chain's ordered commit surfaces the lowest failing block first,
 /// exactly like the sequential sweep.
 ///
 /// Stage timings are per-block **busy** sums across all workers, so
@@ -642,8 +618,10 @@ fn run_parallel(
     report: &mut DecompressReport,
     timings: &mut DecodeTimings,
 ) -> Result<()> {
-    let results: Vec<Result<(Vec<f32>, bool, u64, u64)>> =
-        crate::util::threadpool::parallel_map(work.len(), workers, |i| {
+    chain::run_parallel(
+        work.len(),
+        workers,
+        |i| {
             let bi = work[i];
             let mut block = Vec::new();
             let t = Instant::now();
@@ -660,17 +638,118 @@ fn run_parallel(
             let t = Instant::now();
             let reexecuted = verify_stage(ctx, bi, &mut block)?;
             Ok((block, reexecuted, decode_ns, t.elapsed().as_nanos() as u64))
-        });
-    for (i, r) in results.into_iter().enumerate() {
-        let (block, reexecuted, decode_ns, verify_ns) = r?;
-        timings.decode_ns += decode_ns;
-        timings.verify_ns += verify_ns;
-        fold_block_outcome(report, work[i], reexecuted);
-        let t = Instant::now();
-        sink.place(ctx.grid, work[i], &block);
-        timings.place_ns += t.elapsed().as_nanos() as u64;
+        },
+        |i, (block, reexecuted, decode_ns, verify_ns)| {
+            timings.decode_ns += decode_ns;
+            timings.verify_ns += verify_ns;
+            fold_block_outcome(report, work[i], reexecuted);
+            let t = Instant::now();
+            sink.place(ctx.grid, work[i], &block)?;
+            timings.place_ns += t.elapsed().as_nanos() as u64;
+            Ok(())
+        },
+    )
+}
+
+// ---------------------------------------------------------------------------
+// chain shape 3: streaming bounded-memory decode
+// ---------------------------------------------------------------------------
+
+/// Output of a streaming decode run: the field went to the sink, so there
+/// is no materialized array here — only the archive facts and the report.
+#[derive(Debug)]
+pub struct StreamDecodeOutput {
+    /// Shape of the decoded dataset.
+    pub dims: Dims,
+    /// Absolute error bound recorded in the archive.
+    pub error_bound: f64,
+    /// What the FT machinery observed/repaired.
+    pub report: DecompressReport,
+    /// Per-stage busy times of the run.
+    pub timings: DecodeTimings,
+}
+
+/// Streaming full decode with automatic driver selection: every decoded
+/// block is committed straight into `sink` through a one-slab assembly
+/// buffer, so in-flight output memory is one slab plus the chain's queue
+/// depth — the array is never materialized. Same drivers, same ordered
+/// commit, bit-identical bytes to the in-memory path.
+pub(crate) fn decode_stream(
+    bytes: &[u8],
+    sink: &mut dyn SlabSink,
+    verify: bool,
+    par: Parallelism,
+) -> Result<StreamDecodeOutput> {
+    run_stream(bytes, sink, verify, None, par)
+}
+
+/// Streaming decode with an explicitly pinned driver (golden/property
+/// tests, benches).
+pub fn decode_stream_with_driver(
+    bytes: &[u8],
+    sink: &mut dyn SlabSink,
+    verify: bool,
+    driver: DecodeDriver,
+) -> Result<StreamDecodeOutput> {
+    run_stream(bytes, sink, verify, Some(driver), Parallelism::Sequential)
+}
+
+/// Shared core of [`decode_stream`] / [`decode_stream_with_driver`]:
+/// [`run`] with a [`DecodeSink::Stream`] and the full-archive work list.
+fn run_stream(
+    bytes: &[u8],
+    sink: &mut dyn SlabSink,
+    verify: bool,
+    forced: Option<DecodeDriver>,
+    par: Parallelism,
+) -> Result<StreamDecodeOutput> {
+    let wall = Instant::now();
+    let mut timings = DecodeTimings::default();
+
+    let t = Instant::now();
+    let (archive, grid, q) = open(bytes)?;
+    timings.recover_ns = t.elapsed().as_nanos() as u64;
+    if verify && archive.sum_dc.is_none() {
+        return Err(Error::InvalidArgument(
+            "archive has no FT checksums; compress with ft::compress".into(),
+        ));
     }
-    Ok(())
+    let dims = archive.header.dims;
+    let work: Vec<usize> = (0..grid.n_blocks()).collect();
+    let mut report = DecompressReport::default();
+    if let Some(rec) = &archive.recovered {
+        report.stripes_repaired = rec.stripes_repaired.clone();
+    }
+
+    let ctx = DecodeCtx { archive: &archive, grid: &grid, q: &q, verify };
+    let mut dsink = DecodeSink::Stream(StreamPlacer::new(sink, dims, grid.block_size())?);
+    match chain::select_driver(true, true, par.workers(), work.len(), dims.len(), forced) {
+        ChainDriver::Sequential => run_sequential(
+            &ctx,
+            &work,
+            &mut NoDecompressHooks,
+            &mut dsink,
+            &mut report,
+            &mut timings,
+        )?,
+        ChainDriver::Pipelined => {
+            run_pipelined(&ctx, &work, &mut dsink, &mut report, &mut timings)?
+        }
+        ChainDriver::Parallel(w) => {
+            run_parallel(&ctx, &work, w, &mut dsink, &mut report, &mut timings)?
+        }
+    }
+    // flush the final slab + finish the sink
+    let t = Instant::now();
+    dsink.close()?;
+    timings.place_ns += t.elapsed().as_nanos() as u64;
+    timings.wall_ns = wall.elapsed().as_nanos() as u64;
+    Ok(StreamDecodeOutput {
+        dims,
+        error_bound: archive.header.error_bound,
+        report,
+        timings,
+    })
 }
 
 #[cfg(test)]
@@ -785,6 +864,31 @@ mod tests {
             [DecodeDriver::Sequential, DecodeDriver::Pipelined, DecodeDriver::Parallel(2)]
         {
             assert!(decode_with_driver(&bytes, true, None, driver).is_err());
+            let mut sink = crate::compressor::stream::VecSink::new(f.data.len());
+            assert!(decode_stream_with_driver(&bytes, &mut sink, true, driver).is_err());
+        }
+    }
+
+    #[test]
+    fn streaming_decode_bit_identical_to_in_memory_on_every_driver() {
+        let f = synthetic::hurricane_field("t", Dims::d3(21, 13, 11), 23);
+        for (verify, bytes) in [
+            (false, engine::compress(&f.data, f.dims, &cfg(1e-3)).unwrap()),
+            (true, ft::compress(&f.data, f.dims, &cfg(1e-3)).unwrap()),
+        ] {
+            let mem =
+                decode_with_driver(&bytes, verify, None, DecodeDriver::Sequential).unwrap();
+            for driver in [
+                DecodeDriver::Sequential,
+                DecodeDriver::Pipelined,
+                DecodeDriver::Parallel(3),
+            ] {
+                let mut sink = crate::compressor::stream::VecSink::new(f.data.len());
+                let out = decode_stream_with_driver(&bytes, &mut sink, verify, driver).unwrap();
+                assert_eq!(bits(&sink.into_data()), bits(&mem.data), "{driver:?}");
+                assert_eq!(out.dims, f.dims);
+                assert!(out.report.is_clean());
+            }
         }
     }
 }

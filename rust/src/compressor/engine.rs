@@ -30,7 +30,9 @@
 
 use super::block::Region;
 use super::destage;
+use super::format;
 use super::stage::{self, StageTimings};
+use super::stream::{SlabSink, SlabSource};
 use super::CompressionConfig;
 use crate::data::Dims;
 use crate::error::Result;
@@ -260,6 +262,18 @@ impl stage::BlockCodec for RszCodec {
         compress(data, dims, cfg)
     }
 
+    fn compress_stream(
+        &self,
+        src: &mut dyn SlabSource,
+        cfg: &CompressionConfig,
+    ) -> Result<Vec<u8>> {
+        compress_stream(src, cfg)
+    }
+
+    fn supports_streaming(&self) -> bool {
+        true
+    }
+
     fn decompress(&self, bytes: &[u8], par: super::Parallelism) -> Result<Decompressed> {
         decompress_with(bytes, par)
     }
@@ -276,6 +290,39 @@ impl stage::BlockCodec for RszCodec {
     fn supports_region(&self) -> bool {
         true
     }
+}
+
+/// Streaming **rsz** compress: the bounded-memory chain shape over a
+/// [`SlabSource`] — one slab (z block-row) of uncompressed input in flight
+/// at a time. Archives are bit-identical to [`compress`] on the same
+/// field.
+pub fn compress_stream(src: &mut dyn SlabSource, cfg: &CompressionConfig) -> Result<Vec<u8>> {
+    Ok(stage::compress_stream_graph(src, cfg, CoreParams::default())?.archive)
+}
+
+/// Streaming decompress of any per-block archive (rsz/ftrsz/xsz/ftxsz):
+/// placed blocks flow straight into `sink` one slab at a time, so the
+/// decoded field never has to fit in memory. Classic archives have a
+/// single dependent stream and no per-block layout, so they are
+/// materialized once and then fed through the sink — correct, but not
+/// bounded-memory.
+pub fn decompress_stream(
+    bytes: &[u8],
+    sink: &mut dyn SlabSink,
+    par: super::Parallelism,
+) -> Result<destage::StreamDecodeOutput> {
+    if format::peek_header(bytes)?.is_classic() {
+        let (dec, report) = super::classic::decompress_reported(bytes)?;
+        sink.put(0, &dec.data)?;
+        sink.finish()?;
+        return Ok(destage::StreamDecodeOutput {
+            dims: dec.dims,
+            error_bound: dec.error_bound,
+            report,
+            timings: destage::DecodeTimings::default(),
+        });
+    }
+    destage::decode_stream(bytes, sink, false, par)
 }
 
 /// Compress with hooks/stats (injection harness entry point).

@@ -79,6 +79,13 @@ pub const FLAG_XSZ: u32 = 1 << 4;
 /// driving huge allocations).
 const MAX_SECTION: usize = 1 << 33;
 
+/// Sanity cap on the decoded point count a header may claim (1 T points =
+/// 4 TiB of f32 output). Checked in [`read_core_fields`], before any
+/// decode path trusts `dims.len()` to size an allocation: a corrupt-but-
+/// voted header must fail as a clean [`Error::Format`], not as an absurd
+/// output allocation (or a `dims.len()` multiply overflow).
+const MAX_DECODED_POINTS: u128 = 1 << 40;
+
 /// Serialized length of the core header fields (flags, dims, block size,
 /// quant radius, error bound, n_blocks) — shared by v1 and v2.
 const CORE_HEADER_LEN: usize = 4 + 1 + 24 + 4 + 4 + 8 + 8;
@@ -457,6 +464,13 @@ fn read_core_fields(c: &mut Cursor) -> Result<Header> {
     let rank = c.bytes(1)?[0];
     let (d, r, cc) = (c.u64()?, c.u64()?, c.u64()?);
     let dims = Dims::decode(rank, d, r, cc)?;
+    let (dz, dy, dx) = dims.as_3d();
+    let n_points = dz as u128 * dy as u128 * dx as u128;
+    if n_points > MAX_DECODED_POINTS {
+        return Err(Error::Format(format!(
+            "header claims {n_points} points, over the {MAX_DECODED_POINTS}-point decode cap"
+        )));
+    }
     let block_size = c.u32()?;
     let quant_radius = c.u32()?;
     let error_bound = c.f64()?;
@@ -595,6 +609,21 @@ pub fn parse(data: &[u8]) -> Result<Archive> {
     match version {
         VERSION => parse_v1(c),
         VERSION_V2 => parse_v2(data),
+        other => Err(Error::Format(format!("unsupported version {other}"))),
+    }
+}
+
+/// Read just the (voted, sanity-checked) header of an archive without
+/// touching the section bodies — cheap engine/shape dispatch for callers
+/// that must pick a decode path before committing to a full parse.
+pub fn peek_header(data: &[u8]) -> Result<Header> {
+    let mut c = Cursor::new(data);
+    if c.bytes(4)? != MAGIC {
+        return Err(Error::Format("bad magic".into()));
+    }
+    match c.u32()? {
+        VERSION => read_core_fields(&mut c),
+        VERSION_V2 => Ok(read_v2_prelude(data)?.header),
         other => Err(Error::Format(format!("unsupported version {other}"))),
     }
 }
@@ -918,6 +947,22 @@ mod tests {
         // truncation at every prefix must error, never panic
         for cut in 0..good.len() {
             assert!(parse(&good[..cut]).is_err(), "prefix {cut} parsed");
+        }
+    }
+
+    #[test]
+    fn absurd_header_dims_fail_cleanly() {
+        let table = tiny_table();
+        let unpred = [7.5f32, -2.0];
+        // 2^63 points: a voted-but-absurd header must be a clean Format
+        // error before any decode path sizes an allocation from it
+        let mut w = sample_writer(&table, &unpred);
+        w.header.dims = Dims::d3(1 << 21, 1 << 21, 1 << 21);
+        let data = w.write().unwrap();
+        match parse(&data) {
+            Err(Error::Format(msg)) => assert!(msg.contains("cap"), "{msg}"),
+            Err(other) => panic!("expected Format error, got {other:?}"),
+            Ok(_) => panic!("absurd dims parsed"),
         }
     }
 

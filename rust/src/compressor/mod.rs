@@ -22,9 +22,13 @@
 //! (sequential, 1-worker software-pipelined, block-parallel). The decode
 //! direction mirrors it in [`destage`]: one recover → decode →
 //! verify/re-execute → place chain behind full, verified and region
-//! decompression, with the same three drivers.
+//! decompression, with the same three drivers. The driver trio itself is
+//! written once, in [`chain`], and instantiated by all three chains; the
+//! bounded-memory streaming chain shape ([`stream`]) rides the same
+//! drivers with a slab cursor for a source and a slab sink for output.
 
 pub mod block;
+pub(crate) mod chain;
 pub mod classic;
 pub mod destage;
 pub mod dualquant;
@@ -38,6 +42,7 @@ pub mod quantize;
 pub mod regression;
 pub mod sampling;
 pub mod stage;
+pub mod stream;
 pub mod xsz;
 
 use crate::error::{Error, Result};

@@ -41,10 +41,10 @@
 //! show the overlap (`busy / wall > 1` on the pipelined path) and gate
 //! regressions.
 
-use std::sync::mpsc;
 use std::time::Instant;
 
 use super::block::{BlockGrid, Region};
+use super::chain::{self, ChainDriver};
 use super::engine::{
     Arena, CompressStats, CoreOutput, CoreParams, Decompressed, Hooks, NoHooks,
 };
@@ -54,6 +54,7 @@ use super::lorenzo::{self, GridView};
 use super::quantize::{Quantizer, UNPREDICTABLE};
 use super::regression;
 use super::sampling::{self, Selection};
+use super::stream::{self, SlabSource};
 use super::{CompressionConfig, Parallelism, Predictor, PredictorPolicy};
 use crate::data::Dims;
 use crate::error::{Error, Result};
@@ -176,6 +177,30 @@ pub trait BlockCodec: Sync {
     /// recurrence is a loop-carried dependency).
     fn compress(&self, data: &[f32], dims: Dims, cfg: &CompressionConfig) -> Result<Vec<u8>>;
 
+    /// Streaming compress: consume a [`SlabSource`] one slab (z block-row)
+    /// at a time so the uncompressed input never has to fit in memory.
+    /// Engines with an independent-block chain override this with the real
+    /// bounded-memory shape ([`BlockCodec::supports_streaming`] true); the
+    /// default materializes the whole field and runs the in-memory path —
+    /// correct for `classic`, whose cross-block recurrence needs the full
+    /// array anyway. Archives are bit-identical either way.
+    fn compress_stream(
+        &self,
+        src: &mut dyn SlabSource,
+        cfg: &CompressionConfig,
+    ) -> Result<Vec<u8>> {
+        let dims = src.dims();
+        let mut data = vec![0.0f32; dims.len()];
+        src.read_at(0, &mut data)?;
+        self.compress(&data, dims, cfg)
+    }
+
+    /// True when [`BlockCodec::compress_stream`] runs the bounded-memory
+    /// streaming chain rather than the materializing fallback.
+    fn supports_streaming(&self) -> bool {
+        false
+    }
+
     /// The codec's natural decode path: plain decode for `sz`/`rsz`,
     /// verified decode (Algorithm 2) for `ftrsz`.
     fn decompress(&self, bytes: &[u8], par: Parallelism) -> Result<Decompressed>;
@@ -248,25 +273,12 @@ pub trait BlockCodec: Sync {
 // graph entry point
 // ---------------------------------------------------------------------------
 
-/// Pipelining needs at least two blocks to overlap anything.
-const MIN_OVERLAP_BLOCKS: usize = 2;
-
-/// Minimum dataset size for the pipelined driver: below this, the
-/// companion-thread spawn + channel traffic (~tens of µs) rivals the
-/// compression work itself, so tiny fields stay on the plain sequential
-/// driver (bytes are identical either way).
-const MIN_OVERLAP_POINTS: usize = 4096;
-
-/// Bounded depth of the quantize → protect channel on the pipelined path:
-/// deep enough to ride out stage-time jitter, shallow enough that the
-/// in-flight codes/reconstruction buffers stay cache-sized.
-const PIPE_DEPTH: usize = 4;
-
 /// Run the stage graph for an independent-block codec (Algorithm 1,
-/// parameterized). Driver choice:
+/// parameterized). Driver choice is the shared chain policy
+/// ([`chain::select_driver`]):
 ///
 /// * hooks live (injection) → [`run_sequential`], always;
-/// * `cfg.parallelism` > 1 worker → [`run_parallel`];
+/// * `cfg.parallelism` > 1 worker and > 1 block → [`run_parallel`];
 /// * 1 worker, `cfg.stage_overlap`, ≥ 2 blocks and a dataset big enough
 ///   to amortize the companion thread → [`run_pipelined`];
 /// * otherwise → [`run_sequential`] with no-op hooks.
@@ -288,18 +300,19 @@ pub(crate) fn compress_graph<H: Hooks>(
             dims
         )));
     }
-    let workers = cfg.parallelism.workers();
-    if H::PARALLEL_SAFE && workers > 1 {
-        return run_parallel(data, dims, cfg, params, workers);
+    let n_blocks = BlockGrid::new(dims, cfg.block_size)?.n_blocks();
+    match chain::select_driver(
+        H::PARALLEL_SAFE,
+        cfg.stage_overlap,
+        cfg.parallelism.workers(),
+        n_blocks,
+        data.len(),
+        None,
+    ) {
+        ChainDriver::Sequential => run_sequential(data, dims, cfg, params, hooks),
+        ChainDriver::Pipelined => run_pipelined(data, dims, cfg, params),
+        ChainDriver::Parallel(w) => run_parallel(data, dims, cfg, params, w),
     }
-    if H::PARALLEL_SAFE
-        && cfg.stage_overlap
-        && data.len() >= MIN_OVERLAP_POINTS
-        && BlockGrid::new(dims, cfg.block_size)?.n_blocks() >= MIN_OVERLAP_BLOCKS
-    {
-        return run_pipelined(data, dims, cfg, params);
-    }
-    run_sequential(data, dims, cfg, params, hooks)
 }
 
 // ---------------------------------------------------------------------------
@@ -729,12 +742,19 @@ struct QuantizedBlock {
 /// private scratch copy (the shared input stays immutable), then
 /// predict + dual-quant. Every driver runs this exact operation order —
 /// byte identity depends on it.
+///
+/// `bi` indexes `grid` (the extraction geometry); `block_id` is the
+/// block's archive-global index (events, hook point ids). The in-memory
+/// drivers pass the same value for both; the streaming chain shape runs
+/// this against a slab-local grid, where they differ.
+#[allow(clippy::too_many_arguments)]
 fn quantize_stage(
     grid: &BlockGrid,
     q: &Quantizer,
     cfg: &CompressionConfig,
     params: CoreParams,
     bi: usize,
+    block_id: usize,
     scratch: &mut Vec<f32>,
     data: &[f32],
 ) -> QuantizedBlock {
@@ -752,12 +772,12 @@ fn quantize_stage(
         match checksum::verify_correct_f32(scratch, sums) {
             Correction::Clean => {}
             Correction::Corrected { index } => {
-                events.push(SdcEvent { kind: SdcKind::InputCorrected, block: bi, index });
+                events.push(SdcEvent { kind: SdcKind::InputCorrected, block: block_id, index });
             }
             Correction::Failed => {
                 events.push(SdcEvent {
                     kind: SdcKind::InputUncorrectable,
-                    block: bi,
+                    block: block_id,
                     index: 0,
                 });
             }
@@ -772,7 +792,7 @@ fn quantize_stage(
     let mut unpred = Vec::new();
     let mut dcmp = Vec::new();
     compress_block(
-        bi,
+        block_id,
         scratch,
         shape,
         &sel,
@@ -845,15 +865,149 @@ fn fold_block_report(
 }
 
 // ---------------------------------------------------------------------------
-// driver 2: 1-worker software pipeline
+// the rsz chain behind the shared drivers (companion state + barrier tail)
 // ---------------------------------------------------------------------------
 
-/// The 1-worker per-stage software pipeline (ROADMAP follow-up): the
-/// companion thread runs the protect + histogram stage of block *i* while
-/// the main thread prepares and quantizes block *i+1*; after the global
-/// Huffman table barrier the companion encodes while the main thread
-/// serializes the unpredictable section. Byte-identical to the sequential
-/// driver: the channel preserves block order and every serialized array is
+/// Companion-side state of the rsz chain on the pipelined schedule (and
+/// the serial accumulator of the streaming sequential schedule): protect +
+/// histogram per arriving block, then the table barrier + encode in
+/// [`ProtectState::finish`].
+struct ProtectState {
+    params: CoreParams,
+    freqs: Vec<u64>,
+    arts: Vec<(QuantizedBlock, u64)>,
+    protect_ns: u64,
+}
+
+impl ProtectState {
+    fn new(params: CoreParams, n_symbols: usize, n_blocks: usize) -> Self {
+        ProtectState {
+            params,
+            freqs: vec![0u64; n_symbols],
+            arts: Vec::with_capacity(n_blocks),
+            protect_ns: 0,
+        }
+    }
+
+    /// Protect + histogram one block, in arrival (= block index) order.
+    fn step(&mut self, mut qb: QuantizedBlock) -> Result<()> {
+        let t = Instant::now();
+        // blocks arrive in order: this block's index is arts.len()
+        let dc_sum = protect_stage(
+            self.params,
+            self.arts.len(),
+            &mut qb.codes,
+            qb.dcmp.as_deref(),
+            &mut qb.events,
+        );
+        count_freqs(&mut self.freqs, &qb.codes)?;
+        self.protect_ns += t.elapsed().as_nanos() as u64;
+        qb.dcmp = None; // the reconstruction is spent; free it early
+        self.arts.push((qb, dc_sum));
+        Ok(())
+    }
+
+    /// The global-Huffman-table barrier, then the serial encode stage
+    /// (on the pipelined schedule this overlaps the calling thread's
+    /// unpredictable-section serialization).
+    fn finish(self) -> Result<RszChainOut> {
+        let t = Instant::now();
+        let table = HuffmanTable::from_frequencies(&self.freqs)?;
+        let mut blocks = Vec::with_capacity(self.arts.len());
+        for (qb, _) in &self.arts {
+            blocks.push(encode_block(
+                &table,
+                qb.selection.predictor,
+                qb.selection.coeffs,
+                qb.unpred.len() as u32,
+                &qb.codes,
+            )?);
+        }
+        Ok(RszChainOut {
+            arts: self.arts,
+            table,
+            blocks,
+            ft: self.params.ft,
+            protect_ns: self.protect_ns,
+            encode_ns: t.elapsed().as_nanos() as u64,
+        })
+    }
+}
+
+/// Everything the rsz chain produces ahead of the serialize stage.
+struct RszChainOut {
+    arts: Vec<(QuantizedBlock, u64)>,
+    table: HuffmanTable,
+    blocks: Vec<BlockPayload>,
+    /// Whether the chain ran with the ft switch (controls the `sum_dc`
+    /// section of the archive).
+    ft: bool,
+    protect_ns: u64,
+    encode_ns: u64,
+}
+
+/// Ordered report fold + serialize tail shared by every hook-free
+/// schedule (pipelined, parallel, streaming): fold the per-block reports
+/// in block order, gather `sum_dc`, write the archive.
+#[allow(clippy::too_many_arguments)]
+fn assemble_rsz_archive(
+    cfg: &CompressionConfig,
+    dims: Dims,
+    bound: f64,
+    n_points: usize,
+    out: RszChainOut,
+    unpred_all: &[f32],
+    unpred_body: Option<Vec<u8>>,
+    stages: &mut StageTimings,
+) -> Result<(Vec<u8>, CompressStats, Vec<SdcEvent>)> {
+    let n_blocks = out.arts.len();
+    let mut stats = CompressStats {
+        n_points,
+        n_blocks,
+        ..Default::default()
+    };
+    let mut events = Vec::new();
+    let mut dc_sums = Vec::with_capacity(n_blocks);
+    for (qb, dc_sum) in &out.arts {
+        fold_block_report(qb, &mut stats, &mut events);
+        dc_sums.push(*dc_sum);
+    }
+    let t = Instant::now();
+    let archive = write_archive(
+        cfg,
+        dims,
+        bound,
+        n_blocks,
+        &out.table,
+        out.blocks,
+        unpred_all,
+        if out.ft { Some(&dc_sums) } else { None },
+        unpred_body,
+    )?;
+    stages.serialize_ns += t.elapsed().as_nanos() as u64;
+    stats.compressed_bytes = archive.len();
+    Ok((archive, stats, events))
+}
+
+// ---------------------------------------------------------------------------
+// driver 2: 1-worker software pipeline (chain-driven)
+// ---------------------------------------------------------------------------
+
+/// Calling-thread state of the pipelined/streaming schedules, threaded
+/// through the chain driver's `front`/`tail` closures.
+struct PipeMain {
+    stages: StageTimings,
+    unpred_all: Vec<f32>,
+    scratch: Vec<f32>,
+}
+
+/// The 1-worker per-stage software pipeline (ROADMAP follow-up), now an
+/// instantiation of [`chain::run_pipelined`]: the companion thread runs
+/// the protect + histogram stage of block *i* while the calling thread
+/// prepares and quantizes block *i+1*; after the global Huffman table
+/// barrier the companion encodes while the calling thread serializes the
+/// unpredictable section. Byte-identical to the sequential driver: the
+/// chain's channel preserves block order and every serialized array is
 /// committed in that order.
 fn run_pipelined(
     data: &[f32],
@@ -866,131 +1020,100 @@ fn run_pipelined(
     let q = Quantizer::new(bound, cfg.quant_radius);
     let grid = BlockGrid::new(dims, cfg.block_size)?;
     let n_blocks = grid.n_blocks();
-    let n_symbols = q.n_symbols();
 
-    let mut stages = StageTimings { pipelined: true, ..Default::default() };
-    let mut unpred_all: Vec<f32> = Vec::new();
-
-    type Arts = Vec<(QuantizedBlock, u64)>;
-    type ProtectOut = Result<(Arts, HuffmanTable, Vec<BlockPayload>, u64, u64)>;
-    let (arts, table, blocks, unpred_body) = std::thread::scope(
-        |s| -> Result<(Arts, HuffmanTable, Vec<BlockPayload>, Vec<u8>)> {
-            let (tx, rx) = mpsc::sync_channel::<QuantizedBlock>(PIPE_DEPTH);
-
-            // companion thread: protect + histogram, table barrier, encode
-            let companion = s.spawn(move || -> ProtectOut {
-                let mut protect_ns = 0u64;
-                let mut freqs = vec![0u64; n_symbols];
-                let mut arts: Arts = Vec::with_capacity(n_blocks);
-                while let Ok(mut qb) = rx.recv() {
-                    let t = Instant::now();
-                    // blocks arrive in order: this block's index is arts.len()
-                    let dc_sum = protect_stage(
-                        params,
-                        arts.len(),
-                        &mut qb.codes,
-                        qb.dcmp.as_deref(),
-                        &mut qb.events,
-                    );
-                    count_freqs(&mut freqs, &qb.codes)?;
-                    protect_ns += t.elapsed().as_nanos() as u64;
-                    qb.dcmp = None; // the reconstruction is spent; free it early
-                    arts.push((qb, dc_sum));
-                }
-                // table barrier, then the encode stage (overlaps the main
-                // thread's unpredictable-section serialization)
-                let t = Instant::now();
-                let table = HuffmanTable::from_frequencies(&freqs)?;
-                let mut blocks = Vec::with_capacity(arts.len());
-                for (qb, _) in &arts {
-                    blocks.push(encode_block(
-                        &table,
-                        qb.selection.predictor,
-                        qb.selection.coeffs,
-                        qb.unpred.len() as u32,
-                        &qb.codes,
-                    )?);
-                }
-                let encode_ns = t.elapsed().as_nanos() as u64;
-                Ok((arts, table, blocks, protect_ns, encode_ns))
-            });
-
-            // main thread: prepare + quantize per block, in order
-            let mut scratch = Vec::new();
-            for bi in 0..n_blocks {
-                let qb = quantize_stage(&grid, &q, cfg, params, bi, &mut scratch, data);
-                stages.prepare_ns += qb.prepare_ns;
-                stages.quantize_ns += qb.quantize_ns;
-                // the unpredictables are also needed on this side, for the
-                // serialize stage below (tiny for compressible data)
-                unpred_all.extend_from_slice(&qb.unpred);
-                if tx.send(qb).is_err() {
-                    // companion exited early (it owns the error) — stop
-                    break;
-                }
-            }
-            drop(tx);
-
+    let mut main = PipeMain {
+        stages: StageTimings { pipelined: true, ..Default::default() },
+        unpred_all: Vec::new(),
+        scratch: Vec::new(),
+    };
+    let (out, unpred_body) = chain::run_pipelined(
+        n_blocks,
+        &mut main,
+        ProtectState::new(params, q.n_symbols(), n_blocks),
+        |m, bi| {
+            let qb = quantize_stage(&grid, &q, cfg, params, bi, bi, &mut m.scratch, data);
+            m.stages.prepare_ns += qb.prepare_ns;
+            m.stages.quantize_ns += qb.quantize_ns;
+            // the unpredictables are also needed on this side, for the
+            // serialize stage below (tiny for compressible data)
+            m.unpred_all.extend_from_slice(&qb.unpred);
+            Ok(qb)
+        },
+        |st, _, qb| st.step(qb),
+        ProtectState::finish,
+        |m| {
             // serialize stage, part 1: pre-compress the unpredictable
             // section while the companion is still encoding
             let t = Instant::now();
-            let unpred_body = format::compress_unpred_section(&unpred_all, cfg.zstd_level)?;
-            stages.serialize_ns += t.elapsed().as_nanos() as u64;
-
-            let (arts, table, blocks, protect_ns, encode_ns) = match companion.join() {
-                Ok(r) => r?,
-                Err(p) => std::panic::resume_unwind(p),
-            };
-            stages.protect_ns = protect_ns;
-            stages.encode_ns = encode_ns;
-            Ok((arts, table, blocks, unpred_body))
+            let body = format::compress_unpred_section(&m.unpred_all, cfg.zstd_level)?;
+            m.stages.serialize_ns += t.elapsed().as_nanos() as u64;
+            Ok(body)
         },
     )?;
 
-    // ordered commit of the run report (identical totals to every driver)
-    let mut stats = CompressStats {
-        n_points: data.len(),
-        n_blocks,
-        ..Default::default()
-    };
-    let mut events = Vec::new();
-    let mut dc_sums = Vec::with_capacity(n_blocks);
-    for (qb, dc_sum) in &arts {
-        fold_block_report(qb, &mut stats, &mut events);
-        dc_sums.push(*dc_sum);
-    }
-
-    // serialize stage, part 2
-    let t = Instant::now();
-    let archive = write_archive(
+    let PipeMain { mut stages, unpred_all, .. } = main;
+    stages.protect_ns = out.protect_ns;
+    stages.encode_ns = out.encode_ns;
+    let (archive, stats, events) = assemble_rsz_archive(
         cfg,
         dims,
         bound,
-        n_blocks,
-        &table,
-        blocks,
+        data.len(),
+        out,
         &unpred_all,
-        if params.ft { Some(&dc_sums) } else { None },
         Some(unpred_body),
+        &mut stages,
     )?;
-    stages.serialize_ns += t.elapsed().as_nanos() as u64;
     stages.wall_ns = wall.elapsed().as_nanos() as u64;
-    stats.compressed_bytes = archive.len();
     Ok(CoreOutput { archive, stats, events, stages })
 }
 
 // ---------------------------------------------------------------------------
-// driver 3: block-parallel fan-out
+// driver 3: block-parallel fan-out (chain-driven)
 // ---------------------------------------------------------------------------
 
-/// Block-parallel Algorithm 1: the per-block stage chain (prepare →
-/// quantize → protect) fans out over
-/// [`crate::util::threadpool::parallel_map`], which returns results in
-/// block index order; after the table barrier the encode stage fans out
-/// again. Every array the archive serializes (codes, unpredictables,
-/// coefficients, per-block payloads, `sum_dc`) is concatenated in that
-/// order, so the bytes are identical to the sequential driver at any
-/// worker count.
+/// Post-barrier tail of the parallel schedules: build the table and fan
+/// the encode stage out over [`chain::run_parallel`], committing payloads
+/// in block order.
+fn encode_parallel(
+    arts: &[(QuantizedBlock, u64)],
+    freqs: &[u64],
+    workers: usize,
+    stages: &mut StageTimings,
+) -> Result<(HuffmanTable, Vec<BlockPayload>)> {
+    let table = HuffmanTable::from_frequencies(freqs)?;
+    let mut blocks = Vec::with_capacity(arts.len());
+    chain::run_parallel(
+        arts.len(),
+        workers,
+        |i| {
+            let (qb, _) = &arts[i];
+            let t = Instant::now();
+            let payload = encode_block(
+                &table,
+                qb.selection.predictor,
+                qb.selection.coeffs,
+                qb.unpred.len() as u32,
+                &qb.codes,
+            )?;
+            Ok((payload, t.elapsed().as_nanos() as u64))
+        },
+        |_, (payload, ns)| {
+            stages.encode_ns += ns;
+            blocks.push(payload);
+            Ok(())
+        },
+    )?;
+    Ok((table, blocks))
+}
+
+/// Block-parallel Algorithm 1, now an instantiation of
+/// [`chain::run_parallel`]: the per-block stage chain (prepare → quantize
+/// → protect) fans out, committing in block index order; after the table
+/// barrier the encode stage fans out again. Every array the archive
+/// serializes (codes, unpredictables, coefficients, per-block payloads,
+/// `sum_dc`) is concatenated in that order, so the bytes are identical to
+/// the sequential driver at any worker count.
 ///
 /// Stage timings are per-block **busy** sums across all workers, so
 /// `busy / wall` on this driver reads as the achieved parallel speedup.
@@ -1009,87 +1132,239 @@ fn run_parallel(
     let n_blocks = grid.n_blocks();
 
     // ---- prepare + quantize + protect fan-out: blocks are independent ----
-    let arts: Vec<(QuantizedBlock, u64, u64)> =
-        crate::util::threadpool::parallel_map(n_blocks, workers, |bi| {
+    let mut arts: Vec<(QuantizedBlock, u64)> = Vec::with_capacity(n_blocks);
+    chain::run_parallel(
+        n_blocks,
+        workers,
+        |bi| {
             let mut scratch = Vec::new();
-            let mut qb = quantize_stage(&grid, &q, cfg, params, bi, &mut scratch, data);
+            let mut qb = quantize_stage(&grid, &q, cfg, params, bi, bi, &mut scratch, data);
             let t = Instant::now();
             let dc_sum =
                 protect_stage(params, bi, &mut qb.codes, qb.dcmp.as_deref(), &mut qb.events);
             let protect_ns = t.elapsed().as_nanos() as u64;
             qb.dcmp = None;
-            (qb, dc_sum, protect_ns)
-        });
-
-    // ---- ordered commit: identical layout to the sequential driver ----
-    let mut stats = CompressStats {
-        n_points: data.len(),
-        n_blocks,
-        ..Default::default()
-    };
-    let mut events = Vec::new();
-    for (qb, _, protect_ns) in &arts {
-        fold_block_report(qb, &mut stats, &mut events);
-        stages.prepare_ns += qb.prepare_ns;
-        stages.quantize_ns += qb.quantize_ns;
-        stages.protect_ns += protect_ns;
-    }
+            Ok((qb, dc_sum, protect_ns))
+        },
+        |_, (qb, dc_sum, protect_ns)| {
+            stages.prepare_ns += qb.prepare_ns;
+            stages.quantize_ns += qb.quantize_ns;
+            stages.protect_ns += protect_ns;
+            arts.push((qb, dc_sum));
+            Ok(())
+        },
+    )?;
 
     // l.36: global frequency table over all codes, in block order (the
     // serial tail of the protect stage)
     let t = Instant::now();
     let mut freqs = vec![0u64; q.n_symbols()];
-    for (qb, _, _) in &arts {
+    for (qb, _) in &arts {
         count_freqs(&mut freqs, &qb.codes)?;
     }
     stages.protect_ns += t.elapsed().as_nanos() as u64;
 
     // l.37-38: per-block Huffman encoding against the shared table is
     // independent again — second fan-out, committed in block order
-    let table = HuffmanTable::from_frequencies(&freqs)?;
-    let encoded: Vec<Result<(BlockPayload, u64)>> =
-        crate::util::threadpool::parallel_map(n_blocks, workers, |bi| {
-            let (qb, _, _) = &arts[bi];
-            let t = Instant::now();
-            let payload = encode_block(
-                &table,
-                qb.selection.predictor,
-                qb.selection.coeffs,
-                qb.unpred.len() as u32,
-                &qb.codes,
-            )?;
-            Ok((payload, t.elapsed().as_nanos() as u64))
-        });
-    let mut blocks = Vec::with_capacity(n_blocks);
-    for r in encoded {
-        let (payload, ns) = r?;
-        stages.encode_ns += ns;
-        blocks.push(payload);
-    }
+    let (table, blocks) = encode_parallel(&arts, &freqs, workers, &mut stages)?;
 
-    let mut unpred = Vec::with_capacity(stats.n_unpred);
-    let mut dc_sums = Vec::with_capacity(n_blocks);
-    for (qb, dc_sum, _) in &arts {
+    let mut unpred: Vec<f32> = Vec::new();
+    for (qb, _) in &arts {
         unpred.extend_from_slice(&qb.unpred);
-        dc_sums.push(*dc_sum);
     }
-
-    let t = Instant::now();
-    let archive = write_archive(
-        cfg,
-        dims,
-        bound,
-        n_blocks,
-        &table,
+    let out = RszChainOut {
+        arts,
+        table,
         blocks,
-        &unpred,
-        if params.ft { Some(&dc_sums) } else { None },
-        None,
-    )?;
-    stages.serialize_ns = t.elapsed().as_nanos() as u64;
+        ft: params.ft,
+        protect_ns: 0,
+        encode_ns: 0,
+    };
+    let (archive, stats, events) =
+        assemble_rsz_archive(cfg, dims, bound, data.len(), out, &unpred, None, &mut stages)?;
     stages.wall_ns = wall.elapsed().as_nanos() as u64;
-    stats.compressed_bytes = archive.len();
     Ok(CoreOutput { archive, stats, events, stages })
+}
+
+// ---------------------------------------------------------------------------
+// chain shape 3: streaming bounded-memory compress
+// ---------------------------------------------------------------------------
+
+/// Calling-thread state of the streaming pipelined schedule: the slab
+/// cursor stands in for the materialized input slice.
+struct StreamMain<'c, 's> {
+    cursor: &'c mut stream::SlabCursor<'s>,
+    stages: StageTimings,
+    unpred_all: Vec<f32>,
+    scratch: Vec<f32>,
+}
+
+/// The streaming chain shape for the independent-block engines: the same
+/// rsz chain fed from a [`SlabSource`] one slab (z block-row) at a time,
+/// so at most one slab of uncompressed input is in flight (plus the
+/// chain's bounded channel). Per-block work is byte-for-byte the in-memory
+/// chain's — slab-local block extraction is proven identical to full-grid
+/// extraction by `stream`'s unit tests — so archives are bit-identical to
+/// the in-memory drivers on every schedule.
+///
+/// Memory honesty: the *input* is slab-bounded, but this format's global
+/// Huffman table means every block's quantization codes must be retained
+/// until the table barrier — a property of the format, not of the driver
+/// (the barrier-free xsz chain is bounded outright).
+pub(crate) fn compress_stream_graph(
+    src: &mut dyn SlabSource,
+    cfg: &CompressionConfig,
+    params: CoreParams,
+) -> Result<CoreOutput> {
+    cfg.validate()?;
+    let dims = src.dims();
+    let n_points = dims.len();
+    let wall = Instant::now();
+    let bound = stream::absolute_bound(src, &cfg.error_bound)?;
+    let q = Quantizer::new(bound, cfg.quant_radius);
+    let mut cursor = stream::SlabCursor::new(src, cfg.block_size)?;
+    let n_blocks = cursor.n_blocks();
+
+    let driver = chain::select_driver(
+        true,
+        cfg.stage_overlap,
+        cfg.parallelism.workers(),
+        n_blocks,
+        n_points,
+        None,
+    );
+    match driver {
+        ChainDriver::Sequential => {
+            let mut stages = StageTimings::default();
+            let mut unpred_all: Vec<f32> = Vec::new();
+            let mut scratch = Vec::new();
+            let mut st = ProtectState::new(params, q.n_symbols(), n_blocks);
+            for i in 0..n_blocks {
+                let (j, grid, slab) = cursor.block(i)?;
+                let qb = quantize_stage(grid, &q, cfg, params, j, i, &mut scratch, slab);
+                stages.prepare_ns += qb.prepare_ns;
+                stages.quantize_ns += qb.quantize_ns;
+                unpred_all.extend_from_slice(&qb.unpred);
+                st.step(qb)?;
+            }
+            let out = st.finish()?;
+            stages.protect_ns = out.protect_ns;
+            stages.encode_ns = out.encode_ns;
+            let (archive, stats, events) = assemble_rsz_archive(
+                cfg, dims, bound, n_points, out, &unpred_all, None, &mut stages,
+            )?;
+            stages.wall_ns = wall.elapsed().as_nanos() as u64;
+            Ok(CoreOutput { archive, stats, events, stages })
+        }
+        ChainDriver::Pipelined => {
+            let mut main = StreamMain {
+                cursor: &mut cursor,
+                stages: StageTimings { pipelined: true, ..Default::default() },
+                unpred_all: Vec::new(),
+                scratch: Vec::new(),
+            };
+            let (out, unpred_body) = chain::run_pipelined(
+                n_blocks,
+                &mut main,
+                ProtectState::new(params, q.n_symbols(), n_blocks),
+                |m, i| {
+                    let (j, grid, slab) = m.cursor.block(i)?;
+                    let qb = quantize_stage(grid, &q, cfg, params, j, i, &mut m.scratch, slab);
+                    m.stages.prepare_ns += qb.prepare_ns;
+                    m.stages.quantize_ns += qb.quantize_ns;
+                    m.unpred_all.extend_from_slice(&qb.unpred);
+                    Ok(qb)
+                },
+                |st, _, qb| st.step(qb),
+                ProtectState::finish,
+                |m| {
+                    let t = Instant::now();
+                    let body = format::compress_unpred_section(&m.unpred_all, cfg.zstd_level)?;
+                    m.stages.serialize_ns += t.elapsed().as_nanos() as u64;
+                    Ok(body)
+                },
+            )?;
+            let StreamMain { mut stages, unpred_all, .. } = main;
+            stages.protect_ns = out.protect_ns;
+            stages.encode_ns = out.encode_ns;
+            let (archive, stats, events) = assemble_rsz_archive(
+                cfg,
+                dims,
+                bound,
+                n_points,
+                out,
+                &unpred_all,
+                Some(unpred_body),
+                &mut stages,
+            )?;
+            stages.wall_ns = wall.elapsed().as_nanos() as u64;
+            Ok(CoreOutput { archive, stats, events, stages })
+        }
+        ChainDriver::Parallel(workers) => {
+            let mut stages = StageTimings::default();
+            let mut arts: Vec<(QuantizedBlock, u64)> = Vec::with_capacity(n_blocks);
+            let bps = cursor.blocks_per_slab();
+            for w in 0..cursor.n_slabs() {
+                let (grid, slab) = cursor.load(w)?;
+                let base = w * bps;
+                chain::run_parallel(
+                    grid.n_blocks(),
+                    workers,
+                    |j| {
+                        let mut scratch = Vec::new();
+                        let mut qb =
+                            quantize_stage(grid, &q, cfg, params, j, base + j, &mut scratch, slab);
+                        let t = Instant::now();
+                        let dc_sum = protect_stage(
+                            params,
+                            base + j,
+                            &mut qb.codes,
+                            qb.dcmp.as_deref(),
+                            &mut qb.events,
+                        );
+                        let protect_ns = t.elapsed().as_nanos() as u64;
+                        qb.dcmp = None;
+                        Ok((qb, dc_sum, protect_ns))
+                    },
+                    |_, (qb, dc_sum, protect_ns)| {
+                        stages.prepare_ns += qb.prepare_ns;
+                        stages.quantize_ns += qb.quantize_ns;
+                        stages.protect_ns += protect_ns;
+                        arts.push((qb, dc_sum));
+                        Ok(())
+                    },
+                )?;
+            }
+
+            // the table barrier and everything after it is identical to the
+            // in-memory parallel schedule
+            let t = Instant::now();
+            let mut freqs = vec![0u64; q.n_symbols()];
+            for (qb, _) in &arts {
+                count_freqs(&mut freqs, &qb.codes)?;
+            }
+            stages.protect_ns += t.elapsed().as_nanos() as u64;
+            let (table, blocks) = encode_parallel(&arts, &freqs, workers, &mut stages)?;
+
+            let mut unpred: Vec<f32> = Vec::new();
+            for (qb, _) in &arts {
+                unpred.extend_from_slice(&qb.unpred);
+            }
+            let out = RszChainOut {
+                arts,
+                table,
+                blocks,
+                ft: params.ft,
+                protect_ns: 0,
+                encode_ns: 0,
+            };
+            let (archive, stats, events) = assemble_rsz_archive(
+                cfg, dims, bound, n_points, out, &unpred, None, &mut stages,
+            )?;
+            stages.wall_ns = wall.elapsed().as_nanos() as u64;
+            Ok(CoreOutput { archive, stats, events, stages })
+        }
+    }
 }
 
 #[cfg(test)]
@@ -1115,6 +1390,28 @@ mod tests {
             assert_eq!(piped.stats.n_unpred, plain.stats.n_unpred);
             assert_eq!(piped.stats.lorenzo_blocks, plain.stats.lorenzo_blocks);
             assert_eq!(piped.stats.line7_fallbacks, plain.stats.line7_fallbacks);
+        }
+    }
+
+    #[test]
+    fn streaming_compress_is_byte_identical_to_in_memory() {
+        let f = synthetic::hurricane_field("t", Dims::d3(9, 14, 14), 21);
+        for ft in [false, true] {
+            let params = CoreParams { protect: ft, ft };
+            let plain =
+                run_sequential(&f.data, f.dims, &cfg(1e-3), params, &mut NoHooks).unwrap();
+            for par in [Parallelism::Sequential, Parallelism::Fixed(4)] {
+                let c = cfg(1e-3).with_parallelism(par);
+                let mut src = stream::SliceSource::new(f.dims, &f.data).unwrap();
+                let out = compress_stream_graph(&mut src, &c, params).unwrap();
+                assert_eq!(out.archive, plain.archive, "par {par:?} ft={ft}");
+            }
+            // overlap off pins the streaming sequential loop
+            let c = cfg(1e-3).with_stage_overlap(false);
+            let mut src = stream::SliceSource::new(f.dims, &f.data).unwrap();
+            let out = compress_stream_graph(&mut src, &c, params).unwrap();
+            assert_eq!(out.archive, plain.archive, "sequential stream ft={ft}");
+            assert!(!out.stages.pipelined);
         }
     }
 

@@ -1,0 +1,706 @@
+//! Chain shape 3: streaming bounded-memory sources, sinks and the slab
+//! machinery the compress/decode chains iterate with.
+//!
+//! The paper's independent-block model means no stage ever needs the whole
+//! field at once. The streaming shape exploits the grid's z-major block
+//! order: a *slab* is one block-row of z planes (`block_size` planes, the
+//! last possibly shorter), contiguous both in the row-major input file and
+//! in block index space. The compress chains read and quantize one slab at
+//! a time through [`SlabCursor`]; the decode chain scatters placed blocks
+//! into one slab buffer ([`StreamPlacer`]) and hands each completed slab
+//! to a [`SlabSink`]. In-flight field memory is bounded by one slab plus
+//! the chain's queue depth in blocks, not by the field.
+//!
+//! Honest cost accounting: the Huffman-table compress chains still hold
+//! the per-block quantization codes until the global table barrier (an
+//! archive-format property, not a driver one), so only the *uncompressed
+//! input* materialization is slab-bounded there; the decode chain is
+//! slab-bounded outright. D1/D2 fields map to a single slab (their
+//! `as_3d` z extent is 1), so streaming them is equivalent to the
+//! in-memory path — the bounded-memory win is the 3D case.
+
+use std::path::Path;
+
+use super::block::BlockGrid;
+use super::ErrorBound;
+use crate::data::Dims;
+use crate::error::{Error, Result};
+use crate::io::posix::{RawF32Reader, RawF32Writer};
+
+/// Points per chunk for the relative-bound prescan.
+const SCAN_CHUNK: usize = 1 << 16;
+
+// ---------------------------------------------------------------------------
+// traits
+// ---------------------------------------------------------------------------
+
+/// A rewindable source of row-major field points.
+///
+/// `read_at` may revisit earlier spans: value-range-relative error bounds
+/// force a prescan before the compress pass walks the file again.
+pub trait SlabSource {
+    /// Grid shape of the field behind the source.
+    fn dims(&self) -> Dims;
+
+    /// Fill `out` with the points starting at `point_offset` (row-major).
+    fn read_at(&mut self, point_offset: usize, out: &mut [f32]) -> Result<()>;
+}
+
+/// An ordered sink of placed field points.
+///
+/// Runs arrive in increasing `point_offset` order, each span exactly once
+/// (one run per completed slab). `Send` because the pipelined decode
+/// driver places from its companion thread.
+pub trait SlabSink: Send {
+    /// Accept the contiguous run `vals` at `point_offset`.
+    fn put(&mut self, point_offset: usize, vals: &[f32]) -> Result<()>;
+
+    /// Called once after the last run.
+    fn finish(&mut self) -> Result<()> {
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// sources
+// ---------------------------------------------------------------------------
+
+/// In-memory source over a borrowed slice (the streaming ≡ in-memory test
+/// harness, and the adapter the materializing fallbacks use).
+#[derive(Debug)]
+pub struct SliceSource<'a> {
+    dims: Dims,
+    data: &'a [f32],
+}
+
+impl<'a> SliceSource<'a> {
+    /// Wrap a slice, checking the shape.
+    pub fn new(dims: Dims, data: &'a [f32]) -> Result<Self> {
+        if dims.len() != data.len() {
+            return Err(Error::InvalidArgument(format!(
+                "dims {:?} imply {} points, got {}",
+                dims,
+                dims.len(),
+                data.len()
+            )));
+        }
+        Ok(Self { dims, data })
+    }
+}
+
+impl SlabSource for SliceSource<'_> {
+    fn dims(&self) -> Dims {
+        self.dims
+    }
+
+    fn read_at(&mut self, point_offset: usize, out: &mut [f32]) -> Result<()> {
+        let end = point_offset.checked_add(out.len()).filter(|&e| e <= self.data.len()).ok_or_else(
+            || {
+                Error::InvalidArgument(format!(
+                    "read of {} points at offset {} past source end ({} points)",
+                    out.len(),
+                    point_offset,
+                    self.data.len()
+                ))
+            },
+        )?;
+        out.copy_from_slice(&self.data[point_offset..end]);
+        Ok(())
+    }
+}
+
+/// Raw little-endian f32 file source (the SZ dataset convention), shaped
+/// by caller-provided dims.
+#[derive(Debug)]
+pub struct FileSource {
+    dims: Dims,
+    reader: RawF32Reader,
+}
+
+impl FileSource {
+    /// Open, checking the file holds exactly `dims.len()` points.
+    pub fn open(path: impl AsRef<Path>, dims: Dims) -> Result<Self> {
+        let reader = RawF32Reader::open(path)?;
+        if reader.n_points() != dims.len() {
+            return Err(Error::InvalidArgument(format!(
+                "dims {:?} imply {} points, file has {}",
+                dims,
+                dims.len(),
+                reader.n_points()
+            )));
+        }
+        Ok(Self { dims, reader })
+    }
+}
+
+impl SlabSource for FileSource {
+    fn dims(&self) -> Dims {
+        self.dims
+    }
+
+    fn read_at(&mut self, point_offset: usize, out: &mut [f32]) -> Result<()> {
+        self.reader.read_at(point_offset, out)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// sinks
+// ---------------------------------------------------------------------------
+
+/// Collects placed runs into a full-size vector (tests, and the adapter
+/// behind the materializing decode API).
+#[derive(Debug)]
+pub struct VecSink {
+    data: Vec<f32>,
+}
+
+impl VecSink {
+    /// Zero-filled sink for `n_points` points.
+    pub fn new(n_points: usize) -> Self {
+        Self { data: vec![0.0; n_points] }
+    }
+
+    /// Consume into the assembled array.
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+}
+
+impl SlabSink for VecSink {
+    fn put(&mut self, point_offset: usize, vals: &[f32]) -> Result<()> {
+        let end = point_offset.checked_add(vals.len()).filter(|&e| e <= self.data.len()).ok_or_else(
+            || {
+                Error::InvalidArgument(format!(
+                    "placed run of {} points at offset {} past sink end ({} points)",
+                    vals.len(),
+                    point_offset,
+                    self.data.len()
+                ))
+            },
+        )?;
+        self.data[point_offset..end].copy_from_slice(vals);
+        Ok(())
+    }
+}
+
+/// Streams placed runs straight to a raw little-endian f32 file through
+/// the vectored writer in [`crate::io::posix`].
+#[derive(Debug)]
+pub struct FileSink {
+    writer: RawF32Writer,
+}
+
+impl FileSink {
+    /// Create (truncate) the output file.
+    pub fn create(path: impl AsRef<Path>) -> Result<Self> {
+        Ok(Self { writer: RawF32Writer::create(path)? })
+    }
+}
+
+impl SlabSink for FileSink {
+    fn put(&mut self, point_offset: usize, vals: &[f32]) -> Result<()> {
+        self.writer.write_at(point_offset, vals)
+    }
+
+    fn finish(&mut self) -> Result<()> {
+        self.writer.flush()
+    }
+}
+
+/// Summary produced by [`StatsSink`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StreamStats {
+    /// Points seen.
+    pub n: usize,
+    /// Minimum decoded value.
+    pub min: f64,
+    /// Maximum decoded value.
+    pub max: f64,
+    /// Mean decoded value.
+    pub mean: f64,
+    /// Root mean square of the decoded values.
+    pub rms: f64,
+    /// Max |decoded - reference|, when a reference was attached.
+    pub max_abs_err: Option<f64>,
+    /// PSNR in dB against the reference's value range (infinite on an
+    /// exact match), when a reference was attached.
+    pub psnr_db: Option<f64>,
+}
+
+/// Reduction sink: running min/max/mean/RMS over the decoded stream and —
+/// when a reference file is attached — max absolute error and PSNR. Never
+/// materializes the array (`ftsz stats`).
+#[derive(Debug, Default)]
+pub struct StatsSink {
+    n: usize,
+    min: f64,
+    max: f64,
+    sum: f64,
+    sumsq: f64,
+    reference: Option<FileSource>,
+    ref_buf: Vec<f32>,
+    ref_min: f64,
+    ref_max: f64,
+    err_max: f64,
+    err_sumsq: f64,
+}
+
+impl StatsSink {
+    /// Stats only, no reference comparison.
+    pub fn new() -> Self {
+        Self {
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+            ref_min: f64::INFINITY,
+            ref_max: f64::NEG_INFINITY,
+            ..Default::default()
+        }
+    }
+
+    /// Also compare against the original field for max-error / PSNR.
+    pub fn with_reference(reference: FileSource) -> Self {
+        Self { reference: Some(reference), ..Self::new() }
+    }
+
+    /// Fold the accumulated stream into a summary.
+    pub fn summary(&self) -> StreamStats {
+        let n = self.n.max(1) as f64;
+        let (max_abs_err, psnr_db) = if self.reference.is_some() {
+            let range = self.ref_max - self.ref_min;
+            let mse = self.err_sumsq / n;
+            let psnr = if !(range > 0.0) {
+                None
+            } else if mse > 0.0 {
+                Some(10.0 * (range * range / mse).log10())
+            } else {
+                Some(f64::INFINITY)
+            };
+            (Some(self.err_max), psnr)
+        } else {
+            (None, None)
+        };
+        StreamStats {
+            n: self.n,
+            min: self.min,
+            max: self.max,
+            mean: self.sum / n,
+            rms: (self.sumsq / n).sqrt(),
+            max_abs_err,
+            psnr_db,
+        }
+    }
+}
+
+impl SlabSink for StatsSink {
+    fn put(&mut self, point_offset: usize, vals: &[f32]) -> Result<()> {
+        for &v in vals {
+            let v = v as f64;
+            self.n += 1;
+            if v < self.min {
+                self.min = v;
+            }
+            if v > self.max {
+                self.max = v;
+            }
+            self.sum += v;
+            self.sumsq += v * v;
+        }
+        if let Some(reference) = &mut self.reference {
+            self.ref_buf.resize(vals.len(), 0.0);
+            reference.read_at(point_offset, &mut self.ref_buf)?;
+            for (&d, &r) in vals.iter().zip(&self.ref_buf) {
+                let r = r as f64;
+                if r < self.ref_min {
+                    self.ref_min = r;
+                }
+                if r > self.ref_max {
+                    self.ref_max = r;
+                }
+                let e = (d as f64 - r).abs();
+                if e > self.err_max {
+                    self.err_max = e;
+                }
+                self.err_sumsq += e * e;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Reduction sink: fixed-range histogram of decoded values, with out-of-
+/// range counters (`NaN` counts as below-range).
+#[derive(Debug)]
+pub struct HistogramSink {
+    lo: f64,
+    hi: f64,
+    counts: Vec<u64>,
+    below: u64,
+    above: u64,
+}
+
+impl HistogramSink {
+    /// Histogram of `bins` equal buckets over `[lo, hi]`.
+    pub fn new(lo: f64, hi: f64, bins: usize) -> Result<Self> {
+        if bins == 0 || !(hi > lo) || !lo.is_finite() || !hi.is_finite() {
+            return Err(Error::InvalidArgument(format!(
+                "histogram needs finite lo < hi and >= 1 bin, got [{lo}, {hi}] x {bins}"
+            )));
+        }
+        Ok(Self { lo, hi, counts: vec![0; bins], below: 0, above: 0 })
+    }
+
+    /// Per-bucket counts.
+    pub fn counts(&self) -> &[u64] {
+        &self.counts
+    }
+
+    /// (below-range, above-range) counts.
+    pub fn outliers(&self) -> (u64, u64) {
+        (self.below, self.above)
+    }
+}
+
+impl SlabSink for HistogramSink {
+    fn put(&mut self, _point_offset: usize, vals: &[f32]) -> Result<()> {
+        let bins = self.counts.len() as f64;
+        for &v in vals {
+            let v = v as f64;
+            if !(v >= self.lo) {
+                self.below += 1;
+            } else if v > self.hi {
+                self.above += 1;
+            } else {
+                let i = (((v - self.lo) / (self.hi - self.lo)) * bins) as usize;
+                self.counts[i.min(self.counts.len() - 1)] += 1;
+            }
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// bound resolution
+// ---------------------------------------------------------------------------
+
+/// Resolve an [`ErrorBound`] against a source without materializing it.
+/// Bit-identical to [`ErrorBound::absolute`] on the materialized array:
+/// the chunked prescan performs the same comparison sequence in the same
+/// order, so `Rel` archives from the streaming path match the in-memory
+/// path exactly.
+pub fn absolute_bound(src: &mut dyn SlabSource, bound: &ErrorBound) -> Result<f64> {
+    match *bound {
+        ErrorBound::Abs(e) => Ok(e),
+        ErrorBound::Rel(e) => {
+            let n = src.dims().len();
+            let mut lo = f64::INFINITY;
+            let mut hi = f64::NEG_INFINITY;
+            let mut buf = vec![0.0f32; SCAN_CHUNK.min(n.max(1))];
+            let mut off = 0;
+            while off < n {
+                let take = SCAN_CHUNK.min(n - off);
+                src.read_at(off, &mut buf[..take])?;
+                for &v in &buf[..take] {
+                    let v = v as f64;
+                    if v < lo {
+                        lo = v;
+                    }
+                    if v > hi {
+                        hi = v;
+                    }
+                }
+                off += take;
+            }
+            let range = if hi > lo { hi - lo } else { 1.0 };
+            Ok(e * range)
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// slab cursor (compress side)
+// ---------------------------------------------------------------------------
+
+/// Z-major slab cursor over a source: loads one slab (block-row of z
+/// planes) at a time and exposes a slab-local [`BlockGrid`] whose block
+/// extraction is identical to the full-field grid restricted to that slab
+/// (same z-major order, same edge-block extents — verified by unit test).
+pub(crate) struct SlabCursor<'a> {
+    src: &'a mut dyn SlabSource,
+    nz: usize,
+    ny: usize,
+    nx: usize,
+    b: usize,
+    n_slabs: usize,
+    blocks_per_slab: usize,
+    n_blocks: usize,
+    loaded: Option<usize>,
+    grid: Option<BlockGrid>,
+    buf: Vec<f32>,
+}
+
+impl<'a> SlabCursor<'a> {
+    /// Build the cursor geometry (no I/O yet).
+    pub(crate) fn new(src: &'a mut dyn SlabSource, block_size: usize) -> Result<Self> {
+        let dims = src.dims();
+        let full = BlockGrid::new(dims, block_size)?;
+        let (nbz, nby, nbx) = full.blocks_per_axis();
+        let (nz, ny, nx) = dims.as_3d();
+        Ok(Self {
+            src,
+            nz,
+            ny,
+            nx,
+            b: block_size,
+            n_slabs: nbz,
+            blocks_per_slab: nby * nbx,
+            n_blocks: full.n_blocks(),
+            loaded: None,
+            grid: None,
+            buf: Vec::new(),
+        })
+    }
+
+    /// Total blocks of the full field.
+    pub(crate) fn n_blocks(&self) -> usize {
+        self.n_blocks
+    }
+
+    /// Number of slabs (z-axis block rows).
+    pub(crate) fn n_slabs(&self) -> usize {
+        self.n_slabs
+    }
+
+    /// Blocks per slab (constant across slabs: the y/x block grid).
+    pub(crate) fn blocks_per_slab(&self) -> usize {
+        self.blocks_per_slab
+    }
+
+    /// Load slab `w` (no-op when already resident), returning its local
+    /// grid and points.
+    pub(crate) fn load(&mut self, w: usize) -> Result<(&BlockGrid, &[f32])> {
+        if self.loaded != Some(w) {
+            let z0 = w * self.b;
+            let sz = self.b.min(self.nz - z0);
+            self.buf.resize(sz * self.ny * self.nx, 0.0);
+            self.src.read_at(z0 * self.ny * self.nx, &mut self.buf)?;
+            // the slab grid has a single z block row, so its j-th block is
+            // the full grid's block w * blocks_per_slab + j
+            self.grid = Some(BlockGrid::new(Dims::d3(sz, self.ny, self.nx), self.b)?);
+            self.loaded = Some(w);
+        }
+        Ok((self.grid.as_ref().expect("slab grid loaded"), &self.buf))
+    }
+
+    /// Resolve global block `i` to (slab-local index, local grid, slab
+    /// points), loading the slab on first touch.
+    pub(crate) fn block(&mut self, i: usize) -> Result<(usize, &BlockGrid, &[f32])> {
+        debug_assert!(i < self.n_blocks);
+        let w = i / self.blocks_per_slab;
+        let j = i % self.blocks_per_slab;
+        let (grid, slab) = self.load(w)?;
+        Ok((j, grid, slab))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// stream placer (decode side)
+// ---------------------------------------------------------------------------
+
+/// Decode-side slab assembler: receives decoded blocks in z-major block
+/// order, scatters each into the current slab buffer, and flushes every
+/// completed slab to the sink as one contiguous run.
+pub(crate) struct StreamPlacer<'a> {
+    sink: &'a mut dyn SlabSink,
+    nz: usize,
+    ny: usize,
+    nx: usize,
+    b: usize,
+    blocks_per_slab: usize,
+    cur: Option<usize>,
+    grid: Option<BlockGrid>,
+    buf: Vec<f32>,
+}
+
+impl<'a> StreamPlacer<'a> {
+    /// Build the placer geometry for a decoded field.
+    pub(crate) fn new(
+        sink: &'a mut dyn SlabSink,
+        dims: Dims,
+        block_size: usize,
+    ) -> Result<Self> {
+        let full = BlockGrid::new(dims, block_size)?;
+        let (_, nby, nbx) = full.blocks_per_axis();
+        let (nz, ny, nx) = dims.as_3d();
+        Ok(Self {
+            sink,
+            nz,
+            ny,
+            nx,
+            b: block_size,
+            blocks_per_slab: nby * nbx,
+            cur: None,
+            grid: None,
+            buf: Vec::new(),
+        })
+    }
+
+    fn open_slab(&mut self, w: usize) -> Result<()> {
+        let z0 = w * self.b;
+        let sz = self.b.min(self.nz - z0);
+        self.buf.clear();
+        self.buf.resize(sz * self.ny * self.nx, 0.0);
+        self.grid = Some(BlockGrid::new(Dims::d3(sz, self.ny, self.nx), self.b)?);
+        self.cur = Some(w);
+        Ok(())
+    }
+
+    fn flush(&mut self) -> Result<()> {
+        if let Some(w) = self.cur.take() {
+            self.sink.put(w * self.b * self.ny * self.nx, &self.buf)?;
+        }
+        Ok(())
+    }
+
+    /// Place global block `bi` (blocks must arrive in increasing order,
+    /// which every chain driver's ordered commit guarantees).
+    pub(crate) fn place(&mut self, bi: usize, block: &[f32]) -> Result<()> {
+        let w = bi / self.blocks_per_slab;
+        if self.cur != Some(w) {
+            self.flush()?;
+            self.open_slab(w)?;
+        }
+        let j = bi % self.blocks_per_slab;
+        self.grid.as_ref().expect("slab grid open").scatter(block, j, &mut self.buf);
+        Ok(())
+    }
+
+    /// Flush the final slab and finish the sink.
+    pub(crate) fn close(&mut self) -> Result<()> {
+        self.flush()?;
+        self.sink.finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn field(dims: Dims) -> Vec<f32> {
+        (0..dims.len()).map(|i| ((i * 37 % 101) as f32).sin() * 4.0 + i as f32 * 1e-3).collect()
+    }
+
+    #[test]
+    fn slab_cursor_matches_full_grid_extraction() {
+        for dims in [Dims::d3(23, 7, 11), Dims::d2(17, 13), Dims::d1(97)] {
+            let data = field(dims);
+            let full = BlockGrid::new(dims, 10).unwrap();
+            let mut src = SliceSource::new(dims, &data).unwrap();
+            let mut cursor = SlabCursor::new(&mut src, 10).unwrap();
+            assert_eq!(cursor.n_blocks(), full.n_blocks());
+            assert_eq!(cursor.n_slabs() * cursor.blocks_per_slab(), full.n_blocks());
+            let mut want = Vec::new();
+            let mut got = Vec::new();
+            for i in 0..full.n_blocks() {
+                full.extract(&data, i, &mut want);
+                let (j, grid, slab) = cursor.block(i).unwrap();
+                grid.extract(slab, j, &mut got);
+                assert_eq!(got, want, "block {i} of {dims:?}");
+                assert_eq!(grid.extent(j).shape, full.extent(i).shape);
+            }
+        }
+    }
+
+    #[test]
+    fn stream_placer_reassembles_the_field() {
+        for dims in [Dims::d3(23, 7, 11), Dims::d2(17, 13), Dims::d1(97)] {
+            let data = field(dims);
+            let full = BlockGrid::new(dims, 10).unwrap();
+            let mut sink = VecSink::new(dims.len());
+            {
+                let mut placer = StreamPlacer::new(&mut sink, dims, 10).unwrap();
+                let mut block = Vec::new();
+                for i in 0..full.n_blocks() {
+                    full.extract(&data, i, &mut block);
+                    placer.place(i, &block).unwrap();
+                }
+                placer.close().unwrap();
+            }
+            assert_eq!(sink.into_data(), data, "{dims:?}");
+        }
+    }
+
+    #[test]
+    fn absolute_bound_matches_in_memory_resolution() {
+        let dims = Dims::d3(9, 8, 7);
+        let data = field(dims);
+        let mut src = SliceSource::new(dims, &data).unwrap();
+        let stream_abs = absolute_bound(&mut src, &ErrorBound::Rel(1e-3)).unwrap();
+        let mem_abs = ErrorBound::Rel(1e-3).absolute(&data);
+        assert_eq!(stream_abs.to_bits(), mem_abs.to_bits());
+        assert_eq!(absolute_bound(&mut src, &ErrorBound::Abs(0.5)).unwrap(), 0.5);
+        // constant field: range collapses to the 1.0 fallback, same as
+        // the in-memory resolution
+        let flat = vec![2.0f32; 64];
+        let mut src = SliceSource::new(Dims::d1(64), &flat).unwrap();
+        assert_eq!(absolute_bound(&mut src, &ErrorBound::Rel(1e-2)).unwrap(), 1e-2);
+    }
+
+    #[test]
+    fn stats_sink_reduces_without_materializing() {
+        let mut sink = StatsSink::new();
+        sink.put(0, &[1.0, -3.0, 2.0]).unwrap();
+        sink.put(3, &[4.0]).unwrap();
+        sink.finish().unwrap();
+        let s = sink.summary();
+        assert_eq!(s.n, 4);
+        assert_eq!(s.min, -3.0);
+        assert_eq!(s.max, 4.0);
+        assert!((s.mean - 1.0).abs() < 1e-12);
+        assert!(s.max_abs_err.is_none() && s.psnr_db.is_none());
+    }
+
+    #[test]
+    fn stats_sink_psnr_against_reference_file() {
+        let dir = std::env::temp_dir().join(format!("ftsz_stats_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ref.f32");
+        let reference = [0.0f32, 1.0, 2.0, 3.0];
+        let mut w = RawF32Writer::create(&path).unwrap();
+        w.write_at(0, &reference).unwrap();
+        drop(w);
+        let mut sink =
+            StatsSink::with_reference(FileSource::open(&path, Dims::d1(4)).unwrap());
+        sink.put(0, &[0.0, 1.0, 2.5, 3.0]).unwrap();
+        let s = sink.summary();
+        assert_eq!(s.max_abs_err, Some(0.5));
+        // range 3, mse 0.0625 -> 10*log10(9/0.0625)
+        assert!((s.psnr_db.unwrap() - 10.0 * (9.0f64 / 0.0625).log10()).abs() < 1e-9);
+        // exact match is infinite PSNR
+        let mut exact =
+            StatsSink::with_reference(FileSource::open(&path, Dims::d1(4)).unwrap());
+        exact.put(0, &reference).unwrap();
+        assert_eq!(exact.summary().psnr_db, Some(f64::INFINITY));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn histogram_sink_buckets_and_outliers() {
+        let mut h = HistogramSink::new(0.0, 10.0, 5).unwrap();
+        h.put(0, &[-1.0, 0.0, 1.9, 2.0, 9.9, 10.0, 10.1, f32::NAN]).unwrap();
+        assert_eq!(h.counts(), &[2, 1, 0, 0, 2]);
+        assert_eq!(h.outliers(), (2, 1));
+        assert!(HistogramSink::new(1.0, 1.0, 4).is_err());
+        assert!(HistogramSink::new(0.0, 1.0, 0).is_err());
+    }
+
+    #[test]
+    fn source_and_sink_bounds_are_checked() {
+        let data = [1.0f32; 8];
+        let mut src = SliceSource::new(Dims::d1(8), &data).unwrap();
+        let mut buf = [0.0f32; 4];
+        assert!(src.read_at(5, &mut buf).is_err());
+        assert!(SliceSource::new(Dims::d1(9), &data).is_err());
+        let mut sink = VecSink::new(8);
+        assert!(sink.put(6, &[0.0; 4]).is_err());
+    }
+}

@@ -51,10 +51,10 @@
 //! bench's `stage.xsz.*` keys record exactly that, and its `--check` gate
 //! holds xsz to ≥ 2× the rsz compression throughput.
 
-use std::sync::mpsc;
 use std::time::Instant;
 
 use super::block::{BlockGrid, Region};
+use super::chain::{self, ChainDriver};
 use super::engine::{
     self, Arena, CompressStats, CoreOutput, CoreParams, Decompressed, DecompressHooks, Hooks,
     NoHooks,
@@ -62,6 +62,7 @@ use super::engine::{
 use super::format::{self, Archive, BlockMeta, BlockPayload, Header, Writer};
 use super::huffman::HuffmanTable;
 use super::stage::{BlockCodec, StageTimings};
+use super::stream::{self, SlabSource};
 use super::{CompressionConfig, Parallelism};
 use crate::data::Dims;
 use crate::error::{Error, Result};
@@ -80,15 +81,6 @@ const MODE_CONSTANT: u8 = 0;
 const MODE_FIXED_MAX: u8 = 4;
 /// Block mode tag: every value lives verbatim in the unpred pool.
 const MODE_VERBATIM: u8 = 5;
-
-/// Pipelining needs at least two blocks to overlap anything.
-const MIN_OVERLAP_BLOCKS: usize = 2;
-/// Minimum dataset size for the pipelined driver (same rationale and value
-/// as [`super::stage`]): below this the companion thread costs more than
-/// the compression work.
-const MIN_OVERLAP_POINTS: usize = 4096;
-/// Bounded depth of the quantize → encode channel on the pipelined path.
-const PIPE_DEPTH: usize = 4;
 
 // ---------------------------------------------------------------------------
 // the shared per-block encoder (hook points live)
@@ -347,18 +339,19 @@ pub fn compress_core<H: Hooks>(
             dims
         )));
     }
-    let workers = cfg.parallelism.workers();
-    if H::PARALLEL_SAFE && workers > 1 {
-        return run_parallel(data, dims, cfg, params, workers);
+    let n_blocks = BlockGrid::new(dims, cfg.block_size)?.n_blocks();
+    match chain::select_driver(
+        H::PARALLEL_SAFE,
+        cfg.stage_overlap,
+        cfg.parallelism.workers(),
+        n_blocks,
+        data.len(),
+        None,
+    ) {
+        ChainDriver::Sequential => run_sequential(data, dims, cfg, params, hooks),
+        ChainDriver::Pipelined => run_pipelined(data, dims, cfg, params),
+        ChainDriver::Parallel(w) => run_parallel(data, dims, cfg, params, w),
     }
-    if H::PARALLEL_SAFE
-        && cfg.stage_overlap
-        && data.len() >= MIN_OVERLAP_POINTS
-        && BlockGrid::new(dims, cfg.block_size)?.n_blocks() >= MIN_OVERLAP_BLOCKS
-    {
-        return run_pipelined(data, dims, cfg, params);
-    }
-    run_sequential(data, dims, cfg, params, hooks)
 }
 
 /// One-thread reference driver — the only one hooked (injection) runs may
@@ -548,11 +541,15 @@ struct QuantizedBlock {
 /// throughput. The bytes are identical either way (`in_sums` are never
 /// serialized), and hooked/injection runs always take the sequential
 /// driver with its full checksum semantics.
+/// `bi` indexes the (possibly slab-local) `grid`; `block_id` is the
+/// archive-global block number — they differ only on the streaming chain,
+/// where `grid` covers one slab.
 fn quantize_stage(
     grid: &BlockGrid,
     bound: f64,
     params: CoreParams,
     bi: usize,
+    block_id: usize,
     scratch: &mut Vec<f32>,
     data: &[f32],
 ) -> QuantizedBlock {
@@ -567,7 +564,7 @@ fn quantize_stage(
     let mut unpred = Vec::new();
     let mut dcmp = Vec::new();
     let (mode, param) = quantize_block(
-        bi,
+        block_id,
         scratch,
         bound,
         params.protect,
@@ -623,83 +620,52 @@ fn fold_block_report(qb: &QuantizedBlock, stats: &mut CompressStats, events: &mu
     events.extend(qb.events.iter().copied());
 }
 
-/// The 1-worker software pipeline. Unlike the rsz pipeline, whose encode
-/// stage must wait behind the global-Huffman-table barrier, the companion
-/// thread here runs protect + encode and **commits each block's payload
-/// bytes immediately** — there is no barrier, so every post-quantize stage
-/// of block *i* fully overlaps the quantize of block *i+1* and the only
-/// serial tail is the final section assembly (which itself overlaps the
-/// pre-compression of the unpredictable section on the main thread).
-fn run_pipelined(
-    data: &[f32],
-    dims: Dims,
-    cfg: &CompressionConfig,
+/// Companion-side state of the xsz chain: protect + pack each block as it
+/// arrives and commit the payload bytes immediately — there is no table
+/// barrier, so this is the whole back half of the chain.
+struct PackState {
     params: CoreParams,
-) -> Result<CoreOutput> {
-    let wall = Instant::now();
-    let bound = cfg.error_bound.absolute(data);
-    let grid = BlockGrid::new(dims, cfg.block_size)?;
-    let n_blocks = grid.n_blocks();
+    arts: Vec<(QuantizedBlock, u64, BlockPayload)>,
+    protect_ns: u64,
+    encode_ns: u64,
+}
 
-    let mut stages = StageTimings { pipelined: true, ..Default::default() };
-    let mut unpred_all: Vec<f32> = Vec::new();
+impl PackState {
+    fn new(params: CoreParams, n_blocks: usize) -> Self {
+        Self { params, arts: Vec::with_capacity(n_blocks), protect_ns: 0, encode_ns: 0 }
+    }
 
-    type Arts = Vec<(QuantizedBlock, u64, BlockPayload)>;
-    type CompanionOut = Result<(Arts, u64, u64)>;
-    let (arts, unpred_body) = std::thread::scope(|s| -> Result<(Arts, Vec<u8>)> {
-        let (tx, rx) = mpsc::sync_channel::<QuantizedBlock>(PIPE_DEPTH);
-
-        // companion: protect + encode per block, committed on arrival
-        let companion = s.spawn(move || -> CompanionOut {
-            let (mut protect_ns, mut encode_ns) = (0u64, 0u64);
-            let mut arts: Arts = Vec::with_capacity(n_blocks);
-            while let Ok(mut qb) = rx.recv() {
-                let t = Instant::now();
-                let dc_sum = protect_stage(params, &qb);
-                protect_ns += t.elapsed().as_nanos() as u64;
-                let t = Instant::now();
-                let payload =
-                    pack_block(qb.mode, qb.param, &qb.codes, qb.unpred.len() as u32)?;
-                encode_ns += t.elapsed().as_nanos() as u64;
-                qb.dcmp = None; // the reconstruction is spent; free it early
-                qb.codes = Vec::new(); // the payload bytes carry them now
-                arts.push((qb, dc_sum, payload));
-            }
-            Ok((arts, protect_ns, encode_ns))
-        });
-
-        // main thread: prepare + quantize per block, in order
-        let mut scratch = Vec::new();
-        for bi in 0..n_blocks {
-            let qb = quantize_stage(&grid, bound, params, bi, &mut scratch, data);
-            stages.prepare_ns += qb.prepare_ns;
-            stages.quantize_ns += qb.quantize_ns;
-            unpred_all.extend_from_slice(&qb.unpred);
-            if tx.send(qb).is_err() {
-                // companion exited early (it owns the error) — stop
-                break;
-            }
-        }
-        drop(tx);
-
-        // pre-compress the unpredictable section while the companion
-        // drains its queue tail
+    fn step(&mut self, mut qb: QuantizedBlock) -> Result<()> {
         let t = Instant::now();
-        let unpred_body = format::compress_unpred_section(&unpred_all, cfg.zstd_level)?;
-        stages.serialize_ns += t.elapsed().as_nanos() as u64;
+        let dc_sum = protect_stage(self.params, &qb);
+        self.protect_ns += t.elapsed().as_nanos() as u64;
+        let t = Instant::now();
+        let payload = pack_block(qb.mode, qb.param, &qb.codes, qb.unpred.len() as u32)?;
+        self.encode_ns += t.elapsed().as_nanos() as u64;
+        qb.dcmp = None; // the reconstruction is spent; free it early
+        qb.codes = Vec::new(); // the payload bytes carry them now
+        self.arts.push((qb, dc_sum, payload));
+        Ok(())
+    }
+}
 
-        let (arts, protect_ns, encode_ns) = match companion.join() {
-            Ok(r) => r?,
-            Err(p) => std::panic::resume_unwind(p),
-        };
-        stages.protect_ns = protect_ns;
-        stages.encode_ns = encode_ns;
-        Ok((arts, unpred_body))
-    })?;
-
-    // ordered commit of the run report (identical totals to every driver)
+/// Ordered commit of the run report + archive serialization, shared by
+/// every hook-free driver (identical totals and bytes on all of them).
+#[allow(clippy::too_many_arguments)]
+fn assemble_xsz_archive(
+    cfg: &CompressionConfig,
+    dims: Dims,
+    bound: f64,
+    n_points: usize,
+    arts: Vec<(QuantizedBlock, u64, BlockPayload)>,
+    ft: bool,
+    unpred_all: &[f32],
+    unpred_body: Option<Vec<u8>>,
+    stages: &mut StageTimings,
+) -> Result<(Vec<u8>, CompressStats, Vec<SdcEvent>)> {
+    let n_blocks = arts.len();
     let mut stats = CompressStats {
-        n_points: data.len(),
+        n_points,
         n_blocks,
         ..Default::default()
     };
@@ -719,21 +685,89 @@ fn run_pipelined(
         bound,
         n_blocks,
         blocks,
-        &unpred_all,
-        if params.ft { Some(&dc_sums) } else { None },
-        Some(unpred_body),
+        unpred_all,
+        if ft { Some(&dc_sums) } else { None },
+        unpred_body,
     )?;
     stages.serialize_ns += t.elapsed().as_nanos() as u64;
-    stages.wall_ns = wall.elapsed().as_nanos() as u64;
     stats.compressed_bytes = archive.len();
+    Ok((archive, stats, events))
+}
+
+/// Main-thread state of the pipelined drivers (front stages + tail).
+struct PipeMain {
+    stages: StageTimings,
+    unpred_all: Vec<f32>,
+    scratch: Vec<f32>,
+}
+
+/// The 1-worker software pipeline, instantiated from
+/// [`chain::run_pipelined`]. Unlike the rsz pipeline, whose encode stage
+/// must wait behind the global-Huffman-table barrier, the companion step
+/// here runs protect + encode and commits each block's payload bytes
+/// immediately — barrier-free, so every post-quantize stage of block *i*
+/// fully overlaps the quantize of block *i+1*, and the chain tail
+/// pre-compresses the unpredictable section while the companion drains.
+fn run_pipelined(
+    data: &[f32],
+    dims: Dims,
+    cfg: &CompressionConfig,
+    params: CoreParams,
+) -> Result<CoreOutput> {
+    let wall = Instant::now();
+    let bound = cfg.error_bound.absolute(data);
+    let grid = BlockGrid::new(dims, cfg.block_size)?;
+    let n_blocks = grid.n_blocks();
+
+    let mut main = PipeMain {
+        stages: StageTimings { pipelined: true, ..Default::default() },
+        unpred_all: Vec::new(),
+        scratch: Vec::new(),
+    };
+    let (st, unpred_body) = chain::run_pipelined(
+        n_blocks,
+        &mut main,
+        PackState::new(params, n_blocks),
+        |m, bi| {
+            let qb = quantize_stage(&grid, bound, params, bi, bi, &mut m.scratch, data);
+            m.stages.prepare_ns += qb.prepare_ns;
+            m.stages.quantize_ns += qb.quantize_ns;
+            m.unpred_all.extend_from_slice(&qb.unpred);
+            Ok(qb)
+        },
+        |st, _, qb| st.step(qb),
+        Ok,
+        |m| {
+            let t = Instant::now();
+            let body = format::compress_unpred_section(&m.unpred_all, cfg.zstd_level)?;
+            m.stages.serialize_ns += t.elapsed().as_nanos() as u64;
+            Ok(body)
+        },
+    )?;
+    let PipeMain { mut stages, unpred_all, .. } = main;
+    stages.protect_ns = st.protect_ns;
+    stages.encode_ns = st.encode_ns;
+
+    let (archive, stats, events) = assemble_xsz_archive(
+        cfg,
+        dims,
+        bound,
+        data.len(),
+        st.arts,
+        params.ft,
+        &unpred_all,
+        Some(unpred_body),
+        &mut stages,
+    )?;
+    stages.wall_ns = wall.elapsed().as_nanos() as u64;
     Ok(CoreOutput { archive, stats, events, stages })
 }
 
-/// Block-parallel fan-out: with no table barrier the whole chain — prepare
-/// → quantize → protect → encode — runs inside one fan-out per block (the
-/// rsz graph needs a second fan-out after its barrier). Results commit in
-/// block order, so the bytes are identical to the sequential driver at any
-/// worker count.
+/// Block-parallel fan-out, instantiated from [`chain::run_parallel`]: with
+/// no table barrier the whole chain — prepare → quantize → protect →
+/// encode — runs inside one fan-out per block (the rsz graph needs a
+/// second fan-out after its barrier). Results commit in block order, so
+/// the bytes are identical to the sequential driver at any worker count.
 fn run_parallel(
     data: &[f32],
     dims: Dims,
@@ -747,57 +781,205 @@ fn run_parallel(
     let grid = BlockGrid::new(dims, cfg.block_size)?;
     let n_blocks = grid.n_blocks();
 
-    type Art = Result<(QuantizedBlock, u64, BlockPayload, u64, u64)>;
-    let arts: Vec<Art> = crate::util::threadpool::parallel_map(n_blocks, workers, |bi| {
-        let mut scratch = Vec::new();
-        let mut qb = quantize_stage(&grid, bound, params, bi, &mut scratch, data);
-        let t = Instant::now();
-        let dc_sum = protect_stage(params, &qb);
-        let protect_ns = t.elapsed().as_nanos() as u64;
-        let t = Instant::now();
-        let payload = pack_block(qb.mode, qb.param, &qb.codes, qb.unpred.len() as u32)?;
-        let encode_ns = t.elapsed().as_nanos() as u64;
-        qb.dcmp = None;
-        qb.codes = Vec::new();
-        Ok((qb, dc_sum, payload, protect_ns, encode_ns))
-    });
-
-    let mut stats = CompressStats {
-        n_points: data.len(),
+    let mut arts: Vec<(QuantizedBlock, u64, BlockPayload)> = Vec::with_capacity(n_blocks);
+    chain::run_parallel(
         n_blocks,
-        ..Default::default()
-    };
-    let mut events = Vec::new();
-    let mut unpred: Vec<f32> = Vec::new();
-    let mut dc_sums = Vec::with_capacity(n_blocks);
-    let mut blocks = Vec::with_capacity(n_blocks);
-    for art in arts {
-        let (qb, dc_sum, payload, protect_ns, encode_ns) = art?;
-        fold_block_report(&qb, &mut stats, &mut events);
-        stages.prepare_ns += qb.prepare_ns;
-        stages.quantize_ns += qb.quantize_ns;
-        stages.protect_ns += protect_ns;
-        stages.encode_ns += encode_ns;
-        unpred.extend_from_slice(&qb.unpred);
-        dc_sums.push(dc_sum);
-        blocks.push(payload);
-    }
+        workers,
+        |bi| {
+            let mut scratch = Vec::new();
+            let mut qb = quantize_stage(&grid, bound, params, bi, bi, &mut scratch, data);
+            let t = Instant::now();
+            let dc_sum = protect_stage(params, &qb);
+            let protect_ns = t.elapsed().as_nanos() as u64;
+            let t = Instant::now();
+            let payload = pack_block(qb.mode, qb.param, &qb.codes, qb.unpred.len() as u32)?;
+            let encode_ns = t.elapsed().as_nanos() as u64;
+            qb.dcmp = None;
+            qb.codes = Vec::new();
+            Ok((qb, dc_sum, payload, protect_ns, encode_ns))
+        },
+        |_, (qb, dc_sum, payload, protect_ns, encode_ns)| {
+            stages.prepare_ns += qb.prepare_ns;
+            stages.quantize_ns += qb.quantize_ns;
+            stages.protect_ns += protect_ns;
+            stages.encode_ns += encode_ns;
+            arts.push((qb, dc_sum, payload));
+            Ok(())
+        },
+    )?;
 
-    let t = Instant::now();
-    let archive = write_archive(
+    let mut unpred: Vec<f32> = Vec::new();
+    for (qb, _, _) in &arts {
+        unpred.extend_from_slice(&qb.unpred);
+    }
+    let (archive, stats, events) = assemble_xsz_archive(
         cfg,
         dims,
         bound,
-        n_blocks,
-        blocks,
+        data.len(),
+        arts,
+        params.ft,
         &unpred,
-        if params.ft { Some(&dc_sums) } else { None },
         None,
+        &mut stages,
     )?;
-    stages.serialize_ns = t.elapsed().as_nanos() as u64;
     stages.wall_ns = wall.elapsed().as_nanos() as u64;
-    stats.compressed_bytes = archive.len();
     Ok(CoreOutput { archive, stats, events, stages })
+}
+
+// ---------------------------------------------------------------------------
+// streaming chain shape
+// ---------------------------------------------------------------------------
+
+/// Main-thread state of the streaming pipelined driver: the slab cursor
+/// replaces the materialized input slice.
+struct StreamMain<'c, 's> {
+    cursor: &'c mut stream::SlabCursor<'s>,
+    stages: StageTimings,
+    unpred_all: Vec<f32>,
+    scratch: Vec<f32>,
+}
+
+/// The streaming chain shape: the same xsz chain fed from a
+/// [`stream::SlabSource`] one slab (z block-row) at a time, so at most one
+/// slab of uncompressed input is in flight. The per-block work is
+/// byte-for-byte the in-memory chain's — slab-local block extraction is
+/// proven identical to full-grid extraction by `stream`'s unit tests — so
+/// archives are bit-identical to the in-memory drivers.
+pub(crate) fn compress_stream_core(
+    src: &mut dyn SlabSource,
+    cfg: &CompressionConfig,
+    params: CoreParams,
+) -> Result<CoreOutput> {
+    cfg.validate()?;
+    let dims = src.dims();
+    let n_points = dims.len();
+    let bound = stream::absolute_bound(src, &cfg.error_bound)?;
+    let wall = Instant::now();
+    let mut cursor = stream::SlabCursor::new(src, cfg.block_size)?;
+    let n_blocks = cursor.n_blocks();
+
+    let driver = chain::select_driver(
+        true,
+        cfg.stage_overlap,
+        cfg.parallelism.workers(),
+        n_blocks,
+        n_points,
+        None,
+    );
+    match driver {
+        ChainDriver::Sequential => {
+            let mut stages = StageTimings::default();
+            let mut unpred_all: Vec<f32> = Vec::new();
+            let mut scratch = Vec::new();
+            let mut st = PackState::new(params, n_blocks);
+            for i in 0..n_blocks {
+                let (j, grid, slab) = cursor.block(i)?;
+                let qb = quantize_stage(grid, bound, params, j, i, &mut scratch, slab);
+                stages.prepare_ns += qb.prepare_ns;
+                stages.quantize_ns += qb.quantize_ns;
+                unpred_all.extend_from_slice(&qb.unpred);
+                st.step(qb)?;
+            }
+            stages.protect_ns = st.protect_ns;
+            stages.encode_ns = st.encode_ns;
+            let (archive, stats, events) = assemble_xsz_archive(
+                cfg, dims, bound, n_points, st.arts, params.ft, &unpred_all, None, &mut stages,
+            )?;
+            stages.wall_ns = wall.elapsed().as_nanos() as u64;
+            Ok(CoreOutput { archive, stats, events, stages })
+        }
+        ChainDriver::Pipelined => {
+            let mut main = StreamMain {
+                cursor: &mut cursor,
+                stages: StageTimings { pipelined: true, ..Default::default() },
+                unpred_all: Vec::new(),
+                scratch: Vec::new(),
+            };
+            let (st, unpred_body) = chain::run_pipelined(
+                n_blocks,
+                &mut main,
+                PackState::new(params, n_blocks),
+                |m, i| {
+                    let (j, grid, slab) = m.cursor.block(i)?;
+                    let qb = quantize_stage(grid, bound, params, j, i, &mut m.scratch, slab);
+                    m.stages.prepare_ns += qb.prepare_ns;
+                    m.stages.quantize_ns += qb.quantize_ns;
+                    m.unpred_all.extend_from_slice(&qb.unpred);
+                    Ok(qb)
+                },
+                |st, _, qb| st.step(qb),
+                Ok,
+                |m| {
+                    let t = Instant::now();
+                    let body = format::compress_unpred_section(&m.unpred_all, cfg.zstd_level)?;
+                    m.stages.serialize_ns += t.elapsed().as_nanos() as u64;
+                    Ok(body)
+                },
+            )?;
+            let StreamMain { mut stages, unpred_all, .. } = main;
+            stages.protect_ns = st.protect_ns;
+            stages.encode_ns = st.encode_ns;
+            let (archive, stats, events) = assemble_xsz_archive(
+                cfg,
+                dims,
+                bound,
+                n_points,
+                st.arts,
+                params.ft,
+                &unpred_all,
+                Some(unpred_body),
+                &mut stages,
+            )?;
+            stages.wall_ns = wall.elapsed().as_nanos() as u64;
+            Ok(CoreOutput { archive, stats, events, stages })
+        }
+        ChainDriver::Parallel(workers) => {
+            let mut stages = StageTimings::default();
+            let mut arts: Vec<(QuantizedBlock, u64, BlockPayload)> = Vec::with_capacity(n_blocks);
+            let bps = cursor.blocks_per_slab();
+            for w in 0..cursor.n_slabs() {
+                let (grid, slab) = cursor.load(w)?;
+                let base = w * bps;
+                chain::run_parallel(
+                    grid.n_blocks(),
+                    workers,
+                    |j| {
+                        let mut scratch = Vec::new();
+                        let mut qb =
+                            quantize_stage(grid, bound, params, j, base + j, &mut scratch, slab);
+                        let t = Instant::now();
+                        let dc_sum = protect_stage(params, &qb);
+                        let protect_ns = t.elapsed().as_nanos() as u64;
+                        let t = Instant::now();
+                        let payload =
+                            pack_block(qb.mode, qb.param, &qb.codes, qb.unpred.len() as u32)?;
+                        let encode_ns = t.elapsed().as_nanos() as u64;
+                        qb.dcmp = None;
+                        qb.codes = Vec::new();
+                        Ok((qb, dc_sum, payload, protect_ns, encode_ns))
+                    },
+                    |_, (qb, dc_sum, payload, protect_ns, encode_ns)| {
+                        stages.prepare_ns += qb.prepare_ns;
+                        stages.quantize_ns += qb.quantize_ns;
+                        stages.protect_ns += protect_ns;
+                        stages.encode_ns += encode_ns;
+                        arts.push((qb, dc_sum, payload));
+                        Ok(())
+                    },
+                )?;
+            }
+            let mut unpred: Vec<f32> = Vec::new();
+            for (qb, _, _) in &arts {
+                unpred.extend_from_slice(&qb.unpred);
+            }
+            let (archive, stats, events) = assemble_xsz_archive(
+                cfg, dims, bound, n_points, arts, params.ft, &unpred, None, &mut stages,
+            )?;
+            stages.wall_ns = wall.elapsed().as_nanos() as u64;
+            Ok(CoreOutput { archive, stats, events, stages })
+        }
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -889,6 +1071,17 @@ pub fn compress_ft(data: &[f32], dims: Dims, cfg: &CompressionConfig) -> Result<
     Ok(compress_core(data, dims, cfg, FTXSZ_PARAMS, &mut NoHooks)?.archive)
 }
 
+/// Streaming xsz compress: the bounded-memory chain shape over a
+/// [`SlabSource`]. Bit-identical to [`compress`] on the same field.
+pub fn compress_stream(src: &mut dyn SlabSource, cfg: &CompressionConfig) -> Result<Vec<u8>> {
+    Ok(compress_stream_core(src, cfg, CoreParams::default())?.archive)
+}
+
+/// Streaming ftxsz compress. Bit-identical to [`compress_ft`].
+pub fn compress_ft_stream(src: &mut dyn SlabSource, cfg: &CompressionConfig) -> Result<Vec<u8>> {
+    Ok(compress_stream_core(src, cfg, FTXSZ_PARAMS)?.archive)
+}
+
 /// xsz compression with injection hooks (mode-A/B harness entry point).
 pub fn compress_with_hooks<H: Hooks>(
     data: &[f32],
@@ -925,6 +1118,18 @@ impl BlockCodec for XszCodec {
 
     fn compress(&self, data: &[f32], dims: Dims, cfg: &CompressionConfig) -> Result<Vec<u8>> {
         compress(data, dims, cfg)
+    }
+
+    fn compress_stream(
+        &self,
+        src: &mut dyn SlabSource,
+        cfg: &CompressionConfig,
+    ) -> Result<Vec<u8>> {
+        compress_stream(src, cfg)
+    }
+
+    fn supports_streaming(&self) -> bool {
+        true
     }
 
     fn decompress(&self, bytes: &[u8], par: Parallelism) -> Result<Decompressed> {
@@ -966,6 +1171,18 @@ impl BlockCodec for FtxszCodec {
 
     fn compress(&self, data: &[f32], dims: Dims, cfg: &CompressionConfig) -> Result<Vec<u8>> {
         compress_ft(data, dims, cfg)
+    }
+
+    fn compress_stream(
+        &self,
+        src: &mut dyn SlabSource,
+        cfg: &CompressionConfig,
+    ) -> Result<Vec<u8>> {
+        compress_ft_stream(src, cfg)
+    }
+
+    fn supports_streaming(&self) -> bool {
+        true
     }
 
     fn decompress(&self, bytes: &[u8], par: Parallelism) -> Result<Decompressed> {
@@ -1108,6 +1325,27 @@ mod tests {
             assert_eq!(par.stats.n_unpred, seq.stats.n_unpred);
             assert_eq!(par.stats.constant_blocks, seq.stats.constant_blocks);
             assert_eq!(par.stats.line7_fallbacks, seq.stats.line7_fallbacks);
+        }
+    }
+
+    #[test]
+    fn streaming_compress_is_byte_identical_to_in_memory() {
+        let f = synthetic::nyx_velocity("v", Dims::d3(20, 20, 20), 9);
+        for params in [CoreParams::default(), FTXSZ_PARAMS] {
+            let seq =
+                run_sequential(&f.data, f.dims, &cfg(1e-3), params, &mut NoHooks).unwrap();
+            for par in [Parallelism::Sequential, Parallelism::Fixed(4)] {
+                let c = cfg(1e-3).with_parallelism(par);
+                let mut src = stream::SliceSource::new(f.dims, &f.data).unwrap();
+                let out = compress_stream_core(&mut src, &c, params).unwrap();
+                assert_eq!(out.archive, seq.archive, "par {par:?} ft={}", params.ft);
+            }
+            // overlap off pins the streaming sequential loop
+            let c = cfg(1e-3).with_stage_overlap(false);
+            let mut src = stream::SliceSource::new(f.dims, &f.data).unwrap();
+            let out = compress_stream_core(&mut src, &c, params).unwrap();
+            assert_eq!(out.archive, seq.archive, "sequential stream ft={}", params.ft);
+            assert!(!out.stages.pipelined);
         }
     }
 

@@ -23,7 +23,9 @@ use crate::compressor::engine::{
     self, compress_core, decompress_core, CoreOutput, CoreParams, Decompressed, DecompressHooks,
     Hooks, NoDecompressHooks, NoHooks,
 };
-use crate::compressor::stage::BlockCodec;
+use crate::compressor::destage::{self, StreamDecodeOutput};
+use crate::compressor::stage::{self, BlockCodec};
+use crate::compressor::stream::{SlabSink, SlabSource};
 use crate::compressor::{CompressionConfig, Parallelism};
 use crate::data::Dims;
 use crate::error::Result;
@@ -54,6 +56,18 @@ impl BlockCodec for FtrszCodec {
 
     fn compress(&self, data: &[f32], dims: Dims, cfg: &CompressionConfig) -> Result<Vec<u8>> {
         compress(data, dims, cfg)
+    }
+
+    fn compress_stream(
+        &self,
+        src: &mut dyn SlabSource,
+        cfg: &CompressionConfig,
+    ) -> Result<Vec<u8>> {
+        compress_stream(src, cfg)
+    }
+
+    fn supports_streaming(&self) -> bool {
+        true
     }
 
     fn decompress(&self, bytes: &[u8], par: Parallelism) -> Result<Decompressed> {
@@ -105,6 +119,25 @@ impl BlockCodec for FtrszCodec {
 /// the archive stays byte-identical at any worker count.
 pub fn compress(data: &[f32], dims: Dims, cfg: &CompressionConfig) -> Result<Vec<u8>> {
     Ok(compress_core(data, dims, cfg, FT_PARAMS, &mut NoHooks)?.archive)
+}
+
+/// Streaming **ftrsz** compress: the bounded-memory chain shape over a
+/// [`SlabSource`], with the full protect stage on. Archives are
+/// bit-identical to [`compress`] on the same field.
+pub fn compress_stream(src: &mut dyn SlabSource, cfg: &CompressionConfig) -> Result<Vec<u8>> {
+    Ok(stage::compress_stream_graph(src, cfg, FT_PARAMS)?.archive)
+}
+
+/// Streaming verified decompress (Algorithm 2 per block): placed blocks
+/// flow straight into `sink` one slab at a time. Errors like
+/// [`decompress`] when the archive carries no `sum_dc` or a block fails
+/// verification even after re-execution.
+pub fn decompress_stream(
+    bytes: &[u8],
+    sink: &mut dyn SlabSink,
+    par: Parallelism,
+) -> Result<StreamDecodeOutput> {
+    destage::decode_stream(bytes, sink, true, par)
 }
 
 /// Compress with injection hooks; returns archive + stats + SDC events.

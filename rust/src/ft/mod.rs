@@ -23,8 +23,9 @@ pub mod parity;
 pub mod report;
 
 pub use ftengine::{
-    compress, compress_with_hooks, decompress, decompress_region_verified,
-    decompress_unverified, decompress_verbose, decompress_with, decompress_with_report,
+    compress, compress_stream, compress_with_hooks, decompress, decompress_region_verified,
+    decompress_stream, decompress_unverified, decompress_verbose, decompress_with,
+    decompress_with_report,
 };
 pub use parity::{recover, scrub, scrub_file, ParityParams, Recovery, ScrubOutcome};
 pub use report::{DecompressReport, SdcEvent};

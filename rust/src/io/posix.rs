@@ -1,10 +1,14 @@
 //! Real file-per-process POSIX I/O (the paper's §6.1.3 I/O mode) for the
 //! end-to-end examples: each rank writes `rank_<i>.ftsz` into a run
-//! directory.
+//! directory. Also home of the raw little-endian `f32` field readers and
+//! writers the streaming chain shape uses — the writer gathers converted
+//! chunks through `write_vectored` (the PR 4 writev follow-up).
 
+use std::fs::File;
+use std::io::{IoSlice, Read, Seek, SeekFrom, Write};
 use std::path::{Path, PathBuf};
 
-use crate::error::Result;
+use crate::error::{Error, Result};
 
 /// File-per-process writer rooted at a run directory.
 #[derive(Debug, Clone)]
@@ -54,6 +58,149 @@ impl FilePerProcess {
     }
 }
 
+// ---------------------------------------------------------------------------
+// raw little-endian f32 field I/O (streaming chain shape)
+// ---------------------------------------------------------------------------
+
+/// Points per conversion chunk: 64 KiB of bytes per `IoSlice`, small
+/// enough to keep the converted staging memory bounded, large enough to
+/// amortize the syscall.
+const CHUNK_POINTS: usize = 16 * 1024;
+
+/// Positioned reader over a raw little-endian `f32` file (the SZ dataset
+/// convention). Rewindable: the streaming compress chain scans it twice
+/// for value-range-relative error bounds.
+#[derive(Debug)]
+pub struct RawF32Reader {
+    file: File,
+    n_points: usize,
+    buf: Vec<u8>,
+}
+
+impl RawF32Reader {
+    /// Open a raw field file; its byte length must be a multiple of 4.
+    pub fn open(path: impl AsRef<Path>) -> Result<Self> {
+        let file = File::open(path.as_ref())?;
+        let bytes = file.metadata()?.len();
+        if bytes % 4 != 0 {
+            return Err(Error::InvalidArgument(format!(
+                "raw f32 file {} has {} bytes (not a multiple of 4)",
+                path.as_ref().display(),
+                bytes
+            )));
+        }
+        Ok(Self { file, n_points: (bytes / 4) as usize, buf: Vec::new() })
+    }
+
+    /// Number of `f32` points in the file.
+    pub fn n_points(&self) -> usize {
+        self.n_points
+    }
+
+    /// Fill `out` with the points starting at `point_offset`.
+    pub fn read_at(&mut self, point_offset: usize, out: &mut [f32]) -> Result<()> {
+        if point_offset + out.len() > self.n_points {
+            return Err(Error::InvalidArgument(format!(
+                "read of {} points at offset {} past file end ({} points)",
+                out.len(),
+                point_offset,
+                self.n_points
+            )));
+        }
+        self.file.seek(SeekFrom::Start(point_offset as u64 * 4))?;
+        self.buf.resize(out.len() * 4, 0);
+        self.file.read_exact(&mut self.buf)?;
+        for (v, b) in out.iter_mut().zip(self.buf.chunks_exact(4)) {
+            *v = f32::from_le_bytes(b.try_into().unwrap());
+        }
+        Ok(())
+    }
+}
+
+/// Positioned writer producing a raw little-endian `f32` file. Values are
+/// converted into fixed-size staging chunks and gathered with
+/// `write_vectored`, so a whole placed slab goes out in a handful of
+/// syscalls without a slab-sized byte copy.
+#[derive(Debug)]
+pub struct RawF32Writer {
+    file: File,
+}
+
+impl RawF32Writer {
+    /// Create (truncate) the output file.
+    pub fn create(path: impl AsRef<Path>) -> Result<Self> {
+        Ok(Self { file: File::create(path.as_ref())? })
+    }
+
+    /// Write `vals` at `point_offset`, converting chunk-by-chunk and
+    /// gathering the chunks in one `write_vectored` loop.
+    pub fn write_at(&mut self, point_offset: usize, vals: &[f32]) -> Result<()> {
+        if vals.is_empty() {
+            return Ok(());
+        }
+        self.file.seek(SeekFrom::Start(point_offset as u64 * 4))?;
+        let chunks: Vec<Vec<u8>> = vals
+            .chunks(CHUNK_POINTS)
+            .map(|c| {
+                let mut bytes = Vec::with_capacity(c.len() * 4);
+                for &v in c {
+                    bytes.extend_from_slice(&v.to_le_bytes());
+                }
+                bytes
+            })
+            .collect();
+        write_all_vectored(&mut self.file, &chunks)?;
+        Ok(())
+    }
+
+    /// Flush the underlying file.
+    pub fn flush(&mut self) -> Result<()> {
+        self.file.flush()?;
+        Ok(())
+    }
+}
+
+/// Drain `chunks` through `write_vectored`, resubmitting the remainder on
+/// short writes. (Hand-rolled rather than `IoSlice::advance_slices` to
+/// stay off recently-stabilized APIs.)
+fn write_all_vectored(file: &mut File, chunks: &[Vec<u8>]) -> Result<()> {
+    let mut ci = 0; // current chunk
+    let mut off = 0; // bytes of chunks[ci] already written
+    while ci < chunks.len() {
+        if chunks[ci].len() == off {
+            ci += 1;
+            off = 0;
+            continue;
+        }
+        let mut iov: Vec<IoSlice<'_>> = Vec::with_capacity(chunks.len() - ci);
+        iov.push(IoSlice::new(&chunks[ci][off..]));
+        for c in &chunks[ci + 1..] {
+            iov.push(IoSlice::new(c));
+        }
+        let n = file.write_vectored(&iov)?;
+        if n == 0 {
+            return Err(Error::Io(std::io::Error::new(
+                std::io::ErrorKind::WriteZero,
+                "write_vectored made no progress",
+            )));
+        }
+        // advance (ci, off) by n bytes
+        let mut rem = n;
+        while rem > 0 && ci < chunks.len() {
+            let left = chunks[ci].len() - off;
+            if rem >= left {
+                rem -= left;
+                ci += 1;
+                off = 0;
+            } else {
+                off += rem;
+                rem = 0;
+            }
+        }
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -77,5 +224,51 @@ mod tests {
         let fpp = FilePerProcess::new(&root).unwrap();
         assert!(fpp.read(9).is_err());
         fpp.cleanup().unwrap();
+    }
+
+    #[test]
+    fn raw_f32_positioned_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("ftsz_raw_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("field.f32");
+        let vals: Vec<f32> = (0..40_000).map(|i| (i as f32).sin()).collect();
+
+        // write out of order, in pieces, through the vectored path
+        let mut w = RawF32Writer::create(&path).unwrap();
+        w.write_at(10_000, &vals[10_000..]).unwrap();
+        w.write_at(0, &vals[..10_000]).unwrap();
+        w.flush().unwrap();
+        drop(w);
+
+        let mut r = RawF32Reader::open(&path).unwrap();
+        assert_eq!(r.n_points(), vals.len());
+        let mut back = vec![0.0f32; vals.len()];
+        r.read_at(0, &mut back).unwrap();
+        assert_eq!(back, vals);
+        // positioned partial read
+        let mut mid = vec![0.0f32; 17];
+        r.read_at(12_345, &mut mid).unwrap();
+        assert_eq!(mid, &vals[12_345..12_345 + 17]);
+        // reading past the end is a clean error
+        assert!(r.read_at(vals.len() - 1, &mut mid).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn write_all_vectored_handles_empty_and_many_chunks() {
+        let dir = std::env::temp_dir().join(format!("ftsz_rawv_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("v.f32");
+        // > CHUNK_POINTS forces multiple IoSlices in one call
+        let vals: Vec<f32> = (0..(CHUNK_POINTS * 3 + 5)).map(|i| i as f32).collect();
+        let mut w = RawF32Writer::create(&path).unwrap();
+        w.write_at(0, &[]).unwrap();
+        w.write_at(0, &vals).unwrap();
+        drop(w);
+        let mut r = RawF32Reader::open(&path).unwrap();
+        let mut back = vec![0.0f32; vals.len()];
+        r.read_at(0, &mut back).unwrap();
+        assert_eq!(back, vals);
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -96,6 +96,48 @@
 //! pins the plain sequential driver (a measurement knob, not a semantic
 //! one).
 //!
+//! ## Chain shapes: one driver layer, three ways to run a chain
+//!
+//! Both stage graphs (compress and decode, next sections) execute through
+//! a single generic driver layer (`compressor::chain`): the plain
+//! sequential driver, the 1-worker software pipeline, and the
+//! block-parallel fan-out are each written **once** and instantiated by
+//! the compress graph, the decode graph, and the xsz engine. Driver
+//! choice never changes bytes.
+//!
+//! The third chain *shape* is **streaming**: the same per-block chains
+//! fed from a [`compressor::stream::SlabSource`] (one z-slab of blocks
+//! resident at a time) and drained into a
+//! [`compressor::stream::SlabSink`], so fields larger than memory
+//! compress and decompress with bounded in-flight state — and the
+//! archive is **bit-identical** to the in-memory path:
+//!
+//! ```no_run
+//! use ftsz::compressor::{engine, stream, CompressionConfig, ErrorBound, Parallelism};
+//! use ftsz::data::Dims;
+//!
+//! let dims = Dims::d3(512, 512, 512);
+//! let cfg = CompressionConfig::new(ErrorBound::Rel(1e-3)).with_workers(8);
+//! // compress straight from a raw little-endian f32 file
+//! let mut src = stream::FileSource::open("velocity.bin", dims).unwrap();
+//! let archive = engine::compress_stream(&mut src, &cfg).unwrap();
+//! // decode straight into an output file (vectored writes, `io::posix`)
+//! let mut sink = stream::FileSink::create("velocity.out.bin").unwrap();
+//! engine::decompress_stream(&archive, &mut sink, Parallelism::Auto).unwrap();
+//! // ...or reduce without materializing anything (`ftsz stats`)
+//! let mut stats = stream::StatsSink::new();
+//! engine::decompress_stream(&archive, &mut stats, Parallelism::Auto).unwrap();
+//! println!("max = {}", stats.summary().max);
+//! ```
+//!
+//! Engines advertise the capability via
+//! [`compressor::stage::BlockCodec::supports_streaming`]; engines
+//! without a streaming core (classic `sz`) fall back to materializing
+//! the source. `ftrsz` archives stream-decode through the full
+//! Algorithm 2 verify chain ([`ft::decompress_stream`]), and the CLI
+//! exposes all of it as `ftsz compress/decompress --stream` and
+//! `ftsz stats`.
+//!
 //! ## The stage graph: one codec core, three engines
 //!
 //! Every engine is a parameterization of one explicit per-block stage

@@ -4,7 +4,8 @@
 //! ftsz gen-data   --profile nyx --edge 64 --seed 42 --out data/
 //! ftsz compress   --input f.bin --dims 64,64,64 --engine ftrsz \
 //!                 --error-bound 1e-3 --bound-kind rel --out f.ftsz
-//! ftsz decompress --input f.ftsz --out f.out.bin [--verify]
+//! ftsz decompress --input f.ftsz --out f.out.bin [--verify] [--stream]
+//! ftsz stats      --input f.ftsz --reference f.bin
 //! ftsz info       --input f.ftsz
 //! ftsz inject     --engine ftrsz --mode b --errors 1 --runs 100
 //! ftsz pipeline   [--config run.toml]
@@ -17,7 +18,7 @@ use std::collections::HashMap;
 use std::path::PathBuf;
 
 use ftsz::compressor::block::Region;
-use ftsz::compressor::{classic, engine, CompressionConfig, ErrorBound, Parallelism};
+use ftsz::compressor::{classic, engine, format, stream, CompressionConfig, ErrorBound, Parallelism};
 use ftsz::config::{types, ConfigDoc, PipelineConfig};
 use ftsz::coordinator::{run_pipeline, WorkItem};
 use ftsz::data::{synthetic, Dims, Field};
@@ -165,6 +166,7 @@ fn run(args: Vec<String>) -> Result<()> {
         "gen-data" => cmd_gen_data(&flags),
         "compress" => cmd_compress(&flags),
         "decompress" => cmd_decompress(&flags),
+        "stats" => cmd_stats(&flags),
         "info" => cmd_info(&flags),
         "scrub" => cmd_scrub(&flags),
         "inject" => cmd_inject(&flags),
@@ -184,10 +186,14 @@ fn print_usage() {
          commands:\n\
          \x20 gen-data   --profile nyx|hurricane|scale-letkf|pluto --edge N --seed S --out DIR\n\
          \x20 compress   --input RAW --dims D,R,C --engine sz|rsz|ftrsz|xsz|ftxsz\n\
-         \x20            --error-bound E [--workers N (0 = auto)]\n\
+         \x20            --error-bound E [--workers N (0 = auto)] [--stream]\n\
          \x20            [--archive-parity [GROUP_WIDTH]  (self-healing format v2)] --out FILE\n\
-         \x20 decompress --input FILE --out RAW [--verify] [--workers N] [--region z,y,x,dz,dy,dx]\n\
-         \x20            (--region composes with --verify: Alg. 2 per intersecting block)\n\
+         \x20            (--stream: slab-bounded memory, archive bit-identical to in-memory)\n\
+         \x20 decompress --input FILE --out RAW [--verify] [--workers N] [--stream]\n\
+         \x20            [--region z,y,x,dz,dy,dx]  (composes with --verify: Alg. 2 per block)\n\
+         \x20            (--stream: decoded blocks written straight to --out, bounded memory)\n\
+         \x20 stats      --input FILE [--reference RAW] [--lo L --hi H [--bins N]] [--workers N]\n\
+         \x20            (streaming min/max/mean/RMS; PSNR vs reference; optional histogram)\n\
          \x20 info       --input FILE\n\
          \x20 scrub      --input FILE [--dry-run]   (heal a v2 archive in place from parity)\n\
          \x20 inject     --engine E --mode a-input|a-bin|b|c --errors N --runs R [--edge N]\n\
@@ -226,9 +232,32 @@ fn load_input(f: &Flags) -> Result<Field> {
 }
 
 fn cmd_compress(f: &Flags) -> Result<()> {
-    let field = load_input(f)?;
     let cfg = compression_config(f)?;
     let engine_kind = engine_of(f)?;
+    // --stream: chain shape 3 — read/quantize one slab at a time so the
+    // input is never materialized (needs a real file, so no synthetic
+    // fallback here)
+    if f.has("stream") {
+        let path = f.required("input")?;
+        let dims = parse_dims(f.required("dims")?)?;
+        let mut src = stream::FileSource::open(path, dims)?;
+        let t = std::time::Instant::now();
+        let bytes = engine_kind.codec().compress_stream(&mut src, &cfg)?;
+        let secs = t.elapsed().as_secs_f64();
+        let out = f.str_or("out", "out.ftsz");
+        std::fs::write(&out, &bytes)?;
+        println!(
+            "{} (streaming): {} points -> {} bytes (ratio {:.2}, {:.1} MB/s) -> {}",
+            engine_kind.name(),
+            dims.len(),
+            bytes.len(),
+            analysis::compression_ratio(dims.len(), bytes.len()),
+            dims.len() as f64 * 4.0 / secs / 1e6,
+            out
+        );
+        return Ok(());
+    }
+    let field = load_input(f)?;
     let t = std::time::Instant::now();
     // one dispatch for every engine: the unified BlockCodec
     let bytes = engine_kind.codec().compress(&field.data, field.dims, &cfg)?;
@@ -268,6 +297,34 @@ fn cmd_decompress(f: &Flags) -> Result<()> {
     let path = f.required("input")?;
     let bytes = std::fs::read(path)?;
     let par = parallelism_of(f)?;
+    // --stream: place decoded blocks straight into the output file via
+    // the vectored writer, never materializing the array
+    if f.has("stream") {
+        if f.has("region") {
+            return Err(Error::Config(
+                "--stream and --region cannot be combined (region decode is already bounded)"
+                    .into(),
+            ));
+        }
+        let out = f.str_or("out", "out.bin");
+        let mut sink = stream::FileSink::create(&out)?;
+        let t = std::time::Instant::now();
+        let res = if f.has("verify") {
+            // Algorithm 2 per block, streamed
+            ft::decompress_stream(&bytes, &mut sink, par)?
+        } else {
+            engine::decompress_stream(&bytes, &mut sink, par)?
+        };
+        print_report(&res.report);
+        println!(
+            "decompressed {} points in {:.3}s (streaming, {}) -> {}",
+            res.dims.len(),
+            t.elapsed().as_secs_f64(),
+            if f.has("verify") { "verified" } else { "unverified" },
+            out
+        );
+        return Ok(());
+    }
     if let Some(region) = f.get("region") {
         let parts: Vec<usize> = region
             .split(',')
@@ -327,6 +384,69 @@ fn cmd_decompress(f: &Flags) -> Result<()> {
         if f.has("verify") { "verified" } else { "unverified" },
         out
     );
+    Ok(())
+}
+
+/// `ftsz stats` — streaming reductions over a decoded archive (min/max/
+/// mean/RMS, optional PSNR vs a reference raw file, optional histogram)
+/// without ever materializing the decoded array.
+fn cmd_stats(f: &Flags) -> Result<()> {
+    let bytes = std::fs::read(f.required("input")?)?;
+    let par = parallelism_of(f)?;
+    if f.has("lo") || f.has("hi") {
+        let lo = f.f64_or("lo", 0.0)?;
+        let hi = f.f64_or("hi", 1.0)?;
+        let bins = f.usize_or("bins", 16)?;
+        let mut sink = stream::HistogramSink::new(lo, hi, bins)?;
+        let t = std::time::Instant::now();
+        let out = engine::decompress_stream(&bytes, &mut sink, par)?;
+        print_report(&out.report);
+        println!(
+            "histogram of {} decoded points over [{lo}, {hi}] in {:.3}s:",
+            out.dims.len(),
+            t.elapsed().as_secs_f64()
+        );
+        let width = (hi - lo) / bins as f64;
+        for (i, c) in sink.counts().iter().enumerate() {
+            println!(
+                "  [{:+.4e}, {:+.4e}]  {c}",
+                lo + i as f64 * width,
+                lo + (i + 1) as f64 * width
+            );
+        }
+        let (below, above) = sink.outliers();
+        println!("  out of range: {below} below / {above} above");
+        return Ok(());
+    }
+    let mut sink = match f.get("reference") {
+        Some(r) => {
+            // the reference raw file is shaped by the archive's own header
+            let dims = format::peek_header(&bytes)?.dims;
+            stream::StatsSink::with_reference(stream::FileSource::open(r, dims)?)
+        }
+        None => stream::StatsSink::new(),
+    };
+    let t = std::time::Instant::now();
+    let out = engine::decompress_stream(&bytes, &mut sink, par)?;
+    print_report(&out.report);
+    let s = sink.summary();
+    println!(
+        "{} decoded points in {:.3}s: min {:.6e} max {:.6e} mean {:.6e} rms {:.6e}",
+        s.n,
+        t.elapsed().as_secs_f64(),
+        s.min,
+        s.max,
+        s.mean,
+        s.rms
+    );
+    if let Some(e) = s.max_abs_err {
+        let psnr = match s.psnr_db {
+            Some(p) if p.is_finite() => format!("{p:.2} dB"),
+            Some(_) => "inf (exact match)".to_string(),
+            None => "n/a (flat reference)".to_string(),
+        };
+        println!("vs reference: max |err| {e:.6e}, psnr {psnr}");
+    }
     Ok(())
 }
 

@@ -114,6 +114,68 @@ fn classic_bytes_match_pre_refactor_reference() {
 }
 
 #[test]
+fn streaming_bytes_match_pre_refactor_reference() {
+    // Chain shape 3 rides the same golden contract: the slab-streaming
+    // compress path must emit the pre-refactor reference bytes on every
+    // driver (sequential / pipelined / parallel), for v1 and v2. The
+    // xsz pair has no pre-refactor monolith, so its streaming bytes are
+    // pinned to the in-memory path plus a blessable fixture.
+    use ftsz::compressor::stream::SliceSource;
+    use ftsz::inject::Engine;
+    let (data, dims) = field();
+    for parity in [false, true] {
+        let version = if parity { "v2" } else { "v1" };
+        let base = cfg(parity);
+        let cases: Vec<(&str, &dyn ftsz::compressor::stage::BlockCodec, Vec<u8>)> = vec![
+            (
+                "rsz",
+                Engine::RandomAccess.codec(),
+                legacy::rsz_ftrsz_compress(&data, dims, &base, false),
+            ),
+            (
+                "ftrsz",
+                Engine::FaultTolerant.codec(),
+                legacy::rsz_ftrsz_compress(&data, dims, &base, true),
+            ),
+            ("sz", Engine::Classic.codec(), legacy::classic_compress(&data, dims, &base)),
+        ];
+        for (name, codec, want) in &cases {
+            for w in [1usize, 2, 4] {
+                for overlap in [true, false] {
+                    let c = base.clone().with_workers(w).with_stage_overlap(overlap);
+                    let mut src = SliceSource::new(dims, &data).unwrap();
+                    let got = codec.compress_stream(&mut src, &c).unwrap();
+                    assert_eq!(
+                        &got, want,
+                        "{name} {version} streaming at {w} workers (overlap={overlap}) \
+                         differs from the pre-refactor reference"
+                    );
+                }
+            }
+        }
+        for e in [Engine::UltraFast, Engine::UltraFastFT] {
+            let codec = e.codec();
+            let want = codec.compress(&data, dims, &base).unwrap();
+            for w in [1usize, 2, 4] {
+                for overlap in [true, false] {
+                    let c = base.clone().with_workers(w).with_stage_overlap(overlap);
+                    let mut src = SliceSource::new(dims, &data).unwrap();
+                    let got = codec.compress_stream(&mut src, &c).unwrap();
+                    assert_eq!(
+                        got,
+                        want,
+                        "{} {version} streaming at {w} workers (overlap={overlap}) \
+                         differs from the in-memory path",
+                        e.name()
+                    );
+                }
+            }
+            fixture_check(&format!("golden_stream_{}_{version}.bin", e.name()), &want);
+        }
+    }
+}
+
+#[test]
 fn legacy_reference_archives_decode_within_bound() {
     // sanity for the reference itself: its bytes are real archives
     let (data, dims) = field();

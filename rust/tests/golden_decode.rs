@@ -154,6 +154,79 @@ fn region_decode_bit_identical_across_drivers_and_matches_full_slice() {
 }
 
 #[test]
+fn streaming_decode_bit_identical_across_drivers_engines_and_formats() {
+    // Chain shape 3 on the decode side: blocks committed straight into a
+    // sink must carry the very same bits as the materializing decode, on
+    // every driver, verified and not, v1 and v2, for all four per-block
+    // engines — and the placement must cover every point exactly.
+    use ftsz::compressor::stream::VecSink;
+    let f = field();
+    for parity in [false, true] {
+        for e in [
+            Engine::RandomAccess,
+            Engine::FaultTolerant,
+            Engine::UltraFast,
+            Engine::UltraFastFT,
+        ] {
+            let bytes = e.codec().compress(&f.data, f.dims, &cfg(parity)).unwrap();
+            let reference =
+                destage::decode_with_driver(&bytes, false, None, DecodeDriver::Sequential)
+                    .unwrap();
+            let verify_modes: &[bool] =
+                if e.codec().supports_verify() { &[false, true] } else { &[false] };
+            for &v in verify_modes {
+                for driver in DRIVERS {
+                    let mut sink = VecSink::new(f.dims.len());
+                    let out =
+                        destage::decode_stream_with_driver(&bytes, &mut sink, v, driver)
+                            .unwrap();
+                    assert_eq!(out.dims, f.dims);
+                    assert!(out.report.is_clean());
+                    assert_eq!(
+                        bits(&sink.into_data()),
+                        bits(&reference.data),
+                        "{} parity={parity} verify={v} {driver:?} streaming",
+                        e.name()
+                    );
+                }
+            }
+            // the public worker-count streaming APIs agree as well
+            for w in [1usize, 2, 4] {
+                let mut sink = VecSink::new(f.dims.len());
+                engine::decompress_stream(&bytes, &mut sink, Parallelism::from_workers(w))
+                    .unwrap();
+                assert_eq!(
+                    bits(&sink.into_data()),
+                    bits(&reference.data),
+                    "{} parity={parity} w={w} streaming",
+                    e.name()
+                );
+                if e.codec().supports_verify() {
+                    let mut sink = VecSink::new(f.dims.len());
+                    let out =
+                        ft::decompress_stream(&bytes, &mut sink, Parallelism::from_workers(w))
+                            .unwrap();
+                    assert!(out.report.is_clean());
+                    assert_eq!(
+                        bits(&sink.into_data()),
+                        bits(&reference.data),
+                        "{} parity={parity} w={w} verified streaming",
+                        e.name()
+                    );
+                }
+            }
+        }
+        // classic streams through the documented materializing fallback
+        let bytes = Engine::Classic.codec().compress(&f.data, f.dims, &cfg(parity)).unwrap();
+        let want = classic::decompress(&bytes).unwrap();
+        let mut sink = VecSink::new(f.dims.len());
+        let out = engine::decompress_stream(&bytes, &mut sink, Parallelism::Fixed(4)).unwrap();
+        assert_eq!(out.dims, f.dims);
+        assert_eq!(bits(&sink.into_data()), bits(&want.data), "classic streaming fallback");
+    }
+}
+
+#[test]
 fn v2_repairs_are_reported_as_stripes_on_every_decode_path() {
     let f = field();
     let bytes = ft::compress(&f.data, f.dims, &cfg(true)).unwrap();

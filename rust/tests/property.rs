@@ -429,6 +429,82 @@ fn prop_unified_codec_dispatch_all_engines() {
 }
 
 #[test]
+fn prop_streaming_equals_in_memory_all_engines() {
+    // Chain shape 3: the slab-streaming compress path must emit the very
+    // same bytes as the in-memory path — every engine (classic goes
+    // through the documented materializing fallback), {1, 2, 4} workers,
+    // v1 and parity-v2 containers — and the streaming decode must place
+    // the very same bits the materializing decode returns.
+    use ftsz::compressor::stream::{SliceSource, VecSink};
+    use ftsz::ft::parity::ParityParams;
+    use ftsz::inject::Engine;
+    forall("streaming == in-memory (bytes and bits)", 10, |g| {
+        let dims = Dims::d3(g.usize_in(2, 6), g.usize_in(2, 10), g.usize_in(2, 10));
+        let mut data = Vec::with_capacity(dims.len());
+        let mut v = g.f64_in(-5.0, 5.0);
+        for _ in 0..dims.len() {
+            v += g.f64_in(-0.3, 0.3);
+            data.push(v as f32);
+        }
+        let mut cfg =
+            CompressionConfig::new(ErrorBound::Abs(1e-3)).with_block_size(g.usize_in(2, 8));
+        if g.usize_in(0, 1) == 1 {
+            cfg = cfg.with_archive_parity(ParityParams { stripe_len: 64, group_width: 8 });
+        }
+        for e in Engine::ALL {
+            let codec = e.codec();
+            for w in [1usize, 2, 4] {
+                let wcfg = cfg.clone().with_workers(w);
+                let mem = codec.compress(&data, dims, &wcfg).map_err(|x| x.to_string())?;
+                let mut src = SliceSource::new(dims, &data).map_err(|x| x.to_string())?;
+                let strm =
+                    codec.compress_stream(&mut src, &wcfg).map_err(|x| x.to_string())?;
+                if mem != strm {
+                    return Err(format!("{} streaming bytes differ at {w} workers", e.name()));
+                }
+                // streaming decode places the same bits the materializing
+                // decode returns
+                let full = codec
+                    .decompress(&mem, Parallelism::Fixed(w))
+                    .map_err(|x| x.to_string())?;
+                let mut sink = VecSink::new(dims.len());
+                let out = engine::decompress_stream(&mem, &mut sink, Parallelism::Fixed(w))
+                    .map_err(|x| format!("{} stream decode: {x}", e.name()))?;
+                if out.dims != dims {
+                    return Err(format!("{} stream decode dims {:?}", e.name(), out.dims));
+                }
+                let placed = sink.into_data();
+                if !placed.iter().zip(&full.data).all(|(a, b)| a.to_bits() == b.to_bits()) {
+                    return Err(format!(
+                        "{} streaming decode differs at {w} workers",
+                        e.name()
+                    ));
+                }
+                // ft archives also stream through the Algorithm 2 chain
+                if codec.supports_verify() {
+                    let mut vsink = VecSink::new(dims.len());
+                    let vout =
+                        ftsz::ft::decompress_stream(&mem, &mut vsink, Parallelism::Fixed(w))
+                            .map_err(|x| x.to_string())?;
+                    if !vout.report.is_clean() {
+                        return Err(format!(
+                            "{} clean stream-verify reported events",
+                            e.name()
+                        ));
+                    }
+                    let vplaced = vsink.into_data();
+                    if !vplaced.iter().zip(&full.data).all(|(a, b)| a.to_bits() == b.to_bits())
+                    {
+                        return Err(format!("{} verified streaming decode differs", e.name()));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_decode_drivers_bit_identical() {
     // the decode-graph tentpole invariant: sequential / pipelined /
     // block-parallel drivers are bit-interchangeable for full, verified

@@ -37,7 +37,7 @@ def main() -> int:
         commit = os.environ.get("GITHUB_SHA", "unknown")[:9]
 
     date = datetime.date.today().isoformat()
-    row = "| {} | {} | {} | {} | {} | {} | {} | {} | {} | {} | {} | {} | {} |\n".format(
+    row = "| {} | {} | {} | {} | {} | {} | {} | {} | {} | {} | {} | {} | {} | {} | {} |\n".format(
         date,
         commit,
         v("rsz.compress_mbps"),
@@ -51,6 +51,8 @@ def main() -> int:
         v("dstage.ftrsz.speedup", "{:.2f}"),
         v("dstage.region_verified.w1_mbps"),
         v("parity.size_overhead_pct", "{:.2f}"),
+        v("stream.rsz.compress_vs_inmem", "{:.2f}"),
+        v("stream.rsz.decompress_vs_inmem", "{:.2f}"),
     )
     with open(exp_path, "a") as f:
         f.write(row)
