@@ -58,6 +58,9 @@
 //! stage's job; both repairs are surfaced separately in the report
 //! (`blocks_reexecuted` vs. `stripes_repaired`).
 
+// decode-path panic-freedom, statically enforced (ftlint R1 + clippy)
+#![cfg_attr(not(test), deny(clippy::unwrap_used, clippy::expect_used))]
+
 use std::time::Instant;
 
 use super::block::{BlockGrid, Region};
@@ -224,7 +227,10 @@ pub(crate) fn decode_block<H: DecompressHooks>(
         // recover stage work on xsz archives unchanged.
         return super::xsz::decode_block(archive, grid, idx, hooks, apply_hooks, out_block);
     }
-    let meta = &archive.metas[idx];
+    let meta = archive
+        .metas
+        .get(idx)
+        .ok_or_else(|| Error::CrashEquivalent(format!("block index {idx} out of range")))?;
     let e = grid.extent(idx);
     let shape = e.shape;
     let n = e.len();
@@ -244,6 +250,7 @@ pub(crate) fn decode_block<H: DecompressHooks>(
         );
     }
     out_block.clear();
+    // ftlint::allow(r5, "n is one block's extent.len() from the validated grid — total points already capped by MAX_DECODED_POINTS at parse")
     out_block.resize(n, 0.0);
     let payload = archive.block_payload(idx);
     let mut r = BitReader::with_limit(payload, meta.payload_bits as usize)?;
@@ -278,7 +285,13 @@ pub(crate) fn decode_block<H: DecompressHooks>(
                             lorenzo::predict(&view, z, y, x)
                         }
                         Predictor::Regression => regression::predict(&meta.coeffs, z, y, x),
-                        Predictor::DualQuant => unreachable!("handled above"),
+                        // dispatched to offload::decode_block above; a
+                        // corrupt tag reaching here must fail cleanly
+                        Predictor::DualQuant => {
+                            return Err(Error::CrashEquivalent(format!(
+                                "block {idx}: dual-quant tag in scalar decode path"
+                            )))
+                        }
                     };
                     let pred =
                         if apply_hooks { hooks.corrupt_pred(idx, p, pred) } else { pred };
@@ -314,12 +327,19 @@ fn verify_stage(ctx: &DecodeCtx, bi: usize, block: &mut Vec<f32>) -> Result<bool
     if !ctx.verify {
         return Ok(false);
     }
-    let sums = ctx.archive.sum_dc.as_ref().expect("verify requires sum_dc");
-    if checksum::checksum_f32(block).sum == sums[bi] {
+    // run() rejects verify-without-sum_dc up front; a None here would be a
+    // driver bug, reported as a clean crash-equivalent, never a panic
+    let sums = ctx.archive.sum_dc.as_ref().ok_or_else(|| {
+        Error::CrashEquivalent("verify_stage reached without sum_dc".into())
+    })?;
+    let stored = *sums
+        .get(bi)
+        .ok_or_else(|| Error::CrashEquivalent(format!("block {bi}: sum_dc table too short")))?;
+    if checksum::checksum_f32(block).sum == stored {
         return Ok(false);
     }
     decode_block(ctx.archive, ctx.grid, ctx.q, bi, &mut NoDecompressHooks, false, block)?;
-    if checksum::checksum_f32(block).sum != sums[bi] {
+    if checksum::checksum_f32(block).sum != stored {
         return Err(Error::SdcInCompression(format!("block {bi}")));
     }
     Ok(true)
@@ -460,6 +480,7 @@ fn run<H: DecompressHooks>(
         None => (archive.header.dims.len(), archive.header.dims),
         Some(r) => (r.len(), Dims::d3(r.shape.0, r.shape.1, r.shape.2)),
     };
+    // ftlint::allow(r5, "out_len is dims.len() or region.len(), both bounded by the MAX_DECODED_POINTS header validation")
     let mut out = vec![0.0f32; out_len];
     let mut report = DecompressReport::default();
     if let Some(rec) = &archive.recovered {

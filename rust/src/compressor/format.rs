@@ -41,6 +41,9 @@
 //! unpredictable count and payload bit length — everything random-access
 //! decompression needs to decode one block in isolation (paper §5.1).
 
+// decode-path panic-freedom, statically enforced (ftlint R1 + clippy)
+#![cfg_attr(not(test), deny(clippy::unwrap_used, clippy::expect_used))]
+
 use super::huffman::HuffmanTable;
 use super::lossless::{self, Codec};
 use super::Predictor;
@@ -188,11 +191,13 @@ pub struct Archive {
 impl Archive {
     /// The payload byte range of one block (random-access archives).
     pub fn block_payload(&self, idx: usize) -> &[u8] {
+        // ftlint::allow(r1, "offsets are monotone prefix sums ending at payload.len(), built and length-checked in assemble; idx is a block index < n_blocks")
         &self.payload[self.payload_offsets[idx]..self.payload_offsets[idx + 1]]
     }
 
     /// The unpredictable values of one block.
     pub fn block_unpred(&self, idx: usize) -> &[f32] {
+        // ftlint::allow(r1, "offsets are monotone prefix sums ending at unpred.len(), built and length-checked in assemble; idx is a block index < n_blocks")
         &self.unpred[self.unpred_offsets[idx]..self.unpred_offsets[idx + 1]]
     }
 }
@@ -529,24 +534,28 @@ pub(crate) fn read_v2_prelude(data: &[u8]) -> Result<V2Prelude> {
             data.len()
         )));
     }
-    if &data[..4] != MAGIC {
+    if data.get(..4) != Some(&MAGIC[..]) {
         return Err(Error::Format("bad magic".into()));
     }
-    if u32::from_le_bytes(data[4..8].try_into().unwrap()) != VERSION_V2 {
+    let version = data.get(4..8).map(bytes::u32_le).transpose()?;
+    if version != Some(VERSION_V2) {
         return Err(Error::Format("not a v2 archive".into()));
     }
     const STRIDE: usize = V2_HEADER_BODY_LEN + 4;
-    fn copy(data: &[u8], i: usize) -> (&[u8], u32) {
+    fn copy(data: &[u8], i: usize) -> Result<(&[u8], u32)> {
         let start = 8 + i * STRIDE;
-        let body = &data[start..start + V2_HEADER_BODY_LEN];
-        let crc = u32::from_le_bytes(
-            data[start + V2_HEADER_BODY_LEN..start + STRIDE].try_into().unwrap(),
-        );
-        (body, crc)
+        let body = data
+            .get(start..start + V2_HEADER_BODY_LEN)
+            .ok_or_else(|| Error::Format("truncated v2 header copy".into()))?;
+        let crc = bytes::u32_le(
+            data.get(start + V2_HEADER_BODY_LEN..start + STRIDE)
+                .ok_or_else(|| Error::Format("truncated v2 header crc".into()))?,
+        )?;
+        Ok((body, crc))
     }
     let mut body: Option<Vec<u8>> = None;
     for i in 0..3 {
-        let (b, crc) = copy(data, i);
+        let (b, crc) = copy(data, i)?;
         if crc32(b) == crc {
             body = Some(b.to_vec());
             break;
@@ -557,9 +566,9 @@ pub(crate) fn read_v2_prelude(data: &[u8]) -> Result<V2Prelude> {
         None => {
             // every copy individually damaged: bitwise-majority vote (the
             // vote also covers the stored CRCs, which then must confirm)
-            let (b0, c0) = copy(data, 0);
-            let (b1, c1) = copy(data, 1);
-            let (b2, c2) = copy(data, 2);
+            let (b0, c0) = copy(data, 0)?;
+            let (b1, c1) = copy(data, 1)?;
+            let (b2, c2) = copy(data, 2)?;
             let voted: Vec<u8> = (0..V2_HEADER_BODY_LEN)
                 .map(|j| majority(b0[j], b1[j], b2[j]))
                 .collect();
@@ -677,7 +686,10 @@ pub(crate) fn parse_v2_with(data: &[u8], pre: V2Prelude, verify_crcs: bool) -> R
     const NAMES: [&str; 4] = ["meta", "unpred", "payload", "ft"];
     let mut bodies: [&[u8]; 4] = [&[]; 4];
     for i in 0..4 {
-        let s = &data[pre.section_start(i)..pre.section_start(i) + pre.lens[i]];
+        let start = pre.section_start(i);
+        let s = data
+            .get(start..start + pre.lens[i])
+            .ok_or_else(|| Error::Format(format!("{} section out of bounds", NAMES[i])))?;
         if verify_crcs && crc32(s) != pre.crcs[i] {
             return Err(Error::Format(format!(
                 "{} section CRC mismatch (archive corrupt; parity recovery not attempted \
@@ -714,6 +726,7 @@ fn assemble(
     // ---- meta ----
     let mut mc = Cursor::new(&meta_raw);
     let table = HuffmanTable::deserialize(&mut mc)?;
+    // ftlint::allow(r5, "n_blocks is validated against dims.len() (and the MAX_DECODED_POINTS cap) in read_core_fields before any parse reaches assemble")
     let mut metas = Vec::with_capacity(n_blocks as usize);
     for _ in 0..n_blocks {
         let tag = mc.bytes(1)?[0];
@@ -738,10 +751,7 @@ fn assemble(
     if unpred_raw.len() % 4 != 0 {
         return Err(Error::Format("unpred section not a multiple of 4".into()));
     }
-    let unpred: Vec<f32> = unpred_raw
-        .chunks_exact(4)
-        .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
-        .collect();
+    let unpred: Vec<f32> = unpred_raw.chunks_exact(4).map(bytes::f32_le).collect::<Result<_>>()?;
     let mut unpred_offsets = Vec::with_capacity(metas.len() + 1);
     let mut acc = 0usize;
     unpred_offsets.push(0);
@@ -773,10 +783,9 @@ fn assemble(
                 .ok_or_else(|| Error::Format("payload overflow".into()))?;
             payload_offsets.push(off);
         }
-        if *payload_offsets.last().unwrap() != payload.len() {
+        if off != payload.len() {
             return Err(Error::Format(format!(
-                "payload bits imply {} bytes, stored {}",
-                payload_offsets.last().unwrap(),
+                "payload bits imply {off} bytes, stored {}",
                 payload.len()
             )));
         }
@@ -788,11 +797,7 @@ fn assemble(
             if raw.len() != 8 * metas.len() {
                 return Err(Error::Format("ft section size mismatch".into()));
             }
-            Some(
-                raw.chunks_exact(8)
-                    .map(|b| u64::from_le_bytes(b.try_into().unwrap()))
-                    .collect(),
-            )
+            Some(raw.chunks_exact(8).map(bytes::u64_le).collect::<Result<_>>()?)
         }
         None => None,
     };
@@ -1178,5 +1183,58 @@ mod tests {
                 assert!(parse(&bad).is_ok(), "parity-section flip at {off} broke parse");
             }
         }
+    }
+
+    #[test]
+    fn truncated_v1_archive_errors_at_every_prefix() {
+        let table = tiny_table();
+        let unpred = [7.5f32, -2.0];
+        let sums = [42u64, u64::MAX];
+        let mut w = sample_writer(&table, &unpred);
+        w.sum_dc = Some(&sums);
+        let good = w.write().unwrap();
+        assert!(parse(&good).is_ok());
+        for len in 0..good.len() {
+            assert!(
+                parse(&good[..len]).is_err(),
+                "v1 prefix of {len}/{} bytes parsed",
+                good.len()
+            );
+        }
+    }
+
+    #[test]
+    fn truncated_v2_archive_errors_at_every_prefix() {
+        let table = tiny_table();
+        let unpred = [7.5f32, -2.0];
+        let mut w = sample_writer(&table, &unpred);
+        w.parity = Some(ParityParams { stripe_len: 32, group_width: 4 });
+        let good = w.write().unwrap();
+        assert!(parse(&good).is_ok());
+        // every prefix walks a different failure edge: inside the magic,
+        // inside the triplicated header copies, at each section boundary,
+        // and mid-parity; all must be clean `Err`s, never panics
+        for len in 0..good.len() {
+            assert!(
+                parse(&good[..len]).is_err(),
+                "v2 prefix of {len}/{} bytes parsed",
+                good.len()
+            );
+        }
+    }
+
+    #[test]
+    fn truncated_v2_headers_error_in_prelude() {
+        let table = tiny_table();
+        let unpred = [7.5f32, -2.0];
+        let mut w = sample_writer(&table, &unpred);
+        w.parity = Some(ParityParams { stripe_len: 32, group_width: 4 });
+        let good = w.write().unwrap();
+        // cuts that land inside the redundant header region must be
+        // rejected by the prelude reader itself
+        for len in 0..V2_BODY_START.min(good.len()) {
+            assert!(read_v2_prelude(&good[..len]).is_err(), "prelude parsed at {len} bytes");
+        }
+        assert!(read_v2_prelude(&good).is_ok());
     }
 }

@@ -72,7 +72,6 @@ impl HuffmanTable {
 
     /// Build from an explicit length array (deserialization path).
     pub fn from_lengths(lengths: Vec<u8>) -> Result<Self> {
-        let n = lengths.len();
         let mut count_per_len = [0u32; MAX_CODE_LEN as usize + 1];
         for &l in &lengths {
             if l > MAX_CODE_LEN {
@@ -106,8 +105,9 @@ impl HuffmanTable {
             acc += count_per_len[l];
         }
         let mut next_index = first_index;
+        // ftlint::allow(r5, "acc counts the nonzero entries of lengths, so acc <= lengths.len()")
         let mut sorted_symbols = vec![0u32; acc as usize];
-        let mut codes = vec![0u32; n];
+        let mut codes = vec![0u32; lengths.len()];
         let mut next_code = first_code;
         for (sym, &l) in lengths.iter().enumerate() {
             if l == 0 {
@@ -236,6 +236,7 @@ impl HuffmanTable {
             return Err(Error::Format(format!("huffman table too large: {n}")));
         }
         let n_runs = c.u32()? as usize;
+        // ftlint::allow(r5, "n is rejected above when it exceeds the 2^24 symbol cap")
         let mut lengths = Vec::with_capacity(n);
         for _ in 0..n_runs {
             let count = c.u32()? as usize;

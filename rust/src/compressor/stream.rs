@@ -488,7 +488,11 @@ impl<'a> SlabCursor<'a> {
             self.grid = Some(BlockGrid::new(Dims::d3(sz, self.ny, self.nx), self.b)?);
             self.loaded = Some(w);
         }
-        Ok((self.grid.as_ref().expect("slab grid loaded"), &self.buf))
+        let grid = self
+            .grid
+            .as_ref()
+            .ok_or_else(|| Error::Runtime("slab grid missing after load".into()))?;
+        Ok((grid, &self.buf))
     }
 
     /// Resolve global block `i` to (slab-local index, local grid, slab
@@ -548,6 +552,7 @@ impl<'a> StreamPlacer<'a> {
         let z0 = w * self.b;
         let sz = self.b.min(self.nz - z0);
         self.buf.clear();
+        // ftlint::allow(r5, "one slab: at most block_size z-planes of the header-validated (MAX_DECODED_POINTS-capped) dims")
         self.buf.resize(sz * self.ny * self.nx, 0.0);
         self.grid = Some(BlockGrid::new(Dims::d3(sz, self.ny, self.nx), self.b)?);
         self.cur = Some(w);
@@ -570,7 +575,11 @@ impl<'a> StreamPlacer<'a> {
             self.open_slab(w)?;
         }
         let j = bi % self.blocks_per_slab;
-        self.grid.as_ref().expect("slab grid open").scatter(block, j, &mut self.buf);
+        let grid = self
+            .grid
+            .as_ref()
+            .ok_or_else(|| Error::Runtime("slab grid not open in place".into()))?;
+        grid.scatter(block, j, &mut self.buf);
         Ok(())
     }
 

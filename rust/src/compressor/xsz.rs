@@ -1002,6 +1002,7 @@ pub(crate) fn decode_block<H: DecompressHooks>(
 ) -> Result<()> {
     let n = grid.extent(idx).len();
     out_block.clear();
+    // ftlint::allow(r5, "n is one block's extent.len() from the validated grid — total points capped by MAX_DECODED_POINTS at parse")
     out_block.resize(n, 0.0);
     let payload = archive.block_payload(idx);
     let unpred_vals = archive.block_unpred(idx);

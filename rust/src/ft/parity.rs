@@ -31,6 +31,9 @@
 //! *introduces* corruption; when it cannot prove a clean result it
 //! reports an unrecoverable (but detected) archive instead.
 
+// decode-path panic-freedom, statically enforced (ftlint R1 + clippy)
+#![cfg_attr(not(test), deny(clippy::unwrap_used, clippy::expect_used))]
+
 use crate::compressor::format::{self, Archive, MAGIC, VERSION_V2, V2_BODY_START};
 use crate::error::{Error, Result};
 use crate::util::bits::bytes;
@@ -117,10 +120,12 @@ pub(crate) fn build(protected: &[u8], p: &ParityParams) -> Vec<u8> {
     body
 }
 
-/// Stripe `i` of the protected region (the tail stripe may be short).
+/// Stripe `i` of the protected region (the tail stripe may be short; an
+/// out-of-range index yields the empty stripe rather than panicking).
 fn stripe_of(protected: &[u8], i: usize, stripe: usize) -> &[u8] {
     let start = i * stripe;
-    &protected[start..protected.len().min(start + stripe)]
+    let end = protected.len().min(start.saturating_add(stripe));
+    protected.get(start..end).unwrap_or(&[])
 }
 
 /// What [`recover`] repaired.
@@ -169,9 +174,12 @@ pub fn recover(data: &[u8]) -> Result<Recovery> {
 
 /// True when the bytes carry the v2 magic + version.
 fn looks_v2(data: &[u8]) -> bool {
-    data.len() >= 8
-        && &data[..4] == MAGIC
-        && u32::from_le_bytes(data[4..8].try_into().unwrap()) == VERSION_V2
+    data.get(..4) == Some(&MAGIC[..]) && u32_at(data, 4) == Some(VERSION_V2)
+}
+
+/// `u32` little-endian at byte offset `off`, when in bounds.
+fn u32_at(b: &[u8], off: usize) -> Option<u32> {
+    b.get(off..off.checked_add(4)?).and_then(|s| s.try_into().ok()).map(u32::from_le_bytes)
 }
 
 /// [`recover`] against an already-voted prelude (lets
@@ -182,7 +190,11 @@ fn recover_with(data: &[u8], pre: &format::V2Prelude) -> Result<Recovery> {
         // missing ones — let strict parsing report the length mismatch
         return Ok(Recovery::Unprotected);
     }
-    let section = |i: usize| &data[pre.section_start(i)..pre.section_start(i) + pre.lens[i]];
+    // expected_len == data.len() holds here, so every section range is in
+    // bounds; an empty fallback would only ever turn a bug into a CRC fail
+    let section = |i: usize| {
+        data.get(pre.section_start(i)..pre.section_start(i) + pre.lens[i]).unwrap_or(&[])
+    };
     let bad_sections: Vec<usize> = (0..4).filter(|&i| crc32(section(i)) != pre.crcs[i]).collect();
     if bad_sections.is_empty() {
         return Ok(Recovery::Clean);
@@ -200,30 +212,42 @@ fn recover_with(data: &[u8], pre: &format::V2Prelude) -> Result<Recovery> {
     let n = pre.params.n_stripes(protected_len);
     let g = pre.params.n_groups(n);
     if parity_body.len() != 8 + 4 * n + g * stripe
-        || u32::from_le_bytes(parity_body[0..4].try_into().unwrap()) != n as u32
-        || u32::from_le_bytes(parity_body[4..8].try_into().unwrap()) != g as u32
+        || u32_at(parity_body, 0) != Some(n as u32)
+        || u32_at(parity_body, 4) != Some(g as u32)
     {
         return Err(Error::Sdc("parity section geometry mismatch — unrecoverable".into()));
     }
-    let stripe_crcs: Vec<u32> = parity_body[8..8 + 4 * n]
+    let stripe_crcs: Vec<u32> = parity_body
+        .get(8..8 + 4 * n)
+        .ok_or_else(|| Error::Sdc("parity section truncated — unrecoverable".into()))?
         .chunks_exact(4)
-        .map(|b| u32::from_le_bytes(b.try_into().unwrap()))
+        .filter_map(|b| u32_at(b, 0))
         .collect();
-    let blobs = &parity_body[8 + 4 * n..];
+    let blobs = parity_body.get(8 + 4 * n..).unwrap_or(&[]);
 
-    let protected = &data[V2_BODY_START..V2_BODY_START + protected_len];
-    let bad_stripes: Vec<usize> =
-        (0..n).filter(|&i| crc32(stripe_of(protected, i, stripe)) != stripe_crcs[i]).collect();
+    let protected = data
+        .get(V2_BODY_START..V2_BODY_START + protected_len)
+        .ok_or_else(|| Error::Sdc("protected region out of bounds — unrecoverable".into()))?;
+    let bad_stripes: Vec<usize> = stripe_crcs
+        .iter()
+        .enumerate()
+        .filter(|&(i, &c)| crc32(stripe_of(protected, i, stripe)) != c)
+        .map(|(i, _)| i)
+        .collect();
     if bad_stripes.is_empty() {
         return Err(Error::Sdc(
             "section checksum mismatch could not be localized to a stripe — unrecoverable"
                 .into(),
         ));
     }
+    // ftlint::allow(r5, "g = n_groups(n) <= n <= protected_len/stripe + 1, bounded by the actual archive size")
     let mut per_group = vec![0usize; g];
     for &s in &bad_stripes {
-        per_group[s % g] += 1;
-        if per_group[s % g] > 1 {
+        let hit = per_group
+            .get_mut(s % g)
+            .ok_or_else(|| Error::Sdc("parity group index out of range".into()))?;
+        *hit += 1;
+        if *hit > 1 {
             return Err(Error::Sdc(format!(
                 "two damaged stripes in parity group {} — unrecoverable",
                 s % g
@@ -234,7 +258,10 @@ fn recover_with(data: &[u8], pre: &format::V2Prelude) -> Result<Recovery> {
     let mut healed = data.to_vec();
     for &s in &bad_stripes {
         let grp = s % g;
-        let mut rebuilt = blobs[grp * stripe..(grp + 1) * stripe].to_vec();
+        let mut rebuilt = blobs
+            .get(grp * stripe..(grp + 1) * stripe)
+            .ok_or_else(|| Error::Sdc("parity blob out of range — unrecoverable".into()))?
+            .to_vec();
         for i in (grp..n).step_by(g) {
             if i != s {
                 for (j, &b) in stripe_of(protected, i, stripe).iter().enumerate() {
@@ -244,12 +271,17 @@ fn recover_with(data: &[u8], pre: &format::V2Prelude) -> Result<Recovery> {
         }
         let start = V2_BODY_START + s * stripe;
         let end = V2_BODY_START + protected_len.min((s + 1) * stripe);
-        healed[start..end].copy_from_slice(&rebuilt[..end - start]);
+        healed
+            .get_mut(start..end)
+            .ok_or_else(|| Error::Sdc("healed stripe range out of bounds".into()))?
+            .copy_from_slice(&rebuilt[..end - start]);
     }
 
     // the repaired archive must re-verify end to end before anyone decodes it
     for i in 0..4 {
-        let s = &healed[pre.section_start(i)..pre.section_start(i) + pre.lens[i]];
+        let s = healed
+            .get(pre.section_start(i)..pre.section_start(i) + pre.lens[i])
+            .ok_or_else(|| Error::Sdc("section out of bounds post-repair".into()))?;
         if crc32(s) != pre.crcs[i] {
             return Err(Error::Sdc(
                 "parity reconstruction failed post-repair verification — unrecoverable".into(),

@@ -291,6 +291,48 @@
 //! Damage beyond the parity budget (two stripes of one group) is still
 //! *detected* and reported as a clean error — never silently decoded. The
 //! `inject::mode_c` campaign measures exactly this trichotomy.
+//!
+//! ## Enforced invariants (ftlint)
+//!
+//! The resilience claims above are structural properties of this source
+//! tree, and `tools/ftlint` (run as `cargo run -p ftlint`, CI-blocking)
+//! enforces them statically:
+//!
+//! * **R1 — decode-path panic-freedom.** The untrusted-input modules
+//!   ([`compressor::format`], [`compressor::destage`], [`ft::parity`],
+//!   and the decode sides of [`compressor::huffman`], [`compressor::xsz`],
+//!   [`compressor::stream`]) contain no `unwrap`/`expect`, no panicking
+//!   macros, and no direct indexing of untrusted buffers in non-test
+//!   code. *Why:* the paper's §5 trichotomy — corrected, clean error, or
+//!   detected-unrecoverable, never silent and never a crash — is a claim
+//!   about every outcome of decoding attacker-shaped bytes; one panic on
+//!   a hostile length voids it. `debug_assert*` stays legal (absent from
+//!   release builds, which is what mode-C campaigns gate).
+//! * **R2 — single-site architecture.** `thread::scope` exists only in
+//!   the chain driver layer, the thread pool, and the coordinator
+//!   fan-out; `blocks_reexecuted` is incremented at exactly one fold;
+//!   there is exactly one Algorithm-2 `verify_stage`. *Why:* "every
+//!   driver runs the same verify loop" is only provable while there is
+//!   one loop to point at.
+//! * **R3 — wrapping checksum algebra.** `ft/checksum.rs` accumulators
+//!   use `wrapping_*` only. *Why:* the mod-2^64 homomorphism must behave
+//!   identically in debug and release builds, or debug-mode fault
+//!   campaigns crash where release silently works.
+//! * **R4 — unsafe inventory.** The crate root is
+//!   `#![forbid(unsafe_code)]`; the only pre-approved future carve-out is
+//!   `io/posix.rs` (with mandatory `// SAFETY:` comments — see the note
+//!   there).
+//! * **R5 — guarded allocation.** Decode-scope allocations are sized by
+//!   validated quantities (`.len()`, literals, `MAX_*` clamps) — a header
+//!   that survives voting must still not be able to request an absurd
+//!   allocation.
+//!
+//! Deviations require an in-source `ftlint::allow` comment naming the
+//! rule and a quoted reason, which the linter audits (non-empty reason,
+//! must actually suppress a finding) — see `tools/ftlint/src/config.rs`
+//! for the scope tables.
+
+#![forbid(unsafe_code)]
 
 pub mod analysis;
 pub mod compressor;

@@ -213,6 +213,28 @@ pub mod bytes {
         buf.extend_from_slice(&v.to_le_bytes());
     }
 
+    /// Decode `u32` little-endian from an exactly-4-byte slice, reporting
+    /// a clean format error on any other length.
+    pub fn u32_le(b: &[u8]) -> Result<u32> {
+        b.try_into()
+            .map(u32::from_le_bytes)
+            .map_err(|_| Error::Format(format!("u32 field needs 4 bytes, have {}", b.len())))
+    }
+
+    /// Decode `u64` little-endian from an exactly-8-byte slice.
+    pub fn u64_le(b: &[u8]) -> Result<u64> {
+        b.try_into()
+            .map(u64::from_le_bytes)
+            .map_err(|_| Error::Format(format!("u64 field needs 8 bytes, have {}", b.len())))
+    }
+
+    /// Decode `f32` little-endian from an exactly-4-byte slice.
+    pub fn f32_le(b: &[u8]) -> Result<f32> {
+        b.try_into()
+            .map(f32::from_le_bytes)
+            .map_err(|_| Error::Format(format!("f32 field needs 4 bytes, have {}", b.len())))
+    }
+
     /// Cursor for strict reads.
     pub struct Cursor<'a> {
         buf: &'a [u8],

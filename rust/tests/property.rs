@@ -625,3 +625,35 @@ fn prop_corrupted_archives_never_panic() {
         Ok(())
     });
 }
+
+#[test]
+fn prop_truncated_archives_never_panic() {
+    // the truncation sweep: cut a valid archive at EVERY byte boundary
+    // (which necessarily includes every section boundary — header copies,
+    // meta, unpred, payload, ft, parity) and decode the prefix. Every cut
+    // must come back as a clean Err, never a panic and never an Ok that
+    // silently drops data.
+    forall("archive truncation is panic-free", 6, |g| {
+        let data = g.vec_f32_smooth(300);
+        let dims = Dims::d1(data.len());
+        let cfg = CompressionConfig::new(ErrorBound::Abs(1e-2)).with_block_size(8);
+        for bytes in [
+            ftsz::ft::compress(&data, dims, &cfg).map_err(|e| e.to_string())?,
+            engine::compress(&data, dims, &cfg).map_err(|e| e.to_string())?,
+            xsz::compress_ft(&data, dims, &cfg).map_err(|e| e.to_string())?,
+        ] {
+            for len in 0..bytes.len() {
+                if ftsz::ft::decompress(&bytes[..len]).is_ok() {
+                    return Err(format!("ft decode of {len}/{} byte prefix was Ok", bytes.len()));
+                }
+                if engine::decompress(&bytes[..len]).is_ok() {
+                    return Err(format!(
+                        "engine decode of {len}/{} byte prefix was Ok",
+                        bytes.len()
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}

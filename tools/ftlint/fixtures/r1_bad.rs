@@ -1,0 +1,17 @@
+// Fixture (linted under the pretend path `compressor/format.rs`): every
+// class of R1 violation — panic tokens and direct untrusted indexing.
+// This file is test data, never compiled.
+
+pub fn parse(data: &[u8]) -> u32 {
+    let magic = data[0];
+    let n = u32::from_le_bytes(data[4..8].try_into().unwrap());
+    if magic != 7 {
+        panic!("bad magic");
+    }
+    match n {
+        0 => unreachable!(),
+        _ => {}
+    }
+    assert_eq!(n % 2, 0);
+    n
+}

@@ -1,0 +1,24 @@
+// Fixture (linted under the pretend path `compressor/format.rs`): the
+// panic-free shape of the same parse — R1 must stay silent, including on
+// debug_assert!, test-module unwraps, and an audited allow.
+// This file is test data, never compiled.
+
+pub fn parse(data: &[u8]) -> Result<u32, ()> {
+    let magic = *data.get(0).ok_or(())?;
+    debug_assert!(magic < 255, "internal invariant only");
+    let raw = data.get(4..8).ok_or(())?;
+    let n = u32::from_le_bytes(raw.try_into().map_err(|_| ())?);
+    // ftlint::allow(r1, "index 0 re-checked by the get() two lines above")
+    let first = data[0];
+    let _ = first;
+    Ok(n)
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn tests_may_unwrap_freely() {
+        super::parse(&[7, 0, 0, 0, 1, 0, 0, 0]).unwrap();
+        assert_eq!(1 + 1, 2);
+    }
+}

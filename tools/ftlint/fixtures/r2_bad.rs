@@ -1,0 +1,11 @@
+// Fixture (linted under the pretend path `compressor/rogue.rs`): a scoped
+// thread spawn outside the R2 allowlist must trip the thread-scope
+// single-site invariant. This file is test data, never compiled.
+
+pub fn run_parallel(xs: &mut [u32]) {
+    std::thread::scope(|s| {
+        for x in xs.iter_mut() {
+            s.spawn(move || *x += 1);
+        }
+    });
+}

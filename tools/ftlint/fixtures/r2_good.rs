@@ -1,0 +1,22 @@
+// Fixture (linted under the pretend path `coordinator/pipeline.rs`): the
+// allowlist grants this file exactly one thread::scope site, and exactly
+// one exists — R2 must stay silent. A second mention inside #[cfg(test)]
+// must not count. This file is test data, never compiled.
+
+pub fn fan_out(ranks: usize) {
+    std::thread::scope(|s| {
+        for _ in 0..ranks {
+            s.spawn(|| {});
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn test_code_is_exempt() {
+        std::thread::scope(|s| {
+            s.spawn(|| {});
+        });
+    }
+}

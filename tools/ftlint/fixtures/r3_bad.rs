@@ -1,0 +1,11 @@
+// Fixture (linted under the pretend path `ft/checksum.rs`): bare
+// arithmetic on checksum accumulators — both compound assignment and a
+// binary operand position must trip R3. This file is test data, never
+// compiled.
+
+pub fn fold(acc: u64, x: u64) -> u64 {
+    let mut sum = acc;
+    sum += x;
+    let delta = x * 3;
+    sum - delta
+}

@@ -1,0 +1,14 @@
+// Fixture (linted under the pretend path `ft/checksum.rs`): the same
+// algebra written with wrapping_* — R3 must stay silent, including on
+// non-arithmetic neighbors (calls, comparisons, unary negation of a
+// non-accumulator). This file is test data, never compiled.
+
+pub fn fold(acc: u64, x: u64) -> u64 {
+    let mut sum = acc;
+    sum = sum.wrapping_add(x);
+    let delta = x.wrapping_mul(3);
+    if sum == delta {
+        return sum;
+    }
+    sum.wrapping_sub(delta)
+}

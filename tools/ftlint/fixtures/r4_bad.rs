@@ -1,0 +1,7 @@
+// Fixture (linted under the pretend path `util/rogue.rs`): any `unsafe`
+// outside the io/posix.rs carve-out must trip R4. This file is test data,
+// never compiled.
+
+pub fn peek(p: *const u8) -> u8 {
+    unsafe { *p }
+}

@@ -1,0 +1,10 @@
+// Fixture (linted under the pretend path `io/posix.rs`): unsafe is
+// tolerated in the carve-out file when justified by a SAFETY: comment —
+// R4 must stay silent. This file is test data, never compiled.
+
+pub fn read_at(fd: i32, buf: &mut [u8]) -> isize {
+    // SAFETY: fd is owned by the enclosing handle for this call's whole
+    // duration, and the pointer/len pair comes from a live &mut slice, so
+    // the kernel cannot write out of bounds.
+    unsafe { pread_shim(fd, buf.as_mut_ptr(), buf.len()) }
+}

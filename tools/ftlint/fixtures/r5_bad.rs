@@ -1,0 +1,11 @@
+// Fixture (linted under the pretend path `compressor/format.rs`):
+// decode-scope allocations sized by a plain variable that could trace
+// back to raw header bytes — both with_capacity and vec![..; n] must
+// trip R5. This file is test data, never compiled.
+
+pub fn parse(data: &[u8]) -> Vec<u8> {
+    let n_blocks = data.len() / 8 + 1;
+    let mut out = Vec::with_capacity(n_blocks);
+    out.extend(vec![0u8; n_blocks]);
+    out
+}

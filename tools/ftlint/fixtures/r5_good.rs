@@ -1,0 +1,21 @@
+// Fixture (linted under the pretend path `compressor/format.rs`): the
+// validated allocation shapes — .len() of a checked slice, literal sizes,
+// SCREAMING_CASE clamp constants, and one audited allow for a value the
+// linter cannot see is clamped. R5 must stay silent. This file is test
+// data, never compiled.
+
+const MAX_BLOCKS: usize = 1 << 20;
+
+pub fn parse(data: &[u8]) -> Vec<u32> {
+    let mut lens = Vec::with_capacity(data.len() / 8);
+    lens.resize(data.len() / 8, 0u32);
+    let mut lut = vec![0u32; MAX_BLOCKS];
+    let fixed = vec![0u32; 1 << 12];
+    let n_blocks = data.len().min(MAX_BLOCKS);
+    // ftlint::allow(r5, "n_blocks is clamped to MAX_BLOCKS on the line above")
+    let mut out = Vec::with_capacity(n_blocks);
+    out.append(&mut lut);
+    out.extend(fixed);
+    out.extend(lens);
+    out
+}

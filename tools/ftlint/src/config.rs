@@ -1,0 +1,180 @@
+//! The repo-specific lint configuration: which modules are untrusted-input
+//! decode surfaces (R1/R5), which buffers in them hold attacker-shaped
+//! bytes, and where the single-site architecture invariants (R2) live.
+//!
+//! This table IS the enforcement contract — editing it is how a PR that
+//! legitimately moves an invariant keeps the lint honest, and the diff on
+//! this file is the reviewer's audit trail.
+
+/// R1/R5 scope of one untrusted-input module.
+pub struct ModuleScope {
+    /// Path relative to the linted source root.
+    pub path: &'static str,
+    /// Functions whose bodies are in R1 scope; `None` = the whole file
+    /// (minus `#[cfg(test)]` items).
+    pub r1_fns: Option<&'static [&'static str]>,
+    /// Functions whose bodies are in R5 (guarded-allocation) scope;
+    /// `None` = same as `r1_fns`.
+    pub r5_fns: Option<&'static [&'static str]>,
+    /// Identifiers holding untrusted bytes/derived arrays: direct
+    /// `ident[...]` indexing on these is an R1 finding (use `.get()`, a
+    /// bounds-checked cursor, or an audited allow).
+    pub untrusted: &'static [&'static str],
+}
+
+/// The untrusted-input decode surface (paper §5: a panic on
+/// attacker-shaped bytes silently breaks the corrected / clean-error /
+/// never-silent trichotomy).
+pub const DECODE_SCOPES: &[ModuleScope] = &[
+    ModuleScope {
+        // container parse: every byte is untrusted until the voted header
+        // and section CRCs vouch for it
+        path: "compressor/format.rs",
+        r1_fns: None,
+        r5_fns: Some(&[
+            "parse",
+            "peek_header",
+            "parse_v1",
+            "parse_v2",
+            "parse_v2_with",
+            "read_v2_prelude",
+            "read_section",
+            "read_core_fields",
+            "assemble",
+        ]),
+        untrusted: &[
+            "data",
+            "payload",
+            "unpred",
+            "unpred_raw",
+            "meta_raw",
+            "ft_raw",
+            "body",
+            "payload_offsets",
+            "unpred_offsets",
+        ],
+    },
+    ModuleScope {
+        // the whole decode stage graph runs downstream of a hostile parse
+        path: "compressor/destage.rs",
+        r1_fns: None,
+        r5_fns: None,
+        untrusted: &["sums", "metas"],
+    },
+    ModuleScope {
+        // parity recovery reads raw stored bytes before any CRC has passed;
+        // build()/put-side helpers are writer-side and out of scope
+        path: "ft/parity.rs",
+        r1_fns: Some(&[
+            "recover",
+            "recover_with",
+            "looks_v2",
+            "scrub",
+            "scrub_file",
+            "parse_recovering",
+            "stripe_of",
+            "u32_at",
+        ]),
+        r5_fns: None,
+        untrusted: &[
+            "data",
+            "parity_body",
+            "protected",
+            "blobs",
+            "stripe_crcs",
+            "healed",
+            "per_group",
+        ],
+    },
+    ModuleScope {
+        // decode side only: the table builders validate Kraft consistency
+        // at construction, so decode()'s table-internal indexing is
+        // bounds-safe by construction — the untrusted set is empty and the
+        // panic-token scan is the active check here
+        path: "compressor/huffman.rs",
+        r1_fns: Some(&["decode", "decode_slow", "deserialize", "from_lengths"]),
+        r5_fns: None,
+        untrusted: &[],
+    },
+    ModuleScope {
+        // xsz's decode stage; compress side is trusted-input
+        path: "compressor/xsz.rs",
+        r1_fns: Some(&["decode_block"]),
+        r5_fns: None,
+        untrusted: &[],
+    },
+    ModuleScope {
+        // streaming decode: the slab placer and the reduction sinks; the
+        // compress-side slab cursor is trusted-input. Buffer indexing here
+        // goes through checked_add/.get patterns, hence the empty set.
+        path: "compressor/stream.rs",
+        r1_fns: Some(&["open_slab", "flush", "place", "close", "put"]),
+        r5_fns: None,
+        untrusted: &[],
+    },
+];
+
+/// One R2 single-site invariant: a pattern that may appear in non-test
+/// code only at the allowlisted (file, exact count) sites.
+pub struct SingleSite {
+    /// Rule sub-name for reporting.
+    pub name: &'static str,
+    /// Substring matched against blanked code lines.
+    pub pattern: &'static str,
+    /// (file, exact non-test occurrence count) — any other file: zero.
+    pub allowed: &'static [(&'static str, usize)],
+    /// One-line fix hint.
+    pub hint: &'static str,
+}
+
+/// The single-site architecture invariants (CHANGES.md's "grep-provable"
+/// claims, now machine-checked).
+pub const SINGLE_SITES: &[SingleSite] = &[
+    SingleSite {
+        name: "thread-scope",
+        pattern: "thread::scope",
+        allowed: &[
+            // the one pipeline driver trio
+            ("compressor/chain.rs", 1),
+            // the pool substrate: parallel_chunks + parallel_map
+            ("util/threadpool.rs", 2),
+            // the coordinator's rank fan-out
+            ("coordinator/pipeline.rs", 1),
+        ],
+        hint: "route new pipelines through compressor::chain instead of \
+               spawning scoped threads in place",
+    },
+    SingleSite {
+        name: "reexec-count",
+        pattern: "blocks_reexecuted +=",
+        allowed: &[("compressor/destage.rs", 1)],
+        hint: "report re-execution repairs via destage::fold_block_outcome, \
+               the one ordered-commit fold",
+    },
+    SingleSite {
+        name: "verify-stage",
+        pattern: "fn verify_stage",
+        allowed: &[("compressor/destage.rs", 1)],
+        hint: "there is exactly one Algorithm-2 verify/re-execute loop body; \
+               parameterize destage::verify_stage instead of copying it",
+    },
+];
+
+/// R3: file whose mod-2^64 accumulator algebra must be `wrapping_*`.
+pub const CHECKSUM_FILE: &str = "ft/checksum.rs";
+
+/// R3: identifiers that carry mod-2^64 accumulator values; a bare
+/// `+`/`-`/`*` (or compound assignment) touching one is a finding.
+pub const CHECKSUM_ACCUMULATORS: &[&str] =
+    &["sum", "isum", "delta", "ds", "di", "w", "w_old", "w_new"];
+
+/// R4: the one module allowed to contain `unsafe` (with `// SAFETY:`).
+pub const UNSAFE_ALLOWED_FILE: &str = "io/posix.rs";
+
+/// R4 meta-check: the crate root must carry this attribute.
+pub const FORBID_UNSAFE_ATTR: &str = "#![forbid(unsafe_code)]";
+
+/// Look up the R1/R5 scope for a file.
+pub fn scope_for(rel_path: &str) -> Option<&'static ModuleScope> {
+    DECODE_SCOPES.iter().find(|s| s.path == rel_path)
+}

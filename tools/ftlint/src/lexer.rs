@@ -1,0 +1,367 @@
+//! A line-oriented Rust pseudo-lexer: just enough lexical structure for
+//! the structural lints — comment/string stripping (so patterns never
+//! match inside literals or docs), nested block comments, raw strings,
+//! char-vs-lifetime disambiguation, `#[cfg(test)]` item skipping, and
+//! enclosing-`fn` attribution via brace tracking.
+//!
+//! This is deliberately NOT a full parser. The rules it feeds are
+//! substring/token checks whose false-positive escape hatch is an audited
+//! `// ftlint::allow(rule, "reason")` comment, so the lexer only has to be
+//! conservative and deterministic, not complete.
+
+/// One source line after lexing.
+#[derive(Debug)]
+pub struct Line {
+    /// 1-based line number.
+    pub number: usize,
+    /// The line's code with comments, string/char literal *contents*
+    /// blanked to spaces (structure like quotes is also blanked). Length
+    /// is not preserved exactly; only token adjacency matters.
+    pub code: String,
+    /// Concatenated comment text appearing on this line (line + block).
+    pub comment: String,
+    /// True when the line sits inside a `#[cfg(test)]`-gated item (or is
+    /// the attribute line itself).
+    pub in_test: bool,
+    /// Name of the innermost named `fn` whose body covers this line.
+    pub fn_name: Option<String>,
+}
+
+/// A lexed source file.
+#[derive(Debug)]
+pub struct SourceFile {
+    /// Path relative to the linted source root (e.g. `compressor/format.rs`).
+    pub rel_path: String,
+    /// Lexed lines, in order.
+    pub lines: Vec<Line>,
+}
+
+#[derive(Clone, Copy, PartialEq)]
+enum State {
+    Code,
+    LineComment,
+    BlockComment(u32),
+    Str,
+    RawStr(usize),
+}
+
+/// Phase 1: split into per-line (code, comment) with literals blanked.
+fn strip(content: &str) -> Vec<(String, String)> {
+    let mut out: Vec<(String, String)> = Vec::new();
+    let mut state = State::Code;
+    for raw_line in content.split('\n') {
+        let chars: Vec<char> = raw_line.chars().collect();
+        let mut code = String::with_capacity(chars.len());
+        let mut comment = String::new();
+        let mut i = 0usize;
+        // a line comment never spans lines
+        if state == State::LineComment {
+            state = State::Code;
+        }
+        while i < chars.len() {
+            let c = chars[i];
+            let next = chars.get(i + 1).copied();
+            match state {
+                State::Code => match c {
+                    '/' if next == Some('/') => {
+                        comment.push_str(&raw_line[char_byte(raw_line, i)..]);
+                        state = State::LineComment;
+                        i = chars.len();
+                    }
+                    '/' if next == Some('*') => {
+                        state = State::BlockComment(1);
+                        code.push(' ');
+                        i += 2;
+                    }
+                    '"' => {
+                        state = State::Str;
+                        code.push(' ');
+                        i += 1;
+                    }
+                    'r' | 'b' if is_raw_string_start(&chars, i) => {
+                        let (hashes, skip) = raw_string_open(&chars, i);
+                        state = State::RawStr(hashes);
+                        code.push(' ');
+                        i += skip;
+                    }
+                    '\'' => {
+                        // char literal vs lifetime: '\...' or 'x' is a char;
+                        // 'ident (no closing quote right after) is a lifetime
+                        if next == Some('\\') {
+                            // skip escaped char literal: '\X' or '\u{..}'
+                            let mut j = i + 2;
+                            while j < chars.len() && chars[j] != '\'' {
+                                j += 1;
+                            }
+                            code.push(' ');
+                            i = (j + 1).min(chars.len());
+                        } else if chars.get(i + 2) == Some(&'\'') {
+                            code.push(' ');
+                            i += 3;
+                        } else {
+                            code.push('\''); // lifetime, keep as code
+                            i += 1;
+                        }
+                    }
+                    _ => {
+                        code.push(c);
+                        i += 1;
+                    }
+                },
+                State::LineComment => unreachable!("consumed above"),
+                State::BlockComment(depth) => {
+                    if c == '*' && next == Some('/') {
+                        state = if depth == 1 {
+                            State::Code
+                        } else {
+                            State::BlockComment(depth - 1)
+                        };
+                        i += 2;
+                    } else if c == '/' && next == Some('*') {
+                        state = State::BlockComment(depth + 1);
+                        i += 2;
+                    } else {
+                        comment.push(c);
+                        i += 1;
+                    }
+                }
+                State::Str => {
+                    if c == '\\' {
+                        i += 2; // skip the escaped char (incl. \")
+                    } else if c == '"' {
+                        state = State::Code;
+                        i += 1;
+                    } else {
+                        i += 1;
+                    }
+                    code.push(' ');
+                }
+                State::RawStr(hashes) => {
+                    if c == '"' && closes_raw(&chars, i, hashes) {
+                        state = State::Code;
+                        i += 1 + hashes;
+                    } else {
+                        i += 1;
+                    }
+                    code.push(' ');
+                }
+            }
+        }
+        out.push((code, comment));
+    }
+    out
+}
+
+/// Byte offset of char index `i` in `s` (for slicing comment tails).
+fn char_byte(s: &str, i: usize) -> usize {
+    s.char_indices().nth(i).map(|(b, _)| b).unwrap_or(s.len())
+}
+
+/// True when `chars[i..]` opens a raw string (`r"`, `r#"`, `br#"` …) and
+/// `i` is not the tail of a longer identifier.
+fn is_raw_string_start(chars: &[char], i: usize) -> bool {
+    if i > 0 && (chars[i - 1].is_alphanumeric() || chars[i - 1] == '_') {
+        return false;
+    }
+    let mut j = i;
+    if chars[j] == 'b' {
+        j += 1;
+        if chars.get(j) != Some(&'r') {
+            return false;
+        }
+    }
+    if chars.get(j) != Some(&'r') {
+        return false;
+    }
+    j += 1;
+    while chars.get(j) == Some(&'#') {
+        j += 1;
+    }
+    chars.get(j) == Some(&'"')
+}
+
+/// (number of hashes, chars consumed) of a raw-string opener at `i`.
+fn raw_string_open(chars: &[char], i: usize) -> (usize, usize) {
+    let mut j = i;
+    if chars[j] == 'b' {
+        j += 1;
+    }
+    j += 1; // the 'r'
+    let mut hashes = 0;
+    while chars.get(j) == Some(&'#') {
+        hashes += 1;
+        j += 1;
+    }
+    j += 1; // the opening quote
+    (hashes, j - i)
+}
+
+/// True when the `"` at `i` is followed by `hashes` `#` chars.
+fn closes_raw(chars: &[char], i: usize, hashes: usize) -> bool {
+    (1..=hashes).all(|k| chars.get(i + k) == Some(&'#'))
+}
+
+/// A brace frame: the item/block it opened, and whether it is test-gated
+/// or a named fn body.
+struct Frame {
+    fn_name: Option<String>,
+    is_test: bool,
+}
+
+/// Phase 2: structural annotation (test regions, enclosing fn).
+pub fn lex(rel_path: &str, content: &str) -> SourceFile {
+    let stripped = strip(content);
+    let mut lines = Vec::with_capacity(stripped.len());
+    let mut frames: Vec<Frame> = Vec::new();
+    // set by `#[cfg(test)]`, consumed by the next `{` (or dropped at `;`)
+    let mut pending_test = false;
+    // set by `fn name`, consumed by the next `{` (or dropped at `;`)
+    let mut pending_fn: Option<String> = None;
+
+    for (li, (code, comment)) in stripped.into_iter().enumerate() {
+        let mut in_test =
+            pending_test || frames.iter().any(|f| f.is_test);
+        let mut fn_name = innermost_fn(&frames);
+
+        if code.contains("#[cfg(test)]") {
+            pending_test = true;
+            in_test = true;
+        }
+        if let Some(name) = find_fn_decl(&code) {
+            pending_fn = Some(name);
+        }
+        let chars: Vec<char> = code.chars().collect();
+        for &c in &chars {
+            match c {
+                '{' => {
+                    frames.push(Frame {
+                        fn_name: pending_fn.take(),
+                        is_test: pending_test,
+                    });
+                    pending_test = false;
+                    if frames.iter().any(|f| f.is_test) {
+                        in_test = true;
+                    }
+                    if let Some(n) = innermost_fn(&frames) {
+                        fn_name = Some(n);
+                    }
+                }
+                '}' => {
+                    frames.pop();
+                }
+                ';' if frames.is_empty() || pending_fn.is_some() || pending_test => {
+                    // item ended without a body: drop pending attributions
+                    // (e.g. `#[cfg(test)] use x;`, trait fn declarations)
+                    pending_fn = None;
+                    pending_test = false;
+                }
+                _ => {}
+            }
+        }
+        lines.push(Line {
+            number: li + 1,
+            code,
+            comment,
+            in_test,
+            fn_name,
+        });
+    }
+    SourceFile { rel_path: rel_path.to_string(), lines }
+}
+
+fn innermost_fn(frames: &[Frame]) -> Option<String> {
+    frames.iter().rev().find_map(|f| f.fn_name.clone())
+}
+
+/// Find `fn <name>` in a code line (declaration position, not `fn(` type
+/// syntax). Returns the last declaration on the line.
+fn find_fn_decl(code: &str) -> Option<String> {
+    let bytes = code.as_bytes();
+    let mut found = None;
+    let mut i = 0;
+    while let Some(off) = code[i..].find("fn ") {
+        let at = i + off;
+        i = at + 3;
+        // word boundary on the left ("fn" not a tail of an identifier)
+        if at > 0 {
+            let prev = bytes[at - 1] as char;
+            if prev.is_alphanumeric() || prev == '_' {
+                continue;
+            }
+        }
+        let rest = code[at + 3..].trim_start();
+        let name: String = rest
+            .chars()
+            .take_while(|c| c.is_alphanumeric() || *c == '_')
+            .collect();
+        if !name.is_empty() {
+            found = Some(name);
+        }
+    }
+    found
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strings_and_comments_are_blanked() {
+        let f = lex(
+            "x.rs",
+            "let a = \"panic!\"; // unwrap() in a comment\nlet b = 'c';",
+        );
+        assert!(!f.lines[0].code.contains("panic!"));
+        assert!(f.lines[0].comment.contains("unwrap()"));
+        assert!(!f.lines[1].code.contains('c') || !f.lines[1].code.contains("'c'"));
+    }
+
+    #[test]
+    fn lifetimes_survive_char_stripping() {
+        let f = lex("x.rs", "fn f<'a>(x: &'a [u8]) -> &'a [u8] { x }");
+        assert!(f.lines[0].code.contains("'a"));
+    }
+
+    #[test]
+    fn raw_strings_are_blanked() {
+        let f = lex("x.rs", "let s = r#\"unwrap() \" panic!\"#; s.len();");
+        assert!(!f.lines[0].code.contains("unwrap"));
+        assert!(f.lines[0].code.contains(".len()"));
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let f = lex("x.rs", "a /* one /* two */ still */ b");
+        let code = &f.lines[0].code;
+        assert!(code.contains('a') && code.contains('b'));
+        assert!(!code.contains("still"));
+    }
+
+    #[test]
+    fn cfg_test_region_is_marked() {
+        let src = "fn live() {}\n#[cfg(test)]\nmod tests {\n    fn t() { x.unwrap(); }\n}\n\
+                   fn live2() {}\n";
+        let f = lex("x.rs", src);
+        assert!(!f.lines[0].in_test);
+        assert!(f.lines[1].in_test);
+        assert!(f.lines[2].in_test);
+        assert!(f.lines[3].in_test);
+        assert!(!f.lines[5].in_test, "code after the test mod is live again");
+    }
+
+    #[test]
+    fn enclosing_fn_attribution() {
+        let src = "fn outer() {\n    let c = |x: u32| {\n        x + 1\n    };\n}\n\
+                   fn other() {\n    1;\n}\n";
+        let f = lex("x.rs", src);
+        assert_eq!(f.lines[2].fn_name.as_deref(), Some("outer"));
+        assert_eq!(f.lines[6].fn_name.as_deref(), Some("other"));
+    }
+
+    #[test]
+    fn trait_decl_does_not_leak_fn_name() {
+        let src = "trait T {\n    fn sig(&self);\n}\nstruct S;\n";
+        let f = lex("x.rs", src);
+        assert_eq!(f.lines[3].fn_name, None);
+    }
+}

@@ -1,0 +1,84 @@
+//! ftlint — in-tree static analysis for the `ftsz` crate.
+//!
+//! Enforces the repo's SDC-resilience invariants structurally, as a
+//! CI-blocking pass (`cargo run -p ftlint`):
+//!
+//! - **R1 decode-path panic-freedom** — no `unwrap`/`expect`/panicking
+//!   macros/direct untrusted-buffer indexing in the untrusted-input
+//!   decode modules ([`config::DECODE_SCOPES`]); `debug_assert*` allowed.
+//! - **R2 single-site invariants** — `thread::scope`, the
+//!   `blocks_reexecuted` fold, and `fn verify_stage` exist exactly at
+//!   their allowlisted sites ([`config::SINGLE_SITES`]).
+//! - **R3 wrapping checksum algebra** — `ft/checksum.rs` accumulators use
+//!   `wrapping_*`, never bare `+`/`-`/`*`.
+//! - **R4 unsafe inventory** — crate root keeps `#![forbid(unsafe_code)]`;
+//!   `unsafe` only ever in `io/posix.rs` with a `// SAFETY:` comment.
+//! - **R5 guarded allocation** — decode-scope allocations sized only by
+//!   validated quantities (`.len()`, literals, `MAX_*` constants).
+//!
+//! False positives are silenced by an audited escape hatch,
+//! `// ftlint::allow(rule, "reason")`, which itself is linted: the reason
+//! must be non-empty and the allow must actually suppress something.
+//!
+//! The linter is a deliberate pseudo-lexer (see [`lexer`]), not a parser:
+//! it blanks comments/strings, tracks `#[cfg(test)]` regions and
+//! enclosing functions by brace counting, and runs substring/token rules.
+//! That is enough for these invariants, keeps the tool at zero external
+//! dependencies (the build image is offline), and fails conservative —
+//! anything it cannot prove quiet shows up as a finding with a fix hint.
+
+pub mod config;
+pub mod lexer;
+pub mod rules;
+
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+pub use rules::Finding;
+
+/// Lint one source text under a pretend tree-relative path (so the scope
+/// tables apply). This is the entry point the fixture self-tests use.
+pub fn lint_source(rel_path: &str, content: &str) -> Vec<Finding> {
+    rules::run_file(&lexer::lex(rel_path, content))
+}
+
+/// The crate tree this repo checks: `rust/src`, located relative to the
+/// ftlint manifest so the binary works from any working directory.
+pub fn default_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("../../rust/src")
+}
+
+/// Lint every `.rs` file under `root`. Findings are sorted by
+/// (file, line) for deterministic output.
+pub fn lint_tree(root: &Path) -> io::Result<Vec<Finding>> {
+    let mut files = Vec::new();
+    walk(root, &mut files)?;
+    files.sort();
+    let mut out = Vec::new();
+    for path in files {
+        let rel = path
+            .strip_prefix(root)
+            .unwrap_or(&path)
+            .components()
+            .map(|c| c.as_os_str().to_string_lossy())
+            .collect::<Vec<_>>()
+            .join("/");
+        let content = fs::read_to_string(&path)?;
+        out.extend(lint_source(&rel, &content));
+    }
+    out.sort_by(|a, b| (&a.file, a.line).cmp(&(&b.file, b.line)));
+    Ok(out)
+}
+
+fn walk(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    for entry in fs::read_dir(dir)? {
+        let path = entry?.path();
+        if path.is_dir() {
+            walk(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,116 @@
+//! CLI: `cargo run -p ftlint [-- --json] [--root PATH]`
+//!
+//! Exit status 0 when the tree is clean, 1 when any finding (or an I/O
+//! error) occurred — CI wires this as a blocking job. `--json`
+//! additionally writes `LINT_report.json` to the working directory for
+//! artifact upload.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use ftlint::{default_root, lint_tree, Finding};
+
+fn main() -> ExitCode {
+    let mut json = false;
+    let mut root = default_root();
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--json" => json = true,
+            "--root" => match args.next() {
+                Some(p) => root = PathBuf::from(p),
+                None => {
+                    eprintln!("ftlint: --root needs a path");
+                    return ExitCode::FAILURE;
+                }
+            },
+            "--help" | "-h" => {
+                println!(
+                    "ftlint — structural lints for rust/src\n\
+                     usage: cargo run -p ftlint [-- --json] [--root PATH]\n\
+                     --json   also write LINT_report.json to the CWD\n\
+                     --root   lint this tree instead of rust/src"
+                );
+                return ExitCode::SUCCESS;
+            }
+            other => {
+                eprintln!("ftlint: unknown argument `{other}`");
+                return ExitCode::FAILURE;
+            }
+        }
+    }
+
+    let findings = match lint_tree(&root) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("ftlint: cannot lint {}: {e}", root.display());
+            return ExitCode::FAILURE;
+        }
+    };
+
+    for f in &findings {
+        println!("{}:{}: [{}] {}", f.file, f.line, f.rule, f.message);
+        println!("    fix: {}", f.hint);
+    }
+
+    if json {
+        let report = render_json(&root.display().to_string(), &findings);
+        if let Err(e) = std::fs::write("LINT_report.json", report) {
+            eprintln!("ftlint: cannot write LINT_report.json: {e}");
+            return ExitCode::FAILURE;
+        }
+        eprintln!("ftlint: wrote LINT_report.json");
+    }
+
+    if findings.is_empty() {
+        eprintln!("ftlint: clean ({} ok)", root.display());
+        ExitCode::SUCCESS
+    } else {
+        eprintln!("ftlint: {} finding(s)", findings.len());
+        ExitCode::FAILURE
+    }
+}
+
+/// Hand-rolled JSON (the crate has zero dependencies by design).
+fn render_json(root: &str, findings: &[Finding]) -> String {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str(&format!("  \"root\": {},\n", quote(root)));
+    s.push_str(&format!("  \"count\": {},\n", findings.len()));
+    s.push_str("  \"findings\": [");
+    for (i, f) in findings.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        s.push_str("\n    {");
+        s.push_str(&format!("\"rule\": {}, ", quote(f.rule)));
+        s.push_str(&format!("\"file\": {}, ", quote(&f.file)));
+        s.push_str(&format!("\"line\": {}, ", f.line));
+        s.push_str(&format!("\"message\": {}, ", quote(&f.message)));
+        s.push_str(&format!("\"hint\": {}", quote(&f.hint)));
+        s.push('}');
+    }
+    if !findings.is_empty() {
+        s.push_str("\n  ");
+    }
+    s.push_str("]\n}\n");
+    s
+}
+
+fn quote(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}

@@ -1,0 +1,183 @@
+//! Rule engine: findings, the audited `ftlint::allow` escape hatch, and
+//! per-file dispatch of the five rule families.
+
+use crate::lexer::SourceFile;
+
+pub mod r1_panic;
+pub mod r2_single_site;
+pub mod r3_wrapping;
+pub mod r4_unsafe;
+pub mod r5_alloc;
+
+/// One lint finding: file:line, what, and how to fix it.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    /// Rule id: `r1`..`r5`, or `allow` for escape-hatch misuse.
+    pub rule: &'static str,
+    /// Path relative to the linted source root.
+    pub file: String,
+    /// 1-based line.
+    pub line: usize,
+    /// What was found.
+    pub message: String,
+    /// One-line fix hint.
+    pub hint: String,
+}
+
+/// A parsed `// ftlint::allow(rule, "reason")` comment.
+struct AllowEntry {
+    line: usize,
+    rule: String,
+    used: bool,
+}
+
+/// The audited escape hatch: an allow comment suppresses findings of its
+/// rule on the same line or the line directly below (comment-above
+/// style). A missing or empty reason string, and an allow that suppressed
+/// nothing, are themselves findings — allows must stay justified and live.
+pub struct Allows {
+    entries: Vec<AllowEntry>,
+    /// Malformed allows, reported immediately.
+    pub findings: Vec<Finding>,
+}
+
+impl Allows {
+    /// Scan a lexed file's comments for allow annotations.
+    pub fn collect(file: &SourceFile) -> Self {
+        let mut entries = Vec::new();
+        let mut findings = Vec::new();
+        for line in &file.lines {
+            let Some(at) = line.comment.find("ftlint::allow(") else {
+                continue;
+            };
+            let args = &line.comment[at + "ftlint::allow(".len()..];
+            let parsed = parse_allow_args(args);
+            match parsed {
+                Some(rule) => entries.push(AllowEntry {
+                    line: line.number,
+                    rule,
+                    used: false,
+                }),
+                None => findings.push(Finding {
+                    rule: "allow",
+                    file: file.rel_path.clone(),
+                    line: line.number,
+                    message: "malformed ftlint::allow — needs a rule and a \
+                              non-empty quoted reason"
+                        .into(),
+                    hint: "write `// ftlint::allow(rN, \"why this site is safe\")`"
+                        .into(),
+                }),
+            }
+        }
+        Self { entries, findings }
+    }
+
+    /// True (and marks the allow used) when a finding of `rule` on `line`
+    /// is covered by an allow on the same or the previous line.
+    pub fn suppress(&mut self, rule: &str, line: usize) -> bool {
+        for e in &mut self.entries {
+            if e.rule == rule && (e.line == line || e.line + 1 == line) {
+                e.used = true;
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Findings for allows that suppressed nothing (dead annotations rot
+    /// into false confidence — they must be removed with the fix).
+    pub fn unused(&self, file: &str) -> Vec<Finding> {
+        self.entries
+            .iter()
+            .filter(|e| !e.used)
+            .map(|e| Finding {
+                rule: "allow",
+                file: file.to_string(),
+                line: e.line,
+                message: format!(
+                    "ftlint::allow({}) suppressed no finding — stale annotation",
+                    e.rule
+                ),
+                hint: "delete the allow (or fix its rule id)".into(),
+            })
+            .collect()
+    }
+}
+
+/// Parse `rule, "reason")` — returns the rule id only when the reason is
+/// a non-empty string literal followed by the closing paren. The reason is
+/// located by its quotes, not by the first `)`, so reasons may mention
+/// calls like `.len()`.
+fn parse_allow_args(args: &str) -> Option<String> {
+    let comma = args.find(',')?;
+    let rule = args[..comma].trim();
+    if rule.is_empty() || !rule.chars().all(|c| c.is_alphanumeric() || c == '_') {
+        return None;
+    }
+    let rest = args[comma + 1..].trim_start().strip_prefix('"')?;
+    let endq = rest.find('"')?;
+    if rest[..endq].trim().is_empty() {
+        return None;
+    }
+    rest[endq + 1..].trim_start().strip_prefix(')')?;
+    Some(rule.to_string())
+}
+
+/// Run every per-file rule over one lexed file.
+pub fn run_file(file: &SourceFile) -> Vec<Finding> {
+    let mut allows = Allows::collect(file);
+    let mut out = Vec::new();
+    out.extend(allows.findings.drain(..));
+    r1_panic::run(file, &mut allows, &mut out);
+    r2_single_site::run(file, &mut allows, &mut out);
+    r3_wrapping::run(file, &mut allows, &mut out);
+    r4_unsafe::run(file, &mut allows, &mut out);
+    r5_alloc::run(file, &mut allows, &mut out);
+    out.extend(allows.unused(&file.rel_path));
+    out
+}
+
+// ---------------------------------------------------------------------------
+// shared token helpers
+// ---------------------------------------------------------------------------
+
+/// True when byte `i` of `code` starts `pat` at an identifier boundary on
+/// the left (so `debug_assert!` never matches `assert!`).
+pub(crate) fn word_start(code: &str, i: usize, _pat: &str) -> bool {
+    if i == 0 {
+        return true;
+    }
+    let prev = code.as_bytes()[i - 1] as char;
+    !(prev.is_alphanumeric() || prev == '_' || prev == '.')
+}
+
+/// First non-space char at or after byte `i`.
+pub(crate) fn next_nonspace(code: &str, i: usize) -> Option<char> {
+    code[i..].chars().find(|c| !c.is_whitespace())
+}
+
+/// Iterator over (byte offset, identifier) words of a code line.
+pub(crate) fn idents(code: &str) -> Vec<(usize, &str)> {
+    let bytes = code.as_bytes();
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < bytes.len() {
+        let c = bytes[i] as char;
+        if c.is_ascii_alphabetic() || c == '_' {
+            let start = i;
+            while i < bytes.len() {
+                let c = bytes[i] as char;
+                if c.is_ascii_alphanumeric() || c == '_' {
+                    i += 1;
+                } else {
+                    break;
+                }
+            }
+            out.push((start, &code[start..i]));
+        } else {
+            i += 1;
+        }
+    }
+    out
+}

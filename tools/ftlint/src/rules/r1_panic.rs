@@ -1,0 +1,134 @@
+//! R1 — decode-path panic-freedom.
+//!
+//! The paper's §5 trichotomy (corrected / clean-error / never-silent)
+//! is a statement about *every* outcome of decoding attacker-shaped
+//! bytes; a single `unwrap` on a hostile length turns the guaranteed
+//! clean error into a process abort. In the untrusted-input modules
+//! ([`crate::config::DECODE_SCOPES`]) non-test code may not contain
+//! panicking macros, `unwrap`/`expect`, or direct `ident[...]` indexing
+//! of the configured untrusted buffers. `debug_assert*` stays legal: it
+//! compiles out of release builds, which is what the trichotomy gate
+//! (mode-C campaigns) runs.
+
+use crate::config;
+use crate::lexer::SourceFile;
+use crate::rules::{idents, word_start, Allows, Finding};
+
+/// Forbidden panic tokens: (pattern, what, fix hint).
+const PANIC_TOKENS: &[(&str, &str, &str)] = &[
+    (
+        ".unwrap(",
+        "unwrap() in untrusted-input decode code",
+        "return a clean Error::Format/CrashEquivalent instead (ok_or_else, \
+         or a length-checked helper)",
+    ),
+    (
+        ".expect(",
+        "expect() in untrusted-input decode code",
+        "return a clean Error instead — the message belongs in the error, \
+         not a panic",
+    ),
+    (
+        "panic!",
+        "panic! in untrusted-input decode code",
+        "return a clean Error; panicking on hostile bytes breaks the \
+         never-silent trichotomy",
+    ),
+    (
+        "unreachable!",
+        "unreachable! in untrusted-input decode code",
+        "return Error::CrashEquivalent — corrupt input can reach \
+         'unreachable' arms",
+    ),
+    (
+        "todo!",
+        "todo! in untrusted-input decode code",
+        "finish the path or return a clean Error",
+    ),
+    (
+        "unimplemented!",
+        "unimplemented! in untrusted-input decode code",
+        "finish the path or return a clean Error",
+    ),
+    (
+        "assert!",
+        "assert! in untrusted-input decode code",
+        "convert to an `if … { return Err(…) }` guard (or debug_assert! if \
+         the condition is an internal invariant)",
+    ),
+    (
+        "assert_eq!",
+        "assert_eq! in untrusted-input decode code",
+        "convert to an `if … { return Err(…) }` guard (or debug_assert_eq!)",
+    ),
+    (
+        "assert_ne!",
+        "assert_ne! in untrusted-input decode code",
+        "convert to an `if … { return Err(…) }` guard (or debug_assert_ne!)",
+    ),
+];
+
+/// Run R1 over one file.
+pub fn run(file: &SourceFile, allows: &mut Allows, out: &mut Vec<Finding>) {
+    let Some(scope) = config::scope_for(&file.rel_path) else {
+        return;
+    };
+    for line in &file.lines {
+        if line.in_test {
+            continue;
+        }
+        if let Some(fns) = scope.r1_fns {
+            match &line.fn_name {
+                Some(n) if fns.contains(&n.as_str()) => {}
+                _ => continue,
+            }
+        }
+        let code = &line.code;
+        for &(pat, what, hint) in PANIC_TOKENS {
+            let mut from = 0;
+            while let Some(off) = code[from..].find(pat) {
+                let at = from + off;
+                from = at + pat.len();
+                if !word_start(code, at, pat) {
+                    continue;
+                }
+                if allows.suppress("r1", line.number) {
+                    continue;
+                }
+                out.push(Finding {
+                    rule: "r1",
+                    file: file.rel_path.clone(),
+                    line: line.number,
+                    message: what.to_string(),
+                    hint: hint.to_string(),
+                });
+            }
+        }
+        // direct indexing of untrusted buffers: `ident[` with ident in the
+        // module's untrusted set
+        for (off, id) in idents(code) {
+            if !scope.untrusted.contains(&id) {
+                continue;
+            }
+            let end = off + id.len();
+            if code.as_bytes().get(end) != Some(&b'[') {
+                continue;
+            }
+            if allows.suppress("r1", line.number) {
+                continue;
+            }
+            out.push(Finding {
+                rule: "r1",
+                file: file.rel_path.clone(),
+                line: line.number,
+                message: format!(
+                    "direct `{id}[…]` index on an untrusted buffer"
+                ),
+                hint: "use .get()/.get_mut() with a clean error (or a \
+                       bounds-checked cursor); annotate structurally \
+                       guaranteed sites with ftlint::allow(r1, \"…\")"
+                    .to_string(),
+            });
+        }
+    }
+}

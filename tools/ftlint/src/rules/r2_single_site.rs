@@ -1,0 +1,75 @@
+//! R2 — single-site architecture invariants.
+//!
+//! Several resilience claims in this repo are of the form "there is
+//! exactly one place that does X" (one pipeline spawner trio, one
+//! re-execution counter fold, one Algorithm-2 verify loop). Those used to
+//! be grep-provable by hand; this rule counts the pattern occurrences in
+//! non-test code per file and compares them against the exact allowlist
+//! in [`crate::config::SINGLE_SITES`].
+//!
+//! There is deliberately NO `ftlint::allow` escape for R2: the audited
+//! way to move or add a site is editing the allowlist in
+//! `tools/ftlint/src/config.rs`, so the reviewer sees the invariant
+//! change in that file's diff.
+
+use crate::config;
+use crate::lexer::SourceFile;
+use crate::rules::{Allows, Finding};
+
+/// Run R2 over one file.
+pub fn run(file: &SourceFile, _allows: &mut Allows, out: &mut Vec<Finding>) {
+    for site in config::SINGLE_SITES {
+        let hits: Vec<usize> = file
+            .lines
+            .iter()
+            .filter(|l| !l.in_test && l.code.contains(site.pattern))
+            .map(|l| l.number)
+            .collect();
+        let allowed = site
+            .allowed
+            .iter()
+            .find(|(f, _)| *f == file.rel_path)
+            .map(|(_, n)| *n)
+            .unwrap_or(0);
+        if hits.len() > allowed {
+            for &line in &hits[allowed..] {
+                out.push(Finding {
+                    rule: "r2",
+                    file: file.rel_path.clone(),
+                    line,
+                    message: format!(
+                        "`{}` site #{} of {} — allowlist permits {} in this \
+                         file ({})",
+                        site.pattern,
+                        hits.iter().position(|&l| l == line).map(|p| p + 1).unwrap_or(0),
+                        hits.len(),
+                        allowed,
+                        site.name,
+                    ),
+                    hint: format!(
+                        "{} — or, if the architecture legitimately moved, \
+                         update SINGLE_SITES in tools/ftlint/src/config.rs",
+                        site.hint
+                    ),
+                });
+            }
+        } else if hits.len() < allowed {
+            out.push(Finding {
+                rule: "r2",
+                file: file.rel_path.clone(),
+                line: hits.first().copied().unwrap_or(1),
+                message: format!(
+                    "`{}` expected exactly {} non-test site(s) here, found \
+                     {} — the {} allowlist is stale",
+                    site.pattern,
+                    allowed,
+                    hits.len(),
+                    site.name,
+                ),
+                hint: "update SINGLE_SITES in tools/ftlint/src/config.rs to \
+                       match where the invariant actually lives"
+                    .to_string(),
+            });
+        }
+    }
+}

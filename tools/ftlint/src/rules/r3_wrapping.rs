@@ -1,0 +1,89 @@
+//! R3 — checksum algebra must be explicitly wrapping.
+//!
+//! The additive fault-tolerance checksums (paper §4.2) are mod-2^64
+//! homomorphisms: `verify` compares accumulators that legitimately wrap.
+//! A bare `+`/`-`/`*` on an accumulator is correct in release builds but
+//! aborts in debug builds on overflow — which means debug-mode fault
+//! campaigns would crash where release mode silently works, hiding the
+//! exact SDC-detection paths we test. In `ft/checksum.rs` every
+//! accumulator operation must therefore be `wrapping_add` /
+//! `wrapping_sub` / `wrapping_mul`, and this rule flags bare operators
+//! adjacent to the known accumulator identifiers.
+
+use crate::config;
+use crate::lexer::SourceFile;
+use crate::rules::{idents, Allows, Finding};
+
+/// Run R3 over one file.
+pub fn run(file: &SourceFile, allows: &mut Allows, out: &mut Vec<Finding>) {
+    if file.rel_path != config::CHECKSUM_FILE {
+        return;
+    }
+    for line in &file.lines {
+        if line.in_test {
+            continue;
+        }
+        let code = &line.code;
+        let bytes = code.as_bytes();
+        for (off, id) in idents(code) {
+            if !config::CHECKSUM_ACCUMULATORS.contains(&id) {
+                continue;
+            }
+            let mut flagged = false;
+            // operator directly after the accumulator: `sum + x`, `sum -= x`,
+            // `sum * x` — always binary arithmetic (or compound assignment)
+            if let Some(c) = after_nonspace(bytes, off + id.len()) {
+                if matches!(c, b'+' | b'-' | b'*') {
+                    flagged = true;
+                }
+            }
+            // operator directly before: binary only when the token before the
+            // operator ends a value (ident/`)`/`]`); otherwise it is unary
+            // minus or a deref and not arithmetic on the accumulator
+            if !flagged {
+                if let Some(op_at) = before_nonspace(bytes, off) {
+                    if matches!(bytes[op_at], b'+' | b'-' | b'*') {
+                        if let Some(prev_at) = before_nonspace(bytes, op_at) {
+                            let p = bytes[prev_at];
+                            if p.is_ascii_alphanumeric()
+                                || p == b'_'
+                                || p == b')'
+                                || p == b']'
+                            {
+                                flagged = true;
+                            }
+                        }
+                    }
+                }
+            }
+            if !flagged || allows.suppress("r3", line.number) {
+                continue;
+            }
+            out.push(Finding {
+                rule: "r3",
+                file: file.rel_path.clone(),
+                line: line.number,
+                message: format!(
+                    "bare arithmetic on checksum accumulator `{id}`"
+                ),
+                hint: "use wrapping_add/wrapping_sub/wrapping_mul — the \
+                       mod-2^64 homomorphism must behave identically in \
+                       debug and release builds"
+                    .to_string(),
+            });
+        }
+    }
+}
+
+/// First non-space byte at or after `i`, as a char.
+fn after_nonspace(bytes: &[u8], i: usize) -> Option<u8> {
+    bytes[i.min(bytes.len())..]
+        .iter()
+        .copied()
+        .find(|b| !b.is_ascii_whitespace())
+}
+
+/// Index of the last non-space byte strictly before `i`.
+fn before_nonspace(bytes: &[u8], i: usize) -> Option<usize> {
+    (0..i.min(bytes.len())).rev().find(|&j| !bytes[j].is_ascii_whitespace())
+}

@@ -1,0 +1,104 @@
+//! R4 — unsafe inventory.
+//!
+//! The crate's safety story is "no `unsafe` anywhere, enforced at the
+//! root by `#![forbid(unsafe_code)]`", with one pre-approved future
+//! carve-out: `io/posix.rs` (O_DIRECT / mmap style I/O is the only
+//! plausible need). This rule (a) meta-checks that `lib.rs` still
+//! carries the forbid attribute, (b) flags any `unsafe` token outside
+//! the carve-out file, and (c) inside the carve-out requires a
+//! `// SAFETY:` comment on the same line or in the contiguous comment
+//! block directly above (however long the justification runs).
+//!
+//! No `ftlint::allow` escape: the only audited path for new unsafe is
+//! moving it into the carve-out file (and softening the crate attribute
+//! from `forbid` to `deny` + per-module `allow`, as documented there).
+
+use crate::config;
+use crate::lexer::SourceFile;
+use crate::rules::{word_start, Allows, Finding};
+
+/// Run R4 over one file.
+pub fn run(file: &SourceFile, _allows: &mut Allows, out: &mut Vec<Finding>) {
+    if file.rel_path == "lib.rs"
+        && !file
+            .lines
+            .iter()
+            .any(|l| l.code.contains(config::FORBID_UNSAFE_ATTR))
+    {
+        out.push(Finding {
+            rule: "r4",
+            file: file.rel_path.clone(),
+            line: 1,
+            message: format!(
+                "crate root lost its `{}` attribute",
+                config::FORBID_UNSAFE_ATTR
+            ),
+            hint: "restore the attribute; if unsafe is genuinely needed, \
+                   follow the deny-softening recipe documented in io/posix.rs"
+                .to_string(),
+        });
+    }
+
+    let in_carveout = file.rel_path == config::UNSAFE_ALLOWED_FILE;
+    for (li, line) in file.lines.iter().enumerate() {
+        if line.in_test {
+            continue;
+        }
+        let code = &line.code;
+        let mut from = 0;
+        while let Some(off) = code[from..].find("unsafe") {
+            let at = from + off;
+            from = at + "unsafe".len();
+            // whole-word check on both sides
+            if !word_start(code, at, "unsafe") {
+                continue;
+            }
+            if code
+                .as_bytes()
+                .get(at + "unsafe".len())
+                .is_some_and(|&b| b.is_ascii_alphanumeric() || b == b'_')
+            {
+                continue;
+            }
+            if !in_carveout {
+                out.push(Finding {
+                    rule: "r4",
+                    file: file.rel_path.clone(),
+                    line: line.number,
+                    message: "`unsafe` outside the io/posix.rs carve-out"
+                        .to_string(),
+                    hint: "the crate is #![forbid(unsafe_code)]; move the \
+                           code behind a safe abstraction, or (last resort) \
+                           into io/posix.rs with a SAFETY: comment"
+                        .to_string(),
+                });
+                continue;
+            }
+            // carve-out: demand a SAFETY: justification on the unsafe
+            // line or in the contiguous comment block directly above it
+            let mut justified = line.comment.contains("SAFETY:");
+            let mut j = li;
+            while !justified && j > 0 {
+                j -= 1;
+                let prev = &file.lines[j];
+                if !prev.code.trim().is_empty() || prev.comment.is_empty() {
+                    break;
+                }
+                justified = prev.comment.contains("SAFETY:");
+            }
+            if !justified {
+                out.push(Finding {
+                    rule: "r4",
+                    file: file.rel_path.clone(),
+                    line: line.number,
+                    message: "`unsafe` in io/posix.rs without a // SAFETY: \
+                              comment"
+                        .to_string(),
+                    hint: "write `// SAFETY: <why every precondition holds>` \
+                           on the unsafe line or directly above it"
+                        .to_string(),
+                });
+            }
+        }
+    }
+}

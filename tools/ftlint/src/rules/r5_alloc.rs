@@ -1,0 +1,194 @@
+//! R5 — guarded allocation in decode modules.
+//!
+//! A hostile header that survives parsing long enough to reach an
+//! allocation site can request absurd lengths (`vec![0; 2^60]`) and take
+//! the process down by OOM — a crash-equivalent outcome the paper's
+//! trichotomy forbids just as much as a panic. In the decode scopes,
+//! allocation lengths must therefore come from *validated* quantities:
+//! `.len()` of an already-bounds-checked slice, literal sizes, or
+//! `MAX_*`-style constants (which is what the header validators clamp
+//! against). Anything else — a bare variable that might trace back to raw
+//! header bytes — is flagged and must either be rewritten or carry an
+//! audited `ftlint::allow(r5, "…")` stating why the value is clamped.
+
+use crate::config;
+use crate::lexer::SourceFile;
+use crate::rules::{idents, Allows, Finding};
+
+/// Allocation patterns: (needle, opening bracket, which top-level piece of
+/// the bracketed text is the length).
+const ALLOC_SITES: &[(&str, char, LenPos)] = &[
+    ("with_capacity(", '(', LenPos::Whole),
+    (".resize(", '(', LenPos::FirstArg),
+    ("vec![", '[', LenPos::AfterSemi),
+];
+
+#[derive(Clone, Copy)]
+enum LenPos {
+    /// The whole bracketed text is the length.
+    Whole,
+    /// Text before the first top-level `,`.
+    FirstArg,
+    /// Text after the top-level `;` (none → fixed-size literal list, safe).
+    AfterSemi,
+}
+
+/// Run R5 over one file.
+pub fn run(file: &SourceFile, allows: &mut Allows, out: &mut Vec<Finding>) {
+    let Some(scope) = config::scope_for(&file.rel_path) else {
+        return;
+    };
+    let fns = scope.r5_fns.or(scope.r1_fns);
+    for (li, line) in file.lines.iter().enumerate() {
+        if line.in_test {
+            continue;
+        }
+        if let Some(fns) = fns {
+            match &line.fn_name {
+                Some(n) if fns.contains(&n.as_str()) => {}
+                _ => continue,
+            }
+        }
+        let code = &line.code;
+        for &(needle, open, pos) in ALLOC_SITES {
+            let mut from = 0;
+            while let Some(off) = code[from..].find(needle) {
+                let at = from + off;
+                from = at + needle.len();
+                // left boundary: `with_capacity` must not be the tail of a
+                // longer identifier (patterns starting with `.` carry their
+                // own boundary — the dot — and are preceded by a receiver)
+                if !needle.starts_with('.') && at > 0 {
+                    let prev = code.as_bytes()[at - 1];
+                    if prev.is_ascii_alphanumeric() || prev == b'_' {
+                        continue;
+                    }
+                }
+                let Some(inner) = capture(file, li, at + needle.len(), open)
+                else {
+                    continue; // unbalanced within the lookahead window
+                };
+                let len_expr = match pos {
+                    LenPos::Whole => inner.clone(),
+                    LenPos::FirstArg => top_level_split(&inner, ',')
+                        .map(|(a, _)| a.to_string())
+                        .unwrap_or(inner.clone()),
+                    LenPos::AfterSemi => {
+                        match top_level_split(&inner, ';') {
+                            Some((_, b)) => b.to_string(),
+                            None => continue, // literal list, fixed size
+                        }
+                    }
+                };
+                if is_safe_len(&len_expr) {
+                    continue;
+                }
+                if allows.suppress("r5", line.number) {
+                    continue;
+                }
+                out.push(Finding {
+                    rule: "r5",
+                    file: file.rel_path.clone(),
+                    line: line.number,
+                    message: format!(
+                        "decode-path allocation sized by unvalidated \
+                         expression `{}`",
+                        len_expr.trim()
+                    ),
+                    hint: "size decode allocations from .len() of a \
+                           bounds-checked slice, a literal, or a MAX_* \
+                           clamp constant; annotate audited clamped sites \
+                           with ftlint::allow(r5, \"…\")"
+                        .to_string(),
+                });
+            }
+        }
+    }
+}
+
+/// Capture the bracketed text starting right after the opener at
+/// (`li`, `start_col`), balancing across at most 10 lines. Strings are
+/// already blanked, so every bracket is structural.
+fn capture(file: &SourceFile, li: usize, start_col: usize, open: char) -> Option<String> {
+    let close = match open {
+        '(' => ')',
+        '[' => ']',
+        _ => return None,
+    };
+    let mut depth = 0i32;
+    let mut text = String::new();
+    for (k, line) in file.lines.iter().enumerate().skip(li).take(10) {
+        let code = &line.code;
+        let begin = if k == li { start_col.min(code.len()) } else { 0 };
+        for c in code[begin..].chars() {
+            match c {
+                '(' | '[' | '{' => depth += 1,
+                ')' | ']' | '}' => {
+                    if depth == 0 && c == close {
+                        return Some(text);
+                    }
+                    depth -= 1;
+                }
+                _ => {}
+            }
+            text.push(c);
+        }
+        text.push(' ');
+    }
+    None
+}
+
+/// Split at the first top-level occurrence of `sep`.
+fn top_level_split(s: &str, sep: char) -> Option<(&str, &str)> {
+    let mut depth = 0i32;
+    for (i, c) in s.char_indices() {
+        match c {
+            '(' | '[' | '{' => depth += 1,
+            ')' | ']' | '}' => depth -= 1,
+            _ if c == sep && depth == 0 => {
+                return Some((&s[..i], &s[i + c.len_utf8()..]));
+            }
+            _ => {}
+        }
+    }
+    None
+}
+
+/// Identifiers/casts that never make a length "unvalidated".
+const NEUTRAL_IDENTS: &[&str] = &[
+    "as", "usize", "u8", "u16", "u32", "u64", "u128", "i8", "i16", "i32",
+    "i64", "i128", "f32", "f64", "self",
+];
+
+/// The validated-length heuristic: `.len()` of something, pure literals,
+/// or SCREAMING_CASE constants.
+fn is_safe_len(expr: &str) -> bool {
+    if expr.contains(".len(") {
+        return true;
+    }
+    let bytes = expr.as_bytes();
+    for (off, id) in idents(expr) {
+        if off > 0 {
+            let prev = bytes[off - 1];
+            // `.ident` is a field/method on some receiver; a digit prefix
+            // means this "ident" is the suffix of a numeric literal (0u8,
+            // 0xFF)
+            if prev == b'.' || prev.is_ascii_digit() {
+                continue;
+            }
+        }
+        if NEUTRAL_IDENTS.contains(&id) || is_screaming(id) {
+            continue;
+        }
+        return false;
+    }
+    true
+}
+
+/// `MAX_SECTION`, `LUT_BITS`, … — consts by Rust convention.
+fn is_screaming(id: &str) -> bool {
+    id.chars().any(|c| c.is_ascii_uppercase())
+        && id
+            .chars()
+            .all(|c| c.is_ascii_uppercase() || c.is_ascii_digit() || c == '_')
+}

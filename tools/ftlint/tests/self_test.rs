@@ -1,0 +1,188 @@
+//! ftlint self-tests: every rule must trip on its bad fixture, stay
+//! silent on its good fixture, the escape hatch must be audited, and —
+//! the point of the whole tool — the real `rust/src` tree must be clean.
+
+use std::fs;
+use std::path::Path;
+
+use ftlint::{lint_source, Finding};
+
+/// Load a fixture and lint it under a pretend tree-relative path so the
+/// scope tables in `config.rs` apply.
+fn lint_fixture(name: &str, pretend_path: &str) -> Vec<Finding> {
+    let p = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("fixtures")
+        .join(name);
+    let content = fs::read_to_string(&p)
+        .unwrap_or_else(|e| panic!("fixture {}: {e}", p.display()));
+    lint_source(pretend_path, &content)
+}
+
+fn rules_of(findings: &[Finding]) -> Vec<&'static str> {
+    findings.iter().map(|f| f.rule).collect()
+}
+
+// --- R1: decode-path panic-freedom -----------------------------------------
+
+#[test]
+fn r1_bad_trips_on_every_token_class() {
+    let f = lint_fixture("r1_bad.rs", "compressor/format.rs");
+    let msgs: Vec<&str> = f.iter().map(|x| x.message.as_str()).collect();
+    assert!(f.iter().all(|x| x.rule == "r1"), "only r1 expected: {f:?}");
+    assert!(
+        msgs.iter().any(|m| m.contains("unwrap()")),
+        "unwrap missed: {msgs:?}"
+    );
+    assert!(msgs.iter().any(|m| m.contains("panic!")));
+    assert!(msgs.iter().any(|m| m.contains("unreachable!")));
+    assert!(msgs.iter().any(|m| m.contains("assert_eq!")));
+    assert!(
+        msgs.iter().any(|m| m.contains("`data[…]`")),
+        "untrusted index missed: {msgs:?}"
+    );
+    // every finding carries a location and a hint
+    assert!(f.iter().all(|x| x.line > 0 && !x.hint.is_empty()));
+}
+
+#[test]
+fn r1_good_is_clean() {
+    let f = lint_fixture("r1_good.rs", "compressor/format.rs");
+    assert!(f.is_empty(), "expected clean, got {f:?}");
+}
+
+// --- R2: single-site invariants --------------------------------------------
+
+#[test]
+fn r2_bad_trips_outside_allowlist() {
+    let f = lint_fixture("r2_bad.rs", "compressor/rogue.rs");
+    assert_eq!(rules_of(&f), vec!["r2"], "{f:?}");
+    assert!(f[0].message.contains("thread::scope"));
+}
+
+#[test]
+fn r2_good_exact_count_is_clean() {
+    let f = lint_fixture("r2_good.rs", "coordinator/pipeline.rs");
+    assert!(f.is_empty(), "expected clean, got {f:?}");
+}
+
+#[test]
+fn r2_stale_allowlist_is_reported() {
+    // pipeline.rs is granted one thread::scope; a file with zero trips the
+    // under-count (stale allowlist) arm
+    let f = lint_source("coordinator/pipeline.rs", "pub fn quiet() {}\n");
+    assert_eq!(rules_of(&f), vec!["r2"], "{f:?}");
+    assert!(f[0].message.contains("stale"));
+}
+
+// --- R3: wrapping checksum algebra -----------------------------------------
+
+#[test]
+fn r3_bad_trips_on_bare_arithmetic() {
+    let f = lint_fixture("r3_bad.rs", "ft/checksum.rs");
+    assert!(!f.is_empty() && f.iter().all(|x| x.rule == "r3"), "{f:?}");
+    // `sum += x`, `sum - delta`, and the binary-operand position of delta
+    assert!(f.len() >= 2, "compound and binary both expected: {f:?}");
+}
+
+#[test]
+fn r3_good_wrapping_is_clean() {
+    let f = lint_fixture("r3_good.rs", "ft/checksum.rs");
+    assert!(f.is_empty(), "expected clean, got {f:?}");
+}
+
+// --- R4: unsafe inventory ---------------------------------------------------
+
+#[test]
+fn r4_bad_trips_outside_carveout() {
+    let f = lint_fixture("r4_bad.rs", "util/rogue.rs");
+    assert_eq!(rules_of(&f), vec!["r4"], "{f:?}");
+    assert!(f[0].message.contains("carve-out"));
+}
+
+#[test]
+fn r4_good_safety_comment_in_carveout_is_clean() {
+    let f = lint_fixture("r4_good.rs", "io/posix.rs");
+    assert!(f.is_empty(), "expected clean, got {f:?}");
+}
+
+#[test]
+fn r4_carveout_without_safety_comment_trips() {
+    let src = "pub fn f(p: *const u8) -> u8 {\n    unsafe { *p }\n}\n";
+    let f = lint_source("io/posix.rs", src);
+    assert_eq!(rules_of(&f), vec!["r4"], "{f:?}");
+    assert!(f[0].message.contains("SAFETY"));
+}
+
+#[test]
+fn r4_crate_root_must_keep_forbid() {
+    let f = lint_source("lib.rs", "pub mod compressor;\n");
+    assert!(
+        f.iter().any(|x| x.rule == "r4" && x.message.contains("forbid")),
+        "{f:?}"
+    );
+    let ok = lint_source("lib.rs", "#![forbid(unsafe_code)]\npub mod compressor;\n");
+    assert!(ok.is_empty(), "{ok:?}");
+}
+
+// --- R5: guarded allocation -------------------------------------------------
+
+#[test]
+fn r5_bad_trips_on_unvalidated_lengths() {
+    let f = lint_fixture("r5_bad.rs", "compressor/format.rs");
+    assert!(!f.is_empty() && f.iter().all(|x| x.rule == "r5"), "{f:?}");
+    assert!(f.len() >= 2, "with_capacity and vec![..; n] both: {f:?}");
+}
+
+#[test]
+fn r5_good_validated_lengths_are_clean() {
+    let f = lint_fixture("r5_good.rs", "compressor/format.rs");
+    assert!(f.is_empty(), "expected clean, got {f:?}");
+}
+
+// --- the escape hatch is itself audited ------------------------------------
+
+#[test]
+fn allow_with_empty_reason_is_malformed() {
+    let src = "// ftlint::allow(r1, \"\")\npub fn f() {}\n";
+    let f = lint_source("compressor/format.rs", src);
+    assert!(
+        f.iter().any(|x| x.rule == "allow" && x.message.contains("malformed")),
+        "{f:?}"
+    );
+}
+
+#[test]
+fn allow_without_reason_is_malformed() {
+    let src = "pub fn f() {} // ftlint::allow(r1)\n";
+    let f = lint_source("compressor/format.rs", src);
+    assert!(f.iter().any(|x| x.rule == "allow"), "{f:?}");
+}
+
+#[test]
+fn stale_allow_is_reported() {
+    let src = "pub fn parse() -> u32 {\n    // ftlint::allow(r1, \"suppresses nothing\")\n\
+               \x20   7\n}\n";
+    let f = lint_source("compressor/format.rs", src);
+    assert!(
+        f.iter().any(|x| x.rule == "allow" && x.message.contains("stale")),
+        "{f:?}"
+    );
+}
+
+// --- the real tree ----------------------------------------------------------
+
+#[test]
+fn real_rust_src_tree_is_clean() {
+    let root = ftlint::default_root();
+    let findings = ftlint::lint_tree(&root).expect("lint rust/src");
+    assert!(
+        findings.is_empty(),
+        "rust/src has {} lint finding(s):\n{}",
+        findings.len(),
+        findings
+            .iter()
+            .map(|f| format!("  {}:{}: [{}] {}", f.file, f.line, f.rule, f.message))
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+}
