@@ -3,9 +3,12 @@
 //!
 //! `--json` additionally writes `BENCH_hotpath.json` (flat `key: number`
 //! object, schema `ftsz.hotpath.v1`) so the perf trajectory is tracked
-//! across PRs; `--check` turns the stage-pipeline comparison into a gate:
-//! the run fails if the pipelined 1-worker path is > 10% slower than the
-//! plain sequential driver on the synthetic field.
+//! across PRs; `--check` turns the comparisons into gates: the run fails
+//! if the pipelined 1-worker path is > 10% slower than the plain
+//! sequential driver, if xsz compresses < 2x faster than rsz, if a
+//! chunked `kernel.*` form falls behind its scalar reference, or if the
+//! bitpack archive fails to beat the byte-mode archive on the smooth
+//! corpus.
 
 #[path = "common/mod.rs"]
 mod common;
@@ -46,6 +49,43 @@ impl Metrics {
         out.push_str("\n}\n");
         std::fs::write(path, out).expect("write BENCH_hotpath.json");
         println!("wrote {path}");
+    }
+}
+
+/// Race a chunked kernel against its scalar reference: record throughput
+/// and speedup under `kernel.<name>.*`, and (with `check`) arm the
+/// chunked-≥-scalar gate when the scalar time clears the noise floor.
+#[allow(clippy::too_many_arguments)]
+fn race_kernels(
+    name: &str,
+    reps: usize,
+    iters: usize,
+    n: usize,
+    check: bool,
+    m: &mut Metrics,
+    gate_fail: &mut Option<String>,
+    mut chunked: impl FnMut(),
+    mut scalar: impl FnMut(),
+) {
+    let (tc, _) = time_median(reps, || {
+        for _ in 0..iters {
+            chunked();
+        }
+    });
+    let (ts, _) = time_median(reps, || {
+        for _ in 0..iters {
+            scalar();
+        }
+    });
+    let speedup = ts / tc;
+    let mpts = (n * iters) as f64 / tc / 1e6;
+    println!("kernel.{name:<12} chunked {mpts:>8.1} Mpts/s   speedup vs scalar {speedup:>5.2}x");
+    m.put(&format!("kernel.{name}.mpts"), mpts);
+    m.put(&format!("kernel.{name}.speedup"), speedup);
+    if check && ts >= 1e-3 && !(speedup >= 0.9) {
+        *gate_fail = Some(format!(
+            "FAIL: chunked {name} kernel ran {speedup:.2}x the scalar reference (gate: >= 0.9x)"
+        ));
     }
 }
 
@@ -109,6 +149,131 @@ fn main() {
             "FAIL: xsz compressed only {xsz_speedup:.2}x faster than rsz (gate: 2x)"
         );
         std::process::exit(1);
+    }
+
+    // --- xsz hot-loop kernels: width-8 chunked vs scalar reference ---
+    // The chunked forms are the ones the engine actually calls (and the
+    // ones CI disassembles for vector instructions); the `_scalar` twins
+    // are the pre-kernel per-point loops, raced here on the same buffers.
+    // Under --check a chunked kernel may not fall behind its scalar
+    // reference (ratio >= 0.9 allows timer jitter; the guard skips
+    // sub-ms scalar times where the ratio is scheduler noise).
+    println!("--- xsz chunked kernels vs scalar reference ---");
+    {
+        use ftsz::compressor::kernel as k;
+        use std::hint::black_box as bb;
+        let n = f.data.len();
+        // push each measurement above the noise floor: ~4M points per call
+        let iters = ((1usize << 22) / n).max(1);
+        let mm = k::ftsz_kernel_minmax_scalar(&f.data);
+        let lo = mm.lo as f64;
+        let bound = (mm.hi as f64 - lo).max(1.0) * 1e-4;
+        let twoe = 2.0 * bound;
+        let escape: u64 = (1u64 << 16) - 1;
+        let mut codes_a = vec![0u32; n];
+        let mut dcmp_a = vec![0f32; n];
+        let mut codes_b = vec![0u32; n];
+        let mut dcmp_b = vec![0f32; n];
+        let mut out_a = vec![0f32; n];
+        let mut out_b = vec![0f32; n];
+        let mut gate_fail = None;
+        let data = &f.data;
+        race_kernels(
+            "minmax",
+            reps,
+            iters,
+            n,
+            check,
+            &mut m,
+            &mut gate_fail,
+            || {
+                bb(k::ftsz_kernel_minmax(bb(data)));
+            },
+            || {
+                bb(k::ftsz_kernel_minmax_scalar(bb(data)));
+            },
+        );
+        race_kernels(
+            "quantize",
+            reps,
+            iters,
+            n,
+            check,
+            &mut m,
+            &mut gate_fail,
+            || {
+                bb(k::ftsz_kernel_quantize(
+                    bb(data),
+                    lo,
+                    twoe,
+                    bound,
+                    escape,
+                    &mut codes_a,
+                    &mut dcmp_a,
+                ));
+            },
+            || {
+                bb(k::ftsz_kernel_quantize_scalar(
+                    bb(data),
+                    lo,
+                    twoe,
+                    bound,
+                    escape,
+                    &mut codes_b,
+                    &mut dcmp_b,
+                ));
+            },
+        );
+        race_kernels(
+            "reconstruct",
+            reps,
+            iters,
+            n,
+            check,
+            &mut m,
+            &mut gate_fail,
+            || {
+                bb(k::ftsz_kernel_reconstruct(bb(&codes_a), lo, twoe, escape as u32, &mut out_a));
+            },
+            || {
+                bb(k::ftsz_kernel_reconstruct_scalar(
+                    bb(&codes_a),
+                    lo,
+                    twoe,
+                    escape as u32,
+                    &mut out_b,
+                ));
+            },
+        );
+        if let Some(msg) = gate_fail {
+            if json {
+                m.write_json("BENCH_hotpath.json");
+            }
+            eprintln!("{msg}");
+            std::process::exit(1);
+        }
+
+        // bit-granular packing vs necessary-bytes on the smooth corpus:
+        // archive-bytes ratio (< 1.0 means bitpack wins; deterministic, so
+        // the --check gate is strict)
+        let byte_len =
+            xsz::compress(&f.data, f.dims, &cfg_rel(1e-4)).expect("xsz compress").len();
+        let bit_len = xsz::compress(&f.data, f.dims, &cfg_rel(1e-4).with_xsz_bitpack(true))
+            .expect("xsz bitpack compress")
+            .len();
+        let ratio = bit_len as f64 / byte_len as f64;
+        println!(
+            "kernel.bitpack     archive {bit_len}B vs byte-mode {byte_len}B  ratio {ratio:.3} \
+             (gate under --check: < 1.0)"
+        );
+        m.put("kernel.bitpack.ratio_vs_bytes", ratio);
+        if check && !(ratio < 1.0) {
+            if json {
+                m.write_json("BENCH_hotpath.json");
+            }
+            eprintln!("FAIL: bitpack archive is {ratio:.3}x the byte-mode archive (gate: < 1.0)");
+            std::process::exit(1);
+        }
     }
 
     // stage-pipelined 1-worker path vs the plain sequential driver: same

@@ -221,10 +221,12 @@ pub(crate) fn decode_block<H: DecompressHooks>(
 ) -> Result<()> {
     if archive.header.is_xsz() {
         // SZx-style archives ([`super::xsz`]): no Huffman table, no
-        // prediction — the per-block payload is self-describing. This one
-        // branch is the entire decode-side cost of the fourth engine:
-        // every driver, sink, verify/re-execute path and the parity
-        // recover stage work on xsz archives unchanged.
+        // prediction — the per-block payload is self-describing (byte or
+        // bit-granular fixed-point modes, unpacked + reconstructed by the
+        // chunked [`super::kernel`] routines). This one branch is the
+        // entire decode-side cost of the fourth engine: every driver,
+        // sink, verify/re-execute path and the parity recover stage work
+        // on xsz archives unchanged.
         return super::xsz::decode_block(archive, grid, idx, hooks, apply_hooks, out_block);
     }
     let meta = archive

@@ -71,11 +71,14 @@ pub const FLAG_CLASSIC: u32 = 1 << 2;
 pub const FLAG_ARCHIVE_PARITY: u32 = 1 << 3;
 /// Flag bit: SZx-style ultra-fast archive ([`super::xsz`]). The payload
 /// section holds self-describing per-block byte streams (constant /
-/// fixed-point / verbatim — no Huffman coding), the meta section's Huffman
-/// table is a 2-symbol placeholder that is never consulted, and the
-/// per-block predictor tags are a fixed `Lorenzo` filler. Everything else
+/// fixed-point / verbatim, plus the opt-in bit-granular fixed-point mode
+/// tag 6 — no Huffman coding), the meta section's Huffman table is a
+/// 2-symbol placeholder that is never consulted, and the per-block
+/// predictor tags are a fixed `Lorenzo` filler. Everything else
 /// (sections, offsets, unpred pool, `sum_dc`, parity) reads exactly like
 /// an rsz/ftrsz archive, which is why every decode path works unchanged.
+/// Archives written without `--xsz-bitpack` never contain tag 6 and keep
+/// their original v1 bytes exactly.
 pub const FLAG_XSZ: u32 = 1 << 4;
 
 /// Sanity cap for section sizes (prevents hostile/corrupt headers from

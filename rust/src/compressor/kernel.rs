@@ -1,0 +1,732 @@
+//! SIMD-shaped kernels for the xsz hot loops (ROADMAP item 3).
+//!
+//! The xsz inner loops — block min/max scan, fixed-point quantize,
+//! reconstruction, and code packing/unpacking — are one fused operation
+//! per point with **no cross-point data dependence**: exactly the shape
+//! SZx exploits for ultra-fast throughput. This module restructures each
+//! of them from a scalar per-point loop into explicit width-8 chunked
+//! iterations with per-lane accumulators and select-shaped (branch-free)
+//! lane bodies, the form LLVM's autovectorizer reliably turns into packed
+//! SSE/AVX instructions.
+//!
+//! Every chunked kernel is exported `#[no_mangle] pub extern "C"` so CI
+//! can `objdump -d` the release binary and grep the disassembly for
+//! vector instructions (the bench-smoke asm-inspection step); each also
+//! has a `_scalar` reference twin — the pre-kernel per-point loop — that
+//! the `hotpath` bench races against the chunked form (`kernel.*` keys,
+//! chunked ≥ scalar gated under `--check`) and the unit tests use as the
+//! bit-exactness oracle.
+//!
+//! **Bit-identity contract.** The chunked kernels reproduce the scalar
+//! loops' results *bit for bit*: same f64 division (a reciprocal multiply
+//! `(v-lo)*inv_2e` rounds differently from `(v-lo)/2e` in f64 and would
+//! change archive bytes, so the division stays — `vdivpd` vectorizes
+//! fine), same rounding, same escape decisions. The one place lane
+//! folding can diverge from a sequential scan is the sign of zero: a
+//! strict `<`/`>` sweep keeps the *first-seen* of `+0.0`/`-0.0` (they
+//! compare equal), and the first-seen zero of a lane fold need not be
+//! the first-seen zero of the block. [`ftsz_kernel_minmax`] detects that
+//! rare case (`lo == 0.0 || hi == 0.0`) and re-scans sequentially, so the
+//! stored block-base bytes stay identical to the scalar reference.
+//!
+//! The pack/unpack kernels come in two radices: **bytes** (the original
+//! xsz necessary-leading-bytes modes, 1..=4 bytes per code) and **bits**
+//! (the SZx "necessary bits" mode behind `--xsz-bitpack`: `w`-bit fields,
+//! LSB-first). Both exploit the same alignment fact: 8 codes of `w` bits
+//! occupy exactly `w` bytes, so every width-8 chunk starts byte-aligned
+//! and the per-chunk body carries no bit-position state.
+//!
+//! The decode-side kernels ([`ftsz_kernel_unpack_bytes`],
+//! [`ftsz_kernel_unpack_bits`], [`ftsz_kernel_reconstruct`] and their
+//! helpers) sit on the untrusted-input path and are in ftlint R1 scope:
+//! no panicking constructs, all traversal through length-checked chunk
+//! iterators, length mismatches reported by return value.
+
+// The `extern "C"` ABI is what keeps these symbols stable for the CI
+// disassembly step; the slice parameters are deliberate — the kernels are
+// only ever called from Rust, never across a real FFI boundary, and slices
+// keep the whole module inside `#![forbid(unsafe_code)]`.
+#![allow(improper_ctypes_definitions)]
+
+/// Chunk width of every kernel: 8 lanes covers one AVX2 f32 register (and
+/// two SSE ones) and keeps the remainder loops short.
+pub const LANES: usize = 8;
+
+/// Result of the block min/max scan.
+#[repr(C)]
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MinMax {
+    /// Smallest finite value (`+inf` when none).
+    pub lo: f32,
+    /// Largest finite value (`-inf` when none).
+    pub hi: f32,
+    /// Number of finite values.
+    pub n_finite: usize,
+}
+
+/// Result of the fixed-point quantize kernel.
+#[repr(C)]
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QuantizeOut {
+    /// Points that escaped to the unpredictable pool (non-finite,
+    /// out-of-range, or double-check failures).
+    pub n_escaped: usize,
+    /// The subset of escapes caused by the double check alone (the
+    /// paper's line-7 fallback): `q` was in range but the reconstruction
+    /// missed the bound.
+    pub n_line7: usize,
+}
+
+// ---------------------------------------------------------------------------
+// (a) block min/max scan
+// ---------------------------------------------------------------------------
+
+/// Width-8 chunked finite min/max + finite count — the whole "estimation
+/// pass" of the xsz engine. Per-lane accumulators with select-shaped
+/// updates; the lane fold and the remainder sweep use the same strict
+/// comparisons as the scalar reference, and the ±0.0 first-seen tie is
+/// restored by a sequential re-scan (see the module docs).
+#[no_mangle]
+pub extern "C" fn ftsz_kernel_minmax(block: &[f32]) -> MinMax {
+    let mut lo_l = [f32::INFINITY; LANES];
+    let mut hi_l = [f32::NEG_INFINITY; LANES];
+    let mut n_finite = 0usize;
+    let mut chunks = block.chunks_exact(LANES);
+    for c in chunks.by_ref() {
+        for k in 0..LANES {
+            let v = c[k];
+            let fin = v.is_finite();
+            n_finite += usize::from(fin);
+            lo_l[k] = if fin && v < lo_l[k] { v } else { lo_l[k] };
+            hi_l[k] = if fin && v > hi_l[k] { v } else { hi_l[k] };
+        }
+    }
+    let mut lo = f32::INFINITY;
+    let mut hi = f32::NEG_INFINITY;
+    for k in 0..LANES {
+        if lo_l[k] < lo {
+            lo = lo_l[k];
+        }
+        if hi_l[k] > hi {
+            hi = hi_l[k];
+        }
+    }
+    for &v in chunks.remainder() {
+        if v.is_finite() {
+            n_finite += 1;
+            if v < lo {
+                lo = v;
+            }
+            if v > hi {
+                hi = v;
+            }
+        }
+    }
+    if lo == 0.0 || hi == 0.0 {
+        // a zero endpoint may carry the wrong sign bit under lane folding;
+        // the block base is stored as these exact bytes, so fall back to
+        // the sequential first-seen scan (rare, and the block was already
+        // hot in cache)
+        return ftsz_kernel_minmax_scalar(block);
+    }
+    MinMax { lo, hi, n_finite }
+}
+
+/// Scalar reference: the sequential per-point min/max loop the chunked
+/// kernel must reproduce bit for bit.
+#[no_mangle]
+pub extern "C" fn ftsz_kernel_minmax_scalar(block: &[f32]) -> MinMax {
+    let mut lo = f32::INFINITY;
+    let mut hi = f32::NEG_INFINITY;
+    let mut n_finite = 0usize;
+    for &v in block {
+        if v.is_finite() {
+            if v < lo {
+                lo = v;
+            }
+            if v > hi {
+                hi = v;
+            }
+            n_finite += 1;
+        }
+    }
+    MinMax { lo, hi, n_finite }
+}
+
+// ---------------------------------------------------------------------------
+// (b) fixed-point quantize
+// ---------------------------------------------------------------------------
+
+/// One point of the fixed-point transform, select-shaped: quantize, test
+/// range + double check as mask-style booleans, and emit either the code
+/// or the escape. Shared by the chunked body and the remainder loop so
+/// every path computes identical bits.
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+fn quantize_lane(
+    v: f32,
+    lo: f64,
+    twoe: f64,
+    bound: f64,
+    esc_f: f64,
+    escape32: u32,
+) -> (u32, f32, bool, bool) {
+    let vf = v as f64;
+    let q = ((vf - lo) / twoe).round();
+    // saturating float→int casts make the unconditional conversion safe;
+    // out-of-range lanes are masked out below
+    let qi = q as u64;
+    let raw = (lo + qi as f64 * twoe) as f32;
+    let in_range = v.is_finite() & (q >= 0.0) & (q < esc_f);
+    let ok = in_range & ((vf - raw as f64).abs() <= bound);
+    let code = if ok { qi as u32 } else { escape32 };
+    let d = if ok { raw } else { v };
+    (code, d, ok, in_range)
+}
+
+/// Width-8 chunked fixed-point quantize: `codes[i]` receives the quantized
+/// code (or the all-ones escape) and `dcmp[i]` the bit-exact decoder
+/// reconstruction (or the original value for escapes). `escape` is the
+/// all-ones code of the block's width (bytes or bits radix — the kernel is
+/// width-agnostic). Both output slices must be `block.len()` long; excess
+/// lanes are left untouched. The caller compacts escaped values into the
+/// unpredictable pool afterwards (`codes[i] == escape` marks them — a
+/// valid code can never equal the escape).
+#[no_mangle]
+pub extern "C" fn ftsz_kernel_quantize(
+    block: &[f32],
+    lo: f64,
+    twoe: f64,
+    bound: f64,
+    escape: u64,
+    codes: &mut [u32],
+    dcmp: &mut [f32],
+) -> QuantizeOut {
+    let esc_f = escape as f64;
+    let escape32 = escape as u32;
+    let mut n_escaped = 0usize;
+    let mut n_line7 = 0usize;
+    let n = block.len().min(codes.len()).min(dcmp.len());
+    let n8 = n - n % LANES;
+    let (bh, bt) = block[..n].split_at(n8);
+    let (ch, ct) = codes[..n].split_at_mut(n8);
+    let (dh, dt) = dcmp[..n].split_at_mut(n8);
+    for ((b, c), d) in bh
+        .chunks_exact(LANES)
+        .zip(ch.chunks_exact_mut(LANES))
+        .zip(dh.chunks_exact_mut(LANES))
+    {
+        for k in 0..LANES {
+            let (code, dv, ok, in_range) = quantize_lane(b[k], lo, twoe, bound, esc_f, escape32);
+            c[k] = code;
+            d[k] = dv;
+            n_escaped += usize::from(!ok);
+            n_line7 += usize::from(in_range & !ok);
+        }
+    }
+    for ((&v, c), d) in bt.iter().zip(ct.iter_mut()).zip(dt.iter_mut()) {
+        let (code, dv, ok, in_range) = quantize_lane(v, lo, twoe, bound, esc_f, escape32);
+        *c = code;
+        *d = dv;
+        n_escaped += usize::from(!ok);
+        n_line7 += usize::from(in_range & !ok);
+    }
+    QuantizeOut { n_escaped, n_line7 }
+}
+
+/// Scalar reference: the original branchy per-point quantize loop.
+#[no_mangle]
+pub extern "C" fn ftsz_kernel_quantize_scalar(
+    block: &[f32],
+    lo: f64,
+    twoe: f64,
+    bound: f64,
+    escape: u64,
+    codes: &mut [u32],
+    dcmp: &mut [f32],
+) -> QuantizeOut {
+    let escape32 = escape as u32;
+    let mut n_escaped = 0usize;
+    let mut n_line7 = 0usize;
+    let n = block.len().min(codes.len()).min(dcmp.len());
+    for p in 0..n {
+        let v = block[p];
+        let mut encoded = false;
+        if v.is_finite() {
+            let q = ((v as f64 - lo) / twoe).round();
+            if q >= 0.0 && q < escape as f64 {
+                let qi = q as u64;
+                let raw = (lo + qi as f64 * twoe) as f32;
+                if (v as f64 - raw as f64).abs() <= bound {
+                    codes[p] = qi as u32;
+                    dcmp[p] = raw;
+                    encoded = true;
+                } else {
+                    n_line7 += 1;
+                }
+            }
+        }
+        if !encoded {
+            codes[p] = escape32;
+            dcmp[p] = v;
+            n_escaped += 1;
+        }
+    }
+    QuantizeOut { n_escaped, n_line7 }
+}
+
+// ---------------------------------------------------------------------------
+// (c) reconstruction
+// ---------------------------------------------------------------------------
+
+/// Width-8 chunked reconstruction: `out[i] = (base + codes[i]*2e) as f32`
+/// for **every** lane, branch-free — escape lanes receive a (finite,
+/// harmless) placeholder the caller overwrites from the unpredictable
+/// pool. Returns the escape count so the caller knows how many pool
+/// values to consume. Decode-path: length mismatches truncate to the
+/// shorter slice (the caller pre-validates), no indexing, no panics.
+#[no_mangle]
+pub extern "C" fn ftsz_kernel_reconstruct(
+    codes: &[u32],
+    base: f64,
+    twoe: f64,
+    escape: u32,
+    out: &mut [f32],
+) -> usize {
+    let mut n_escaped = 0usize;
+    let mut cc = codes.chunks_exact(LANES);
+    let mut oc = out.chunks_exact_mut(LANES);
+    for (c, o) in cc.by_ref().zip(oc.by_ref()) {
+        for k in 0..LANES {
+            o[k] = (base + c[k] as f64 * twoe) as f32;
+            n_escaped += usize::from(c[k] == escape);
+        }
+    }
+    for (&c, o) in cc.remainder().iter().zip(oc.into_remainder()) {
+        *o = (base + c as f64 * twoe) as f32;
+        n_escaped += usize::from(c == escape);
+    }
+    n_escaped
+}
+
+/// Scalar reference: the sequential per-point reconstruction loop.
+#[no_mangle]
+pub extern "C" fn ftsz_kernel_reconstruct_scalar(
+    codes: &[u32],
+    base: f64,
+    twoe: f64,
+    escape: u32,
+    out: &mut [f32],
+) -> usize {
+    let mut n_escaped = 0usize;
+    for (&c, o) in codes.iter().zip(out.iter_mut()) {
+        *o = (base + c as f64 * twoe) as f32;
+        if c == escape {
+            n_escaped += 1;
+        }
+    }
+    n_escaped
+}
+
+// ---------------------------------------------------------------------------
+// byte-radix packing (modes 1..=4: necessary leading bytes)
+// ---------------------------------------------------------------------------
+
+/// Largest code in the slice (chunked max reduction — the width/cap
+/// pre-scan `pack_block` runs before emission).
+#[no_mangle]
+pub extern "C" fn ftsz_kernel_max_code(codes: &[u32]) -> u32 {
+    let mut m_l = [0u32; LANES];
+    let mut chunks = codes.chunks_exact(LANES);
+    for c in chunks.by_ref() {
+        for k in 0..LANES {
+            m_l[k] = m_l[k].max(c[k]);
+        }
+    }
+    let mut m = 0u32;
+    for &lane in &m_l {
+        m = m.max(lane);
+    }
+    for &c in chunks.remainder() {
+        m = m.max(c);
+    }
+    m
+}
+
+/// Monomorphized per-width body of the byte pack: 8 codes → `8 * NB`
+/// output bytes per chunk, little-endian truncation to `NB` bytes each.
+fn pack_bytes_n<const NB: usize>(codes: &[u32], out: &mut [u8]) {
+    let n8 = codes.len() - codes.len() % LANES;
+    let (ch, ct) = codes.split_at(n8);
+    let (oh, ot) = out.split_at_mut(n8 * NB);
+    for (c, o) in ch.chunks_exact(LANES).zip(oh.chunks_exact_mut(LANES * NB)) {
+        for k in 0..LANES {
+            let le = c[k].to_le_bytes();
+            for j in 0..NB {
+                o[k * NB + j] = le[j];
+            }
+        }
+    }
+    for (c, o) in ct.iter().zip(ot.chunks_exact_mut(NB)) {
+        let le = c.to_le_bytes();
+        o.copy_from_slice(&le[..NB]);
+    }
+}
+
+/// Chunked byte-radix pack: each code's `nb` low bytes, little-endian —
+/// byte-identical to the old per-code `extend_from_slice` loop, emitted
+/// a full chunk at a time. `out` must be exactly `codes.len() * nb`
+/// bytes; returns `false` (writing nothing) on any shape mismatch.
+#[no_mangle]
+pub extern "C" fn ftsz_kernel_pack_bytes(codes: &[u32], nb: usize, out: &mut [u8]) -> bool {
+    if out.len() != codes.len().saturating_mul(nb) {
+        return false;
+    }
+    match nb {
+        1 => pack_bytes_n::<1>(codes, out),
+        2 => pack_bytes_n::<2>(codes, out),
+        3 => pack_bytes_n::<3>(codes, out),
+        4 => pack_bytes_n::<4>(codes, out),
+        _ => return false,
+    }
+    true
+}
+
+/// Monomorphized per-width body of the byte unpack (decode path: chunk
+/// iterators only, lengths pre-validated by the caller).
+fn unpack_bytes_n<const NB: usize>(body: &[u8], codes: &mut [u32]) {
+    let n8 = codes.len() - codes.len() % LANES;
+    let (bh, bt) = body.split_at(n8 * NB);
+    let (ch, ct) = codes.split_at_mut(n8);
+    for (b, c) in bh.chunks_exact(LANES * NB).zip(ch.chunks_exact_mut(LANES)) {
+        for k in 0..LANES {
+            let mut q = 0u32;
+            for j in 0..NB {
+                q |= (b[k * NB + j] as u32) << (8 * j as u32);
+            }
+            c[k] = q;
+        }
+    }
+    for (b, c) in bt.chunks_exact(NB).zip(ct.iter_mut()) {
+        let mut q = 0u32;
+        for (j, &x) in b.iter().enumerate() {
+            q |= (x as u32) << (8 * j as u32);
+        }
+        *c = q;
+    }
+}
+
+/// Chunked byte-radix unpack: the exact inverse of
+/// [`ftsz_kernel_pack_bytes`]. `body` must be exactly
+/// `codes.len() * nb` bytes; returns `false` (writing nothing) on any
+/// shape mismatch — the decode arm maps that to a clean error.
+#[no_mangle]
+pub extern "C" fn ftsz_kernel_unpack_bytes(body: &[u8], nb: usize, codes: &mut [u32]) -> bool {
+    if body.len() != codes.len().saturating_mul(nb) {
+        return false;
+    }
+    match nb {
+        1 => unpack_bytes_n::<1>(body, codes),
+        2 => unpack_bytes_n::<2>(body, codes),
+        3 => unpack_bytes_n::<3>(body, codes),
+        4 => unpack_bytes_n::<4>(body, codes),
+        _ => return false,
+    }
+    true
+}
+
+// ---------------------------------------------------------------------------
+// bit-radix packing (mode 6: SZx "necessary bits", LSB-first)
+// ---------------------------------------------------------------------------
+
+/// Exact byte length of `n_codes` packed `w`-bit fields.
+pub fn packed_len(n_codes: usize, w: u32) -> usize {
+    (n_codes as u64 * w as u64).div_ceil(8) as usize
+}
+
+/// Streaming tail/fallback of the bit pack: LSB-first emission through a
+/// u64 accumulator. `out` must hold `packed_len(codes.len(), w)` bytes
+/// (extra bytes are left untouched).
+fn pack_bits_stream(codes: &[u32], w: u32, out: &mut [u8]) {
+    let mut acc = 0u64;
+    let mut nbits = 0u32;
+    let mut it = out.iter_mut();
+    for &c in codes {
+        // nbits < 8 here, w <= 32: the shifted code fits the accumulator
+        acc |= (c as u64) << nbits;
+        nbits += w;
+        while nbits >= 8 {
+            if let Some(b) = it.next() {
+                *b = acc as u8;
+            }
+            acc >>= 8;
+            nbits -= 8;
+        }
+    }
+    if nbits > 0 {
+        if let Some(b) = it.next() {
+            *b = acc as u8;
+        }
+    }
+}
+
+/// Chunked bit-radix pack: `w`-bit fields, LSB-first within and across
+/// bytes. Exploits the alignment fact that 8 codes of `w` bits span
+/// exactly `w` bytes: every chunk starts byte-aligned, so for `w <= 8`
+/// the whole chunk assembles in one u64 with no carried bit position.
+/// `out` must be exactly `packed_len(codes.len(), w)` bytes; returns
+/// `false` (writing nothing) on any shape mismatch.
+#[no_mangle]
+pub extern "C" fn ftsz_kernel_pack_bits(codes: &[u32], w: u32, out: &mut [u8]) -> bool {
+    if w == 0 || w > 32 || out.len() != packed_len(codes.len(), w) {
+        return false;
+    }
+    let n8 = codes.len() - codes.len() % LANES;
+    let (ch, ct) = codes.split_at(n8);
+    let (oh, ot) = out.split_at_mut(n8 / LANES * w as usize);
+    if w <= 8 {
+        for (c, o) in ch.chunks_exact(LANES).zip(oh.chunks_exact_mut(w as usize)) {
+            let mut acc = 0u64;
+            for k in 0..LANES {
+                acc |= (c[k] as u64) << (k as u32 * w);
+            }
+            for (j, b) in o.iter_mut().enumerate() {
+                *b = (acc >> (8 * j as u32)) as u8;
+            }
+        }
+    } else {
+        for (c, o) in ch.chunks_exact(LANES).zip(oh.chunks_exact_mut(w as usize)) {
+            pack_bits_stream(c, w, o);
+        }
+    }
+    pack_bits_stream(ct, w, ot);
+    true
+}
+
+/// Streaming tail/fallback of the bit unpack (decode path: iterator
+/// traversal only; byte exhaustion simply stops, the caller's length
+/// pre-check makes that unreachable).
+fn unpack_bits_stream(body: &[u8], w: u32, codes: &mut [u32]) {
+    let mask: u64 = (1u64 << w) - 1;
+    let mut acc = 0u64;
+    let mut nbits = 0u32;
+    let mut it = body.iter();
+    for c in codes.iter_mut() {
+        while nbits < w {
+            let Some(&b) = it.next() else { return };
+            // nbits < w <= 32: the shifted byte fits the accumulator
+            acc |= (b as u64) << nbits;
+            nbits += 8;
+        }
+        *c = (acc & mask) as u32;
+        acc >>= w;
+        nbits -= w;
+    }
+}
+
+/// Chunked bit-radix unpack: the exact inverse of
+/// [`ftsz_kernel_pack_bits`], with the same byte-aligned-chunk structure.
+/// `body` must be exactly `packed_len(codes.len(), w)` bytes; returns
+/// `false` (writing nothing) on any shape mismatch — the decode arm maps
+/// that to a clean error.
+#[no_mangle]
+pub extern "C" fn ftsz_kernel_unpack_bits(body: &[u8], w: u32, codes: &mut [u32]) -> bool {
+    if w == 0 || w > 32 || body.len() != packed_len(codes.len(), w) {
+        return false;
+    }
+    let n8 = codes.len() - codes.len() % LANES;
+    let (bh, bt) = body.split_at(n8 / LANES * w as usize);
+    let (ch, ct) = codes.split_at_mut(n8);
+    if w <= 8 {
+        let mask: u64 = (1u64 << w) - 1;
+        for (b, c) in bh.chunks_exact(w as usize).zip(ch.chunks_exact_mut(LANES)) {
+            let mut acc = 0u64;
+            for (j, &x) in b.iter().enumerate() {
+                acc |= (x as u64) << (8 * j as u32);
+            }
+            for k in 0..LANES {
+                c[k] = ((acc >> (k as u32 * w)) & mask) as u32;
+            }
+        }
+    } else {
+        for (b, c) in bh.chunks_exact(w as usize).zip(ch.chunks_exact_mut(LANES)) {
+            unpack_bits_stream(b, w, c);
+        }
+    }
+    unpack_bits_stream(bt, w, ct);
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn noisy_block(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Pcg32::new(seed);
+        (0..n).map(|_| (rng.f32() - 0.5) * 20.0).collect()
+    }
+
+    #[test]
+    fn minmax_matches_scalar_on_everything() {
+        let mut cases: Vec<Vec<f32>> = vec![
+            vec![],
+            vec![1.5],
+            vec![f32::NAN; 9],
+            vec![f32::INFINITY, f32::NEG_INFINITY, 3.0, -7.0],
+            vec![0.0, -0.0, 0.0, -0.0, 1.0, -1.0, 0.0],
+            vec![-0.0; 23],
+            vec![0.0; 8],
+        ];
+        for n in [7, 8, 9, 64, 100, 1000] {
+            cases.push(noisy_block(n, n as u64));
+            // zero-heavy blocks exercise the ±0.0 rescue path at width
+            let mut z = noisy_block(n, n as u64 + 7);
+            for (i, v) in z.iter_mut().enumerate() {
+                if i % 3 == 0 {
+                    *v = if i % 6 == 0 { 0.0 } else { -0.0 };
+                }
+                if i % 11 == 0 {
+                    *v = f32::NAN;
+                }
+            }
+            z.iter_mut().filter(|v| **v > 0.0).for_each(|v| *v = -*v);
+            cases.push(z);
+        }
+        for block in &cases {
+            let a = ftsz_kernel_minmax(block);
+            let b = ftsz_kernel_minmax_scalar(block);
+            assert_eq!(a.n_finite, b.n_finite);
+            assert_eq!(a.lo.to_bits(), b.lo.to_bits(), "lo sign/value {block:?}");
+            assert_eq!(a.hi.to_bits(), b.hi.to_bits(), "hi sign/value {block:?}");
+        }
+    }
+
+    #[test]
+    fn quantize_matches_scalar_bit_for_bit() {
+        for n in [0usize, 1, 7, 8, 9, 100, 1000] {
+            let mut block = noisy_block(n, 42 + n as u64);
+            if n > 4 {
+                block[n / 2] = f32::NAN;
+                block[n / 3] = f32::INFINITY;
+            }
+            let mm = ftsz_kernel_minmax_scalar(&block);
+            let lo = if mm.n_finite > 0 { mm.lo as f64 } else { 0.0 };
+            for (bound, escape) in [(1e-3, 255u64), (1e-2, 65535), (1e-6, (1 << 20) - 1)] {
+                let twoe = 2.0 * bound;
+                let mut c1 = vec![0u32; n];
+                let mut d1 = vec![0f32; n];
+                let mut c2 = vec![0u32; n];
+                let mut d2 = vec![0f32; n];
+                let a = ftsz_kernel_quantize(&block, lo, twoe, bound, escape, &mut c1, &mut d1);
+                let b =
+                    ftsz_kernel_quantize_scalar(&block, lo, twoe, bound, escape, &mut c2, &mut d2);
+                assert_eq!(a, b, "n={n} bound={bound}");
+                assert_eq!(c1, c2);
+                let bits = |d: &[f32]| d.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+                assert_eq!(bits(&d1), bits(&d2));
+            }
+        }
+    }
+
+    #[test]
+    fn reconstruct_matches_scalar_and_counts_escapes() {
+        let mut rng = Pcg32::new(9);
+        for n in [0usize, 1, 8, 13, 257] {
+            let escape = 4095u32;
+            let codes: Vec<u32> = (0..n)
+                .map(|i| if i % 10 == 3 { escape } else { (rng.f32() * 4000.0) as u32 })
+                .collect();
+            let mut o1 = vec![0f32; n];
+            let mut o2 = vec![0f32; n];
+            let a = ftsz_kernel_reconstruct(&codes, -3.25, 2e-3, escape, &mut o1);
+            let b = ftsz_kernel_reconstruct_scalar(&codes, -3.25, 2e-3, escape, &mut o2);
+            assert_eq!(a, b);
+            assert_eq!(a, codes.iter().filter(|&&c| c == escape).count());
+            assert_eq!(
+                o1.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                o2.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+            );
+        }
+    }
+
+    #[test]
+    fn byte_pack_matches_the_old_emit_loop_and_roundtrips() {
+        let mut rng = Pcg32::new(11);
+        for nb in 1usize..=4 {
+            for n in [0usize, 1, 7, 8, 9, 100] {
+                let cap: u64 = 1u64 << (8 * nb as u32);
+                let codes: Vec<u32> =
+                    (0..n).map(|_| ((rng.f32() as f64 * cap as f64) as u64 % cap) as u32).collect();
+                // the pre-kernel reference: one extend_from_slice per code
+                let mut want = Vec::new();
+                for &c in &codes {
+                    want.extend_from_slice(&c.to_le_bytes()[..nb]);
+                }
+                let mut got = vec![0u8; n * nb];
+                assert!(ftsz_kernel_pack_bytes(&codes, nb, &mut got));
+                assert_eq!(got, want, "nb={nb} n={n}");
+                let mut back = vec![0u32; n];
+                assert!(ftsz_kernel_unpack_bytes(&got, nb, &mut back));
+                assert_eq!(back, codes);
+            }
+        }
+        // shape mismatches are refused, not mis-written
+        assert!(!ftsz_kernel_pack_bytes(&[1, 2], 2, &mut [0u8; 3]));
+        assert!(!ftsz_kernel_unpack_bytes(&[0u8; 3], 2, &mut [0u32; 2]));
+        assert!(!ftsz_kernel_pack_bytes(&[1], 5, &mut [0u8; 5]));
+    }
+
+    #[test]
+    fn bit_pack_roundtrips_every_width() {
+        let mut rng = Pcg32::new(23);
+        for w in 1u32..=32 {
+            let mask: u64 = (1u64 << w) - 1;
+            for n in [0usize, 1, 7, 8, 9, 65, 129] {
+                let codes: Vec<u32> = (0..n)
+                    .map(|i| {
+                        if i % 13 == 5 {
+                            mask as u32 // the all-ones escape
+                        } else {
+                            ((rng.f32() as f64 * mask as f64) as u64 & mask) as u32
+                        }
+                    })
+                    .collect();
+                let mut packed = vec![0u8; packed_len(n, w)];
+                assert!(ftsz_kernel_pack_bits(&codes, w, &mut packed), "w={w} n={n}");
+                let mut back = vec![0u32; n];
+                assert!(ftsz_kernel_unpack_bits(&packed, w, &mut back), "w={w} n={n}");
+                assert_eq!(back, codes, "w={w} n={n}");
+            }
+        }
+        assert!(!ftsz_kernel_pack_bits(&[1, 2], 0, &mut []));
+        assert!(!ftsz_kernel_pack_bits(&[1, 2], 33, &mut [0u8; 9]));
+        assert!(!ftsz_kernel_unpack_bits(&[0u8; 2], 9, &mut [0u32; 2]));
+    }
+
+    #[test]
+    fn bit_pack_chunks_agree_with_the_streaming_form() {
+        // the chunked w<=8 fast path and the streaming fallback must emit
+        // identical bytes; force both through aligned + ragged lengths
+        let mut rng = Pcg32::new(31);
+        for w in [1u32, 3, 7, 8, 11, 17, 31, 32] {
+            let mask: u64 = (1u64 << w) - 1;
+            let codes: Vec<u32> =
+                (0..203).map(|_| ((rng.f32() as f64 * mask as f64) as u64 & mask) as u32).collect();
+            let mut a = vec![0u8; packed_len(codes.len(), w)];
+            assert!(ftsz_kernel_pack_bits(&codes, w, &mut a));
+            let mut b = vec![0u8; a.len()];
+            pack_bits_stream(&codes, w, &mut b);
+            assert_eq!(a, b, "w={w}");
+        }
+    }
+
+    #[test]
+    fn max_code_reduction() {
+        assert_eq!(ftsz_kernel_max_code(&[]), 0);
+        assert_eq!(ftsz_kernel_max_code(&[7]), 7);
+        let mut v: Vec<u32> = (0..100).collect();
+        v[63] = 9_000_000;
+        assert_eq!(ftsz_kernel_max_code(&v), 9_000_000);
+    }
+}

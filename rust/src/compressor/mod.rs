@@ -35,6 +35,7 @@ pub mod dualquant;
 pub mod engine;
 pub mod format;
 pub mod huffman;
+pub mod kernel;
 pub mod lorenzo;
 pub mod lossless;
 pub mod offload;
@@ -183,6 +184,12 @@ pub struct CompressionConfig {
     /// (CRC-checked sections, voting header, XOR parity groups — see
     /// [`crate::ft::parity`]); `None` writes the legacy v1 bytes.
     pub archive_parity: Option<crate::ft::parity::ParityParams>,
+    /// xsz/ftxsz only: pack fixed-point codes with SZx-style "necessary
+    /// bits" (`ceil(log2(qmax+1))` bits/point, block-mode tag 6) instead
+    /// of necessary whole bytes. Format-visible: bitpacked archives need
+    /// a decoder that knows tag 6; all other block modes keep their v1
+    /// bytes exactly. Ignored by the rsz/sz-classic engines.
+    pub xsz_bitpack: bool,
 }
 
 impl CompressionConfig {
@@ -198,7 +205,15 @@ impl CompressionConfig {
             parallelism: Parallelism::Sequential,
             stage_overlap: true,
             archive_parity: None,
+            xsz_bitpack: false,
         }
+    }
+
+    /// Builder: bit-granular xsz code packing (block-mode tag 6; see the
+    /// [`xsz_bitpack`](Self::xsz_bitpack) field docs).
+    pub fn with_xsz_bitpack(mut self, on: bool) -> Self {
+        self.xsz_bitpack = on;
+        self
     }
 
     /// Builder: toggle 1-worker per-stage software pipelining (see

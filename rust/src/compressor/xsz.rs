@@ -5,7 +5,7 @@
 //! chosen by a sampling pass) and entropy-coding (a global canonical
 //! Huffman table), xsz — following SZx (Yu et al., 2022) — spends almost
 //! none: there is **no sampling/estimation pass**, **no prediction**, and
-//! **no Huffman coding**. Each block is encoded in one of three
+//! **no Huffman coding**. Each block is encoded in one of four
 //! self-describing modes:
 //!
 //! * **constant** — when the block's midrange value covers every point
@@ -20,7 +20,22 @@
 //!   the double-check pushes out of bound);
 //! * **verbatim** — degenerate blocks (no finite values, or a range too
 //!   wide for 4-byte codes) store every value raw in the unpredictable
-//!   pool.
+//!   pool;
+//! * **bitpack** (tag 6, opt-in via [`CompressionConfig::xsz_bitpack`] /
+//!   `--xsz-bitpack`) — SZx's *necessary bits*: fixed-point codes packed
+//!   at `w = ceil(log2(qmax + 2))` bits per point, LSB-first, instead of
+//!   rounding the width up to whole bytes. Same all-ones escape
+//!   convention, same 32-bit ceiling (so the verbatim fallback triggers
+//!   identically); archives that never use it are byte-for-byte the v1
+//!   encoding.
+//!
+//! The hot loops themselves — min/max scan, fixed-point quantize,
+//! reconstruction, pack/unpack — live in [`super::kernel`] as width-8
+//! chunked, branch-free routines the autovectorizer turns into packed
+//! SSE/AVX code (CI disassembles the `#[no_mangle]` symbols to watch
+//! this). The hooked sequential driver and the duplication-protected ft
+//! quantize keep per-point loops so injection semantics are unchanged;
+//! bytes are identical on every path.
 //!
 //! The archive is the ordinary container format with [`format::FLAG_XSZ`]
 //! set: per-block byte payloads behind `payload_offsets`, escapes in the
@@ -61,6 +76,7 @@ use super::engine::{
 };
 use super::format::{self, Archive, BlockMeta, BlockPayload, Header, Writer};
 use super::huffman::HuffmanTable;
+use super::kernel;
 use super::stage::{BlockCodec, StageTimings};
 use super::stream::{self, SlabSource};
 use super::{CompressionConfig, Parallelism};
@@ -81,6 +97,17 @@ const MODE_CONSTANT: u8 = 0;
 const MODE_FIXED_MAX: u8 = 4;
 /// Block mode tag: every value lives verbatim in the unpred pool.
 const MODE_VERBATIM: u8 = 5;
+/// Block mode tag: bit-granular fixed-point codes (an f32 base, a width
+/// byte `w` in 1..=32, then `ceil(n*w/8)` LSB-first packed bytes follow).
+/// Written only under [`CompressionConfig::xsz_bitpack`]; the all-ones
+/// `w`-bit code is the escape, mirroring the byte modes.
+const MODE_BITPACK: u8 = 6;
+/// Internal (never serialized) mode encoding for bitpack blocks:
+/// `MODE_BITPACK_W0 + w` carries the chosen bit width `w` in 1..=32
+/// through the driver plumbing in the same `u8` slot the byte modes use;
+/// `pack_block` folds it back to the [`MODE_BITPACK`] wire tag + width
+/// byte. 64 keeps the range 65..=96 disjoint from every wire tag.
+const MODE_BITPACK_W0: u8 = 64;
 
 // ---------------------------------------------------------------------------
 // the shared per-block encoder (hook points live)
@@ -101,6 +128,7 @@ fn quantize_block<H: Hooks>(
     bi: usize,
     block: &[f32],
     bound: f64,
+    bitpack: bool,
     protect: bool,
     hooks: &mut H,
     codes: &mut Vec<u32>,
@@ -113,22 +141,13 @@ fn quantize_block<H: Hooks>(
     dcmp_block.clear();
     dcmp_block.resize(block.len(), 0.0);
 
-    // one scan: finite min/max (the whole "estimation pass" of this engine)
-    let mut lo = f64::INFINITY;
-    let mut hi = f64::NEG_INFINITY;
-    let mut n_finite = 0usize;
-    for &v in block {
-        if v.is_finite() {
-            let v = v as f64;
-            if v < lo {
-                lo = v;
-            }
-            if v > hi {
-                hi = v;
-            }
-            n_finite += 1;
-        }
-    }
+    // one scan: finite min/max (the whole "estimation pass" of this
+    // engine), width-8 chunked — bit-identical to the sequential sweep
+    // including the ±0.0 first-seen tie (see `kernel`'s module docs)
+    let mm = kernel::ftsz_kernel_minmax(block);
+    let lo = mm.lo as f64;
+    let hi = mm.hi as f64;
+    let n_finite = mm.n_finite;
 
     // ---- constant-block detection (SZx's fast path) ----
     if n_finite == block.len() && hi - lo <= twoe {
@@ -170,31 +189,83 @@ fn quantize_block<H: Hooks>(
         return (MODE_VERBATIM, 0.0);
     }
 
-    // ---- necessary-leading-bytes width from the block range ----
+    // ---- necessary code width from the block range ----
     // base is an f32 from the data, so `base as f64 == lo` exactly: the
     // decoder reads the stored f32 and reproduces identical arithmetic.
+    // Byte radix picks 1..=4 whole bytes; bit radix (`--xsz-bitpack`)
+    // picks the smallest w in 1..=32 bits. Both reserve the all-ones
+    // code as the escape, and both top out at 32-bit codes — the
+    // verbatim-fallback condition is identical.
     let base = lo as f32;
     let qmax = ((hi - lo) / twoe).round();
-    let mut nb = 0u8;
-    for cand in 1..=MODE_FIXED_MAX {
-        // codes 0..=qmax plus the all-ones escape must fit in `cand` bytes
-        let cap = ((1u64 << (8 * cand as u32)) - 2) as f64;
-        if qmax <= cap {
-            nb = cand;
-            break;
+    let mut mode = 0u8;
+    if bitpack {
+        for w in 1..=32u8 {
+            // codes 0..=qmax plus the all-ones escape must fit in w bits
+            let cap = ((1u64 << w) - 2) as f64;
+            if qmax <= cap {
+                mode = MODE_BITPACK_W0 + w;
+                break;
+            }
+        }
+    } else {
+        for cand in 1..=MODE_FIXED_MAX {
+            // codes 0..=qmax plus the all-ones escape must fit in `cand` bytes
+            let cap = ((1u64 << (8 * cand as u32)) - 2) as f64;
+            if qmax <= cap {
+                mode = cand;
+                break;
+            }
         }
     }
-    if nb == 0 {
-        // range too wide even for 4-byte codes at this bound
+    if mode == 0 {
+        // range too wide even for 32-bit codes at this bound
         for (p, &v) in block.iter().enumerate() {
             unpred.push(v);
             dcmp_block[p] = v;
         }
         return (MODE_VERBATIM, 0.0);
     }
-    let escape: u64 = (1u64 << (8 * nb as u32)) - 1;
+    let escape: u64 = if bitpack {
+        (1u64 << (mode - MODE_BITPACK_W0)) - 1
+    } else {
+        (1u64 << (8 * mode as u32)) - 1
+    };
 
     // ---- fixed-point quantization with escape + double check ----
+    // Hook-free, unprotected callers (the pipelined/parallel drivers and
+    // plain `compress`) take the width-8 chunked kernel; the hooked
+    // sequential driver and the duplication-protected ft path keep the
+    // per-point loop so injection and `protected_eval` semantics are
+    // untouched. `PARALLEL_SAFE` certifies the hooks are numerically
+    // inert (same contract `chain::select_driver` relies on), so both
+    // paths produce identical bytes — `drivers_are_byte_identical`
+    // proves it.
+    if H::PARALLEL_SAFE && !protect {
+        let start = codes.len();
+        codes.resize(start + block.len(), 0);
+        let out = kernel::ftsz_kernel_quantize(
+            block,
+            lo,
+            twoe,
+            bound,
+            escape,
+            &mut codes[start..],
+            dcmp_block,
+        );
+        if out.n_escaped > 0 {
+            // compact escaped originals into the shared pool, in point
+            // order (a valid code can never equal the all-ones escape)
+            let escape32 = escape as u32;
+            for (&c, &v) in codes[start..].iter().zip(block.iter()) {
+                if c == escape32 {
+                    unpred.push(v);
+                }
+            }
+        }
+        stats.line7_fallbacks += out.n_line7;
+        return (mode, base);
+    }
     for (p, &v) in block.iter().enumerate() {
         let mut encoded = false;
         if v.is_finite() {
@@ -229,7 +300,7 @@ fn quantize_block<H: Hooks>(
             dcmp_block[p] = v;
         }
     }
-    (nb, base)
+    (mode, base)
 }
 
 /// Encode stage: pack one quantized block into its self-describing byte
@@ -239,31 +310,65 @@ fn quantize_block<H: Hooks>(
 /// equivalent abort, never a silent truncation.
 fn pack_block(mode: u8, param: f32, codes: &[u32], n_unpred: u32) -> Result<BlockPayload> {
     let mut out = Vec::with_capacity(1 + 4 + codes.len() * mode.min(4) as usize);
-    out.push(mode);
+    let mut payload_bits = 0u64;
     match mode {
         MODE_CONSTANT | MODE_VERBATIM => {
+            out.push(mode);
             if mode == MODE_CONSTANT {
                 bytes::put_f32(&mut out, param);
             }
         }
         1..=MODE_FIXED_MAX => {
+            out.push(mode);
             bytes::put_f32(&mut out, param);
             let nb = mode as usize;
             let cap: u64 = 1u64 << (8 * nb as u32);
-            for &c in codes {
-                if (c as u64) >= cap {
-                    return Err(Error::CrashEquivalent(format!(
-                        "xsz code {c} outside the block's {nb}-byte width"
-                    )));
-                }
-                out.extend_from_slice(&c.to_le_bytes()[..nb]);
+            // chunked width pre-scan, then one chunked emit — byte-identical
+            // to the old per-code `extend_from_slice` loop (regression test
+            // `pack_block_bytes_match_the_old_emit_loop`), which wrote one
+            // byte per iteration per code
+            if kernel::ftsz_kernel_max_code(codes) as u64 >= cap {
+                let c = codes.iter().find(|&&c| (c as u64) >= cap).copied().unwrap_or(0);
+                return Err(Error::CrashEquivalent(format!(
+                    "xsz code {c} outside the block's {nb}-byte width"
+                )));
             }
+            let head = out.len();
+            out.resize(head + codes.len() * nb, 0);
+            if !kernel::ftsz_kernel_pack_bytes(codes, nb, &mut out[head..]) {
+                return Err(Error::Format("xsz: internal byte-pack shape mismatch".into()));
+            }
+        }
+        w_mode if w_mode > MODE_BITPACK_W0 && w_mode <= MODE_BITPACK_W0 + 32 => {
+            // bitpack: wire tag 6 + f32 base + width byte + packed bits.
+            // payload_bits records the *exact* bit cost (48 header bits +
+            // n·w code bits); the stored bytes round up to whole bytes and
+            // `format::assemble`'s ceil reproduces `out.len()` exactly.
+            let w = (w_mode - MODE_BITPACK_W0) as u32;
+            out.push(MODE_BITPACK);
+            bytes::put_f32(&mut out, param);
+            out.push(w as u8);
+            let cap: u64 = 1u64 << w;
+            if kernel::ftsz_kernel_max_code(codes) as u64 >= cap {
+                let c = codes.iter().find(|&&c| (c as u64) >= cap).copied().unwrap_or(0);
+                return Err(Error::CrashEquivalent(format!(
+                    "xsz code {c} outside the block's {w}-bit width"
+                )));
+            }
+            let head = out.len();
+            out.resize(head + kernel::packed_len(codes.len(), w), 0);
+            if !kernel::ftsz_kernel_pack_bits(codes, w, &mut out[head..]) {
+                return Err(Error::Format("xsz: internal bit-pack shape mismatch".into()));
+            }
+            payload_bits = head as u64 * 8 + codes.len() as u64 * w as u64;
         }
         other => {
             return Err(Error::Format(format!("xsz: internal bad mode tag {other}")));
         }
     }
-    let payload_bits = out.len() as u64 * 8;
+    if payload_bits == 0 {
+        payload_bits = out.len() as u64 * 8;
+    }
     Ok(BlockPayload {
         meta: BlockMeta {
             // fixed filler tag: FLAG_XSZ archives never consult the
@@ -432,6 +537,7 @@ fn run_sequential<H: Hooks>(
             bi,
             &scratch,
             bound,
+            cfg.xsz_bitpack,
             params.protect,
             hooks,
             &mut codes,
@@ -544,10 +650,12 @@ struct QuantizedBlock {
 /// `bi` indexes the (possibly slab-local) `grid`; `block_id` is the
 /// archive-global block number — they differ only on the streaming chain,
 /// where `grid` covers one slab.
+#[allow(clippy::too_many_arguments)]
 fn quantize_stage(
     grid: &BlockGrid,
     bound: f64,
     params: CoreParams,
+    bitpack: bool,
     bi: usize,
     block_id: usize,
     scratch: &mut Vec<f32>,
@@ -567,6 +675,7 @@ fn quantize_stage(
         block_id,
         scratch,
         bound,
+        bitpack,
         params.protect,
         &mut NoHooks,
         &mut codes,
@@ -729,7 +838,8 @@ fn run_pipelined(
         &mut main,
         PackState::new(params, n_blocks),
         |m, bi| {
-            let qb = quantize_stage(&grid, bound, params, bi, bi, &mut m.scratch, data);
+            let qb =
+                quantize_stage(&grid, bound, params, cfg.xsz_bitpack, bi, bi, &mut m.scratch, data);
             m.stages.prepare_ns += qb.prepare_ns;
             m.stages.quantize_ns += qb.quantize_ns;
             m.unpred_all.extend_from_slice(&qb.unpred);
@@ -787,7 +897,8 @@ fn run_parallel(
         workers,
         |bi| {
             let mut scratch = Vec::new();
-            let mut qb = quantize_stage(&grid, bound, params, bi, bi, &mut scratch, data);
+            let mut qb =
+                quantize_stage(&grid, bound, params, cfg.xsz_bitpack, bi, bi, &mut scratch, data);
             let t = Instant::now();
             let dc_sum = protect_stage(params, &qb);
             let protect_ns = t.elapsed().as_nanos() as u64;
@@ -875,7 +986,8 @@ pub(crate) fn compress_stream_core(
             let mut st = PackState::new(params, n_blocks);
             for i in 0..n_blocks {
                 let (j, grid, slab) = cursor.block(i)?;
-                let qb = quantize_stage(grid, bound, params, j, i, &mut scratch, slab);
+                let qb =
+                    quantize_stage(grid, bound, params, cfg.xsz_bitpack, j, i, &mut scratch, slab);
                 stages.prepare_ns += qb.prepare_ns;
                 stages.quantize_ns += qb.quantize_ns;
                 unpred_all.extend_from_slice(&qb.unpred);
@@ -902,7 +1014,16 @@ pub(crate) fn compress_stream_core(
                 PackState::new(params, n_blocks),
                 |m, i| {
                     let (j, grid, slab) = m.cursor.block(i)?;
-                    let qb = quantize_stage(grid, bound, params, j, i, &mut m.scratch, slab);
+                    let qb = quantize_stage(
+                        grid,
+                        bound,
+                        params,
+                        cfg.xsz_bitpack,
+                        j,
+                        i,
+                        &mut m.scratch,
+                        slab,
+                    );
                     m.stages.prepare_ns += qb.prepare_ns;
                     m.stages.quantize_ns += qb.quantize_ns;
                     m.unpred_all.extend_from_slice(&qb.unpred);
@@ -946,8 +1067,16 @@ pub(crate) fn compress_stream_core(
                     workers,
                     |j| {
                         let mut scratch = Vec::new();
-                        let mut qb =
-                            quantize_stage(grid, bound, params, j, base + j, &mut scratch, slab);
+                        let mut qb = quantize_stage(
+                            grid,
+                            bound,
+                            params,
+                            cfg.xsz_bitpack,
+                            j,
+                            base + j,
+                            &mut scratch,
+                            slab,
+                        );
                         let t = Instant::now();
                         let dc_sum = protect_stage(params, &qb);
                         let protect_ns = t.elapsed().as_nanos() as u64;
@@ -1028,31 +1157,98 @@ pub(crate) fn decode_block<H: DecompressHooks>(
             let nb = tag as usize;
             let body = c.bytes(n * nb)?;
             let escape: u64 = (1u64 << (8 * nb as u32)) - 1;
-            let mut next_unpred = 0usize;
-            for (p, chunk) in body.chunks_exact(nb).enumerate() {
-                let mut q: u64 = 0;
-                for (k, &b) in chunk.iter().enumerate() {
-                    q |= (b as u64) << (8 * k);
-                }
-                if q == escape {
-                    let v = *unpred_vals.get(next_unpred).ok_or_else(|| {
-                        Error::CrashEquivalent(format!(
-                            "xsz block {idx}: escape pool exhausted at point {p}"
-                        ))
-                    })?;
-                    next_unpred += 1;
-                    out_block[p] = v;
-                } else {
-                    let raw = (base + q as f64 * twoe) as f32;
-                    out_block[p] =
-                        if apply_hooks { hooks.corrupt_pred(idx, p, raw) } else { raw };
-                }
+            // ftlint::allow(r5, "n is one block's extent.len() from the validated grid — total points capped by MAX_DECODED_POINTS at parse")
+            let mut qcodes = vec![0u32; n];
+            if !kernel::ftsz_kernel_unpack_bytes(body, nb, &mut qcodes) {
+                return Err(Error::CrashEquivalent(format!(
+                    "xsz block {idx}: truncated {nb}-byte code body"
+                )));
             }
+            fill_from_codes(
+                idx, &qcodes, base, twoe, escape as u32, unpred_vals, hooks, apply_hooks,
+                out_block,
+            )?;
+        }
+        MODE_BITPACK => {
+            let base = c.f32()? as f64;
+            let w = c.bytes(1)?[0] as u32;
+            if w == 0 || w > 32 {
+                return Err(Error::CrashEquivalent(format!(
+                    "xsz block {idx}: bad bitpack width {w}"
+                )));
+            }
+            let body = c.bytes(kernel::packed_len(n, w))?;
+            let escape: u64 = (1u64 << w) - 1;
+            // ftlint::allow(r5, "n is one block's extent.len() from the validated grid — total points capped by MAX_DECODED_POINTS at parse")
+            let mut qcodes = vec![0u32; n];
+            if !kernel::ftsz_kernel_unpack_bits(body, w, &mut qcodes) {
+                return Err(Error::CrashEquivalent(format!(
+                    "xsz block {idx}: truncated {w}-bit code body"
+                )));
+            }
+            fill_from_codes(
+                idx, &qcodes, base, twoe, escape as u32, unpred_vals, hooks, apply_hooks,
+                out_block,
+            )?;
         }
         other => {
             return Err(Error::CrashEquivalent(format!(
                 "xsz block {idx}: bad mode tag {other}"
             )));
+        }
+    }
+    Ok(())
+}
+
+/// Shared fixed-point fill for the byte and bit radices: turn unpacked
+/// codes into reconstructed values, pulling escapes from the shared pool
+/// in point order. The hook-free path reconstructs through the width-8
+/// chunked kernel, then overwrites the (always fewer) escape lanes; the
+/// hooked path keeps the per-point loop so `corrupt_pred` sees the same
+/// sequential order as ever.
+#[allow(clippy::too_many_arguments)]
+fn fill_from_codes<H: DecompressHooks>(
+    idx: usize,
+    qcodes: &[u32],
+    base: f64,
+    twoe: f64,
+    escape: u32,
+    unpred_vals: &[f32],
+    hooks: &mut H,
+    apply_hooks: bool,
+    out_block: &mut [f32],
+) -> Result<()> {
+    let mut next_unpred = 0usize;
+    if !apply_hooks {
+        let n_escaped = kernel::ftsz_kernel_reconstruct(qcodes, base, twoe, escape, out_block);
+        if n_escaped == 0 {
+            return Ok(());
+        }
+        for (p, (&q, o)) in qcodes.iter().zip(out_block.iter_mut()).enumerate() {
+            if q == escape {
+                let v = *unpred_vals.get(next_unpred).ok_or_else(|| {
+                    Error::CrashEquivalent(format!(
+                        "xsz block {idx}: escape pool exhausted at point {p}"
+                    ))
+                })?;
+                next_unpred += 1;
+                *o = v;
+            }
+        }
+        return Ok(());
+    }
+    for (p, (&q, o)) in qcodes.iter().zip(out_block.iter_mut()).enumerate() {
+        if q == escape {
+            let v = *unpred_vals.get(next_unpred).ok_or_else(|| {
+                Error::CrashEquivalent(format!(
+                    "xsz block {idx}: escape pool exhausted at point {p}"
+                ))
+            })?;
+            next_unpred += 1;
+            *o = v;
+        } else {
+            let raw = (base + q as f64 * twoe) as f32;
+            *o = hooks.corrupt_pred(idx, p, raw);
         }
     }
     Ok(())
@@ -1463,6 +1659,125 @@ mod tests {
         let bytes2 = compress(&img.data, img.dims, &cfg(1e-3)).unwrap();
         let dec2 = engine::decompress(&bytes2).unwrap();
         assert!(crate::analysis::max_abs_err(&img.data, &dec2.data) <= 1e-3);
+    }
+
+    #[test]
+    fn pack_block_bytes_match_the_old_emit_loop() {
+        // regression for the chunked byte-pack rewrite: the old encoder
+        // emitted one byte per iteration per code with `extend_from_slice`
+        // — the kernel path must reproduce those bytes exactly
+        let mut rng = Pcg32::new(77);
+        for nb in 1u8..=4 {
+            for n in [1usize, 7, 8, 9, 64, 100] {
+                let cap: u64 = 1u64 << (8 * nb as u32);
+                let codes: Vec<u32> = (0..n)
+                    .map(|_| ((rng.f32() as f64 * cap as f64) as u64 % cap) as u32)
+                    .collect();
+                let mut want = vec![nb];
+                bytes::put_f32(&mut want, 1.5);
+                for &c in &codes {
+                    want.extend_from_slice(&c.to_le_bytes()[..nb as usize]);
+                }
+                let got = pack_block(nb, 1.5, &codes, 0).unwrap();
+                assert_eq!(got.bytes, want, "nb={nb} n={n}");
+                assert_eq!(got.meta.payload_bits, want.len() as u64 * 8);
+            }
+        }
+        // the out-of-width guard still trips with the same message shape
+        let err = pack_block(1, 0.0, &[256], 0).unwrap_err();
+        assert!(format!("{err}").contains("1-byte width"), "{err}");
+        let err = pack_block(MODE_BITPACK_W0 + 3, 0.0, &[8], 0).unwrap_err();
+        assert!(format!("{err}").contains("3-bit width"), "{err}");
+    }
+
+    #[test]
+    fn bitpack_roundtrips_and_beats_byte_mode_ratio() {
+        let f = synthetic::hurricane_field("t", Dims::d3(12, 20, 20), 3);
+        for e in [1e-1, 1e-3, 1e-5] {
+            let byte_bytes = compress(&f.data, f.dims, &cfg(e)).unwrap();
+            let bit_bytes =
+                compress(&f.data, f.dims, &cfg(e).with_xsz_bitpack(true)).unwrap();
+            let dec = engine::decompress(&bit_bytes).unwrap();
+            let max = crate::analysis::max_abs_err(&f.data, &dec.data);
+            assert!(max <= e, "bitpack bound {e} violated: {max}");
+            // necessary bits never cost more than necessary bytes, and on
+            // a smooth field with non-power-of-256 ranges they cost less
+            assert!(
+                bit_bytes.len() <= byte_bytes.len(),
+                "bitpack {}B > byte {}B at e={e}",
+                bit_bytes.len(),
+                byte_bytes.len()
+            );
+            if e == 1e-3 {
+                // mid bound: fixed-point blocks dominate and their widths
+                // are not byte multiples — the win must be strict
+                assert!(bit_bytes.len() < byte_bytes.len());
+            }
+        }
+        // the flag is format-visible only when used: with it off the
+        // archive is byte-for-byte the v1 encoding
+        let off = compress(&f.data, f.dims, &cfg(1e-3).with_xsz_bitpack(false)).unwrap();
+        let plain = compress(&f.data, f.dims, &cfg(1e-3)).unwrap();
+        assert_eq!(off, plain);
+    }
+
+    #[test]
+    fn bitpack_drivers_and_streams_are_byte_identical() {
+        let f = synthetic::nyx_velocity("v", Dims::d3(20, 20, 20), 9);
+        let c = cfg(1e-3).with_xsz_bitpack(true);
+        for params in [CoreParams::default(), FTXSZ_PARAMS] {
+            let seq = run_sequential(&f.data, f.dims, &c, params, &mut NoHooks).unwrap();
+            let piped = run_pipelined(&f.data, f.dims, &c, params).unwrap();
+            assert_eq!(piped.archive, seq.archive, "pipelined ft={}", params.ft);
+            for w in [2usize, 4, 7] {
+                let par = run_parallel(&f.data, f.dims, &c, params, w).unwrap();
+                assert_eq!(par.archive, seq.archive, "parallel w={w} ft={}", params.ft);
+            }
+            let mut src = stream::SliceSource::new(f.dims, &f.data).unwrap();
+            let out = compress_stream_core(&mut src, &c, params).unwrap();
+            assert_eq!(out.archive, seq.archive, "stream ft={}", params.ft);
+        }
+    }
+
+    #[test]
+    fn bitpack_handles_escapes_nonfinite_and_ft_verify() {
+        let mut rng = Pcg32::new(13);
+        let mut data: Vec<f32> = (0..4096).map(|_| rng.normal() as f32 * 100.0).collect();
+        data[10] = f32::NAN;
+        data[100] = f32::INFINITY;
+        data[1000] = f32::NEG_INFINITY;
+        let e = 1e-2;
+        let c = cfg(e).with_xsz_bitpack(true);
+        let bytes = compress_ft(&data, Dims::d3(16, 16, 16), &c).unwrap();
+        let (dec, report) =
+            crate::ft::decompress_with_report(&bytes, Parallelism::Sequential).unwrap();
+        assert!(report.is_clean());
+        assert!(dec.data[10].is_nan());
+        assert_eq!(dec.data[100], f32::INFINITY);
+        assert_eq!(dec.data[1000], f32::NEG_INFINITY);
+        let finite_err = data
+            .iter()
+            .zip(&dec.data)
+            .filter(|(a, _)| a.is_finite())
+            .map(|(a, b)| (*a as f64 - *b as f64).abs())
+            .fold(0.0f64, f64::max);
+        assert!(finite_err <= e, "{finite_err}");
+    }
+
+    #[test]
+    fn bitpack_corrupt_and_truncated_archives_never_panic() {
+        let f = synthetic::hurricane_field("t", Dims::d3(6, 8, 8), 5);
+        let bytes = compress(&f.data, f.dims, &cfg(1e-3).with_xsz_bitpack(true)).unwrap();
+        // every single-byte corruption either decodes or errors — never
+        // panics, never OOMs (the width byte and packed body are hit too)
+        for i in 0..bytes.len() {
+            let mut b = bytes.clone();
+            b[i] ^= 0xFF;
+            let _ = engine::decompress(&b);
+        }
+        for cut in [0, 10, bytes.len() / 2, bytes.len() - 1] {
+            assert!(engine::decompress(&bytes[..cut]).is_err());
+        }
     }
 
     #[test]

@@ -40,6 +40,7 @@ impl RunConfig {
     /// archive_parity = false     # format-v2 self-healing archives
     /// parity_stripe_len = 512    # bytes per CRC-localized stripe
     /// parity_group_width = 64    # stripes per XOR parity group
+    /// xsz_bitpack = false        # xsz/ftxsz bit-granular code packing
     /// ```
     pub fn from_doc(doc: &ConfigDoc) -> Result<Self> {
         let profile = parse_profile(doc.str_or("profile", "nyx")?)?;
@@ -132,6 +133,7 @@ pub fn compression_from_doc(doc: &ConfigDoc, section: &str) -> Result<Compressio
         // are identical either way; this is a measurement knob)
         stage_overlap: doc.bool_or(&key("stage_overlap"), true)?,
         archive_parity,
+        xsz_bitpack: doc.bool_or(&key("xsz_bitpack"), false)?,
     };
     cfg.validate()?;
     Ok(cfg)

@@ -21,8 +21,13 @@
 //! * [`compressor::xsz`] — **xsz** / **ftxsz**: the SZx-style ultra-fast
 //!   pair — no estimation pass, no prediction, no Huffman coding;
 //!   constant-block detection plus necessary-leading-bytes fixed-point
-//!   codes. The speed tier for throughput-bound workloads (in-memory
-//!   checkpointing, burst buffers).
+//!   codes (or, with `CompressionConfig::with_xsz_bitpack`, SZx's
+//!   *necessary bits* — block tag 6, `ceil(log2(qmax+2))` bits per point,
+//!   closing most of the ratio gap to byte packing). The hot loops run as
+//!   width-8 chunked, branch-free kernels ([`compressor::kernel`]) that
+//!   the autovectorizer compiles to packed SSE/AVX code. The speed tier
+//!   for throughput-bound workloads (in-memory checkpointing, burst
+//!   buffers).
 //!
 //! ## Choosing an engine
 //!
@@ -36,6 +41,14 @@
 //! | `ftrsz`  | high  | fast, scales        | yes             | yes    | yes             |
 //! | `xsz`    | lower | **fastest** (≥ 2× rsz, gated in `hotpath --check`) | – | yes | – |
 //! | `ftxsz`  | lower | fastest + checksums | yes             | yes    | yes             |
+//!
+//! The xsz-pair "lower" ratio is a knob, not a constant: `--xsz-bitpack`
+//! (block tag 6) packs each block's codes at their exact bit width for a
+//! strictly better ratio on smooth fields at the cost of a bit-granular
+//! unpack on decode — `hotpath`'s `kernel.bitpack.ratio_vs_bytes` key
+//! tracks the win, and both radices run through the same chunked
+//! [`compressor::kernel`] routines (CI disassembles them to keep the
+//! vectorization honest).
 //!
 //! Rules of thumb: archival of cold data → `sz`; the production default →
 //! `ftrsz` (full SDC story at predictive-engine ratios); a bandwidth-bound

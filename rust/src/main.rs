@@ -110,7 +110,9 @@ fn compression_config(f: &Flags) -> Result<CompressionConfig> {
         .with_parallelism(parallelism_of(f)?)
         // measurement knob: pin the plain sequential driver (bytes are
         // identical either way — see compressor::stage)
-        .with_stage_overlap(!f.has("no-stage-overlap"));
+        .with_stage_overlap(!f.has("no-stage-overlap"))
+        // xsz/ftxsz only: SZx-style necessary-bits block mode (tag 6)
+        .with_xsz_bitpack(f.has("xsz-bitpack"));
     // --archive-parity [GROUP_WIDTH]: format-v2 self-healing archives;
     // the optional value overrides the stripes-per-parity-group default
     if let Some(v) = f.get("archive-parity") {
@@ -188,6 +190,7 @@ fn print_usage() {
          \x20 compress   --input RAW --dims D,R,C --engine sz|rsz|ftrsz|xsz|ftxsz\n\
          \x20            --error-bound E [--workers N (0 = auto)] [--stream]\n\
          \x20            [--archive-parity [GROUP_WIDTH]  (self-healing format v2)] --out FILE\n\
+         \x20            [--xsz-bitpack  (xsz/ftxsz: bit-granular code packing, block tag 6)]\n\
          \x20            (--stream: slab-bounded memory, archive bit-identical to in-memory)\n\
          \x20 decompress --input FILE --out RAW [--verify] [--workers N] [--stream]\n\
          \x20            [--region z,y,x,dz,dy,dx]  (composes with --verify: Alg. 2 per block)\n\
@@ -488,21 +491,32 @@ fn cmd_info(f: &Flags) -> Result<()> {
     if h.is_xsz() {
         // xsz metas carry a filler predictor tag; the real per-block mode
         // is the first payload byte (0 = constant, 1-4 = fixed-point code
-        // width in bytes, 5 = verbatim). Verbatim blocks park ALL their
-        // points in the unpred pool, so the fixed-point escape count is
-        // the pool minus those.
+        // width in bytes, 5 = verbatim, 6 = bit-granular fixed-point with
+        // the width byte after the f32 base). Verbatim blocks park ALL
+        // their points in the unpred pool, so the fixed-point escape count
+        // is the pool minus those.
         let grid = ftsz::compressor::block::BlockGrid::new(h.dims, h.block_size as usize)?;
         if grid.n_blocks() as u64 != h.n_blocks {
             return Err(Error::Config("block count inconsistent with dims".into()));
         }
         let (mut constant, mut verbatim, mut verbatim_points) = (0usize, 0usize, 0usize);
+        // per-block code-width histogram: byte modes land on 8/16/24/32
+        // bits, bitpack blocks on their exact 1..=32-bit width — the
+        // per-field width profile the auto-engine-picker follow-up needs
+        let mut width_hist = [0usize; 33];
         for i in 0..archive.metas.len() {
-            match archive.block_payload(i).first() {
+            let payload = archive.block_payload(i);
+            match payload.first() {
                 Some(0) => constant += 1,
                 Some(5) => {
                     verbatim += 1;
                     verbatim_points += grid.extent(i).len();
                 }
+                Some(&nb @ 1..=4) => width_hist[8 * nb as usize] += 1,
+                Some(6) => match payload.get(5) {
+                    Some(&w @ 1..=32) => width_hist[w as usize] += 1,
+                    _ => return Err(Error::Format(format!("block {i}: bad bitpack width"))),
+                },
                 _ => {}
             }
         }
@@ -512,6 +526,15 @@ fn cmd_info(f: &Flags) -> Result<()> {
             archive.metas.len() - constant - verbatim,
             archive.unpred.len() - verbatim_points.min(archive.unpred.len()),
         );
+        let hist: Vec<String> = width_hist
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(w, c)| format!("{w}b\u{d7}{c}"))
+            .collect();
+        if !hist.is_empty() {
+            println!("code widths (bits\u{d7}blocks): {}", hist.join(" "));
+        }
         return Ok(());
     }
     let lorenzo = archive

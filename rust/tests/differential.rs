@@ -194,6 +194,86 @@ fn differential_all_engines_workers_and_formats() {
 }
 
 #[test]
+fn differential_bitpack_mode_on_the_xsz_engines() {
+    // --xsz-bitpack is format-visible (block tag 6) but must preserve
+    // every cross-engine invariant on the full corpus: ε round-trips,
+    // worker byte-stability, clean reports, both containers, and
+    // bit-identical decodes across the xsz/ftxsz protection pair. (The
+    // ratio claim — bits beat bytes on smooth fields — lives in the xsz
+    // unit tests and the hotpath --check gate, at representative block
+    // sizes; this corpus's block size 4 makes per-block header costs
+    // dominate.)
+    let bound = 1e-3;
+    for case in corpus() {
+        for parity in [false, true] {
+            let mut cfg = CompressionConfig::new(ErrorBound::Abs(bound))
+                .with_block_size(4)
+                .with_xsz_bitpack(true);
+            if parity {
+                cfg = cfg.with_archive_parity(ParityParams { stripe_len: 64, group_width: 8 });
+            }
+            let mut pair_bits: Vec<Vec<u32>> = Vec::new();
+            for e in [Engine::UltraFast, Engine::UltraFastFT] {
+                let codec = e.codec();
+                let base = codec.compress(&case.data, case.dims, &cfg).unwrap_or_else(|err| {
+                    panic!("{} bitpack: compress failed: {err}", case.repro(e, 1, parity))
+                });
+                for workers in [1usize, 2, 4] {
+                    let b = codec
+                        .compress(&case.data, case.dims, &cfg.clone().with_workers(workers))
+                        .unwrap_or_else(|err| {
+                            panic!(
+                                "{} bitpack: compress failed: {err}",
+                                case.repro(e, workers, parity)
+                            )
+                        });
+                    assert_eq!(
+                        b,
+                        base,
+                        "{} bitpack: archive bytes differ from the 1-worker reference",
+                        case.repro(e, workers, parity)
+                    );
+                    let dec = codec
+                        .decompress(&base, Parallelism::from_workers(workers))
+                        .unwrap_or_else(|err| {
+                            panic!(
+                                "{} bitpack: decompress failed: {err}",
+                                case.repro(e, workers, parity)
+                            )
+                        });
+                    let max = analysis::max_abs_err(&case.data, &dec.data);
+                    assert!(
+                        max <= bound,
+                        "{} bitpack: bound violated ({max} > {bound})",
+                        case.repro(e, workers, parity)
+                    );
+                    if workers == 1 {
+                        pair_bits.push(dec.data.iter().map(|v| v.to_bits()).collect());
+                    }
+                }
+                let report = report_of(e, &base).unwrap_or_else(|err| {
+                    panic!(
+                        "{} bitpack: reporting decode failed: {err}",
+                        case.repro(e, 1, parity)
+                    )
+                });
+                assert!(
+                    report.is_clean(),
+                    "{} bitpack: clean archive reported events: {report:?}",
+                    case.repro(e, 1, parity)
+                );
+            }
+            assert_eq!(
+                pair_bits[0],
+                pair_bits[1],
+                "xsz vs ftxsz bitpack decode bits differ: {}",
+                case.repro(Engine::UltraFast, 1, parity)
+            );
+        }
+    }
+}
+
+#[test]
 fn differential_decodes_agree_where_numerics_are_shared() {
     // rsz/ftrsz and xsz/ftxsz are protection pairs over identical
     // numerics: the archives differ (ft sections) but the decoded bits

@@ -408,6 +408,115 @@ fn mode_c_campaign_holds_the_trichotomy_for_ftxsz() {
     }
 }
 
+// ---------------------------------------------------------------------------
+// --xsz-bitpack under injection: the bit-granular block mode changes the
+// packed wire format (tag 6), not the protection set — code checksums,
+// duplication, and parity must hold the same trichotomy over it.
+// ---------------------------------------------------------------------------
+
+fn cfg_bitpack() -> CompressionConfig {
+    cfg().with_xsz_bitpack(true)
+}
+
+#[test]
+fn bin_bitflips_corrected_by_ftxsz_bitpack() {
+    // a flipped code word is located by the code checksum and repaired
+    // before the w-bit pack ever sees it
+    let f = field();
+    let nb = n_blocks(f.dims, 8);
+    for seed in 0..30 {
+        let mut inj = BinBitFlip::new(seed, nb);
+        let o = run_and_classify(Engine::UltraFastFT, &f.data, f.dims, &cfg_bitpack(), &mut inj);
+        assert_eq!(o, Outcome::Correct, "seed {seed}");
+    }
+}
+
+#[test]
+fn bin_bitflips_never_silent_on_xsz_bitpack() {
+    // without checksums a flipped code either decodes off by whole quanta
+    // (Incorrect), overflows the block's bit width (clean abort at pack
+    // time — the all-ones escape cap), or lands in slack; never silent
+    let f = field();
+    let nb = n_blocks(f.dims, 8);
+    let mut bad = 0;
+    let n = 40;
+    for seed in 0..n {
+        let mut inj = BinBitFlip::new(seed, nb);
+        match run_and_classify(Engine::UltraFast, &f.data, f.dims, &cfg_bitpack(), &mut inj) {
+            Outcome::Correct => {}
+            _ => bad += 1,
+        }
+    }
+    assert!(bad > n / 4, "code flips should usually break unprotected bitpack xsz: {bad}/{n}");
+}
+
+#[test]
+fn mode_b_single_flip_ftxsz_bitpack_mostly_correct_and_never_silent() {
+    let f = field();
+    let nb = n_blocks(f.dims, 8);
+    let (mut correct, mut crash) = (0, 0);
+    let n = 60;
+    for seed in 0..n {
+        let mut data = f.data.clone();
+        let mut inj = ArenaFlip::new(seed, nb, 1);
+        inj.apply_pre_checksum(&mut data);
+        let o = run_and_classify(Engine::UltraFastFT, &data, f.dims, &cfg_bitpack(), &mut inj);
+        let pre_checksum_hit = ftsz::analysis::max_abs_err(&f.data, &data) > 1e-3;
+        match o {
+            Outcome::Correct => {
+                if !pre_checksum_hit {
+                    correct += 1;
+                }
+            }
+            Outcome::Crash => crash += 1,
+            Outcome::Incorrect => {
+                assert!(
+                    pre_checksum_hit,
+                    "seed {seed}: silent SDC from a post-checksum flip (bitpack)"
+                );
+            }
+            Outcome::Detected => {}
+        }
+    }
+    assert!(correct * 100 >= n * 80, "ftxsz bitpack correct {correct}/{n}");
+    assert_eq!(crash, 0, "ftxsz bitpack must not crash under single flips");
+}
+
+#[test]
+fn mode_c_campaign_holds_the_trichotomy_for_ftxsz_bitpack() {
+    // archive-at-rest strikes over tag-6 payload bytes: zero silent SDC,
+    // high corrected rate, observed parity repairs
+    use ftsz::ft::parity::ParityParams;
+    use ftsz::inject::mode_c::{campaign, ArchiveFault};
+    use ftsz::inject::ArchiveOutcome;
+    let f = synthetic::hurricane_field("t", Dims::d3(6, 8, 8), 9);
+    let cfg = CompressionConfig::new(ErrorBound::Abs(1e-3))
+        .with_block_size(4)
+        .with_xsz_bitpack(true)
+        .with_archive_parity(ParityParams { stripe_len: 64, group_width: 8 });
+    for engine in [Engine::UltraFast, Engine::UltraFastFT] {
+        let tally =
+            campaign(engine, &f.data, f.dims, &cfg, 150, ArchiveFault::BitFlip, 1, 1).unwrap();
+        assert_eq!(
+            tally.count(ArchiveOutcome::SilentSdc),
+            0,
+            "{} bitpack: silent SDC under single-bit archive faults",
+            engine.name()
+        );
+        assert!(
+            tally.corrected_rate() >= 0.95,
+            "{} bitpack: corrected only {:.1}%",
+            engine.name(),
+            100.0 * tally.corrected_rate()
+        );
+        assert!(
+            tally.parity_repaired_trials > 0,
+            "{} bitpack: no repair observed",
+            engine.name()
+        );
+    }
+}
+
 #[test]
 fn ft_decompress_verbose_clean_on_uninjected_data() {
     let f = field();

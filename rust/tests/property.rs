@@ -641,6 +641,10 @@ fn prop_truncated_archives_never_panic() {
             ftsz::ft::compress(&data, dims, &cfg).map_err(|e| e.to_string())?,
             engine::compress(&data, dims, &cfg).map_err(|e| e.to_string())?,
             xsz::compress_ft(&data, dims, &cfg).map_err(|e| e.to_string())?,
+            // bit-granular packing (tag-6 blocks): the width byte and the
+            // ceil(n·w/8) body introduce new cut points the sweep must cover
+            xsz::compress_ft(&data, dims, &cfg.clone().with_xsz_bitpack(true))
+                .map_err(|e| e.to_string())?,
         ] {
             for len in 0..bytes.len() {
                 if ftsz::ft::decompress(&bytes[..len]).is_ok() {

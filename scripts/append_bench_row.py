@@ -37,7 +37,7 @@ def main() -> int:
         commit = os.environ.get("GITHUB_SHA", "unknown")[:9]
 
     date = datetime.date.today().isoformat()
-    row = "| {} | {} | {} | {} | {} | {} | {} | {} | {} | {} | {} | {} | {} | {} | {} |\n".format(
+    row = "| {} | {} | {} | {} | {} | {} | {} | {} | {} | {} | {} | {} | {} | {} | {} | {} | {} |\n".format(
         date,
         commit,
         v("rsz.compress_mbps"),
@@ -53,6 +53,8 @@ def main() -> int:
         v("parity.size_overhead_pct", "{:.2f}"),
         v("stream.rsz.compress_vs_inmem", "{:.2f}"),
         v("stream.rsz.decompress_vs_inmem", "{:.2f}"),
+        v("kernel.quantize.speedup", "{:.2f}"),
+        v("kernel.bitpack.ratio_vs_bytes", "{:.3f}"),
     )
     with open(exp_path, "a") as f:
         f.write(row)

@@ -1,0 +1,13 @@
+// Fixture (linted under the pretend path `compressor/kernel.rs`): the
+// decode-side kernel scope — panic tokens, direct indexing of the
+// untrusted packed body, and an unvalidated allocation, all inside a
+// scoped unpack function. This file is test data, never compiled.
+
+pub extern "C" fn ftsz_kernel_unpack_bits(body: &[u8], w: u32, codes: &mut [u32]) -> bool {
+    let first = body[0];
+    assert!(w <= 32);
+    let n = (body.len() * 8) / w as usize;
+    let mut scratch = vec![0u32; n * w as usize];
+    scratch[0] = first as u32 + codes.first().copied().unwrap();
+    panic!("unfinished");
+}

@@ -1,0 +1,42 @@
+// Fixture (linted under the pretend path `compressor/kernel.rs`): the
+// shapes the decode-side kernel scope must accept — length-checked
+// iterator traversal of the untrusted body, shape mismatches reported by
+// return value, one audited allow — plus a compress-side pack helper
+// whose panicking assertion sits outside the scoped fn list and must not
+// be attributed to the decode scope. This file is test data, never
+// compiled.
+
+pub extern "C" fn ftsz_kernel_unpack_bits(body: &[u8], w: u32, codes: &mut [u32]) -> bool {
+    if w == 0 || w > 32 || body.len() != codes.len() * w as usize {
+        return false;
+    }
+    let mut it = body.iter();
+    for c in codes.iter_mut() {
+        let Some(&b) = it.next() else { return false };
+        *c = b as u32;
+    }
+    true
+}
+
+pub extern "C" fn ftsz_kernel_reconstruct(codes: &[u32], out: &mut [f32]) -> usize {
+    let mut n = 0usize;
+    for (chunk, o) in codes.chunks_exact(8).zip(out.chunks_exact_mut(8)) {
+        for k in 0..8 {
+            o[k] = chunk[k] as f32;
+            n += 1;
+        }
+    }
+    // ftlint::allow(r5, "capacity is clamped to one 8-lane chunk on this line")
+    let mut scratch = Vec::with_capacity(n.min(8));
+    scratch.push(0u32);
+    n + scratch.len()
+}
+
+pub extern "C" fn ftsz_kernel_pack_bits(codes: &[u32], w: u32, out: &mut [u8]) -> bool {
+    // compress side: trusted input, outside the decode-scope fn list
+    assert!(w >= 1);
+    let first = out.first().copied().unwrap_or(0);
+    let mut staged = vec![0u8; codes.len() * w as usize];
+    staged[0] = first;
+    !staged.is_empty()
+}

@@ -97,11 +97,29 @@ pub const DECODE_SCOPES: &[ModuleScope] = &[
         untrusted: &[],
     },
     ModuleScope {
-        // xsz's decode stage; compress side is trusted-input
+        // xsz's decode stage (tag dispatch + the shared fixed-point fill);
+        // compress side is trusted-input
         path: "compressor/xsz.rs",
-        r1_fns: Some(&["decode_block"]),
+        r1_fns: Some(&["decode_block", "fill_from_codes"]),
         r5_fns: None,
         untrusted: &[],
+    },
+    ModuleScope {
+        // the chunked xsz kernels: the unpack/reconstruct halves run on
+        // attacker-shaped payload bytes (destage → xsz::decode_block →
+        // here). All traversal is length-checked chunk iterators; shape
+        // mismatches are reported by return value, never by panic.
+        path: "compressor/kernel.rs",
+        r1_fns: Some(&[
+            "ftsz_kernel_unpack_bytes",
+            "unpack_bytes_n",
+            "ftsz_kernel_unpack_bits",
+            "unpack_bits_stream",
+            "ftsz_kernel_reconstruct",
+            "ftsz_kernel_reconstruct_scalar",
+        ]),
+        r5_fns: None,
+        untrusted: &["body"],
     },
     ModuleScope {
         // streaming decode: the slab placer and the reduction sinks; the

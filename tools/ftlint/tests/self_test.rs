@@ -139,6 +139,53 @@ fn r5_good_validated_lengths_are_clean() {
     assert!(f.is_empty(), "expected clean, got {f:?}");
 }
 
+// --- the kernel decode scope (R1 + R5 share the scoped fn list) -------------
+
+#[test]
+fn kernel_bad_trips_r1_and_r5_inside_scoped_fns() {
+    let f = lint_fixture("kernel_bad.rs", "compressor/kernel.rs");
+    let rules = rules_of(&f);
+    assert!(rules.contains(&"r1"), "{f:?}");
+    assert!(rules.contains(&"r5"), "{f:?}");
+    let msgs: Vec<&str> = f.iter().map(|x| x.message.as_str()).collect();
+    assert!(
+        msgs.iter().any(|m| m.contains("`body[…]`")),
+        "untrusted body index missed: {msgs:?}"
+    );
+    assert!(msgs.iter().any(|m| m.contains("panic!")), "{msgs:?}");
+    assert!(msgs.iter().any(|m| m.contains("unwrap()")), "{msgs:?}");
+    assert!(msgs.iter().any(|m| m.contains("assert!")), "{msgs:?}");
+    assert!(
+        msgs.iter().any(|m| m.contains("unvalidated")),
+        "r5 alloc missed: {msgs:?}"
+    );
+}
+
+#[test]
+fn kernel_good_iterator_traversal_is_clean() {
+    let f = lint_fixture("kernel_good.rs", "compressor/kernel.rs");
+    assert!(f.is_empty(), "expected clean, got {f:?}");
+}
+
+#[test]
+fn kernel_scope_excludes_the_pack_side() {
+    // same token class as kernel_bad's, but inside a fn the scope list
+    // doesn't name — the compress side takes trusted input
+    let src = "pub extern \"C\" fn ftsz_kernel_pack_bytes(codes: &[u32]) -> u32 {\n\
+               \x20   codes.first().copied().unwrap()\n}\n";
+    let f = lint_source("compressor/kernel.rs", src);
+    assert!(f.is_empty(), "pack side must be out of scope: {f:?}");
+}
+
+#[test]
+fn xsz_fill_from_codes_is_in_decode_scope() {
+    // the shared fixed-point fill joined decode_block in the xsz scope list
+    let src = "fn fill_from_codes(pool: &[f32]) -> f32 {\n\
+               \x20   pool.first().copied().unwrap()\n}\n";
+    let f = lint_source("compressor/xsz.rs", src);
+    assert_eq!(rules_of(&f), vec!["r1"], "{f:?}");
+}
+
 // --- the escape hatch is itself audited ------------------------------------
 
 #[test]
