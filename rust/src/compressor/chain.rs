@@ -46,9 +46,14 @@
 //! ([`super::stream`]): there the `front` closure owns a slab cursor that
 //! reads fixed-size chunks from a [`super::stream::SlabSource`] instead of
 //! indexing an in-memory array, and the channel depth is the in-flight
-//! block budget. Nothing else changes — which is the point of this layer,
-//! and the extension surface a future archive server's chains would plug
-//! into.
+//! block budget. Nothing else changes — which is the point of this layer.
+//!
+//! The serving layer ([`crate::compressor::store`]) is the fourth
+//! instantiation: cold cache fills route their block set through
+//! [`super::destage::decode_block_set`], which picks a driver with
+//! [`select_driver`] exactly like a full decode — so `ftsz serve` inherits
+//! the trio (and its byte-identity guarantee) instead of growing a
+//! private decode loop.
 
 use std::sync::mpsc;
 

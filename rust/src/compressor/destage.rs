@@ -189,6 +189,15 @@ pub struct DecodeOutput {
 /// records repairs).
 pub(crate) fn open(bytes: &[u8]) -> Result<(Archive, BlockGrid, Quantizer)> {
     let archive = crate::ft::parity::parse_recovering(bytes)?;
+    let (grid, q) = grid_of(&archive)?;
+    Ok((archive, grid, q))
+}
+
+/// Grid + quantizer of an already-parsed independent-block archive. Split
+/// out of [`open`] so a long-lived holder of a parsed [`Archive`] (the
+/// serving layer's open-archive cache, [`crate::compressor::store`]) can
+/// run the same sanity checks without re-parsing the container per query.
+pub(crate) fn grid_of(archive: &Archive) -> Result<(BlockGrid, Quantizer)> {
     if archive.header.is_classic() {
         return Err(Error::InvalidArgument(
             "classic archive: use compressor::classic::decompress".into(),
@@ -199,7 +208,7 @@ pub(crate) fn open(bytes: &[u8]) -> Result<(Archive, BlockGrid, Quantizer)> {
         return Err(Error::Format("block count mismatch".into()));
     }
     let q = Quantizer::new(archive.header.error_bound, archive.header.quant_radius);
-    Ok((archive, grid, q))
+    Ok((grid, q))
 }
 
 // ---------------------------------------------------------------------------
@@ -379,6 +388,10 @@ enum DecodeSink<'a> {
     /// Assemble blocks into one slab buffer and flush each completed slab
     /// to a [`SlabSink`] — the output is never materialized whole.
     Stream(StreamPlacer<'a>),
+    /// Collect each decoded block densely, keyed by block index — the
+    /// serving layer's cold-block fill ([`decode_block_set`]), which
+    /// caches whole blocks rather than scattering them into one output.
+    Collect(&'a mut Vec<(usize, Vec<f32>)>),
 }
 
 impl DecodeSink<'_> {
@@ -394,6 +407,10 @@ impl DecodeSink<'_> {
                 Ok(())
             }
             DecodeSink::Stream(placer) => placer.place(bi, block),
+            DecodeSink::Collect(out) => {
+                out.push((bi, block.to_vec()));
+                Ok(())
+            }
         }
     }
 
@@ -451,6 +468,55 @@ pub fn decode_with_driver(
         Some(driver),
         Parallelism::Sequential,
     )
+}
+
+/// Decode an explicit set of blocks of an already-open archive, returning
+/// each block's dense values in work-list order together with the run's
+/// repair report. This is the cold-block fill of the serving layer
+/// ([`crate::compressor::store`]): the store keeps archives open across
+/// queries, so the recover stage has already run once — only decode +
+/// verify + collect remain, fanned over the shared [`chain`] driver trio
+/// with the same policy (and the same Algorithm 2 [`verify_stage`]) as a
+/// full decode. Callers pass block indices obtained from this archive's
+/// grid ([`BlockGrid::blocks_intersecting`]); the report carries only
+/// this fill's re-executions — open-time parity repairs are the caller's
+/// to account.
+pub(crate) fn decode_block_set(
+    archive: &Archive,
+    grid: &BlockGrid,
+    q: &Quantizer,
+    work: &[usize],
+    verify: bool,
+    workers: usize,
+) -> Result<(Vec<(usize, Vec<f32>)>, DecompressReport)> {
+    if verify && archive.sum_dc.is_none() {
+        return Err(Error::InvalidArgument(
+            "archive has no FT checksums; compress with ft::compress".into(),
+        ));
+    }
+    let n_points: usize = work.iter().map(|&bi| grid.extent(bi).len()).sum();
+    let mut blocks = Vec::new();
+    let mut report = DecompressReport::default();
+    let mut timings = DecodeTimings::default();
+    let ctx = DecodeCtx { archive, grid, q, verify };
+    let mut sink = DecodeSink::Collect(&mut blocks);
+    match chain::select_driver(true, true, workers, work.len(), n_points, None) {
+        ChainDriver::Sequential => run_sequential(
+            &ctx,
+            work,
+            &mut NoDecompressHooks,
+            &mut sink,
+            &mut report,
+            &mut timings,
+        )?,
+        ChainDriver::Pipelined => {
+            run_pipelined(&ctx, work, &mut sink, &mut report, &mut timings)?
+        }
+        ChainDriver::Parallel(w) => {
+            run_parallel(&ctx, work, w, &mut sink, &mut report, &mut timings)?
+        }
+    }
+    Ok((blocks, report))
 }
 
 /// Shared core of [`decode_graph`] / [`decode_with_driver`].

@@ -90,7 +90,7 @@ const MAX_SECTION: usize = 1 << 33;
 /// decode path trusts `dims.len()` to size an allocation: a corrupt-but-
 /// voted header must fail as a clean [`Error::Format`], not as an absurd
 /// output allocation (or a `dims.len()` multiply overflow).
-const MAX_DECODED_POINTS: u128 = 1 << 40;
+pub(crate) const MAX_DECODED_POINTS: u128 = 1 << 40;
 
 /// Serialized length of the core header fields (flags, dims, block size,
 /// quant radius, error bound, n_blocks) — shared by v1 and v2.

@@ -43,6 +43,7 @@ pub mod quantize;
 pub mod regression;
 pub mod sampling;
 pub mod stage;
+pub mod store;
 pub mod stream;
 pub mod xsz;
 

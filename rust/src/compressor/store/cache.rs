@@ -1,0 +1,334 @@
+//! Sharded block-level LRU decode cache — the warm path of the serving
+//! layer.
+//!
+//! Entries are whole decoded blocks keyed by (open-archive id, block
+//! index, verified bit). Capacity is counted in bytes, split evenly
+//! across a fixed set of shards so concurrent queries on different
+//! blocks rarely contend on the same lock; each shard runs a classic
+//! O(1) linked LRU over a slab. The `verified` bit is part of the key:
+//! a block decoded without the Algorithm 2 verify stage must never be
+//! served to a verified query (or vice versa — the repair accounting of
+//! the two query kinds would leak into each other).
+
+use std::collections::hash_map::DefaultHasher;
+use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Key of one cached decoded block.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub struct BlockKey {
+    /// Open-archive instance id — fresh per (path, generation) open, so a
+    /// rewritten archive can never hit entries of its predecessor.
+    pub archive: u64,
+    /// Block index within the archive's grid.
+    pub block: usize,
+    /// Whether the cached values went through the verify stage.
+    pub verified: bool,
+}
+
+/// Fixed bookkeeping cost charged per entry on top of the value bytes
+/// (map slot + LRU links), so capacity accounting cannot be starved by a
+/// flood of tiny blocks.
+const ENTRY_OVERHEAD: usize = 96;
+
+/// Slab sentinel for "no neighbor".
+const NIL: usize = usize::MAX;
+
+struct Entry {
+    key: BlockKey,
+    value: Arc<Vec<f32>>,
+    prev: usize,
+    next: usize,
+}
+
+/// One shard: an O(1) linked LRU over a slab with an index map.
+struct Shard {
+    map: HashMap<BlockKey, usize>,
+    slab: Vec<Entry>,
+    free: Vec<usize>,
+    /// Most recently used entry (NIL when empty).
+    head: usize,
+    /// Least recently used entry (NIL when empty).
+    tail: usize,
+    bytes: usize,
+}
+
+impl Shard {
+    fn new() -> Self {
+        Self { map: HashMap::new(), slab: Vec::new(), free: Vec::new(), head: NIL, tail: NIL, bytes: 0 }
+    }
+
+    fn cost(value: &Arc<Vec<f32>>) -> usize {
+        value.len() * std::mem::size_of::<f32>() + ENTRY_OVERHEAD
+    }
+
+    /// Detach entry `i` from the recency list (it stays in the slab/map).
+    fn unlink(&mut self, i: usize) {
+        let (prev, next) = (self.slab[i].prev, self.slab[i].next);
+        match prev {
+            NIL => self.head = next,
+            p => self.slab[p].next = next,
+        }
+        match next {
+            NIL => self.tail = prev,
+            n => self.slab[n].prev = prev,
+        }
+    }
+
+    /// Attach entry `i` at the most-recent end.
+    fn push_front(&mut self, i: usize) {
+        self.slab[i].prev = NIL;
+        self.slab[i].next = self.head;
+        match self.head {
+            NIL => self.tail = i,
+            h => self.slab[h].prev = i,
+        }
+        self.head = i;
+    }
+
+    fn get(&mut self, key: &BlockKey) -> Option<Arc<Vec<f32>>> {
+        let i = *self.map.get(key)?;
+        self.unlink(i);
+        self.push_front(i);
+        Some(self.slab[i].value.clone())
+    }
+
+    /// Drop entry `i` entirely: recency list, map, byte account; the value
+    /// Arc is replaced so the memory is released even while the slab slot
+    /// sits on the free list.
+    fn remove(&mut self, i: usize) {
+        self.unlink(i);
+        self.map.remove(&self.slab[i].key);
+        self.bytes -= Self::cost(&self.slab[i].value);
+        self.slab[i].value = Arc::new(Vec::new());
+        self.free.push(i);
+    }
+
+    fn insert(&mut self, key: BlockKey, value: Arc<Vec<f32>>, capacity: usize) {
+        let cost = Self::cost(&value);
+        if cost > capacity {
+            // an oversized block would evict the whole shard and then
+            // itself on the next insert — don't cache it at all
+            return;
+        }
+        if let Some(&i) = self.map.get(&key) {
+            self.bytes = self.bytes - Self::cost(&self.slab[i].value) + cost;
+            self.slab[i].value = value;
+            self.unlink(i);
+            self.push_front(i);
+        } else {
+            let entry = Entry { key, value, prev: NIL, next: NIL };
+            let i = match self.free.pop() {
+                Some(i) => {
+                    self.slab[i] = entry;
+                    i
+                }
+                None => {
+                    self.slab.push(entry);
+                    self.slab.len() - 1
+                }
+            };
+            self.map.insert(key, i);
+            self.bytes += cost;
+            self.push_front(i);
+        }
+        while self.bytes > capacity && self.tail != NIL {
+            let lru = self.tail;
+            self.remove(lru);
+        }
+    }
+
+    fn remove_archive(&mut self, archive: u64) {
+        let doomed: Vec<usize> =
+            self.map.iter().filter(|(k, _)| k.archive == archive).map(|(_, &i)| i).collect();
+        for i in doomed {
+            self.remove(i);
+        }
+    }
+}
+
+/// Aggregate cache counters (see [`BlockCache::stats`]).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CacheStats {
+    /// Live entries across all shards.
+    pub entries: usize,
+    /// Accounted bytes across all shards (values + per-entry overhead).
+    pub bytes: usize,
+    /// Lookups that found a usable entry.
+    pub hits: u64,
+    /// Lookups that did not.
+    pub misses: u64,
+}
+
+impl CacheStats {
+    /// hits / (hits + misses); 0 when no lookups happened.
+    pub fn hit_ratio(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// The sharded byte-capacity LRU over decoded blocks.
+pub struct BlockCache {
+    shards: Vec<Mutex<Shard>>,
+    shard_capacity: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl BlockCache {
+    /// New cache holding at most `capacity_bytes` across `shards` shards
+    /// (both floored at 1; per-shard capacity is the even split).
+    pub fn new(capacity_bytes: usize, shards: usize) -> Self {
+        let shards = shards.max(1);
+        Self {
+            shard_capacity: (capacity_bytes / shards).max(1),
+            shards: (0..shards).map(|_| Mutex::new(Shard::new())).collect(),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    fn shard_of(&self, key: &BlockKey) -> &Mutex<Shard> {
+        let mut h = DefaultHasher::new();
+        (key.archive, key.block).hash(&mut h);
+        &self.shards[(h.finish() % self.shards.len() as u64) as usize]
+    }
+
+    /// Look up one block, bumping its recency on a hit.
+    pub fn get(&self, key: &BlockKey) -> Option<Arc<Vec<f32>>> {
+        let found = self.shard_of(key).lock().unwrap().get(key);
+        match &found {
+            Some(_) => self.hits.fetch_add(1, Ordering::Relaxed),
+            None => self.misses.fetch_add(1, Ordering::Relaxed),
+        };
+        found
+    }
+
+    /// Insert (or refresh) one block at the most-recent end, evicting from
+    /// the least-recent end while the shard is over its byte budget.
+    pub fn insert(&self, key: BlockKey, value: Arc<Vec<f32>>) {
+        self.shard_of(&key).lock().unwrap().insert(key, value, self.shard_capacity);
+    }
+
+    /// Drop every entry of one open-archive instance (generation change:
+    /// the archive was rewritten, its decoded blocks are history).
+    pub fn invalidate_archive(&self, archive: u64) {
+        for shard in &self.shards {
+            shard.lock().unwrap().remove_archive(archive);
+        }
+    }
+
+    /// Aggregate counters across all shards.
+    pub fn stats(&self) -> CacheStats {
+        let mut s = CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            ..CacheStats::default()
+        };
+        for shard in &self.shards {
+            let g = shard.lock().unwrap();
+            s.entries += g.map.len();
+            s.bytes += g.bytes;
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(archive: u64, block: usize, verified: bool) -> BlockKey {
+        BlockKey { archive, block, verified }
+    }
+
+    fn val(n: usize, fill: f32) -> Arc<Vec<f32>> {
+        Arc::new(vec![fill; n])
+    }
+
+    #[test]
+    fn hit_after_insert_miss_before() {
+        let c = BlockCache::new(1 << 20, 4);
+        assert!(c.get(&key(1, 0, false)).is_none());
+        c.insert(key(1, 0, false), val(10, 1.0));
+        assert_eq!(c.get(&key(1, 0, false)).unwrap()[0], 1.0);
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses, s.entries), (1, 1, 1));
+    }
+
+    #[test]
+    fn verified_and_unverified_never_share_an_entry() {
+        let c = BlockCache::new(1 << 20, 4);
+        c.insert(key(1, 7, false), val(4, 2.0));
+        assert!(c.get(&key(1, 7, true)).is_none(), "verified lookup must miss");
+        c.insert(key(1, 7, true), val(4, 3.0));
+        assert_eq!(c.get(&key(1, 7, false)).unwrap()[0], 2.0);
+        assert_eq!(c.get(&key(1, 7, true)).unwrap()[0], 3.0);
+        assert_eq!(c.stats().entries, 2);
+    }
+
+    #[test]
+    fn lru_evicts_least_recently_used_first() {
+        // capacity for ~2 entries per single shard
+        let per_entry = 100 * 4 + ENTRY_OVERHEAD;
+        let c = BlockCache::new(2 * per_entry + ENTRY_OVERHEAD, 1);
+        c.insert(key(1, 0, false), val(100, 0.0));
+        c.insert(key(1, 1, false), val(100, 1.0));
+        assert!(c.get(&key(1, 0, false)).is_some()); // 0 now most recent
+        c.insert(key(1, 2, false), val(100, 2.0)); // evicts 1
+        assert!(c.get(&key(1, 1, false)).is_none(), "LRU entry must be gone");
+        assert!(c.get(&key(1, 0, false)).is_some());
+        assert!(c.get(&key(1, 2, false)).is_some());
+    }
+
+    #[test]
+    fn oversized_value_is_not_cached() {
+        let c = BlockCache::new(64, 1);
+        c.insert(key(1, 0, false), val(1000, 1.0));
+        assert!(c.get(&key(1, 0, false)).is_none());
+        assert_eq!(c.stats().bytes, 0);
+    }
+
+    #[test]
+    fn invalidate_archive_spares_other_archives() {
+        let c = BlockCache::new(1 << 20, 4);
+        for b in 0..8 {
+            c.insert(key(1, b, false), val(4, 1.0));
+            c.insert(key(2, b, false), val(4, 2.0));
+        }
+        c.invalidate_archive(1);
+        assert!(c.get(&key(1, 3, false)).is_none());
+        assert!(c.get(&key(2, 3, false)).is_some());
+        assert_eq!(c.stats().entries, 8);
+    }
+
+    #[test]
+    fn reinsert_updates_bytes_and_value() {
+        let c = BlockCache::new(1 << 20, 1);
+        c.insert(key(1, 0, false), val(100, 1.0));
+        let before = c.stats().bytes;
+        c.insert(key(1, 0, false), val(10, 9.0));
+        let after = c.stats().bytes;
+        assert!(after < before, "shrunk value must shrink the account");
+        assert_eq!(c.get(&key(1, 0, false)).unwrap()[0], 9.0);
+        assert_eq!(c.stats().entries, 1);
+    }
+
+    #[test]
+    fn slab_slots_are_reused_after_eviction() {
+        let per_entry = 10 * 4 + ENTRY_OVERHEAD;
+        let c = BlockCache::new(3 * per_entry, 1);
+        for b in 0..50 {
+            c.insert(key(1, b, false), val(10, b as f32));
+        }
+        let g = c.shards[0].lock().unwrap();
+        assert!(g.slab.len() <= 4, "slab grew without reuse: {}", g.slab.len());
+    }
+}

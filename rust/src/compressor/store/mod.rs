@@ -1,0 +1,530 @@
+//! The serving layer's archive store: long-lived, cached, concurrent
+//! region queries.
+//!
+//! Every CLI `decompress --region` today pays the full open cost per
+//! query — read, parity heal, voted-header parse, section CRCs — before
+//! decoding a handful of blocks. The "millions of users" scenario is the
+//! opposite shape: many readers, small verified region queries, few
+//! archives. [`ArchiveStore`] amortizes the open across queries and the
+//! decode across regions:
+//!
+//! * **Open-archive cache** — one [`crate::ft::parity::parse_recovering`]
+//!   per *(path, generation)*: the parsed archive (voted header, section
+//!   index, parity-recovered bytes) stays resident, keyed by path with
+//!   the file's (mtime, length) generation. A scrubbed or rewritten
+//!   archive changes generation, which drops the stale parse *and* every
+//!   cached block of it — a rewritten archive can never serve stale
+//!   bytes (`rust/tests/store.rs` proves a mode-C flip between two
+//!   queries of the same block is detected, never served silently).
+//! * **Block decode cache** — a sharded byte-capacity LRU
+//!   ([`cache::BlockCache`]) over whole decoded blocks. Hot regions copy
+//!   out of cached blocks; cold blocks fan through the existing
+//!   [`chain`](crate::compressor::chain) driver trio and the
+//!   [`destage`] verify stage, so Algorithm 2 verification and
+//!   [`DecompressReport`] repair accounting are exactly the one-shot
+//!   path's. Verified and unverified decodes of the same block **never
+//!   share a cache entry** — the verified bit is part of
+//!   [`cache::BlockKey`].
+//!
+//! Queries report repairs the same way the one-shot API does: open-time
+//! parity stripe rebuilds surface in `stripes_repaired` on *every* query
+//! of that generation (each caller learns the archive was damaged at
+//! rest), while `blocks_reexecuted`/`events` carry only repairs from this
+//! query's cold-block fill — cache hits were healed (and accounted) by
+//! whichever query decoded them first.
+//!
+//! The store is `Sync`: one instance serves all connections of
+//! [`crate::serve`]. See [`protocol`] for the wire format.
+
+pub mod cache;
+pub mod protocol;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::compressor::block::{BlockGrid, Region};
+use crate::compressor::format::Archive;
+use crate::compressor::quantize::Quantizer;
+use crate::compressor::{classic, destage, CompressionConfig};
+use crate::data::Dims;
+use crate::error::{Error, Result};
+use crate::ft::report::DecompressReport;
+use crate::inject::Engine;
+
+pub use cache::{BlockCache, BlockKey, CacheStats};
+
+/// Identity of one on-disk file version: modification time (nanoseconds
+/// since the epoch) plus byte length. Two files with equal generations
+/// are treated as the same bytes; `scrub`/rewrite bumps at least the
+/// mtime, invalidating the open-archive entry and its cached blocks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Generation {
+    /// `mtime` in nanoseconds since the Unix epoch (0 for pre-epoch).
+    pub mtime_ns: u128,
+    /// File length in bytes.
+    pub len: u64,
+}
+
+impl Generation {
+    /// Stat `path` into a generation stamp.
+    pub fn of(path: &Path) -> Result<Self> {
+        let (mtime_ns, len) = crate::io::file_generation(path)?;
+        Ok(Generation { mtime_ns, len })
+    }
+}
+
+/// How many read → re-stat rounds [`ArchiveStore::open_at`] tolerates for
+/// a file being rewritten underneath it before giving up.
+const OPEN_RETRIES: usize = 4;
+
+/// Store knobs.
+#[derive(Debug, Clone)]
+pub struct StoreConfig {
+    /// Block decode cache capacity in bytes (values + per-entry
+    /// overhead), split evenly across `shards`.
+    pub cache_bytes: usize,
+    /// Lock shards of the block cache (more shards, less contention).
+    pub shards: usize,
+    /// Worker threads per cold-block fill ([`Parallelism::from_workers`]
+    /// convention does not apply here: this is a plain count, ≥ 1).
+    ///
+    /// [`Parallelism::from_workers`]: crate::compressor::Parallelism::from_workers
+    pub workers: usize,
+}
+
+impl Default for StoreConfig {
+    fn default() -> Self {
+        StoreConfig { cache_bytes: 256 << 20, shards: 16, workers: 1 }
+    }
+}
+
+/// The decodable body of one open archive.
+enum ArchiveBody {
+    /// Independent-block archive (rsz/ftrsz/xsz/ftxsz): blocks decode on
+    /// demand through [`destage::decode_block_set`].
+    Blocks {
+        archive: Archive,
+        grid: BlockGrid,
+        q: Quantizer,
+    },
+    /// Classic dependent-block archive: no random access exists, so the
+    /// whole field is decoded eagerly once per generation and regions
+    /// are sliced from it.
+    Classic {
+        dims: Dims,
+        full: Arc<Vec<f32>>,
+    },
+}
+
+/// One parsed, parity-recovered archive resident in the store.
+pub struct OpenArchive {
+    /// Store-unique instance id — block-cache keys carry it, so entries
+    /// of a replaced generation can never be confused with its successor.
+    id: u64,
+    /// File generation this parse corresponds to.
+    generation: Generation,
+    /// Parity stripes rebuilt when this generation was opened.
+    stripes_repaired: Vec<usize>,
+    /// Engine name (`sz`/`rsz`/`ftrsz`/`xsz`/`ftxsz`), as `ftsz info`
+    /// would classify it.
+    engine: &'static str,
+    body: ArchiveBody,
+}
+
+impl OpenArchive {
+    /// Engine name of this archive (`sz`/`rsz`/`ftrsz`/`xsz`/`ftxsz`).
+    pub fn engine(&self) -> &'static str {
+        self.engine
+    }
+
+    /// Dataset dims.
+    pub fn dims(&self) -> Dims {
+        match &self.body {
+            ArchiveBody::Blocks { archive, .. } => archive.header.dims,
+            ArchiveBody::Classic { dims, .. } => *dims,
+        }
+    }
+}
+
+/// Aggregate store counters (see [`ArchiveStore::stats`]).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StoreStats {
+    /// Archives currently resident.
+    pub open_archives: usize,
+    /// Parse-and-open operations performed (cache misses at the archive
+    /// level; a steady-state server holds this flat).
+    pub opens: u64,
+    /// Open entries dropped because their file's generation changed.
+    pub invalidations: u64,
+    /// Block decode cache counters.
+    pub cache: CacheStats,
+}
+
+/// Long-lived archive store: open-archive cache + sharded block LRU in
+/// front of the one-shot decode chains. See the module docs.
+pub struct ArchiveStore {
+    cfg: StoreConfig,
+    open: Mutex<HashMap<PathBuf, Arc<OpenArchive>>>,
+    cache: BlockCache,
+    next_id: AtomicU64,
+    opens: AtomicU64,
+    invalidations: AtomicU64,
+}
+
+impl ArchiveStore {
+    /// New store with the given knobs.
+    pub fn new(cfg: StoreConfig) -> Self {
+        let cache = BlockCache::new(cfg.cache_bytes, cfg.shards);
+        ArchiveStore {
+            cfg,
+            open: Mutex::new(HashMap::new()),
+            cache,
+            next_id: AtomicU64::new(1),
+            opens: AtomicU64::new(0),
+            invalidations: AtomicU64::new(0),
+        }
+    }
+
+    /// New store with [`StoreConfig::default`] knobs.
+    pub fn with_defaults() -> Self {
+        Self::new(StoreConfig::default())
+    }
+
+    /// Decode one region of the archive at `path`, serving hot blocks
+    /// from cache and filling cold ones through the decode chain with
+    /// `cfg.workers` workers. `verify` runs the Algorithm 2 verify stage
+    /// per cold block (verified and unverified results are cached under
+    /// distinct keys).
+    pub fn query(
+        &self,
+        path: &Path,
+        region: Region,
+        verify: bool,
+    ) -> Result<(Vec<f32>, DecompressReport)> {
+        self.query_with(path, region, verify, self.cfg.workers)
+    }
+
+    /// [`ArchiveStore::query`] with an explicit worker count for the
+    /// cold-block fill.
+    pub fn query_with(
+        &self,
+        path: &Path,
+        region: Region,
+        verify: bool,
+        workers: usize,
+    ) -> Result<(Vec<f32>, DecompressReport)> {
+        let oa = self.open_at(path)?;
+        let mut report = DecompressReport {
+            stripes_repaired: oa.stripes_repaired.clone(),
+            ..DecompressReport::default()
+        };
+        match &oa.body {
+            ArchiveBody::Classic { dims, full } => {
+                if verify {
+                    return Err(Error::InvalidArgument(
+                        "classic archive has no FT checksums; cannot verify".into(),
+                    ));
+                }
+                Ok((slice_region(full, *dims, region)?, report))
+            }
+            ArchiveBody::Blocks { archive, grid, q } => {
+                let work = grid.blocks_intersecting(region)?;
+                // region.len() was validated against the header dims by
+                // blocks_intersecting above
+                let mut out = vec![0.0f32; region.len()];
+                let mut cold = Vec::new();
+                for &bi in &work {
+                    let key = BlockKey { archive: oa.id, block: bi, verified: verify };
+                    match self.cache.get(&key) {
+                        Some(block) => grid.copy_block_into_region(&block, bi, region, &mut out),
+                        None => cold.push(bi),
+                    }
+                }
+                if !cold.is_empty() {
+                    let (blocks, fill) =
+                        destage::decode_block_set(archive, grid, q, &cold, verify, workers)?;
+                    report.absorb(fill);
+                    for (bi, block) in blocks {
+                        let block = Arc::new(block);
+                        grid.copy_block_into_region(&block, bi, region, &mut out);
+                        let key = BlockKey { archive: oa.id, block: bi, verified: verify };
+                        self.cache.insert(key, block);
+                    }
+                }
+                Ok((out, report))
+            }
+        }
+    }
+
+    /// Open (or reuse) the archive at `path` for its current on-disk
+    /// generation: stat → reuse on generation match, otherwise read +
+    /// parse once and swap the entry in (dropping the predecessor's
+    /// cached blocks).
+    pub fn open_at(&self, path: &Path) -> Result<Arc<OpenArchive>> {
+        let current = Generation::of(path)?;
+        if let Some(existing) = self.open.lock().unwrap().get(path) {
+            if existing.generation == current {
+                return Ok(existing.clone());
+            }
+        }
+        let (bytes, generation) = read_stable(path)?;
+        let opened = Arc::new(self.parse_archive(&bytes, generation)?);
+        self.opens.fetch_add(1, Ordering::Relaxed);
+        drop(bytes);
+        let mut map = self.open.lock().unwrap();
+        if let Some(racer) = map.get(path) {
+            // a racing query parsed the same generation first — keep one
+            // instance so both share cached blocks
+            if racer.generation == generation {
+                return Ok(racer.clone());
+            }
+        }
+        if let Some(old) = map.insert(path.to_path_buf(), opened.clone()) {
+            self.cache.invalidate_archive(old.id);
+            self.invalidations.fetch_add(1, Ordering::Relaxed);
+        }
+        Ok(opened)
+    }
+
+    /// Drop the open entry (and cached blocks) for `path`, if resident.
+    pub fn evict(&self, path: &Path) {
+        if let Some(old) = self.open.lock().unwrap().remove(path) {
+            self.cache.invalidate_archive(old.id);
+            self.invalidations.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Aggregate counters.
+    pub fn stats(&self) -> StoreStats {
+        StoreStats {
+            open_archives: self.open.lock().unwrap().len(),
+            opens: self.opens.load(Ordering::Relaxed),
+            invalidations: self.invalidations.load(Ordering::Relaxed),
+            cache: self.cache.stats(),
+        }
+    }
+
+    fn parse_archive(&self, bytes: &[u8], generation: Generation) -> Result<OpenArchive> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let archive = crate::ft::parity::parse_recovering(bytes)?;
+        let stripes_repaired = archive
+            .recovered
+            .as_ref()
+            .map(|r| r.stripes_repaired.clone())
+            .unwrap_or_default();
+        if archive.header.is_classic() {
+            // no random access exists for the dependent-block format:
+            // decode the whole field once per generation and slice from
+            // it (decompress_reported re-parses the container — accepted,
+            // it runs once per generation, not once per query)
+            let (dec, report) = classic::decompress_reported(bytes)?;
+            return Ok(OpenArchive {
+                id,
+                generation,
+                stripes_repaired: report.stripes_repaired,
+                engine: Engine::Classic.name(),
+                body: ArchiveBody::Classic { dims: dec.dims, full: Arc::new(dec.data) },
+            });
+        }
+        let (grid, q) = destage::grid_of(&archive)?;
+        let engine = match (archive.header.is_xsz(), archive.sum_dc.is_some()) {
+            (true, true) => Engine::UltraFastFT.name(),
+            (true, false) => Engine::UltraFast.name(),
+            (false, true) => Engine::FaultTolerant.name(),
+            (false, false) => Engine::RandomAccess.name(),
+        };
+        Ok(OpenArchive {
+            id,
+            generation,
+            stripes_repaired,
+            engine,
+            body: ArchiveBody::Blocks { archive, grid, q },
+        })
+    }
+}
+
+/// Read `path` with a stat → read → re-stat loop so the returned bytes
+/// and generation stamp are consistent even while a writer (e.g. `scrub`)
+/// rewrites the file.
+fn read_stable(path: &Path) -> Result<(Vec<u8>, Generation)> {
+    for _ in 0..OPEN_RETRIES {
+        let before = Generation::of(path)?;
+        let bytes = std::fs::read(path)?;
+        if Generation::of(path)? == before {
+            return Ok((bytes, before));
+        }
+    }
+    Err(Error::Runtime(format!(
+        "{} kept changing across {OPEN_RETRIES} read attempts",
+        path.display()
+    )))
+}
+
+/// Slice `region` out of a dense row-major field (the classic-archive
+/// query path), with the same bounds validation
+/// [`BlockGrid::blocks_intersecting`] applies.
+fn slice_region(full: &[f32], dims: Dims, region: Region) -> Result<Vec<f32>> {
+    let (dz, dy, dx) = dims.as_3d();
+    let (oz, oy, ox) = region.origin;
+    let (sz, sy, sx) = region.shape;
+    if region.is_empty() || oz + sz > dz || oy + sy > dy || ox + sx > dx {
+        return Err(Error::InvalidArgument(format!(
+            "region {region:?} outside dataset ({dz}, {dy}, {dx})"
+        )));
+    }
+    let mut out = Vec::with_capacity(region.len());
+    for z in oz..oz + sz {
+        for y in oy..oy + sy {
+            let base = (z * dy + y) * dx + ox;
+            out.extend_from_slice(&full[base..base + sx]);
+        }
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// engine auto-picker
+// ---------------------------------------------------------------------------
+
+/// Blocks sampled (at most) by [`pick_engine`].
+pub const PICK_SAMPLE_BLOCKS: usize = 256;
+
+/// Constant-block share at (or above) which [`pick_engine`] chooses the
+/// ultra-fast engine: when a quarter of sampled blocks collapse to a
+/// single constant, xsz's constant-block detection wins on both speed
+/// and ratio; below it, rsz's prediction + Huffman coding earns its keep.
+pub const PICK_CONSTANT_SHARE: f64 = 0.25;
+
+/// What [`pick_engine`] decided and why.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EnginePick {
+    /// Chosen engine (xsz or rsz; callers wanting FT checksums map to the
+    /// ftxsz/ftrsz sibling).
+    pub engine: Engine,
+    /// Blocks actually sampled.
+    pub sampled: usize,
+    /// Share of sampled blocks that are constant under the bound.
+    pub constant_share: f64,
+}
+
+/// Choose xsz vs rsz for a field by sampling per-block mode statistics —
+/// the same constant-block share `ftsz info` reports for an existing
+/// archive, computed pre-compression. Samples at most
+/// [`PICK_SAMPLE_BLOCKS`] blocks, evenly strided, and applies the xsz
+/// constant-block rule (`hi - lo <= 2·bound`, all values finite) to each.
+pub fn pick_engine(data: &[f32], dims: Dims, cfg: &CompressionConfig) -> Result<EnginePick> {
+    cfg.validate()?;
+    if data.len() != dims.len() {
+        return Err(Error::InvalidArgument(format!(
+            "data length {} != dims {:?} ({} points)",
+            data.len(),
+            dims,
+            dims.len()
+        )));
+    }
+    let grid = BlockGrid::new(dims, cfg.block_size)?;
+    let twoe = 2.0 * cfg.error_bound.absolute(data);
+    let n = grid.n_blocks();
+    let step = n.div_ceil(PICK_SAMPLE_BLOCKS).max(1);
+    let mut block = Vec::new();
+    let mut sampled = 0usize;
+    let mut constant = 0usize;
+    let mut bi = 0usize;
+    while bi < n {
+        grid.extract(data, bi, &mut block);
+        let mut lo = f64::INFINITY;
+        let mut hi = f64::NEG_INFINITY;
+        let mut n_finite = 0usize;
+        for &v in &block {
+            if v.is_finite() {
+                n_finite += 1;
+                let v = v as f64;
+                if v < lo {
+                    lo = v;
+                }
+                if v > hi {
+                    hi = v;
+                }
+            }
+        }
+        if n_finite == block.len() && hi - lo <= twoe {
+            constant += 1;
+        }
+        sampled += 1;
+        bi += step;
+    }
+    let constant_share = constant as f64 / sampled.max(1) as f64;
+    let engine = if constant_share >= PICK_CONSTANT_SHARE {
+        Engine::UltraFast
+    } else {
+        Engine::RandomAccess
+    };
+    Ok(EnginePick { engine, sampled, constant_share })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compressor::ErrorBound;
+
+    fn cfg(e: f64) -> CompressionConfig {
+        CompressionConfig::new(ErrorBound::Abs(e))
+    }
+
+    #[test]
+    fn slice_region_matches_manual_index() {
+        let dims = Dims::d3(3, 4, 5);
+        let data: Vec<f32> = (0..dims.len()).map(|i| i as f32).collect();
+        let region = Region { origin: (1, 1, 2), shape: (2, 2, 3) };
+        let out = slice_region(&data, dims, region).unwrap();
+        let mut expect = Vec::new();
+        for z in 1..3 {
+            for y in 1..3 {
+                for x in 2..5 {
+                    expect.push(((z * 4 + y) * 5 + x) as f32);
+                }
+            }
+        }
+        assert_eq!(out, expect);
+        let bad = Region { origin: (2, 3, 3), shape: (2, 1, 1) };
+        assert!(slice_region(&data, dims, bad).is_err());
+        let empty = Region { origin: (0, 0, 0), shape: (0, 1, 1) };
+        assert!(slice_region(&data, dims, empty).is_err());
+    }
+
+    #[test]
+    fn picker_flags_constant_fields_as_xsz() {
+        let dims = Dims::d3(8, 10, 10);
+        let flat = vec![3.25f32; dims.len()];
+        let pick = pick_engine(&flat, dims, &cfg(1e-3)).unwrap();
+        assert_eq!(pick.engine, Engine::UltraFast);
+        assert!(pick.constant_share > 0.99, "share {}", pick.constant_share);
+        assert!(pick.sampled > 0 && pick.sampled <= PICK_SAMPLE_BLOCKS);
+    }
+
+    #[test]
+    fn picker_flags_varied_fields_as_rsz() {
+        let dims = Dims::d3(8, 10, 10);
+        let wild: Vec<f32> = (0..dims.len()).map(|i| (i % 97) as f32).collect();
+        let pick = pick_engine(&wild, dims, &cfg(1e-4)).unwrap();
+        assert_eq!(pick.engine, Engine::RandomAccess);
+        assert!(pick.constant_share < PICK_CONSTANT_SHARE);
+    }
+
+    #[test]
+    fn picker_sampling_stays_capped_on_many_blocks() {
+        // 1000 blocks of edge 2 → strided sampling, not full scan
+        let dims = Dims::d3(20, 20, 20);
+        let flat = vec![1.0f32; dims.len()];
+        let pick = pick_engine(&flat, dims, &cfg(1e-3).with_block_size(2)).unwrap();
+        assert!(pick.sampled <= PICK_SAMPLE_BLOCKS, "sampled {}", pick.sampled);
+        assert_eq!(pick.engine, Engine::UltraFast);
+    }
+
+    #[test]
+    fn picker_rejects_shape_mismatch() {
+        assert!(pick_engine(&[1.0; 10], Dims::d3(2, 2, 2), &cfg(1e-3)).is_err());
+    }
+}

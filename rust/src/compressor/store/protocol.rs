@@ -1,0 +1,340 @@
+//! Wire protocol of `ftsz serve` — line-framed requests, length-prefixed
+//! binary responses, zero dependencies beyond `std::io`.
+//!
+//! # Requests (one LF-terminated ASCII line each, ≤ [`MAX_REQUEST_LINE`] bytes)
+//!
+//! ```text
+//! QUERY <path> <z,y,x,dz,dy,dx> [verify|noverify]
+//! STATS
+//! PING
+//! QUIT
+//! ```
+//!
+//! `<path>` is an archive path on the server host and may not contain
+//! whitespace. Clients may pipeline: any number of request lines can be
+//! in flight on one connection; responses come back in request order.
+//!
+//! # Responses
+//!
+//! * `QUERY` →
+//!   `OK <n> reexec=<blocks> stripes=<count>\n` followed by exactly
+//!   `4·n` bytes of little-endian `f32` region values (the length prefix
+//!   is `<n>`), or `ERR <message>\n` with no payload. The `reexec=` /
+//!   `stripes=` fields surface the query's [`DecompressReport`]: blocks
+//!   healed by Algorithm 2 re-execution and parity stripes rebuilt when
+//!   the archive was opened.
+//! * `STATS` → `STATS open=<archives> entries=<blocks> bytes=<n> hits=<n> misses=<n>\n`
+//! * `PING` → `PONG\n`
+//! * `QUIT` → connection closes after any queued responses.
+//!
+//! A malformed line yields `ERR …` and the connection stays up — the LF
+//! framing resynchronizes on the next line. Everything a server reads
+//! here is untrusted input (the server decodes archives *and* requests it
+//! didn't write), so the request-parsing functions in this module are in
+//! ftlint's R1/R5 decode scope: no panics, no direct indexing of request
+//! bytes, no attacker-sized allocations. The response *reader*
+//! ([`parse_response_header`]) is in the same scope — a bench/client
+//! trusts the server no more than the server trusts it.
+
+use std::io::BufRead;
+
+use crate::compressor::block::Region;
+use crate::error::{Error, Result};
+use crate::ft::DecompressReport;
+
+/// Hard cap on one request line — far above any legitimate path+region,
+/// far below an allocation of interest.
+pub const MAX_REQUEST_LINE: usize = 4096;
+
+/// One parsed client request.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Request {
+    /// Decode one region of one archive (the serving hot path).
+    Query {
+        /// Archive path on the server host (no whitespace).
+        path: String,
+        /// Requested sub-volume.
+        region: Region,
+        /// Run the Algorithm 2 verify stage per block.
+        verify: bool,
+    },
+    /// Report store/cache counters.
+    Stats,
+    /// Liveness probe.
+    Ping,
+    /// Close this connection.
+    Quit,
+}
+
+/// Read one LF-terminated request line, bounded by [`MAX_REQUEST_LINE`].
+/// `Ok(None)` is clean EOF before any byte; an unterminated line at the
+/// cap is an error (a client streaming an unbounded line must not grow
+/// server memory with it).
+pub fn read_request_line<R: BufRead>(r: &mut R) -> Result<Option<String>> {
+    let mut buf = Vec::new();
+    let n = r.take(MAX_REQUEST_LINE as u64).read_until(b'\n', &mut buf)?;
+    if n == 0 {
+        return Ok(None);
+    }
+    if buf.last() != Some(&b'\n') && n >= MAX_REQUEST_LINE {
+        return Err(Error::InvalidArgument(format!(
+            "request line exceeds {MAX_REQUEST_LINE} bytes"
+        )));
+    }
+    while matches!(buf.last(), Some(b'\n') | Some(b'\r')) {
+        buf.pop();
+    }
+    match String::from_utf8(buf) {
+        Ok(line) => Ok(Some(line)),
+        Err(_) => Err(Error::InvalidArgument("request line is not UTF-8".into())),
+    }
+}
+
+/// Parse one request line (already stripped of its terminator).
+pub fn parse_request(line: &str) -> Result<Request> {
+    let mut fields = line.split_whitespace();
+    let cmd = fields
+        .next()
+        .ok_or_else(|| Error::InvalidArgument("empty request".into()))?;
+    let req = match cmd {
+        "QUERY" => {
+            let path = fields
+                .next()
+                .ok_or_else(|| Error::InvalidArgument("QUERY needs <path>".into()))?;
+            let region_spec = fields.next().ok_or_else(|| {
+                Error::InvalidArgument("QUERY needs <z,y,x,dz,dy,dx>".into())
+            })?;
+            let verify = match fields.next() {
+                None | Some("noverify") => false,
+                Some("verify") => true,
+                Some(other) => {
+                    return Err(Error::InvalidArgument(format!(
+                        "QUERY flag '{other}' (verify|noverify)"
+                    )))
+                }
+            };
+            Request::Query {
+                path: path.to_string(),
+                region: parse_region(region_spec)?,
+                verify,
+            }
+        }
+        "STATS" => Request::Stats,
+        "PING" => Request::Ping,
+        "QUIT" => Request::Quit,
+        other => {
+            return Err(Error::InvalidArgument(format!(
+                "unknown request '{other}' (QUERY|STATS|PING|QUIT)"
+            )))
+        }
+    };
+    if fields.next().is_some() {
+        return Err(Error::InvalidArgument(format!("trailing fields after {cmd}")));
+    }
+    Ok(req)
+}
+
+/// Parse one `z,y,x,dz,dy,dx` region sextuple (shared with the CLI's
+/// `--region` flag).
+pub fn parse_region(s: &str) -> Result<Region> {
+    let parts: Vec<usize> = s
+        .split(',')
+        .map(|p| p.trim().parse::<usize>())
+        .collect::<std::result::Result<_, _>>()
+        .map_err(|_| Error::InvalidArgument(format!("region '{s}' must be z,y,x,dz,dy,dx")))?;
+    match parts.as_slice() {
+        [z, y, x, dz, dy, dx] => {
+            Ok(Region { origin: (*z, *y, *x), shape: (*dz, *dy, *dx) })
+        }
+        _ => Err(Error::InvalidArgument(format!(
+            "region '{s}' needs 6 components, got {}",
+            parts.len()
+        ))),
+    }
+}
+
+/// Parse a `;`-separated list of region sextuples (the CLI's multi-region
+/// `--region` form).
+pub fn parse_region_list(s: &str) -> Result<Vec<Region>> {
+    s.split(';').map(parse_region).collect()
+}
+
+/// A parsed `OK`/`ERR`/`STATS`/`PONG` response header line (client side).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Response {
+    /// Query succeeded: `values` little-endian `f32`s follow on the wire.
+    Ok {
+        /// Number of f32 payload values that follow (4·values bytes).
+        values: usize,
+        /// Blocks healed by Algorithm 2 re-execution during this query.
+        reexecuted: usize,
+        /// Parity stripes rebuilt when this query's archive was opened.
+        stripes: usize,
+    },
+    /// Query failed cleanly; no payload follows.
+    Err(String),
+    /// Counters snapshot.
+    Stats(String),
+    /// `PING` reply.
+    Pong,
+}
+
+/// Parse one response header line (client side — the server's output is
+/// as untrusted to a client as the client's input is to the server). The
+/// payload length it announces is capped against
+/// [`crate::compressor::format::MAX_DECODED_POINTS`] before any caller
+/// could allocate for it.
+pub fn parse_response_header(line: &str) -> Result<Response> {
+    let mut fields = line.split_whitespace();
+    let tag = fields
+        .next()
+        .ok_or_else(|| Error::InvalidArgument("empty response".into()))?;
+    match tag {
+        "OK" => {
+            let values: usize = fields
+                .next()
+                .and_then(|v| v.parse().ok())
+                .ok_or_else(|| Error::Format("OK response without a value count".into()))?;
+            if values as u128 > crate::compressor::format::MAX_DECODED_POINTS {
+                return Err(Error::Format(format!(
+                    "OK response announces {values} values — over the decode cap"
+                )));
+            }
+            let mut reexecuted = 0usize;
+            let mut stripes = 0usize;
+            for field in fields {
+                if let Some(v) = field.strip_prefix("reexec=") {
+                    reexecuted = v
+                        .parse()
+                        .map_err(|_| Error::Format(format!("bad reexec count '{v}'")))?;
+                } else if let Some(v) = field.strip_prefix("stripes=") {
+                    stripes = v
+                        .parse()
+                        .map_err(|_| Error::Format(format!("bad stripe count '{v}'")))?;
+                }
+            }
+            Ok(Response::Ok { values, reexecuted, stripes })
+        }
+        "ERR" => {
+            let msg = line.strip_prefix("ERR").unwrap_or(line).trim_start();
+            Ok(Response::Err(msg.to_string()))
+        }
+        "STATS" => {
+            let body = line.strip_prefix("STATS").unwrap_or(line).trim_start();
+            Ok(Response::Stats(body.to_string()))
+        }
+        "PONG" => Ok(Response::Pong),
+        other => Err(Error::Format(format!("unknown response tag '{other}'"))),
+    }
+}
+
+/// Render the `OK` header line for a successful query (see module docs).
+pub fn ok_header(values: usize, report: &DecompressReport) -> String {
+    format!(
+        "OK {values} reexec={} stripes={}\n",
+        report.blocks_reexecuted,
+        report.stripes_repaired.len()
+    )
+}
+
+/// Serialize query payload values as little-endian bytes.
+pub fn payload_bytes(values: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(values.len() * 4);
+    for v in values {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out
+}
+
+/// Decode a query payload received off the wire (client side).
+pub fn payload_values(bytes: &[u8]) -> Vec<f32> {
+    bytes.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn query_roundtrip_with_flags() {
+        let r = parse_request("QUERY /tmp/a.ftsz 1,2,3,4,5,6 verify").unwrap();
+        assert_eq!(
+            r,
+            Request::Query {
+                path: "/tmp/a.ftsz".into(),
+                region: Region { origin: (1, 2, 3), shape: (4, 5, 6) },
+                verify: true,
+            }
+        );
+        assert!(matches!(
+            parse_request("QUERY a 0,0,0,1,1,1").unwrap(),
+            Request::Query { verify: false, .. }
+        ));
+        assert_eq!(parse_request("PING").unwrap(), Request::Ping);
+        assert_eq!(parse_request("STATS").unwrap(), Request::Stats);
+        assert_eq!(parse_request("QUIT").unwrap(), Request::Quit);
+    }
+
+    #[test]
+    fn malformed_requests_err_cleanly() {
+        for bad in [
+            "",
+            "QUERY",
+            "QUERY p",
+            "QUERY p 1,2,3",
+            "QUERY p 1,2,3,4,5,x",
+            "QUERY p 1,2,3,4,5,6 maybe",
+            "QUERY p 1,2,3,4,5,6 verify extra",
+            "PING extra",
+            "NOPE",
+        ] {
+            assert!(parse_request(bad).is_err(), "{bad:?} should not parse");
+        }
+    }
+
+    #[test]
+    fn region_list_splits_on_semicolons() {
+        let rs = parse_region_list("0,0,0,2,2,2;1,1,1,3,3,3").unwrap();
+        assert_eq!(rs.len(), 2);
+        assert_eq!(rs[1].origin, (1, 1, 1));
+        assert!(parse_region_list("0,0,0,2,2,2;bad").is_err());
+    }
+
+    #[test]
+    fn request_line_reader_bounds_and_strips() {
+        let mut input = std::io::Cursor::new(b"PING\r\nQUIT\n".to_vec());
+        assert_eq!(read_request_line(&mut input).unwrap().unwrap(), "PING");
+        assert_eq!(read_request_line(&mut input).unwrap().unwrap(), "QUIT");
+        assert!(read_request_line(&mut input).unwrap().is_none());
+
+        let long = vec![b'a'; MAX_REQUEST_LINE + 10];
+        let mut input = std::io::Cursor::new(long);
+        assert!(read_request_line(&mut input).is_err(), "unbounded line must be refused");
+    }
+
+    #[test]
+    fn response_header_roundtrip() {
+        let rep = DecompressReport {
+            blocks_reexecuted: 2,
+            stripes_repaired: vec![3, 9],
+            ..DecompressReport::default()
+        };
+        let line = ok_header(100, &rep);
+        let parsed = parse_response_header(line.trim_end()).unwrap();
+        assert_eq!(parsed, Response::Ok { values: 100, reexecuted: 2, stripes: 2 });
+        assert_eq!(
+            parse_response_header("ERR no such file").unwrap(),
+            Response::Err("no such file".into())
+        );
+        assert_eq!(parse_response_header("PONG").unwrap(), Response::Pong);
+        assert!(parse_response_header("OK lots").is_err());
+        assert!(parse_response_header("OK 99999999999999999999").is_err());
+        assert!(parse_response_header("WAT 1").is_err());
+    }
+
+    #[test]
+    fn payload_bytes_roundtrip() {
+        let vals = [1.0f32, -2.5, f32::MIN_POSITIVE, 0.0];
+        assert_eq!(payload_values(&payload_bytes(&vals)), vals);
+    }
+}

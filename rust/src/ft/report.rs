@@ -60,6 +60,17 @@ impl DecompressReport {
     pub fn count(&self, kind: SdcKind) -> usize {
         self.events.iter().filter(|e| e.kind == kind).count()
     }
+
+    /// Merge another report into this one. The serving layer assembles a
+    /// query's report from the open-time parity record plus each
+    /// cold-block fill; both sides arrive already folded per block by
+    /// `destage` (this is bookkeeping over finished reports, not a new
+    /// per-block fold site).
+    pub fn absorb(&mut self, other: DecompressReport) {
+        self.events.extend(other.events);
+        self.blocks_reexecuted += other.blocks_reexecuted;
+        self.stripes_repaired.extend(other.stripes_repaired);
+    }
 }
 
 #[cfg(test)]
@@ -76,6 +87,20 @@ mod tests {
         assert!(!r.is_clean());
         assert_eq!(r.count(SdcKind::DecompCorrected), 1);
         assert_eq!(r.count(SdcKind::InputCorrected), 0);
+    }
+
+    #[test]
+    fn absorb_merges_all_three_domains() {
+        let mut a = DecompressReport::default();
+        a.stripes_repaired.push(4);
+        let mut b = DecompressReport::default();
+        b.events.push(SdcEvent { kind: SdcKind::DecompCorrected, block: 9, index: 0 });
+        b.blocks_reexecuted = 1;
+        b.stripes_repaired.push(17);
+        a.absorb(b);
+        assert_eq!(a.blocks_reexecuted, 1);
+        assert_eq!(a.stripes_repaired, vec![4, 17]);
+        assert_eq!(a.count(SdcKind::DecompCorrected), 1);
     }
 
     #[test]

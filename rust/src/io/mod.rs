@@ -7,3 +7,18 @@ pub mod posix;
 
 pub use pfs::SimulatedPfs;
 pub use posix::FilePerProcess;
+
+/// Stamp one on-disk file version as (mtime in nanoseconds since the
+/// Unix epoch, byte length). The serving layer's open-archive cache
+/// ([`crate::compressor::store`]) keys parsed archives on this pair so a
+/// scrubbed or rewritten file invalidates cleanly; pre-epoch mtimes
+/// collapse to 0 (the length still disambiguates most rewrites there).
+pub fn file_generation(path: &std::path::Path) -> std::io::Result<(u128, u64)> {
+    let md = std::fs::metadata(path)?;
+    let mtime_ns = md
+        .modified()?
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_nanos())
+        .unwrap_or(0);
+    Ok((mtime_ns, md.len()))
+}

@@ -305,6 +305,55 @@
 //! *detected* and reported as a clean error — never silently decoded. The
 //! `inject::mode_c` campaign measures exactly this trichotomy.
 //!
+//! ## Serving layer: `ArchiveStore` + `ftsz serve`
+//!
+//! The one-shot APIs above re-open, re-recover and re-decode the archive
+//! on every call — the right shape for a restart, the wrong one for the
+//! target scenario of many readers issuing small verified region queries
+//! against a few archives. [`compressor::store::ArchiveStore`] is the
+//! long-lived front: archives are parsed (and parity-healed) **once per
+//! on-disk generation**, decoded blocks land in a sharded byte-capacity
+//! LRU, and region queries copy out of hot blocks while cold ones fan
+//! through the same [`compressor::chain`] driver trio and
+//! [`compressor::destage`] verify stage as the one-shot path:
+//!
+//! ```no_run
+//! use ftsz::compressor::block::Region;
+//! use ftsz::compressor::store::ArchiveStore;
+//! use std::path::Path;
+//!
+//! let store = ArchiveStore::with_defaults(); // share one per process
+//! let region = Region { origin: (8, 8, 8), shape: (16, 16, 16) };
+//! // first query: open + parity-heal + parse + decode the cold blocks
+//! let (vals, report) = store.query(Path::new("t.ftsz"), region, true).unwrap();
+//! // second query: pure cache hits — same bytes, ~µs latency
+//! let (again, _) = store.query(Path::new("t.ftsz"), region, true).unwrap();
+//! assert_eq!(vals, again);
+//! assert!(report.is_clean() || !report.stripes_repaired.is_empty());
+//! ```
+//!
+//! **Cache-coherence guarantees.** Entries are keyed by an open-archive
+//! instance id minted per *(path, generation)* — generation being the
+//! file's (mtime, length) — so a `scrub` rewrite or any other file
+//! replacement drops the stale parse and every cached block with it: a
+//! corrupted-then-rewritten archive is re-verified, never served
+//! stale-silent. **Verified-vs-unverified semantics:** the Algorithm 2
+//! verified bit is part of the cache key, so an unverified decode can
+//! never satisfy a verified query (or vice versa); open-time stripe
+//! repairs are reported on every query of that generation, while
+//! `blocks_reexecuted` counts only the current query's cold-block fill.
+//!
+//! `ftsz serve` ([`serve`]) exposes the store over a zero-dependency
+//! wire protocol (stdin, unix socket, or TCP; line-framed requests,
+//! length-prefixed binary responses — spec in
+//! [`compressor::store::protocol`]) with a worker-pool listener, and
+//! `ftsz serve --bench` is the load driver behind `BENCH_serve.json`
+//! (cold vs warm latency, qps vs workers, hit ratio; the `--check` gate
+//! requires warm ≥ 5× cold). Engine choice for *writing* archives can
+//! ride the same sampling machinery: [`compressor::store::pick_engine`]
+//! (CLI: `ftsz compress --engine auto`) samples per-block constant-share
+//! to choose xsz vs rsz per field.
+//!
 //! ## Enforced invariants (ftlint)
 //!
 //! The resilience claims above are structural properties of this source
@@ -357,6 +406,7 @@ pub mod ft;
 pub mod inject;
 pub mod io;
 pub mod runtime;
+pub mod serve;
 pub mod util;
 
 pub use error::{Error, Result};

@@ -16,8 +16,9 @@
 
 use std::collections::HashMap;
 use std::path::PathBuf;
+use std::sync::Arc;
 
-use ftsz::compressor::block::Region;
+use ftsz::compressor::store::{self, protocol, ArchiveStore, StoreConfig};
 use ftsz::compressor::{classic, engine, format, stream, CompressionConfig, ErrorBound, Parallelism};
 use ftsz::config::{types, ConfigDoc, PipelineConfig};
 use ftsz::coordinator::{run_pipeline, WorkItem};
@@ -27,7 +28,7 @@ use ftsz::ft::parity::ParityParams;
 use ftsz::inject::mode_b::ArenaFlip;
 use ftsz::inject::mode_c::{self, ArchiveFault};
 use ftsz::inject::{run_and_classify, ArchiveOutcome, Engine, Outcome};
-use ftsz::{analysis, ft};
+use ftsz::{analysis, ft, serve};
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -171,6 +172,7 @@ fn run(args: Vec<String>) -> Result<()> {
         "stats" => cmd_stats(&flags),
         "info" => cmd_info(&flags),
         "scrub" => cmd_scrub(&flags),
+        "serve" => cmd_serve(&flags),
         "inject" => cmd_inject(&flags),
         "pipeline" => cmd_pipeline(&flags),
         "xla-selftest" => cmd_xla_selftest(),
@@ -187,14 +189,20 @@ fn print_usage() {
         "ftsz — SDC-resilient error-bounded lossy compressor (FT-SZ reproduction)\n\
          commands:\n\
          \x20 gen-data   --profile nyx|hurricane|scale-letkf|pluto --edge N --seed S --out DIR\n\
-         \x20 compress   --input RAW --dims D,R,C --engine sz|rsz|ftrsz|xsz|ftxsz\n\
+         \x20 compress   --input RAW --dims D,R,C --engine sz|rsz|ftrsz|xsz|ftxsz|auto\n\
          \x20            --error-bound E [--workers N (0 = auto)] [--stream]\n\
          \x20            [--archive-parity [GROUP_WIDTH]  (self-healing format v2)] --out FILE\n\
          \x20            [--xsz-bitpack  (xsz/ftxsz: bit-granular code packing, block tag 6)]\n\
          \x20            (--stream: slab-bounded memory, archive bit-identical to in-memory)\n\
+         \x20            (--engine auto: sample block modes, pick xsz vs rsz)\n\
          \x20 decompress --input FILE --out RAW [--verify] [--workers N] [--stream]\n\
-         \x20            [--region z,y,x,dz,dy,dx]  (composes with --verify: Alg. 2 per block)\n\
+         \x20            [--region z,y,x,dz,dy,dx[;...]]  (composes with --verify: Alg. 2\n\
+         \x20            per block; all regions share one cached archive open)\n\
          \x20            (--stream: decoded blocks written straight to --out, bounded memory)\n\
+         \x20 serve      --socket PATH | --tcp HOST:PORT | --stdio\n\
+         \x20            [--serve-workers N] [--max-conns N] [--cache-mb MB] [--workers N]\n\
+         \x20 serve      --bench [--edge N] [--queries N] [--archives N] [--cache-mb MB]\n\
+         \x20            [--json] [--check] [--connect SOCKET]   (load driver, BENCH_serve.json)\n\
          \x20 stats      --input FILE [--reference RAW] [--lo L --hi H [--bins N]] [--workers N]\n\
          \x20            (streaming min/max/mean/RMS; PSNR vs reference; optional histogram)\n\
          \x20 info       --input FILE\n\
@@ -236,11 +244,19 @@ fn load_input(f: &Flags) -> Result<Field> {
 
 fn cmd_compress(f: &Flags) -> Result<()> {
     let cfg = compression_config(f)?;
-    let engine_kind = engine_of(f)?;
+    let auto = f.str_or("engine", "ftrsz") == "auto";
     // --stream: chain shape 3 — read/quantize one slab at a time so the
     // input is never materialized (needs a real file, so no synthetic
     // fallback here)
     if f.has("stream") {
+        if auto {
+            return Err(Error::Config(
+                "--engine auto samples the whole field and cannot compose with --stream; \
+                 pick an engine explicitly"
+                    .into(),
+            ));
+        }
+        let engine_kind = engine_of(f)?;
         let path = f.required("input")?;
         let dims = parse_dims(f.required("dims")?)?;
         let mut src = stream::FileSource::open(path, dims)?;
@@ -261,6 +277,20 @@ fn cmd_compress(f: &Flags) -> Result<()> {
         return Ok(());
     }
     let field = load_input(f)?;
+    // --engine auto: sample per-block mode statistics and let the store's
+    // picker choose between the xsz fast path and rsz random access
+    let engine_kind = if auto {
+        let pick = store::pick_engine(&field.data, field.dims, &cfg)?;
+        println!(
+            "engine auto: {:.0}% of {} sampled blocks constant-foldable -> {}",
+            100.0 * pick.constant_share,
+            pick.sampled,
+            pick.engine.name()
+        );
+        pick.engine
+    } else {
+        engine_of(f)?
+    };
     let t = std::time::Instant::now();
     // one dispatch for every engine: the unified BlockCodec
     let bytes = engine_kind.codec().compress(&field.data, field.dims, &cfg)?;
@@ -298,7 +328,6 @@ fn print_report(report: &ftsz::ft::DecompressReport) {
 
 fn cmd_decompress(f: &Flags) -> Result<()> {
     let path = f.required("input")?;
-    let bytes = std::fs::read(path)?;
     let par = parallelism_of(f)?;
     // --stream: place decoded blocks straight into the output file via
     // the vectored writer, never materializing the array
@@ -309,6 +338,7 @@ fn cmd_decompress(f: &Flags) -> Result<()> {
                     .into(),
             ));
         }
+        let bytes = std::fs::read(path)?;
         let out = f.str_or("out", "out.bin");
         let mut sink = stream::FileSink::create(&out)?;
         let t = std::time::Instant::now();
@@ -328,42 +358,46 @@ fn cmd_decompress(f: &Flags) -> Result<()> {
         );
         return Ok(());
     }
-    if let Some(region) = f.get("region") {
-        let parts: Vec<usize> = region
-            .split(',')
-            .map(|p| p.trim().parse::<usize>())
-            .collect::<std::result::Result<_, _>>()
-            .map_err(|_| Error::Config("--region z,y,x,dz,dy,dx".into()))?;
-        if parts.len() != 6 {
-            return Err(Error::Config("--region needs 6 components".into()));
-        }
-        let region = Region {
-            origin: (parts[0], parts[1], parts[2]),
-            shape: (parts[3], parts[4], parts[5]),
-        };
-        let t = std::time::Instant::now();
-        // --verify: Algorithm 2 per intersecting block (ftrsz archives)
-        let data = if f.has("verify") {
-            let (data, report) = ft::decompress_region_verified(&bytes, region, par)?;
+    if let Some(spec) = f.get("region") {
+        // every region is served from ONE ArchiveStore: the archive is
+        // read, parity-recovered and header-voted once, then regions hit
+        // the shared block cache (previously each invocation re-read and
+        // re-recovered the whole file per region)
+        let regions = protocol::parse_region_list(spec)?;
+        let store = ArchiveStore::new(StoreConfig {
+            workers: par.workers(),
+            ..StoreConfig::default()
+        });
+        let verify = f.has("verify");
+        let many = regions.len() > 1;
+        for (i, &region) in regions.iter().enumerate() {
+            let t = std::time::Instant::now();
+            // --verify: Algorithm 2 per intersecting block (ftrsz archives)
+            let (data, mut report) = store.query(std::path::Path::new(path), region, verify)?;
+            if i > 0 {
+                // the open-time parity record repeats on every query of
+                // this generation; announce it once
+                report.stripes_repaired.clear();
+            }
             print_report(&report);
-            data
-        } else {
-            engine::decompress_region_with(&bytes, region, par)?
-        };
-        println!(
-            "region {:?}: {} points in {:.3}ms ({})",
-            region,
-            data.len(),
-            t.elapsed().as_secs_f64() * 1e3,
-            if f.has("verify") { "verified" } else { "unverified" },
-        );
-        if let Some(out) = f.get("out") {
-            let dims = Dims::d3(region.shape.0, region.shape.1, region.shape.2);
-            Field::new("region", dims, data)?.to_raw_file(std::path::Path::new(out))?;
-            println!("wrote {out}");
+            println!(
+                "region {:?}: {} points in {:.3}ms ({})",
+                region,
+                data.len(),
+                t.elapsed().as_secs_f64() * 1e3,
+                if verify { "verified" } else { "unverified" },
+            );
+            if let Some(out) = f.get("out") {
+                let out =
+                    if many { format!("{out}.{i}") } else { out.to_string() };
+                let dims = Dims::d3(region.shape.0, region.shape.1, region.shape.2);
+                Field::new("region", dims, data)?.to_raw_file(std::path::Path::new(&out))?;
+                println!("wrote {out}");
+            }
         }
         return Ok(());
     }
+    let bytes = std::fs::read(path)?;
     let t = std::time::Instant::now();
     let dec = if f.has("verify") {
         let (dec, report) = ft::decompress_with_report(&bytes, par)?;
@@ -581,6 +615,51 @@ fn cmd_scrub(f: &Flags) -> Result<()> {
         }
     }
     Ok(())
+}
+
+/// `ftsz serve` — long-lived region server over one shared
+/// [`ArchiveStore`], or its load driver under `--bench`.
+fn cmd_serve(f: &Flags) -> Result<()> {
+    if f.has("bench") {
+        let opts = serve::BenchOptions {
+            edge: f.usize_or("edge", 32)?,
+            queries: f.usize_or("queries", 256)?,
+            archives: f.usize_or("archives", 4)?,
+            cache_mb: f.usize_or("cache-mb", 64)?,
+            json: f.has("json"),
+            check: f.has("check"),
+            connect: f.get("connect").map(PathBuf::from),
+        };
+        // run_bench already printed the FAIL line; own the exit code here
+        if !serve::run_bench(&opts)? {
+            return Err(Error::Runtime("serve bench gate failed".into()));
+        }
+        return Ok(());
+    }
+    let store = Arc::new(ArchiveStore::new(StoreConfig {
+        cache_bytes: f.usize_or("cache-mb", 256)? << 20,
+        // --workers: decode parallelism per query (0 = one per core)
+        workers: parallelism_of(f)?.workers(),
+        ..StoreConfig::default()
+    }));
+    let opts = serve::ServeOptions {
+        workers: f.usize_or("serve-workers", 4)?,
+        max_conns: match f.usize_or("max-conns", 0)? {
+            0 => None,
+            n => Some(n as u64),
+        },
+    };
+    if let Some(sock) = f.get("socket") {
+        serve::serve_unix(store, std::path::Path::new(sock), &opts)
+    } else if let Some(addr) = f.get("tcp") {
+        serve::serve_tcp(store, addr, &opts)
+    } else if f.has("stdio") {
+        serve::serve_stdio(&store)
+    } else {
+        Err(Error::Config(
+            "serve needs --socket PATH, --tcp HOST:PORT, --stdio, or --bench".into(),
+        ))
+    }
 }
 
 fn cmd_inject(f: &Flags) -> Result<()> {

@@ -1,0 +1,377 @@
+//! Serving-layer invariants: the `ArchiveStore` must be indistinguishable
+//! from a fresh one-shot decode of the file's *current* bytes — cached or
+//! cold, any engine, any worker count, under concurrency, and across
+//! rewrites of the file underneath it.
+//!
+//! * **bit-identity** — cached and uncached queries return bytes
+//!   bit-identical to the one-shot region APIs, for all 5 engines × v1/v2
+//!   containers × {1, 2, 4} fill workers;
+//! * **generation coherence** — a `scrub` rewrite (or any rewrite) drops
+//!   the stale parse and every cached block of it;
+//! * **never stale-silent** — a mode-C flip landing between two queries
+//!   of the same block is detected exactly as a fresh decode would detect
+//!   it, never answered from cache;
+//! * **concurrency** — ≥ 4 threads hammering one store stay byte-identical
+//!   to the sequential baselines.
+
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use ftsz::compressor::block::Region;
+use ftsz::compressor::store::{ArchiveStore, Generation, StoreConfig};
+use ftsz::compressor::{classic, engine, CompressionConfig, ErrorBound, Parallelism};
+use ftsz::data::{synthetic, Dims, Field};
+use ftsz::ft;
+use ftsz::ft::parity::{self, ParityParams};
+use ftsz::inject::Engine;
+
+const DIMS: (usize, usize, usize) = (8, 10, 10);
+
+fn dims() -> Dims {
+    Dims::d3(DIMS.0, DIMS.1, DIMS.2)
+}
+
+fn field(seed: u64) -> Field {
+    synthetic::hurricane_field("t", dims(), seed)
+}
+
+fn cfg(parity_on: bool) -> CompressionConfig {
+    let c = CompressionConfig::new(ErrorBound::Abs(1e-3)).with_block_size(4);
+    if parity_on {
+        c.with_archive_parity(ParityParams::default())
+    } else {
+        c
+    }
+}
+
+fn temp_path(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("ftsz_store_test_{}_{tag}.ftsz", std::process::id()))
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Classic archives have no one-shot region API; the baseline is the full
+/// decode sliced by hand.
+fn classic_region_baseline(bytes: &[u8], region: Region) -> Vec<f32> {
+    let (dec, _) = classic::decompress_reported(bytes).unwrap();
+    let (_, dy, dx) = dec.dims.as_3d();
+    let (oz, oy, ox) = region.origin;
+    let (sz, sy, sx) = region.shape;
+    let mut out = Vec::with_capacity(region.len());
+    for z in oz..oz + sz {
+        for y in oy..oy + sy {
+            let base = (z * dy + y) * dx + ox;
+            out.extend_from_slice(&dec.data[base..base + sx]);
+        }
+    }
+    out
+}
+
+/// Rewrite `path` (with its own bytes) until its generation differs from
+/// `old` — guards against coarse filesystem mtime granularity.
+fn bump_generation(path: &Path, old: Generation) {
+    for _ in 0..200 {
+        if Generation::of(path).unwrap() != old {
+            return;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+        let b = std::fs::read(path).unwrap();
+        std::fs::write(path, b).unwrap();
+    }
+    panic!("generation of {} never changed", path.display());
+}
+
+#[test]
+fn cached_and_uncached_queries_are_bit_identical_across_engines() {
+    let f = field(5);
+    let region = Region { origin: (1, 2, 3), shape: (5, 4, 4) };
+    let seq = Parallelism::Sequential;
+    for engine_kind in Engine::ALL {
+        for parity_on in [false, true] {
+            let c = cfg(parity_on);
+            let bytes = engine_kind.codec().compress(&f.data, f.dims, &c).unwrap();
+            let path = temp_path(&format!("matrix_{}_{parity_on}", engine_kind.name()));
+            std::fs::write(&path, &bytes).unwrap();
+            let ft_engine =
+                matches!(engine_kind, Engine::FaultTolerant | Engine::UltraFastFT);
+            let verify_modes: &[bool] = if ft_engine { &[false, true] } else { &[false] };
+            for &verify in verify_modes {
+                let want = if engine_kind == Engine::Classic {
+                    classic_region_baseline(&bytes, region)
+                } else if verify {
+                    ft::decompress_region_verified(&bytes, region, seq).unwrap().0
+                } else {
+                    engine::decompress_region_with(&bytes, region, seq).unwrap()
+                };
+                for workers in [1usize, 2, 4] {
+                    let store = ArchiveStore::with_defaults();
+                    let (cold, r_cold) =
+                        store.query_with(&path, region, verify, workers).unwrap();
+                    let (warm, r_warm) =
+                        store.query_with(&path, region, verify, workers).unwrap();
+                    let tag = format!(
+                        "engine={} parity={parity_on} verify={verify} workers={workers}",
+                        engine_kind.name()
+                    );
+                    assert_eq!(bits(&cold), bits(&want), "cold mismatch: {tag}");
+                    assert_eq!(bits(&warm), bits(&want), "warm mismatch: {tag}");
+                    assert!(r_cold.is_clean() && r_warm.is_clean(), "{tag}");
+                    if engine_kind != Engine::Classic {
+                        assert!(
+                            store.stats().cache.hits > 0,
+                            "warm query never hit the cache: {tag}"
+                        );
+                    }
+                }
+            }
+            let _ = std::fs::remove_file(&path);
+        }
+    }
+}
+
+#[test]
+fn verify_without_checksums_is_a_clean_error() {
+    // rsz/xsz archives carry no sum_dc; classic cannot verify at all —
+    // the store must reject, not panic or silently skip the verify stage
+    let f = field(6);
+    let region = Region { origin: (0, 0, 0), shape: (2, 2, 2) };
+    for engine_kind in [Engine::Classic, Engine::RandomAccess, Engine::UltraFast] {
+        let bytes = engine_kind.codec().compress(&f.data, f.dims, &cfg(false)).unwrap();
+        let path = temp_path(&format!("noverify_{}", engine_kind.name()));
+        std::fs::write(&path, &bytes).unwrap();
+        let store = ArchiveStore::with_defaults();
+        assert!(
+            store.query(&path, region, true).is_err(),
+            "{} must reject verify",
+            engine_kind.name()
+        );
+        // and the unverified path still works afterwards
+        store.query(&path, region, false).unwrap();
+        let _ = std::fs::remove_file(&path);
+    }
+}
+
+#[test]
+fn verified_and_unverified_results_never_share_cache_entries() {
+    let f = field(7);
+    let region = Region { origin: (0, 0, 0), shape: (4, 4, 4) };
+    let bytes = ft::compress(&f.data, f.dims, &cfg(true)).unwrap();
+    let path = temp_path("keys");
+    std::fs::write(&path, &bytes).unwrap();
+    let store = ArchiveStore::with_defaults();
+    store.query(&path, region, true).unwrap();
+    let after_verified = store.stats().cache.misses;
+    // same blocks, unverified: must MISS (distinct key space), not reuse
+    store.query(&path, region, false).unwrap();
+    let after_unverified = store.stats().cache.misses;
+    assert!(after_unverified > after_verified, "unverified query reused verified entries");
+    // both populations are now resident: repeats of either flavor hit
+    store.query(&path, region, true).unwrap();
+    store.query(&path, region, false).unwrap();
+    assert_eq!(store.stats().cache.misses, after_unverified);
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn scrub_rewrite_changes_generation_and_drops_stale_state() {
+    let f = field(8);
+    let region = Region { origin: (0, 0, 0), shape: (8, 10, 10) };
+    let clean = ft::compress(&f.data, f.dims, &cfg(true)).unwrap();
+    // find a parity-healable flip (middle of the protected region; step
+    // until parse_recovering actually reports a repaired stripe)
+    let mut corrupt = None;
+    for off in (clean.len() / 4..clean.len()).step_by(97) {
+        let mut c = clean.clone();
+        c[off] ^= 0x10;
+        if let Ok(a) = parity::parse_recovering(&c) {
+            if a.recovered.as_ref().is_some_and(|r| !r.stripes_repaired.is_empty()) {
+                corrupt = Some(c);
+                break;
+            }
+        }
+    }
+    let corrupt = corrupt.expect("no healable flip found");
+    let path = temp_path("scrub");
+    std::fs::write(&path, &corrupt).unwrap();
+
+    let store = ArchiveStore::with_defaults();
+    let (d1, r1) = store.query(&path, region, true).unwrap();
+    assert!(!r1.stripes_repaired.is_empty(), "open must report the at-rest damage");
+    // the open-time repair record repeats on every query of this generation
+    let (_, r1b) = store.query(&path, region, true).unwrap();
+    assert_eq!(r1b.stripes_repaired, r1.stripes_repaired);
+
+    let g = Generation::of(&path).unwrap();
+    parity::scrub_file(&path).unwrap();
+    bump_generation(&path, g);
+
+    let (d2, r2) = store.query(&path, region, true).unwrap();
+    assert!(r2.stripes_repaired.is_empty(), "scrubbed file must open clean: {r2:?}");
+    assert_eq!(bits(&d1), bits(&d2), "healed decode must match the pre-scrub decode");
+    assert!(store.stats().invalidations >= 1, "stale generation was never invalidated");
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn rewritten_archive_is_served_fresh_not_stale() {
+    // replace the file with a *valid* different archive between queries:
+    // the store must serve the new bytes bit-identically, never the cache
+    let region = Region { origin: (1, 1, 1), shape: (4, 4, 4) };
+    let seq = Parallelism::Sequential;
+    let fa = field(21);
+    let fb = field(22);
+    let a = ft::compress(&fa.data, fa.dims, &cfg(true)).unwrap();
+    let b = ft::compress(&fb.data, fb.dims, &cfg(true)).unwrap();
+    let want_a = ft::decompress_region_verified(&a, region, seq).unwrap().0;
+    let want_b = ft::decompress_region_verified(&b, region, seq).unwrap().0;
+    assert_ne!(bits(&want_a), bits(&want_b), "corpus fields must differ");
+
+    let path = temp_path("rewrite");
+    std::fs::write(&path, &a).unwrap();
+    let store = ArchiveStore::with_defaults();
+    let (got_a, _) = store.query(&path, region, true).unwrap();
+    assert_eq!(bits(&got_a), bits(&want_a));
+
+    let g = Generation::of(&path).unwrap();
+    std::fs::write(&path, &b).unwrap();
+    bump_generation(&path, g);
+
+    let (got_b, _) = store.query(&path, region, true).unwrap();
+    assert_eq!(bits(&got_b), bits(&want_b), "stale cached blocks served after rewrite");
+    assert!(store.stats().invalidations >= 1);
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn mode_c_flip_between_queries_is_detected_never_stale() {
+    // v1 ftrsz (no parity): an at-rest flip cannot be healed, only
+    // detected. After the flip lands, the store must behave exactly like
+    // a fresh decode of the corrupted bytes — same outcome, same report —
+    // and must never answer clean from cache.
+    let f = field(9);
+    let region = Region { origin: (0, 0, 0), shape: (8, 10, 10) };
+    let seq = Parallelism::Sequential;
+    let clean = ft::compress(&f.data, f.dims, &cfg(false)).unwrap();
+    let clean_vals = ft::decompress_region_verified(&clean, region, seq).unwrap().0;
+
+    // find a flip a verified decode notices (error, repair, or changed
+    // values — anything but a silently identical clean decode)
+    let mut chosen = None;
+    for off in (clean.len() / 4..clean.len()).step_by(61) {
+        let mut c = clean.clone();
+        c[off] ^= 0x08;
+        let noticed = match ft::decompress_region_verified(&c, region, seq) {
+            Err(_) => true,
+            Ok((vals, rep)) => !rep.is_clean() || bits(&vals) != bits(&clean_vals),
+        };
+        if noticed {
+            chosen = Some(c);
+            break;
+        }
+    }
+    let corrupt = chosen.expect("no detectable flip found");
+
+    let path = temp_path("modec");
+    std::fs::write(&path, &clean).unwrap();
+    let store = ArchiveStore::with_defaults();
+    let (first, r_first) = store.query(&path, region, true).unwrap();
+    assert!(r_first.is_clean());
+    assert_eq!(bits(&first), bits(&clean_vals));
+
+    let g = Generation::of(&path).unwrap();
+    std::fs::write(&path, &corrupt).unwrap();
+    bump_generation(&path, g);
+
+    let fresh = ft::decompress_region_verified(&corrupt, region, seq);
+    match (store.query(&path, region, true), fresh) {
+        (Err(_), Err(_)) => {} // both reject the damaged archive
+        (Ok((got, rep)), Ok((want, want_rep))) => {
+            assert_eq!(bits(&got), bits(&want), "store diverged from a fresh decode");
+            assert_eq!(rep.blocks_reexecuted, want_rep.blocks_reexecuted);
+            assert!(
+                !rep.is_clean() || bits(&got) != bits(&first),
+                "stale-silent: flip served as a clean unchanged decode"
+            );
+        }
+        (store_out, fresh_out) => panic!(
+            "store and fresh decode disagree on the corrupted archive: \
+             store={store_out:?} fresh={fresh_out:?}"
+        ),
+    }
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn concurrent_hammering_stays_byte_identical() {
+    let f = field(10);
+    let seq = Parallelism::Sequential;
+    let ftrsz = ft::compress(&f.data, f.dims, &cfg(true)).unwrap();
+    let xsz = Engine::UltraFast.codec().compress(&f.data, f.dims, &cfg(false)).unwrap();
+    let p_ft = temp_path("hammer_ft");
+    let p_xsz = temp_path("hammer_xsz");
+    std::fs::write(&p_ft, &ftrsz).unwrap();
+    std::fs::write(&p_xsz, &xsz).unwrap();
+
+    let regions = [
+        Region { origin: (0, 0, 0), shape: (8, 10, 10) },
+        Region { origin: (1, 2, 3), shape: (4, 4, 4) },
+        Region { origin: (7, 9, 9), shape: (1, 1, 1) },
+        Region { origin: (0, 5, 0), shape: (2, 5, 10) },
+    ];
+    let want_ft: Vec<Vec<u32>> = regions
+        .iter()
+        .map(|&r| bits(&ft::decompress_region_verified(&ftrsz, r, seq).unwrap().0))
+        .collect();
+    let want_xsz: Vec<Vec<u32>> = regions
+        .iter()
+        .map(|&r| bits(&engine::decompress_region_with(&xsz, r, seq).unwrap()))
+        .collect();
+
+    // small cache + few shards: force eviction churn under contention
+    let store = ArchiveStore::new(StoreConfig { cache_bytes: 1 << 20, shards: 2, workers: 1 });
+    std::thread::scope(|s| {
+        for t in 0..4 {
+            let store = &store;
+            let (p_ft, p_xsz) = (&p_ft, &p_xsz);
+            let (want_ft, want_xsz) = (&want_ft, &want_xsz);
+            s.spawn(move || {
+                for round in 0..6 {
+                    for k in 0..regions.len() {
+                        // stagger the visit order per thread and round
+                        let i = (k + t + round) % regions.len();
+                        let region = regions[i];
+                        let (got, rep) = store.query(p_ft, region, true).unwrap();
+                        assert_eq!(bits(&got), want_ft[i], "ftrsz thread {t} round {round}");
+                        assert!(rep.is_clean());
+                        let (got, rep) = store.query(p_xsz, region, false).unwrap();
+                        assert_eq!(bits(&got), want_xsz[i], "xsz thread {t} round {round}");
+                        assert!(rep.is_clean());
+                    }
+                }
+            });
+        }
+    });
+    assert_eq!(store.stats().open_archives, 2);
+    let _ = std::fs::remove_file(&p_ft);
+    let _ = std::fs::remove_file(&p_xsz);
+}
+
+#[test]
+fn evict_drops_the_open_entry() {
+    let f = field(11);
+    let region = Region { origin: (0, 0, 0), shape: (2, 2, 2) };
+    let bytes = ft::compress(&f.data, f.dims, &cfg(true)).unwrap();
+    let path = temp_path("evict");
+    std::fs::write(&path, &bytes).unwrap();
+    let store = ArchiveStore::with_defaults();
+    store.query(&path, region, true).unwrap();
+    assert_eq!(store.stats().open_archives, 1);
+    store.evict(&path);
+    assert_eq!(store.stats().open_archives, 0);
+    // and the path still serves after re-open
+    store.query(&path, region, true).unwrap();
+    assert_eq!(store.stats().open_archives, 1);
+    let _ = std::fs::remove_file(&path);
+}

@@ -1,11 +1,21 @@
 #!/usr/bin/env python3
-"""Append one dated summary row of a hotpath bench run to EXPERIMENTS.md.
+"""Append one dated summary row of a bench run to EXPERIMENTS.md.
 
-Usage: python3 scripts/append_bench_row.py [BENCH_hotpath.json] [EXPERIMENTS.md]
+Usage: python3 scripts/append_bench_row.py [BENCH.json] [EXPERIMENTS.md]
+       python3 scripts/append_bench_row.py --selftest
 
-Reads the flat `ftsz.hotpath.v1` JSON the `hotpath --json` bench writes
-(default: rust/BENCH_hotpath.json) and appends a markdown table row to
-EXPERIMENTS.md (created by PR 4; the table header defines the columns).
+Reads a flat bench JSON and appends a markdown table row to the matching
+section of EXPERIMENTS.md:
+
+  * schema `ftsz.hotpath.v1` (written by `cargo bench --bench hotpath --
+    --json`) -> the `## hotpath history` table;
+  * schema `ftsz.serve.v1` (written by `ftsz serve --bench --json`) ->
+    the `## serve history` table.
+
+The row is inserted after the section's last table line — never blindly
+at end-of-file, which would land hotpath rows inside the serve table (and
+vice versa) now that the file holds more than one history. A missing
+section is created (heading + column header) at the end of the file.
 Missing keys render as `-` so schema growth never breaks the archiver.
 """
 
@@ -15,18 +25,174 @@ import os
 import subprocess
 import sys
 
+HOTPATH_SCHEMA = "ftsz.hotpath.v1"
+SERVE_SCHEMA = "ftsz.serve.v1"
+
+SECTIONS = {
+    HOTPATH_SCHEMA: "## hotpath history",
+    SERVE_SCHEMA: "## serve history",
+}
+
+SERVE_HEADER = (
+    "| date | commit | edge | cold p50 ms | cold p99 ms | warm p50 ms "
+    "| warm p99 ms | warm × | hit % | qps w1 | qps w2 | qps w4 | qps w8 |\n"
+    "|------|--------|------|-------------|-------------|-------------"
+    "|-------------|--------|-------|--------|--------|--------|--------|\n"
+)
+
+HOTPATH_HEADER = (
+    "| date | commit | rsz comp MB/s | ftrsz comp MB/s | xsz comp MB/s "
+    "| xsz/rsz × | rsz dec MB/s | ftrsz verify MB/s | cpipe | dpipe rsz "
+    "| dpipe ftrsz | vregion MB/s | parity % | cstream | dstream "
+    "| xsz kern × | bitpack ratio |\n"
+    "|------|--------|---------------|-----------------|---------------"
+    "|-----------|--------------|-------------------|-------|-----------"
+    "|-------------|--------------|----------|---------|---------"
+    "|------------|---------------|\n"
+)
+
+
+def cell(m: dict, key: str, fmt: str = "{:.1f}") -> str:
+    x = m.get(key)
+    return fmt.format(x) if isinstance(x, (int, float)) else "-"
+
+
+def hotpath_row(m: dict, date: str, commit: str) -> str:
+    cells = [
+        date,
+        commit,
+        cell(m, "rsz.compress_mbps"),
+        cell(m, "ftrsz.compress_mbps"),
+        cell(m, "xsz.compress_mbps"),
+        cell(m, "xsz.vs_rsz_compress_speedup", "{:.2f}"),
+        cell(m, "scaling.rsz_decode.w1_mbps"),
+        cell(m, "scaling.ftrsz_verify.w1_mbps"),
+        cell(m, "stage.rsz.speedup", "{:.2f}"),
+        cell(m, "dstage.rsz.speedup", "{:.2f}"),
+        cell(m, "dstage.ftrsz.speedup", "{:.2f}"),
+        cell(m, "dstage.region_verified.w1_mbps"),
+        cell(m, "parity.size_overhead_pct", "{:.2f}"),
+        cell(m, "stream.rsz.compress_vs_inmem", "{:.2f}"),
+        cell(m, "stream.rsz.decompress_vs_inmem", "{:.2f}"),
+        cell(m, "kernel.quantize.speedup", "{:.2f}"),
+        cell(m, "kernel.bitpack.ratio_vs_bytes", "{:.3f}"),
+    ]
+    return "| " + " | ".join(cells) + " |\n"
+
+
+def serve_row(m: dict, date: str, commit: str) -> str:
+    hit = m.get("serve.cache.hit_ratio")
+    hit_pct = "{:.1f}".format(100.0 * hit) if isinstance(hit, (int, float)) else "-"
+    cells = [
+        date,
+        commit,
+        cell(m, "serve.edge", "{:.0f}"),
+        cell(m, "serve.cold.p50_ms", "{:.3f}"),
+        cell(m, "serve.cold.p99_ms", "{:.3f}"),
+        cell(m, "serve.warm.p50_ms", "{:.3f}"),
+        cell(m, "serve.warm.p99_ms", "{:.3f}"),
+        cell(m, "serve.warm_speedup", "{:.1f}"),
+        hit_pct,
+        cell(m, "serve.qps.w1", "{:.0f}"),
+        cell(m, "serve.qps.w2", "{:.0f}"),
+        cell(m, "serve.qps.w4", "{:.0f}"),
+        cell(m, "serve.qps.w8", "{:.0f}"),
+    ]
+    return "| " + " | ".join(cells) + " |\n"
+
+
+def insert_row(text: str, section: str, row: str, header: str) -> str:
+    """Insert `row` after the last table line of `section` (creating the
+    section, with `header`, at end-of-file if absent)."""
+    lines = text.splitlines(keepends=True)
+    start = None
+    for i, ln in enumerate(lines):
+        if ln.strip() == section:
+            start = i
+            break
+    if start is None:
+        sep = "" if text.endswith("\n\n") else ("\n" if text.endswith("\n") else "\n\n")
+        return text + sep + section + "\n\n" + header + row
+    end = len(lines)
+    for j in range(start + 1, len(lines)):
+        if lines[j].startswith("## "):
+            end = j
+            break
+    last_table = None
+    for j in range(start + 1, end):
+        if lines[j].lstrip().startswith("|"):
+            last_table = j
+    if last_table is None:
+        lines.insert(end, header + row + "\n")
+    else:
+        lines.insert(last_table + 1, row)
+    return "".join(lines)
+
+
+def row_for(m: dict, date: str, commit: str):
+    """(section, row, header) for a bench dict, by schema."""
+    schema = m.get("schema")
+    if schema == SERVE_SCHEMA:
+        return SECTIONS[SERVE_SCHEMA], serve_row(m, date, commit), SERVE_HEADER
+    if schema != HOTPATH_SCHEMA:
+        print(f"warning: unexpected schema {schema!r}, assuming hotpath", file=sys.stderr)
+    return SECTIONS[HOTPATH_SCHEMA], hotpath_row(m, date, commit), HOTPATH_HEADER
+
+
+def selftest() -> int:
+    date, commit = "2026-01-01", "abc1234"
+    hot = {"schema": HOTPATH_SCHEMA, "rsz.compress_mbps": 101.5}
+    srv = {
+        "schema": SERVE_SCHEMA,
+        "serve.edge": 32.0,
+        "serve.cold.p50_ms": 1.234567,
+        "serve.warm.p50_ms": 0.012,
+        "serve.warm_speedup": 102.9,
+        "serve.cache.hit_ratio": 0.987,
+        "serve.qps.w1": 1000.4,
+        "serve.qps.w8": 3500.9,
+    }
+    doc = (
+        "# EXPERIMENTS\n\nprose\n\n## hotpath history\n\n"
+        + HOTPATH_HEADER
+        + "\n## serve history\n\n"
+        + SERVE_HEADER
+    )
+
+    sec, row, hdr = row_for(hot, date, commit)
+    out = insert_row(doc, sec, row, hdr)
+    sec, row, hdr = row_for(srv, date, commit)
+    out = insert_row(out, sec, row, hdr)
+
+    hot_at = out.index("| 2026-01-01 | abc1234 | 101.5 |")
+    serve_sec_at = out.index("## serve history")
+    assert hot_at < serve_sec_at, "hotpath row landed outside its section"
+    srv_at = out.index("| 2026-01-01 | abc1234 | 32 | 1.235 |")
+    assert srv_at > serve_sec_at, "serve row landed outside its section"
+    srv_line = out[srv_at:].splitlines()[0]
+    assert " 98.7 " in srv_line, f"hit ratio not rendered as percent: {srv_line}"
+    assert " 102.9 " in srv_line, f"speedup missing: {srv_line}"
+    # missing keys (cold p99, warm p99, qps w2/w4) render as '-'
+    assert srv_line.count(" - ") == 4, f"missing-key dashes wrong: {srv_line}"
+    # a schema whose section does not exist yet gets one created at EOF
+    sec, row, hdr = row_for(srv, date, commit)
+    grown = insert_row("# EXPERIMENTS\n", sec, row, hdr)
+    assert grown.index("## serve history") > 0 and grown.endswith(row)
+    # rows append after the LAST existing row, preserving order
+    sec, row2, hdr = row_for(srv, "2026-01-02", commit)
+    twice = insert_row(out, sec, row2, hdr)
+    assert twice.index("2026-01-02") > twice.index("| 2026-01-01 | abc1234 | 32 |")
+    print("selftest OK")
+    return 0
+
 
 def main() -> int:
+    if len(sys.argv) > 1 and sys.argv[1] == "--selftest":
+        return selftest()
     bench_path = sys.argv[1] if len(sys.argv) > 1 else "rust/BENCH_hotpath.json"
     exp_path = sys.argv[2] if len(sys.argv) > 2 else "EXPERIMENTS.md"
     with open(bench_path) as f:
         m = json.load(f)
-    if m.get("schema") != "ftsz.hotpath.v1":
-        print(f"warning: unexpected schema {m.get('schema')!r}", file=sys.stderr)
-
-    def v(key: str, fmt: str = "{:.1f}") -> str:
-        x = m.get(key)
-        return fmt.format(x) if isinstance(x, (int, float)) else "-"
 
     try:
         commit = subprocess.run(
@@ -37,28 +203,12 @@ def main() -> int:
         commit = os.environ.get("GITHUB_SHA", "unknown")[:9]
 
     date = datetime.date.today().isoformat()
-    row = "| {} | {} | {} | {} | {} | {} | {} | {} | {} | {} | {} | {} | {} | {} | {} | {} | {} |\n".format(
-        date,
-        commit,
-        v("rsz.compress_mbps"),
-        v("ftrsz.compress_mbps"),
-        v("xsz.compress_mbps"),
-        v("xsz.vs_rsz_compress_speedup", "{:.2f}"),
-        v("scaling.rsz_decode.w1_mbps"),
-        v("scaling.ftrsz_verify.w1_mbps"),
-        v("stage.rsz.speedup", "{:.2f}"),
-        v("dstage.rsz.speedup", "{:.2f}"),
-        v("dstage.ftrsz.speedup", "{:.2f}"),
-        v("dstage.region_verified.w1_mbps"),
-        v("parity.size_overhead_pct", "{:.2f}"),
-        v("stream.rsz.compress_vs_inmem", "{:.2f}"),
-        v("stream.rsz.decompress_vs_inmem", "{:.2f}"),
-        v("kernel.quantize.speedup", "{:.2f}"),
-        v("kernel.bitpack.ratio_vs_bytes", "{:.3f}"),
-    )
-    with open(exp_path, "a") as f:
-        f.write(row)
-    print(f"appended to {exp_path}: {row}", end="")
+    section, row, header = row_for(m, date, commit)
+    with open(exp_path) as f:
+        text = f.read()
+    with open(exp_path, "w") as f:
+        f.write(insert_row(text, section, row, header))
+    print(f"appended to {exp_path} [{section}]: {row}", end="")
     return 0
 
 

@@ -1,0 +1,24 @@
+// Fixture (linted under the pretend path `compressor/store/protocol.rs`):
+// the serve wire surface — panic tokens, direct indexing of the untrusted
+// request fields, and an allocation sized straight from a client-supplied
+// count, all inside scoped parsing functions. This file is test data,
+// never compiled.
+
+pub fn parse_request(line: &str) -> u32 {
+    let parts: Vec<&str> = line.split_whitespace().collect();
+    let cmd = parts[0];
+    assert_eq!(cmd, "QUERY");
+    let n: usize = parts[1].parse().unwrap();
+    let mut payload = Vec::with_capacity(n * 4);
+    payload.push(0u8);
+    panic!("unfinished request {line}");
+}
+
+pub fn parse_response_header(line: &str) -> usize {
+    let head = &line[..2];
+    if head == "OK" {
+        line.len()
+    } else {
+        unreachable!("server spoke garbage")
+    }
+}

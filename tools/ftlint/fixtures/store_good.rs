@@ -1,0 +1,33 @@
+// Fixture (linted under the pretend path `compressor/store/protocol.rs`):
+// the shapes the serve wire scope must accept — iterator field walking
+// with clean-error returns, a cap-checked payload count — plus a
+// writer-side renderer whose unwrap sits outside the scoped fn list and
+// must not be attributed to the wire scope. This file is test data, never
+// compiled.
+
+pub fn parse_request(line: &str) -> Option<(u32, bool)> {
+    let mut fields = line.split_whitespace();
+    let n: u32 = fields.next()?.parse().ok()?;
+    let verify = matches!(fields.next(), Some("verify"));
+    if fields.next().is_some() {
+        return None; // trailing fields: clean reject, never a panic
+    }
+    Some((n, verify))
+}
+
+pub fn parse_response_header(line: &str) -> Option<usize> {
+    let mut fields = line.split_whitespace();
+    let values: usize = fields.next()?.parse().ok()?;
+    if values as u128 > MAX_DECODED_POINTS {
+        return None; // announced payload over the decode cap
+    }
+    Some(values)
+}
+
+pub fn ok_header(values: usize, reexec: usize) -> String {
+    // writer side: trusted server state, outside the decode-scope fn list
+    use std::fmt::Write;
+    let mut s = String::new();
+    write!(s, "OK {values} reexec={reexec}").unwrap();
+    s
+}

@@ -130,6 +130,23 @@ pub const DECODE_SCOPES: &[ModuleScope] = &[
         r5_fns: None,
         untrusted: &[],
     },
+    ModuleScope {
+        // the server's wire surface: request lines and response headers
+        // arrive from arbitrary clients, so framing and field parsing must
+        // be panic-free and allocation-capped before anything touches the
+        // store. Writer-side formatting (ok_header, payload_bytes) is
+        // trusted-output and out of scope.
+        path: "compressor/store/protocol.rs",
+        r1_fns: Some(&[
+            "read_request_line",
+            "parse_request",
+            "parse_region",
+            "parse_region_list",
+            "parse_response_header",
+        ]),
+        r5_fns: None,
+        untrusted: &["line", "buf", "parts", "fields"],
+    },
 ];
 
 /// One R2 single-site invariant: a pattern that may appear in non-test
@@ -165,7 +182,13 @@ pub const SINGLE_SITES: &[SingleSite] = &[
     SingleSite {
         name: "reexec-count",
         pattern: "blocks_reexecuted +=",
-        allowed: &[("compressor/destage.rs", 1)],
+        allowed: &[
+            // the one ordered-commit per-block fold
+            ("compressor/destage.rs", 1),
+            // DecompressReport::absorb merges reports destage already
+            // folded (serving-layer bookkeeping, not a new fold site)
+            ("ft/report.rs", 1),
+        ],
         hint: "report re-execution repairs via destage::fold_block_outcome, \
                the one ordered-commit fold",
     },

@@ -186,6 +186,48 @@ fn xsz_fill_from_codes_is_in_decode_scope() {
     assert_eq!(rules_of(&f), vec!["r1"], "{f:?}");
 }
 
+// --- the serve wire surface (store/protocol scope) ---------------------------
+
+#[test]
+fn store_protocol_bad_trips_r1_and_r5() {
+    let f = lint_fixture("store_bad.rs", "compressor/store/protocol.rs");
+    let rules = rules_of(&f);
+    assert!(rules.contains(&"r1"), "{f:?}");
+    assert!(rules.contains(&"r5"), "{f:?}");
+    let msgs: Vec<&str> = f.iter().map(|x| x.message.as_str()).collect();
+    assert!(
+        msgs.iter().any(|m| m.contains("`parts[…]`")),
+        "untrusted field index missed: {msgs:?}"
+    );
+    assert!(
+        msgs.iter().any(|m| m.contains("`line[…]`")),
+        "untrusted line index missed: {msgs:?}"
+    );
+    assert!(msgs.iter().any(|m| m.contains("panic!")), "{msgs:?}");
+    assert!(msgs.iter().any(|m| m.contains("unreachable!")), "{msgs:?}");
+    assert!(msgs.iter().any(|m| m.contains("unwrap()")), "{msgs:?}");
+    assert!(
+        msgs.iter().any(|m| m.contains("unvalidated")),
+        "client-sized allocation missed: {msgs:?}"
+    );
+}
+
+#[test]
+fn store_protocol_good_is_clean() {
+    let f = lint_fixture("store_good.rs", "compressor/store/protocol.rs");
+    assert!(f.is_empty(), "expected clean, got {f:?}");
+}
+
+#[test]
+fn store_protocol_scope_excludes_the_writer_side() {
+    // response *rendering* consumes trusted server state; only the
+    // request/response parsers face the wire
+    let src = "pub fn ok_header(values: usize) -> String {\n\
+               \x20   format!(\"OK {}\", values.checked_mul(4).unwrap())\n}\n";
+    let f = lint_source("compressor/store/protocol.rs", src);
+    assert!(f.is_empty(), "writer side must be out of scope: {f:?}");
+}
+
 // --- the escape hatch is itself audited ------------------------------------
 
 #[test]
