@@ -658,6 +658,38 @@ fn main() {
     );
     m.put("parity.v2_decompress_mbps", mbps(bytes_in, s_dec2));
 
+    // Reed–Solomon geometry: extra parity rows buy multi-stripe healing;
+    // measure what that costs next to the XOR default
+    let cfg_rs = cfg_rel(1e-4).with_archive_parity(ParityParams::default_rs());
+    let (s_rs, a_rs) = time_median(reps, || {
+        ft::compress(&f.data, f.dims, &cfg_rs).expect("ftrsz v2 rs")
+    });
+    let rs_size_ovh = 100.0 * (a_rs.len() as f64 - a_v1.len() as f64) / a_v1.len() as f64;
+    println!(
+        "{:<22} v1 {} B -> rs {} B  (+{:.2}% size; heals 3 stripes/group)",
+        "ftrsz archive (rs)", a_v1.len(), a_rs.len(), rs_size_ovh
+    );
+    println!(
+        "{:<22} {:>8.1} MB/s (+{:.2}% time vs v1)",
+        "ftrsz compress (rs)",
+        mbps(bytes_in, s_rs),
+        100.0 * (s_rs - s_v1) / s_v1
+    );
+    m.put("parity.rs.size_overhead_pct", rs_size_ovh);
+    m.put("parity.rs.time_overhead_pct", 100.0 * (s_rs - s_v1) / s_v1);
+    let (s_rec_rs, _) = time_median(reps, || {
+        assert!(matches!(
+            ft::parity::recover(&a_rs).expect("recover rs"),
+            ft::parity::Recovery::Clean
+        ));
+    });
+    println!(
+        "{:<22} {:>8.1} MB/s (clean verify pass)",
+        "parity recover (rs)",
+        mbps(a_rs.len(), s_rec_rs)
+    );
+    m.put("parity.rs.recover_mbps", mbps(a_rs.len(), s_rec_rs));
+
     // stage: sequential lorenzo+quantize via the engine with lorenzo-only
     let cfg_lor = CompressionConfig::new(ErrorBound::Rel(1e-4))
         .with_predictor(ftsz::compressor::PredictorPolicy::LorenzoOnly);

@@ -31,11 +31,15 @@
 //! the parser can out-vote any single corrupted copy. The four section
 //! bodies form one contiguous *protected region* that
 //! [`crate::ft::parity`] slices into fixed-size stripes: each stripe gets
-//! a CRC32 (localization) and stripes are XOR-ed into interleaved parity
-//! groups (reconstruction), so a flipped bit — or a burst up to one
-//! stripe long — in the archive at rest is repaired before decoding
-//! instead of aborting the run or silently decoding garbage. See
-//! [`crate::ft::parity::recover`] for the repair pass.
+//! a CRC32 (localization) and stripes are combined into interleaved
+//! parity groups (reconstruction) under the code the voted geometry
+//! selects — XOR (default, one damaged stripe per group) or GF(2^8)
+//! Reed–Solomon (up to `parity_shards` damaged stripes per group) — so a
+//! flipped bit, a burst, or accumulated multi-stripe rot in the archive
+//! at rest is repaired before decoding instead of aborting the run or
+//! silently decoding garbage. See [`crate::ft::parity::recover`] for the
+//! repair pass, and [`transcode_v1_to_v2`] for wrapping existing v1
+//! archives in this protection without recompressing them.
 //!
 //! Per-block metadata records predictor choice, regression coefficients,
 //! unpredictable count and payload bit length — everything random-access
@@ -96,9 +100,10 @@ pub(crate) const MAX_DECODED_POINTS: u128 = 1 << 40;
 /// quant radius, error bound, n_blocks) — shared by v1 and v2.
 const CORE_HEADER_LEN: usize = 4 + 1 + 24 + 4 + 4 + 8 + 8;
 
-/// Serialized length of one v2 header body: core fields + parity geometry
-/// (stripe_len, group_width) + five `(len u64, crc u32)` section records
-/// (meta, unpred, payload, ft, parity).
+/// Serialized length of one v2 header body: core fields + the two packed
+/// parity-geometry words (see [`ParityParams::encode_geometry`]) + five
+/// `(len u64, crc u32)` section records (meta, unpred, payload, ft,
+/// parity).
 pub(crate) const V2_HEADER_BODY_LEN: usize = CORE_HEADER_LEN + 8 + 5 * 12;
 
 /// Offset of the protected section region in a v2 archive: magic +
@@ -431,8 +436,9 @@ fn write_v2(
     let sections: [&[u8]; 5] = [meta_body, unpred_body, payload_body, ft_slice, &parity_body];
     let mut hb = Vec::with_capacity(V2_HEADER_BODY_LEN);
     put_core_header(&mut hb, header);
-    bytes::put_u32(&mut hb, params.stripe_len);
-    bytes::put_u32(&mut hb, params.group_width);
+    let (geom0, geom1) = params.encode_geometry();
+    bytes::put_u32(&mut hb, geom0);
+    bytes::put_u32(&mut hb, geom1);
     for s in sections {
         bytes::put_u64(&mut hb, s.len() as u64);
         bytes::put_u32(&mut hb, crc32(s));
@@ -451,6 +457,55 @@ fn write_v2(
     out.extend_from_slice(&protected);
     out.extend_from_slice(&parity_body);
     Ok(out)
+}
+
+/// Wrap a v1 archive in v2 self-healing protection *without
+/// recompressing*: the still-compressed v1 section bodies are read out of
+/// their `len || body` framing and reassembled under the triplicated
+/// voted header plus a parity section built over those same stored bytes.
+/// The transcoded archive therefore decodes bit-identically to the source
+/// — only the envelope changes, which is what makes protecting an
+/// existing fleet of archives cheap (no quantize/encode pass, no
+/// error-bound re-resolution). Fails cleanly on v2 input (already
+/// protected) and on any malformed v1 framing.
+pub fn transcode_v1_to_v2(data: &[u8], params: ParityParams) -> Result<Vec<u8>> {
+    let mut c = Cursor::new(data);
+    if c.bytes(4)? != MAGIC {
+        return Err(Error::Format("bad magic".into()));
+    }
+    let version = c.u32()?;
+    if version == VERSION_V2 {
+        return Err(Error::Format(
+            "input already carries v2 protection (transcode takes v1 archives)".into(),
+        ));
+    }
+    if version != VERSION {
+        return Err(Error::Format(format!("unsupported version {version}")));
+    }
+    let mut header = read_core_fields(&mut c)?;
+    if header.has_archive_parity() {
+        return Err(Error::Format("v1 archive claims archive parity".into()));
+    }
+    let meta_body = read_section(&mut c)?;
+    let unpred_body = read_section(&mut c)?;
+    let payload_body = read_section(&mut c)?;
+    let ft_body: Option<Vec<u8>> = if header.is_fault_tolerant() {
+        Some(read_section(&mut c)?.to_vec())
+    } else {
+        let z = c.u64()?;
+        if z != 0 {
+            return Err(Error::Format("unexpected ft section".into()));
+        }
+        None
+    };
+    if c.remaining() != 0 {
+        return Err(Error::Format(format!(
+            "{} trailing bytes after the v1 sections",
+            c.remaining()
+        )));
+    }
+    header.flags |= FLAG_ARCHIVE_PARITY;
+    write_v2(&header, params, meta_body, unpred_body, payload_body, &ft_body)
 }
 
 fn write_section(out: &mut Vec<u8>, body: &[u8]) {
@@ -589,10 +644,9 @@ pub(crate) fn read_v2_prelude(data: &[u8]) -> Result<V2Prelude> {
     };
     let mut hc = Cursor::new(&body);
     let header = read_core_fields(&mut hc)?;
-    let stripe_len = hc.u32()?;
-    let group_width = hc.u32()?;
-    let params = ParityParams { stripe_len, group_width };
-    params.validate()?;
+    let geom0 = hc.u32()?;
+    let geom1 = hc.u32()?;
+    let params = ParityParams::decode_geometry(geom0, geom1)?;
     let mut lens = [0usize; 5];
     let mut crcs = [0u32; 5];
     for i in 0..5 {
@@ -1032,7 +1086,7 @@ mod tests {
         assert!(a.header.is_random_access());
         // ...and composes with parity (v2) like any other engine
         let mut w = sample_writer(&table, &unpred);
-        w.parity = Some(ParityParams { stripe_len: 32, group_width: 4 });
+        w.parity = Some(ParityParams::xor(32, 4));
         w.header.flags = FLAG_XSZ;
         let a = parse(&w.write().unwrap()).unwrap();
         assert!(a.header.is_xsz() && a.header.has_archive_parity());
@@ -1084,13 +1138,13 @@ mod tests {
         let v1 = w1.write().unwrap();
         let mut w2 = sample_writer(&table, &unpred);
         w2.sum_dc = Some(&sums);
-        w2.parity = Some(ParityParams { stripe_len: 32, group_width: 4 });
+        w2.parity = Some(ParityParams::xor(32, 4));
         let v2 = w2.write().unwrap();
         assert_eq!(u32::from_le_bytes(v2[4..8].try_into().unwrap()), VERSION_V2);
         let a1 = parse(&v1).unwrap();
         let a2 = parse(&v2).unwrap();
         assert_eq!(a2.version, VERSION_V2);
-        assert_eq!(a2.parity, Some(ParityParams { stripe_len: 32, group_width: 4 }));
+        assert_eq!(a2.parity, Some(ParityParams::xor(32, 4)));
         assert!(a2.header.has_archive_parity());
         assert!(!a1.header.has_archive_parity());
         // identical decoded content
@@ -1109,7 +1163,7 @@ mod tests {
         let table = tiny_table();
         let unpred = [7.5f32, -2.0];
         let mut w = sample_writer(&table, &unpred);
-        w.parity = Some(ParityParams { stripe_len: 32, group_width: 4 });
+        w.parity = Some(ParityParams::xor(32, 4));
         let good = w.write().unwrap();
         // smash the entire first header copy
         let mut bad = good.clone();
@@ -1140,7 +1194,7 @@ mod tests {
         let f = synthetic::hurricane_field("t", Dims::d3(6, 6, 6), 11);
         let cfg = CompressionConfig::new(ErrorBound::Abs(1e-2))
             .with_block_size(3)
-            .with_archive_parity(ParityParams { stripe_len: 64, group_width: 8 });
+            .with_archive_parity(ParityParams::xor(64, 8));
         let good = ft::compress(&f.data, f.dims, &cfg).unwrap();
         let mut corrected = 0usize;
         let mut clean = 0usize;
@@ -1169,7 +1223,7 @@ mod tests {
         let table = tiny_table();
         let unpred = [7.5f32, -2.0];
         let mut w = sample_writer(&table, &unpred);
-        w.parity = Some(ParityParams { stripe_len: 32, group_width: 4 });
+        w.parity = Some(ParityParams::xor(32, 4));
         let good = w.write().unwrap();
         // flip one bit in every protected-region byte position in turn:
         // strict parse must detect each one
@@ -1211,7 +1265,7 @@ mod tests {
         let table = tiny_table();
         let unpred = [7.5f32, -2.0];
         let mut w = sample_writer(&table, &unpred);
-        w.parity = Some(ParityParams { stripe_len: 32, group_width: 4 });
+        w.parity = Some(ParityParams::xor(32, 4));
         let good = w.write().unwrap();
         assert!(parse(&good).is_ok());
         // every prefix walks a different failure edge: inside the magic,
@@ -1231,7 +1285,7 @@ mod tests {
         let table = tiny_table();
         let unpred = [7.5f32, -2.0];
         let mut w = sample_writer(&table, &unpred);
-        w.parity = Some(ParityParams { stripe_len: 32, group_width: 4 });
+        w.parity = Some(ParityParams::xor(32, 4));
         let good = w.write().unwrap();
         // cuts that land inside the redundant header region must be
         // rejected by the prelude reader itself

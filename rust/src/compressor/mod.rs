@@ -182,8 +182,9 @@ pub struct CompressionConfig {
     /// can measure the overlap against the plain sequential driver.
     pub stage_overlap: bool,
     /// Archive-at-rest parity protection: `Some` writes format v2
-    /// (CRC-checked sections, voting header, XOR parity groups — see
-    /// [`crate::ft::parity`]); `None` writes the legacy v1 bytes.
+    /// (CRC-checked sections, voting header, XOR or Reed–Solomon parity
+    /// groups — see [`crate::ft::parity`]); `None` writes the legacy v1
+    /// bytes.
     pub archive_parity: Option<crate::ft::parity::ParityParams>,
     /// xsz/ftxsz only: pack fixed-point codes with SZx-style "necessary
     /// bits" (`ceil(log2(qmax+1))` bits/point, block-mode tag 6) instead
@@ -331,7 +332,7 @@ mod tests {
     fn config_validation() {
         assert!(CompressionConfig::new(ErrorBound::Abs(1e-3)).validate().is_ok());
         // parity geometry is validated with the rest of the config
-        let p = crate::ft::parity::ParityParams { stripe_len: 4, group_width: 4 };
+        let p = crate::ft::parity::ParityParams::xor(4, 4);
         assert!(
             CompressionConfig::new(ErrorBound::Abs(1e-3)).with_archive_parity(p).validate().is_err()
         );

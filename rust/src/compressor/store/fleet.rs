@@ -1,0 +1,323 @@
+//! Fleet scrub orchestration — `ftsz scrub --fleet`.
+//!
+//! A long-lived archive fleet (the paper's years-at-rest scenario)
+//! accumulates latent damage file by file; waiting for a reader to
+//! stumble over it wastes the window in which parity can still heal.
+//! [`scrub_fleet`] walks a directory tree, classifies every `FTSZ`
+//! archive it finds (clean / repaired / unprotected / unrecoverable),
+//! heals the damaged ones **most-damaged-first** — the archive closest
+//! to outgrowing its parity budget is the one a second latent flip
+//! kills, so it gets rewritten first — and emits a machine-readable
+//! [`FleetReport`] (`ftsz.fleet.v1` JSON).
+//!
+//! When a live [`ArchiveStore`] is provided, every heal is driven
+//! through [`ArchiveStore::scrub_path`] so the store's open-archive
+//! entry and cached blocks of the pre-heal generation are invalidated
+//! in the same step — a fleet heal never leaves stale bytes being
+//! served (`rust/tests/store.rs` pins this).
+
+use std::path::{Path, PathBuf};
+
+use super::ArchiveStore;
+use crate::error::Result;
+use crate::ft::parity::{self, ScrubOutcome};
+
+/// Health classification of one archive after a fleet pass.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FleetHealth {
+    /// Every stripe CRC verified; nothing to do.
+    Clean,
+    /// Damage was localized and healed (or, under `--dry-run`, *would*
+    /// be healed): `stripes` protected-region stripes rebuilt.
+    Repaired {
+        /// Number of stripes rebuilt from parity.
+        stripes: usize,
+    },
+    /// v1/foreign bytes — carries the `FTSZ` magic but no parity to
+    /// scrub against (candidate for `ftsz transcode`).
+    Unprotected,
+    /// Damage exceeds what the archive's parity code can rebuild, or
+    /// the file could not be read/rewritten; never silently skipped.
+    Unrecoverable {
+        /// The error that made this archive unrecoverable.
+        error: String,
+    },
+}
+
+impl FleetHealth {
+    /// Sort key: most urgent first (unrecoverable, then most-damaged,
+    /// then unprotected, then clean).
+    fn priority(&self) -> (u8, usize) {
+        match self {
+            FleetHealth::Unrecoverable { .. } => (0, 0),
+            FleetHealth::Repaired { stripes } => (1, usize::MAX - stripes),
+            FleetHealth::Unprotected => (2, 0),
+            FleetHealth::Clean => (3, 0),
+        }
+    }
+
+    /// Schema field value (`ftsz.fleet.v1` `health`).
+    fn name(&self) -> &'static str {
+        match self {
+            FleetHealth::Clean => "clean",
+            FleetHealth::Repaired { .. } => "repaired",
+            FleetHealth::Unprotected => "unprotected",
+            FleetHealth::Unrecoverable { .. } => "unrecoverable",
+        }
+    }
+}
+
+/// One archive's row in the fleet report.
+#[derive(Debug, Clone)]
+pub struct FleetEntry {
+    /// Archive path as walked.
+    pub path: PathBuf,
+    /// Outcome of this pass.
+    pub health: FleetHealth,
+}
+
+/// Machine-readable result of one [`scrub_fleet`] pass.
+#[derive(Debug, Clone, Default)]
+pub struct FleetReport {
+    /// Root the walk started from.
+    pub root: PathBuf,
+    /// Whether this was a classify-only pass (no rewrites).
+    pub dry_run: bool,
+    /// Archives examined (files carrying the `FTSZ` magic).
+    pub entries: Vec<FleetEntry>,
+    /// Non-archive files skipped during the walk.
+    pub skipped: usize,
+}
+
+impl FleetReport {
+    /// Count entries with the given health name.
+    pub fn count(&self, name: &str) -> usize {
+        self.entries.iter().filter(|e| e.health.name() == name).count()
+    }
+
+    /// Total stripes rebuilt (or rebuildable, under dry-run).
+    pub fn stripes_repaired(&self) -> usize {
+        self.entries
+            .iter()
+            .map(|e| match e.health {
+                FleetHealth::Repaired { stripes } => stripes,
+                _ => 0,
+            })
+            .sum()
+    }
+
+    /// Serialize as `ftsz.fleet.v1` JSON (stable field order, entries
+    /// already urgency-sorted).
+    pub fn to_json(&self) -> String {
+        let mut out = String::new();
+        out.push_str("{\"schema\":\"ftsz.fleet.v1\"");
+        out.push_str(&format!(",\"root\":\"{}\"", json_escape(&self.root.display().to_string())));
+        out.push_str(&format!(",\"dry_run\":{}", self.dry_run));
+        out.push_str(&format!(",\"scanned\":{}", self.entries.len()));
+        out.push_str(&format!(",\"skipped\":{}", self.skipped));
+        for name in ["clean", "repaired", "unprotected", "unrecoverable"] {
+            out.push_str(&format!(",\"{name}\":{}", self.count(name)));
+        }
+        out.push_str(&format!(",\"stripes_repaired\":{}", self.stripes_repaired()));
+        out.push_str(",\"entries\":[");
+        for (i, e) in self.entries.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!(
+                "{{\"path\":\"{}\",\"health\":\"{}\"",
+                json_escape(&e.path.display().to_string()),
+                e.health.name()
+            ));
+            match &e.health {
+                FleetHealth::Repaired { stripes } => {
+                    out.push_str(&format!(",\"stripes\":{stripes}"));
+                }
+                FleetHealth::Unrecoverable { error } => {
+                    out.push_str(&format!(",\"error\":\"{}\"", json_escape(error)));
+                }
+                _ => {}
+            }
+            out.push('}');
+        }
+        out.push_str("]}");
+        out
+    }
+}
+
+/// Minimal JSON string escaping (quotes, backslash, control bytes).
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Walk `root`, classify every `FTSZ` archive, and (unless `dry_run`)
+/// heal damaged ones most-damaged-first. With a `store`, heals go
+/// through [`ArchiveStore::scrub_path`] so pre-heal cached blocks are
+/// dropped atomically with the rewrite. Entries come back urgency-
+/// sorted; unreadable files are reported as unrecoverable, never
+/// silently dropped.
+pub fn scrub_fleet(
+    root: &Path,
+    dry_run: bool,
+    store: Option<&ArchiveStore>,
+) -> Result<FleetReport> {
+    let mut report = FleetReport {
+        root: root.to_path_buf(),
+        dry_run,
+        entries: Vec::new(),
+        skipped: 0,
+    };
+    let mut files = Vec::new();
+    walk(root, &mut files)?;
+    // pass 1: classify without rewriting (this is also the whole pass
+    // under --dry-run)
+    for path in files {
+        match classify(&path) {
+            Ok(None) => report.skipped += 1,
+            Ok(Some(health)) => report.entries.push(FleetEntry { path, health }),
+            Err(e) => report.entries.push(FleetEntry {
+                path,
+                health: FleetHealth::Unrecoverable { error: e.to_string() },
+            }),
+        }
+    }
+    report.entries.sort_by(|a, b| {
+        a.health.priority().cmp(&b.health.priority()).then_with(|| a.path.cmp(&b.path))
+    });
+    if dry_run {
+        return Ok(report);
+    }
+    // pass 2: heal, in the urgency order pass 1 established (the
+    // most-damaged archive is one latent flip from unrecoverable)
+    for entry in &mut report.entries {
+        if !matches!(entry.health, FleetHealth::Repaired { .. }) {
+            continue;
+        }
+        let healed = match store {
+            Some(s) => s.scrub_path(&entry.path),
+            None => parity::scrub_file(&entry.path),
+        };
+        match healed {
+            Ok(ScrubOutcome::Repaired(rep)) => {
+                entry.health = FleetHealth::Repaired { stripes: rep.stripes_repaired.len() };
+            }
+            // the file changed between classify and heal — re-classify
+            // honestly rather than claim a repair that didn't happen
+            Ok(ScrubOutcome::Clean) => entry.health = FleetHealth::Clean,
+            Ok(ScrubOutcome::Unprotected) => entry.health = FleetHealth::Unprotected,
+            Err(e) => {
+                entry.health = FleetHealth::Unrecoverable { error: e.to_string() };
+            }
+        }
+    }
+    // a between-pass change can demote an entry; keep the order honest
+    report.entries.sort_by(|a, b| {
+        a.health.priority().cmp(&b.health.priority()).then_with(|| a.path.cmp(&b.path))
+    });
+    Ok(report)
+}
+
+/// Classify one file: `Ok(None)` for non-archives, `Some(health)` for
+/// `FTSZ` files (no rewrite happens here).
+fn classify(path: &Path) -> Result<Option<FleetHealth>> {
+    let data = std::fs::read(path)?;
+    if data.get(..4) != Some(&crate::compressor::format::MAGIC[..]) {
+        return Ok(None);
+    }
+    match parity::scrub(&data) {
+        Ok((ScrubOutcome::Clean, _)) => Ok(Some(FleetHealth::Clean)),
+        Ok((ScrubOutcome::Unprotected, _)) => Ok(Some(FleetHealth::Unprotected)),
+        Ok((ScrubOutcome::Repaired(rep), _)) => {
+            Ok(Some(FleetHealth::Repaired { stripes: rep.stripes_repaired.len() }))
+        }
+        Err(e) => Ok(Some(FleetHealth::Unrecoverable { error: e.to_string() })),
+    }
+}
+
+/// Depth-first walk collecting file paths in sorted order (stable
+/// reports across filesystems).
+fn walk(root: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    if root.is_file() {
+        out.push(root.to_path_buf());
+        return Ok(());
+    }
+    let mut children: Vec<PathBuf> =
+        std::fs::read_dir(root)?.map(|e| e.map(|e| e.path())).collect::<std::io::Result<_>>()?;
+    children.sort();
+    for child in children {
+        if child.is_dir() {
+            walk(&child, out)?;
+        } else if child.is_file() {
+            out.push(child);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_escape_covers_specials() {
+        assert_eq!(json_escape("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+        assert_eq!(json_escape("\u{1}"), "\\u0001");
+        assert_eq!(json_escape("plain/path.ftsz"), "plain/path.ftsz");
+    }
+
+    #[test]
+    fn report_json_has_schema_and_counts() {
+        let report = FleetReport {
+            root: PathBuf::from("/tmp/fleet"),
+            dry_run: true,
+            entries: vec![
+                FleetEntry {
+                    path: PathBuf::from("/tmp/fleet/bad.ftsz"),
+                    health: FleetHealth::Repaired { stripes: 2 },
+                },
+                FleetEntry {
+                    path: PathBuf::from("/tmp/fleet/ok.ftsz"),
+                    health: FleetHealth::Clean,
+                },
+            ],
+            skipped: 3,
+        };
+        let j = report.to_json();
+        assert!(j.starts_with("{\"schema\":\"ftsz.fleet.v1\""), "{j}");
+        assert!(j.contains("\"scanned\":2"), "{j}");
+        assert!(j.contains("\"skipped\":3"), "{j}");
+        assert!(j.contains("\"repaired\":1"), "{j}");
+        assert!(j.contains("\"clean\":1"), "{j}");
+        assert!(j.contains("\"stripes_repaired\":2"), "{j}");
+        assert!(j.contains("\"health\":\"repaired\",\"stripes\":2"), "{j}");
+    }
+
+    #[test]
+    fn priority_orders_urgency_first() {
+        let mut healths = vec![
+            FleetHealth::Clean,
+            FleetHealth::Repaired { stripes: 1 },
+            FleetHealth::Unprotected,
+            FleetHealth::Unrecoverable { error: "x".into() },
+            FleetHealth::Repaired { stripes: 5 },
+        ];
+        healths.sort_by_key(|h| h.priority());
+        assert!(matches!(healths[0], FleetHealth::Unrecoverable { .. }));
+        assert!(matches!(healths[1], FleetHealth::Repaired { stripes: 5 }));
+        assert!(matches!(healths[2], FleetHealth::Repaired { stripes: 1 }));
+        assert!(matches!(healths[3], FleetHealth::Unprotected));
+        assert!(matches!(healths[4], FleetHealth::Clean));
+    }
+}

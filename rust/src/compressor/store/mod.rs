@@ -11,11 +11,13 @@
 //! * **Open-archive cache** — one [`crate::ft::parity::parse_recovering`]
 //!   per *(path, generation)*: the parsed archive (voted header, section
 //!   index, parity-recovered bytes) stays resident, keyed by path with
-//!   the file's (mtime, length) generation. A scrubbed or rewritten
-//!   archive changes generation, which drops the stale parse *and* every
-//!   cached block of it — a rewritten archive can never serve stale
-//!   bytes (`rust/tests/store.rs` proves a mode-C flip between two
-//!   queries of the same block is detected, never served silently).
+//!   the file's (mtime, length, content stamp) generation. A scrubbed or
+//!   rewritten archive changes generation, which drops the stale parse
+//!   *and* every cached block of it — a rewritten archive can never
+//!   serve stale bytes (`rust/tests/store.rs` proves a mode-C flip
+//!   between two queries of the same block is detected, never served
+//!   silently, even when the rewrite lands in the same mtime tick at
+//!   the same length).
 //! * **Block decode cache** — a sharded byte-capacity LRU
 //!   ([`cache::BlockCache`]) over whole decoded blocks. Hot regions copy
 //!   out of cached blocks; cold blocks fan through the existing
@@ -37,6 +39,7 @@
 //! [`crate::serve`]. See [`protocol`] for the wire format.
 
 pub mod cache;
+pub mod fleet;
 pub mod protocol;
 
 use std::collections::HashMap;
@@ -56,28 +59,71 @@ use crate::inject::Engine;
 pub use cache::{BlockCache, BlockKey, CacheStats};
 
 /// Identity of one on-disk file version: modification time (nanoseconds
-/// since the epoch) plus byte length. Two files with equal generations
-/// are treated as the same bytes; `scrub`/rewrite bumps at least the
-/// mtime, invalidating the open-archive entry and its cached blocks.
+/// since the epoch), byte length, and a content stamp over the head and
+/// tail windows of the file. Two files with equal generations are
+/// treated as the same bytes.
+///
+/// (mtime, length) alone is not enough: an in-place heal — exactly what
+/// `scrub` or a fleet repair produces — rewrites the file at the *same
+/// length*, and on coarse-mtime filesystems it can land inside one mtime
+/// tick, making the healed file indistinguishable from the damaged one
+/// and letting the store serve stale cached blocks. The content stamp is
+/// a CRC32 over the first [`GEN_HEAD_WINDOW`] bytes (the full
+/// triplicated v2 header region) and the last [`GEN_TAIL_WINDOW`] bytes
+/// (the parity section, whose stripe CRCs change whenever any protected
+/// byte changes) — ≤ 4.5 KiB of I/O per stamp, independent of archive
+/// size, and it discriminates every rewrite the v2 format can express.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Generation {
     /// `mtime` in nanoseconds since the Unix epoch (0 for pre-epoch).
     pub mtime_ns: u128,
     /// File length in bytes.
     pub len: u64,
+    /// CRC32 over the head + tail windows (see the type docs).
+    pub content: u32,
 }
 
+/// Head-window length folded into [`Generation::content`]: the complete
+/// triplicated v2 header region, so any header rewrite is always seen.
+pub const GEN_HEAD_WINDOW: usize = crate::compressor::format::V2_BODY_START;
+
+/// Tail-window length folded into [`Generation::content`]: v2 archives
+/// end with the parity section (per-stripe CRCs + parity blobs), so a
+/// heal of *any* protected stripe perturbs this window.
+pub const GEN_TAIL_WINDOW: usize = 4096;
+
 impl Generation {
-    /// Stat `path` into a generation stamp.
+    /// Stat + window-read `path` into a generation stamp.
     pub fn of(path: &Path) -> Result<Self> {
         let (mtime_ns, len) = crate::io::file_generation(path)?;
-        Ok(Generation { mtime_ns, len })
+        let content = content_stamp(path, len)?;
+        Ok(Generation { mtime_ns, len, content })
     }
+}
+
+/// CRC32 over the head and tail windows of `path` (overlapping windows
+/// for short files simply fold the shared bytes twice — still a pure
+/// function of the content).
+fn content_stamp(path: &Path, len: u64) -> Result<u32> {
+    use std::io::{Read, Seek, SeekFrom};
+    let mut f = std::fs::File::open(path)?;
+    let head_len = len.min(GEN_HEAD_WINDOW as u64) as usize;
+    let mut window = vec![0u8; head_len];
+    f.read_exact(&mut window)?;
+    let mut state = crate::util::crc32::update(0xFFFF_FFFF, &window);
+    let tail_len = len.min(GEN_TAIL_WINDOW as u64);
+    if tail_len > 0 {
+        f.seek(SeekFrom::End(-(tail_len as i64)))?;
+        window.resize(tail_len as usize, 0);
+        f.read_exact(&mut window)?;
+        state = crate::util::crc32::update(state, &window);
+    }
+    Ok(state ^ 0xFFFF_FFFF)
 }
 
 /// How many read → re-stat rounds [`ArchiveStore::open_at`] tolerates for
 /// a file being rewritten underneath it before giving up.
-const OPEN_RETRIES: usize = 4;
+const OPEN_RETRIES: usize = 8;
 
 /// Store knobs.
 #[derive(Debug, Clone)]
@@ -296,6 +342,20 @@ impl ArchiveStore {
         }
     }
 
+    /// Scrub the archive at `path` in place
+    /// ([`crate::ft::parity::scrub_file`]) and, if the scrub rewrote the
+    /// file, evict its open entry so no cached block of the pre-heal
+    /// generation can ever be served again. This is the invalidation
+    /// hook `ftsz scrub --fleet` drives; the next query re-opens the
+    /// healed generation.
+    pub fn scrub_path(&self, path: &Path) -> Result<crate::ft::parity::ScrubOutcome> {
+        let outcome = crate::ft::parity::scrub_file(path)?;
+        if matches!(outcome, crate::ft::parity::ScrubOutcome::Repaired(_)) {
+            self.evict(path);
+        }
+        Ok(outcome)
+    }
+
     /// Aggregate counters.
     pub fn stats(&self) -> StoreStats {
         StoreStats {
@@ -347,18 +407,32 @@ impl ArchiveStore {
 
 /// Read `path` with a stat → read → re-stat loop so the returned bytes
 /// and generation stamp are consistent even while a writer (e.g. `scrub`)
-/// rewrites the file.
+/// rewrites the file. Gives up with a clean error after [`OPEN_RETRIES`]
+/// rounds — a file under continuous rewrite must not spin forever.
 fn read_stable(path: &Path) -> Result<(Vec<u8>, Generation)> {
+    read_stable_with(path, &mut || Generation::of(path))
+}
+
+/// [`read_stable`] with the stat injected, so the bounded give-up path is
+/// unit-testable without racing a real writer thread.
+fn read_stable_with(
+    path: &Path,
+    stat: &mut dyn FnMut() -> Result<Generation>,
+) -> Result<(Vec<u8>, Generation)> {
     for _ in 0..OPEN_RETRIES {
-        let before = Generation::of(path)?;
+        let before = stat()?;
         let bytes = std::fs::read(path)?;
-        if Generation::of(path)? == before {
+        if stat()? == before {
             return Ok((bytes, before));
         }
     }
-    Err(Error::Runtime(format!(
-        "{} kept changing across {OPEN_RETRIES} read attempts",
-        path.display()
+    Err(Error::Io(std::io::Error::new(
+        std::io::ErrorKind::TimedOut,
+        format!(
+            "{} kept changing across {OPEN_RETRIES} read attempts — refusing to spin \
+             on a file under continuous rewrite",
+            path.display()
+        ),
     )))
 }
 
@@ -526,5 +600,63 @@ mod tests {
     #[test]
     fn picker_rejects_shape_mismatch() {
         assert!(pick_engine(&[1.0; 10], Dims::d3(2, 2, 2), &cfg(1e-3)).is_err());
+    }
+
+    #[test]
+    fn read_stable_gives_up_after_bounded_attempts() {
+        let path = std::env::temp_dir().join("ftsz_store_read_stable_bounded.bin");
+        std::fs::write(&path, b"some archive bytes").unwrap();
+        // a stat that never returns the same generation twice models a
+        // file under continuous rewrite
+        let mut tick = 0u128;
+        let mut stat = || -> Result<Generation> {
+            tick += 1;
+            Ok(Generation { mtime_ns: tick, len: 18, content: 0 })
+        };
+        let err = read_stable_with(&path, &mut stat).unwrap_err();
+        let msg = err.to_string();
+        assert!(
+            msg.contains("ftsz_store_read_stable_bounded.bin"),
+            "error must name the path: {msg}"
+        );
+        assert!(msg.contains("8 read attempts"), "error must name the bound: {msg}");
+        // 8 rounds of (stat, read, stat) = 16 stats, not an unbounded spin
+        assert_eq!(tick, 2 * OPEN_RETRIES as u128);
+        // a stat that stabilizes within the budget succeeds
+        let mut wobble = 3u128;
+        let mut stat = || -> Result<Generation> {
+            if wobble > 0 {
+                wobble -= 1;
+            }
+            Ok(Generation { mtime_ns: wobble, len: 18, content: 7 })
+        };
+        let (bytes, generation) = read_stable_with(&path, &mut stat).unwrap();
+        assert_eq!(bytes, b"some archive bytes");
+        assert_eq!(generation.mtime_ns, 0);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn generation_content_stamp_sees_same_length_rewrites() {
+        let path = std::env::temp_dir().join("ftsz_store_generation_stamp.bin");
+        std::fs::write(&path, vec![0xA5u8; 600]).unwrap();
+        let g0 = Generation::of(&path).unwrap();
+        // same length, different bytes → different content stamp even if
+        // mtime and len collide
+        let mut flipped = vec![0xA5u8; 600];
+        flipped[500] ^= 0x01;
+        std::fs::write(&path, &flipped).unwrap();
+        let g1 = Generation::of(&path).unwrap();
+        assert_eq!(g0.len, g1.len);
+        assert_ne!(g0.content, g1.content, "content stamp must discriminate the rewrite");
+        // identical bytes → identical stamp (pure function of content)
+        std::fs::write(&path, vec![0xA5u8; 600]).unwrap();
+        assert_eq!(Generation::of(&path).unwrap().content, g0.content);
+        // short and empty files stamp without error
+        std::fs::write(&path, b"x").unwrap();
+        Generation::of(&path).unwrap();
+        std::fs::write(&path, b"").unwrap();
+        assert_eq!(Generation::of(&path).unwrap().len, 0);
+        std::fs::remove_file(&path).unwrap();
     }
 }

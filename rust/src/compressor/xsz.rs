@@ -1785,7 +1785,7 @@ mod tests {
         use crate::ft::parity::ParityParams;
         let f = synthetic::hurricane_field("t", Dims::d3(8, 10, 10), 7);
         let c = cfg(1e-3)
-            .with_archive_parity(ParityParams { stripe_len: 64, group_width: 8 });
+            .with_archive_parity(ParityParams::xor(64, 8));
         let clean = compress_ft(&f.data, f.dims, &c).unwrap();
         // damage the protected region: the recover stage heals it and the
         // repair is visible in the report

@@ -39,7 +39,9 @@ impl RunConfig {
     /// stage_overlap = true       # 1-worker per-stage software pipeline
     /// archive_parity = false     # format-v2 self-healing archives
     /// parity_stripe_len = 512    # bytes per CRC-localized stripe
-    /// parity_group_width = 64    # stripes per XOR parity group
+    /// parity_group_width = 64    # stripes per parity group
+    /// parity_code = "xor"        # xor | rs (GF(2^8) Reed–Solomon)
+    /// parity_rs_shards = 3       # RS parity rows per group (2..=8)
     /// xsz_bitpack = false        # xsz/ftxsz bit-granular code packing
     /// ```
     pub fn from_doc(doc: &ConfigDoc) -> Result<Self> {
@@ -96,7 +98,7 @@ pub fn compression_from_doc(doc: &ConfigDoc, section: &str) -> Result<Compressio
         // geometry without the enable flag would silently write
         // unprotected v1 archives under an operator who believes parity
         // is on — reject instead
-        for k in ["parity_stripe_len", "parity_group_width"] {
+        for k in ["parity_stripe_len", "parity_group_width", "parity_code", "parity_rs_shards"] {
             if doc.get(&key(k)).is_some() {
                 return Err(Error::Config(format!(
                     "{} is set but {} = true is not — archives would be unprotected",
@@ -114,9 +116,32 @@ pub fn compression_from_doc(doc: &ConfigDoc, section: &str) -> Result<Compressio
             u32::try_from(v)
                 .map_err(|_| Error::Config(format!("{} = {v} out of range", key(k))))
         };
+        let code = match doc.str_or(&key("parity_code"), "xor")? {
+            "xor" => {
+                if doc.get(&key("parity_rs_shards")).is_some() {
+                    return Err(Error::Config(format!(
+                        "{} is set but {} is \"xor\" — set parity_code = \"rs\"",
+                        key("parity_rs_shards"),
+                        key("parity_code")
+                    )));
+                }
+                crate::ft::parity::ParityCode::Xor
+            }
+            "rs" => {
+                let shards = doc.int_or(&key("parity_rs_shards"), 3)?;
+                let shards = u8::try_from(shards).map_err(|_| {
+                    Error::Config(format!("{} = {shards} out of range", key("parity_rs_shards")))
+                })?;
+                crate::ft::parity::ParityCode::Rs { parity_shards: shards }
+            }
+            other => {
+                return Err(Error::Config(format!("{} '{other}'", key("parity_code"))));
+            }
+        };
         Some(crate::ft::parity::ParityParams {
             stripe_len: as_u32("parity_stripe_len", stripe)?,
             group_width: as_u32("parity_group_width", width)?,
+            code,
         })
     } else {
         None
@@ -225,12 +250,31 @@ mod tests {
     }
 
     #[test]
+    fn parity_code_keys_parse() {
+        let doc = ConfigDoc::parse(
+            "[compression]\narchive_parity = true\nparity_code = \"rs\"\nparity_rs_shards = 4",
+        )
+        .unwrap();
+        let rc = RunConfig::from_doc(&doc).unwrap();
+        let p = rc.compression.archive_parity.unwrap();
+        assert_eq!(p.code, crate::ft::parity::ParityCode::Rs { parity_shards: 4 });
+        // xor is the default and keeps the legacy layout
+        let doc = ConfigDoc::parse("[compression]\narchive_parity = true").unwrap();
+        let rc = RunConfig::from_doc(&doc).unwrap();
+        assert_eq!(rc.compression.archive_parity.unwrap().code, crate::ft::parity::ParityCode::Xor);
+    }
+
+    #[test]
     fn bad_values_rejected() {
         for text in [
             "engine = \"zzz\"",
             "profile = \"mars\"",
             "[compression]\nbound_kind = \"weird\"",
             "[compression]\nerror_bound = -1.0",
+            "[compression]\narchive_parity = true\nparity_code = \"hamming\"",
+            "[compression]\narchive_parity = true\nparity_code = \"rs\"\nparity_rs_shards = 1",
+            "[compression]\narchive_parity = true\nparity_rs_shards = 3",
+            "[compression]\nparity_code = \"rs\"",
         ] {
             let doc = ConfigDoc::parse(text).unwrap();
             assert!(RunConfig::from_doc(&doc).is_err(), "{text} accepted");

@@ -9,7 +9,9 @@
 //!   compression) and Algorithm 2 (resilient decompression with per-block
 //!   verification and random-access re-execution);
 //! * [`parity`] — archive-at-rest resilience (format v2): per-stripe
-//!   CRC32 localization plus interleaved XOR parity groups, with
+//!   CRC32 localization plus interleaved parity groups — XOR (one
+//!   damaged stripe per group) or GF(2^8) Reed–Solomon (up to
+//!   `parity_shards` damaged stripes per group) — with
 //!   [`parity::recover`] healing persistent archive corruption that
 //!   re-execution cannot touch, and [`parity::scrub_file`] rewriting
 //!   long-lived archives in place before latent flips outgrow the
@@ -27,5 +29,8 @@ pub use ftengine::{
     decompress_stream, decompress_unverified, decompress_verbose, decompress_with,
     decompress_with_report,
 };
-pub use parity::{recover, scrub, scrub_file, ParityParams, Recovery, ScrubOutcome};
+pub use parity::{
+    recover, scrub, scrub_file, ParityCode, ParityParams, Recovery, ScrubOutcome,
+    MAX_RS_PARITY_SHARDS,
+};
 pub use report::{DecompressReport, SdcEvent};

@@ -17,11 +17,16 @@
 //!   (the last stripe may be short);
 //! * every stripe gets a CRC32 → **localization** of damage;
 //! * stripe `i` belongs to parity group `i % n_groups`, and each group
-//!   stores the XOR of its member stripes (short tail zero-padded) →
-//!   **reconstruction** of any single damaged stripe per group;
+//!   stores parity over its member stripes (short tail zero-padded) →
+//!   **reconstruction** of damaged stripes. Two codes share this layout,
+//!   selected by [`ParityCode`] in the voted header geometry: plain XOR
+//!   (the fast default — one damaged stripe per group) and GF(2^8)
+//!   Reed–Solomon (`m` parity rows per group rebuild up to `m` damaged
+//!   stripes per group, for archives that sit for years in error-prone
+//!   environments and accumulate multi-stripe damage);
 //! * group membership is *interleaved*, so adjacent stripes always land
 //!   in different groups: a burst up to one stripe long touches at most
-//!   two stripes and both are repairable.
+//!   two stripes and both are repairable even under XOR.
 //!
 //! The per-stripe CRC table and parity blobs live in a trailing parity
 //! section whose own CRC32 sits in the voted header. A falsely-accused
@@ -39,6 +44,30 @@ use crate::error::{Error, Result};
 use crate::util::bits::bytes;
 use crate::util::crc32::crc32;
 
+/// Which erasure code protects the stripes of a parity group.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ParityCode {
+    /// One XOR row per group: rebuilds one damaged stripe per group.
+    /// Fast (pure XOR on both the build and rebuild paths) and the wire
+    /// default — the pre-RS v2 layout, byte for byte.
+    #[default]
+    Xor,
+    /// GF(2^8) Reed–Solomon: `parity_shards` rows per group rebuild up to
+    /// `parity_shards` damaged stripes per group. Costs
+    /// `parity_shards / group_width` in size where XOR costs
+    /// `1 / group_width`, plus table multiplies on build/rebuild.
+    Rs {
+        /// Parity rows per group, `2..=`[`MAX_RS_PARITY_SHARDS`]; also the
+        /// number of damaged stripes per group the code tolerates.
+        parity_shards: u8,
+    },
+}
+
+/// Upper bound on [`ParityCode::Rs`] `parity_shards` (erasure solve is an
+/// `m × m` Vandermonde system; 8 keeps it trivially cheap and is far past
+/// any realistic damage budget).
+pub const MAX_RS_PARITY_SHARDS: usize = 8;
+
 /// Geometry of the v2 parity section.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct ParityParams {
@@ -47,21 +76,39 @@ pub struct ParityParams {
     /// table: the CRC overhead is `4 / stripe_len` of the archive.
     pub stripe_len: u32,
     /// Stripes per parity group; the parity overhead is roughly
-    /// `1 / group_width` of the archive. Each group tolerates one damaged
-    /// stripe.
+    /// `parity_shards / group_width` of the archive (1 shard for XOR).
     pub group_width: u32,
+    /// The erasure code for each group (XOR by default).
+    pub code: ParityCode,
 }
 
 impl Default for ParityParams {
     /// Defaults chosen so the total archive-size overhead stays under 3%:
-    /// 512-byte stripes (CRC table ≈ 0.8%) in 64-stripe groups
+    /// 512-byte stripes (CRC table ≈ 0.8%) in 64-stripe XOR groups
     /// (parity ≈ 1.6%).
     fn default() -> Self {
-        Self { stripe_len: 512, group_width: 64 }
+        Self::xor(512, 64)
     }
 }
 
 impl ParityParams {
+    /// XOR geometry (one damaged stripe per group).
+    pub fn xor(stripe_len: u32, group_width: u32) -> Self {
+        Self { stripe_len, group_width, code: ParityCode::Xor }
+    }
+
+    /// Reed–Solomon geometry (`parity_shards` damaged stripes per group).
+    pub fn rs(stripe_len: u32, group_width: u32, parity_shards: u8) -> Self {
+        Self { stripe_len, group_width, code: ParityCode::Rs { parity_shards } }
+    }
+
+    /// The RS counterpart of [`Default`]: the default stripe/group
+    /// geometry with three parity shards (total overhead ≈ 5.5%, three
+    /// damaged stripes per group tolerated).
+    pub fn default_rs() -> Self {
+        Self::rs(512, 64, 3)
+    }
+
     /// Reject geometries that would be useless or hostile.
     pub fn validate(&self) -> Result<()> {
         if !(16..=1 << 20).contains(&self.stripe_len) {
@@ -76,11 +123,35 @@ impl ParityParams {
                 self.group_width
             )));
         }
+        if let ParityCode::Rs { parity_shards } = self.code {
+            if !(2..=MAX_RS_PARITY_SHARDS as u8).contains(&parity_shards) {
+                return Err(Error::Config(format!(
+                    "RS parity_shards {parity_shards} out of supported range \
+                     2..={MAX_RS_PARITY_SHARDS} (use the XOR code for 1)",
+                )));
+            }
+            if self.group_width > 255 {
+                return Err(Error::Config(format!(
+                    "RS parity needs group_width <= 255 (GF(2^8) has 255 \
+                     distinct evaluation points), got {}",
+                    self.group_width
+                )));
+            }
+        }
         Ok(())
     }
 
+    /// Parity rows stored per group (1 for XOR); equally, the number of
+    /// damaged stripes per group the code can rebuild.
+    pub fn parity_shards(&self) -> usize {
+        match self.code {
+            ParityCode::Xor => 1,
+            ParityCode::Rs { parity_shards } => parity_shards as usize,
+        }
+    }
+
     /// Number of stripes covering `protected_len` bytes.
-    fn n_stripes(&self, protected_len: usize) -> usize {
+    pub fn n_stripes(&self, protected_len: usize) -> usize {
         protected_len.div_ceil(self.stripe_len as usize)
     }
 
@@ -88,32 +159,151 @@ impl ParityParams {
     /// whenever there are two stripes, so *adjacent* stripes always land
     /// in different groups and a burst up to one stripe long (touching at
     /// most two adjacent stripes) stays repairable even in tiny archives.
-    fn n_groups(&self, n_stripes: usize) -> usize {
+    pub fn n_groups(&self, n_stripes: usize) -> usize {
         match n_stripes {
             0 => 0,
             1 => 1,
             n => n.div_ceil(self.group_width as usize).clamp(2, n),
         }
     }
+
+    /// Pack the geometry into the two little-endian `u32` header words.
+    ///
+    /// XOR emits the raw `(stripe_len, group_width)` pair — bit for bit
+    /// the pre-RS wire layout, so existing v2 archives (and the golden
+    /// bytes) are unchanged. RS rides in the provably-spare high bits:
+    /// [`Self::validate`] caps `stripe_len` at `2^20` and `group_width`
+    /// at `2^16`, so a code tag in `stripe_len`'s bits 24.. and the shard
+    /// count in `group_width`'s bits 20.. can never collide with a valid
+    /// XOR geometry.
+    pub(crate) fn encode_geometry(&self) -> (u32, u32) {
+        match self.code {
+            ParityCode::Xor => (self.stripe_len, self.group_width),
+            ParityCode::Rs { parity_shards } => (
+                self.stripe_len | (1 << 24),
+                self.group_width | (u32::from(parity_shards) << 20),
+            ),
+        }
+    }
+
+    /// Decode the two geometry header words ([`Self::encode_geometry`]'s
+    /// inverse). The words come from the *voted* header, but the vote only
+    /// proves they were written intact — not that they are sane, so
+    /// unknown tags and out-of-range shard counts are clean errors.
+    pub(crate) fn decode_geometry(w0: u32, w1: u32) -> Result<Self> {
+        let stripe_len = w0 & 0x00FF_FFFF;
+        let tag = w0 >> 24;
+        let group_width = w1 & 0x000F_FFFF;
+        let shards = w1 >> 20;
+        let code = match (tag, shards) {
+            (0, 0) => ParityCode::Xor,
+            (1, s) if (2..=MAX_RS_PARITY_SHARDS as u32).contains(&s) => {
+                ParityCode::Rs { parity_shards: s as u8 }
+            }
+            _ => {
+                return Err(Error::Format(format!(
+                    "unknown parity geometry (code tag {tag}, shards {shards}) \
+                     — archive from a newer writer?"
+                )))
+            }
+        };
+        let p = ParityParams { stripe_len, group_width, code };
+        p.validate()?;
+        Ok(p)
+    }
+}
+
+// ---------------------------------------------------------------- GF(2^8)
+//
+// Arithmetic for the Reed–Solomon code: the field GF(2^8) under the
+// primitive polynomial 0x11D with generator α = 2 (the classic RS field).
+// Parity row `j` of a group is Σ_t α^(t·j) · D_t over its member stripes
+// (member position t, byte-wise); row 0 is therefore plain XOR, which is
+// how the XOR code and RS row 0 share one build loop. Erasure decode
+// solves the Vandermonde system the surviving rows induce.
+
+/// `(exp, log)` tables; `exp` is doubled to 512 entries so the sum of two
+/// logs (≤ 508) indexes it without a mod-255 reduction.
+const GF_TABLES: ([u8; 512], [u8; 256]) = gf_tables();
+
+const fn gf_tables() -> ([u8; 512], [u8; 256]) {
+    let mut exp = [0u8; 512];
+    let mut log = [0u8; 256];
+    let mut x: u16 = 1;
+    let mut i = 0;
+    while i < 255 {
+        exp[i] = x as u8;
+        log[x as usize] = i as u8;
+        x <<= 1;
+        if x & 0x100 != 0 {
+            x ^= 0x11D;
+        }
+        i += 1;
+    }
+    let mut j = 255;
+    while j < 512 {
+        exp[j] = exp[j - 255];
+        j += 1;
+    }
+    (exp, log)
+}
+
+/// Field product (0 annihilates; otherwise exp[log a + log b]).
+fn gf_mul(a: u8, b: u8) -> u8 {
+    if a == 0 || b == 0 {
+        0
+    } else {
+        GF_TABLES.0[GF_TABLES.1[a as usize] as usize + GF_TABLES.1[b as usize] as usize]
+    }
+}
+
+/// α^e (exponent reduced mod the group order 255).
+fn gf_pow_alpha(e: usize) -> u8 {
+    GF_TABLES.0[e % 255]
+}
+
+/// Multiplicative inverse (0 maps to 0; callers never pass 0 — the
+/// Gaussian pivot is chosen nonzero).
+fn gf_inv(a: u8) -> u8 {
+    if a == 0 {
+        0
+    } else {
+        GF_TABLES.0[255 - GF_TABLES.1[a as usize] as usize]
+    }
 }
 
 /// Build the parity section body over the protected region:
-/// `n_stripes u32 | n_groups u32 | stripe CRC32s | per-group XOR blobs`.
+/// `n_stripes u32 | n_groups u32 | stripe CRC32s | per-group parity blobs`
+/// with [`ParityParams::parity_shards`] rows per group (row `j` of group
+/// `grp` at blob index `grp * m + j`). For XOR (`m == 1`, coefficient
+/// α^0 = 1 throughout) this is byte-identical to the pre-RS layout.
 pub(crate) fn build(protected: &[u8], p: &ParityParams) -> Vec<u8> {
     let stripe = p.stripe_len as usize;
+    let m = p.parity_shards();
     let n = p.n_stripes(protected.len());
     let g = p.n_groups(n);
-    let mut body = Vec::with_capacity(8 + 4 * n + g * stripe);
+    let mut body = Vec::with_capacity(8 + 4 * n + g * m * stripe);
     bytes::put_u32(&mut body, n as u32);
     bytes::put_u32(&mut body, g as u32);
     for i in 0..n {
         bytes::put_u32(&mut body, crc32(stripe_of(protected, i, stripe)));
     }
-    let mut blobs = vec![0u8; g * stripe];
+    let mut blobs = vec![0u8; g * m * stripe];
     for i in 0..n {
-        let dst = &mut blobs[(i % g) * stripe..];
-        for (j, &b) in stripe_of(protected, i, stripe).iter().enumerate() {
-            dst[j] ^= b;
+        let (grp, t) = (i % g, i / g);
+        let src = stripe_of(protected, i, stripe);
+        for j in 0..m {
+            let coef = gf_pow_alpha(t * j);
+            let dst = &mut blobs[(grp * m + j) * stripe..];
+            if coef == 1 {
+                for (d, &b) in dst.iter_mut().zip(src) {
+                    *d ^= b;
+                }
+            } else {
+                for (d, &b) in dst.iter_mut().zip(src) {
+                    *d ^= gf_mul(coef, b);
+                }
+            }
         }
     }
     body.extend_from_slice(&blobs);
@@ -208,10 +398,11 @@ fn recover_with(data: &[u8], pre: &format::V2Prelude) -> Result<Recovery> {
         ));
     }
     let stripe = pre.params.stripe_len as usize;
+    let m = pre.params.parity_shards();
     let protected_len = pre.protected_len();
     let n = pre.params.n_stripes(protected_len);
     let g = pre.params.n_groups(n);
-    if parity_body.len() != 8 + 4 * n + g * stripe
+    if parity_body.len() != 8 + 4 * n + g * m * stripe
         || u32_at(parity_body, 0) != Some(n as u32)
         || u32_at(parity_body, 4) != Some(g as u32)
     {
@@ -240,6 +431,7 @@ fn recover_with(data: &[u8], pre: &format::V2Prelude) -> Result<Recovery> {
                 .into(),
         ));
     }
+    // per-group damage budget: the code rebuilds at most m stripes per group
     // ftlint::allow(r5, "g = n_groups(n) <= n <= protected_len/stripe + 1, bounded by the actual archive size")
     let mut per_group = vec![0usize; g];
     for &s in &bad_stripes {
@@ -247,34 +439,50 @@ fn recover_with(data: &[u8], pre: &format::V2Prelude) -> Result<Recovery> {
             .get_mut(s % g)
             .ok_or_else(|| Error::Sdc("parity group index out of range".into()))?;
         *hit += 1;
-        if *hit > 1 {
+        if *hit > m {
             return Err(Error::Sdc(format!(
-                "two damaged stripes in parity group {} — unrecoverable",
-                s % g
+                "{} damaged stripes in parity group {} exceed the {} this \
+                 parity code can rebuild — unrecoverable",
+                *hit,
+                s % g,
+                m
             )));
         }
     }
 
     let mut healed = data.to_vec();
-    for &s in &bad_stripes {
-        let grp = s % g;
-        let mut rebuilt = blobs
-            .get(grp * stripe..(grp + 1) * stripe)
-            .ok_or_else(|| Error::Sdc("parity blob out of range — unrecoverable".into()))?
-            .to_vec();
-        for i in (grp..n).step_by(g) {
-            if i != s {
-                for (j, &b) in stripe_of(protected, i, stripe).iter().enumerate() {
-                    rebuilt[j] ^= b;
+    match pre.params.code {
+        ParityCode::Xor => {
+            for &s in &bad_stripes {
+                let grp = s % g;
+                let mut rebuilt = blobs
+                    .get(grp * stripe..(grp + 1) * stripe)
+                    .ok_or_else(|| Error::Sdc("parity blob out of range — unrecoverable".into()))?
+                    .to_vec();
+                for i in (grp..n).step_by(g) {
+                    if i != s {
+                        for (j, &b) in stripe_of(protected, i, stripe).iter().enumerate() {
+                            rebuilt[j] ^= b;
+                        }
+                    }
+                }
+                put_healed_stripe(&mut healed, s, &rebuilt, stripe, protected_len)?;
+            }
+        }
+        ParityCode::Rs { .. } => {
+            for grp in 0..g {
+                let erased: Vec<usize> =
+                    bad_stripes.iter().copied().filter(|s| s % g == grp).collect();
+                if erased.is_empty() {
+                    continue;
+                }
+                for (s, rebuilt) in
+                    rs_rebuild_group(protected, blobs, grp, g, n, stripe, m, &erased)?
+                {
+                    put_healed_stripe(&mut healed, s, &rebuilt, stripe, protected_len)?;
                 }
             }
         }
-        let start = V2_BODY_START + s * stripe;
-        let end = V2_BODY_START + protected_len.min((s + 1) * stripe);
-        healed
-            .get_mut(start..end)
-            .ok_or_else(|| Error::Sdc("healed stripe range out of bounds".into()))?
-            .copy_from_slice(&rebuilt[..end - start]);
     }
 
     // the repaired archive must re-verify end to end before anyone decodes it
@@ -290,6 +498,118 @@ fn recover_with(data: &[u8], pre: &format::V2Prelude) -> Result<Recovery> {
     }
     let report = RecoverReport { stripes_repaired: bad_stripes };
     Ok(Recovery::Repaired { bytes: healed, report })
+}
+
+/// Copy a rebuilt stripe into the healed archive (tail stripe truncated
+/// to the protected length).
+fn put_healed_stripe(
+    healed: &mut [u8],
+    s: usize,
+    rebuilt: &[u8],
+    stripe: usize,
+    protected_len: usize,
+) -> Result<()> {
+    let start = V2_BODY_START + s * stripe;
+    let end = V2_BODY_START + protected_len.min((s + 1) * stripe);
+    let src = rebuilt
+        .get(..end - start)
+        .ok_or_else(|| Error::Sdc("rebuilt stripe shorter than its slot".into()))?;
+    healed
+        .get_mut(start..end)
+        .ok_or_else(|| Error::Sdc("healed stripe range out of bounds".into()))?
+        .copy_from_slice(src);
+    Ok(())
+}
+
+/// Rebuild the erased stripes of one RS parity group.
+///
+/// With erased member positions `E` (|E| = k ≤ m), syndromes
+/// `S_j = P_j − Σ_{t intact} α^(t·j) D_t` reduce the code equations to the
+/// k×k Vandermonde system `Σ_{e∈E} (α^e)^j X_e = S_j`, solved by Gaussian
+/// elimination over GF(2^8) (always nonsingular: the α^e are distinct
+/// because validate() caps group membership at 255, the order of α).
+/// Returns `(stripe_index, rebuilt_bytes)` pairs.
+#[allow(clippy::too_many_arguments)]
+fn rs_rebuild_group(
+    protected: &[u8],
+    blobs: &[u8],
+    grp: usize,
+    g: usize,
+    n: usize,
+    stripe: usize,
+    m: usize,
+    erased: &[usize],
+) -> Result<Vec<(usize, Vec<u8>)>> {
+    let k = erased.len();
+    if k == 0 || k > m || m > MAX_RS_PARITY_SHARDS {
+        return Err(Error::Sdc("erasure count outside the parity budget".into()));
+    }
+    let pos: Vec<usize> = erased.iter().map(|&s| s / g).collect();
+    // syndromes: start from the first k parity rows of this group
+    let mut synd: Vec<Vec<u8>> = Vec::new();
+    for j in 0..k {
+        let row = blobs
+            .get((grp * m + j) * stripe..(grp * m + j + 1) * stripe)
+            .ok_or_else(|| Error::Sdc("parity blob out of range — unrecoverable".into()))?;
+        synd.push(row.to_vec());
+    }
+    // … minus the contribution of every intact member stripe
+    let mut i = grp;
+    while i < n {
+        let t = i / g;
+        if !pos.contains(&t) {
+            let src = stripe_of(protected, i, stripe);
+            for (j, row) in synd.iter_mut().enumerate() {
+                let coef = gf_pow_alpha(t * j);
+                if coef == 1 {
+                    for (d, &b) in row.iter_mut().zip(src) {
+                        *d ^= b;
+                    }
+                } else {
+                    for (d, &b) in row.iter_mut().zip(src) {
+                        *d ^= gf_mul(coef, b);
+                    }
+                }
+            }
+        }
+        i += g;
+    }
+    // Gaussian elimination on the k×k Vandermonde, syndromes as the
+    // augmented columns (k ≤ MAX_RS_PARITY_SHARDS keeps this tiny)
+    let mut mat = [[0u8; MAX_RS_PARITY_SHARDS]; MAX_RS_PARITY_SHARDS];
+    for (j, row) in mat.iter_mut().take(k).enumerate() {
+        for (idx, &p) in pos.iter().enumerate() {
+            row[idx] = gf_pow_alpha(p * j);
+        }
+    }
+    for col in 0..k {
+        let piv = (col..k)
+            .find(|&r| mat[r][col] != 0)
+            .ok_or_else(|| Error::Sdc("parity erasure system is singular — unrecoverable".into()))?;
+        mat.swap(col, piv);
+        synd.swap(col, piv);
+        let inv = gf_inv(mat[col][col]);
+        for c in 0..k {
+            mat[col][c] = gf_mul(mat[col][c], inv);
+        }
+        for d in &mut synd[col] {
+            *d = gf_mul(*d, inv);
+        }
+        let (pivot_mat, pivot_row) = (mat[col], synd[col].clone());
+        for r in 0..k {
+            if r == col || mat[r][col] == 0 {
+                continue;
+            }
+            let f = mat[r][col];
+            for c in 0..k {
+                mat[r][c] ^= gf_mul(f, pivot_mat[c]);
+            }
+            for (d, &b) in synd[r].iter_mut().zip(&pivot_row) {
+                *d ^= gf_mul(f, b);
+            }
+        }
+    }
+    Ok(erased.iter().zip(synd).map(|(&s, row)| (s, row)).collect())
 }
 
 /// Outcome of one [`scrub`]/[`scrub_file`] pass.
@@ -390,12 +710,24 @@ mod tests {
     fn cfg_v2() -> CompressionConfig {
         CompressionConfig::new(ErrorBound::Abs(1e-3))
             .with_block_size(4)
-            .with_archive_parity(ParityParams { stripe_len: 64, group_width: 8 })
+            .with_archive_parity(ParityParams::xor(64, 8))
     }
 
     fn sample_v2() -> (Vec<f32>, Vec<u8>) {
         let f = synthetic::hurricane_field("t", Dims::d3(6, 8, 8), 5);
         let bytes = ft::compress(&f.data, f.dims, &cfg_v2()).unwrap();
+        (f.data, bytes)
+    }
+
+    fn cfg_rs(shards: u8) -> CompressionConfig {
+        CompressionConfig::new(ErrorBound::Abs(1e-3))
+            .with_block_size(4)
+            .with_archive_parity(ParityParams::rs(64, 8, shards))
+    }
+
+    fn sample_rs(shards: u8) -> (Vec<f32>, Vec<u8>) {
+        let f = synthetic::hurricane_field("t", Dims::d3(6, 8, 8), 5);
+        let bytes = ft::compress(&f.data, f.dims, &cfg_rs(shards)).unwrap();
         (f.data, bytes)
     }
 
@@ -514,7 +846,7 @@ mod tests {
 
     #[test]
     fn codec_layout_roundtrip() {
-        let p = ParityParams { stripe_len: 16, group_width: 2 };
+        let p = ParityParams::xor(16, 2);
         let data: Vec<u8> = (0..100u8).collect();
         let body = build(&data, &p);
         let n = p.n_stripes(data.len());
@@ -589,8 +921,152 @@ mod tests {
     #[test]
     fn params_validation() {
         assert!(ParityParams::default().validate().is_ok());
-        assert!(ParityParams { stripe_len: 8, group_width: 8 }.validate().is_err());
-        assert!(ParityParams { stripe_len: 64, group_width: 1 }.validate().is_err());
-        assert!(ParityParams { stripe_len: 1 << 21, group_width: 8 }.validate().is_err());
+        assert!(ParityParams::xor(8, 8).validate().is_err());
+        assert!(ParityParams::xor(64, 1).validate().is_err());
+        assert!(ParityParams::xor(1 << 21, 8).validate().is_err());
+        assert!(ParityParams::default_rs().validate().is_ok());
+        assert!(ParityParams::rs(64, 8, 1).validate().is_err(), "1 shard is XOR's job");
+        assert!(ParityParams::rs(64, 8, 9).validate().is_err(), "past MAX_RS_PARITY_SHARDS");
+        assert!(
+            ParityParams::rs(64, 256, 2).validate().is_err(),
+            "RS group membership must fit GF(2^8)'s 255 evaluation points"
+        );
+    }
+
+    #[test]
+    fn gf_field_axioms_hold() {
+        let mut rng = Pcg32::new(99);
+        for _ in 0..2000 {
+            let (a, b, c) = (rng.index(256) as u8, rng.index(256) as u8, rng.index(256) as u8);
+            assert_eq!(gf_mul(a, gf_mul(b, c)), gf_mul(gf_mul(a, b), c));
+            assert_eq!(gf_mul(a, b ^ c), gf_mul(a, b) ^ gf_mul(a, c));
+            if a != 0 {
+                assert_eq!(gf_mul(a, gf_inv(a)), 1);
+            }
+        }
+        assert_eq!(gf_pow_alpha(0), 1);
+        assert_eq!(gf_pow_alpha(1), 2);
+        assert_eq!(gf_pow_alpha(255), 1, "α has order 255");
+    }
+
+    #[test]
+    fn geometry_words_roundtrip_and_keep_xor_unchanged() {
+        for p in [
+            ParityParams::xor(16, 2),
+            ParityParams::default(),
+            ParityParams::xor(1 << 20, 1 << 16),
+            ParityParams::rs(16, 2, 2),
+            ParityParams::default_rs(),
+            ParityParams::rs(1 << 20, 255, 8),
+        ] {
+            let (w0, w1) = p.encode_geometry();
+            assert_eq!(ParityParams::decode_geometry(w0, w1).unwrap(), p);
+        }
+        // XOR words are the raw pair: the pre-RS wire layout, bit for bit
+        assert_eq!(ParityParams::xor(512, 64).encode_geometry(), (512, 64));
+        // hostile high bits are clean errors, never misread
+        for (w0, w1) in [
+            (64 | (2 << 24), 8),          // unknown code tag
+            (64 | (1 << 24), 8),          // RS tag but zero shards
+            (64, 8 | (1 << 20)),          // shards without the RS tag
+            (64 | (1 << 24), 8 | (1 << 20)), // one shard: XOR's job
+            (64 | (1 << 24), 8 | (9 << 20)), // past MAX_RS_PARITY_SHARDS
+        ] {
+            assert!(ParityParams::decode_geometry(w0, w1).is_err(), "{w0:#x}/{w1:#x}");
+        }
+    }
+
+    #[test]
+    fn rs_build_with_one_row_is_not_emitted_but_row0_matches_xor() {
+        // RS row 0 uses coefficient α^0 = 1 everywhere, so for any data the
+        // first parity row of each group must equal the XOR blob — the two
+        // codes share one build loop and this pins that equivalence
+        let data: Vec<u8> = (0..=255u8).chain(0..=99).collect();
+        let x = ParityParams::xor(16, 4);
+        let r = ParityParams::rs(16, 4, 3);
+        let bx = build(&data, &x);
+        let br = build(&data, &r);
+        let n = x.n_stripes(data.len());
+        let g = x.n_groups(n);
+        let (hx, hr) = (8 + 4 * n, 8 + 4 * n);
+        assert_eq!(bx[..hx], br[..hr], "counts + CRC table identical");
+        for grp in 0..g {
+            assert_eq!(
+                bx[hx + grp * 16..hx + (grp + 1) * 16],
+                br[hr + (grp * 3) * 16..hr + (grp * 3 + 1) * 16],
+                "group {grp} row 0"
+            );
+        }
+    }
+
+    #[test]
+    fn rs_repairs_up_to_m_stripes_in_one_group() {
+        for shards in [2u8, 3] {
+            let (_, good) = sample_rs(shards);
+            let pre = format::read_v2_prelude(&good).unwrap();
+            let stripe = pre.params.stripe_len as usize;
+            let n = pre.params.n_stripes(pre.protected_len());
+            let g = pre.params.n_groups(n);
+            // need `shards` members of group 0: stripes 0, g, 2g, …
+            assert!(n > g * (shards as usize - 1), "archive too small: {n} stripes");
+            let mut bad = good.clone();
+            for t in 0..shards as usize {
+                bad[V2_BODY_START + t * g * stripe] ^= 0x5A;
+            }
+            match recover(&bad).unwrap() {
+                Recovery::Repaired { bytes, report } => {
+                    assert_eq!(bytes, good, "RS({shards}) repair not exact");
+                    assert_eq!(report.stripes_repaired.len(), shards as usize);
+                }
+                other => panic!("expected RS({shards}) repair, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn rs_beyond_budget_is_detected_unrecoverable() {
+        let (_, good) = sample_rs(2);
+        let pre = format::read_v2_prelude(&good).unwrap();
+        let stripe = pre.params.stripe_len as usize;
+        let n = pre.params.n_stripes(pre.protected_len());
+        let g = pre.params.n_groups(n);
+        assert!(n > 2 * g, "archive too small: {n} stripes, {g} groups");
+        let mut bad = good.clone();
+        for t in 0..3 {
+            bad[V2_BODY_START + t * g * stripe] ^= 0x5A;
+        }
+        assert!(matches!(recover(&bad), Err(Error::Sdc(_))));
+        assert!(parse_recovering(&bad).is_err(), "never silent past the budget");
+    }
+
+    #[test]
+    fn rs_random_multi_damage_trichotomy() {
+        let (orig, good) = sample_rs(3);
+        let mut rng = Pcg32::new(4242);
+        for _ in 0..40 {
+            let mut bad = good.clone();
+            // up to three random bursts anywhere in the archive
+            for _ in 0..1 + rng.index(3) {
+                let off = rng.index(bad.len().saturating_sub(9));
+                for b in bad[off..off + 9].iter_mut() {
+                    *b ^= 0xC3;
+                }
+            }
+            if let Ok(dec) = ft::decompress(&bad) {
+                let max = crate::analysis::max_abs_err(&orig, &dec.data);
+                assert!(max <= 1e-3, "silent SDC under multi-burst: err {max}");
+            }
+        }
+    }
+
+    #[test]
+    fn rs_archive_decodes_identically_to_xor_archive() {
+        let f = synthetic::hurricane_field("t", Dims::d3(6, 8, 8), 5);
+        let x = ft::compress(&f.data, f.dims, &cfg_v2()).unwrap();
+        let r = ft::compress(&f.data, f.dims, &cfg_rs(3)).unwrap();
+        let dx = ft::decompress(&x).unwrap();
+        let dr = ft::decompress(&r).unwrap();
+        assert_eq!(dx.data, dr.data, "parity code must not affect decoded values");
+        assert!(r.len() > x.len(), "RS carries more parity rows than XOR");
     }
 }

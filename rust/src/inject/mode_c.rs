@@ -34,6 +34,17 @@ pub enum ArchiveFault {
         /// Burst length in bytes.
         len: usize,
     },
+    /// Geometry-aware multi-stripe damage: corrupt `stripes` *distinct
+    /// member stripes of one parity group* in the protected region — the
+    /// coordinated at-rest damage XOR parity cannot heal (it rebuilds one
+    /// stripe per group) but a Reed–Solomon code with `parity_shards >=
+    /// stripes` can. The strike reads the archive's own voted geometry,
+    /// so campaigns prove the trichotomy at exactly the geometry under
+    /// test; non-v2 bytes fall back to a small [`ArchiveFault::Burst`].
+    GroupBurst {
+        /// Damaged member stripes in the chosen group.
+        stripes: usize,
+    },
 }
 
 /// Where a strike landed (for assertions and reporting).
@@ -63,7 +74,66 @@ pub fn strike(archive: &mut [u8], rng: &mut Pcg32, fault: ArchiveFault) -> Strik
             }
             Strike { offset, len }
         }
+        ArchiveFault::GroupBurst { stripes } => match strike_group(archive, rng, stripes) {
+            Some(s) => s,
+            // not a parseable v2 archive — no geometry to aim at
+            None => strike(archive, rng, ArchiveFault::Burst { len: 9 }),
+        },
     }
+}
+
+/// Corrupt up to `want` distinct member stripes of one parity group
+/// (each hit is a ≤ 3-byte in-stripe burst, so damage never spans a
+/// stripe boundary). Prefers a group with at least `want` members.
+/// Returns `None` for bytes the voted v2 prelude cannot parse.
+fn strike_group(archive: &mut [u8], rng: &mut Pcg32, want: usize) -> Option<Strike> {
+    let pre = crate::compressor::format::read_v2_prelude(archive).ok()?;
+    let p = pre.params;
+    let stripe = p.stripe_len as usize;
+    let protected_len = pre.protected_len();
+    let base = pre.section_start(0);
+    let n = p.n_stripes(protected_len);
+    let g = p.n_groups(n);
+    if n == 0 || g == 0 || archive.len() < base + protected_len {
+        return None;
+    }
+    let want = want.max(1);
+    // members of group `grp` are stripes grp, grp+g, grp+2g, … < n
+    let members_of = |grp: usize| if grp < n { (n - grp).div_ceil(g) } else { 0 };
+    let mut grp = rng.index(g);
+    for _ in 0..g {
+        if members_of(grp) >= want {
+            break;
+        }
+        grp = (grp + 1) % g;
+    }
+    let count = members_of(grp);
+    let take = want.min(count);
+    if take == 0 {
+        return None;
+    }
+    // Fisher–Yates prefix: `take` distinct member positions
+    let mut positions: Vec<usize> = (0..count).collect();
+    for i in 0..take {
+        let j = i + rng.index(count - i);
+        positions.swap(i, j);
+    }
+    let mut first = usize::MAX;
+    let mut total = 0usize;
+    for &t in positions.iter().take(take) {
+        let s = grp + t * g;
+        let start = s * stripe;
+        let end = protected_len.min(start + stripe);
+        let span = (end - start).min(3);
+        let off = base + start + rng.index(end - start - span + 1);
+        for b in archive[off..off + span].iter_mut() {
+            let mask = (rng.next_u32() & 0xFF) as u8;
+            *b ^= if mask == 0 { 1 } else { mask };
+        }
+        first = first.min(off);
+        total += span;
+    }
+    Some(Strike { offset: first, len: total })
 }
 
 /// Tally of one mode-C campaign.
@@ -179,7 +249,7 @@ mod tests {
     fn cfg(parity: bool) -> CompressionConfig {
         let c = CompressionConfig::new(ErrorBound::Abs(1e-3)).with_block_size(4);
         if parity {
-            c.with_archive_parity(ParityParams { stripe_len: 64, group_width: 8 })
+            c.with_archive_parity(ParityParams::xor(64, 8))
         } else {
             c
         }
@@ -269,6 +339,103 @@ mod tests {
         assert_eq!(tally.trials, 100);
         let sum: usize = tally.counts.values().sum();
         assert_eq!(sum, 100);
+    }
+
+    #[test]
+    fn rs_group_burst_campaign_heals_multi_stripe_damage() {
+        // RS with 3 parity rows: coordinated 2- and 3-stripe damage in
+        // one group must be corrected — and no trial may ever be silent
+        let (data, dims) = field();
+        let cfg = CompressionConfig::new(ErrorBound::Abs(1e-3))
+            .with_block_size(4)
+            .with_archive_parity(ParityParams::rs(64, 8, 3));
+        for stripes in [2usize, 3] {
+            let tally = campaign(
+                Engine::FaultTolerant,
+                &data,
+                dims,
+                &cfg,
+                40,
+                ArchiveFault::GroupBurst { stripes },
+                1,
+                5,
+            )
+            .unwrap();
+            assert_eq!(
+                tally.count(ArchiveOutcome::SilentSdc),
+                0,
+                "{stripes}-stripe group burst produced silent SDC"
+            );
+            assert!(
+                tally.corrected_rate() >= 0.95,
+                "{stripes}-stripe bursts corrected only {:.1}%",
+                100.0 * tally.corrected_rate()
+            );
+            assert!(
+                tally.parity_repaired_trials >= 38,
+                "{stripes}-stripe bursts: only {} trials surfaced repairs",
+                tally.parity_repaired_trials
+            );
+            // every repaired trial rebuilt at least `stripes` stripes
+            assert!(tally.stripes_rebuilt >= stripes * tally.parity_repaired_trials);
+        }
+    }
+
+    #[test]
+    fn group_burst_beyond_budget_is_clean_error_never_silent() {
+        let (data, dims) = field();
+        // XOR heals one stripe per group: a 2-stripe group burst is
+        // beyond budget. RS with 2 rows: a 3-stripe burst is beyond.
+        for (params, stripes) in [
+            (ParityParams::xor(64, 8), 2usize),
+            (ParityParams::rs(64, 8, 2), 3),
+        ] {
+            let cfg = CompressionConfig::new(ErrorBound::Abs(1e-3))
+                .with_block_size(4)
+                .with_archive_parity(params);
+            let tally = campaign(
+                Engine::FaultTolerant,
+                &data,
+                dims,
+                &cfg,
+                40,
+                ArchiveFault::GroupBurst { stripes },
+                1,
+                6,
+            )
+            .unwrap();
+            assert_eq!(
+                tally.count(ArchiveOutcome::SilentSdc),
+                0,
+                "beyond-budget {stripes}-stripe burst went silent under {params:?}"
+            );
+            assert_eq!(
+                tally.count(ArchiveOutcome::CleanError),
+                40,
+                "beyond-budget {stripes}-stripe burst must always be a clean error \
+                 under {params:?}: {:?}",
+                tally.counts
+            );
+        }
+    }
+
+    #[test]
+    fn group_burst_on_v1_bytes_falls_back_without_panicking() {
+        // no v2 prelude to aim at: the strike degrades to a small burst
+        let (data, dims) = field();
+        let tally = campaign(
+            Engine::FaultTolerant,
+            &data,
+            dims,
+            &cfg(false),
+            30,
+            ArchiveFault::GroupBurst { stripes: 2 },
+            1,
+            7,
+        )
+        .unwrap();
+        assert_eq!(tally.trials, 30);
+        assert_eq!(tally.counts.values().sum::<usize>(), 30);
     }
 
     #[test]

@@ -10,9 +10,10 @@ pub use posix::FilePerProcess;
 
 /// Stamp one on-disk file version as (mtime in nanoseconds since the
 /// Unix epoch, byte length). The serving layer's open-archive cache
-/// ([`crate::compressor::store`]) keys parsed archives on this pair so a
-/// scrubbed or rewritten file invalidates cleanly; pre-epoch mtimes
-/// collapse to 0 (the length still disambiguates most rewrites there).
+/// ([`crate::compressor::store`]) folds a content CRC over the header and
+/// tail windows on top of this pair so even a same-length rewrite within
+/// one mtime tick invalidates cleanly; pre-epoch mtimes collapse to 0
+/// (the length still disambiguates most rewrites there).
 pub fn file_generation(path: &std::path::Path) -> std::io::Result<(u128, u64)> {
     let md = std::fs::metadata(path)?;
     let mtime_ns = md

@@ -284,8 +284,9 @@
 //! fails again; and for non-FT archives a flipped Huffman bit can decode
 //! to plausible garbage. Archive parity is the designed answer: format v2
 //! stores a triplicated (voting) header, per-section and per-stripe
-//! CRC32s, and interleaved XOR parity groups, and every decode path heals
-//! the bytes via [`ft::parity::recover`] before touching them:
+//! CRC32s, and interleaved parity groups — plain XOR by default, or a
+//! GF(2^8) Reed–Solomon erasure code — and every decode path heals the
+//! bytes via [`ft::parity::recover`] before touching them:
 //!
 //! ```no_run
 //! use ftsz::compressor::{CompressionConfig, ErrorBound};
@@ -301,9 +302,31 @@
 //! # let _ = restored;
 //! ```
 //!
-//! Damage beyond the parity budget (two stripes of one group) is still
-//! *detected* and reported as a clean error — never silently decoded. The
-//! `inject::mode_c` campaign measures exactly this trichotomy.
+//! **Choosing a code.** The voted header carries the parity geometry, so
+//! decode dispatch is data-driven and archives stay self-describing —
+//! readers never guess. XOR is the fast default; Reed–Solomon
+//! ([`ft::parity::ParityCode::Rs`], CLI `--parity-code rs`) spends more
+//! parity rows per group to survive *coordinated* multi-stripe damage:
+//!
+//! | code          | parity rows/group | heals per group     | size overhead    |
+//! |---------------|-------------------|---------------------|------------------|
+//! | `xor` (default) | 1               | any 1 damaged stripe | ~`1/group_width` |
+//! | `rs` (m = 2..=8)| m               | any m damaged stripes| ~`m/group_width` |
+//!
+//! Damage beyond the parity budget (more damaged stripes in one group
+//! than the code has parity rows) is still *detected* and reported as a
+//! clean error — never silently decoded. The `inject::mode_c` campaigns
+//! (including the geometry-aware `GroupBurst` fault) measure exactly this
+//! trichotomy at every geometry.
+//!
+//! **Retrofitting protection.** Existing v1 archives don't need to be
+//! recompressed to gain it: [`compressor::format::transcode_v1_to_v2`]
+//! (CLI: `ftsz transcode old.ftsz --parity-code rs`) rewraps the stored
+//! section bytes verbatim — same decoded bits, compression work reused —
+//! and only computes the new header and parity section. A fleet of
+//! archives is kept healthy in place by `ftsz scrub --fleet DIR`
+//! ([`compressor::store::fleet::scrub_fleet`]): walk, classify, heal
+//! most-damaged-first, and emit a machine-readable health report.
 //!
 //! ## Serving layer: `ArchiveStore` + `ftsz serve`
 //!
@@ -334,8 +357,10 @@
 //!
 //! **Cache-coherence guarantees.** Entries are keyed by an open-archive
 //! instance id minted per *(path, generation)* — generation being the
-//! file's (mtime, length) — so a `scrub` rewrite or any other file
-//! replacement drops the stale parse and every cached block with it: a
+//! file's (mtime, length, content stamp) triple, the stamp a CRC over the
+//! header and tail windows so even a same-length rewrite within one mtime
+//! tick changes it — so a `scrub` rewrite or any other file replacement
+//! drops the stale parse and every cached block with it: a
 //! corrupted-then-rewritten archive is re-verified, never served
 //! stale-silent. **Verified-vs-unverified semantics:** the Algorithm 2
 //! verified bit is part of the cache key, so an unverified decode can

@@ -82,10 +82,17 @@ pub fn handle_conn<R: Read, W: Write>(store: &ArchiveStore, r: R, w: W) -> Resul
             }
             Ok(protocol::Request::Stats) => {
                 let s = store.stats();
+                // hit_ratio is 0 (never NaN) before the first query —
+                // see CacheStats::hit_ratio
                 writeln!(
                     w,
-                    "STATS open={} entries={} bytes={} hits={} misses={}",
-                    s.open_archives, s.cache.entries, s.cache.bytes, s.cache.hits, s.cache.misses
+                    "STATS open={} entries={} bytes={} hits={} misses={} hit_ratio={:.3}",
+                    s.open_archives,
+                    s.cache.entries,
+                    s.cache.bytes,
+                    s.cache.hits,
+                    s.cache.misses,
+                    s.cache.hit_ratio()
                 )?;
             }
             Ok(protocol::Request::Ping) => writeln!(w, "PONG")?,
@@ -268,9 +275,12 @@ impl Metrics {
     }
 }
 
+/// Percentile over a sorted sample; an empty sample reports 0 (a
+/// zero-query bench must print zeros, not NaN — NaN also vanishes from
+/// the JSON sink, which drops non-finite values).
 fn percentile_ms(sorted: &[f64], p: usize) -> f64 {
     if sorted.is_empty() {
-        return f64::NAN;
+        return 0.0;
     }
     sorted[(sorted.len() * p / 100).min(sorted.len() - 1)]
 }
@@ -365,7 +375,9 @@ fn run_bench_in(opts: &BenchOptions, dir: &Path) -> Result<bool> {
     let warm_p50 = percentile_ms(&warm_ms, 50);
     let warm_p99 = percentile_ms(&warm_ms, 99);
     let hit_ratio = store.stats().cache.hit_ratio();
-    let warm_speedup = cold_p50 / warm_p50;
+    // 0/0 (no timed queries, or both p50s under the clock resolution)
+    // must report 0, not NaN
+    let warm_speedup = if warm_p50 > 0.0 { cold_p50 / warm_p50 } else { 0.0 };
     m.put("serve.warm.p50_ms", warm_p50);
     m.put("serve.warm.p99_ms", warm_p99);
     m.put("serve.warm_speedup", warm_speedup);
@@ -496,6 +508,18 @@ mod tests {
         let mut out = Vec::new();
         handle_conn(store, std::io::Cursor::new(input.into_bytes()), &mut out).unwrap();
         out
+    }
+
+    #[test]
+    fn stats_before_any_query_reports_zero_not_nan() {
+        // zero-query edge: hit_ratio must be a plain 0.000, never NaN
+        let store = ArchiveStore::with_defaults();
+        let out = run_session(&store, "STATS\nQUIT\n".to_string());
+        let text = String::from_utf8(out).unwrap();
+        let stats = text.lines().next().unwrap();
+        assert!(stats.starts_with("STATS open=0 "), "{stats}");
+        assert!(stats.ends_with(" hit_ratio=0.000"), "{stats}");
+        assert!(!stats.contains("NaN"), "{stats}");
     }
 
     #[test]

@@ -132,7 +132,7 @@ fn differential_all_engines_workers_and_formats() {
             let mut cfg =
                 CompressionConfig::new(ErrorBound::Abs(bound)).with_block_size(4);
             if parity {
-                cfg = cfg.with_archive_parity(ParityParams { stripe_len: 64, group_width: 8 });
+                cfg = cfg.with_archive_parity(ParityParams::xor(64, 8));
             }
             for e in Engine::ALL {
                 let codec = e.codec();
@@ -210,7 +210,7 @@ fn differential_bitpack_mode_on_the_xsz_engines() {
                 .with_block_size(4)
                 .with_xsz_bitpack(true);
             if parity {
-                cfg = cfg.with_archive_parity(ParityParams { stripe_len: 64, group_width: 8 });
+                cfg = cfg.with_archive_parity(ParityParams::xor(64, 8));
             }
             let mut pair_bits: Vec<Vec<u32>> = Vec::new();
             for e in [Engine::UltraFast, Engine::UltraFastFT] {

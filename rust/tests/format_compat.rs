@@ -26,7 +26,7 @@ fn sample_archive() -> Vec<u8> {
 fn sample_archive_v2() -> Vec<u8> {
     let f = sample_field();
     let cfg = sample_cfg()
-        .with_archive_parity(ParityParams { stripe_len: 128, group_width: 16 });
+        .with_archive_parity(ParityParams::xor(128, 16));
     ft::compress(&f.data, f.dims, &cfg).unwrap()
 }
 
@@ -141,7 +141,7 @@ fn v1_and_v2_decode_bitwise_identically() {
     assert_eq!(u32::from_le_bytes(v2[4..8].try_into().unwrap()), format::VERSION_V2);
     let a = format::parse(&v2).unwrap();
     assert!(a.header.has_archive_parity());
-    assert_eq!(a.parity, Some(ParityParams { stripe_len: 128, group_width: 16 }));
+    assert_eq!(a.parity, Some(ParityParams::xor(128, 16)));
     let d1 = ft::decompress(&v1).unwrap();
     let d2 = ft::decompress(&v2).unwrap();
     assert_eq!(
@@ -198,7 +198,7 @@ fn v2_region_decode_and_classic_roundtrip() {
     // the parity layer is engine-agnostic: rsz region decode and the
     // classic engine both ride on the same recovery pass
     let f = sample_field();
-    let cfg = sample_cfg().with_archive_parity(ParityParams { stripe_len: 64, group_width: 8 });
+    let cfg = sample_cfg().with_archive_parity(ParityParams::xor(64, 8));
     let rsz = engine::compress(&f.data, f.dims, &cfg).unwrap();
     let region = ftsz::compressor::block::Region { origin: (1, 2, 3), shape: (4, 5, 6) };
     let clean_region = engine::decompress_region(&rsz, region).unwrap();
@@ -229,4 +229,133 @@ fn unpred_counts_validated() {
         }
     }
     assert!(seen_reject, "no corruption was ever rejected?");
+}
+
+// ---------------------------------------------------------------------
+// v1 → v2 transcode: wrap existing archives in protection without
+// recompressing a single section byte
+// ---------------------------------------------------------------------
+
+fn compress_any(e: ftsz::inject::Engine, cfg: &CompressionConfig) -> Vec<u8> {
+    let f = sample_field();
+    match e {
+        ftsz::inject::Engine::Classic => classic::compress(&f.data, f.dims, cfg).unwrap(),
+        ftsz::inject::Engine::RandomAccess => engine::compress(&f.data, f.dims, cfg).unwrap(),
+        ftsz::inject::Engine::FaultTolerant => ft::compress(&f.data, f.dims, cfg).unwrap(),
+        ftsz::inject::Engine::UltraFast => {
+            ftsz::compressor::xsz::compress(&f.data, f.dims, cfg).unwrap()
+        }
+        ftsz::inject::Engine::UltraFastFT => {
+            ftsz::compressor::xsz::compress_ft(&f.data, f.dims, cfg).unwrap()
+        }
+    }
+}
+
+fn decompress_any_bits(e: ftsz::inject::Engine, bytes: &[u8]) -> Vec<u32> {
+    let data = match e {
+        ftsz::inject::Engine::Classic => classic::decompress(bytes).unwrap().data,
+        ftsz::inject::Engine::RandomAccess | ftsz::inject::Engine::UltraFast => {
+            engine::decompress(bytes).unwrap().data
+        }
+        ftsz::inject::Engine::FaultTolerant | ftsz::inject::Engine::UltraFastFT => {
+            ft::decompress(bytes).unwrap().data
+        }
+    };
+    data.iter().map(|v| v.to_bits()).collect()
+}
+
+/// Concatenated bodies of the four v1 sections (meta, unpred, payload,
+/// ft), extracted straight from the v1 framing: 61-byte fixed header,
+/// then four `len u64 | body` records.
+fn v1_section_bodies(v1: &[u8]) -> Vec<u8> {
+    let mut at = 61usize;
+    let mut out = Vec::new();
+    for _ in 0..4 {
+        let len =
+            u64::from_le_bytes(v1[at..at + 8].try_into().unwrap()) as usize;
+        at += 8;
+        out.extend_from_slice(&v1[at..at + len]);
+        at += len;
+    }
+    assert_eq!(at, v1.len(), "v1 framing: trailing bytes");
+    out
+}
+
+#[test]
+fn transcode_matrix_all_engines_bit_identical_without_recompression() {
+    for e in ftsz::inject::Engine::ALL {
+        let v1 = compress_any(e, &sample_cfg());
+        assert_eq!(u32::from_le_bytes(v1[4..8].try_into().unwrap()), format::VERSION);
+        let want = decompress_any_bits(e, &v1);
+        let bodies = v1_section_bodies(&v1);
+        for params in [ParityParams::xor(128, 16), ParityParams::rs(128, 16, 3)] {
+            let v2 = format::transcode_v1_to_v2(&v1, params).unwrap();
+            assert_eq!(
+                u32::from_le_bytes(v2[4..8].try_into().unwrap()),
+                format::VERSION_V2,
+                "{} {params:?}",
+                e.name()
+            );
+            let parsed = format::parse(&v2).unwrap();
+            assert!(parsed.header.has_archive_parity());
+            assert_eq!(parsed.parity, Some(params), "{}", e.name());
+            // bit-identical decode through the engine's own path
+            assert_eq!(decompress_any_bits(e, &v2), want, "{} {params:?}", e.name());
+            // no recompression: the v1 section bodies appear verbatim as
+            // one contiguous run inside the v2 archive
+            assert!(
+                v2.windows(bodies.len()).any(|w| w == &bodies[..]),
+                "{} {params:?}: transcoded archive does not reuse the v1 section bytes",
+                e.name()
+            );
+            // the wrapped archive actually protects: a mid-archive flip
+            // heals back to the same bits
+            let mut damaged = v2.clone();
+            damaged[v2.len() / 2] ^= 0x20;
+            assert_eq!(decompress_any_bits(e, &damaged), want, "{} {params:?}", e.name());
+        }
+    }
+}
+
+#[test]
+fn transcoded_rs_archive_heals_multi_stripe_damage() {
+    let v1 = sample_archive();
+    let want = ft::decompress(&v1).unwrap().data;
+    let v2 = format::transcode_v1_to_v2(&v1, ParityParams::rs(64, 8, 3)).unwrap();
+    let mut rng = Pcg32::new(77);
+    for trial in 0..20 {
+        let mut bad = v2.clone();
+        ftsz::inject::mode_c::strike(
+            &mut bad,
+            &mut rng,
+            ftsz::inject::mode_c::ArchiveFault::GroupBurst { stripes: 3 },
+        );
+        assert_ne!(bad, v2, "trial {trial}: strike was a no-op");
+        let dec = ft::decompress(&bad).unwrap();
+        assert_eq!(
+            dec.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            want.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            "trial {trial}: 3-stripe damage not healed exactly"
+        );
+    }
+}
+
+#[test]
+fn transcode_rejects_v2_garbage_and_trailing_bytes() {
+    let params = ParityParams::default();
+    // already-protected input: refuse rather than double-wrap
+    assert!(format::transcode_v1_to_v2(&sample_archive_v2(), params).is_err());
+    // garbage and truncation
+    assert!(format::transcode_v1_to_v2(&[], params).is_err());
+    assert!(format::transcode_v1_to_v2(b"NOPE0000", params).is_err());
+    let v1 = sample_archive();
+    assert!(format::transcode_v1_to_v2(&v1[..v1.len() - 3], params).is_err());
+    // trailing junk after the sections must not be silently dropped
+    let mut padded = v1.clone();
+    padded.extend_from_slice(b"\0\0\0");
+    assert!(format::transcode_v1_to_v2(&padded, params).is_err());
+    // the transcoded output itself round-trips through parse + scrub clean
+    let v2 = format::transcode_v1_to_v2(&v1, params).unwrap();
+    let (outcome, _) = ftsz::ft::parity::scrub(&v2).unwrap();
+    assert!(matches!(outcome, ftsz::ft::parity::ScrubOutcome::Clean));
 }

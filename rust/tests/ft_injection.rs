@@ -388,7 +388,7 @@ fn mode_c_campaign_holds_the_trichotomy_for_ftxsz() {
     let f = synthetic::hurricane_field("t", Dims::d3(6, 8, 8), 9);
     let cfg = CompressionConfig::new(ErrorBound::Abs(1e-3))
         .with_block_size(4)
-        .with_archive_parity(ParityParams { stripe_len: 64, group_width: 8 });
+        .with_archive_parity(ParityParams::xor(64, 8));
     for engine in [Engine::UltraFast, Engine::UltraFastFT] {
         let tally =
             campaign(engine, &f.data, f.dims, &cfg, 150, ArchiveFault::BitFlip, 1, 1).unwrap();
@@ -493,7 +493,7 @@ fn mode_c_campaign_holds_the_trichotomy_for_ftxsz_bitpack() {
     let cfg = CompressionConfig::new(ErrorBound::Abs(1e-3))
         .with_block_size(4)
         .with_xsz_bitpack(true)
-        .with_archive_parity(ParityParams { stripe_len: 64, group_width: 8 });
+        .with_archive_parity(ParityParams::xor(64, 8));
     for engine in [Engine::UltraFast, Engine::UltraFastFT] {
         let tally =
             campaign(engine, &f.data, f.dims, &cfg, 150, ArchiveFault::BitFlip, 1, 1).unwrap();

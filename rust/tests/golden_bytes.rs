@@ -32,7 +32,7 @@ fn field() -> (Vec<f32>, Dims) {
 fn cfg(parity: bool) -> CompressionConfig {
     let c = CompressionConfig::new(ErrorBound::Abs(1e-3)).with_block_size(4);
     if parity {
-        c.with_archive_parity(ParityParams { stripe_len: 64, group_width: 8 })
+        c.with_archive_parity(ParityParams::xor(64, 8))
     } else {
         c
     }

@@ -40,7 +40,7 @@ fn field() -> Field {
 fn cfg(parity: bool) -> CompressionConfig {
     let c = CompressionConfig::new(ErrorBound::Abs(1e-3)).with_block_size(6);
     if parity {
-        c.with_archive_parity(ParityParams { stripe_len: 64, group_width: 8 })
+        c.with_archive_parity(ParityParams::xor(64, 8))
     } else {
         c
     }

@@ -315,7 +315,7 @@ fn prop_unified_codec_dispatch_all_engines() {
             CompressionConfig::new(ErrorBound::Abs(1e-3)).with_block_size(g.usize_in(2, 8));
         let parity = g.usize_in(0, 1) == 1;
         if parity {
-            cfg = cfg.with_archive_parity(ParityParams { stripe_len: 64, group_width: 8 });
+            cfg = cfg.with_archive_parity(ParityParams::xor(64, 8));
         }
         let (d, r, c) = dims.as_3d();
         let oz = g.usize_in(0, d - 1);
@@ -449,7 +449,7 @@ fn prop_streaming_equals_in_memory_all_engines() {
         let mut cfg =
             CompressionConfig::new(ErrorBound::Abs(1e-3)).with_block_size(g.usize_in(2, 8));
         if g.usize_in(0, 1) == 1 {
-            cfg = cfg.with_archive_parity(ParityParams { stripe_len: 64, group_width: 8 });
+            cfg = cfg.with_archive_parity(ParityParams::xor(64, 8));
         }
         for e in Engine::ALL {
             let codec = e.codec();

@@ -14,11 +14,10 @@
 //! * **concurrency** — ≥ 4 threads hammering one store stay byte-identical
 //!   to the sequential baselines.
 
-use std::path::{Path, PathBuf};
-use std::time::Duration;
+use std::path::PathBuf;
 
 use ftsz::compressor::block::Region;
-use ftsz::compressor::store::{ArchiveStore, Generation, StoreConfig};
+use ftsz::compressor::store::{fleet, ArchiveStore, Generation, StoreConfig};
 use ftsz::compressor::{classic, engine, CompressionConfig, ErrorBound, Parallelism};
 use ftsz::data::{synthetic, Dims, Field};
 use ftsz::ft;
@@ -69,18 +68,20 @@ fn classic_region_baseline(bytes: &[u8], region: Region) -> Vec<f32> {
     out
 }
 
-/// Rewrite `path` (with its own bytes) until its generation differs from
-/// `old` — guards against coarse filesystem mtime granularity.
-fn bump_generation(path: &Path, old: Generation) {
-    for _ in 0..200 {
-        if Generation::of(path).unwrap() != old {
-            return;
+/// Find a single healable byte flip in a v2 archive: the flipped copy is
+/// the *same length* as the original and `parse_recovering` reports a
+/// repaired stripe.
+fn healable_corruption(clean: &[u8]) -> Vec<u8> {
+    for off in (clean.len() / 4..clean.len()).step_by(97) {
+        let mut c = clean.to_vec();
+        c[off] ^= 0x10;
+        if let Ok(a) = parity::parse_recovering(&c) {
+            if a.recovered.as_ref().is_some_and(|r| !r.stripes_repaired.is_empty()) {
+                return c;
+            }
         }
-        std::thread::sleep(Duration::from_millis(5));
-        let b = std::fs::read(path).unwrap();
-        std::fs::write(path, b).unwrap();
     }
-    panic!("generation of {} never changed", path.display());
+    panic!("no healable flip found");
 }
 
 #[test]
@@ -179,20 +180,7 @@ fn scrub_rewrite_changes_generation_and_drops_stale_state() {
     let f = field(8);
     let region = Region { origin: (0, 0, 0), shape: (8, 10, 10) };
     let clean = ft::compress(&f.data, f.dims, &cfg(true)).unwrap();
-    // find a parity-healable flip (middle of the protected region; step
-    // until parse_recovering actually reports a repaired stripe)
-    let mut corrupt = None;
-    for off in (clean.len() / 4..clean.len()).step_by(97) {
-        let mut c = clean.clone();
-        c[off] ^= 0x10;
-        if let Ok(a) = parity::parse_recovering(&c) {
-            if a.recovered.as_ref().is_some_and(|r| !r.stripes_repaired.is_empty()) {
-                corrupt = Some(c);
-                break;
-            }
-        }
-    }
-    let corrupt = corrupt.expect("no healable flip found");
+    let corrupt = healable_corruption(&clean);
     let path = temp_path("scrub");
     std::fs::write(&path, &corrupt).unwrap();
 
@@ -205,7 +193,9 @@ fn scrub_rewrite_changes_generation_and_drops_stale_state() {
 
     let g = Generation::of(&path).unwrap();
     parity::scrub_file(&path).unwrap();
-    bump_generation(&path, g);
+    // the content stamp alone must discriminate the heal — no mtime
+    // bumping, no sleeping
+    assert_ne!(Generation::of(&path).unwrap(), g, "heal must change the generation");
 
     let (d2, r2) = store.query(&path, region, true).unwrap();
     assert!(r2.stripes_repaired.is_empty(), "scrubbed file must open clean: {r2:?}");
@@ -236,7 +226,7 @@ fn rewritten_archive_is_served_fresh_not_stale() {
 
     let g = Generation::of(&path).unwrap();
     std::fs::write(&path, &b).unwrap();
-    bump_generation(&path, g);
+    assert_ne!(Generation::of(&path).unwrap(), g, "rewrite must change the generation");
 
     let (got_b, _) = store.query(&path, region, true).unwrap();
     assert_eq!(bits(&got_b), bits(&want_b), "stale cached blocks served after rewrite");
@@ -282,7 +272,7 @@ fn mode_c_flip_between_queries_is_detected_never_stale() {
 
     let g = Generation::of(&path).unwrap();
     std::fs::write(&path, &corrupt).unwrap();
-    bump_generation(&path, g);
+    assert_ne!(Generation::of(&path).unwrap(), g, "flip must change the generation");
 
     let fresh = ft::decompress_region_verified(&corrupt, region, seq);
     match (store.query(&path, region, true), fresh) {
@@ -356,6 +346,126 @@ fn concurrent_hammering_stays_byte_identical() {
     assert_eq!(store.stats().open_archives, 2);
     let _ = std::fs::remove_file(&p_ft);
     let _ = std::fs::remove_file(&p_xsz);
+}
+
+#[test]
+fn same_tick_same_length_rewrite_is_never_served_stale() {
+    // THE staleness regression: an in-place heal rewrites the file at
+    // the same length, and this test pins the mtime back so (mtime, len)
+    // is byte-for-byte identical to the damaged file's stamp. Only the
+    // content discriminator can tell them apart — no bump_generation
+    // workaround exists any more.
+    let f = field(23);
+    let region = Region { origin: (0, 0, 0), shape: (8, 10, 10) };
+    let clean = ft::compress(&f.data, f.dims, &cfg(true)).unwrap();
+    let corrupt = healable_corruption(&clean);
+    assert_eq!(clean.len(), corrupt.len());
+    let path = temp_path("sametick");
+    std::fs::write(&path, &corrupt).unwrap();
+    let m0 = std::fs::metadata(&path).unwrap().modified().unwrap();
+
+    let store = ArchiveStore::with_defaults();
+    let (d1, r1) = store.query(&path, region, true).unwrap();
+    assert!(!r1.stripes_repaired.is_empty(), "open must report the at-rest damage");
+
+    let g_damaged = Generation::of(&path).unwrap();
+    parity::scrub_file(&path).unwrap();
+    // force the worst case: healed file, same length, SAME mtime
+    let fh = std::fs::File::options().write(true).open(&path).unwrap();
+    fh.set_modified(m0).unwrap();
+    fh.sync_all().unwrap();
+    drop(fh);
+    let g_healed = Generation::of(&path).unwrap();
+    assert_eq!(g_damaged.mtime_ns, g_healed.mtime_ns, "test setup: mtimes must collide");
+    assert_eq!(g_damaged.len, g_healed.len, "test setup: lengths must collide");
+    assert_ne!(g_damaged, g_healed, "content stamp must discriminate the heal");
+
+    let (d2, r2) = store.query(&path, region, true).unwrap();
+    assert!(
+        r2.stripes_repaired.is_empty(),
+        "stale parse of the damaged generation served after a same-tick heal: {r2:?}"
+    );
+    assert_eq!(bits(&d1), bits(&d2), "healed decode must match the pre-heal decode");
+    assert!(store.stats().invalidations >= 1, "heal never invalidated the open entry");
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn fleet_scrub_heals_damage_first_and_store_serves_post_heal_bytes() {
+    let dir = std::env::temp_dir().join(format!("ftsz_fleet_test_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(dir.join("sub")).unwrap();
+
+    // RS-protected archive with TWO stripes of one group damaged — the
+    // multi-stripe case XOR cannot heal
+    let f = field(24);
+    let rs_cfg = CompressionConfig::new(ErrorBound::Abs(1e-3))
+        .with_block_size(4)
+        .with_archive_parity(ParityParams::rs(64, 8, 3));
+    let rs_clean = ft::compress(&f.data, f.dims, &rs_cfg).unwrap();
+    let mut rs_damaged = rs_clean.clone();
+    let mut rng = ftsz::util::rng::Pcg32::new(42);
+    ftsz::inject::mode_c::strike(
+        &mut rs_damaged,
+        &mut rng,
+        ftsz::inject::mode_c::ArchiveFault::GroupBurst { stripes: 2 },
+    );
+    assert_ne!(rs_damaged, rs_clean);
+    let damaged_path = dir.join("damaged.ftsz");
+    std::fs::write(&damaged_path, &rs_damaged).unwrap();
+
+    // plus: a clean v2 archive, an unprotected v1 archive, and junk
+    let clean_path = dir.join("sub").join("clean.ftsz");
+    std::fs::write(&clean_path, ft::compress(&f.data, f.dims, &cfg(true)).unwrap()).unwrap();
+    std::fs::write(dir.join("legacy.ftsz"), ft::compress(&f.data, f.dims, &cfg(false)).unwrap())
+        .unwrap();
+    std::fs::write(dir.join("notes.txt"), b"not an archive").unwrap();
+
+    let region = Region { origin: (0, 0, 0), shape: (8, 10, 10) };
+    let seq = Parallelism::Sequential;
+    let want = bits(&ft::decompress_region_verified(&rs_clean, region, seq).unwrap().0);
+
+    // prime the store on the DAMAGED generation
+    let store = ArchiveStore::with_defaults();
+    let (d1, r1) = store.query(&damaged_path, region, true).unwrap();
+    assert_eq!(r1.stripes_repaired.len(), 2, "open must heal both damaged stripes");
+    assert_eq!(bits(&d1), want);
+
+    // dry run classifies without touching anything
+    let dry = fleet::scrub_fleet(&dir, true, Some(&store)).unwrap();
+    assert_eq!(dry.count("repaired"), 1);
+    assert_eq!(dry.stripes_repaired(), 2);
+    assert_eq!(std::fs::read(&damaged_path).unwrap(), rs_damaged, "dry run must not rewrite");
+
+    // real pass: heals the archive and invalidates the store through
+    // the scrub_path hook
+    let report = fleet::scrub_fleet(&dir, false, Some(&store)).unwrap();
+    assert_eq!(report.entries.len(), 3);
+    assert_eq!(report.skipped, 1);
+    assert_eq!(report.count("repaired"), 1);
+    assert_eq!(report.count("clean"), 1);
+    assert_eq!(report.count("unprotected"), 1);
+    assert_eq!(report.count("unrecoverable"), 0);
+    assert_eq!(report.stripes_repaired(), 2);
+    // most-damaged-first ordering: the repaired entry sorts before clean
+    assert!(matches!(report.entries[0].health, fleet::FleetHealth::Repaired { stripes: 2 }));
+    let json = report.to_json();
+    assert!(json.starts_with("{\"schema\":\"ftsz.fleet.v1\""), "{json}");
+    assert!(json.contains("\"repaired\":1"), "{json}");
+
+    // the healed file is bit-identical to the pristine archive (RS
+    // erasure decode is exact) and the store serves the post-heal
+    // generation with a clean report — no stale blocks
+    assert_eq!(std::fs::read(&damaged_path).unwrap(), rs_clean, "heal must restore exactly");
+    let (d2, r2) = store.query(&damaged_path, region, true).unwrap();
+    assert!(r2.stripes_repaired.is_empty(), "store still serving the damaged generation");
+    assert_eq!(bits(&d2), want);
+
+    // second fleet pass over the healed corpus finds nothing to repair
+    let second = fleet::scrub_fleet(&dir, false, Some(&store)).unwrap();
+    assert_eq!(second.count("repaired"), 0);
+    assert_eq!(second.count("clean"), 2);
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 #[test]

@@ -43,11 +43,11 @@ SERVE_HEADER = (
 HOTPATH_HEADER = (
     "| date | commit | rsz comp MB/s | ftrsz comp MB/s | xsz comp MB/s "
     "| xsz/rsz × | rsz dec MB/s | ftrsz verify MB/s | cpipe | dpipe rsz "
-    "| dpipe ftrsz | vregion MB/s | parity % | cstream | dstream "
+    "| dpipe ftrsz | vregion MB/s | parity % | rs parity % | cstream | dstream "
     "| xsz kern × | bitpack ratio |\n"
     "|------|--------|---------------|-----------------|---------------"
     "|-----------|--------------|-------------------|-------|-----------"
-    "|-------------|--------------|----------|---------|---------"
+    "|-------------|--------------|----------|-------------|---------|---------"
     "|------------|---------------|\n"
 )
 
@@ -72,6 +72,7 @@ def hotpath_row(m: dict, date: str, commit: str) -> str:
         cell(m, "dstage.ftrsz.speedup", "{:.2f}"),
         cell(m, "dstage.region_verified.w1_mbps"),
         cell(m, "parity.size_overhead_pct", "{:.2f}"),
+        cell(m, "parity.rs.size_overhead_pct", "{:.2f}"),
         cell(m, "stream.rsz.compress_vs_inmem", "{:.2f}"),
         cell(m, "stream.rsz.decompress_vs_inmem", "{:.2f}"),
         cell(m, "kernel.quantize.speedup", "{:.2f}"),

@@ -41,6 +41,7 @@ pub const DECODE_SCOPES: &[ModuleScope] = &[
             "read_section",
             "read_core_fields",
             "assemble",
+            "transcode_v1_to_v2",
         ]),
         untrusted: &[
             "data",
@@ -74,6 +75,12 @@ pub const DECODE_SCOPES: &[ModuleScope] = &[
             "parse_recovering",
             "stripe_of",
             "u32_at",
+            "decode_geometry",
+            "rs_rebuild_group",
+            "put_healed_stripe",
+            "gf_mul",
+            "gf_pow_alpha",
+            "gf_inv",
         ]),
         r5_fns: None,
         untrusted: &[
